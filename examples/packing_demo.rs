@@ -1,0 +1,59 @@
+//! Figure 1 / Figure 4 walkthrough: shows the bit-level life of a weight
+//! group — RTN codes, the adaptive shared LSB, the packed half-word, and
+//! the SHIFT/AND/OR restoration back to FP16 bits.
+//!
+//! Run: `cargo run --release --example packing_demo`
+
+use ams_quant::formats::fp16::fp16_to_f32;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::formats::FpFormat;
+use ams_quant::pack;
+use ams_quant::quant::sharing::quantize;
+use ams_quant::quant::QuantConfig;
+use ams_quant::restore::code_to_fp16_bits;
+use ams_quant::tensor::Tensor;
+
+fn main() {
+    // Three weights forming one FP5.33 group (e2m3, k=3).
+    let w = Tensor::from_vec(&[1, 3], vec![0.91, -0.42, 0.17]);
+    let scheme = Scheme::parse("fp5.33").unwrap();
+    let fmt = FpFormat::E2M3;
+    println!("weights: {:?}", w.data());
+
+    let q = quantize(&w, &QuantConfig::paper(scheme));
+    println!("\nchannel scale s = amax/M = {:.6}", q.scales[0]);
+    println!("RTN+shared codes (s|ee|mmm):");
+    for (i, &c) in q.codes.iter().enumerate() {
+        println!(
+            "  w[{i}] = {:>6.3} -> code {:#08b} = {:.4} (dequant {:.4})",
+            w.data()[i],
+            c,
+            fmt.decode(c),
+            fmt.decode(c) * q.scales[0],
+        );
+    }
+    println!("shared mantissa LSB (adaptive search): {}", q.shared_bits[0]);
+
+    // Pack: the paper's special case — 3x5-bit high segments + shared bit
+    // fit exactly one u16 ("continuous packing without segmentation").
+    let p = pack::pack(&q);
+    assert_eq!(p.row_stride, 1);
+    let word = p.words[0];
+    println!("\npacked half-word: {word:#018b}");
+    println!("  [shared|hi2|hi1|hi0] = [{}|{:05b}|{:05b}|{:05b}]",
+        (word >> 15) & 1, (word >> 10) & 0x1F, (word >> 5) & 0x1F, word & 0x1F);
+
+    // Restore via bit ops (Figure 4).
+    println!("\nrestoration (SHIFT/AND/OR -> FP16 bits):");
+    let shared = (word >> 15) & 1;
+    for j in 0..3 {
+        let code = (((word >> (5 * j)) & 0x1F) << 1) | shared;
+        let h = code_to_fp16_bits(fmt, code);
+        println!(
+            "  lane {j}: code {code:#08b} -> fp16 {h:#06x} = {:.4} ; x scale = {:.4}",
+            fp16_to_f32(h),
+            fp16_to_f32(h) * q.scales[0]
+        );
+    }
+    println!("\nstorage: {} bits for 3 weights = {:.2} bits/weight", 16, 16.0 / 3.0);
+}

@@ -1,0 +1,29 @@
+use ams_quant::experiments::make_linear;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::gemm::simd;
+use ams_quant::model::synthetic::{llm_weight, WeightProfile};
+use ams_quant::util::prng::Rng;
+use ams_quant::util::timer::Timer;
+fn main() {
+    println!("avx512: {}", simd::is_avx512());
+    let mut rng = Rng::new(1);
+    let args: Vec<String> = std::env::args().collect();
+    let rows: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let cols: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8192);
+    let w = llm_weight(rows, cols, &WeightProfile::default(), &mut rng);
+    let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    println!("shape {rows}x{cols} = {:.1} MB fp16", (rows*cols*2) as f64/1e6);
+    let mut fp16_ns = 0.0;
+    for name in ["fp16", "fp8", "fp6", "fp5", "fp5.33", "fp4.25"] {
+        let lin = make_linear(&w, Scheme::parse(name).unwrap());
+        let mut y = vec![0f32; rows];
+        // warmup
+        for _ in 0..2 { lin.gemv(&x, &mut y); }
+        let t = Timer::start();
+        let mut iters = 0;
+        while t.elapsed_secs() < 1.0 { lin.gemv(&x, &mut y); std::hint::black_box(&y); iters += 1; }
+        let ns_per_w = t.elapsed_secs() * 1e9 / (iters * rows * cols) as f64;
+        if name == "fp16" { fp16_ns = ns_per_w; }
+        println!("{name:8} {ns_per_w:.3} ns/weight  speedup vs fp16: {:.2}", fp16_ns / ns_per_w);
+    }
+}

@@ -1,0 +1,61 @@
+//! Quickstart: quantize a weight matrix to FP4.25, pack it, run the fused
+//! GEMV, and inspect error/compression — the 60-second tour of the API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ams_quant::formats::registry::Scheme;
+use ams_quant::gemm::QuantLinear;
+use ams_quant::model::synthetic::{llm_weight, WeightProfile};
+use ams_quant::pack;
+use ams_quant::quant::error::sqnr_db;
+use ams_quant::quant::sharing::quantize;
+use ams_quant::quant::QuantConfig;
+use ams_quant::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+
+    // 1. An LLM-like weight matrix [out_channels, in_channels].
+    let w = llm_weight(256, 1024, &WeightProfile::default(), &mut rng);
+    println!("weights: 256x1024, amax={:.4}", w.abs_max());
+
+    // 2. Quantize with the paper's pipeline: channel-wise RTN to e2m2,
+    //    then groups of k=4 share their mantissa LSB -> 4.25 bits/weight.
+    let scheme = Scheme::parse("fp4.25").unwrap();
+    let q = quantize(&w, &QuantConfig::paper(scheme));
+    let deq = q.dequantize();
+    println!(
+        "scheme: {}  ({} bits/weight)",
+        scheme.label(),
+        scheme.bits_per_weight()
+    );
+    println!("weight MSE:  {:.3e}", w.mse(&deq));
+    println!("weight SQNR: {:.2} dB", sqnr_db(&w, &deq));
+
+    // 3. Pack for serving: 16 high-segment words + 1 shared-LSB word per
+    //    64 weights (§3.2 of the paper).
+    let packed = pack::pack(&q);
+    println!(
+        "packed: {} bytes  ({:.3} bits/weight incl. row padding, {:.2}x smaller than fp16)",
+        packed.payload_bytes(),
+        packed.bits_per_weight(),
+        16.0 / packed.bits_per_weight()
+    );
+
+    // 4. Fused unpack-dequant GEMV straight off the packed words.
+    let lin = QuantLinear::new(packed);
+    let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut y = vec![0f32; 256];
+    lin.gemv(&x, &mut y);
+
+    // Compare against the dense reference.
+    let yref = lin.gemv_reference(&x);
+    let max_err = y
+        .iter()
+        .zip(&yref)
+        .fold(0f32, |m, (a, b)| m.max((a - b).abs()));
+    println!("fused GEMV vs reference: max |Δ| = {max_err:.2e}");
+    assert!(max_err < 1e-4);
+    println!("OK");
+    Ok(())
+}

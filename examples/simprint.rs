@@ -1,0 +1,13 @@
+// quick probe of simulator values vs paper Table 3
+use ams_quant::formats::registry::Scheme;
+use ams_quant::sim::*;
+fn main() {
+    let dev = Device::paper();
+    for (name, rows, cols) in table3_shapes() {
+        println!("== {name}");
+        for s in ["fp8","fp6","fp5.33","fp5","fp4.25"] {
+            let row = speedup_row(&dev, rows, cols, Scheme::parse(s).unwrap(), &TABLE3_BATCHES);
+            println!("{s:8} {:?}", row.iter().map(|v| (v*100.0).round()/100.0).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Sweet-spot sweep (Figure 3 + Table 2 / Figure 5 + ablation A3):
+//! evaluates the trained tiny LM under every scheme of the paper and
+//! prints the accuracy matrix plus the k-sweep bits-vs-MSE frontier.
+//!
+//! Run after `make artifacts`:
+//!   cargo run --release --example sweet_spot_sweep [-- --tokens 3000]
+
+use ams_quant::experiments as exp;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::formats::FpFormat;
+use ams_quant::util::cli::Args;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let tokens = args.get_usize("tokens", 3000);
+    let artifacts = Path::new("artifacts");
+    let (model, heldout, kind) = exp::load_model(artifacts)?;
+    println!("model: {kind}; params ~{}\n", model.cfg.param_count());
+
+    // Figure 3: the preliminary RTN study.
+    let rows = exp::accuracy_suite(&model, &heldout, &Scheme::fig3_set(), tokens);
+    println!(
+        "{}",
+        exp::accuracy_table(&rows, "Figure 3 (proxy): naive RTN schemes").to_console()
+    );
+
+    // Table 2 / Figure 5: the full AMS matrix.
+    let rows = exp::accuracy_suite(&model, &heldout, &Scheme::table2_set(), tokens);
+    println!(
+        "{}",
+        exp::accuracy_table(&rows, "Table 2 (proxy): AMS-Quant schemes").to_console()
+    );
+
+    // The paper's headline ordering, asserted:
+    let kl = |label: &str| {
+        rows.iter()
+            .find(|r| r.scheme.starts_with(label))
+            .map(|r| r.kl)
+            .unwrap()
+    };
+    let (kl6, kl533, kl425, kl4) = (kl("FP6"), kl("FP5.33"), kl("FP4.25"), kl("FP4 "));
+    println!("KL ordering: fp6 {kl6:.2e} <= fp5.33 {kl533:.2e} <= fp4.25 {kl425:.2e} < fp4 {kl4:.2e}");
+    assert!(kl6 <= kl533 * 1.5, "fp5.33 must stay at fp6 level");
+    assert!(kl425 < kl4, "fp4.25 must beat fp4 (the sweet-spot claim)");
+
+    // Ablation A3: k sweep.
+    println!("{}", exp::k_sweep(FpFormat::E2M2, &[2, 3, 4, 8, 16], 7).to_console());
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT lowering: jax/Pallas → HLO text artifacts for the rust runtime.
+
+Emits HLO *text* (NOT `.serialize()`): the image's xla_extension 0.5.1
+rejects jax≥0.5 protos (64-bit instruction ids); the text parser reassigns
+ids — see /opt/xla-example/README.md and aot_recipe.md.
+
+Artifacts (one per scheme × shape × batch, see MANIFEST below):
+    artifacts/linear_<scheme>_<rows>x<cols>_b<batch>.hlo.txt
+        (packed u32 [rows, w32], scales f32 [rows], x f32 [batch, cols])
+        -> (y f32 [batch, rows],)
+plus artifacts/manifest.json describing every entry.
+
+Python runs once at build time; the rust coordinator serves from the
+compiled executables (rust/src/runtime/).
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile.kernels import ref
+from compile.kernels.ams_dequant import dequant_linear
+from compile.kernels.formats import parse_scheme
+
+# (scheme, rows, cols, batches): small shapes keep PJRT compile times sane;
+# kernel-level perf at paper shapes is measured by the rust native path and
+# the roofline simulator (Table 3).
+MANIFEST = [
+    ("fp16", 256, 128, [1, 8]),
+    ("fp6", 256, 128, [1, 8]),
+    ("fp5.33", 256, 128, [1, 8]),
+    ("fp4.25", 256, 128, [1, 8]),
+    ("fp5.33", 128, 344, [4]),
+    ("fp4.25", 128, 344, [4]),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_linear(scheme_name: str, rows: int, cols: int, batch: int) -> str:
+    scheme = parse_scheme(scheme_name)
+    stride16 = ref.row_stride(scheme, cols)
+    w32 = -(-stride16 // 2)
+
+    def fn(words, scales, x):
+        return (dequant_linear(words, scales, x, scheme=scheme, rows=rows, cols=cols),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((rows, w32), np.uint32),
+        jax.ShapeDtypeStruct((rows,), np.float32),
+        jax.ShapeDtypeStruct((batch, cols), np.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def artifact_name(scheme: str, rows: int, cols: int, batch: int) -> str:
+    safe = scheme.replace(".", "p")
+    return f"linear_{safe}_{rows}x{cols}_b{batch}.hlo.txt"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for scheme, rows, cols, batches in MANIFEST:
+        for batch in batches:
+            name = artifact_name(scheme, rows, cols, batch)
+            path = os.path.join(args.out_dir, name)
+            entry = {
+                "file": name,
+                "scheme": scheme,
+                "rows": rows,
+                "cols": cols,
+                "batch": batch,
+                "w32_stride": -(-ref.row_stride(parse_scheme(scheme), cols) // 2),
+            }
+            manifest.append(entry)
+            if os.path.exists(path) and not args.force:
+                print(f"keep    {name}")
+                continue
+            text = lower_linear(scheme, rows, cols, batch)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"lowered {name} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest)} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

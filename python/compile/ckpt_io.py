@@ -1,0 +1,48 @@
+"""AMSZ checkpoint writer/reader (python mirror of
+rust/src/model/checkpoint.rs). Little-endian f32 payload, JSON header."""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"AMSZ1\n"
+
+
+def save(path: str, config_dict: dict, tensors: dict):
+    """tensors: name -> np.ndarray (float32)."""
+    entries = []
+    offset = 0
+    names = sorted(tensors)  # BTreeMap ordering on the rust side
+    for name in names:
+        t = np.asarray(tensors[name], dtype=np.float32)
+        entries.append(
+            {
+                "name": name,
+                "shape": list(t.shape),
+                "offset": offset,
+                "count": int(t.size),
+            }
+        )
+        offset += t.size
+    header = json.dumps({"config": config_dict, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for name in names:
+            f.write(np.asarray(tensors[name], dtype="<f4").tobytes())
+
+
+def load(path: str):
+    """Returns (config_dict, {name: np.ndarray})."""
+    with open(path, "rb") as f:
+        assert f.read(6) == MAGIC, f"{path}: bad magic"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        payload = np.frombuffer(f.read(), dtype="<f4")
+    tensors = {}
+    for e in header["tensors"]:
+        data = payload[e["offset"] : e["offset"] + e["count"]]
+        tensors[e["name"]] = data.reshape(e["shape"]).copy()
+    return header["config"], tensors

@@ -1,0 +1,52 @@
+"""Deterministic synthetic corpus for the tiny char LM.
+
+The grammar mixes three structures the eval harness later probes:
+- periodic motifs ("abcabcabc...") — pattern-completion task;
+- key-value facts with consistent bindings ("the COLOR of OBJ is VALUE.")
+  — knowledge-ish recall;
+- counting runs ("1 2 3 4 ...") — simple systematic structure.
+
+Byte-level, ASCII only; seeded; identical across python/rust consumers.
+"""
+
+import numpy as np
+
+OBJECTS = ["lamp", "door", "cube", "ring", "bell", "leaf", "sand", "wire"]
+COLORS = ["red", "blue", "green", "gold", "gray", "pink"]
+VERBS = ["holds", "moves", "finds", "keeps", "sends", "takes"]
+NAMES = ["ada", "bob", "cyd", "dan", "eve", "fay"]
+
+
+def make_corpus(n_chars: int = 200_000, seed: int = 1234) -> str:
+    rng = np.random.default_rng(seed)
+    # Fixed world: every object has one color for the whole corpus.
+    color_of = {o: COLORS[rng.integers(0, len(COLORS))] for o in OBJECTS}
+    parts = []
+    total = 0
+    while total < n_chars:
+        r = rng.random()
+        if r < 0.35:
+            o = OBJECTS[rng.integers(0, len(OBJECTS))]
+            s = f"the {o} is {color_of[o]}. "
+        elif r < 0.55:
+            a = NAMES[rng.integers(0, len(NAMES))]
+            v = VERBS[rng.integers(0, len(VERBS))]
+            o = OBJECTS[rng.integers(0, len(OBJECTS))]
+            s = f"{a} {v} the {o}. "
+        elif r < 0.8:
+            motif = "".join(
+                chr(ord("a") + rng.integers(0, 26)) for _ in range(rng.integers(2, 5))
+            )
+            s = motif * int(rng.integers(4, 9)) + " "
+        else:
+            start = int(rng.integers(0, 6))
+            s = " ".join(str(start + j) for j in range(int(rng.integers(4, 9)))) + ". "
+        parts.append(s)
+        total += len(s)
+    return "".join(parts)[:n_chars]
+
+
+def train_heldout(n_chars: int = 200_000, seed: int = 1234, holdout_frac: float = 0.05):
+    text = make_corpus(n_chars, seed)
+    cut = int(len(text) * (1.0 - holdout_frac))
+    return text[:cut], text[cut:]

@@ -1,0 +1,1 @@
+"""L1 kernels: Pallas fused dequant-GEMV + pure reference oracle."""

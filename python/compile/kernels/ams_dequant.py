@@ -1,0 +1,196 @@
+"""L1 Pallas kernel: fused unpack → dequant → matmul for packed AMS weights.
+
+TPU adaptation of the paper's CUDA restoration kernels (DESIGN.md
+§Hardware-Adaptation):
+
+- the packed u32 words are the kernel operand; BlockSpec streams whole
+  row-tiles HBM→VMEM, so HBM traffic equals the packed bit count (the
+  quantity the CUDA kernel's coalesced loads optimize);
+- unpacking is vectorized integer SHIFT/AND/OR over int32 lanes (VPU),
+  followed by one ≤256-entry table gather per code — the register-level
+  restoration of §3.2;
+- the dequantized tile feeds `jnp.dot` (MXU) with fp32 accumulation;
+- `interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; real-TPU performance is *estimated* in EXPERIMENTS.md §Perf
+  from the VMEM footprint and MXU tile shapes.
+
+The kernel is shape-specialized at lowering time (static `cols`, `batch`,
+scheme), which is exactly how the AOT artifacts are produced.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .formats import Scheme
+from . import ref
+
+
+def _u16_view(words_u32: jnp.ndarray) -> jnp.ndarray:
+    """[rows, w32] u32 -> [rows, 2*w32] logical u16 words (little-endian).
+
+    Only python-int shifts and reshapes: Pallas kernels may not capture
+    constant index arrays, so every unpack below is expressed as
+    stack/reshape with scalar shift amounts — which is also exactly the
+    vectorized SHIFT/AND/OR the paper's restoration performs.
+    """
+    rows = words_u32.shape[0]
+    lo = words_u32 & jnp.uint32(0xFFFF)
+    hi = words_u32 >> jnp.uint32(16)
+    return jnp.stack([lo, hi], axis=2).reshape(rows, -1)
+
+
+def _lanes(u16: jnp.ndarray, per: int, bits: int, mask: int) -> jnp.ndarray:
+    """Split each u16 word into `per` fields of `bits` bits, LSB-first:
+    [rows, n] -> [rows, n*per]."""
+    rows = u16.shape[0]
+    fields = [(u16 >> jnp.uint32(bits * j)) & jnp.uint32(mask) for j in range(per)]
+    return jnp.stack(fields, axis=2).reshape(rows, -1)
+
+
+def _unpack_codes(words_u32: jnp.ndarray, scheme: Scheme, cols: int) -> jnp.ndarray:
+    """words_u32: [tile_rows, w32] uint32 -> codes [tile_rows, cols] uint32."""
+    u16 = _u16_view(words_u32)
+    ceil = lambda a, b: -(-a // b)
+    if scheme.kind == "fp16":
+        return u16[:, :cols]
+    if scheme.kind == "int":
+        bits = scheme.int_bits
+        return _lanes(u16, 16 // bits, bits, (1 << bits) - 1)[:, :cols]
+    bits = scheme.fmt.bits
+    if scheme.kind == "fp":
+        if bits == 8:
+            return _lanes(u16, 2, 8, 0xFF)[:, :cols]
+        if bits == 4:
+            return _lanes(u16, 4, 4, 0xF)[:, :cols]
+        if bits == 6:
+            hi_words = ceil(cols, 4)
+            hi = _lanes(u16[:, :hi_words], 4, 4, 0xF)[:, :cols]
+            lo = _lanes(u16[:, hi_words:], 8, 2, 0x3)[:, :cols]
+            return (hi << 2) | lo
+        if bits == 5:
+            hi_words = ceil(cols, 4)
+            hi = _lanes(u16[:, :hi_words], 4, 4, 0xF)[:, :cols]
+            lsb = _lanes(u16[:, hi_words:], 16, 1, 0x1)[:, :cols]
+            return (hi << 1) | lsb
+        raise ValueError(f"no kernel for fp {bits}-bit")
+    if scheme.fmt.name() == "e2m3" and scheme.k == 3:
+        n = ceil(cols, 3)
+        w = u16[:, :n]
+        hi = _lanes(w, 3, 5, 0x1F)[:, :cols]
+        shared = jnp.repeat((w >> jnp.uint32(15)) & jnp.uint32(1), 3, axis=1)[:, :cols]
+        return (hi << 1) | shared
+    # AMS e2m2 family (FP4.5 / FP4.33 / FP4.25).
+    hi_words = ceil(cols, 4)
+    hi = _lanes(u16[:, :hi_words], 4, 4, 0xF)[:, :cols]
+    n_groups = ceil(cols, scheme.k)
+    bits_ = _lanes(u16[:, hi_words:], 16, 1, 0x1)[:, :n_groups]
+    shared = jnp.repeat(bits_, scheme.k, axis=1)[:, :cols]
+    return (hi << 1) | shared
+
+
+def _decode_arith(codes: jnp.ndarray, scheme: Scheme) -> jnp.ndarray:
+    """Arithmetic FPx decode (no gather tables — Pallas-friendly and the
+    literal register-level restoration of §3.2):
+
+    value = (-1)^s · [E≠0] (1 + man·2⁻ᵐ)·2^(E-bias)  +  [E=0] man·2^(1-bias-m)
+    """
+    if scheme.kind == "int":
+        offset = 1 << (scheme.int_bits - 1)
+        return codes.astype(jnp.float32) - jnp.float32(offset)
+    fmt = scheme.fmt
+    e, m = fmt.ebits, fmt.mbits
+    s = (codes >> jnp.uint32(e + m)) & jnp.uint32(1)
+    ef = ((codes >> jnp.uint32(m)) & jnp.uint32((1 << e) - 1)).astype(jnp.float32)
+    man = (codes & jnp.uint32((1 << m) - 1)).astype(jnp.float32)
+    is_norm = ef > 0
+    exp = jnp.where(is_norm, ef, 1.0) - jnp.float32(fmt.bias)
+    frac = jnp.where(is_norm, 1.0 + man * (2.0**-m), man * (2.0**-m))
+    mag = frac * jnp.exp2(exp)
+    return jnp.where(s == 1, -mag, mag)
+
+
+def _dequant_tile(words, scales, scheme: Scheme, cols: int) -> jnp.ndarray:
+    """[tile_rows, w32] u32 + [tile_rows] f32 -> [tile_rows, cols] f32."""
+    codes = _unpack_codes(words, scheme, cols)
+    if scheme.kind == "fp16":
+        half = jax.lax.bitcast_convert_type(codes.astype(jnp.uint16), jnp.float16)
+        return half.astype(jnp.float32)
+    return _decode_arith(codes, scheme) * scales[:, None]
+
+
+def _kernel(w_ref, s_ref, x_ref, o_ref, *, scheme: Scheme, cols: int):
+    """One grid step: dequantize a row-tile of W and matmul with x.
+
+    VMEM residency per step: the packed tile (~tile_rows·cols·bpw/8 bytes),
+    the dequantized tile (tile_rows·cols·4), x (batch·cols·4) and the output
+    tile — sized to stay ≪16 MiB for MXU-shaped tiles.
+    """
+    wdeq = _dequant_tile(w_ref[...], s_ref[...], scheme, cols)  # [tile, cols]
+    # MXU: [batch, cols] @ [cols, tile] with fp32 accumulation.
+    o_ref[...] = jnp.dot(
+        x_ref[...], wdeq.T, preferred_element_type=jnp.float32
+    )
+
+
+def dequant_linear(
+    words_u32: jnp.ndarray,
+    scales: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    scheme: Scheme,
+    rows: int,
+    cols: int,
+    tile_rows: int = 128,
+) -> jnp.ndarray:
+    """y[batch, rows] = x[batch, cols] @ dequant(words)ᵀ via pallas_call.
+
+    Grid over row tiles; `rows` must be divisible by the tile (the AOT
+    path pads rows — model dims here are multiples of 64).
+    """
+    batch = x.shape[0]
+    tile = min(tile_rows, rows)
+    while rows % tile != 0:
+        tile //= 2
+    tile = max(tile, 1)
+    grid = (rows // tile,)
+    w32 = words_u32.shape[1]
+    return pl.pallas_call(
+        functools.partial(_kernel, scheme=scheme, cols=cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, w32), lambda r: (r, 0)),
+            pl.BlockSpec((tile,), lambda r: (r,)),
+            pl.BlockSpec((batch, cols), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, tile), lambda r: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((batch, rows), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(words_u32, scales, x)
+
+
+def dequant_linear_jnp(words_u32, scales, x, *, scheme: Scheme, rows: int, cols: int):
+    """Same computation without pallas (plain jnp) — used to sanity-check
+    the BlockSpec plumbing and as the L2 fallback for shapes where tiling
+    is awkward."""
+    del rows
+    wdeq = _dequant_tile(words_u32, scales, scheme, cols)
+    return jnp.dot(x, wdeq.T, preferred_element_type=jnp.float32)
+
+
+def quantize_and_pack(w: np.ndarray, scheme: Scheme):
+    """Build-time convenience: quantize + pack a weight matrix.
+
+    Returns (words_u32 [rows, w32], scales [rows] f32).
+    """
+    if scheme.kind == "fp16":
+        half = w.astype(np.float16).view(np.uint16)
+        words = half
+        scales = np.ones(w.shape[0], dtype=np.float32)
+        return ref.to_u32(words), scales
+    codes, scales = ref.quantize(w, scheme)
+    words = ref.pack_rows(scheme, codes)
+    return ref.to_u32(words), scales

@@ -1,0 +1,116 @@
+"""FPx format algebra (python mirror of rust/src/formats/).
+
+Pure-python decode tables shared by the Pallas kernel (as gather tables),
+the jnp quantizer and the ref oracle. Values are bit-exact with the rust
+implementation: no infinities/NaN (MX convention), IEEE bias 2^(e-1)-1.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FpFormat:
+    ebits: int
+    mbits: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.ebits + self.mbits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.ebits - 1)) - 1
+
+    @property
+    def code_count(self) -> int:
+        return 1 << self.bits
+
+    def decode(self, code: int) -> float:
+        s = (code >> (self.ebits + self.mbits)) & 1
+        e = (code >> self.mbits) & ((1 << self.ebits) - 1)
+        man = code & ((1 << self.mbits) - 1)
+        scale = 2.0 ** (-self.mbits)
+        if e != 0:
+            mag = (1.0 + man * scale) * 2.0 ** (e - self.bias)
+        else:
+            mag = (man * scale) * 2.0 ** (1 - self.bias)
+        return -mag if s else mag
+
+    def max_normal(self) -> float:
+        return self.decode(((1 << self.ebits) - 1) << self.mbits | ((1 << self.mbits) - 1))
+
+    def decode_table(self) -> np.ndarray:
+        """code -> f32 value, as a float32 numpy array (gather table)."""
+        return np.array([self.decode(c) for c in range(self.code_count)], dtype=np.float32)
+
+    def all_values(self) -> np.ndarray:
+        return np.sort(self.decode_table())
+
+    def name(self) -> str:
+        return f"e{self.ebits}m{self.mbits}"
+
+
+E2M1 = FpFormat(2, 1)
+E2M2 = FpFormat(2, 2)
+E2M3 = FpFormat(2, 3)
+E3M2 = FpFormat(3, 2)
+E4M3 = FpFormat(4, 3)
+
+FORMATS = {f.name(): f for f in [E2M1, E2M2, E2M3, E3M2, E4M3]}
+
+
+@dataclass(frozen=True)
+class Scheme:
+    """Mirror of rust Scheme: kind in {fp16, fp, ams, int}."""
+
+    kind: str
+    fmt: FpFormat | None = None
+    k: int = 1
+    int_bits: int = 0
+
+    @property
+    def bits_per_weight(self) -> float:
+        if self.kind == "fp16":
+            return 16.0
+        if self.kind == "fp":
+            return float(self.fmt.bits)
+        if self.kind == "ams":
+            return (self.fmt.bits - 1) + 1.0 / self.k
+        return float(self.int_bits)
+
+    def dequant_table(self) -> np.ndarray:
+        if self.kind == "fp16":
+            raise ValueError("fp16 uses bitcast, not a table")
+        if self.kind == "int":
+            n = 1 << self.int_bits
+            return (np.arange(n) - n // 2).astype(np.float32)
+        return self.fmt.decode_table()
+
+
+def parse_scheme(name: str) -> Scheme:
+    n = name.strip().lower()
+    table = {
+        "fp16": Scheme("fp16"),
+        "fp8": Scheme("fp", E4M3),
+        "fp8-e4m3": Scheme("fp", E4M3),
+        "fp6": Scheme("fp", E2M3),
+        "fp6-e2m3": Scheme("fp", E2M3),
+        "fp6-e3m2": Scheme("fp", E3M2),
+        "fp5": Scheme("fp", E2M2),
+        "fp5-e2m2": Scheme("fp", E2M2),
+        "fp4": Scheme("fp", E2M1),
+        "fp4-e2m1": Scheme("fp", E2M1),
+        "fp5.33": Scheme("ams", E2M3, k=3),
+        "fp5.3": Scheme("ams", E2M3, k=3),
+        "fp4.5": Scheme("ams", E2M2, k=2),
+        "fp4.33": Scheme("ams", E2M2, k=3),
+        "fp4.3": Scheme("ams", E2M2, k=3),
+        "fp4.25": Scheme("ams", E2M2, k=4),
+        "int8": Scheme("int", int_bits=8),
+        "int4": Scheme("int", int_bits=4),
+    }
+    if n in table:
+        return table[n]
+    raise ValueError(f"unknown scheme '{name}'")

@@ -1,0 +1,251 @@
+"""Pure numpy/jnp oracle for AMS-Quant: RTN quantization, mantissa sharing
+with adaptive search, bit-packing (bit-exact with rust/src/pack/), and the
+dequant-GEMV reference the Pallas kernel is tested against.
+
+Everything here is build/test-time only and favours clarity over speed.
+"""
+
+import numpy as np
+
+from .formats import FpFormat, Scheme
+
+
+# --- RTN quantization -----------------------------------------------------
+
+
+def encode_rtn(fmt: FpFormat, x: np.ndarray) -> np.ndarray:
+    """Vectorized round-to-nearest (ties-to-even on the code LSB).
+
+    Returns uint16 codes. Mirrors rust `FpFormat::encode_rtn`.
+    """
+    mags = np.array(
+        [fmt.decode(c) for c in range(1 << (fmt.ebits + fmt.mbits))], dtype=np.float64
+    )  # positive magnitude grid, ascending by construction
+    ax = np.abs(x.astype(np.float64))
+    hi = np.searchsorted(mags, ax, side="left").clip(0, len(mags) - 1)
+    lo = (hi - 1).clip(0)
+    d_lo = ax - mags[lo]
+    d_hi = mags[hi] - ax
+    pick_hi = (d_hi < d_lo) | ((d_hi == d_lo) & (lo % 2 == 1))
+    code = np.where(pick_hi, hi, lo)
+    # searchsorted 'left' puts exact matches at their own index -> d_hi==0.
+    exact = ax >= mags[-1]
+    code = np.where(exact, len(mags) - 1, code)
+    sign = (x < 0) | ((x == 0) & (np.signbit(x)))
+    return (code | (sign.astype(np.int64) << (fmt.ebits + fmt.mbits))).astype(np.uint16)
+
+
+def compute_scales(w: np.ndarray, fmt: FpFormat) -> np.ndarray:
+    """Per-output-channel scale s = amax(row) / max_normal (Eqn. 1)."""
+    amax = np.abs(w).max(axis=1)
+    s = amax / fmt.max_normal()
+    s[s == 0.0] = 1.0
+    return s.astype(np.float32)
+
+
+def quantize_rtn(w: np.ndarray, fmt: FpFormat):
+    """Channel-wise RTN. Returns (codes [rows, cols] u16, scales [rows])."""
+    scales = compute_scales(w, fmt)
+    codes = encode_rtn(fmt, w / scales[:, None])
+    return codes, scales
+
+
+def decode_codes(fmt: FpFormat, codes: np.ndarray) -> np.ndarray:
+    return fmt.decode_table()[codes]
+
+
+# --- Mantissa sharing + adaptive search ------------------------------------
+
+
+def apply_sharing(
+    fmt: FpFormat,
+    codes: np.ndarray,
+    w: np.ndarray,
+    scales: np.ndarray,
+    k: int,
+    policy: str = "adaptive",
+) -> np.ndarray:
+    """Share the mantissa LSB within groups of k along the input dim.
+
+    policy: 'adaptive' (MSE search, the paper), 'zero', 'one'.
+    Mirrors rust `quant::sharing::apply_sharing` with SharePolicy::SetLsb.
+    """
+    rows, cols = codes.shape
+    table = fmt.decode_table()
+    out = codes.copy()
+    for g0 in range(0, cols, k):
+        grp = slice(g0, min(g0 + k, cols))
+        c = codes[:, grp]
+        if policy == "zero":
+            m0 = np.zeros(rows, dtype=np.uint16)
+        elif policy == "one":
+            m0 = np.ones(rows, dtype=np.uint16)
+        else:
+            err = []
+            for bit in (0, 1):
+                cand = (c & ~np.uint16(1)) | np.uint16(bit)
+                deq = table[cand] * scales[:, None]
+                err.append(((deq - w[:, grp]) ** 2).sum(axis=1))
+            m0 = (err[1] < err[0]).astype(np.uint16)
+        out[:, grp] = (c & ~np.uint16(1)) | m0[:, None]
+    return out
+
+
+def quantize(w: np.ndarray, scheme: Scheme, policy: str = "adaptive"):
+    """Full pipeline -> (codes, scales). Mirrors rust quant::sharing::quantize."""
+    if scheme.kind == "int":
+        qmax = (1 << (scheme.int_bits - 1)) - 1
+        amax = np.abs(w).max(axis=1)
+        s = amax / qmax
+        s[s == 0.0] = 1.0
+        q = np.clip(np.round(w / s[:, None]), -qmax, qmax).astype(np.int64)
+        return (q + (1 << (scheme.int_bits - 1))).astype(np.uint16), s.astype(np.float32)
+    codes, scales = quantize_rtn(w, scheme.fmt)
+    if scheme.kind == "ams":
+        codes = apply_sharing(scheme.fmt, codes, w, scales, scheme.k, policy)
+    return codes, scales
+
+
+# --- Packing (bit-exact mirror of rust/src/pack/) ---------------------------
+
+
+def row_stride(scheme: Scheme, cols: int) -> int:
+    """u16 words per packed row."""
+    ceil = lambda a, b: -(-a // b)
+    if scheme.kind == "fp16":
+        return cols
+    if scheme.kind == "int":
+        return ceil(cols, 16 // scheme.int_bits)
+    bits = scheme.fmt.bits
+    if scheme.kind == "fp":
+        if bits == 8:
+            return ceil(cols, 2)
+        if bits == 6:
+            return ceil(cols, 4) + ceil(cols, 8)
+        if bits == 5:
+            return ceil(cols, 4) + ceil(cols, 16)
+        if bits == 4:
+            return ceil(cols, 4)
+        raise ValueError(f"no layout for fp {bits}-bit")
+    # AMS
+    if scheme.fmt.name() == "e2m3" and scheme.k == 3:
+        return ceil(cols, 3)
+    if bits == 5:
+        return ceil(cols, 4) + ceil(ceil(cols, scheme.k), 16)
+    raise ValueError(f"no specialized layout for ams {scheme.fmt.name()} k={scheme.k}")
+
+
+def pack_rows(scheme: Scheme, codes: np.ndarray) -> np.ndarray:
+    """codes [rows, cols] u16 -> packed words [rows, row_stride] u16."""
+    rows, cols = codes.shape
+    stride = row_stride(scheme, cols)
+    out = np.zeros((rows, stride), dtype=np.uint32)
+    c = codes.astype(np.uint32)
+    ceil = lambda a, b: -(-a // b)
+
+    def fixed(bits):
+        per = 16 // bits
+        for i in range(cols):
+            out[:, i // per] |= (c[:, i] & ((1 << bits) - 1)) << (bits * (i % per))
+
+    if scheme.kind == "fp16":
+        out[:, :cols] = c
+    elif scheme.kind == "int":
+        fixed(scheme.int_bits)
+    elif scheme.kind == "fp":
+        bits = scheme.fmt.bits
+        if bits == 8:
+            fixed(8)
+        elif bits == 4:
+            fixed(4)
+        elif bits == 6:
+            hi_words = ceil(cols, 4)
+            for i in range(cols):
+                out[:, i // 4] |= ((c[:, i] >> 2) & 0xF) << (4 * (i % 4))
+                out[:, hi_words + i // 8] |= (c[:, i] & 0x3) << (2 * (i % 8))
+        elif bits == 5:
+            hi_words = ceil(cols, 4)
+            for i in range(cols):
+                out[:, i // 4] |= ((c[:, i] >> 1) & 0xF) << (4 * (i % 4))
+                out[:, hi_words + i // 16] |= (c[:, i] & 1) << (i % 16)
+    elif scheme.fmt.name() == "e2m3" and scheme.k == 3:
+        for i in range(cols):
+            out[:, i // 3] |= ((c[:, i] >> 1) & 0x1F) << (5 * (i % 3))
+        for g0 in range(0, cols, 3):
+            out[:, g0 // 3] |= (c[:, g0] & 1) << 15
+    else:  # ams e2m2 family
+        hi_words = ceil(cols, 4)
+        for i in range(cols):
+            out[:, i // 4] |= ((c[:, i] >> 1) & 0xF) << (4 * (i % 4))
+        for gi, g0 in enumerate(range(0, cols, scheme.k)):
+            out[:, hi_words + gi // 16] |= (c[:, g0] & 1) << (gi % 16)
+    return out.astype(np.uint16)
+
+
+def to_u32(words: np.ndarray) -> np.ndarray:
+    """[rows, stride] u16 -> [rows, ceil(stride/2)] u32 little-endian pairs
+    (mirror of rust runtime::pack_words_u32)."""
+    rows, stride = words.shape
+    if stride % 2:
+        words = np.concatenate([words, np.zeros((rows, 1), dtype=np.uint16)], axis=1)
+    w = words.astype(np.uint32)
+    return w[:, 0::2] | (w[:, 1::2] << 16)
+
+
+def unpack_rows(scheme: Scheme, words: np.ndarray, cols: int) -> np.ndarray:
+    """Inverse of pack_rows (u16 words -> codes)."""
+    w = words.astype(np.uint32)
+    ceil = lambda a, b: -(-a // b)
+    i = np.arange(cols)
+
+    if scheme.kind == "fp16":
+        return w[:, :cols].astype(np.uint16)
+    if scheme.kind == "int":
+        bits = scheme.int_bits
+        per = 16 // bits
+        return ((w[:, i // per] >> (bits * (i % per))) & ((1 << bits) - 1)).astype(np.uint16)
+    bits = scheme.fmt.bits
+    if scheme.kind == "fp":
+        if bits == 8:
+            return ((w[:, i // 2] >> (8 * (i % 2))) & 0xFF).astype(np.uint16)
+        if bits == 4:
+            return ((w[:, i // 4] >> (4 * (i % 4))) & 0xF).astype(np.uint16)
+        if bits == 6:
+            hi_words = ceil(cols, 4)
+            hi = (w[:, i // 4] >> (4 * (i % 4))) & 0xF
+            lo = (w[:, hi_words + i // 8] >> (2 * (i % 8))) & 0x3
+            return ((hi << 2) | lo).astype(np.uint16)
+        if bits == 5:
+            hi_words = ceil(cols, 4)
+            hi = (w[:, i // 4] >> (4 * (i % 4))) & 0xF
+            lsb = (w[:, hi_words + i // 16] >> (i % 16)) & 1
+            return ((hi << 1) | lsb).astype(np.uint16)
+    if scheme.fmt.name() == "e2m3" and scheme.k == 3:
+        word = w[:, i // 3]
+        hi = (word >> (5 * (i % 3))) & 0x1F
+        shared = (word >> 15) & 1
+        return ((hi << 1) | shared).astype(np.uint16)
+    hi_words = ceil(cols, 4)
+    hi = (w[:, i // 4] >> (4 * (i % 4))) & 0xF
+    g = i // scheme.k
+    shared = (w[:, hi_words + g // 16] >> (g % 16)) & 1
+    return ((hi << 1) | shared).astype(np.uint16)
+
+
+# --- Reference dequant-GEMV -------------------------------------------------
+
+
+def dequant_rows(scheme: Scheme, words: np.ndarray, cols: int, scales: np.ndarray) -> np.ndarray:
+    """Packed words -> dequantized f32 weight matrix [rows, cols]."""
+    codes = unpack_rows(scheme, words, cols)
+    if scheme.kind == "fp16":
+        # fp16 baseline stores raw half bits; scales are 1.
+        return np.ascontiguousarray(codes).view(np.float16).astype(np.float32)
+    table = scheme.dequant_table()
+    return table[codes] * scales[:, None].astype(np.float32)
+
+
+def gemv_ref(scheme: Scheme, words: np.ndarray, cols: int, scales: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """y[batch, rows] = x[batch, cols] @ dequant(W).T — the oracle."""
+    wdeq = dequant_rows(scheme, words, cols, scales)
+    return x.astype(np.float32) @ wdeq.T

@@ -1,0 +1,141 @@
+"""L2: the JAX transformer (Qwen-style: RMSNorm, NeoX RoPE, GQA, SwiGLU).
+
+Build-time only. Architecture and parameter naming mirror
+rust/src/model/transformer.rs exactly; `rust/tests/parity.rs` checks logits
+agreement on a shared AMSZ checkpoint. Linear convention: weights are
+`[out, in]`, applied as `x @ W.T` (= rust's `W x`).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROPE_THETA = 10_000.0
+NORM_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 344
+    max_seq: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def to_json_dict(self) -> dict:
+        return {
+            "vocab_size": self.vocab_size,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "n_kv_heads": self.n_kv_heads,
+            "d_ff": self.d_ff,
+            "max_seq": self.max_seq,
+        }
+
+
+TINY_LM = ModelConfig()  # must match rust ModelConfig::tiny_lm()
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """He-ish init; tensor names match the AMSZ layout."""
+    rng = np.random.default_rng(seed)
+    p = {}
+
+    def mat(name, out_d, in_d, std):
+        p[name] = rng.normal(0.0, std, (out_d, in_d)).astype(np.float32)
+
+    d = cfg.d_model
+    mat("embed", cfg.vocab_size, d, 0.02)
+    for i in range(cfg.n_layers):
+        p[f"layers.{i}.attn_norm"] = np.ones(d, dtype=np.float32)
+        p[f"layers.{i}.mlp_norm"] = np.ones(d, dtype=np.float32)
+        mat(f"layers.{i}.wq", d, d, 0.02)
+        mat(f"layers.{i}.wk", cfg.kv_dim, d, 0.02)
+        mat(f"layers.{i}.wv", cfg.kv_dim, d, 0.02)
+        mat(f"layers.{i}.wo", d, d, 0.02 / np.sqrt(2 * cfg.n_layers))
+        mat(f"layers.{i}.w_gate", cfg.d_ff, d, 0.02)
+        mat(f"layers.{i}.w_up", cfg.d_ff, d, 0.02)
+        mat(f"layers.{i}.w_down", d, cfg.d_ff, 0.02 / np.sqrt(2 * cfg.n_layers))
+    p["final_norm"] = np.ones(d, dtype=np.float32)
+    mat("lm_head", cfg.vocab_size, d, 0.02)
+    return p
+
+
+def rmsnorm(x, w):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + NORM_EPS) * w
+
+
+def rope(x, positions):
+    """NeoX-style rotary embedding.
+
+    x: [..., T, H, head_dim]; positions: [T] (broadcast over leading dims).
+    Pairs (i, i + head_dim/2), angle = pos * theta^(-2i/head_dim).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = ROPE_THETA ** (-2.0 * jnp.arange(half) / hd)  # [half]
+    ang = positions[:, None] * freqs[None, :]  # [T, half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[None, :, None, :]
+    cos = cos[None, :, None, :]
+    a, b = x[..., :half], x[..., half:]
+    return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+
+
+def forward_seq(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced forward over full sequences.
+
+    tokens: [B, T] int32 -> logits [B, T, vocab].
+    """
+    B, T = tokens.shape
+    hd = cfg.head_dim
+    reps = cfg.n_heads // cfg.n_kv_heads
+    pos = jnp.arange(T).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+
+    x = jnp.asarray(params["embed"])[tokens]  # [B, T, d]
+    for i in range(cfg.n_layers):
+        g = lambda n: jnp.asarray(params[f"layers.{i}.{n}"])
+        h = rmsnorm(x, g("attn_norm"))
+        q = (h @ g("wq").T).reshape(B, T, cfg.n_heads, hd)
+        k = (h @ g("wk").T).reshape(B, T, cfg.n_kv_heads, hd)
+        v = (h @ g("wv").T).reshape(B, T, cfg.n_kv_heads, hd)
+        q = rope(q, pos)
+        k = rope(k, pos)
+        # GQA: expand kv heads.
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(B, T, cfg.d_model)
+        x = x + attn @ g("wo").T
+        h = rmsnorm(x, g("mlp_norm"))
+        gate = h @ g("w_gate").T
+        up = h @ g("w_up").T
+        x = x + (jax.nn.silu(gate) * up) @ g("w_down").T
+    x = rmsnorm(x, jnp.asarray(params["final_norm"]))
+    return x @ jnp.asarray(params["lm_head"]).T
+
+
+def loss_fn(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy (mean nats/token)."""
+    logits = forward_seq(params, cfg, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()

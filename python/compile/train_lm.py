@@ -1,0 +1,107 @@
+"""Build-time trainer for the tiny char LM (the E9 end-to-end model).
+
+Hand-rolled Adam (no optax offline), jit-compiled loss/grad, byte-level
+synthetic corpus. Outputs into --out (default ../artifacts):
+
+- tiny_lm.amsz        trained checkpoint (AMSZ, loaded by the rust engine)
+- corpus_heldout.txt  eval slice for perplexity (rust eval harness)
+- parity.json         tokens + reference logits for rust/tests/parity.rs
+
+Run via `make train` (a no-op if outputs exist).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile import ckpt_io, corpus as corpus_mod
+from compile.model import TINY_LM, forward_seq, init_params, loss_fn
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = {}, {}, {}
+    t = step + 1
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mhat = new_m[k] / (1 - b1**t)
+        vhat = new_v[k] / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, new_m, new_v
+
+
+def sample_batch(data: np.ndarray, batch: int, seq: int, rng: np.random.Generator):
+    starts = rng.integers(0, len(data) - seq - 1, size=batch)
+    return np.stack([data[s : s + seq + 1] for s in starts]).astype(np.int32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = TINY_LM
+    train_text, heldout_text = corpus_mod.train_heldout()
+    data = np.frombuffer(train_text.encode(), dtype=np.uint8).astype(np.int32)
+    rng = np.random.default_rng(args.seed)
+
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, args.seed).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+
+    @jax.jit
+    def step_fn(params, m, v, tokens, step):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, tokens))(params)
+        params, m, v = adam_update(params, grads, m, v, step, args.lr)
+        return params, m, v, loss
+
+    losses = []
+    for step in range(args.steps):
+        tokens = jnp.asarray(sample_batch(data, args.batch, args.seq, rng))
+        params, m, v, loss = step_fn(params, m, v, tokens, step)
+        losses.append(float(loss))
+        if step % 50 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(loss):.4f}", flush=True)
+
+    assert losses[-1] < losses[0] * 0.7, (
+        f"training did not converge: {losses[0]:.3f} -> {losses[-1]:.3f}"
+    )
+
+    np_params = {k: np.asarray(vv) for k, vv in params.items()}
+    ckpt_io.save(os.path.join(args.out, "tiny_lm.amsz"), cfg.to_json_dict(), np_params)
+    with open(os.path.join(args.out, "corpus_heldout.txt"), "w") as f:
+        f.write(heldout_text)
+    with open(os.path.join(args.out, "loss_curve.json"), "w") as f:
+        json.dump({"losses": losses, "steps": args.steps}, f)
+
+    # Parity vector: logits for a short prompt, from the JAX side.
+    probe = np.frombuffer(b"the lamp is ", dtype=np.uint8).astype(np.int32)[None, :]
+    logits = np.asarray(forward_seq(params, cfg, jnp.asarray(probe)))[0]
+    with open(os.path.join(args.out, "parity.json"), "w") as f:
+        json.dump(
+            {
+                "tokens": probe[0].tolist(),
+                "logits_last": logits[-1].tolist(),
+                "logits_all_norm": float(np.linalg.norm(logits)),
+            },
+            f,
+        )
+    print(f"saved checkpoint + heldout + parity to {args.out}")
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

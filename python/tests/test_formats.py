@@ -1,0 +1,58 @@
+"""Format algebra tests (mirror of rust formats:: tests — Table 1 exact)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.formats import E2M1, E2M2, E2M3, E3M2, FORMATS, parse_scheme
+
+
+def test_table1_e2m3():
+    assert E2M3.bias == 1
+    assert E2M3.max_normal() == 7.5
+    assert E2M3.decode(0b01000) == 1.0  # min normal (exp=1, man=0)
+    assert E2M3.decode(0b00111) == 0.875  # max subnormal
+    assert E2M3.decode(0b00001) == 0.125  # min subnormal
+
+
+def test_table1_e3m2():
+    assert E3M2.bias == 3
+    assert E3M2.max_normal() == 28.0
+    assert E3M2.decode(0b00100) == 0.25  # min normal
+    assert E3M2.decode(0b00001) == 0.0625  # min subnormal
+
+
+def test_e2m1_value_set():
+    vals = sorted(E2M1.decode(c) for c in range(8))
+    assert vals == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+
+
+def test_monotone_positive_grid():
+    for f in FORMATS.values():
+        mags = [f.decode(c) for c in range(1 << (f.ebits + f.mbits))]
+        assert all(b > a for a, b in zip(mags, mags[1:])), f.name()
+
+
+def test_decode_table_matches_decode():
+    for f in FORMATS.values():
+        t = f.decode_table()
+        for c in range(f.code_count):
+            assert t[c] == np.float32(f.decode(c))
+
+
+def test_scheme_bits_per_weight():
+    assert parse_scheme("fp5.33").bits_per_weight == pytest.approx(16 / 3)
+    assert parse_scheme("fp4.25").bits_per_weight == 4.25
+    assert parse_scheme("fp16").bits_per_weight == 16.0
+    assert parse_scheme("int8").bits_per_weight == 8.0
+
+
+def test_parse_rejects_unknown():
+    with pytest.raises(ValueError):
+        parse_scheme("fp9.99")
+
+
+def test_negative_codes():
+    f = E2M2
+    top = f.ebits + f.mbits
+    for c in range(1 << top):
+        assert f.decode(c | (1 << top)) == -f.decode(c)

@@ -1,0 +1,124 @@
+"""Reference-pipeline tests: RTN, sharing/adaptive search, pack/unpack."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.formats import E2M2, E2M3, parse_scheme
+
+SCHEMES = [
+    "fp8", "int8", "int4", "fp6", "fp6-e3m2", "fp5", "fp4", "fp5.33", "fp4.5", "fp4.25",
+]
+
+
+def rand_w(rows, cols, seed=0, sigma=0.02):
+    return np.random.default_rng(seed).normal(0, sigma, (rows, cols)).astype(np.float32)
+
+
+def test_rtn_is_nearest():
+    fmt = E2M3
+    vals = fmt.decode_table().astype(np.float64)
+    xs = np.random.default_rng(1).uniform(-8, 8, 500).astype(np.float32)
+    codes = ref.encode_rtn(fmt, xs)
+    got = fmt.decode_table()[codes]
+    for x, g in zip(xs, got):
+        best = np.abs(vals - x).min()
+        assert abs(g - x) <= best + 1e-6
+
+
+def test_rtn_saturates():
+    fmt = E2M3
+    codes = ref.encode_rtn(fmt, np.array([100.0, -100.0], dtype=np.float32))
+    assert fmt.decode_table()[codes[0]] == 7.5
+    assert fmt.decode_table()[codes[1]] == -7.5
+
+
+def test_scales_channelwise():
+    w = np.array([[1.0, -3.0, 0.5], [0.25, 0.1, -0.2]], dtype=np.float32)
+    s = ref.compute_scales(w, E2M3)
+    assert s == pytest.approx([3.0 / 7.5, 0.25 / 7.5])
+
+
+def test_sharing_shares_lsb():
+    w = rand_w(4, 33, 2)
+    sch = parse_scheme("fp5.33")
+    codes, scales = ref.quantize(w, sch)
+    for r in range(4):
+        for g0 in range(0, 33, 3):
+            lsbs = codes[r, g0 : g0 + 3] & 1
+            assert (lsbs == lsbs[0]).all()
+
+
+def test_adaptive_beats_fixed():
+    w = rand_w(8, 64, 3)
+    for name in ["fp5.33", "fp4.25"]:
+        sch = parse_scheme(name)
+        table = sch.fmt.decode_table()
+
+        def mse(policy):
+            c, s = ref.quantize_rtn(w, sch.fmt)
+            c = ref.apply_sharing(sch.fmt, c, w, s, sch.k, policy)
+            return ((table[c] * s[:, None] - w) ** 2).mean()
+
+        assert mse("adaptive") <= mse("zero") + 1e-12
+        assert mse("adaptive") <= mse("one") + 1e-12
+
+
+def test_mse_ordering_across_formats():
+    w = rand_w(16, 192, 4)
+
+    def mse(name):
+        sch = parse_scheme(name)
+        c, s = ref.quantize(w, sch)
+        return ((sch.dequant_table()[c] * s[:, None] - w) ** 2).mean()
+
+    m6, m533, m5, m425, m4 = (
+        mse("fp6"), mse("fp5.33"), mse("fp5"), mse("fp4.25"), mse("fp4"),
+    )
+    assert m6 <= m533 <= m5 * 1.5
+    assert m5 <= m425 < m4
+
+
+@pytest.mark.parametrize("name", SCHEMES)
+def test_pack_roundtrip(name):
+    sch = parse_scheme(name)
+    for cols in [1, 3, 4, 16, 17, 47, 64, 100]:
+        w = rand_w(3, cols, cols)
+        codes, _ = ref.quantize(w, sch)
+        words = ref.pack_rows(sch, codes)
+        assert words.shape[1] == ref.row_stride(sch, cols)
+        back = ref.unpack_rows(sch, words, cols)
+        np.testing.assert_array_equal(back, codes, err_msg=f"{name} cols={cols}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cols=st.integers(min_value=1, max_value=130),
+    rows=st.integers(min_value=1, max_value=6),
+    name=st.sampled_from(SCHEMES),
+)
+def test_pack_roundtrip_hypothesis(cols, rows, name):
+    sch = parse_scheme(name)
+    w = rand_w(rows, cols, cols * 7 + rows)
+    codes, _ = ref.quantize(w, sch)
+    back = ref.unpack_rows(sch, ref.pack_rows(sch, codes), cols)
+    np.testing.assert_array_equal(back, codes)
+
+
+def test_bits_per_weight_at_divisible_cols():
+    for name, expect in [("fp5.33", 16 / 3), ("fp4.25", 4.25), ("fp6", 6.0), ("fp5", 5.0)]:
+        sch = parse_scheme(name)
+        stride = ref.row_stride(sch, 768)
+        assert stride * 16 / 768 == pytest.approx(expect), name
+
+
+def test_u32_repack():
+    sch = parse_scheme("fp5.33")
+    w = rand_w(2, 6, 9)
+    codes, _ = ref.quantize(w, sch)
+    words = ref.pack_rows(sch, codes)
+    u32 = ref.to_u32(words)
+    assert u32.dtype == np.uint32
+    assert (u32[:, 0] & 0xFFFF == words[:, 0]).all()
+    assert (u32[:, 0] >> 16 == words[:, 1]).all()

@@ -1,0 +1,70 @@
+//! E9 perf — batched decode throughput of the transformer engine across
+//! schemes and batch sizes (the model-level realization of Table 3's
+//! batch sweep: linear layers dominate, attention is per-sequence).
+
+use ams_quant::experiments as exp;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::model::transformer::KvCache;
+use ams_quant::quant::QuantConfig;
+use ams_quant::report::{f, Table};
+use ams_quant::util::bench::{bench_with_units, black_box, BenchConfig};
+use ams_quant::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var("AMS_BENCH_QUICK").is_ok();
+    let batches: Vec<usize> = if quick { vec![1, 8] } else { vec![1, 4, 8, 16, 32] };
+    let steps = args.get_usize("steps", 8);
+
+    let (base, _held, kind) = exp::load_model(Path::new("artifacts")).expect("load model");
+    println!("# e2e decode bench: {kind} model, {steps} steps/iteration\n");
+
+    let mut header = vec!["Scheme".to_string()];
+    header.extend(batches.iter().map(|b| format!("tok/s b={b}")));
+    header.push("speedup b=8 vs fp16".into());
+    let mut t = Table::new(
+        "E9 — batched decode throughput",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let mut fp16_b8 = 0.0f64;
+    for name in ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "fp4"] {
+        let scheme = Scheme::parse(name).unwrap();
+        let model = base.quantized(&QuantConfig::paper(scheme));
+        let mut cells = vec![scheme.label()];
+        let mut b8_rate = 0.0;
+        for &b in &batches {
+            let tokens: Vec<u32> = (0..b).map(|i| (i as u32 * 17 + 32) % 255).collect();
+            let mut fcall = || {
+                let mut caches: Vec<KvCache> = (0..b).map(|_| model.new_cache()).collect();
+                for _ in 0..steps {
+                    black_box(model.forward_batch(&tokens, &mut caches).len());
+                }
+            };
+            let r = bench_with_units(
+                &format!("{name}/b{b}"),
+                &cfg,
+                (b * steps) as f64,
+                &mut fcall,
+            );
+            let rate = r.rate();
+            if b == 8 {
+                b8_rate = rate;
+                if scheme == Scheme::Fp16 {
+                    fp16_b8 = rate;
+                }
+            }
+            cells.push(f(rate, 1));
+        }
+        cells.push(if fp16_b8 > 0.0 {
+            f(b8_rate / fp16_b8, 2)
+        } else {
+            "-".into()
+        });
+        t.row(cells);
+    }
+    println!("{}", t.to_console());
+    println!("{}", t.to_markdown());
+}

@@ -1,0 +1,37 @@
+//! E6/E7 measured — Table 3 / Figure 6 on this CPU: wall-clock speedups of
+//! the packed fused dequant-GEMM kernels vs the fp16-storage baseline, at
+//! the paper's layer shapes scaled by --shrink (default 8; use
+//! AMS_BENCH_QUICK=1 for CI).
+//!
+//! The paper's claim shape: speedup ordered by bits/weight at small batch
+//! (memory-bound), shrinking as batch grows (compute takes over).
+
+use ams_quant::experiments as exp;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::util::bench::BenchConfig;
+use ams_quant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let quick = std::env::var("AMS_BENCH_QUICK").is_ok();
+    let shrink = args.get_usize("shrink", if quick { 20 } else { 8 });
+    let threads = args.get_usize("threads", 1);
+    let cfg = BenchConfig::from_env();
+    let batches: Vec<usize> = if quick {
+        vec![1, 8, 32]
+    } else {
+        vec![1, 2, 4, 8, 16, 32]
+    };
+    let schemes: Vec<Scheme> = ["fp8", "int8", "fp6", "fp5", "fp5.33", "fp4.25"]
+        .iter()
+        .map(|s| Scheme::parse(s).unwrap())
+        .collect();
+    let shapes = exp::scaled_table3_shapes(shrink);
+    println!(
+        "# measured Table 3 / Fig 6 (CPU, shrink={shrink}, threads={threads}, speedup vs fp16-storage GEMM)\n"
+    );
+    for t in exp::table3_measured(&shapes, &schemes, &batches, &cfg, threads) {
+        println!("{}", t.to_console());
+        println!("{}", t.to_markdown());
+    }
+}

@@ -1,0 +1,123 @@
+//! A1/A2 ablations + quantizer throughput.
+//!
+//! A1: adaptive search vs fixed-0 / fixed-1 / majority — MSE and cost.
+//! A2: sharing along input vs output channels under channel-wise outliers.
+//! Plus SetLsb (paper-literal) vs Reround (nearest-with-LSB) policies.
+
+use ams_quant::formats::registry::Scheme;
+use ams_quant::model::synthetic::{llm_weight, WeightProfile};
+use ams_quant::quant::error::sqnr_db;
+use ams_quant::quant::sharing::quantize;
+use ams_quant::quant::{QuantConfig, SearchPolicy, ShareDim, SharePolicy};
+use ams_quant::report::{f, Table};
+use ams_quant::util::bench::{bench_with_units, black_box, BenchConfig, BenchSuite};
+use ams_quant::util::prng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rng = Rng::new(3);
+    let rows = 128;
+    let cols = 2048;
+    let w = llm_weight(rows, cols, &WeightProfile::default(), &mut rng);
+
+    // --- A1: search policy ablation ---------------------------------------
+    let mut t = Table::new(
+        "A1 — adaptive search ablation (fp4.25 on outlier-y weights)",
+        &["policy", "MSE", "SQNR dB", "quantize ms"],
+    );
+    let scheme = Scheme::parse("fp4.25").unwrap();
+    for (label, policy) in [
+        ("adaptive (paper)", SearchPolicy::AdaptiveMse),
+        ("always-0", SearchPolicy::AlwaysZero),
+        ("always-1", SearchPolicy::AlwaysOne),
+        ("majority", SearchPolicy::Majority),
+    ] {
+        let mut qc = QuantConfig::paper(scheme);
+        qc.search_policy = policy;
+        let q = quantize(&w, &qc);
+        let deq = q.dequantize();
+        let mut fcall = || {
+            black_box(quantize(&w, &qc).codes.len());
+        };
+        let r = bench_with_units(label, &cfg, (rows * cols) as f64, &mut fcall);
+        t.row(vec![
+            label.into(),
+            format!("{:.4e}", w.mse(&deq)),
+            f(sqnr_db(&w, &deq), 2),
+            f(r.median_secs * 1e3, 2),
+        ]);
+    }
+    println!("{}", t.to_console());
+    println!("{}", t.to_markdown());
+
+    // --- SetLsb vs Reround -------------------------------------------------
+    let mut t = Table::new(
+        "A1b — share policy (G operator): SetLsb (paper) vs Reround",
+        &["scheme", "SetLsb MSE", "Reround MSE", "improvement %"],
+    );
+    for name in ["fp5.33", "fp4.5", "fp4.25"] {
+        let scheme = Scheme::parse(name).unwrap();
+        let mut qc = QuantConfig::paper(scheme);
+        qc.share_policy = SharePolicy::SetLsb;
+        let m_set = w.mse(&quantize(&w, &qc).dequantize());
+        qc.share_policy = SharePolicy::Reround;
+        let m_rr = w.mse(&quantize(&w, &qc).dequantize());
+        t.row(vec![
+            scheme.label(),
+            format!("{m_set:.4e}"),
+            format!("{m_rr:.4e}"),
+            f(100.0 * (m_set - m_rr) / m_set, 2),
+        ]);
+    }
+    println!("{}", t.to_console());
+    println!("{}", t.to_markdown());
+
+    // --- A2: sharing dimension under channel outliers ----------------------
+    let profile = WeightProfile {
+        outlier_frac: 0.04,
+        outlier_gain: 12.0,
+        ..WeightProfile::default()
+    };
+    let w2 = llm_weight(rows, cols, &profile, &mut rng);
+    let mut t = Table::new(
+        "A2 — sharing dimension under channel-wise outliers",
+        &["scheme", "input-dim MSE (paper)", "output-dim MSE", "input better %"],
+    );
+    for name in ["fp5.33", "fp4.25"] {
+        let scheme = Scheme::parse(name).unwrap();
+        let mut qc = QuantConfig::paper(scheme);
+        qc.share_dim = ShareDim::Input;
+        let m_in = w2.mse(&quantize(&w2, &qc).dequantize());
+        qc.share_dim = ShareDim::Output;
+        let m_out = w2.mse(&quantize(&w2, &qc).dequantize());
+        t.row(vec![
+            scheme.label(),
+            format!("{m_in:.4e}"),
+            format!("{m_out:.4e}"),
+            f(100.0 * (m_out - m_in) / m_out, 2),
+        ]);
+    }
+    println!("{}", t.to_console());
+    println!("{}", t.to_markdown());
+
+    // --- throughput ---------------------------------------------------------
+    let mut suite = BenchSuite::new();
+    for name in ["fp6", "fp5.33", "fp4.25", "int8"] {
+        let scheme = Scheme::parse(name).unwrap();
+        let qc = QuantConfig::paper(scheme);
+        let mut fcall = || {
+            if matches!(scheme, Scheme::Int { .. }) {
+                black_box(ams_quant::baselines::quantize_int(&w, scheme).words.len());
+            } else {
+                black_box(quantize(&w, &qc).codes.len());
+            }
+        };
+        suite.push(bench_with_units(
+            &format!("quantize/{name}"),
+            &cfg,
+            (rows * cols) as f64,
+            &mut fcall,
+        ));
+    }
+    println!("\n{}", suite.to_markdown());
+}

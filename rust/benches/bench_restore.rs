@@ -1,0 +1,79 @@
+//! E8/A4 — restoration microbenches (Fig 4 path): bit-op vs LUT code→fp16
+//! conversion, and fused unpack+dequant throughput per packed layout
+//! (weights/s), the building block of every GEMV row kernel.
+
+use ams_quant::experiments::make_linear;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::formats::FpFormat;
+use ams_quant::gemm::kernels::row_values;
+use ams_quant::model::synthetic::{llm_weight, WeightProfile};
+use ams_quant::restore::{code_to_fp16_bits, Fp16Lut};
+use ams_quant::util::bench::{bench_with_units, black_box, BenchConfig, BenchSuite};
+use ams_quant::util::prng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut suite = BenchSuite::new();
+    let mut rng = Rng::new(1);
+
+    // --- A4: bitops vs LUT on a code stream -------------------------------
+    let n = 1 << 16;
+    for fmt in [FpFormat::E2M2, FpFormat::E2M3, FpFormat::E3M2] {
+        let codes: Vec<u16> = (0..n)
+            .map(|_| (rng.next_u32() as u16) & fmt.code_mask())
+            .collect();
+        let mut out = vec![0u16; n];
+        let mut fcall = || {
+            for (o, &c) in out.iter_mut().zip(&codes) {
+                *o = code_to_fp16_bits(fmt, c);
+            }
+            black_box(out[0]);
+        };
+        suite.push(bench_with_units(
+            &format!("restore/bitops/{}", fmt.name()),
+            &cfg,
+            n as f64,
+            &mut fcall,
+        ));
+        let lut = Fp16Lut::new(fmt);
+        let mut fcall = || {
+            for (o, &c) in out.iter_mut().zip(&codes) {
+                *o = lut.get(c);
+            }
+            black_box(out[0]);
+        };
+        suite.push(bench_with_units(
+            &format!("restore/lut/{}", fmt.name()),
+            &cfg,
+            n as f64,
+            &mut fcall,
+        ));
+    }
+
+    // --- fused unpack+dequant per layout (row_values) ---------------------
+    let cols = 8192;
+    let w = llm_weight(4, cols, &WeightProfile::default(), &mut rng);
+    for name in ["fp16", "fp8", "int8", "int4", "fp6", "fp5", "fp5.33", "fp4.5", "fp4.25"] {
+        let scheme = Scheme::parse(name).unwrap();
+        let lin = make_linear(&w, scheme);
+        let mut vals = vec![0f32; cols];
+        let mut fcall = || {
+            row_values(
+                scheme,
+                lin.packed.row_words(0),
+                cols,
+                lin.table(),
+                &mut vals,
+            );
+            black_box(vals[0]);
+        };
+        suite.push(bench_with_units(
+            &format!("unpack+dequant/{name}"),
+            &cfg,
+            cols as f64,
+            &mut fcall,
+        ));
+    }
+
+    println!("\n{}", suite.to_markdown());
+}

@@ -1,0 +1,14 @@
+//! E6 — Table 3 + Figure 6 from the roofline simulator of the paper's
+//! device (22 TFLOPS, 290 GB/s). Instant; prints paper-comparable grids.
+
+use ams_quant::experiments as exp;
+
+fn main() {
+    println!("# Simulated Table 3 (paper device: 22 TFLOPS, 290 GB/s)\n");
+    for t in exp::table3_sim() {
+        println!("{}", t.to_console());
+        println!("{}", t.to_markdown());
+    }
+    println!("# Ideal memory-bound roofline\n");
+    println!("{}", exp::roofline_table(25600, 5120).to_console());
+}

@@ -1,0 +1,179 @@
+//! Comparator implementations the paper benchmarks against:
+//!
+//! - **W16A16 (cuBLAS analog)**: native fp16 weight storage, dense GEMV —
+//!   [`pack_fp16`].
+//! - **W8A16 (TensorRT-LLM analog)**: per-channel symmetric INT8 —
+//!   [`quantize_int`] with `Scheme::Int { bits: 8 }`.
+//! - **INT4 RTN**: the classic low-bit integer baseline (Fig. 2 context).
+//! - **TC-FPx (fp6-llm analog)**: the FP6 (4+2) and FP5 (4+1) layouts live
+//!   in [`crate::pack`] and run through the same kernels; this module only
+//!   adds the integer paths.
+//!
+//! All baselines share the GEMV kernels and scale conventions of the main
+//! path so speed and accuracy comparisons isolate the *format*, exactly as
+//! in the paper's §4.2.
+
+use crate::formats::fp16::f32_to_fp16;
+use crate::formats::registry::Scheme;
+use crate::pack::{pack_row, row_stride, PackedTensor};
+use crate::tensor::Tensor;
+
+/// Store a weight tensor as raw fp16 words (the W16A16 baseline).
+pub fn pack_fp16(w: &Tensor) -> PackedTensor {
+    assert_eq!(w.ndim(), 2);
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut words = vec![0u16; rows * cols];
+    for (o, &x) in words.iter_mut().zip(w.data()) {
+        *o = f32_to_fp16(x);
+    }
+    PackedTensor {
+        scheme: Scheme::Fp16,
+        rows,
+        cols,
+        words,
+        row_stride: cols,
+        scales: vec![1.0; rows],
+    }
+}
+
+/// Symmetric per-channel integer RTN quantization (INT4 / INT8), stored
+/// offset-binary so the shared dequant-table machinery applies:
+/// `code = round(w/s) + 2^(b-1)`, `value = code - 2^(b-1)`, `s = amax / (2^(b-1) - 1)`.
+pub fn quantize_int(w: &Tensor, scheme: Scheme) -> PackedTensor {
+    let bits = match scheme {
+        Scheme::Int { bits } => bits,
+        other => panic!("quantize_int got {other:?}"),
+    };
+    assert!(bits == 4 || bits == 8);
+    assert_eq!(w.ndim(), 2);
+    let (rows, cols) = (w.rows(), w.cols());
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let offset = (1u16 << (bits - 1)) as i32;
+    let stride = row_stride(scheme, cols);
+    let mut words = vec![0u16; rows * stride];
+    let mut scales = Vec::with_capacity(rows);
+    let mut codes = vec![0u16; cols];
+    for r in 0..rows {
+        let row = w.row(r);
+        let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let s = if amax == 0.0 { 1.0 } else { amax / qmax };
+        scales.push(s);
+        for (c, &x) in row.iter().enumerate() {
+            let q = (x / s).round().clamp(-qmax, qmax) as i32;
+            codes[c] = (q + offset) as u16;
+        }
+        pack_row(scheme, &codes, &mut words[r * stride..(r + 1) * stride]);
+    }
+    PackedTensor {
+        scheme,
+        rows,
+        cols,
+        words,
+        row_stride: stride,
+        scales,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::QuantLinear;
+    use crate::quant::error::sqnr_db;
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn fp16_baseline_is_lossless_for_half_values() {
+        // Values already on the fp16 grid survive exactly.
+        let w = Tensor::from_vec(&[2, 2], vec![0.5, -1.25, 3.0, 0.0]);
+        let p = pack_fp16(&w);
+        let lin = QuantLinear::new(p);
+        let x = vec![1.0, 1.0];
+        let mut y = vec![0f32; 2];
+        lin.gemv(&x, &mut y);
+        assert_eq!(y, vec![-0.75, 3.0]);
+    }
+
+    #[test]
+    fn int8_bounds_and_roundtrip() {
+        let mut rng = Rng::new(1);
+        let w = init::gaussian(&[8, 64], 0.0, 0.02, &mut rng);
+        let p = quantize_int(&w, Scheme::Int { bits: 8 });
+        let lin = QuantLinear::new(p);
+        let deq = {
+            let mut t = Tensor::zeros(&[8, 64]);
+            let table = crate::gemm::dequant_table(Scheme::Int { bits: 8 });
+            for r in 0..8 {
+                let mut codes = vec![0u16; 64];
+                crate::pack::unpack_row(Scheme::Int { bits: 8 }, lin.packed.row_words(r), 64, &mut codes);
+                for c in 0..64 {
+                    t.set2(r, c, table[codes[c] as usize] * lin.packed.scales[r]);
+                }
+            }
+            t
+        };
+        // INT8 per-channel should be quite accurate: > 30 dB SQNR.
+        assert!(sqnr_db(&w, &deq) > 30.0, "sqnr={}", sqnr_db(&w, &deq));
+    }
+
+    #[test]
+    fn int4_worse_than_int8() {
+        let mut rng = Rng::new(2);
+        let w = init::gaussian(&[8, 128], 0.0, 0.02, &mut rng);
+        let reconstruct = |scheme: Scheme| {
+            let p = quantize_int(&w, scheme);
+            let table = crate::gemm::dequant_table(scheme);
+            let mut t = Tensor::zeros(&[8, 128]);
+            for r in 0..8 {
+                let mut codes = vec![0u16; 128];
+                crate::pack::unpack_row(scheme, p.row_words(r), 128, &mut codes);
+                for c in 0..128 {
+                    t.set2(r, c, table[codes[c] as usize] * p.scales[r]);
+                }
+            }
+            t
+        };
+        let s8 = sqnr_db(&w, &reconstruct(Scheme::Int { bits: 8 }));
+        let s4 = sqnr_db(&w, &reconstruct(Scheme::Int { bits: 4 }));
+        assert!(s8 > s4 + 10.0, "int8={s8} int4={s4}");
+    }
+
+    #[test]
+    fn fp_beats_int_at_same_bits_on_gaussian() {
+        // The paper's motivating claim (§2.2): bell-shaped weights favour
+        // floating-point grids. Compare FP4-e2m1 vs INT4 SQNR.
+        use crate::quant::sharing::quantize as quantize_fp;
+        use crate::quant::QuantConfig;
+        let mut rng = Rng::new(3);
+        let w = init::gaussian(&[16, 256], 0.0, 0.02, &mut rng);
+        let fp4 = quantize_fp(&w, &QuantConfig::paper(Scheme::parse("fp4-e2m1").unwrap()))
+            .dequantize();
+        let int4 = {
+            let p = quantize_int(&w, Scheme::Int { bits: 4 });
+            let table = crate::gemm::dequant_table(Scheme::Int { bits: 4 });
+            let mut t = Tensor::zeros(&[16, 256]);
+            for r in 0..16 {
+                let mut codes = vec![0u16; 256];
+                crate::pack::unpack_row(Scheme::Int { bits: 4 }, p.row_words(r), 256, &mut codes);
+                for c in 0..256 {
+                    t.set2(r, c, table[codes[c] as usize] * p.scales[r]);
+                }
+            }
+            t
+        };
+        let s_fp = sqnr_db(&w, &fp4);
+        let s_int = sqnr_db(&w, &int4);
+        assert!(s_fp > s_int, "fp4 {s_fp} dB vs int4 {s_int} dB");
+    }
+
+    #[test]
+    fn zero_row_scale_safe() {
+        let w = Tensor::zeros(&[2, 16]);
+        let p = quantize_int(&w, Scheme::Int { bits: 4 });
+        assert!(p.scales.iter().all(|&s| s == 1.0));
+        let lin = QuantLinear::new(p);
+        let mut y = vec![1f32; 2];
+        lin.gemv(&vec![1.0; 16], &mut y);
+        assert_eq!(y, vec![0.0, 0.0]);
+    }
+}

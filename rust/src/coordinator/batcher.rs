@@ -1,0 +1,319 @@
+//! Continuous dynamic batching scheduler.
+//!
+//! Pure state machine (no threads) so it is unit-testable: the server
+//! drives it with `admit` / `step`. Invariants (property-tested):
+//! every admitted request finishes exactly once, no token is generated
+//! after `max_new_tokens`, and the running batch never exceeds `max_batch`.
+
+use super::{GenRequest, GenResponse};
+use crate::model::transformer::{KvCache, Transformer};
+use crate::util::prng::Rng;
+use crate::util::timer::Timer;
+use std::collections::VecDeque;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum sequences decoded together.
+    pub max_batch: usize,
+    /// Optional token id that terminates a sequence early.
+    pub eos: Option<u32>,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            eos: None,
+        }
+    }
+}
+
+struct Active {
+    req: GenRequest,
+    cache: KvCache,
+    generated: Vec<u32>,
+    next_token: u32,
+    admitted: Timer,
+    ttft_s: Option<f64>,
+    steps: usize,
+}
+
+/// Continuous-batching scheduler bound to one model replica.
+pub struct Scheduler {
+    model: Transformer,
+    policy: BatchPolicy,
+    queue: VecDeque<GenRequest>,
+    active: Vec<Active>,
+    rng: Rng,
+    pub steps_executed: u64,
+    pub batched_tokens: u64,
+}
+
+impl Scheduler {
+    pub fn new(model: Transformer, policy: BatchPolicy, seed: u64) -> Scheduler {
+        Scheduler {
+            model,
+            policy,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            rng: Rng::new(seed),
+            steps_executed: 0,
+            batched_tokens: 0,
+        }
+    }
+
+    pub fn model(&self) -> &Transformer {
+        &self.model
+    }
+
+    /// Enqueue a request (admission happens at the next step boundary).
+    pub fn admit(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// Prefill a request's prompt and move it into the running batch.
+    /// Prompt tokens run through the single-token path (a serving system
+    /// would use a chunked prefill; our prompts are short).
+    fn start(&mut self, req: GenRequest) {
+        let mut cache = self.model.new_cache();
+        let timer = Timer::start();
+        let mut logits = vec![0f32; self.model.cfg.vocab_size];
+        assert!(
+            !req.prompt.is_empty(),
+            "empty prompt: nothing to condition on"
+        );
+        for (pos, &t) in req.prompt.iter().enumerate() {
+            logits = self.model.forward(t, pos, &mut cache);
+        }
+        let first = req.sampler.sample(&logits, &mut self.rng);
+        self.active.push(Active {
+            req,
+            cache,
+            generated: vec![first],
+            next_token: first,
+            admitted: timer,
+            ttft_s: None,
+            steps: 1,
+        });
+        let a = self.active.last_mut().unwrap();
+        a.ttft_s = Some(a.admitted.elapsed_secs());
+    }
+
+    /// One scheduler iteration: admit up to capacity, run one batched
+    /// decode step, retire finished sequences. Returns responses finished
+    /// in this step.
+    pub fn step(&mut self) -> Vec<GenResponse> {
+        // Admission.
+        while self.active.len() < self.policy.max_batch {
+            match self.queue.pop_front() {
+                Some(r) => self.start(r),
+                None => break,
+            }
+        }
+        let mut done = Vec::new();
+        if self.active.is_empty() {
+            return done;
+        }
+        // Retire sequences that already satisfied their budget (including
+        // single-token generations) before spending a decode step on them.
+        self.retire(&mut done);
+        if self.active.is_empty() {
+            return done;
+        }
+
+        let tokens: Vec<u32> = self.active.iter().map(|a| a.next_token).collect();
+        let mut caches: Vec<KvCache> = self
+            .active
+            .iter_mut()
+            .map(|a| std::mem::replace(&mut a.cache, KvCache::new(&self.model.cfg)))
+            .collect();
+        let logits = self.model.forward_batch(&tokens, &mut caches);
+        self.steps_executed += 1;
+        self.batched_tokens += tokens.len() as u64;
+        for (i, a) in self.active.iter_mut().enumerate() {
+            a.cache = std::mem::replace(&mut caches[i], KvCache::new(&self.model.cfg));
+            let row: Vec<f32> = (0..self.model.cfg.vocab_size)
+                .map(|j| logits.at2(i, j))
+                .collect();
+            let t = a.req.sampler.sample(&row, &mut self.rng);
+            a.generated.push(t);
+            a.next_token = t;
+            a.steps += 1;
+        }
+        self.retire(&mut done);
+        done
+    }
+
+    fn retire(&mut self, done: &mut Vec<GenResponse>) {
+        let eos = self.policy.eos;
+        let cfg_max = self.model.cfg.max_seq;
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &self.active[i];
+            let hit_eos = eos.map(|e| a.generated.last() == Some(&e)).unwrap_or(false);
+            let budget = a.generated.len() >= a.req.max_new_tokens;
+            let ctx_full = a.req.prompt.len() + a.generated.len() >= cfg_max;
+            if hit_eos || budget || ctx_full {
+                let a = self.active.swap_remove(i);
+                done.push(GenResponse {
+                    id: a.req.id,
+                    tokens: a.generated,
+                    ttft_s: a.ttft_s.unwrap_or(0.0),
+                    total_s: a.admitted.elapsed_secs(),
+                    steps: a.steps,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Drive to completion, returning all responses.
+    pub fn run_to_completion(&mut self) -> Vec<GenResponse> {
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            out.extend(self.step());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::synthetic_checkpoint;
+    use crate::model::ModelConfig;
+    use crate::util::proptest::{run_prop, USize};
+
+    fn sched(max_batch: usize) -> Scheduler {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 21);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        Scheduler::new(
+            model,
+            BatchPolicy {
+                max_batch,
+                eos: None,
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut s = sched(4);
+        s.admit(GenRequest::greedy(1, vec![1, 2, 3], 5));
+        let out = s.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 1);
+        assert_eq!(out[0].tokens.len(), 5);
+    }
+
+    #[test]
+    fn all_requests_finish_exactly_once() {
+        let mut s = sched(3);
+        for id in 0..10u64 {
+            s.admit(GenRequest::greedy(id, vec![(id % 60) as u32 + 1], 3 + (id as usize % 4)));
+        }
+        let out = s.run_to_completion();
+        assert_eq!(out.len(), 10);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        for r in &out {
+            let want = 3 + (r.id as usize % 4);
+            assert_eq!(r.tokens.len(), want, "req {}", r.id);
+        }
+    }
+
+    #[test]
+    fn batch_occupancy_bounded() {
+        let mut s = sched(2);
+        for id in 0..6u64 {
+            s.admit(GenRequest::greedy(id, vec![1, 2], 4));
+        }
+        while s.pending() > 0 {
+            s.step();
+            assert!(s.active.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn batched_equals_sequential_greedy() {
+        // Greedy decoding must be identical whether requests are served
+        // alone or continuously batched.
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 22);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![9, 8], vec![4], vec![5, 6, 7, 8]];
+
+        let mut solo_out = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let mut s = Scheduler::new(model.clone(), BatchPolicy::default(), 1);
+            s.admit(GenRequest::greedy(i as u64, p.clone(), 6));
+            solo_out.push(s.run_to_completion().pop().unwrap().tokens);
+        }
+
+        let mut s = Scheduler::new(model, BatchPolicy { max_batch: 4, eos: None }, 1);
+        for (i, p) in prompts.iter().enumerate() {
+            s.admit(GenRequest::greedy(i as u64, p.clone(), 6));
+        }
+        let mut batched = s.run_to_completion();
+        batched.sort_by_key(|r| r.id);
+        for (i, r) in batched.iter().enumerate() {
+            assert_eq!(r.tokens, solo_out[i], "req {i}");
+        }
+    }
+
+    #[test]
+    fn eos_stops_early() {
+        // With eos = the greedy first token, generation stops at length 1.
+        let mut s = sched(1);
+        s.admit(GenRequest::greedy(0, vec![1, 2], 10));
+        let tok = s.run_to_completion()[0].tokens[0];
+        let mut s2 = sched(1);
+        s2.policy.eos = Some(tok);
+        s2.admit(GenRequest::greedy(0, vec![1, 2], 10));
+        let out = s2.run_to_completion();
+        assert_eq!(out[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn prop_random_loads_complete() {
+        run_prop(
+            "scheduler-completes",
+            0xC0DE,
+            8,
+            &USize { lo: 1, hi: 12 },
+            |&n| {
+                let mut s = sched(3);
+                for id in 0..n as u64 {
+                    s.admit(GenRequest::greedy(
+                        id,
+                        vec![(id as u32 % 50) + 1, 2],
+                        1 + (id as usize % 5),
+                    ));
+                }
+                let out = s.run_to_completion();
+                if out.len() != n {
+                    return Err(format!("{n} admitted, {} finished", out.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn stats_track_occupancy() {
+        let mut s = sched(4);
+        for id in 0..4u64 {
+            s.admit(GenRequest::greedy(id, vec![1], 4));
+        }
+        s.run_to_completion();
+        assert!(s.steps_executed > 0);
+        let occ = s.batched_tokens as f64 / s.steps_executed as f64;
+        assert!(occ > 1.0, "occupancy {occ} should exceed 1 with 4 concurrent requests");
+    }
+}

@@ -1,0 +1,76 @@
+//! L3 serving coordinator: request types, continuous dynamic batcher,
+//! engine workers and a replica router.
+//!
+//! The paper's contribution is the numeric format + kernels, so the
+//! coordinator is deliberately vLLM-router-shaped but lean: requests enter
+//! a queue, a scheduler admits them into the running batch (continuous
+//! batching up to `max_batch`), every step runs one batched decode through
+//! the packed kernels, finished sequences leave the batch immediately.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+use crate::model::sampler::Sampler;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampler: Sampler,
+}
+
+impl GenRequest {
+    pub fn greedy(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            sampler: Sampler::Greedy,
+        }
+    }
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated tokens (prompt excluded).
+    pub tokens: Vec<u32>,
+    /// Seconds from admission to first generated token.
+    pub ttft_s: f64,
+    /// Seconds from admission to completion.
+    pub total_s: f64,
+    /// Decode steps executed on behalf of this request.
+    pub steps: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub batched_tokens: u64,
+    pub wall_s: f64,
+}
+
+impl ServeStats {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens_generated as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.decode_steps > 0 {
+            self.batched_tokens as f64 / self.decode_steps as f64
+        } else {
+            0.0
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Threaded serving front: a worker thread owns a [`Scheduler`] and drains
+//! an mpsc request channel; responses flow back over a response channel.
+//! Latency percentiles and throughput are recorded per server.
+
+use super::batcher::{BatchPolicy, Scheduler};
+use super::{GenRequest, GenResponse, ServeStats};
+use crate::model::transformer::Transformer;
+use crate::util::metrics::LatencyRecorder;
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+enum Msg {
+    Req(GenRequest),
+    Shutdown,
+}
+
+/// Handle to a single-replica serving worker.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    rx_out: mpsc::Receiver<GenResponse>,
+    handle: Option<thread::JoinHandle<ServeStats>>,
+    outstanding: Arc<AtomicUsize>,
+    pub latency: Arc<LatencyRecorder>,
+}
+
+impl Server {
+    pub fn spawn(model: Transformer, policy: BatchPolicy, seed: u64) -> Server {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (tx_out, rx_out) = mpsc::channel::<GenResponse>();
+        let outstanding = Arc::new(AtomicUsize::new(0));
+        let latency = Arc::new(LatencyRecorder::new());
+        let out_ctr = Arc::clone(&outstanding);
+        let lat = Arc::clone(&latency);
+        let handle = thread::Builder::new()
+            .name("ams-server".into())
+            .spawn(move || {
+                let mut sched = Scheduler::new(model, policy, seed);
+                let mut stats = ServeStats::default();
+                let wall = Timer::start();
+                loop {
+                    // Drain whatever is queued; block only when idle.
+                    if sched.pending() == 0 {
+                        match rx.recv() {
+                            Ok(Msg::Req(r)) => sched.admit(r),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    }
+                    while let Ok(msg) = rx.try_recv() {
+                        match msg {
+                            Msg::Req(r) => sched.admit(r),
+                            Msg::Shutdown => {
+                                // Finish in-flight work, then exit.
+                                for r in sched.run_to_completion() {
+                                    stats.requests += 1;
+                                    stats.tokens_generated += r.tokens.len() as u64;
+                                    lat.record(r.total_s);
+                                    out_ctr.fetch_sub(1, Ordering::SeqCst);
+                                    let _ = tx_out.send(r);
+                                }
+                                stats.decode_steps = sched.steps_executed;
+                                stats.batched_tokens = sched.batched_tokens;
+                                stats.wall_s = wall.elapsed_secs();
+                                return stats;
+                            }
+                        }
+                    }
+                    for r in sched.step() {
+                        stats.requests += 1;
+                        stats.tokens_generated += r.tokens.len() as u64;
+                        lat.record(r.total_s);
+                        out_ctr.fetch_sub(1, Ordering::SeqCst);
+                        let _ = tx_out.send(r);
+                    }
+                }
+                stats.decode_steps = sched.steps_executed;
+                stats.batched_tokens = sched.batched_tokens;
+                stats.wall_s = wall.elapsed_secs();
+                stats
+            })
+            .expect("spawn server");
+        Server {
+            tx,
+            rx_out,
+            handle: Some(handle),
+            outstanding,
+            latency,
+        }
+    }
+
+    pub fn submit(&self, req: GenRequest) {
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Req(req)).expect("server send");
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// Blocking receive of the next finished response.
+    pub fn recv(&self) -> Option<GenResponse> {
+        self.rx_out.recv().ok()
+    }
+
+    /// Collect exactly `n` responses (blocking).
+    pub fn collect(&self, n: usize) -> Vec<GenResponse> {
+        (0..n).filter_map(|_| self.recv()).collect()
+    }
+
+    /// Stop the worker and return its stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::synthetic_checkpoint;
+    use crate::model::ModelConfig;
+
+    fn model() -> Transformer {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 33);
+        Transformer::from_checkpoint(&ck).unwrap()
+    }
+
+    #[test]
+    fn serves_and_shuts_down() {
+        let srv = Server::spawn(model(), BatchPolicy::default(), 1);
+        for id in 0..5u64 {
+            srv.submit(GenRequest::greedy(id, vec![1, 2], 3));
+        }
+        let out = srv.collect(5);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|r| r.tokens.len() == 3));
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.tokens_generated, 15);
+        assert!(stats.wall_s > 0.0);
+    }
+
+    #[test]
+    fn latency_recorded() {
+        let srv = Server::spawn(model(), BatchPolicy::default(), 2);
+        srv.submit(GenRequest::greedy(0, vec![3], 2));
+        let _ = srv.collect(1);
+        assert_eq!(srv.latency.snapshot().count(), 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_inflight() {
+        let srv = Server::spawn(model(), BatchPolicy::default(), 3);
+        for id in 0..3u64 {
+            srv.submit(GenRequest::greedy(id, vec![1], 2));
+        }
+        // Immediate shutdown: responses must still be produced.
+        let stats = srv.shutdown();
+        assert_eq!(stats.requests, 3);
+    }
+}

@@ -1,0 +1,112 @@
+//! Pattern-completion task: the synthetic-corpus grammar (shared with
+//! python/compile/corpus.py) embeds periodic key-value "sentences"; the
+//! model is prompted with a prefix whose continuation is deterministic
+//! under the grammar, and scored on greedy exact-match — our stand-in for
+//! instruction-following exact-match metrics (IFEval's strict accuracy).
+
+use crate::model::sampler::argmax;
+use crate::model::transformer::Transformer;
+use crate::util::prng::Rng;
+
+/// A single prompt/continuation pair.
+#[derive(Clone, Debug)]
+pub struct PatternCase {
+    pub prompt: Vec<u32>,
+    pub target: Vec<u32>,
+}
+
+/// Build cases of the form "abcabcabc..." — after seeing two periods the
+/// continuation is deterministic for a model that learned the structure.
+pub fn periodic_cases(n_cases: usize, period: usize, reps: usize, tail: usize, seed: u64) -> Vec<PatternCase> {
+    let mut rng = Rng::new(seed);
+    let alphabet: Vec<u32> = ('a'..='z').map(|c| c as u32).collect();
+    (0..n_cases)
+        .map(|_| {
+            let motif: Vec<u32> = (0..period)
+                .map(|_| alphabet[rng.range(0, alphabet.len())])
+                .collect();
+            let mut seq = Vec::new();
+            for _ in 0..reps {
+                seq.extend_from_slice(&motif);
+            }
+            let target: Vec<u32> = (0..tail).map(|i| motif[i % period]).collect();
+            PatternCase {
+                prompt: seq,
+                target,
+            }
+        })
+        .collect()
+}
+
+/// Greedy-decode each case and report exact-match rate over target tokens.
+pub fn pattern_accuracy(model: &Transformer, cases: &[PatternCase]) -> f64 {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for case in cases {
+        let mut cache = model.new_cache();
+        let mut logits = vec![];
+        for (pos, &t) in case.prompt.iter().enumerate() {
+            logits = model.forward(t, pos, &mut cache);
+        }
+        let mut pos = case.prompt.len();
+        for &want in &case.target {
+            let got = argmax(&logits) as u32;
+            if got == want {
+                correct += 1;
+            }
+            total += 1;
+            // Teacher-force the *expected* token so one miss does not
+            // cascade (per-token scoring, like prompt-level-strict split
+            // into token events).
+            logits = model.forward(want, pos, &mut cache);
+            pos += 1;
+        }
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::synthetic_checkpoint;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn cases_are_periodic() {
+        let cases = periodic_cases(5, 3, 4, 6, 1);
+        for c in &cases {
+            assert_eq!(c.prompt.len(), 12);
+            assert_eq!(c.target.len(), 6);
+            // Continuation continues the motif.
+            for (i, &t) in c.target.iter().enumerate() {
+                assert_eq!(t, c.prompt[i % 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_in_unit_interval() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 5);
+        let m = crate::model::transformer::Transformer::from_checkpoint(&ck).unwrap();
+        // test_tiny vocab is 64 — map case tokens into range.
+        let mut cases = periodic_cases(3, 2, 3, 4, 2);
+        for c in &mut cases {
+            for t in c.prompt.iter_mut().chain(c.target.iter_mut()) {
+                *t %= 64;
+            }
+        }
+        let acc = pattern_accuracy(&m, &cases);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let a = periodic_cases(4, 3, 3, 5, 9);
+        let b = periodic_cases(4, 3, 3, 5, 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.target, y.target);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! IEEE-754 binary16 (half) conversion — the dequantization *target* of the
+//! paper's restoration kernels. Bit-exact f32 ↔ u16 with round-to-nearest-
+//! even, subnormals, infinities and NaN.
+
+/// Convert IEEE half bits to f32.
+pub fn fp16_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h >> 15) << 31;
+    let exp = u32::from((h >> 10) & 0x1F);
+    let man = u32::from(h & 0x3FF);
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: value = man * 2^-24. Normalize: shift the leading
+            // one of the 10-bit mantissa up to the implicit-bit position.
+            let shift = man.leading_zeros() - 21; // = 10 - msb_index(man)
+            let man_norm = (man << shift) & 0x3FF;
+            let exp_f32 = 113 - shift; // 127 - 15 + 1 - shift
+            sign | (exp_f32 << 23) | (man_norm << 13)
+        }
+    } else if exp == 0x1F {
+        if man == 0 {
+            sign | 0x7F80_0000 // ±inf
+        } else {
+            sign | 0x7FC0_0000 | (man << 13) // NaN (payload preserved-ish)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert f32 to IEEE half bits with round-to-nearest-even.
+pub fn f32_to_fp16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf or NaN.
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7E00 | ((man >> 13) as u16 & 0x3FF) | u16::from(man >> 13 == 0)
+        };
+    }
+
+    let e = exp - 127 + 15; // rebias
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal half (or zero).
+        if e < -10 {
+            return sign; // too small -> ±0
+        }
+        // Add implicit bit, shift right by (1 - e) extra places.
+        let man_full = man | 0x80_0000;
+        let shift = (14 - e) as u32; // 23 - 10 + (1 - e)
+        let half_man = man_full >> shift;
+        // Round to nearest even on the dropped bits.
+        let dropped = man_full & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = match dropped.cmp(&halfway) {
+            std::cmp::Ordering::Greater => half_man + 1,
+            std::cmp::Ordering::Equal => half_man + (half_man & 1),
+            std::cmp::Ordering::Less => half_man,
+        };
+        return sign | rounded as u16; // may carry into exp=1: that is correct
+    }
+
+    // Normal half.
+    let half_man = man >> 13;
+    let dropped = man & 0x1FFF;
+    let mut out = sign as u32 | ((e as u32) << 10) | half_man;
+    match dropped.cmp(&0x1000) {
+        std::cmp::Ordering::Greater => out += 1,
+        std::cmp::Ordering::Equal => out += out & 1,
+        std::cmp::Ordering::Less => {}
+    }
+    // Carry may roll into the exponent (and to inf) — both are correct.
+    out as u16
+}
+
+/// Round-trip helper: nearest representable half value of x, as f32.
+pub fn fp16_rtn(x: f32) -> f32 {
+    fp16_to_f32(f32_to_fp16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_fp16(0.0), 0x0000);
+        assert_eq!(f32_to_fp16(-0.0), 0x8000);
+        assert_eq!(f32_to_fp16(1.0), 0x3C00);
+        assert_eq!(f32_to_fp16(-2.0), 0xC000);
+        assert_eq!(f32_to_fp16(65504.0), 0x7BFF); // max half
+        assert_eq!(f32_to_fp16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_fp16(6.1035156e-5), 0x0400); // min normal
+        assert_eq!(f32_to_fp16(5.9604645e-8), 0x0001); // min subnormal
+    }
+
+    #[test]
+    fn decode_known() {
+        assert_eq!(fp16_to_f32(0x3C00), 1.0);
+        assert_eq!(fp16_to_f32(0xC000), -2.0);
+        assert_eq!(fp16_to_f32(0x7BFF), 65504.0);
+        assert_eq!(fp16_to_f32(0x0001), 5.9604645e-8);
+        assert!(fp16_to_f32(0x7C00).is_infinite());
+        assert!(fp16_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_half_to_f32_to_half() {
+        // Every finite half survives a round trip exactly.
+        for h in 0..=0xFFFFu16 {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan handled separately
+            }
+            let x = fp16_to_f32(h);
+            let back = f32_to_fp16(x);
+            // ±0 distinction is preserved by our impl.
+            assert_eq!(back, h, "h={h:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn rounding_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 -> even (1.0).
+        let x = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_fp16(x), 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 -> even (1+2^-9... code LSB 0).
+        let y = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f32_to_fp16(y), 0x3C02);
+        // Slightly above halfway rounds up.
+        let z = 1.0 + 2f32.powi(-11) + 2f32.powi(-20);
+        assert_eq!(f32_to_fp16(z), 0x3C01);
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert_eq!(f32_to_fp16(1e6), 0x7C00); // -> inf
+        assert_eq!(f32_to_fp16(-1e6), 0xFC00);
+        assert_eq!(f32_to_fp16(1e-10), 0x0000); // -> 0
+        assert_eq!(f32_to_fp16(2e-8), 0x0000); // below half of min subnormal? 2e-8 < 2.98e-8 -> 0
+        assert_eq!(f32_to_fp16(4e-8), 0x0001); // rounds to min subnormal
+    }
+
+    #[test]
+    fn subnormal_rounding_carry() {
+        // Just below min normal rounds into the normal range.
+        let x = 6.097e-5; // slightly above max subnormal 6.0976e-5? keep below min normal
+        let h = f32_to_fp16(x);
+        let back = fp16_to_f32(h);
+        assert!((back - x).abs() <= 6.0e-8 + x * 1e-3);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(fp16_to_f32(f32_to_fp16(f32::NAN)).is_nan());
+    }
+}

@@ -1,0 +1,359 @@
+//! Low-bit floating-point format algebra (the FPx of the paper).
+//!
+//! A format is `sign(1) | exponent(e) | mantissa(m)` with IEEE-754
+//! semantics *minus* infinities and NaN: following the paper (§2.2) and the
+//! OCP MicroScaling convention, all-ones exponents encode regular values,
+//! because quantized weights are always dequantized back to FP16 where the
+//! whole range is representable. Bias is the IEEE `2^(e-1) - 1`.
+//!
+//! `decode` is exact; `encode_rtn` implements round-to-nearest with
+//! ties-to-even on the mantissa LSB — the `Round()` of Eqn. (1).
+
+pub mod fp16;
+pub mod registry;
+
+/// A small floating-point format, e.g. e2m3 (FP6) or e2m2 (FP5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    pub ebits: u32,
+    pub mbits: u32,
+}
+
+impl FpFormat {
+    pub const E2M1: FpFormat = FpFormat { ebits: 2, mbits: 1 }; // FP4
+    pub const E2M2: FpFormat = FpFormat { ebits: 2, mbits: 2 }; // FP5
+    pub const E2M3: FpFormat = FpFormat { ebits: 2, mbits: 3 }; // FP6
+    pub const E3M2: FpFormat = FpFormat { ebits: 3, mbits: 2 }; // FP6 alt
+    pub const E4M3: FpFormat = FpFormat { ebits: 4, mbits: 3 }; // FP8
+    pub const E5M2: FpFormat = FpFormat { ebits: 5, mbits: 2 }; // FP8 alt
+    pub const E5M10: FpFormat = FpFormat {
+        ebits: 5,
+        mbits: 10,
+    }; // FP16 (no inf/nan variant used for analysis)
+
+    pub const fn new(ebits: u32, mbits: u32) -> FpFormat {
+        FpFormat { ebits, mbits }
+    }
+
+    /// Total bits including sign.
+    pub const fn bits(&self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    /// Number of distinct code words.
+    pub const fn code_count(&self) -> usize {
+        1 << self.bits()
+    }
+
+    /// IEEE exponent bias.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    pub fn name(&self) -> String {
+        format!("e{}m{}", self.ebits, self.mbits)
+    }
+
+    // --- Code field accessors -------------------------------------------
+
+    #[inline]
+    pub const fn sign_of(&self, code: u16) -> u16 {
+        (code >> (self.ebits + self.mbits)) & 1
+    }
+
+    #[inline]
+    pub const fn exp_of(&self, code: u16) -> u16 {
+        (code >> self.mbits) & ((1 << self.ebits) - 1)
+    }
+
+    #[inline]
+    pub const fn man_of(&self, code: u16) -> u16 {
+        code & ((1 << self.mbits) - 1)
+    }
+
+    #[inline]
+    pub const fn make_code(&self, sign: u16, exp: u16, man: u16) -> u16 {
+        (sign << (self.ebits + self.mbits)) | (exp << self.mbits) | man
+    }
+
+    /// Mask of valid code bits.
+    pub const fn code_mask(&self) -> u16 {
+        ((1u32 << self.bits()) - 1) as u16
+    }
+
+    // --- Decode ----------------------------------------------------------
+
+    /// Exact value of a code word.
+    pub fn decode(&self, code: u16) -> f32 {
+        let s = self.sign_of(code);
+        let e = self.exp_of(code) as i32;
+        let man = self.man_of(code) as f64;
+        let scale = f64::from(2.0f32).powi(-(self.mbits as i32));
+        let mag = if e != 0 {
+            (1.0 + man * scale) * 2f64.powi(e - self.bias())
+        } else {
+            // Subnormal: exponent 1-bias, no implicit leading one.
+            (man * scale) * 2f64.powi(1 - self.bias())
+        };
+        let v = if s == 1 { -mag } else { mag } as f32;
+        v
+    }
+
+    /// Largest representable magnitude (all-ones exponent and mantissa — no
+    /// inf/nan in this system). This is the `M` of Eqn. (1).
+    pub fn max_normal(&self) -> f32 {
+        self.decode(self.make_code(0, ((1 << self.ebits) - 1) as u16, ((1 << self.mbits) - 1) as u16))
+    }
+
+    pub fn min_normal(&self) -> f32 {
+        self.decode(self.make_code(0, 1, 0))
+    }
+
+    pub fn max_subnormal(&self) -> f32 {
+        self.decode(self.make_code(0, 0, ((1 << self.mbits) - 1) as u16))
+    }
+
+    pub fn min_subnormal(&self) -> f32 {
+        self.decode(self.make_code(0, 0, 1))
+    }
+
+    // --- Encode (round to nearest, ties to even) -------------------------
+
+    /// Round `x` to the nearest representable value; returns the code.
+    /// Values beyond ±max_normal saturate. Ties round to even mantissa LSB.
+    /// `Round(w) = argmin_α |w - α|` from the paper, with IEEE tie-breaking.
+    pub fn encode_rtn(&self, x: f32) -> u16 {
+        if x.is_nan() {
+            return 0;
+        }
+        let sign: u16 = if x.is_sign_negative() { 1 } else { 0 };
+        let mag = x.abs();
+        let maxn = self.max_normal();
+        if mag >= maxn {
+            return self.make_code(
+                sign,
+                ((1 << self.ebits) - 1) as u16,
+                ((1 << self.mbits) - 1) as u16,
+            );
+        }
+        // Positive magnitude codes are monotone in (exp, man); binary-search
+        // over the unsigned code space [0, 2^(e+m)).
+        let n_mag = 1u32 << (self.ebits + self.mbits);
+        let (mut lo, mut hi) = (0u32, n_mag - 1);
+        // Invariant: decode(lo) <= mag <= decode(hi) after the first check.
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.decode(mid as u16) <= mag {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let (vlo, vhi) = (self.decode(lo as u16), self.decode(hi as u16));
+        let code = if mag - vlo < vhi - mag {
+            lo
+        } else if mag - vlo > vhi - mag {
+            hi
+        } else {
+            // Tie: pick the code with even LSB (IEEE round-half-to-even).
+            if lo & 1 == 0 {
+                lo
+            } else {
+                hi
+            }
+        };
+        self.make_code(sign, 0, 0) | code as u16
+    }
+
+    /// Quantize then dequantize (no scaling) — the raw RTN of a value.
+    pub fn rtn(&self, x: f32) -> f32 {
+        self.decode(self.encode_rtn(x))
+    }
+
+    /// All representable values, sign included, ascending. `-0` collapses
+    /// next to `+0` (both decode to 0.0).
+    pub fn all_values(&self) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..self.code_count() as u16)
+            .map(|c| self.decode(c))
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Non-negative representable magnitudes, ascending, one entry per code.
+    pub fn positive_values(&self) -> Vec<f32> {
+        (0..(1u32 << (self.ebits + self.mbits)) as u16)
+            .map(|c| self.decode(c))
+            .collect()
+    }
+
+    /// The worst-case relative quantization step around 1.0-magnitude
+    /// normals: 2^-mbits (analysis helper for DESIGN §9 roofline notes).
+    pub fn ulp_rel(&self) -> f32 {
+        2f32.powi(-(self.mbits as i32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_prop, VecF32};
+
+    /// Table 1 of the paper, exactly.
+    #[test]
+    fn table1_e2m3() {
+        let f = FpFormat::E2M3;
+        assert_eq!(f.bias(), 1);
+        assert_eq!(f.max_normal(), 7.5);
+        assert_eq!(f.min_normal(), 1.0);
+        assert_eq!(f.max_subnormal(), 0.875);
+        assert_eq!(f.min_subnormal(), 0.125);
+    }
+
+    #[test]
+    fn table1_e3m2() {
+        let f = FpFormat::E3M2;
+        assert_eq!(f.bias(), 3);
+        assert_eq!(f.max_normal(), 28.0);
+        assert_eq!(f.min_normal(), 0.25);
+        assert_eq!(f.max_subnormal(), 0.1875);
+        assert_eq!(f.min_subnormal(), 0.0625);
+    }
+
+    #[test]
+    fn e2m1_values() {
+        // FP4-e2m1: ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}
+        let vals = FpFormat::E2M1.positive_values();
+        assert_eq!(vals, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn e2m2_values() {
+        let vals = FpFormat::E2M2.positive_values();
+        assert_eq!(
+            vals,
+            vec![0.0, 0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0, 7.0]
+        );
+    }
+
+    #[test]
+    fn positive_codes_monotone() {
+        for f in [
+            FpFormat::E2M1,
+            FpFormat::E2M2,
+            FpFormat::E2M3,
+            FpFormat::E3M2,
+            FpFormat::E4M3,
+            FpFormat::E5M2,
+        ] {
+            let vals = f.positive_values();
+            for w in vals.windows(2) {
+                assert!(w[0] < w[1], "{}: {} !< {}", f.name(), w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_all_codes() {
+        for f in [
+            FpFormat::E2M1,
+            FpFormat::E2M2,
+            FpFormat::E2M3,
+            FpFormat::E3M2,
+            FpFormat::E4M3,
+            FpFormat::E5M2,
+        ] {
+            for code in 0..f.code_count() as u16 {
+                let v = f.decode(code);
+                let back = f.encode_rtn(v);
+                // -0 and +0 collapse; otherwise exact.
+                if v == 0.0 {
+                    assert_eq!(f.decode(back), 0.0);
+                } else {
+                    assert_eq!(
+                        back,
+                        code,
+                        "{}: code {code} -> {v} -> {back}",
+                        f.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rtn_is_nearest() {
+        // Property: for random x within range, |rtn(x) - x| <= |v - x| for
+        // every representable v (argmin definition from the paper).
+        for f in [FpFormat::E2M1, FpFormat::E2M2, FpFormat::E2M3, FpFormat::E3M2] {
+            let vals = f.all_values();
+            run_prop(
+                "rtn-nearest",
+                0xA5A5 ^ (f.bits() as u64),
+                300,
+                &VecF32 {
+                    min_len: 1,
+                    max_len: 16,
+                    scale: f.max_normal() / 2.0,
+                },
+                |xs| {
+                    for &x in xs {
+                        let q = f.rtn(x);
+                        let dq = (q - x).abs();
+                        for &v in &vals {
+                            if (v - x).abs() + 1e-7 < dq {
+                                return Err(format!(
+                                    "{}: rtn({x})={q} but {v} closer",
+                                    f.name()
+                                ));
+                            }
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn rtn_saturates() {
+        let f = FpFormat::E2M3;
+        assert_eq!(f.rtn(100.0), 7.5);
+        assert_eq!(f.rtn(-100.0), -7.5);
+        assert_eq!(f.rtn(f32::INFINITY), 7.5);
+    }
+
+    #[test]
+    fn rtn_ties_to_even() {
+        let f = FpFormat::E2M1; // values 2.0 (code 0b0100) and 3.0 (0b0101)
+        // 2.5 is equidistant; even mantissa LSB -> 2.0.
+        assert_eq!(f.rtn(2.5), 2.0);
+        // 1.25 between 1.0 (0b0010) and 1.5 (0b0011) -> even -> 1.0.
+        assert_eq!(f.rtn(1.25), 1.0);
+    }
+
+    #[test]
+    fn zero_and_signs() {
+        let f = FpFormat::E2M3;
+        assert_eq!(f.decode(f.encode_rtn(0.0)), 0.0);
+        assert_eq!(f.rtn(-0.3), -f.rtn(0.3));
+        assert!(f.rtn(-1.2) < 0.0);
+    }
+
+    #[test]
+    fn no_inf_nan_in_values() {
+        for f in [FpFormat::E2M3, FpFormat::E3M2, FpFormat::E4M3, FpFormat::E5M2] {
+            assert!(f.all_values().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn code_fields() {
+        let f = FpFormat::E2M3;
+        let c = f.make_code(1, 0b10, 0b101);
+        assert_eq!(f.sign_of(c), 1);
+        assert_eq!(f.exp_of(c), 0b10);
+        assert_eq!(f.man_of(c), 0b101);
+        assert_eq!(c & !f.code_mask(), 0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Named quantization schemes: the paper's format vocabulary
+//! (`fp16`, `fp6-e2m3`, `fp5.33`, `fp4.25`, `int4`, ...) parsed from CLI
+//! strings and mapped to storage bit-widths.
+
+use super::FpFormat;
+
+/// Everything the repo can quantize to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// FP16 passthrough — the W16A16 baseline.
+    Fp16,
+    /// Plain FPx round-to-nearest (channel-wise scale).
+    Fp(FpFormat),
+    /// AMS: FPx RTN + groups of `k` sharing the mantissa LSB
+    /// → (bits-1) + 1/k bits per weight.
+    Ams { base: FpFormat, k: usize },
+    /// Integer RTN baseline (int4 / int8), symmetric, channel-wise scale.
+    Int { bits: u32 },
+}
+
+impl Scheme {
+    /// Effective storage bits per weight (excluding per-channel scales,
+    /// which are identical across schemes and amortized over the channel).
+    pub fn bits_per_weight(&self) -> f64 {
+        match self {
+            Scheme::Fp16 => 16.0,
+            Scheme::Fp(f) => f.bits() as f64,
+            Scheme::Ams { base, k } => (base.bits() - 1) as f64 + 1.0 / *k as f64,
+            Scheme::Int { bits } => *bits as f64,
+        }
+    }
+
+    /// The underlying element format, if floating-point.
+    pub fn fp_format(&self) -> Option<FpFormat> {
+        match self {
+            Scheme::Fp(f) => Some(*f),
+            Scheme::Ams { base, .. } => Some(*base),
+            _ => None,
+        }
+    }
+
+    /// Sharing group size (1 when no sharing).
+    pub fn group_k(&self) -> usize {
+        match self {
+            Scheme::Ams { k, .. } => *k,
+            _ => 1,
+        }
+    }
+
+    /// Paper-style display name.
+    pub fn label(&self) -> String {
+        match self {
+            Scheme::Fp16 => "FP16".into(),
+            Scheme::Fp(f) => format!("FP{} ({})", f.bits(), f.name()),
+            Scheme::Ams { base, k } => {
+                let bits = self.bits_per_weight();
+                let _ = k;
+                format!("FP{:.4} ({})", trim_bits(bits), base.name())
+            }
+            Scheme::Int { bits } => format!("INT{bits}"),
+        }
+    }
+
+    /// Canonical parseable id (inverse of `parse`).
+    pub fn id(&self) -> String {
+        match self {
+            Scheme::Fp16 => "fp16".into(),
+            Scheme::Fp(f) => format!("fp{}-{}", f.bits(), f.name()),
+            Scheme::Ams { base, k } => format!("ams-{}-k{}", base.name(), k),
+            Scheme::Int { bits } => format!("int{bits}"),
+        }
+    }
+
+    /// Parse a scheme name. Accepts paper spellings (`fp5.33`, `fp4.25`,
+    /// `fp5.3`, `fp4.3`), explicit formats (`fp6-e2m3`, `fp8-e4m3`),
+    /// defaults (`fp6`→e2m3, `fp5`→e2m2, `fp4`→e2m1, `fp8`→e4m3), generic
+    /// AMS ids (`ams-e2m2-k4`), and `int4`/`int8`.
+    pub fn parse(name: &str) -> Result<Scheme, String> {
+        let n = name.trim().to_ascii_lowercase();
+        match n.as_str() {
+            "fp16" | "fp16-e5m10" | "half" | "w16a16" => return Ok(Scheme::Fp16),
+            "fp8" | "fp8-e4m3" | "w8a16-fp" => return Ok(Scheme::Fp(FpFormat::E4M3)),
+            "fp8-e5m2" => return Ok(Scheme::Fp(FpFormat::E5M2)),
+            "fp6" | "fp6-e2m3" => return Ok(Scheme::Fp(FpFormat::E2M3)),
+            "fp6-e3m2" => return Ok(Scheme::Fp(FpFormat::E3M2)),
+            "fp5" | "fp5-e2m2" => return Ok(Scheme::Fp(FpFormat::E2M2)),
+            "fp4" | "fp4-e2m1" => return Ok(Scheme::Fp(FpFormat::E2M1)),
+            // Paper's AMS spellings: FP(x-1).y with y = 1/k over base FPx.
+            "fp5.33" | "fp5.3" | "fp5.33-e2m3" | "fp5.3-e2m3" => {
+                return Ok(Scheme::Ams {
+                    base: FpFormat::E2M3,
+                    k: 3,
+                })
+            }
+            "fp4.5" | "fp4.5-e2m2" => {
+                return Ok(Scheme::Ams {
+                    base: FpFormat::E2M2,
+                    k: 2,
+                })
+            }
+            "fp4.33" | "fp4.3" | "fp4.33-e2m2" | "fp4.3-e2m2" => {
+                return Ok(Scheme::Ams {
+                    base: FpFormat::E2M2,
+                    k: 3,
+                })
+            }
+            "fp4.25" | "fp4.25-e2m2" => {
+                return Ok(Scheme::Ams {
+                    base: FpFormat::E2M2,
+                    k: 4,
+                })
+            }
+            "int4" => return Ok(Scheme::Int { bits: 4 }),
+            "int8" | "w8a16" => return Ok(Scheme::Int { bits: 8 }),
+            _ => {}
+        }
+        // Generic: ams-eXmY-kZ
+        if let Some(rest) = n.strip_prefix("ams-") {
+            let parts: Vec<&str> = rest.split('-').collect();
+            if parts.len() == 2 {
+                if let (Some(fmt), Some(k)) = (parse_fmt(parts[0]), parse_k(parts[1])) {
+                    if fmt.mbits == 0 {
+                        return Err(format!("'{name}': cannot share mantissa of m0 format"));
+                    }
+                    return Ok(Scheme::Ams { base: fmt, k });
+                }
+            }
+        }
+        // Generic: fpN-eXmY
+        if let Some(rest) = n.strip_prefix("fp") {
+            if let Some((_, fmt)) = rest.split_once('-') {
+                if let Some(f) = parse_fmt(fmt) {
+                    return Ok(Scheme::Fp(f));
+                }
+            }
+        }
+        Err(format!("unknown scheme '{name}'"))
+    }
+
+    /// The set evaluated in Table 2 / Figure 5, top (high-bit) to bottom.
+    pub fn table2_set() -> Vec<Scheme> {
+        ["fp16", "fp6-e2m3", "fp5.33", "fp5", "fp4.5", "fp4.33", "fp4.25", "fp4"]
+            .iter()
+            .map(|s| Scheme::parse(s).unwrap())
+            .collect()
+    }
+
+    /// The set evaluated in Table 3 / Figure 6.
+    pub fn table3_set() -> Vec<Scheme> {
+        ["fp16", "fp8", "fp6-e2m3", "fp5.33", "fp5", "fp4.25"]
+            .iter()
+            .map(|s| Scheme::parse(s).unwrap())
+            .collect()
+    }
+
+    /// The preliminary-study set of Figure 3.
+    pub fn fig3_set() -> Vec<Scheme> {
+        ["fp16", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4-e2m1"]
+            .iter()
+            .map(|s| Scheme::parse(s).unwrap())
+            .collect()
+    }
+}
+
+fn parse_fmt(s: &str) -> Option<FpFormat> {
+    let s = s.strip_prefix('e')?;
+    let (e, m) = s.split_once('m')?;
+    Some(FpFormat::new(e.parse().ok()?, m.parse().ok()?))
+}
+
+fn parse_k(s: &str) -> Option<usize> {
+    let k: usize = s.strip_prefix('k')?.parse().ok()?;
+    (k >= 2).then_some(k)
+}
+
+fn trim_bits(b: f64) -> String {
+    // 5.3333 -> "5.33", 4.25 -> "4.25", 4.5 -> "4.5"
+    let s = format!("{b:.2}");
+    s.trim_end_matches('0').trim_end_matches('.').to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_spellings() {
+        assert_eq!(
+            Scheme::parse("fp5.33").unwrap(),
+            Scheme::Ams {
+                base: FpFormat::E2M3,
+                k: 3
+            }
+        );
+        assert_eq!(
+            Scheme::parse("FP4.25").unwrap(),
+            Scheme::Ams {
+                base: FpFormat::E2M2,
+                k: 4
+            }
+        );
+        assert_eq!(Scheme::parse("fp4.5").unwrap().group_k(), 2);
+        assert_eq!(Scheme::parse("fp4.3").unwrap().group_k(), 3);
+        assert_eq!(Scheme::parse("fp6").unwrap(), Scheme::Fp(FpFormat::E2M3));
+        assert_eq!(Scheme::parse("fp6-e3m2").unwrap(), Scheme::Fp(FpFormat::E3M2));
+        assert_eq!(Scheme::parse("int8").unwrap(), Scheme::Int { bits: 8 });
+    }
+
+    #[test]
+    fn bits_per_weight_match_paper() {
+        assert_eq!(Scheme::parse("fp16").unwrap().bits_per_weight(), 16.0);
+        assert!((Scheme::parse("fp5.33").unwrap().bits_per_weight() - (5.0 + 1.0 / 3.0)).abs() < 1e-12);
+        assert_eq!(Scheme::parse("fp4.25").unwrap().bits_per_weight(), 4.25);
+        assert_eq!(Scheme::parse("fp4.5").unwrap().bits_per_weight(), 4.5);
+        assert_eq!(Scheme::parse("fp6").unwrap().bits_per_weight(), 6.0);
+    }
+
+    #[test]
+    fn generic_ams() {
+        let s = Scheme::parse("ams-e3m2-k4").unwrap();
+        assert_eq!(
+            s,
+            Scheme::Ams {
+                base: FpFormat::E3M2,
+                k: 4
+            }
+        );
+        assert_eq!(s.bits_per_weight(), 5.25);
+    }
+
+    #[test]
+    fn rejects_bad() {
+        assert!(Scheme::parse("fp7.77").is_err());
+        assert!(Scheme::parse("ams-e2m0-k2").is_err());
+        assert!(Scheme::parse("ams-e2m2-k1").is_err());
+        assert!(Scheme::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn id_roundtrip() {
+        for name in ["fp16", "fp6-e2m3", "fp5.33", "fp4.25", "int4", "ams-e3m2-k4"] {
+            let s = Scheme::parse(name).unwrap();
+            assert_eq!(Scheme::parse(&s.id()).unwrap(), s, "{name}");
+        }
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Scheme::parse("fp5.33").unwrap().label(), "FP5.33 (e2m3)");
+        assert_eq!(Scheme::parse("fp4.25").unwrap().label(), "FP4.25 (e2m2)");
+        assert_eq!(Scheme::parse("fp6").unwrap().label(), "FP6 (e2m3)");
+    }
+
+    #[test]
+    fn experiment_sets() {
+        assert_eq!(Scheme::table2_set().len(), 8);
+        assert_eq!(Scheme::table3_set().len(), 6);
+        assert_eq!(Scheme::fig3_set().len(), 5);
+    }
+}

@@ -1,0 +1,110 @@
+//! Row-sharded parallel GEMV/GEMM over scoped threads.
+//!
+//! Output rows are independent, so the packed matrix is split into
+//! contiguous row blocks, one per worker. Used by the serving hot path for
+//! the large MLP projections where a single core cannot saturate memory
+//! bandwidth.
+
+use super::{kernels, QuantLinear};
+use crate::tensor::Tensor;
+use crate::util::threadpool::scope_chunks;
+use std::sync::Mutex;
+
+impl QuantLinear {
+    /// Parallel `gemv` across `threads` row blocks.
+    pub fn gemv_parallel(&self, x: &[f32], y: &mut [f32], threads: usize) {
+        assert_eq!(x.len(), self.packed.cols);
+        assert_eq!(y.len(), self.packed.rows);
+        if threads <= 1 || self.packed.rows < 2 * threads {
+            self.gemv(x, y);
+            return;
+        }
+        let y_cell = Mutex::new(&mut *y);
+        // Each worker owns a disjoint row range; collect into a local buffer
+        // then splice under the lock (short critical section). Each worker
+        // computes rows through a thread-local gemv on a row-sliced view.
+        scope_chunks(self.packed.rows, threads, |_, start, end| {
+            let mut local = vec![0f32; end - start];
+            self.gemv_rows(start, end, x, &mut local);
+            let mut guard = y_cell.lock().unwrap();
+            guard[start..end].copy_from_slice(&local);
+        });
+    }
+
+    /// Parallel batched product (see [`QuantLinear::gemm`]).
+    pub fn gemm_parallel(&self, x: &Tensor, threads: usize) -> Tensor {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.cols(), self.packed.cols);
+        let batch = x.rows();
+        if threads <= 1 || self.packed.rows < 2 * threads {
+            return self.gemm(x);
+        }
+        let xt = x.transpose();
+        let y = Mutex::new(Tensor::zeros(&[batch, self.packed.rows]));
+        scope_chunks(self.packed.rows, threads, |_, start, end| {
+            let mut acc = vec![0f32; batch];
+            let mut vals = vec![0f32; self.packed.cols];
+            let mut codes = vec![0u16; self.packed.cols];
+            let mut local = vec![0f32; (end - start) * batch]; // [rows_local, batch]
+            for r in start..end {
+                acc.fill(0.0);
+                self.row_values_fast(r, &mut codes, &mut vals);
+                kernels::batch_fma(&vals, xt.data(), batch, &mut acc);
+                let s = self.packed.scales[r];
+                for b in 0..batch {
+                    local[(r - start) * batch + b] = acc[b] * s;
+                }
+            }
+            let mut guard = y.lock().unwrap();
+            for r in start..end {
+                for b in 0..batch {
+                    guard.set2(b, r, local[(r - start) * batch + b]);
+                }
+            }
+        });
+        y.into_inner().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::make_linear;
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn parallel_matches_serial_gemv() {
+        let mut rng = Rng::new(7);
+        for name in ["fp16", "fp5.33", "fp4.25", "fp6-e2m3"] {
+            let lin = make_linear(name, 64, 128, 3);
+            let x: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut y1 = vec![0f32; 64];
+            let mut y4 = vec![0f32; 64];
+            lin.gemv(&x, &mut y1);
+            lin.gemv_parallel(&x, &mut y4, 4);
+            assert_eq!(y1, y4, "{name}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_gemm() {
+        let mut rng = Rng::new(8);
+        let lin = make_linear("fp4.25", 48, 96, 4);
+        let x = init::gaussian(&[8, 96], 0.0, 1.0, &mut rng);
+        let a = lin.gemm(&x);
+        let b = lin.gemm_parallel(&x, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn small_matrix_falls_back() {
+        let lin = make_linear("fp16", 3, 8, 5);
+        let x = vec![1.0f32; 8];
+        let mut y = vec![0f32; 3];
+        lin.gemv_parallel(&x, &mut y, 8); // rows < 2*threads -> serial path
+        let r = lin.gemv_reference(&x);
+        for (a, b) in y.iter().zip(&r) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,574 @@
+//! Vectorized decode + dot kernels (the §Perf hot path).
+//!
+//! Key identity (the SIMD form of §3.2's restoration, used by TC-FPx and
+//! here): placing an FPx code's exponent+mantissa field at the top of the
+//! f32 mantissa/exponent and rescaling by a power of two is *exact*, for
+//! normals and subnormals alike:
+//!
+//! ```text
+//! f32(code) = bitcast(sign << 31 | em << (23 - m)) * 2^(127 - bias)
+//! ```
+//!
+//! * normal (E≠0): bitcast = 2^(E-127)·(1+man/2^m); ×2^(127-bias) = 2^(E-bias)·(1+man/2^m) ✓
+//! * subnormal (E=0): bitcast = man·2^(-126-m);     ×2^(127-bias) = man·2^(1-bias-m)       ✓
+//!
+//! The 2^(127-bias) factor is folded into the per-channel scale, so decode
+//! is just shift/and/or + the FMA the kernel already performs — no gather
+//! tables. Written as clean scalar loops that LLVM auto-vectorizes, with
+//! explicit AVX-512 paths where it cannot.
+
+use crate::formats::FpFormat;
+
+/// Exponent base for the arithmetic decode: `127 - bias - m`. The decoded
+/// value is `(man | implicit·2^m) · 2^(max(E,1) + expo_base - 127)` — an
+/// exact product of an integer-valued f32 and a power of two, never a
+/// denormal (§Perf iteration log: bit-placement decode produced denormal
+/// f32 inputs for FPx-subnormal codes, and x86 denormal multiplies are
+/// microcoded at ~100 cycles — a measured 10–50× kernel slowdown).
+#[inline]
+pub fn expo_base(fmt: FpFormat) -> i32 {
+    127 - fmt.bias() - fmt.mbits as i32
+}
+
+/// Scalar arithmetic decode of one code — exact for every format code.
+#[inline(always)]
+pub fn decode_arith(code: u32, e: u32, m: u32, expo_base: i32) -> f32 {
+    let ef = (code >> m) & ((1 << e) - 1);
+    let man = code & ((1 << m) - 1);
+    let norm = u32::from(ef != 0);
+    let mant = (man | (norm << m)) as f32;
+    let eeff = ef.max(1) as i32;
+    let scale = f32::from_bits(((eeff + expo_base) as u32) << 23);
+    let v = mant * scale;
+    if (code >> (e + m)) & 1 == 1 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Fused decode+dot over a code buffer:
+/// `Σ (decode_raw(codes[i]) · fold) * x[i]` — the fold happens *inside*
+/// the loop: pre-fold bit patterns are f32 denormals (their exponent field
+/// holds the tiny FPx exponent), and FMA on denormals is microcoded on
+/// x86 (~100 cycles/op, a measured 10–50× kernel slowdown). Multiplying by
+/// 2^(127-bias) first lifts every value into the normal range (§Perf log).
+/// Returns the final dequantized dot (multiply only by the channel scale).
+pub fn dot_codes(codes: &[u16], x: &[f32], fmt: FpFormat) -> f32 {
+    debug_assert!(codes.len() <= x.len());
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() {
+            // SAFETY: feature checked at runtime.
+            return unsafe { dot_codes_avx512(codes, x, e, m, eb) };
+        }
+    }
+    dot_codes_scalar(codes, x, e, m, eb)
+}
+
+/// Decode a code buffer into final f32 values (pre-scale).
+pub fn decode_codes(codes: &[u16], out: &mut [f32], fmt: FpFormat) {
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = decode_arith(u32::from(c), e, m, eb);
+    }
+}
+
+fn dot_codes_scalar(codes: &[u16], x: &[f32], e: u32, m: u32, eb: i32) -> f32 {
+    // Four independent accumulators: breaks the FMA dependency chain so
+    // the loop pipelines (and auto-vectorizes).
+    let mut acc = [0f32; 4];
+    let n = codes.len();
+    let chunks = n / 4;
+    for i in 0..chunks {
+        for j in 0..4 {
+            let idx = i * 4 + j;
+            acc[j] += decode_arith(u32::from(codes[idx]), e, m, eb) * x[idx];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for idx in chunks * 4..n {
+        s += decode_arith(u32::from(codes[idx]), e, m, eb) * x[idx];
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+pub fn is_avx512() -> bool {
+    use std::sync::OnceLock;
+    static HAS: OnceLock<bool> = OnceLock::new();
+    *HAS.get_or_init(|| {
+        std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512bw")
+    })
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+pub fn is_avx512() -> bool {
+    false
+}
+
+/// AVX-512: 16 codes per iteration — widen u16→u32, shift/and/or into f32
+/// bit patterns, FMA against the activation lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dot_codes_avx512(codes: &[u16], x: &[f32], e: u32, m: u32, eb: i32) -> f32 {
+    use std::arch::x86_64::*;
+    let n = codes.len();
+    let dec = DecodeConsts::new(e, m, eb);
+    let mut acc0 = _mm512_setzero_ps();
+    let mut acc1 = _mm512_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let c16 = _mm512_loadu_si512(codes.as_ptr().add(i) as *const _);
+        // Widen the two 256-bit halves.
+        let lo = _mm512_cvtepu16_epi32(_mm512_castsi512_si256(c16));
+        let hi = _mm512_cvtepu16_epi32(_mm512_extracti64x4_epi64::<1>(c16));
+        let x0 = _mm512_loadu_ps(x.as_ptr().add(i));
+        let x1 = _mm512_loadu_ps(x.as_ptr().add(i + 16));
+        acc0 = _mm512_fmadd_ps(dec.decode(lo), x0, acc0);
+        acc1 = _mm512_fmadd_ps(dec.decode(hi), x1, acc1);
+        i += 32;
+    }
+    let mut s = _mm512_reduce_add_ps(_mm512_add_ps(acc0, acc1));
+    // Scalar tail.
+    while i < n {
+        s += decode_arith(u32::from(codes[i]), e, m, eb) * x[i];
+        i += 1;
+    }
+    s
+}
+
+/// Shared AVX-512 arithmetic-decode constants (see [`decode_arith`]).
+#[cfg(target_arch = "x86_64")]
+#[derive(Clone, Copy)]
+struct DecodeConsts {
+    m_v: std::arch::x86_64::__m512i,
+    e_mask: std::arch::x86_64::__m512i,
+    man_mask: std::arch::x86_64::__m512i,
+    implicit: std::arch::x86_64::__m512i,
+    one: std::arch::x86_64::__m512i,
+    ebase: std::arch::x86_64::__m512i,
+    sbits_v: std::arch::x86_64::__m512i,
+}
+
+#[cfg(target_arch = "x86_64")]
+impl DecodeConsts {
+    #[target_feature(enable = "avx512f")]
+    unsafe fn new(e: u32, m: u32, eb: i32) -> Self {
+        use std::arch::x86_64::*;
+        DecodeConsts {
+            m_v: _mm512_set1_epi32(m as i32),
+            e_mask: _mm512_set1_epi32(((1u32 << e) - 1) as i32),
+            man_mask: _mm512_set1_epi32(((1u32 << m) - 1) as i32),
+            implicit: _mm512_set1_epi32(1i32 << m),
+            one: _mm512_set1_epi32(1),
+            ebase: _mm512_set1_epi32(eb),
+            sbits_v: _mm512_set1_epi32((e + m) as i32),
+        }
+    }
+
+    /// codes (u32 lanes) -> dequantized f32 lanes. No denormals anywhere.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn decode(&self, c: std::arch::x86_64::__m512i) -> std::arch::x86_64::__m512 {
+        use std::arch::x86_64::*;
+        let ef = _mm512_and_si512(_mm512_srlv_epi32(c, self.m_v), self.e_mask);
+        let man = _mm512_and_si512(c, self.man_mask);
+        let is_norm = _mm512_cmpgt_epi32_mask(ef, _mm512_setzero_si512());
+        let mant = _mm512_mask_or_epi32(man, is_norm, man, self.implicit);
+        let mant_f = _mm512_cvtepi32_ps(mant);
+        let eeff = _mm512_max_epi32(ef, self.one);
+        let scale = _mm512_castsi512_ps(_mm512_slli_epi32::<23>(_mm512_add_epi32(eeff, self.ebase)));
+        let v = _mm512_mul_ps(mant_f, scale);
+        // Apply sign: OR the sign bit into the (non-negative) product.
+        let sign = _mm512_slli_epi32::<31>(_mm512_srlv_epi32(c, self.sbits_v));
+        _mm512_castsi512_ps(_mm512_or_si512(_mm512_castps_si512(v), sign))
+    }
+}
+
+/// How a segmented layout supplies the low bits of each code.
+#[derive(Clone, Copy, Debug)]
+pub enum LowBits {
+    /// One LSB per code, 16 per u16 word (FP5 4+1).
+    PerCode1,
+    /// Two low bits per code, 8 per u16 word (FP6 4+2, TC-FPx).
+    PerCode2,
+    /// One shared bit per group of `k` codes (AMS e2m2 family).
+    Group(usize),
+}
+
+/// Fused unpack+decode+dot for "high-nibble stream + low-bit stream"
+/// layouts (FP6, FP5, FP4.5, FP4.25): the SIMD realization of the paper's
+/// load → SHIFT/AND/OR → MMA pipeline. Returns the final (folded,
+/// pre-scale) dot product, or None when the fast path does not apply
+/// (non-x86, tiny rows, or k=3 whose groups straddle lanes).
+pub fn dot_segmented(
+    hi_words: &[u16],
+    low_words: &[u16],
+    cols: usize,
+    x: &[f32],
+    fmt: FpFormat,
+    low: LowBits,
+) -> Option<f32> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && cols >= 16 {
+            if let LowBits::Group(k) = low {
+                if k != 2 && k != 4 {
+                    return None; // k=3 groups straddle 16-lane blocks
+                }
+            }
+            // SAFETY: feature checked.
+            return Some(unsafe { dot_segmented_avx512(hi_words, low_words, cols, x, fmt, low) });
+        }
+    }
+    let _ = (hi_words, low_words, cols, x, fmt, low);
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dot_segmented_avx512(
+    hi_words: &[u16],
+    low_words: &[u16],
+    cols: usize,
+    x: &[f32],
+    fmt: FpFormat,
+    low: LowBits,
+) -> f32 {
+    use std::arch::x86_64::*;
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    let dec = DecodeConsts::new(e, m, eb);
+    let nib_shifts = _mm512_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28, 0, 4, 8, 12, 16, 20, 24, 28);
+    let one = _mm512_set1_epi32(1);
+    let low_shifts = match low {
+        LowBits::PerCode1 => {
+            _mm512_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15)
+        }
+        LowBits::PerCode2 => {
+            _mm512_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14, 16, 18, 20, 22, 24, 26, 28, 30)
+        }
+        LowBits::Group(2) => _mm512_setr_epi32(0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7),
+        LowBits::Group(_) => _mm512_setr_epi32(0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3),
+    };
+    // Bits the low value occupies in the code.
+    let (low_width, low_mask) = match low {
+        LowBits::PerCode2 => (2, _mm512_set1_epi32(3)),
+        _ => (1, one),
+    };
+    let mut acc = _mm512_setzero_ps();
+    let blocks = cols / 16;
+    for b in 0..blocks {
+        // 16 high nibbles from 4 consecutive u16 words.
+        let hi64 = (hi_words.as_ptr().add(b * 4) as *const u64).read_unaligned();
+        let vlo = _mm512_set1_epi32(hi64 as u32 as i32);
+        let vhi = _mm512_set1_epi32((hi64 >> 32) as u32 as i32);
+        let packed = _mm512_mask_blend_epi32(0xFF00, vlo, vhi);
+        let nib = _mm512_and_si512(_mm512_srlv_epi32(packed, nib_shifts), _mm512_set1_epi32(0xF));
+        // 16 low fields.
+        let lw = match low {
+            LowBits::PerCode1 => u32::from(*low_words.get_unchecked(b)),
+            LowBits::PerCode2 => {
+                let p = low_words.as_ptr().add(b * 2) as *const u32;
+                p.read_unaligned()
+            }
+            LowBits::Group(k) => {
+                // Group index of the block's first code.
+                let g0 = b * 16 / k;
+                u32::from(*low_words.get_unchecked(g0 / 16)) >> (g0 % 16)
+            }
+        };
+        let lowv = _mm512_and_si512(
+            _mm512_srlv_epi32(_mm512_set1_epi32(lw as i32), low_shifts),
+            low_mask,
+        );
+        let code = _mm512_or_si512(_mm512_sllv_epi32(nib, _mm512_set1_epi32(low_width)), lowv);
+        let v = dec.decode(code);
+        acc = _mm512_fmadd_ps(v, _mm512_loadu_ps(x.as_ptr().add(b * 16)), acc);
+    }
+    let mut s = _mm512_reduce_add_ps(acc);
+    // Scalar tail.
+    for i in blocks * 16..cols {
+        let hi = (u32::from(hi_words[i / 4]) >> (4 * (i % 4))) & 0xF;
+        let lowbits = match low {
+            LowBits::PerCode1 => (u32::from(low_words[i / 16]) >> (i % 16)) & 1,
+            LowBits::PerCode2 => (u32::from(low_words[i / 8]) >> (2 * (i % 8))) & 3,
+            LowBits::Group(k) => {
+                let g = i / k;
+                (u32::from(low_words[g / 16]) >> (g % 16)) & 1
+            }
+        };
+        let code = (hi << low_width) | lowbits;
+        s += decode_arith(code, e, m, eb) * x[i];
+    }
+    s
+}
+
+/// Fused FP5.33 dot. The continuous layout packs 3 codes + shared LSB per
+/// u16; lanes decode three code streams (positions 0/1/2 of each group),
+/// which dot against *pre-de-interleaved* activations `x0/x1/x2` where
+/// `xp[j] = x[3j + p]` (built once per GEMV call, amortized over rows).
+/// `None` when the fast path does not apply.
+pub fn dot_fp533(
+    words: &[u16],
+    cols: usize,
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x: &[f32],
+) -> Option<f32> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && cols >= 48 {
+            // SAFETY: feature checked.
+            return Some(unsafe { dot_fp533_avx512(words, cols, x0, x1, x2, x) });
+        }
+    }
+    let _ = (words, cols, x0, x1, x2, x);
+    None
+}
+
+/// Split activations into the three stride-3 streams used by [`dot_fp533`].
+pub fn deinterleave3(x: &[f32], x0: &mut Vec<f32>, x1: &mut Vec<f32>, x2: &mut Vec<f32>) {
+    let groups = x.len().div_ceil(3);
+    x0.clear();
+    x1.clear();
+    x2.clear();
+    x0.resize(groups, 0.0);
+    x1.resize(groups, 0.0);
+    x2.resize(groups, 0.0);
+    for (j, chunk) in x.chunks(3).enumerate() {
+        x0[j] = chunk[0];
+        if chunk.len() > 1 {
+            x1[j] = chunk[1];
+        }
+        if chunk.len() > 2 {
+            x2[j] = chunk[2];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dot_fp533_avx512(
+    words: &[u16],
+    cols: usize,
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x: &[f32],
+) -> f32 {
+    use std::arch::x86_64::*;
+    let fmt = FpFormat::E2M3;
+    let eb = expo_base(fmt);
+    let dec = DecodeConsts::new(fmt.ebits, fmt.mbits, eb);
+    let m5 = _mm512_set1_epi32(0x1F);
+    let one = _mm512_set1_epi32(1);
+    let full_groups = cols / 3; // groups with all 3 members in-range
+    let blocks = full_groups / 16;
+    let mut a0 = _mm512_setzero_ps();
+    let mut a1 = _mm512_setzero_ps();
+    let mut a2 = _mm512_setzero_ps();
+    for b in 0..blocks {
+        // 16 group words -> 16 u32 lanes.
+        let w16 = _mm256_loadu_si256(words.as_ptr().add(b * 16) as *const _);
+        let w = _mm512_cvtepu16_epi32(w16);
+        let shared = _mm512_and_si512(_mm512_srli_epi32::<15>(w), one);
+        let c0 = _mm512_or_si512(_mm512_slli_epi32::<1>(_mm512_and_si512(w, m5)), shared);
+        let c1 = _mm512_or_si512(
+            _mm512_slli_epi32::<1>(_mm512_and_si512(_mm512_srli_epi32::<5>(w), m5)),
+            shared,
+        );
+        let c2 = _mm512_or_si512(
+            _mm512_slli_epi32::<1>(_mm512_and_si512(_mm512_srli_epi32::<10>(w), m5)),
+            shared,
+        );
+        a0 = _mm512_fmadd_ps(dec.decode(c0), _mm512_loadu_ps(x0.as_ptr().add(b * 16)), a0);
+        a1 = _mm512_fmadd_ps(dec.decode(c1), _mm512_loadu_ps(x1.as_ptr().add(b * 16)), a1);
+        a2 = _mm512_fmadd_ps(dec.decode(c2), _mm512_loadu_ps(x2.as_ptr().add(b * 16)), a2);
+    }
+    let mut s = _mm512_reduce_add_ps(_mm512_add_ps(_mm512_add_ps(a0, a1), a2));
+    // Scalar tail (remaining groups + ragged last group).
+    for i in blocks * 48..cols {
+        let w = u32::from(words[i / 3]);
+        let shared = (w >> 15) & 1;
+        let code = (((w >> (5 * (i % 3))) & 0x1F) << 1) | shared;
+        s += decode_arith(code, fmt.ebits, fmt.mbits, eb) * x[i];
+    }
+    s
+}
+
+/// Fused 8-bit-code dot (FP8-e4m3): codes are a contiguous byte stream.
+pub fn dot_bytes(words: &[u16], cols: usize, x: &[f32], fmt: FpFormat) -> Option<f32> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && cols >= 16 {
+            // SAFETY: feature checked.
+            return Some(unsafe { dot_bytes_avx512(words, cols, x, fmt) });
+        }
+    }
+    let _ = (words, cols, x, fmt);
+    None
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dot_bytes_avx512(words: &[u16], cols: usize, x: &[f32], fmt: FpFormat) -> f32 {
+    use std::arch::x86_64::*;
+    let eb = expo_base(fmt);
+    let dec = DecodeConsts::new(fmt.ebits, fmt.mbits, eb);
+    let bytes = words.as_ptr() as *const u8; // little-endian: byte i = code i
+    let mut acc = _mm512_setzero_ps();
+    let blocks = cols / 16;
+    for b in 0..blocks {
+        let c8 = _mm_loadu_si128(bytes.add(b * 16) as *const _);
+        let c = _mm512_cvtepu8_epi32(c8);
+        acc = _mm512_fmadd_ps(dec.decode(c), _mm512_loadu_ps(x.as_ptr().add(b * 16)), acc);
+    }
+    let mut s = _mm512_reduce_add_ps(acc);
+    for i in blocks * 16..cols {
+        let code = u32::from(*bytes.add(i));
+        s += decode_arith(code, fmt.ebits, fmt.mbits, eb) * x[i];
+    }
+    s
+}
+
+/// Fused fp16-bits dot: `Σ fp16(words[i]) * x[i]` (the W16A16 baseline).
+/// Uses VCVTPH2PS when available.
+pub fn dot_fp16_bits(words: &[u16], x: &[f32], table: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() {
+            return unsafe { dot_fp16_avx512(words, x) };
+        }
+    }
+    let mut acc = 0f32;
+    for (i, &w) in words.iter().enumerate() {
+        acc += table[w as usize] * x[i];
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn dot_fp16_avx512(words: &[u16], x: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = words.len();
+    let mut acc0 = _mm512_setzero_ps();
+    let mut acc1 = _mm512_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let h0 = _mm256_loadu_si256(words.as_ptr().add(i) as *const _);
+        let h1 = _mm256_loadu_si256(words.as_ptr().add(i + 16) as *const _);
+        let v0 = _mm512_cvtph_ps(h0);
+        let v1 = _mm512_cvtph_ps(h1);
+        acc0 = _mm512_fmadd_ps(v0, _mm512_loadu_ps(x.as_ptr().add(i)), acc0);
+        acc1 = _mm512_fmadd_ps(v1, _mm512_loadu_ps(x.as_ptr().add(i + 16)), acc1);
+        i += 32;
+    }
+    let mut s = _mm512_reduce_add_ps(_mm512_add_ps(acc0, acc1));
+    while i < n {
+        s += crate::formats::fp16::fp16_to_f32(words[i]) * x[i];
+        i += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn decode_identity_all_codes() {
+        // decode_arith == FpFormat::decode for every code of every format,
+        // and never produces a denormal f32.
+        for fmt in [
+            FpFormat::E2M1,
+            FpFormat::E2M2,
+            FpFormat::E2M3,
+            FpFormat::E3M2,
+            FpFormat::E4M3,
+        ] {
+            let eb = expo_base(fmt);
+            for code in 0..fmt.code_count() as u16 {
+                let got = decode_arith(u32::from(code), fmt.ebits, fmt.mbits, eb);
+                assert_eq!(got, fmt.decode(code), "{} code {code}", fmt.name());
+                assert!(got == 0.0 || got.abs() >= f32::MIN_POSITIVE);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let mut rng = Rng::new(1);
+        for fmt in [FpFormat::E2M2, FpFormat::E2M3, FpFormat::E3M2] {
+            for n in [1usize, 15, 32, 33, 100, 1000] {
+                let codes: Vec<u16> = (0..n)
+                    .map(|_| (rng.next_u32() as u16) & fmt.code_mask())
+                    .collect();
+                let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let fused = dot_codes(&codes, &x, fmt);
+                let reference: f32 = codes
+                    .iter()
+                    .zip(&x)
+                    .map(|(&c, &xv)| fmt.decode(c) * xv)
+                    .sum();
+                assert!(
+                    (fused - reference).abs() <= 2e-4 * (1.0 + reference.abs()),
+                    "{} n={n}: {fused} vs {reference}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_codes_buffer() {
+        let fmt = FpFormat::E2M3;
+        let codes: Vec<u16> = (0..fmt.code_count() as u16).collect();
+        let mut out = vec![0f32; codes.len()];
+        decode_codes(&codes, &mut out, fmt);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, fmt.decode(i as u16));
+        }
+    }
+
+    #[test]
+    fn fp16_dot_matches_table() {
+        let mut rng = Rng::new(2);
+        let table = crate::gemm::dequant_table(crate::formats::registry::Scheme::Fp16);
+        for n in [1usize, 31, 32, 64, 257] {
+            // Finite half values only (exponent < 0x1F).
+            let words: Vec<u16> = (0..n)
+                .map(|_| {
+                    let w = rng.next_u32() as u16;
+                    if (w >> 10) & 0x1F == 0x1F {
+                        w & !(1 << 14)
+                    } else {
+                        w
+                    }
+                })
+                .collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let fused = dot_fp16_bits(&words, &x, &table);
+            let reference: f32 = words
+                .iter()
+                .zip(&x)
+                .map(|(&w, &xv)| table[w as usize] * xv)
+                .sum();
+            let mag = reference.abs().max(words.iter().map(|&w| table[w as usize].abs()).fold(0.0, f32::max));
+            assert!(
+                (fused - reference).abs() <= 1e-2 * (1.0 + mag),
+                "n={n}: {fused} vs {reference}"
+            );
+        }
+    }
+}

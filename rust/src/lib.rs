@@ -1,0 +1,35 @@
+//! # AMS-Quant
+//!
+//! Reproduction of *"AMS-Quant: Adaptive Mantissa Sharing for
+//! Floating-point Quantization"* as a three-layer Rust + JAX + Pallas
+//! system.
+//!
+//! - [`formats`] — FPx format algebra (e2m3, e2m2, ... — Table 1).
+//! - [`quant`] — channel-wise RTN, mantissa-bit sharing, adaptive search.
+//! - [`pack`] — prepacked storage layouts (TC-FPx 4+2, FP5.33 half-word,
+//!   FP4.25 segmented, ...).
+//! - [`restore`] — bit-level FPx→FP16 restoration (SHIFT/AND/OR and LUT).
+//! - [`gemm`] — fused unpack–dequant GEMV/GEMM hot path.
+//! - [`model`] — transformer inference engine + checkpoints.
+//! - [`coordinator`] — request router, dynamic batcher, serving loop.
+//! - [`runtime`] — PJRT client running AOT-lowered JAX/Pallas artifacts.
+//! - [`sim`] — roofline simulator of the paper's GPU (Table 3).
+//! - [`baselines`] — INT RTN / W8A16 / TC-FPx comparators.
+//! - [`eval`] — perplexity and task-accuracy harness (Table 2 proxies).
+//! - [`tensor`], [`util`] — substrates built in-repo.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod eval;
+pub mod experiments;
+pub mod formats;
+pub mod gemm;
+pub mod model;
+pub mod pack;
+pub mod quant;
+pub mod report;
+pub mod restore;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,386 @@
+//! `ams-quant` — CLI for the AMS-Quant reproduction.
+//!
+//! Subcommands (one per experiment, DESIGN.md §6):
+//!   formats            Table 1: format extremal values
+//!   fig2a              CSV: representable-value distributions
+//!   fig2b              CSV: model weight distributions (4 layers)
+//!   fig3               preliminary RTN study (GSM8k proxy)
+//!   table2             full accuracy matrix (Table 2 / Fig 5 proxy)
+//!   table3 [--measured] simulated (default) or measured speedup grid
+//!   fig6               combined speedup curves incl. baselines
+//!   ksweep             A3: bits/weight vs MSE frontier
+//!   quantize           quantize a checkpoint, report size + error
+//!   eval               evaluate a checkpoint under one scheme
+//!   serve              run the batched serving workload (E9)
+//!   sim                simulated latency detail for one shape
+//!   pjrt               run an AOT artifact through the PJRT runtime
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --out FILE (write
+//! markdown/CSV instead of stdout).
+
+use ams_quant::coordinator::batcher::BatchPolicy;
+use ams_quant::coordinator::server::Server;
+use ams_quant::coordinator::GenRequest;
+use ams_quant::experiments as exp;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::formats::FpFormat;
+use ams_quant::model::checkpoint::Checkpoint;
+use ams_quant::model::sampler::Sampler;
+use ams_quant::model::transformer::Transformer;
+use ams_quant::model::{synthetic, tokenizer, ModelConfig};
+use ams_quant::quant::QuantConfig;
+use ams_quant::report::{f, Table};
+use ams_quant::util::bench::BenchConfig;
+use ams_quant::util::cli::Args;
+use ams_quant::util::prng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match args.subcommand.as_deref() {
+        Some("formats") => cmd_formats(args),
+        Some("fig2a") => emit(args, exp::fig2a_csv()),
+        Some("fig2b") => {
+            let (model, _, kind) = exp::load_model(&artifacts)?;
+            eprintln!("# weights: {kind}");
+            emit(args, exp::fig2b_csv(&model))
+        }
+        Some("fig3") => cmd_accuracy(args, &artifacts, Scheme::fig3_set(), "Figure 3 (proxy)"),
+        Some("table2") => cmd_accuracy(args, &artifacts, Scheme::table2_set(), "Table 2 (proxy)"),
+        Some("table3") => cmd_table3(args),
+        Some("fig6") => cmd_fig6(args),
+        Some("ksweep") => cmd_ksweep(args),
+        Some("quantize") => cmd_quantize(args, &artifacts),
+        Some("eval") => cmd_eval(args, &artifacts),
+        Some("serve") => cmd_serve(args, &artifacts),
+        Some("sim") => {
+            let rows = args.get_usize("rows", 9728);
+            let cols = args.get_usize("cols", 2560);
+            emit_table(args, &exp::sim_latency_table(rows, cols, &[1, 2, 4, 8, 16, 32]))
+        }
+        Some("pjrt") => cmd_pjrt(args, &artifacts),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand '{cmd}'\n");
+            }
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "ams-quant — AMS-Quant (adaptive mantissa sharing) reproduction\n\n\
+         usage: ams-quant <subcommand> [flags]\n\n\
+         experiments:\n\
+         \x20 formats | fig2a | fig2b | fig3 | table2 | table3 [--measured]\n\
+         \x20 fig6 | ksweep | sim --rows R --cols C\n\
+         tools:\n\
+         \x20 quantize --scheme S [--ckpt file.amsz]\n\
+         \x20 eval --scheme S [--tokens N]\n\
+         \x20 serve --scheme S --requests N --max-batch B\n\
+         \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
+         common flags: --artifacts DIR  --out FILE  --csv"
+    );
+}
+
+fn emit(args: &Args, content: String) -> Result<()> {
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &content)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{content}"),
+    }
+    Ok(())
+}
+
+fn emit_table(args: &Args, t: &Table) -> Result<()> {
+    let content = if args.has("csv") {
+        t.to_csv()
+    } else if args.get("out").is_some() {
+        t.to_markdown()
+    } else {
+        t.to_console()
+    };
+    emit(args, content)
+}
+
+fn cmd_formats(args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "Table 1 — FP format properties (no inf/nan, MX convention)",
+        &["format", "bits", "bias", "max normal", "min normal", "max subnormal", "min subnormal"],
+    );
+    for fmt in [FpFormat::E2M1, FpFormat::E2M2, FpFormat::E2M3, FpFormat::E3M2, FpFormat::E4M3] {
+        t.row(vec![
+            fmt.name(),
+            fmt.bits().to_string(),
+            fmt.bias().to_string(),
+            format!("±{}", fmt.max_normal()),
+            format!("±{}", fmt.min_normal()),
+            format!("±{}", fmt.max_subnormal()),
+            format!("±{}", fmt.min_subnormal()),
+        ]);
+    }
+    emit_table(args, &t)
+}
+
+fn cmd_accuracy(args: &Args, artifacts: &Path, schemes: Vec<Scheme>, title: &str) -> Result<()> {
+    let (model, heldout, kind) = exp::load_model(artifacts)?;
+    let tokens = args.get_usize("tokens", 3000);
+    eprintln!("# model: {kind}; eval tokens: {tokens}");
+    let rows = exp::accuracy_suite(&model, &heldout, &schemes, tokens);
+    let t = exp::accuracy_table(&rows, &format!("{title} — tiny LM ({kind})"));
+    emit_table(args, &t)
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    if args.has("measured") {
+        let shrink = args.get_usize("shrink", 8);
+        let threads = args.get_usize("threads", 1);
+        let shapes = exp::scaled_table3_shapes(shrink);
+        let cfg = BenchConfig::from_env();
+        for t in exp::table3_measured(
+            &shapes,
+            &Scheme::table3_set()[1..],
+            &[1, 2, 4, 8, 16, 32],
+            &cfg,
+            threads,
+        ) {
+            emit_table(args, &t)?;
+            println!();
+        }
+    } else {
+        for t in exp::table3_sim() {
+            emit_table(args, &t)?;
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    // Fig 6 = Table 3 curves + the W8A16 (int8) and TC-FPx baselines on the
+    // MLP-down shapes. Simulated by default, measured with --measured.
+    let schemes: Vec<Scheme> = ["fp8", "int8", "fp6", "fp5", "fp5.33", "fp4.25"]
+        .iter()
+        .map(|s| Scheme::parse(s).unwrap())
+        .collect();
+    if args.has("measured") {
+        let shrink = args.get_usize("shrink", 8);
+        let cfg = BenchConfig::from_env();
+        for t in exp::table3_measured(
+            &exp::scaled_table3_shapes(shrink),
+            &schemes,
+            &[1, 4, 16, 32],
+            &cfg,
+            args.get_usize("threads", 1),
+        ) {
+            emit_table(args, &t)?;
+            println!();
+        }
+        return Ok(());
+    }
+    let dev = ams_quant::sim::Device::paper();
+    for (name, rows, cols) in ams_quant::sim::table3_shapes() {
+        let mut t = Table::new(
+            &format!("Figure 6 (simulated) — {name} MLP-down"),
+            &["Scheme", "b=1", "b=2", "b=4", "b=8", "b=16", "b=32"],
+        );
+        for &scheme in &schemes {
+            let sp = ams_quant::sim::speedup_row(&dev, rows, cols, scheme, &[1, 2, 4, 8, 16, 32]);
+            let mut cells = vec![scheme.label()];
+            cells.extend(sp.iter().map(|&v| f(v, 2)));
+            t.row(cells);
+        }
+        emit_table(args, &t)?;
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_ksweep(args: &Args) -> Result<()> {
+    let base = args.get_or("base", "e2m2");
+    let fmt = match base {
+        "e2m2" => FpFormat::E2M2,
+        "e2m3" => FpFormat::E2M3,
+        "e3m2" => FpFormat::E3M2,
+        other => bail!("unknown base format '{other}'"),
+    };
+    let t = exp::k_sweep(fmt, &[2, 3, 4, 8, 16], args.get_u64("seed", 7));
+    emit_table(args, &t)
+}
+
+fn cmd_quantize(args: &Args, artifacts: &Path) -> Result<()> {
+    let scheme = Scheme::parse(args.get_or("scheme", "fp4.25")).map_err(|e| anyhow::anyhow!(e))?;
+    let ckpt_path = args
+        .get("ckpt")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| artifacts.join("tiny_lm.amsz"));
+    let base = if ckpt_path.exists() {
+        Transformer::from_checkpoint(&Checkpoint::load(&ckpt_path)?)?
+    } else {
+        eprintln!("# {} missing; using synthetic model", ckpt_path.display());
+        Transformer::from_checkpoint(&synthetic::synthetic_checkpoint(
+            &ModelConfig::tiny_lm(),
+            1,
+        ))?
+    };
+    let q = base.quantized(&QuantConfig::paper(scheme));
+    let dense_bytes = base.projection_bytes();
+    let q_bytes = q.projection_bytes();
+    let mut t = Table::new(
+        &format!("Quantization report — {}", scheme.label()),
+        &["metric", "value"],
+    );
+    t.row(vec!["bits/weight".into(), f(scheme.bits_per_weight(), 3)]);
+    t.row(vec!["projection bytes (fp16)".into(), dense_bytes.to_string()]);
+    t.row(vec!["projection bytes (packed)".into(), q_bytes.to_string()]);
+    t.row(vec![
+        "compression vs fp16".into(),
+        format!("{:.2}x", dense_bytes as f64 / q_bytes as f64),
+    ]);
+    // Mean weight MSE across a sample of layers.
+    let mut mse_sum = 0.0;
+    let mut n = 0usize;
+    for (ld, lq) in base.layers.iter().zip(&q.layers) {
+        use ams_quant::model::transformer::Linear;
+        for (a, b) in [
+            (&ld.wq, &lq.wq),
+            (&ld.w_gate, &lq.w_gate),
+            (&ld.w_down, &lq.w_down),
+        ] {
+            if let (Linear::Dense(t0), Linear::Quant(qq)) = (a, b) {
+                let deq = ams_quant::pack::unpack(&qq.packed).dequantize();
+                mse_sum += t0.mse(&deq);
+                n += 1;
+            }
+        }
+    }
+    t.row(vec![
+        "mean weight MSE".into(),
+        format!("{:.3e}", mse_sum / n.max(1) as f64),
+    ]);
+    emit_table(args, &t)
+}
+
+fn cmd_eval(args: &Args, artifacts: &Path) -> Result<()> {
+    let scheme = Scheme::parse(args.get_or("scheme", "fp5.33")).map_err(|e| anyhow::anyhow!(e))?;
+    let (base, heldout, kind) = exp::load_model(artifacts)?;
+    let rows = exp::accuracy_suite(
+        &base,
+        &heldout,
+        &[Scheme::Fp16, scheme],
+        args.get_usize("tokens", 3000),
+    );
+    let t = exp::accuracy_table(&rows, &format!("Eval — {} vs FP16 ({kind})", scheme.label()));
+    emit_table(args, &t)
+}
+
+fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
+    let scheme_name = args.get_or("scheme", "fp5.33");
+    let n_requests = args.get_usize("requests", 16);
+    let max_batch = args.get_usize("max-batch", 8);
+    let max_new = args.get_usize("max-new-tokens", 32);
+    let (base, heldout, kind) = exp::load_model(artifacts)?;
+    let model = if scheme_name == "fp32" {
+        base
+    } else {
+        let scheme = Scheme::parse(scheme_name).map_err(|e| anyhow::anyhow!(e))?;
+        base.quantized(&QuantConfig::paper(scheme))
+    };
+    eprintln!(
+        "# serving tiny LM ({kind}) under {scheme_name}, {n_requests} requests, max_batch={max_batch}"
+    );
+
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let srv = Server::spawn(model, BatchPolicy { max_batch, eos: None }, 1);
+    let wall = ams_quant::util::timer::Timer::start();
+    for id in 0..n_requests as u64 {
+        let start = rng.range(0, heldout.len().saturating_sub(40).max(1));
+        let prompt: Vec<u32> = heldout[start..(start + 16).min(heldout.len())].to_vec();
+        srv.submit(GenRequest {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            sampler: Sampler::Greedy,
+        });
+    }
+    let responses = srv.collect(n_requests);
+    let wall_s = wall.elapsed_secs();
+    let lat = srv.latency.snapshot();
+    let stats = srv.shutdown();
+
+    let mut t = Table::new("Serving report (E9)", &["metric", "value"]);
+    t.row(vec!["requests".into(), responses.len().to_string()]);
+    t.row(vec!["tokens generated".into(), stats.tokens_generated.to_string()]);
+    t.row(vec!["wall s".into(), f(wall_s, 3)]);
+    t.row(vec![
+        "throughput tok/s".into(),
+        f(stats.tokens_generated as f64 / wall_s, 1),
+    ]);
+    t.row(vec![
+        "mean batch occupancy".into(),
+        f(stats.mean_batch_occupancy(), 2),
+    ]);
+    t.row(vec!["latency p50 s".into(), f(lat.percentile(50.0), 3)]);
+    t.row(vec!["latency p90 s".into(), f(lat.percentile(90.0), 3)]);
+    emit_table(args, &t)?;
+    if let Some(r) = responses.first() {
+        eprintln!("# sample continuation: {:?}", tokenizer::decode(&r.tokens));
+    }
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args, artifacts: &Path) -> Result<()> {
+    let manifest_path = artifacts.join("manifest.json");
+    let manifest = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("run `make artifacts` first ({})", manifest_path.display()))?;
+    let entries = ams_quant::util::json::parse(&manifest).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let entries = entries.as_arr().context("manifest is not an array")?.to_vec();
+    let name = args
+        .get("artifact")
+        .unwrap_or("linear_fp5p33_256x128_b1.hlo.txt");
+    let entry = entries
+        .iter()
+        .find(|e| e.req_str("file").map(|v| v == name).unwrap_or(false))
+        .with_context(|| format!("artifact '{name}' not in manifest"))?;
+    let scheme = Scheme::parse(entry.req_str("scheme").unwrap()).map_err(|e| anyhow::anyhow!(e))?;
+    let rows = entry.req_usize("rows").unwrap();
+    let cols = entry.req_usize("cols").unwrap();
+    let batch = entry.req_usize("batch").unwrap();
+
+    let mut rng = Rng::new(1);
+    let w = synthetic::llm_weight(rows, cols, &Default::default(), &mut rng);
+    let lin = exp::make_linear(&w, scheme);
+    let x = exp::random_acts(batch, cols, &mut rng);
+
+    let rt = ams_quant::runtime::Runtime::cpu()?;
+    eprintln!("# platform: {}", rt.platform());
+    let exe = rt.load(&artifacts.join(name))?;
+    let y = exe.run_linear(&lin.packed, x.data(), batch)?;
+    let ynative = lin.gemm(&x);
+    let mut max_err = 0f32;
+    for (a, b) in y.iter().zip(ynative.data()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    println!("pjrt {name}: [{batch}x{rows}] computed; max |pjrt - native| = {max_err:.2e}");
+    if max_err > 1e-3 {
+        bail!("PJRT/native mismatch: {max_err}");
+    }
+    Ok(())
+}

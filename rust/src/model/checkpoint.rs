@@ -1,0 +1,179 @@
+//! AMSZ checkpoint container: a minimal self-describing tensor archive
+//! shared between the JAX trainer (writer, see python/compile/ckpt_io.py)
+//! and the rust engine (reader), plus a writer on the rust side for
+//! synthetic models and quantized exports.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  b"AMSZ1\n"
+//! u32    header_len
+//! bytes  header JSON: {"config": {...},
+//!                      "tensors": [{"name","shape":[..],"offset","count"}]}
+//! bytes  f32 payload (offsets are element offsets into this region)
+//! ```
+
+use super::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"AMSZ1\n";
+
+/// In-memory checkpoint: named f32 tensors + model config.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(config: ModelConfig) -> Checkpoint {
+        Checkpoint {
+            config,
+            tensors: BTreeMap::new(),
+        }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            let mut e = Json::obj();
+            e.set("name", Json::Str(name.clone()))
+                .set(
+                    "shape",
+                    Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+                )
+                .set("offset", Json::Num(offset as f64))
+                .set("count", Json::Num(t.len() as f64));
+            entries.push(e);
+            offset += t.len();
+        }
+        let mut header = Json::obj();
+        header
+            .set("config", self.config.to_json())
+            .set("tensors", Json::Arr(entries));
+        let hbytes = header.to_string().into_bytes();
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+        f.write_all(&hbytes)?;
+        for t in self.tensors.values() {
+            for &x in t.data() {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not an AMSZ checkpoint", path.display());
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = parse(std::str::from_utf8(&hbytes)?).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let config = ModelConfig::from_json(
+            header
+                .get("config")
+                .context("header missing 'config'")?,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        let floats: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut tensors = BTreeMap::new();
+        for e in header
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .context("header missing 'tensors'")?
+        {
+            let name = e.req_str("name").map_err(|e| anyhow::anyhow!("{e}"))?;
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .context("tensor missing shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let offset = e.req_usize("offset").map_err(|e| anyhow::anyhow!("{e}"))?;
+            let count = e.req_usize("count").map_err(|e| anyhow::anyhow!("{e}"))?;
+            if offset + count > floats.len() {
+                bail!("tensor '{name}' exceeds payload ({} floats)", floats.len());
+            }
+            tensors.insert(
+                name.to_string(),
+                Tensor::from_vec(&shape, floats[offset..offset + count].to_vec()),
+            );
+        }
+        Ok(Checkpoint { config, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut ck = Checkpoint::new(ModelConfig::test_tiny());
+        ck.insert("a", init::gaussian(&[4, 8], 0.0, 1.0, &mut rng));
+        ck.insert("b.c", init::gaussian(&[3], 0.0, 1.0, &mut rng));
+        let dir = std::env::temp_dir().join("ams_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.amsz");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.config, ck.config);
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("a").unwrap(), ck.get("a").unwrap());
+        assert_eq!(back.get("b.c").unwrap(), ck.get("b.c").unwrap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let ck = Checkpoint::new(ModelConfig::test_tiny());
+        assert!(ck.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("ams_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.amsz");
+        std::fs::write(&path, b"NOTAMSZ...").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

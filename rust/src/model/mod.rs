@@ -1,0 +1,155 @@
+//! Model substrate: a Qwen/Llama-style decoder-only transformer inference
+//! engine whose linear layers run through the packed AMS kernels, plus the
+//! checkpoint container, synthetic LLM-like weight generators, byte
+//! tokenizer and sampler.
+//!
+//! The same architecture is implemented in JAX at `python/compile/model.py`
+//! (build-time); `rust/tests/parity.rs` asserts logits parity on a shared
+//! checkpoint.
+
+pub mod checkpoint;
+pub mod sampler;
+pub mod synthetic;
+pub mod tokenizer;
+pub mod transformer;
+
+use crate::util::json::{Json, JsonError};
+
+/// Deterministic evaluation text used when no trained checkpoint exists
+/// (same grammar family as python/compile/corpus.py).
+pub fn synthetic_eval_text() -> String {
+    let mut s = String::new();
+    let objs = ["lamp", "door", "cube", "ring"];
+    let cols = ["red", "blue", "green", "gold"];
+    for i in 0..120 {
+        let o = objs[i % objs.len()];
+        let c = cols[(i * 7) % cols.len()];
+        s.push_str(&format!("the {o} is {c}. "));
+        if i % 3 == 0 {
+            let motif = ['a', 'b', 'c', 'd'][i % 4];
+            for _ in 0..6 {
+                s.push(motif);
+                s.push(((b'a' + (i % 26) as u8) as char).to_ascii_lowercase());
+            }
+            s.push(' ');
+        }
+    }
+    s
+}
+
+/// Architecture hyperparameters (serialized into checkpoint headers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub const ROPE_THETA: f64 = 10_000.0;
+    pub const NORM_EPS: f32 = 1e-5;
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Total parameter count (tied embedding counted once, lm_head untied).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 2 * d // norms
+            + d * d // wq
+            + 2 * self.kv_dim() * d // wk, wv
+            + d * d // wo
+            + 3 * self.d_ff * d; // gate, up, down
+        self.vocab_size * d // embed
+            + self.n_layers * per_layer
+            + d // final norm
+            + self.vocab_size * d // lm_head
+    }
+
+    /// A ~tiny config for unit tests.
+    pub fn test_tiny() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 64,
+            max_seq: 64,
+        }
+    }
+
+    /// The build-time-trained char LM (see python/compile/train_lm.py).
+    pub fn tiny_lm() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 344,
+            max_seq: 256,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("vocab_size", Json::Num(self.vocab_size as f64))
+            .set("d_model", Json::Num(self.d_model as f64))
+            .set("n_layers", Json::Num(self.n_layers as f64))
+            .set("n_heads", Json::Num(self.n_heads as f64))
+            .set("n_kv_heads", Json::Num(self.n_kv_heads as f64))
+            .set("d_ff", Json::Num(self.d_ff as f64))
+            .set("max_seq", Json::Num(self.max_seq as f64));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig, JsonError> {
+        Ok(ModelConfig {
+            vocab_size: j.req_usize("vocab_size")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            n_kv_heads: j.req_usize("n_kv_heads")?,
+            d_ff: j.req_usize("d_ff")?,
+            max_seq: j.req_usize("max_seq")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = ModelConfig::tiny_lm();
+        let j = c.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn head_dims() {
+        let c = ModelConfig::test_tiny();
+        assert_eq!(c.head_dim(), 8);
+        assert_eq!(c.kv_dim(), 16);
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let c = ModelConfig::tiny_lm();
+        // ~1.5M params for the tiny LM.
+        let p = c.param_count();
+        assert!(p > 700_000 && p < 3_000_000, "params={p}");
+    }
+}

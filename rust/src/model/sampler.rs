@@ -1,0 +1,92 @@
+//! Token samplers over logits: greedy, temperature, top-k.
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampler {
+    Greedy,
+    Temperature(f32),
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match *self {
+            Sampler::Greedy => argmax(logits) as u32,
+            Sampler::Temperature(t) => {
+                let probs = softmax_t(logits, t);
+                rng.categorical(&probs) as u32
+            }
+            Sampler::TopK { k, temperature } => {
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.truncate(k.max(1));
+                let top: Vec<f32> = idx.iter().map(|&i| logits[i]).collect();
+                let probs = softmax_t(&top, temperature);
+                idx[rng.categorical(&probs)] as u32
+            }
+        }
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn softmax_t(logits: &[f32], t: f32) -> Vec<f32> {
+    let t = t.max(1e-4);
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 2.5, -1.0, 2.4];
+        let mut rng = Rng::new(1);
+        assert_eq!(Sampler::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = vec![0.0, 5.0, 1.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            assert_eq!(Sampler::Temperature(0.01).sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let logits = vec![10.0, 9.0, -50.0, -60.0];
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let t = Sampler::TopK {
+                k: 2,
+                temperature: 1.0,
+            }
+            .sample(&logits, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let logits = vec![1.0, 1.0, 1.0];
+        let mut rng = Rng::new(4);
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[Sampler::Temperature(1.0).sample(&logits, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,177 @@
+//! Synthetic LLM-like weights (substitution for the paper's Llama/Qwen
+//! checkpoints — DESIGN.md §2).
+//!
+//! Figure 2b of the paper shows per-layer weight distributions: bell-shaped,
+//! heavier-tailed than Gaussian, with a small set of input channels whose
+//! magnitudes are systematically larger (the channel-wise outlier structure
+//! that motivates input-dim mantissa sharing). We generate exactly that
+//! family: a Gaussian/Laplace mixture with per-input-channel outlier gains.
+
+use super::checkpoint::Checkpoint;
+use super::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Parameters of the synthetic weight family.
+#[derive(Clone, Copy, Debug)]
+pub struct WeightProfile {
+    /// Base standard deviation (LLM layers are typically ~N(0, 0.02²)).
+    pub sigma: f32,
+    /// Fraction of values drawn from the heavier Laplace tail.
+    pub laplace_frac: f64,
+    /// Fraction of input channels that are outliers.
+    pub outlier_frac: f64,
+    /// Magnitude gain of outlier channels.
+    pub outlier_gain: f32,
+}
+
+impl Default for WeightProfile {
+    fn default() -> Self {
+        WeightProfile {
+            sigma: 0.02,
+            laplace_frac: 0.1,
+            outlier_frac: 0.01,
+            outlier_gain: 8.0,
+        }
+    }
+}
+
+/// Generate one `[out_channels, in_channels]` weight matrix.
+pub fn llm_weight(rows: usize, cols: usize, profile: &WeightProfile, rng: &mut Rng) -> Tensor {
+    // Choose outlier input channels once per matrix (channel-wise pattern).
+    let n_out = ((cols as f64 * profile.outlier_frac).round() as usize).min(cols);
+    let mut gain = vec![1.0f32; cols];
+    for _ in 0..n_out {
+        let c = rng.range(0, cols);
+        gain[c] = profile.outlier_gain;
+    }
+    let mut data = Vec::with_capacity(rows * cols);
+    for _ in 0..rows {
+        for g in gain.iter().take(cols) {
+            let base = if rng.uniform() < profile.laplace_frac {
+                rng.laplace(profile.sigma as f64 / std::f64::consts::SQRT_2) as f32
+            } else {
+                rng.normal_f32(0.0, profile.sigma)
+            };
+            data.push(base * g);
+        }
+    }
+    Tensor::from_vec(&[rows, cols], data)
+}
+
+/// Random init of a full model checkpoint (used for serving benches and
+/// engine tests; the *trained* tiny LM comes from python/compile/train_lm.py).
+pub fn synthetic_checkpoint(cfg: &ModelConfig, seed: u64) -> Checkpoint {
+    let mut rng = Rng::new(seed);
+    let profile = WeightProfile::default();
+    let d = cfg.d_model;
+    let mut ck = Checkpoint::new(*cfg);
+    // Scaled-down init so activations stay sane through depth.
+    let scale = |t: Tensor, s: f32| t.scale(s);
+    ck.insert(
+        "embed",
+        scale(llm_weight(cfg.vocab_size, d, &profile, &mut rng), 1.0),
+    );
+    for i in 0..cfg.n_layers {
+        let ones = Tensor::from_vec(&[d], vec![1.0; d]);
+        ck.insert(&format!("layers.{i}.attn_norm"), ones.clone());
+        ck.insert(&format!("layers.{i}.mlp_norm"), ones);
+        ck.insert(
+            &format!("layers.{i}.wq"),
+            llm_weight(d, d, &profile, &mut rng),
+        );
+        ck.insert(
+            &format!("layers.{i}.wk"),
+            llm_weight(cfg.kv_dim(), d, &profile, &mut rng),
+        );
+        ck.insert(
+            &format!("layers.{i}.wv"),
+            llm_weight(cfg.kv_dim(), d, &profile, &mut rng),
+        );
+        ck.insert(
+            &format!("layers.{i}.wo"),
+            llm_weight(d, d, &profile, &mut rng),
+        );
+        ck.insert(
+            &format!("layers.{i}.w_gate"),
+            llm_weight(cfg.d_ff, d, &profile, &mut rng),
+        );
+        ck.insert(
+            &format!("layers.{i}.w_up"),
+            llm_weight(cfg.d_ff, d, &profile, &mut rng),
+        );
+        ck.insert(
+            &format!("layers.{i}.w_down"),
+            llm_weight(d, cfg.d_ff, &profile, &mut rng),
+        );
+    }
+    ck.insert("final_norm", Tensor::from_vec(&[d], vec![1.0; d]));
+    ck.insert("lm_head", llm_weight(cfg.vocab_size, d, &profile, &mut rng));
+    ck
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bell_shaped_moments() {
+        let mut rng = Rng::new(1);
+        let w = llm_weight(256, 512, &WeightProfile::default(), &mut rng);
+        let mean = w.mean();
+        assert!(mean.abs() < 1e-3, "mean={mean}");
+        // Excess kurtosis > 0 (heavier than Gaussian due to outliers+Laplace).
+        let var = w
+            .data()
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / w.len() as f64;
+        let kurt = w
+            .data()
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(4))
+            .sum::<f64>()
+            / (w.len() as f64 * var * var);
+        assert!(kurt > 3.2, "kurtosis={kurt} not heavy-tailed");
+    }
+
+    #[test]
+    fn outlier_channels_exist() {
+        let mut rng = Rng::new(2);
+        let profile = WeightProfile {
+            outlier_frac: 0.05,
+            ..WeightProfile::default()
+        };
+        let w = llm_weight(128, 200, &profile, &mut rng);
+        // Column amax distribution should have a clear high tail.
+        let mut col_amax = vec![0f32; 200];
+        for r in 0..128 {
+            for (c, m) in col_amax.iter_mut().enumerate() {
+                *m = m.max(w.at2(r, c).abs());
+            }
+        }
+        col_amax.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = col_amax[100];
+        let top = col_amax[199];
+        assert!(top > 3.0 * med, "top={top} med={med}");
+    }
+
+    #[test]
+    fn checkpoint_complete() {
+        let cfg = ModelConfig::test_tiny();
+        let ck = synthetic_checkpoint(&cfg, 3);
+        // 2 norms + 7 projections per layer + embed + final_norm + lm_head.
+        assert_eq!(ck.tensors.len(), cfg.n_layers * 9 + 3);
+        assert_eq!(ck.get("embed").unwrap().shape(), &[64, 32]);
+        assert_eq!(ck.get("layers.1.w_down").unwrap().shape(), &[32, 64]);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = ModelConfig::test_tiny();
+        let a = synthetic_checkpoint(&cfg, 7);
+        let b = synthetic_checkpoint(&cfg, 7);
+        assert_eq!(a.get("layers.0.wq").unwrap(), b.get("layers.0.wq").unwrap());
+    }
+}

@@ -1,0 +1,37 @@
+//! Byte-level tokenizer: token id = byte value. Vocab 256 matches the
+//! build-time char LM; no merges, fully reversible.
+
+/// Encode text into byte token ids.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.as_bytes().iter().map(|&b| u32::from(b)).collect()
+}
+
+/// Decode token ids back into text (lossy on invalid UTF-8).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+pub const VOCAB_SIZE: usize = 256;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "hello AMS-Quant 4.25!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        assert!(encode("äöü→").iter().all(|&t| (t as usize) < VOCAB_SIZE));
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(encode(""), Vec::<u32>::new());
+        assert_eq!(decode(&[]), "");
+    }
+}

@@ -1,0 +1,563 @@
+//! Decoder-only transformer inference engine (Qwen-style: RMSNorm, RoPE,
+//! GQA attention, SwiGLU MLP) whose seven per-layer projections run through
+//! the packed AMS GEMV/GEMM kernels.
+//!
+//! Single-token decode (`forward`) and batched decode across independent
+//! sequences (`forward_batch`) — the latter is the workload of Table 3:
+//! the linear layers see a `[batch, d]` GEMM while attention stays
+//! per-sequence against its own KV cache.
+
+use super::checkpoint::Checkpoint;
+use super::ModelConfig;
+use crate::formats::registry::Scheme;
+use crate::gemm::QuantLinear;
+use crate::quant::sharing::quantize;
+use crate::quant::QuantConfig;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// A projection: dense f32 (FP16-reference path) or packed-quantized.
+#[derive(Clone, Debug)]
+pub enum Linear {
+    Dense(Tensor),
+    Quant(QuantLinear),
+}
+
+impl Linear {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Linear::Dense(t) => t.rows(),
+            Linear::Quant(q) => q.rows(),
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Linear::Dense(t) => t.cols(),
+            Linear::Quant(q) => q.cols(),
+        }
+    }
+
+    /// `y = W x`.
+    pub fn apply(&self, x: &[f32], y: &mut [f32]) {
+        match self {
+            Linear::Dense(w) => {
+                for r in 0..w.rows() {
+                    y[r] = w.row(r).iter().zip(x).map(|(&a, &b)| a * b).sum();
+                }
+            }
+            Linear::Quant(q) => q.gemv(x, y),
+        }
+    }
+
+    /// `Y[batch, out] = X[batch, in] Wᵀ`.
+    pub fn apply_batch(&self, x: &Tensor) -> Tensor {
+        match self {
+            Linear::Dense(w) => x.matmul(&w.transpose()),
+            Linear::Quant(q) => q.gemm(x),
+        }
+    }
+
+    /// Storage bytes of the weight payload.
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Linear::Dense(t) => t.len() * 2, // counted as fp16 storage
+            Linear::Quant(q) => q.packed.payload_bytes(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub mlp_norm: Vec<f32>,
+    pub w_gate: Linear,
+    pub w_up: Linear,
+    pub w_down: Linear,
+}
+
+/// Per-sequence KV cache.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    /// Per layer: [max_seq * kv_dim].
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    pub len: usize,
+    kv_dim: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache {
+            k: vec![vec![0.0; cfg.max_seq * cfg.kv_dim()]; cfg.n_layers],
+            v: vec![vec![0.0; cfg.max_seq * cfg.kv_dim()]; cfg.n_layers],
+            len: 0,
+            kv_dim: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub embed: Tensor, // [vocab, d]
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Linear,
+    /// Scheme the projections are stored in (None = dense reference).
+    pub scheme: Option<Scheme>,
+}
+
+fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + ModelConfig::NORM_EPS).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn softmax_inplace(x: &mut [f32]) {
+    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// NeoX-style rotary embedding applied in place to one head vector.
+fn rope(v: &mut [f32], pos: usize, head_dim: usize) {
+    let half = head_dim / 2;
+    for i in 0..half {
+        let freq = (ModelConfig::ROPE_THETA as f32).powf(-2.0 * i as f32 / head_dim as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (v[i], v[i + half]);
+        v[i] = a * cos - b * sin;
+        v[i + half] = a * sin + b * cos;
+    }
+}
+
+impl Transformer {
+    /// Load a dense (reference) model from a checkpoint.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<Transformer> {
+        let cfg = ck.config;
+        let lin = |name: &str| -> Result<Linear> { Ok(Linear::Dense(ck.get(name)?.clone())) };
+        let vecf = |name: &str| -> Result<Vec<f32>> { Ok(ck.get(name)?.data().to_vec()) };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                attn_norm: vecf(&format!("layers.{i}.attn_norm"))?,
+                wq: lin(&format!("layers.{i}.wq"))?,
+                wk: lin(&format!("layers.{i}.wk"))?,
+                wv: lin(&format!("layers.{i}.wv"))?,
+                wo: lin(&format!("layers.{i}.wo"))?,
+                mlp_norm: vecf(&format!("layers.{i}.mlp_norm"))?,
+                w_gate: lin(&format!("layers.{i}.w_gate"))?,
+                w_up: lin(&format!("layers.{i}.w_up"))?,
+                w_down: lin(&format!("layers.{i}.w_down"))?,
+            });
+        }
+        Ok(Transformer {
+            cfg,
+            embed: ck.get("embed")?.clone(),
+            layers,
+            final_norm: vecf("final_norm")?,
+            lm_head: lin("lm_head")?,
+            scheme: None,
+        })
+    }
+
+    /// Quantize every projection (wq/wk/wv/wo/gate/up/down) to a scheme.
+    /// Embeddings, norms and lm_head stay dense, as in weight-only LLM
+    /// deployments (they are a small fraction of the weights).
+    pub fn quantized(&self, qcfg: &QuantConfig) -> Transformer {
+        let requant = |l: &Linear| -> Linear {
+            let w = match l {
+                Linear::Dense(t) => t.clone(),
+                Linear::Quant(_) => panic!("quantized() expects a dense source model"),
+            };
+            match qcfg.scheme {
+                Scheme::Fp16 => Linear::Quant(QuantLinear::new(crate::baselines::pack_fp16(&w))),
+                Scheme::Int { .. } => Linear::Quant(QuantLinear::new(
+                    crate::baselines::quantize_int(&w, qcfg.scheme),
+                )),
+                _ => Linear::Quant(QuantLinear::new(crate::pack::pack(&quantize(&w, qcfg)))),
+            }
+        };
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| LayerWeights {
+                attn_norm: l.attn_norm.clone(),
+                wq: requant(&l.wq),
+                wk: requant(&l.wk),
+                wv: requant(&l.wv),
+                wo: requant(&l.wo),
+                mlp_norm: l.mlp_norm.clone(),
+                w_gate: requant(&l.w_gate),
+                w_up: requant(&l.w_up),
+                w_down: requant(&l.w_down),
+            })
+            .collect();
+        Transformer {
+            cfg: self.cfg,
+            embed: self.embed.clone(),
+            layers,
+            final_norm: self.final_norm.clone(),
+            lm_head: self.lm_head.clone(),
+            scheme: Some(qcfg.scheme),
+        }
+    }
+
+    pub fn new_cache(&self) -> KvCache {
+        let mut c = KvCache::new(&self.cfg);
+        c.kv_dim = self.cfg.kv_dim();
+        c
+    }
+
+    /// Projection weight bytes (the quantity the paper's speedup divides).
+    pub fn projection_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.wq.payload_bytes()
+                    + l.wk.payload_bytes()
+                    + l.wv.payload_bytes()
+                    + l.wo.payload_bytes()
+                    + l.w_gate.payload_bytes()
+                    + l.w_up.payload_bytes()
+                    + l.w_down.payload_bytes()
+            })
+            .sum()
+    }
+
+    /// Single-token decode step: returns logits. `pos` must equal
+    /// `cache.len`.
+    pub fn forward(&self, token: u32, pos: usize, cache: &mut KvCache) -> Vec<f32> {
+        assert_eq!(pos, cache.len, "positions must be fed in order");
+        assert!(pos < self.cfg.max_seq, "sequence overflow");
+        let cfg = &self.cfg;
+        let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
+        let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+
+        let mut x = self.embed.row(token as usize).to_vec();
+        let mut h = vec![0f32; d];
+        let mut q = vec![0f32; d];
+        let mut attn_out = vec![0f32; d];
+        let mut proj = vec![0f32; d.max(cfg.d_ff)];
+        let mut gate = vec![0f32; cfg.d_ff];
+        let mut up = vec![0f32; cfg.d_ff];
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // --- attention ---
+            rmsnorm(&x, &layer.attn_norm, &mut h);
+            layer.wq.apply(&h, &mut q);
+            let kc = &mut cache.k[li];
+            let vc = &mut cache.v[li];
+            layer.wk.apply(&h, &mut kc[pos * kvd..(pos + 1) * kvd]);
+            layer.wv.apply(&h, &mut vc[pos * kvd..(pos + 1) * kvd]);
+            for hh in 0..cfg.n_heads {
+                rope(&mut q[hh * hd..(hh + 1) * hd], pos, hd);
+            }
+            for g in 0..cfg.n_kv_heads {
+                rope(&mut kc[pos * kvd + g * hd..pos * kvd + (g + 1) * hd], pos, hd);
+            }
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut scores = vec![0f32; pos + 1];
+            for hh in 0..cfg.n_heads {
+                let g = hh / heads_per_kv;
+                let qh = &q[hh * hd..(hh + 1) * hd];
+                for (t, s) in scores.iter_mut().enumerate() {
+                    let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
+                    *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
+                }
+                softmax_inplace(&mut scores);
+                let oh = &mut attn_out[hh * hd..(hh + 1) * hd];
+                oh.fill(0.0);
+                for (t, &p) in scores.iter().enumerate() {
+                    let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
+                    for i in 0..hd {
+                        oh[i] += p * vh[i];
+                    }
+                }
+            }
+            layer.wo.apply(&attn_out, &mut proj[..d]);
+            for i in 0..d {
+                x[i] += proj[i];
+            }
+            // --- MLP (SwiGLU) ---
+            rmsnorm(&x, &layer.mlp_norm, &mut h);
+            layer.w_gate.apply(&h, &mut gate);
+            layer.w_up.apply(&h, &mut up);
+            for i in 0..cfg.d_ff {
+                gate[i] = silu(gate[i]) * up[i];
+            }
+            layer.w_down.apply(&gate, &mut proj[..d]);
+            for i in 0..d {
+                x[i] += proj[i];
+            }
+        }
+        cache.len = pos + 1;
+
+        rmsnorm(&x.clone(), &self.final_norm, &mut x);
+        let mut logits = vec![0f32; cfg.vocab_size];
+        self.lm_head.apply(&x, &mut logits);
+        logits
+    }
+
+    /// Batched decode across independent sequences: `tokens[i]` is appended
+    /// to `caches[i]` at its own position. Linear layers run as one
+    /// `[batch, ·]` GEMM; attention runs per sequence.
+    pub fn forward_batch(&self, tokens: &[u32], caches: &mut [KvCache]) -> Tensor {
+        let b = tokens.len();
+        assert_eq!(b, caches.len());
+        let cfg = &self.cfg;
+        let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
+        let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+
+        let mut x = Tensor::zeros(&[b, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(t as usize));
+        }
+        let mut h = Tensor::zeros(&[b, d]);
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            for i in 0..b {
+                rmsnorm(x.row(i), &layer.attn_norm, h.row_mut(i));
+            }
+            let q = layer.wq.apply_batch(&h); // [b, d]
+            let kx = layer.wk.apply_batch(&h); // [b, kvd]
+            let vx = layer.wv.apply_batch(&h);
+            let mut attn = Tensor::zeros(&[b, d]);
+            for i in 0..b {
+                let pos = caches[i].len;
+                assert!(pos < cfg.max_seq, "sequence overflow");
+                let kc = &mut caches[i].k[li];
+                let vc = &mut caches[i].v[li];
+                kc[pos * kvd..(pos + 1) * kvd].copy_from_slice(kx.row(i));
+                vc[pos * kvd..(pos + 1) * kvd].copy_from_slice(vx.row(i));
+                let mut qi = q.row(i).to_vec();
+                for hh in 0..cfg.n_heads {
+                    rope(&mut qi[hh * hd..(hh + 1) * hd], pos, hd);
+                }
+                for g in 0..cfg.n_kv_heads {
+                    rope(
+                        &mut kc[pos * kvd + g * hd..pos * kvd + (g + 1) * hd],
+                        pos,
+                        hd,
+                    );
+                }
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut scores = vec![0f32; pos + 1];
+                let oi = attn.row_mut(i);
+                for hh in 0..cfg.n_heads {
+                    let g = hh / heads_per_kv;
+                    let qh = &qi[hh * hd..(hh + 1) * hd];
+                    for (t, s) in scores.iter_mut().enumerate() {
+                        let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
+                        *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    let oh = &mut oi[hh * hd..(hh + 1) * hd];
+                    for (t, &p) in scores.iter().enumerate() {
+                        let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
+                        for j in 0..hd {
+                            oh[j] += p * vh[j];
+                        }
+                    }
+                }
+            }
+            let o = layer.wo.apply_batch(&attn);
+            for i in 0..b {
+                let xr = x.row_mut(i);
+                for (j, &v) in o.row(i).iter().enumerate() {
+                    xr[j] += v;
+                }
+            }
+            for i in 0..b {
+                rmsnorm(x.row(i), &layer.mlp_norm, h.row_mut(i));
+            }
+            let gate = layer.w_gate.apply_batch(&h);
+            let up = layer.w_up.apply_batch(&h);
+            let mut act = Tensor::zeros(&[b, cfg.d_ff]);
+            for i in 0..b {
+                let ar = act.row_mut(i);
+                let gr = gate.row(i);
+                let ur = up.row(i);
+                for j in 0..cfg.d_ff {
+                    ar[j] = silu(gr[j]) * ur[j];
+                }
+            }
+            let down = layer.w_down.apply_batch(&act);
+            for i in 0..b {
+                let xr = x.row_mut(i);
+                for (j, &v) in down.row(i).iter().enumerate() {
+                    xr[j] += v;
+                }
+            }
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        for i in 0..b {
+            let xi = x.row(i).to_vec();
+            rmsnorm(&xi, &self.final_norm, x.row_mut(i));
+        }
+        self.lm_head.apply_batch(&x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::synthetic_checkpoint;
+
+    fn tiny_model() -> Transformer {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 42);
+        Transformer::from_checkpoint(&ck).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let m = tiny_model();
+        let mut c1 = m.new_cache();
+        let mut c2 = m.new_cache();
+        let l1 = m.forward(3, 0, &mut c1);
+        let l2 = m.forward(3, 0, &mut c2);
+        assert_eq!(l1.len(), m.cfg.vocab_size);
+        assert_eq!(l1, l2);
+        assert!(l1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cache_affects_later_tokens() {
+        let m = tiny_model();
+        // Same token at pos 1 after different histories -> different logits.
+        let mut ca = m.new_cache();
+        m.forward(1, 0, &mut ca);
+        let la = m.forward(5, 1, &mut ca);
+        let mut cb = m.new_cache();
+        m.forward(2, 0, &mut cb);
+        let lb = m.forward(5, 1, &mut cb);
+        assert_ne!(la, lb);
+    }
+
+    #[test]
+    #[should_panic(expected = "positions must be fed in order")]
+    fn out_of_order_positions_panic() {
+        let m = tiny_model();
+        let mut c = m.new_cache();
+        m.forward(1, 1, &mut c);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = tiny_model();
+        // Three sequences with different histories.
+        let hists: Vec<Vec<u32>> = vec![vec![1, 2], vec![7], vec![3, 4]];
+        let next = [9u32, 8, 7];
+        // Single-path reference.
+        let mut refs = Vec::new();
+        for (hist, &n) in hists.iter().zip(&next) {
+            let mut c = m.new_cache();
+            for (p, &t) in hist.iter().enumerate() {
+                m.forward(t, p, &mut c);
+            }
+            refs.push(m.forward(n, hist.len(), &mut c));
+        }
+        // Batched path: replay histories one token at a time (batch),
+        // then the probe tokens.
+        let mut caches: Vec<KvCache> = (0..3).map(|_| m.new_cache()).collect();
+        for (i, hist) in hists.iter().enumerate() {
+            for (p, &t) in hist.iter().enumerate() {
+                m.forward(t, p, &mut caches[i]);
+            }
+        }
+        let logits = m.forward_batch(&next, &mut caches);
+        for i in 0..3 {
+            for j in 0..m.cfg.vocab_size {
+                assert!(
+                    (logits.at2(i, j) - refs[i][j]).abs() < 1e-4,
+                    "seq {i} logit {j}: {} vs {}",
+                    logits.at2(i, j),
+                    refs[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_model_close_to_dense() {
+        let m = tiny_model();
+        let q6 = m.quantized(&QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap()));
+        let q4 = m.quantized(&QuantConfig::paper(Scheme::parse("fp4-e2m1").unwrap()));
+        let mut cd = m.new_cache();
+        let mut c6 = q6.new_cache();
+        let mut c4 = q4.new_cache();
+        let mut d6 = 0f64;
+        let mut d4 = 0f64;
+        for (p, &t) in [1u32, 5, 9, 2].iter().enumerate() {
+            let ld = m.forward(t, p, &mut cd);
+            let l6 = q6.forward(t, p, &mut c6);
+            let l4 = q4.forward(t, p, &mut c4);
+            d6 += ld
+                .iter()
+                .zip(&l6)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+            d4 += ld
+                .iter()
+                .zip(&l4)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+        }
+        assert!(d6 > 0.0, "fp6 must differ from fp32 somewhere");
+        assert!(d6 < d4, "fp6 logit error {d6} must beat fp4 {d4}");
+    }
+
+    #[test]
+    fn fp16_scheme_near_lossless() {
+        let m = tiny_model();
+        let qf = m.quantized(&QuantConfig::paper(Scheme::Fp16));
+        let mut cd = m.new_cache();
+        let mut cf = qf.new_cache();
+        for (p, &t) in [1u32, 5, 9].iter().enumerate() {
+            let ld = m.forward(t, p, &mut cd);
+            let lf = qf.forward(t, p, &mut cf);
+            for (a, b) in ld.iter().zip(&lf) {
+                assert!((a - b).abs() < 0.02, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_bytes_scale_with_scheme() {
+        let m = tiny_model();
+        let dense = m.projection_bytes() as f64; // fp16-equivalent
+        let q425 = m
+            .quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()))
+            .projection_bytes() as f64;
+        let ratio = dense / q425;
+        assert!(
+            (ratio - 16.0 / 4.25).abs() / (16.0 / 4.25) < 0.15,
+            "compression ratio {ratio}"
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Dense little-endian bit stream over u16 words — the generic fallback
+//! packer for formats without a specialized layout, and the reference the
+//! specialized layouts are validated against (equal word counts).
+
+/// Writes values LSB-first into a u16 word slice.
+pub struct BitWriter<'a> {
+    words: &'a mut [u16],
+    bitpos: usize,
+}
+
+impl<'a> BitWriter<'a> {
+    pub fn new(words: &'a mut [u16]) -> Self {
+        BitWriter { words, bitpos: 0 }
+    }
+
+    /// Append the low `bits` bits of `v`.
+    pub fn put(&mut self, v: u32, bits: u32) {
+        debug_assert!(bits <= 16);
+        let mut v = v & ((1u32 << bits) - 1);
+        let mut remaining = bits as usize;
+        while remaining > 0 {
+            let word = self.bitpos / 16;
+            let off = self.bitpos % 16;
+            let take = remaining.min(16 - off);
+            self.words[word] |= ((v & ((1 << take) - 1)) as u16) << off;
+            v >>= take;
+            self.bitpos += take;
+            remaining -= take;
+        }
+    }
+
+    pub fn bits_written(&self) -> usize {
+        self.bitpos
+    }
+}
+
+/// Reads values LSB-first from a u16 word slice.
+pub struct BitReader<'a> {
+    words: &'a [u16],
+    bitpos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(words: &'a [u16]) -> Self {
+        BitReader { words, bitpos: 0 }
+    }
+
+    pub fn get(&mut self, bits: u32) -> u32 {
+        debug_assert!(bits <= 16);
+        let mut out = 0u32;
+        let mut got = 0usize;
+        let mut remaining = bits as usize;
+        while remaining > 0 {
+            let word = self.bitpos / 16;
+            let off = self.bitpos % 16;
+            let take = remaining.min(16 - off);
+            let chunk = (u32::from(self.words[word]) >> off) & ((1 << take) - 1);
+            out |= chunk << got;
+            got += take;
+            self.bitpos += take;
+            remaining -= take;
+        }
+        out
+    }
+
+    pub fn skip(&mut self, bits: usize) {
+        self.bitpos += bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut rng = Rng::new(1);
+        let widths = [1u32, 3, 5, 7, 11, 13, 16];
+        let vals: Vec<(u32, u32)> = (0..200)
+            .map(|i| {
+                let b = widths[i % widths.len()];
+                ((rng.next_u32()) & ((1u32 << b) - 1), b)
+            })
+            .collect();
+        let total_bits: usize = vals.iter().map(|&(_, b)| b as usize).sum();
+        let mut words = vec![0u16; total_bits.div_ceil(16)];
+        let mut w = BitWriter::new(&mut words);
+        for &(v, b) in &vals {
+            w.put(v, b);
+        }
+        assert_eq!(w.bits_written(), total_bits);
+        let mut r = BitReader::new(&words);
+        for &(v, b) in &vals {
+            assert_eq!(r.get(b), v);
+        }
+    }
+
+    #[test]
+    fn cross_word_boundary() {
+        let mut words = vec![0u16; 2];
+        let mut w = BitWriter::new(&mut words);
+        w.put(0x1FFF, 13);
+        w.put(0x5, 3);
+        w.put(0xAB, 8);
+        let mut r = BitReader::new(&words);
+        assert_eq!(r.get(13), 0x1FFF);
+        assert_eq!(r.get(3), 0x5);
+        assert_eq!(r.get(8), 0xAB);
+    }
+
+    #[test]
+    fn skip_advances() {
+        let words = [0xFFFFu16, 0x0001];
+        let mut r = BitReader::new(&words);
+        r.skip(16);
+        assert_eq!(r.get(1), 1);
+        assert_eq!(r.get(1), 0);
+    }
+
+    #[test]
+    fn masks_extra_high_bits() {
+        let mut words = vec![0u16; 1];
+        let mut w = BitWriter::new(&mut words);
+        w.put(0xFFFF_FFFF, 4); // only low 4 bits land
+        let mut r = BitReader::new(&words);
+        assert_eq!(r.get(4), 0xF);
+        assert_eq!(r.get(12), 0);
+    }
+}

@@ -1,0 +1,481 @@
+//! Prepacked weight storage (§3.2 / §3.3 of the paper).
+//!
+//! Quantized codes are packed ahead of time into `u16` words so the runtime
+//! streams only regular-width memory. Per scheme (bits/weight in the limit):
+//!
+//! - **FP16**: native half words (16).
+//! - **FP8-e4m3 / INT8**: two codes per word (8).
+//! - **FP6 (e2m3/e3m2), TC-FPx (4+2)**: a high-4-bit segment stream (4
+//!   codes/word) plus a low-2-bit segment stream (8 codes/word) → 6.
+//! - **FP5 (4+1)**: high-4 stream + mantissa-LSB stream (16/word) → 5.
+//! - **FP5.33 (e2m3, k=3)**: *continuous packing*: one u16 holds three
+//!   5-bit high segments and the shared LSB — the paper's special case
+//!   where a group fits a half-word exactly → 16/3 ≈ 5.33.
+//! - **FP4.5 / FP4.33 / FP4.25 (e2m2, k∈{2,3,4})**: high-4 stream + one
+//!   shared bit per group (16 groups/word) → 4 + 1/k.
+//! - **INT4**: four codes per word (4).
+//! - **other AMS formats**: generic dense bit-stream fallback.
+//!
+//! Each row (output channel) is packed independently and starts word-
+//! aligned; within a row the high-segment region precedes the shared/low
+//! region. Relative to the paper's 16-weight tiles this is a row-level
+//! segmentation — identical word counts and streaming behaviour, simpler
+//! addressing (documented deviation, DESIGN.md §7).
+
+pub mod bitstream;
+
+use crate::formats::registry::Scheme;
+use crate::formats::FpFormat;
+use crate::quant::{Granularity, QuantizedTensor, ShareDim};
+use bitstream::{BitReader, BitWriter};
+
+/// Packed weights ready for the GEMV hot path / PJRT buffers.
+#[derive(Clone, Debug)]
+pub struct PackedTensor {
+    pub scheme: Scheme,
+    pub rows: usize,
+    pub cols: usize,
+    /// All rows' words, row-major, `row_stride` words per row.
+    pub words: Vec<u16>,
+    pub row_stride: usize,
+    /// One scale per row (channel-wise).
+    pub scales: Vec<f32>,
+}
+
+impl PackedTensor {
+    pub fn row_words(&self, r: usize) -> &[u16] {
+        &self.words[r * self.row_stride..(r + 1) * self.row_stride]
+    }
+
+    /// Total storage bytes for the quantized payload (excludes scales).
+    pub fn payload_bytes(&self) -> usize {
+        self.words.len() * 2
+    }
+
+    /// Achieved bits per weight (includes row-alignment padding).
+    pub fn bits_per_weight(&self) -> f64 {
+        (self.payload_bytes() * 8) as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Words per row for a scheme at a given column count.
+pub fn row_stride(scheme: Scheme, cols: usize) -> usize {
+    match scheme {
+        Scheme::Fp16 => cols,
+        Scheme::Fp(f) if f.bits() == 8 => cols.div_ceil(2),
+        Scheme::Int { bits: 8 } => cols.div_ceil(2),
+        Scheme::Int { bits: 4 } => cols.div_ceil(4),
+        Scheme::Fp(f) if f.bits() == 6 => cols.div_ceil(4) + cols.div_ceil(8),
+        Scheme::Fp(f) if f.bits() == 5 => cols.div_ceil(4) + cols.div_ceil(16),
+        Scheme::Fp(f) if f.bits() == 4 => cols.div_ceil(4),
+        Scheme::Ams { base, k } if base == FpFormat::E2M3 && k == 3 => cols.div_ceil(3),
+        Scheme::Ams { base, k } if base.bits() == 5 => {
+            cols.div_ceil(4) + cols.div_ceil(k).div_ceil(16)
+        }
+        // Generic fallback: dense (bits-1)-bit stream + shared-bit stream.
+        Scheme::Ams { base, k } => {
+            (cols * (base.bits() as usize - 1)).div_ceil(16) + cols.div_ceil(k).div_ceil(16)
+        }
+        Scheme::Fp(f) => (cols * f.bits() as usize).div_ceil(16),
+        Scheme::Int { bits } => (cols * bits as usize).div_ceil(16),
+    }
+}
+
+/// Pack a quantized tensor. Requires input-dim sharing and per-channel (or
+/// per-tensor, which is broadcast) scales — the layouts the kernels serve.
+pub fn pack(q: &QuantizedTensor) -> PackedTensor {
+    assert_eq!(
+        q.share_dim,
+        ShareDim::Input,
+        "packed layouts require input-dim sharing"
+    );
+    let scales: Vec<f32> = match q.granularity {
+        Granularity::PerChannel => q.scales.clone(),
+        Granularity::PerTensor => vec![q.scales[0]; q.rows],
+        Granularity::PerGroup(_) => panic!("per-group scales are not packable (use per-channel)"),
+    };
+    let stride = row_stride(q.scheme, q.cols);
+    let mut words = vec![0u16; q.rows * stride];
+    for r in 0..q.rows {
+        let row_codes = &q.codes[r * q.cols..(r + 1) * q.cols];
+        pack_row(q.scheme, row_codes, &mut words[r * stride..(r + 1) * stride]);
+    }
+    PackedTensor {
+        scheme: q.scheme,
+        rows: q.rows,
+        cols: q.cols,
+        words,
+        row_stride: stride,
+        scales,
+    }
+}
+
+/// Pack one row of codes into `out` (len = row_stride).
+pub fn pack_row(scheme: Scheme, codes: &[u16], out: &mut [u16]) {
+    match scheme {
+        Scheme::Fp16 => out[..codes.len()].copy_from_slice(codes),
+        Scheme::Fp(f) if f.bits() == 8 => pack_fixed(codes, 8, out),
+        Scheme::Int { bits: 8 } => pack_fixed(codes, 8, out),
+        Scheme::Int { bits: 4 } => pack_fixed(codes, 4, out),
+        Scheme::Fp(f) if f.bits() == 6 => {
+            // TC-FPx (4+2): high-4 stream then low-2 stream.
+            let hi_words = codes.len().div_ceil(4);
+            for (i, &c) in codes.iter().enumerate() {
+                out[i / 4] |= ((c >> 2) & 0xF) << (4 * (i % 4));
+                out[hi_words + i / 8] |= (c & 0x3) << (2 * (i % 8));
+            }
+        }
+        Scheme::Fp(f) if f.bits() == 5 => {
+            // (4+1): high-4 stream then LSB stream.
+            let hi_words = codes.len().div_ceil(4);
+            for (i, &c) in codes.iter().enumerate() {
+                out[i / 4] |= ((c >> 1) & 0xF) << (4 * (i % 4));
+                out[hi_words + i / 16] |= (c & 1) << (i % 16);
+            }
+        }
+        Scheme::Fp(f) if f.bits() == 4 => pack_fixed(codes, 4, out),
+        Scheme::Ams { base, k } if base == FpFormat::E2M3 && k == 3 => {
+            // Continuous: [hi0|hi1|hi2|shared] per u16. The shared LSB is
+            // identical across the group, read it from the first member.
+            for (g, grp) in codes.chunks(3).enumerate() {
+                let mut w: u16 = (grp[0] & 1) << 15;
+                for (j, &c) in grp.iter().enumerate() {
+                    w |= ((c >> 1) & 0x1F) << (5 * j);
+                }
+                out[g] = w;
+            }
+        }
+        Scheme::Ams { base, k } if base.bits() == 5 => {
+            // Segmented: high-4 stream + shared-bit stream (1 bit / group).
+            let hi_words = codes.len().div_ceil(4);
+            for (i, &c) in codes.iter().enumerate() {
+                out[i / 4] |= ((c >> 1) & 0xF) << (4 * (i % 4));
+            }
+            for (g, grp) in codes.chunks(k).enumerate() {
+                out[hi_words + g / 16] |= (grp[0] & 1) << (g % 16);
+            }
+        }
+        Scheme::Ams { base, k } => {
+            // Generic: dense (bits-1)-bit high stream + shared-bit stream.
+            let hb = base.bits() - 1;
+            let hi_words = (codes.len() * hb as usize).div_ceil(16);
+            let mut w = BitWriter::new(&mut out[..hi_words]);
+            for &c in codes {
+                w.put(u32::from(c >> 1), hb);
+            }
+            for (g, grp) in codes.chunks(k).enumerate() {
+                out[hi_words + g / 16] |= (grp[0] & 1) << (g % 16);
+            }
+        }
+        Scheme::Fp(f) => {
+            let mut w = BitWriter::new(out);
+            for &c in codes {
+                w.put(u32::from(c), f.bits());
+            }
+        }
+        Scheme::Int { bits } => {
+            let mut w = BitWriter::new(out);
+            for &c in codes {
+                w.put(u32::from(c), bits);
+            }
+        }
+    }
+}
+
+fn pack_fixed(codes: &[u16], bits: u32, out: &mut [u16]) {
+    let per = (16 / bits) as usize;
+    let mask = (1u16 << bits) - 1;
+    for (i, &c) in codes.iter().enumerate() {
+        out[i / per] |= (c & mask) << (bits as usize * (i % per));
+    }
+}
+
+/// Unpack one row of a packed tensor back into full codes.
+pub fn unpack_row(scheme: Scheme, words: &[u16], cols: usize, out: &mut [u16]) {
+    match scheme {
+        Scheme::Fp16 => out[..cols].copy_from_slice(&words[..cols]),
+        Scheme::Fp(f) if f.bits() == 8 => unpack_fixed(words, 8, cols, out),
+        Scheme::Int { bits: 8 } => unpack_fixed(words, 8, cols, out),
+        Scheme::Int { bits: 4 } => unpack_fixed(words, 4, cols, out),
+        Scheme::Fp(f) if f.bits() == 6 => {
+            let hi_words = cols.div_ceil(4);
+            for (i, o) in out.iter_mut().enumerate().take(cols) {
+                let hi = (words[i / 4] >> (4 * (i % 4))) & 0xF;
+                let lo = (words[hi_words + i / 8] >> (2 * (i % 8))) & 0x3;
+                *o = (hi << 2) | lo;
+            }
+        }
+        Scheme::Fp(f) if f.bits() == 5 => {
+            let hi_words = cols.div_ceil(4);
+            for (i, o) in out.iter_mut().enumerate().take(cols) {
+                let hi = (words[i / 4] >> (4 * (i % 4))) & 0xF;
+                let lsb = (words[hi_words + i / 16] >> (i % 16)) & 1;
+                *o = (hi << 1) | lsb;
+            }
+        }
+        Scheme::Fp(f) if f.bits() == 4 => unpack_fixed(words, 4, cols, out),
+        Scheme::Ams { base, k } if base == FpFormat::E2M3 && k == 3 => {
+            for (i, o) in out.iter_mut().enumerate().take(cols) {
+                let w = words[i / 3];
+                let hi = (w >> (5 * (i % 3))) & 0x1F;
+                let shared = (w >> 15) & 1;
+                *o = (hi << 1) | shared;
+            }
+        }
+        Scheme::Ams { base, k } if base.bits() == 5 => {
+            // Group-outer loop: no per-element division by the runtime `k`.
+            let hi_words = cols.div_ceil(4);
+            let mut g = 0usize;
+            let mut i = 0usize;
+            while i < cols {
+                let shared = (words[hi_words + g / 16] >> (g % 16)) & 1;
+                let end = (i + k).min(cols);
+                while i < end {
+                    let hi = (words[i / 4] >> (4 * (i % 4))) & 0xF;
+                    out[i] = (hi << 1) | shared;
+                    i += 1;
+                }
+                g += 1;
+            }
+        }
+        Scheme::Ams { base, k } => {
+            let hb = base.bits() - 1;
+            let hi_words = (cols * hb as usize).div_ceil(16);
+            let mut r = BitReader::new(&words[..hi_words]);
+            for (i, o) in out.iter_mut().enumerate().take(cols) {
+                let hi = r.get(hb) as u16;
+                let g = i / k;
+                let shared = (words[hi_words + g / 16] >> (g % 16)) & 1;
+                *o = (hi << 1) | shared;
+            }
+        }
+        Scheme::Fp(f) => {
+            let mut r = BitReader::new(words);
+            for o in out.iter_mut().take(cols) {
+                *o = r.get(f.bits()) as u16;
+            }
+        }
+        Scheme::Int { bits } => {
+            let mut r = BitReader::new(words);
+            for o in out.iter_mut().take(cols) {
+                *o = r.get(bits) as u16;
+            }
+        }
+    }
+}
+
+fn unpack_fixed(words: &[u16], bits: u32, cols: usize, out: &mut [u16]) {
+    let per = (16 / bits) as usize;
+    let mask = (1u16 << bits) - 1;
+    for (i, o) in out.iter_mut().enumerate().take(cols) {
+        *o = (words[i / per] >> (bits as usize * (i % per))) & mask;
+    }
+}
+
+/// Unpack a whole tensor back into a `QuantizedTensor` (codes + per-channel
+/// scales). Shared-bit metadata is reconstructed from the codes.
+pub fn unpack(p: &PackedTensor) -> QuantizedTensor {
+    let fmt = p
+        .scheme
+        .fp_format()
+        .unwrap_or(FpFormat::E5M10);
+    let mut codes = vec![0u16; p.rows * p.cols];
+    for r in 0..p.rows {
+        unpack_row(
+            p.scheme,
+            p.row_words(r),
+            p.cols,
+            &mut codes[r * p.cols..(r + 1) * p.cols],
+        );
+    }
+    let shared_bits = match p.scheme {
+        Scheme::Ams { k, .. } => {
+            let mut bits = Vec::with_capacity(p.rows * p.cols.div_ceil(k));
+            for r in 0..p.rows {
+                for c0 in (0..p.cols).step_by(k) {
+                    bits.push((codes[r * p.cols + c0] & 1) as u8);
+                }
+            }
+            bits
+        }
+        _ => Vec::new(),
+    };
+    QuantizedTensor {
+        fmt,
+        scheme: p.scheme,
+        rows: p.rows,
+        cols: p.cols,
+        codes,
+        granularity: Granularity::PerChannel,
+        scales: p.scales.clone(),
+        shared_bits,
+        share_dim: ShareDim::Input,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sharing::quantize;
+    use crate::quant::QuantConfig;
+    use crate::tensor::{init, Tensor};
+    use crate::util::prng::Rng;
+    use crate::util::proptest::{run_prop, USize};
+
+    fn quantize_named(name: &str, rows: usize, cols: usize, seed: u64) -> QuantizedTensor {
+        let mut rng = Rng::new(seed);
+        let w = init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng);
+        quantize(&w, &QuantConfig::paper(Scheme::parse(name).unwrap()))
+    }
+
+    const SCHEMES: &[&str] = &[
+        "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4-e2m1", "fp8-e4m3", "fp5.33", "fp4.5",
+        "fp4.3", "fp4.25", "ams-e3m2-k4", "ams-e4m3-k2",
+    ];
+
+    #[test]
+    fn roundtrip_all_schemes() {
+        for name in SCHEMES {
+            let q = quantize_named(name, 5, 67, 42);
+            let p = pack(&q);
+            let u = unpack(&p);
+            assert_eq!(u.codes, q.codes, "{name}");
+            assert_eq!(u.scales, q.scales, "{name}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_fp16() {
+        // FP16 scheme: words are raw fp16 bit patterns.
+        use crate::formats::fp16::f32_to_fp16;
+        let codes: Vec<u16> = [0.5f32, -1.25, 3.0, 100.0]
+            .iter()
+            .map(|&x| f32_to_fp16(x))
+            .collect();
+        let mut out = vec![0u16; row_stride(Scheme::Fp16, 4)];
+        pack_row(Scheme::Fp16, &codes, &mut out);
+        let mut back = vec![0u16; 4];
+        unpack_row(Scheme::Fp16, &out, 4, &mut back);
+        assert_eq!(back, codes);
+    }
+
+    #[test]
+    fn bits_per_weight_converges() {
+        // At large, divisible cols the packed size matches the scheme's
+        // nominal bits/weight exactly.
+        let cases = [
+            ("fp6-e2m3", 6.0),
+            ("fp5-e2m2", 5.0),
+            ("fp5.33", 16.0 / 3.0),
+            ("fp4.5", 4.5),
+            ("fp4.25", 4.25),
+            ("fp4-e2m1", 4.0),
+            ("fp8-e4m3", 8.0),
+        ];
+        for (name, expect) in cases {
+            let q = quantize_named(name, 2, 768, 7); // 768 divisible by 3,4,16,k*16
+            let p = pack(&q);
+            let bpw = p.bits_per_weight();
+            assert!(
+                (bpw - expect).abs() < 1e-9,
+                "{name}: bpw={bpw}, expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp533_matches_paper_packing() {
+        // Paper §3.3: three weights + shared LSB fit one half-word.
+        let q = quantize_named("fp5.33", 1, 9, 3);
+        let p = pack(&q);
+        assert_eq!(p.row_stride, 3);
+        // Decode word 0 by hand.
+        let w = p.words[0];
+        for j in 0..3 {
+            let hi = (w >> (5 * j)) & 0x1F;
+            let shared = (w >> 15) & 1;
+            assert_eq!((hi << 1) | shared, q.codes[j]);
+        }
+    }
+
+    #[test]
+    fn fp425_matches_paper_packing() {
+        // Paper §3.2: 64 weights -> 16 u16 of 4-bit segments + 1 u16 of
+        // 16 shared LSBs.
+        let q = quantize_named("fp4.25", 1, 64, 4);
+        let p = pack(&q);
+        assert_eq!(p.row_stride, 16 + 1);
+        let hi_words = 16;
+        for i in 0..64 {
+            let hi = (p.words[i / 4] >> (4 * (i % 4))) & 0xF;
+            let g = i / 4;
+            let shared = (p.words[hi_words + g / 16] >> (g % 16)) & 1;
+            assert_eq!((hi << 1) | shared, q.codes[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn fp6_tcfpx_4_2_split() {
+        // 16 weights -> 4 high words + 2 low words = 6 memory accesses.
+        let q = quantize_named("fp6-e2m3", 1, 16, 5);
+        let p = pack(&q);
+        assert_eq!(p.row_stride, 4 + 2);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_shapes() {
+        run_prop(
+            "pack-roundtrip",
+            0xBEEF,
+            60,
+            &USize { lo: 1, hi: 130 },
+            |&cols| {
+                for name in SCHEMES {
+                    let q = quantize_named(name, 3, cols, cols as u64);
+                    let p = pack(&q);
+                    let u = unpack(&p);
+                    if u.codes != q.codes {
+                        return Err(format!("{name} cols={cols}: codes mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dequantize_after_roundtrip_identical() {
+        for name in ["fp5.33", "fp4.25", "fp6-e2m3"] {
+            let q = quantize_named(name, 4, 50, 6);
+            let dq1 = q.dequantize();
+            let dq2 = unpack(&pack(&q)).dequantize();
+            assert_eq!(dq1, dq2, "{name}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "per-group scales")]
+    fn per_group_scales_rejected() {
+        let mut rng = Rng::new(1);
+        let w = init::gaussian(&[2, 8], 0.0, 1.0, &mut rng);
+        let mut cfg = QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap());
+        cfg.granularity = Granularity::PerGroup(4);
+        let q = crate::quant::rtn::quantize_rtn(&w, cfg.scheme, cfg.granularity);
+        let _ = pack(&q);
+    }
+
+    #[test]
+    fn per_tensor_broadcasts() {
+        let mut rng = Rng::new(2);
+        let w = init::gaussian(&[3, 12], 0.0, 1.0, &mut rng);
+        let mut cfg = QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap());
+        cfg.granularity = Granularity::PerTensor;
+        let q = crate::quant::rtn::quantize_rtn(&w, cfg.scheme, cfg.granularity);
+        let p = pack(&q);
+        assert_eq!(p.scales.len(), 3);
+        assert!(p.scales.iter().all(|&s| s == p.scales[0]));
+        let dq = unpack(&p).dequantize();
+        let t = Tensor::from_vec(&[3, 12], dq.data().to_vec());
+        assert!(w.mse(&t) < 0.05);
+    }
+}

@@ -1,0 +1,151 @@
+//! Quantization pipeline (the paper's §3.1):
+//!
+//! 1. [`rtn`] — channel-wise round-to-nearest FPx quantization (Eqn. 1–2);
+//! 2. [`sharing`] — grouped mantissa-LSB sharing + adaptive searching;
+//! 3. [`error`] — MSE / SQNR metrics used by the search and the evaluation.
+
+pub mod error;
+pub mod rtn;
+pub mod sharing;
+
+use crate::formats::registry::Scheme;
+use crate::formats::FpFormat;
+use crate::tensor::Tensor;
+
+/// How scales are assigned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One scale for the whole tensor.
+    PerTensor,
+    /// One scale per output channel (row) — the paper's default.
+    PerChannel,
+    /// One scale per contiguous group of `g` weights along the input dim.
+    PerGroup(usize),
+}
+
+/// Which dimension mantissa-sharing groups run along.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ShareDim {
+    /// Along input channels (within a row) — the paper's choice, aligned
+    /// with the channel-wise pattern of activation outliers.
+    #[default]
+    Input,
+    /// Along output channels (down a column) — ablation A2.
+    Output,
+}
+
+/// How the shared LSB is applied to each member of a group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SharePolicy {
+    /// Overwrite the mantissa LSB of the RTN code (paper-literal
+    /// `G(FPx_i, m0)` from §3.1).
+    #[default]
+    SetLsb,
+    /// Re-round each weight to the *nearest* code whose LSB equals m0
+    /// (strictly dominates SetLsb; ablation A1 quantifies by how much).
+    Reround,
+}
+
+/// How the shared bit is chosen per group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SearchPolicy {
+    /// Try both values, keep the MSE-minimizing one (the paper's
+    /// "Adaptive Searching").
+    #[default]
+    AdaptiveMse,
+    /// Fix the shared bit to 0 (no search — ablation).
+    AlwaysZero,
+    /// Fix the shared bit to 1 (no search — ablation).
+    AlwaysOne,
+    /// Majority vote of the group's RTN LSBs (cheap heuristic — ablation).
+    Majority,
+}
+
+/// Full quantizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    pub scheme: Scheme,
+    pub granularity: Granularity,
+    pub share_dim: ShareDim,
+    pub share_policy: SharePolicy,
+    pub search_policy: SearchPolicy,
+}
+
+impl QuantConfig {
+    /// Paper defaults for a scheme: channel-wise scales, input-dim sharing,
+    /// SetLsb + adaptive MSE search.
+    pub fn paper(scheme: Scheme) -> QuantConfig {
+        QuantConfig {
+            scheme,
+            granularity: Granularity::PerChannel,
+            share_dim: ShareDim::Input,
+            share_policy: SharePolicy::SetLsb,
+            search_policy: SearchPolicy::AdaptiveMse,
+        }
+    }
+}
+
+/// A quantized 2-D weight tensor prior to bit-packing: one FPx code per
+/// weight plus scales. `codes` are row-major `[rows, cols]` and always hold
+/// the *full* FPx code (shared LSB already applied for AMS schemes).
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub fmt: FpFormat,
+    pub scheme: Scheme,
+    pub rows: usize,
+    pub cols: usize,
+    pub codes: Vec<u16>,
+    pub granularity: Granularity,
+    /// PerTensor → len 1; PerChannel → len rows; PerGroup(g) → rows*ceil(cols/g).
+    pub scales: Vec<f32>,
+    /// For AMS schemes: the chosen shared bit per group (row-major groups),
+    /// empty otherwise. Kept for packing and for the Pallas parity tests.
+    pub shared_bits: Vec<u8>,
+    pub share_dim: ShareDim,
+}
+
+impl QuantizedTensor {
+    #[inline]
+    pub fn scale_for(&self, r: usize, c: usize) -> f32 {
+        match self.granularity {
+            Granularity::PerTensor => self.scales[0],
+            Granularity::PerChannel => self.scales[r],
+            Granularity::PerGroup(g) => {
+                let groups_per_row = self.cols.div_ceil(g);
+                self.scales[r * groups_per_row + c / g]
+            }
+        }
+    }
+
+    /// Dequantize back to f32 (DeQ of Eqn. 2).
+    pub fn dequantize(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let code = self.codes[r * self.cols + c];
+                out.set2(r, c, self.fmt.decode(code) * self.scale_for(r, c));
+            }
+        }
+        out
+    }
+
+    /// Storage bits per weight for this tensor (codes + shared bits, not
+    /// counting scales — constant across schemes).
+    pub fn bits_per_weight(&self) -> f64 {
+        self.scheme.bits_per_weight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_paper_defaults() {
+        let c = QuantConfig::paper(Scheme::parse("fp4.25").unwrap());
+        assert_eq!(c.granularity, Granularity::PerChannel);
+        assert_eq!(c.share_dim, ShareDim::Input);
+        assert_eq!(c.share_policy, SharePolicy::SetLsb);
+        assert_eq!(c.search_policy, SearchPolicy::AdaptiveMse);
+    }
+}

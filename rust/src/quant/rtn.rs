@@ -1,0 +1,230 @@
+//! Channel-wise round-to-nearest FPx quantization — Eqn. (1)/(2) of the
+//! paper: `Q(W) = Round(W / s_q)`, `s_q = max|W| / M` with `M` the format's
+//! max-normal, applied per tensor / channel / group.
+
+use super::{Granularity, QuantizedTensor, ShareDim};
+use crate::formats::registry::Scheme;
+use crate::formats::FpFormat;
+use crate::tensor::Tensor;
+
+/// Compute the scale for a slice of weights: `max|w| / M`. An all-zero
+/// slice gets scale 1.0 (any non-zero value works; codes will all be 0).
+pub fn scale_for_slice(w: impl Iterator<Item = f32>, max_normal: f32) -> f32 {
+    let amax = w.fold(0.0f32, |m, x| m.max(x.abs()));
+    if amax == 0.0 {
+        1.0
+    } else {
+        amax / max_normal
+    }
+}
+
+/// Compute all scales for a [rows, cols] tensor under a granularity.
+pub fn compute_scales(w: &Tensor, fmt: FpFormat, gran: Granularity) -> Vec<f32> {
+    let maxn = fmt.max_normal();
+    match gran {
+        Granularity::PerTensor => vec![scale_for_slice(w.data().iter().copied(), maxn)],
+        Granularity::PerChannel => (0..w.rows())
+            .map(|r| scale_for_slice(w.row(r).iter().copied(), maxn))
+            .collect(),
+        Granularity::PerGroup(g) => {
+            assert!(g > 0);
+            let groups_per_row = w.cols().div_ceil(g);
+            let mut scales = Vec::with_capacity(w.rows() * groups_per_row);
+            for r in 0..w.rows() {
+                let row = w.row(r);
+                for chunk in row.chunks(g) {
+                    scales.push(scale_for_slice(chunk.iter().copied(), maxn));
+                }
+            }
+            scales
+        }
+    }
+}
+
+/// RTN-quantize a [rows, cols] weight tensor to FPx codes (no sharing yet).
+pub fn quantize_rtn(w: &Tensor, scheme: Scheme, gran: Granularity) -> QuantizedTensor {
+    let fmt = scheme
+        .fp_format()
+        .expect("quantize_rtn requires a floating-point scheme");
+    assert_eq!(w.ndim(), 2, "quantize_rtn expects [out_channels, in_channels]");
+    let (rows, cols) = (w.rows(), w.cols());
+    let scales = compute_scales(w, fmt, gran);
+    let mut codes = vec![0u16; rows * cols];
+
+    let scale_at = |r: usize, c: usize| -> f32 {
+        match gran {
+            Granularity::PerTensor => scales[0],
+            Granularity::PerChannel => scales[r],
+            Granularity::PerGroup(g) => scales[r * cols.div_ceil(g) + c / g],
+        }
+    };
+
+    for r in 0..rows {
+        let row = w.row(r);
+        for c in 0..cols {
+            let s = scale_at(r, c);
+            codes[r * cols + c] = fmt.encode_rtn(row[c] / s);
+        }
+    }
+
+    QuantizedTensor {
+        fmt,
+        scheme,
+        rows,
+        cols,
+        codes,
+        granularity: gran,
+        scales,
+        shared_bits: Vec::new(),
+        share_dim: ShareDim::Input,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::{run_prop, VecF32};
+
+    fn fp6() -> Scheme {
+        Scheme::parse("fp6-e2m3").unwrap()
+    }
+
+    #[test]
+    fn scale_is_amax_over_maxnormal() {
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, -3.0, 0.5, 0.25, 0.1, -0.2]);
+        let scales = compute_scales(&w, FpFormat::E2M3, Granularity::PerChannel);
+        assert_eq!(scales, vec![3.0 / 7.5, 0.25 / 7.5]);
+        let st = compute_scales(&w, FpFormat::E2M3, Granularity::PerTensor);
+        assert_eq!(st, vec![3.0 / 7.5]);
+    }
+
+    #[test]
+    fn max_value_maps_to_max_code() {
+        // The channel max must quantize exactly to ±max_normal * s.
+        let w = Tensor::from_vec(&[1, 4], vec![0.1, -2.0, 0.7, 1.3]);
+        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        let dq = q.dequantize();
+        assert!((dq.at2(0, 1) - (-2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_tensor_roundtrips() {
+        let w = Tensor::zeros(&[3, 5]);
+        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        assert_eq!(q.dequantize(), w);
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        // For per-channel RTN, |w - dq| <= 0.5 ulp of the local exponent;
+        // globally it is bounded by s * (max step) / 2.
+        let mut rng = Rng::new(9);
+        let w = init::gaussian(&[8, 64], 0.0, 0.02, &mut rng);
+        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        let dq = q.dequantize();
+        for r in 0..8 {
+            let s = q.scales[r];
+            // Largest gap between adjacent e2m3 values is 0.5 (7.0 -> 7.5).
+            let bound = s * 0.5 / 2.0 + 1e-9;
+            for c in 0..64 {
+                assert!(
+                    (w.at2(r, c) - dq.at2(r, c)).abs() <= bound,
+                    "r={r} c={c}: {} vs {}",
+                    w.at2(r, c),
+                    dq.at2(r, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        // Quantizing an already-dequantized tensor is exact (same grid).
+        let mut rng = Rng::new(10);
+        let w = init::gaussian(&[4, 32], 0.0, 1.0, &mut rng);
+        let q1 = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        let d1 = q1.dequantize();
+        let q2 = quantize_rtn(&d1, fp6(), Granularity::PerChannel);
+        let d2 = q2.dequantize();
+        assert!(d1.max_abs_diff(&d2) < 1e-6);
+    }
+
+    #[test]
+    fn per_group_scales_shape() {
+        let mut rng = Rng::new(11);
+        let w = init::gaussian(&[3, 10], 0.0, 1.0, &mut rng);
+        let q = quantize_rtn(&w, fp6(), Granularity::PerGroup(4));
+        assert_eq!(q.scales.len(), 3 * 3); // ceil(10/4) = 3 groups per row
+        let dq = q.dequantize();
+        assert!(w.mse(&dq) < 0.02);
+    }
+
+    #[test]
+    fn per_group_beats_per_tensor() {
+        // Finer granularity must not increase MSE (on outlier-y data).
+        let mut rng = Rng::new(12);
+        let mut w = init::gaussian(&[4, 64], 0.0, 0.02, &mut rng);
+        // Inject channel-magnitude outliers.
+        for c in (0..64).step_by(16) {
+            for r in 0..4 {
+                let v = w.at2(r, c) * 50.0;
+                w.set2(r, c, v);
+            }
+        }
+        let mt = quantize_rtn(&w, fp6(), Granularity::PerTensor)
+            .dequantize()
+            .mse(&w);
+        let mc = quantize_rtn(&w, fp6(), Granularity::PerChannel)
+            .dequantize()
+            .mse(&w);
+        let mg = quantize_rtn(&w, fp6(), Granularity::PerGroup(16))
+            .dequantize()
+            .mse(&w);
+        assert!(mc <= mt * 1.001, "channel {mc} vs tensor {mt}");
+        assert!(mg <= mc * 1.001, "group {mg} vs channel {mc}");
+    }
+
+    #[test]
+    fn prop_dequant_within_range() {
+        // Property: dequantized values never exceed the channel amax.
+        run_prop(
+            "dequant-range",
+            77,
+            100,
+            &VecF32 {
+                min_len: 4,
+                max_len: 128,
+                scale: 1.0,
+            },
+            |v| {
+                let cols = v.len();
+                let w = Tensor::from_vec(&[1, cols], v.clone());
+                let amax = w.abs_max();
+                let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+                let dq = q.dequantize();
+                for (i, &x) in dq.data().iter().enumerate() {
+                    if x.abs() > amax * (1.0 + 1e-6) {
+                        return Err(format!("dq[{i}]={x} exceeds amax={amax}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        // More mantissa bits must not hurt: e2m3 <= e2m2 <= e2m1 in MSE.
+        let mut rng = Rng::new(13);
+        let w = init::gaussian(&[8, 128], 0.0, 0.02, &mut rng);
+        let mse = |name: &str| {
+            quantize_rtn(&w, Scheme::parse(name).unwrap(), Granularity::PerChannel)
+                .dequantize()
+                .mse(&w)
+        };
+        let (m6, m5, m4) = (mse("fp6-e2m3"), mse("fp5-e2m2"), mse("fp4-e2m1"));
+        assert!(m6 < m5 && m5 < m4, "m6={m6} m5={m5} m4={m4}");
+    }
+}

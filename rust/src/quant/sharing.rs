@@ -1,0 +1,338 @@
+//! Mantissa-bit sharing + adaptive searching (the paper's §3.1, Fig. 1).
+//!
+//! After RTN quantization to FPx, groups of `k` codes share one mantissa
+//! LSB. For each group the shared bit `m0*` is chosen to minimize
+//!
+//! ```text
+//! m0* = argmin_{m0 ∈ {0,1}} Σ_i (DeQ(G(FPx_i, m0)) − FP16_i)²
+//! ```
+//!
+//! where `G` either overwrites the code's LSB (paper-literal `SetLsb`) or
+//! re-rounds to the nearest code with that LSB (`Reround`, ablation A1).
+
+use super::rtn::quantize_rtn;
+use super::{QuantConfig, QuantizedTensor, SearchPolicy, ShareDim, SharePolicy};
+use crate::formats::registry::Scheme;
+use crate::formats::FpFormat;
+use crate::tensor::Tensor;
+
+/// Set the mantissa LSB of a code (the paper's `G(FPx_i, m0)`).
+#[inline]
+pub fn set_lsb(code: u16, m0: u16) -> u16 {
+    (code & !1) | m0
+}
+
+/// Nearest code to `target` (pre-scale domain) whose mantissa LSB is `m0`.
+/// The magnitude grid is monotone in the code's magnitude bits and the LSB
+/// alternates along it, so the answer is the RTN code itself or one of its
+/// magnitude neighbours.
+pub fn nearest_code_with_lsb(fmt: FpFormat, target: f32, m0: u16) -> u16 {
+    let c = fmt.encode_rtn(target);
+    if c & 1 == m0 {
+        return c;
+    }
+    let mag_bits = fmt.ebits + fmt.mbits;
+    let mag_mask: u16 = ((1u32 << mag_bits) - 1) as u16;
+    let sign = c & !mag_mask;
+    let mc = c & mag_mask;
+    let lo = if mc == 0 { None } else { Some(mc - 1) };
+    let hi = if mc == mag_mask { None } else { Some(mc + 1) };
+    match (lo, hi) {
+        (Some(l), Some(h)) => {
+            let vl = fmt.decode(sign | l).abs();
+            let vh = fmt.decode(sign | h).abs();
+            let t = target.abs();
+            if (t - vl).abs() <= (vh - t).abs() {
+                sign | l
+            } else {
+                sign | h
+            }
+        }
+        (Some(l), None) => sign | l,
+        (None, Some(h)) => sign | h,
+        (None, None) => unreachable!("format with one magnitude code"),
+    }
+}
+
+/// Index lists for each sharing group of a [rows, cols] tensor.
+/// Groups never straddle rows (Input) / columns (Output); the tail group of
+/// a line may be shorter than `k`.
+fn group_indices(rows: usize, cols: usize, k: usize, dim: ShareDim) -> Vec<Vec<usize>> {
+    let mut groups = Vec::new();
+    match dim {
+        ShareDim::Input => {
+            for r in 0..rows {
+                for c0 in (0..cols).step_by(k) {
+                    groups.push((c0..(c0 + k).min(cols)).map(|c| r * cols + c).collect());
+                }
+            }
+        }
+        ShareDim::Output => {
+            for r0 in (0..rows).step_by(k) {
+                for c in 0..cols {
+                    groups.push((r0..(r0 + k).min(rows)).map(|r| r * cols + c).collect());
+                }
+            }
+        }
+    }
+    groups
+}
+
+/// Number of sharing groups for a given geometry.
+pub fn group_count(rows: usize, cols: usize, k: usize, dim: ShareDim) -> usize {
+    match dim {
+        ShareDim::Input => rows * cols.div_ceil(k),
+        ShareDim::Output => rows.div_ceil(k) * cols,
+    }
+}
+
+/// Apply mantissa sharing in place. `w` is the original FP16/f32 tensor the
+/// MSE search compares against.
+pub fn apply_sharing(q: &mut QuantizedTensor, w: &Tensor, k: usize, cfg: &QuantConfig) {
+    assert!(k >= 2, "sharing needs k >= 2");
+    assert_eq!(w.shape(), [q.rows, q.cols]);
+    let fmt = q.fmt;
+    let groups = group_indices(q.rows, q.cols, k, cfg.share_dim);
+    let mut shared_bits = Vec::with_capacity(groups.len());
+    let wd = w.data();
+
+    // Candidate code for weight `idx` under shared bit `m0`.
+    let candidate = |q: &QuantizedTensor, idx: usize, m0: u16| -> u16 {
+        match cfg.share_policy {
+            SharePolicy::SetLsb => set_lsb(q.codes[idx], m0),
+            SharePolicy::Reround => {
+                let (r, c) = (idx / q.cols, idx % q.cols);
+                let s = q.scale_for(r, c);
+                nearest_code_with_lsb(fmt, wd[idx] / s, m0)
+            }
+        }
+    };
+
+    for grp in &groups {
+        let m0 = match cfg.search_policy {
+            SearchPolicy::AlwaysZero => 0,
+            SearchPolicy::AlwaysOne => 1,
+            SearchPolicy::Majority => {
+                let ones: usize = grp.iter().map(|&i| (q.codes[i] & 1) as usize).sum();
+                u16::from(ones * 2 > grp.len())
+            }
+            SearchPolicy::AdaptiveMse => {
+                // Try both; keep the MSE-minimizing shared bit (ties -> 0).
+                let mut err = [0f64; 2];
+                for (m0, e) in err.iter_mut().enumerate() {
+                    for &idx in grp {
+                        let (r, c) = (idx / q.cols, idx % q.cols);
+                        let s = q.scale_for(r, c);
+                        let cand = candidate(q, idx, m0 as u16);
+                        let d = (fmt.decode(cand) * s - wd[idx]) as f64;
+                        *e += d * d;
+                    }
+                }
+                u16::from(err[1] < err[0])
+            }
+        };
+        for &idx in grp {
+            q.codes[idx] = candidate(q, idx, m0);
+        }
+        shared_bits.push(m0 as u8);
+    }
+    q.shared_bits = shared_bits;
+    q.share_dim = cfg.share_dim;
+}
+
+/// Full AMS pipeline: channel-wise RTN then sharing (if the scheme is AMS).
+/// Plain FP schemes just RTN. Panics on `Fp16`/`Int` (handled elsewhere).
+pub fn quantize(w: &Tensor, cfg: &QuantConfig) -> QuantizedTensor {
+    match cfg.scheme {
+        Scheme::Fp(_) => quantize_rtn(w, cfg.scheme, cfg.granularity),
+        Scheme::Ams { k, .. } => {
+            let mut q = quantize_rtn(w, cfg.scheme, cfg.granularity);
+            apply_sharing(&mut q, w, k, cfg);
+            q
+        }
+        other => panic!("quantize() does not handle {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::{run_prop, USize};
+
+    fn cfg(name: &str) -> QuantConfig {
+        QuantConfig::paper(Scheme::parse(name).unwrap())
+    }
+
+    fn rand_w(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng)
+    }
+
+    #[test]
+    fn group_lsbs_are_shared() {
+        let w = rand_w(4, 33, 1); // 33 -> tail group of len 3 for k=3... 33%3=0; use 32
+        let w = Tensor::from_vec(&[4, 33], w.into_vec());
+        let c = cfg("fp5.33");
+        let q = quantize(&w, &c);
+        // Every group of k=3 along the row shares one LSB.
+        for r in 0..4 {
+            for c0 in (0..33).step_by(3) {
+                let lsbs: Vec<u16> = (c0..(c0 + 3).min(33))
+                    .map(|cc| q.codes[r * 33 + cc] & 1)
+                    .collect();
+                assert!(lsbs.windows(2).all(|p| p[0] == p[1]), "r={r} c0={c0}: {lsbs:?}");
+            }
+        }
+        assert_eq!(q.shared_bits.len(), 4 * 11);
+    }
+
+    #[test]
+    fn adaptive_no_worse_than_fixed() {
+        let w = rand_w(8, 64, 2);
+        for scheme in ["fp5.33", "fp4.25", "fp4.5"] {
+            let mut c = cfg(scheme);
+            c.search_policy = SearchPolicy::AdaptiveMse;
+            let adaptive = quantize(&w, &c).dequantize().mse(&w);
+            c.search_policy = SearchPolicy::AlwaysZero;
+            let zero = quantize(&w, &c).dequantize().mse(&w);
+            c.search_policy = SearchPolicy::AlwaysOne;
+            let one = quantize(&w, &c).dequantize().mse(&w);
+            c.search_policy = SearchPolicy::Majority;
+            let maj = quantize(&w, &c).dequantize().mse(&w);
+            assert!(adaptive <= zero + 1e-15, "{scheme}: {adaptive} vs zero {zero}");
+            assert!(adaptive <= one + 1e-15, "{scheme}: {adaptive} vs one {one}");
+            assert!(adaptive <= maj + 1e-15, "{scheme}: {adaptive} vs majority {maj}");
+        }
+    }
+
+    #[test]
+    fn reround_no_worse_than_setlsb() {
+        let w = rand_w(8, 96, 3);
+        for scheme in ["fp5.33", "fp4.25"] {
+            let mut c = cfg(scheme);
+            c.share_policy = SharePolicy::SetLsb;
+            let setlsb = quantize(&w, &c).dequantize().mse(&w);
+            c.share_policy = SharePolicy::Reround;
+            let reround = quantize(&w, &c).dequantize().mse(&w);
+            assert!(reround <= setlsb + 1e-15, "{scheme}: reround {reround} vs setlsb {setlsb}");
+        }
+    }
+
+    #[test]
+    fn sharing_cost_ordering_vs_base_formats() {
+        // FPx with sharing sits between FPx and FP(x-1):
+        //   mse(fp6) <= mse(fp5.33) <= mse(fp5)-ish. The right inequality is
+        // statistical, the left is strict (sharing only removes precision).
+        let w = rand_w(16, 192, 4);
+        let m_fp6 = quantize(&w, &cfg("fp6-e2m3")).dequantize().mse(&w);
+        let m_533 = quantize(&w, &cfg("fp5.33")).dequantize().mse(&w);
+        let m_fp5 = quantize(&w, &cfg("fp5-e2m2")).dequantize().mse(&w);
+        let m_425 = quantize(&w, &cfg("fp4.25")).dequantize().mse(&w);
+        let m_fp4 = quantize(&w, &cfg("fp4-e2m1")).dequantize().mse(&w);
+        assert!(m_fp6 <= m_533, "fp6 {m_fp6} vs fp5.33 {m_533}");
+        assert!(m_533 <= m_fp5 * 1.5, "fp5.33 {m_533} vs fp5 {m_fp5}");
+        assert!(m_fp5 <= m_425, "fp5 {m_fp5} vs fp4.25 {m_425}");
+        assert!(m_425 < m_fp4, "fp4.25 {m_425} must beat fp4 {m_fp4}");
+    }
+
+    #[test]
+    fn nearest_code_with_lsb_is_nearest() {
+        let fmt = FpFormat::E2M3;
+        let vals = fmt.all_values();
+        let mut rng = Rng::new(5);
+        for _ in 0..2000 {
+            let t = rng.uniform_range(-8.0, 8.0);
+            for m0 in 0..2u16 {
+                let c = nearest_code_with_lsb(fmt, t, m0);
+                assert_eq!(c & 1, m0);
+                let v = fmt.decode(c);
+                // No representable value with this LSB is closer.
+                for &u in &vals {
+                    let cu = fmt.encode_rtn(u);
+                    if cu & 1 == m0 && (u - t).abs() + 1e-6 < (v - t).abs() {
+                        panic!("t={t} m0={m0}: got {v}, but {u} closer");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn output_dim_sharing_groups() {
+        let w = rand_w(9, 5, 6);
+        let mut c = cfg("fp4.25"); // k = 4
+        c.share_dim = ShareDim::Output;
+        let q = quantize(&w, &c);
+        assert_eq!(q.shared_bits.len(), 9usize.div_ceil(4) * 5);
+        // Groups run down columns.
+        for c0 in 0..5 {
+            for r0 in (0..9).step_by(4) {
+                let lsbs: Vec<u16> = (r0..(r0 + 4).min(9))
+                    .map(|r| q.codes[r * 5 + c0] & 1)
+                    .collect();
+                assert!(lsbs.windows(2).all(|p| p[0] == p[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn tail_groups_handled() {
+        // cols=7, k=4 -> groups of 4 and 3 per row.
+        let w = rand_w(2, 7, 7);
+        let q = quantize(&w, &cfg("fp4.25"));
+        assert_eq!(q.shared_bits.len(), 2 * 2);
+        let dq = q.dequantize();
+        assert_eq!(dq.shape(), &[2, 7]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = rand_w(4, 24, 8);
+        let a = quantize(&w, &cfg("fp5.33"));
+        let b = quantize(&w, &cfg("fp5.33"));
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.shared_bits, b.shared_bits);
+    }
+
+    #[test]
+    fn prop_group_count_matches() {
+        run_prop(
+            "group-count",
+            9,
+            200,
+            &USize { lo: 1, hi: 50 },
+            |&cols| {
+                for k in [2usize, 3, 4] {
+                    for rows in [1usize, 3, 8] {
+                        let expected = group_count(rows, cols, k, ShareDim::Input);
+                        let got = group_indices(rows, cols, k, ShareDim::Input).len();
+                        if expected != got {
+                            return Err(format!("rows={rows} cols={cols} k={k}: {expected} != {got}"));
+                        }
+                        let eo = group_count(rows, cols, k, ShareDim::Output);
+                        let go = group_indices(rows, cols, k, ShareDim::Output).len();
+                        if eo != go {
+                            return Err(format!("output rows={rows} cols={cols} k={k}: {eo} != {go}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn setlsb_worked_example() {
+        // Single group, hand-checked. e2m2 positive values:
+        // 0,0.25,0.5,0.75,1.0,1.25,1.5,1.75,2,2.5,3,3.5,4,5,6,7 (codes 0..15)
+        // Weights w = [7.0, 5.0, 2.5, 2.5] scale: amax=7 -> s=1 (M=7).
+        // RTN codes: 15(7.0), 13(5.0), 9(2.5), 9(2.5); LSBs = 1,1,1,1.
+        // m0=1 gives zero extra error -> adaptive must pick 1 and stay exact.
+        let w = Tensor::from_vec(&[1, 4], vec![7.0, 5.0, 2.5, 2.5]);
+        let q = quantize(&w, &cfg("fp4.25"));
+        assert_eq!(q.shared_bits, vec![1]);
+        assert_eq!(q.dequantize().data(), &[7.0, 5.0, 2.5, 2.5]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Bit-level FPx → FP16 restoration (SHIFT/AND/OR only, plus one
+//! leading-zeros normalization for subnormal inputs).
+//!
+//! For a normal input (E ≠ 0) the mapping is exactly the paper's: keep the
+//! sign, rebias the exponent into fp16's bias-15, left-align the mantissa:
+//!
+//! ```text
+//! fp16 = s<<15 | (E - bias + 15)<<10 | man<<(10-m)
+//! ```
+//!
+//! Subnormal inputs (E = 0) have value `man · 2^(1-bias-m)`; they become
+//! *normal* fp16 values for every format with bias ≤ 13, via a shift that
+//! floats the mantissa's leading one into the implicit position. Outputs
+//! that would overflow fp16 (only possible for e5m2's top codes) saturate
+//! to ±max-half; outputs below fp16's normal range land in fp16 subnormals.
+
+use crate::formats::FpFormat;
+
+/// Convert one FPx code to IEEE half bits. Exact for every code whose value
+/// is representable in fp16 (all formats used by the paper).
+pub fn code_to_fp16_bits(fmt: FpFormat, code: u16) -> u16 {
+    let s = fmt.sign_of(code);
+    let e = fmt.exp_of(code) as i32;
+    let man = fmt.man_of(code) as u32;
+    let m = fmt.mbits as i32;
+    let sign = s << 15;
+
+    if e != 0 {
+        // Normal: rebias and left-align mantissa.
+        let e16 = e - fmt.bias() + 15;
+        if e16 >= 0x1F {
+            return sign | 0x7BFF; // saturate (no inf in the source system)
+        }
+        debug_assert!(e16 >= 1, "normal input must stay normal in fp16");
+        return sign | ((e16 as u16) << 10) | ((man as u16) << (10 - m));
+    }
+    if man == 0 {
+        return sign; // ±0
+    }
+    // Subnormal: value = man * 2^(1 - bias - m). Normalize.
+    let p = 31 - man.leading_zeros() as i32; // index of leading one
+    let e16 = (1 - fmt.bias() - m + p) + 15;
+    if e16 >= 1 {
+        // Normal fp16: drop the leading one, left-align the rest.
+        let frac = (man & !(1u32 << p)) as u16;
+        sign | ((e16 as u16) << 10) | (frac << (10 - p))
+    } else {
+        // fp16 subnormal: value = man · 2^(1-bias-m) = man16 · 2^-24, so
+        // man16 = man << (1 - bias - m + 24).
+        let shift = 1 - fmt.bias() - m + 24;
+        if shift >= 0 {
+            sign | ((man << shift) as u16)
+        } else {
+            sign | ((man >> (-shift)) as u16)
+        }
+    }
+}
+
+/// Restore a slice of codes into fp16 bit patterns.
+pub fn restore_fp16(fmt: FpFormat, codes: &[u16], out: &mut [u16]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = code_to_fp16_bits(fmt, c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::fp16::{f32_to_fp16, fp16_to_f32};
+
+    const FORMATS: &[FpFormat] = &[
+        FpFormat::E2M1,
+        FpFormat::E2M2,
+        FpFormat::E2M3,
+        FpFormat::E3M2,
+        FpFormat::E4M3,
+    ];
+
+    #[test]
+    fn exhaustive_exact_vs_decode() {
+        // Every code of every paper format restores to the exact value.
+        for &f in FORMATS {
+            for code in 0..f.code_count() as u16 {
+                let bits = code_to_fp16_bits(f, code);
+                let got = fp16_to_f32(bits);
+                let want = f.decode(code);
+                assert_eq!(
+                    got,
+                    want,
+                    "{}: code {code:#x} -> {bits:#06x} = {got}, want {want}",
+                    f.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_f32_to_fp16_path() {
+        // bitops output == converting the decoded f32 through the generic
+        // fp16 encoder (i.e. no double rounding anywhere).
+        for &f in FORMATS {
+            for code in 0..f.code_count() as u16 {
+                let direct = code_to_fp16_bits(f, code);
+                let via_f32 = f32_to_fp16(f.decode(code));
+                // ±0 signs must agree too.
+                assert_eq!(direct, via_f32, "{} code {code:#x}", f.name());
+            }
+        }
+    }
+
+    #[test]
+    fn e5m2_saturates_not_inf() {
+        let f = FpFormat::E5M2;
+        // Top codes of e5m2 exceed half's max normal; we saturate.
+        let top = f.make_code(0, 0x1F, 0x3);
+        let bits = code_to_fp16_bits(f, top);
+        assert_eq!(bits, 0x7BFF);
+        let neg = f.make_code(1, 0x1F, 0x3);
+        assert_eq!(code_to_fp16_bits(f, neg), 0xFBFF);
+        // All non-overflowing e5m2 codes are exact (incl. fp16 subnormals).
+        for code in 0..f.code_count() as u16 {
+            let v = f.decode(code);
+            if v.abs() <= 65504.0 {
+                assert_eq!(fp16_to_f32(code_to_fp16_bits(f, code)), v, "code {code:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_keep_sign() {
+        let f = FpFormat::E2M3;
+        assert_eq!(code_to_fp16_bits(f, f.make_code(0, 0, 0)), 0x0000);
+        assert_eq!(code_to_fp16_bits(f, f.make_code(1, 0, 0)), 0x8000);
+    }
+
+    #[test]
+    fn slice_restore() {
+        let f = FpFormat::E2M2;
+        let codes: Vec<u16> = (0..f.code_count() as u16).collect();
+        let mut out = vec![0u16; codes.len()];
+        restore_fp16(f, &codes, &mut out);
+        for (i, &b) in out.iter().enumerate() {
+            assert_eq!(fp16_to_f32(b), f.decode(i as u16));
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Table-driven restoration: tiny per-format lookup tables (≤256 entries)
+//! mapping FPx codes to fp16 bits or f32 values. On a TPU this is the
+//! VMEM-resident gather the Pallas kernel uses; on CPU it is the fastest
+//! dequant primitive for the GEMV hot path.
+
+use super::bitops::code_to_fp16_bits;
+use crate::formats::fp16::fp16_to_f32;
+use crate::formats::FpFormat;
+
+/// code → fp16 bits table.
+#[derive(Clone, Debug)]
+pub struct Fp16Lut {
+    pub fmt: FpFormat,
+    pub table: Vec<u16>,
+}
+
+impl Fp16Lut {
+    pub fn new(fmt: FpFormat) -> Fp16Lut {
+        Fp16Lut {
+            fmt,
+            table: (0..fmt.code_count() as u16)
+                .map(|c| code_to_fp16_bits(fmt, c))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, code: u16) -> u16 {
+        self.table[code as usize]
+    }
+}
+
+/// code → f32 table (dequant target of the CPU kernels; one more widening
+/// than the paper's fp16 target, with identical values).
+#[derive(Clone, Debug)]
+pub struct F32Lut {
+    pub fmt: FpFormat,
+    pub table: Vec<f32>,
+}
+
+impl F32Lut {
+    pub fn new(fmt: FpFormat) -> F32Lut {
+        F32Lut {
+            fmt,
+            table: (0..fmt.code_count() as u16)
+                .map(|c| fp16_to_f32(code_to_fp16_bits(fmt, c)))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, code: u16) -> f32 {
+        self.table[code as usize]
+    }
+
+    /// Table sliced for direct indexing in hot loops.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_matches_bitops() {
+        for f in [FpFormat::E2M1, FpFormat::E2M2, FpFormat::E2M3, FpFormat::E3M2, FpFormat::E4M3] {
+            let l16 = Fp16Lut::new(f);
+            let l32 = F32Lut::new(f);
+            assert_eq!(l16.table.len(), f.code_count());
+            for code in 0..f.code_count() as u16 {
+                assert_eq!(l16.get(code), code_to_fp16_bits(f, code));
+                assert_eq!(l32.get(code), f.decode(code), "{} {code}", f.name());
+            }
+        }
+    }
+
+    #[test]
+    fn table_sizes_are_small() {
+        // The paper's restoration tables must fit in registers/VMEM:
+        // <= 2^8 entries for every format we pack.
+        for f in [FpFormat::E2M1, FpFormat::E2M2, FpFormat::E2M3, FpFormat::E3M2, FpFormat::E4M3] {
+            assert!(f.code_count() <= 256);
+        }
+    }
+}

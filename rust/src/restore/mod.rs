@@ -1,0 +1,19 @@
+//! Fast restoration of FPx codes to FP16 (paper §3.2, Figure 4).
+//!
+//! Two interchangeable paths, benchmarked against each other (ablation A4):
+//!
+//! - [`bitops`]: pure SHIFT/AND/OR reconstruction of the FP16 bit pattern —
+//!   the paper's register-level scheme (normals are a rebias + shift;
+//!   subnormals are normalized with a leading-zeros shift);
+//! - [`lut`]: per-format lookup tables (code → fp16 bits, code → f32),
+//!   which is how a SIMT/VPU kernel would realize the same mapping with a
+//!   small VMEM-resident table.
+//!
+//! Both are verified exhaustively against `FpFormat::decode` for every code
+//! of every format.
+
+pub mod bitops;
+pub mod lut;
+
+pub use bitops::code_to_fp16_bits;
+pub use lut::{F32Lut, Fp16Lut};

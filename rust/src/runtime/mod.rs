@@ -1,0 +1,159 @@
+//! PJRT runtime: loads AOT artifacts (HLO *text* emitted by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client from
+//! the L3 hot path. Python never runs at serving time.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Artifacts are compiled once and cached by path; the coordinator calls
+//! [`Executable::run_linear`] with packed u32 words + scales + activations.
+
+use crate::pack::PackedTensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Shared PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, usize>>,
+    executables: Mutex<Vec<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            executables: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by canonical path).
+    pub fn load(&self, path: &Path) -> Result<Executable<'_>> {
+        let canon = path
+            .canonicalize()
+            .with_context(|| format!("artifact not found: {}", path.display()))?;
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(&idx) = cache.get(&canon) {
+                return Ok(Executable { rt: self, idx });
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            canon
+                .to_str()
+                .context("artifact path is not valid UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", canon.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", canon.display()))?;
+        let mut exes = self.executables.lock().unwrap();
+        exes.push(exe);
+        let idx = exes.len() - 1;
+        self.cache.lock().unwrap().insert(canon, idx);
+        Ok(Executable { rt: self, idx })
+    }
+
+    fn execute(&self, idx: usize, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let exes = self.executables.lock().unwrap();
+        let exe = &exes[idx];
+        let result = exe.execute::<xla::Literal>(args).context("execute")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        Ok(lit)
+    }
+}
+
+/// A compiled artifact handle.
+pub struct Executable<'a> {
+    rt: &'a Runtime,
+    idx: usize,
+}
+
+impl<'a> Executable<'a> {
+    /// Raw execution: args in, first output literal out (artifacts are
+    /// lowered with `return_tuple=True`; callers unwrap the tuple).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        self.rt.execute(self.idx, args)
+    }
+
+    /// Run an AOT dequant-linear artifact:
+    /// `(packed u32 [rows, w32], scales f32 [rows], x f32 [batch, cols])
+    ///  -> y f32 [batch, rows]`.
+    pub fn run_linear(&self, packed: &PackedTensor, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let words32 = pack_words_u32(packed);
+        let w32_stride = packed.row_stride.div_ceil(2);
+        let w = xla::Literal::vec1(words32.as_slice())
+            .reshape(&[packed.rows as i64, w32_stride as i64])?;
+        let s = xla::Literal::vec1(packed.scales.as_slice()).reshape(&[packed.rows as i64])?;
+        let xs = xla::Literal::vec1(x).reshape(&[batch as i64, packed.cols as i64])?;
+        let out = self.run(&[w, s, xs])?;
+        let out = out.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Repack a PackedTensor's u16 words into little-endian u32 pairs, the
+/// dtype the Pallas kernel consumes (the xla crate exposes u32 natively).
+pub fn pack_words_u32(p: &PackedTensor) -> Vec<u32> {
+    let w32_stride = p.row_stride.div_ceil(2);
+    let mut out = vec![0u32; p.rows * w32_stride];
+    for r in 0..p.rows {
+        let row = p.row_words(r);
+        for (i, &w) in row.iter().enumerate() {
+            let slot = r * w32_stride + i / 2;
+            out[slot] |= u32::from(w) << (16 * (i % 2));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::registry::Scheme;
+    use crate::quant::sharing::quantize;
+    use crate::quant::QuantConfig;
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn u32_repack_layout() {
+        let mut rng = Rng::new(1);
+        let w = init::gaussian(&[2, 6], 0.0, 0.02, &mut rng);
+        let q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+        let p = crate::pack::pack(&q);
+        assert_eq!(p.row_stride, 2);
+        let u = pack_words_u32(&p);
+        assert_eq!(u.len(), 2); // 2 rows x ceil(2/2)=1 u32 each
+        assert_eq!(u[0] & 0xFFFF, u32::from(p.words[0]));
+        assert_eq!(u[0] >> 16, u32::from(p.words[1]));
+    }
+
+    #[test]
+    fn odd_stride_zero_padded() {
+        let mut rng = Rng::new(2);
+        let w = init::gaussian(&[1, 9], 0.0, 0.02, &mut rng);
+        let q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+        let p = crate::pack::pack(&q);
+        assert_eq!(p.row_stride, 3);
+        let u = pack_words_u32(&p);
+        assert_eq!(u.len(), 2);
+        assert_eq!(u[1] >> 16, 0, "pad half-word must be zero");
+    }
+
+    // PJRT client tests live in rust/tests/runtime.rs (integration), since
+    // creating a CPU client per unit test is heavyweight.
+}

@@ -1,0 +1,51 @@
+//! Random tensor initializers (Gaussian / Laplace / uniform) used by tests,
+//! property strategies and the synthetic LLM-weight generator.
+
+use super::Tensor;
+use crate::util::prng::Rng;
+
+pub fn gaussian(shape: &[usize], mean: f32, std: f32, rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_f32(mean, std)).collect())
+}
+
+pub fn laplace(shape: &[usize], b: f32, rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(
+        shape,
+        (0..n).map(|_| rng.laplace(b as f64) as f32).collect(),
+    )
+}
+
+pub fn uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.uniform_range(lo, hi)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(1);
+        let t = gaussian(&[200, 200], 0.0, 0.02, &mut rng);
+        assert!(t.mean().abs() < 1e-3);
+        let var = t.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / t.len() as f64;
+        assert!((var.sqrt() - 0.02).abs() < 1e-3);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Rng::new(2);
+        let t = uniform(&[1000], -0.5, 0.5, &mut rng);
+        assert!(t.data().iter().all(|&x| (-0.5..0.5).contains(&x)));
+    }
+
+    #[test]
+    fn laplace_zero_centered() {
+        let mut rng = Rng::new(3);
+        let t = laplace(&[100_000], 1.0, &mut rng);
+        assert!(t.mean().abs() < 0.02);
+    }
+}

@@ -1,0 +1,236 @@
+//! Criterion-free micro-benchmark harness.
+//!
+//! Used by `benches/*.rs` (compiled with `harness = false`). Protocol:
+//! warm up until `warmup_secs` elapse, then run timed iterations until
+//! `measure_secs` elapse (at least `min_iters`), report median/mean/p10/p90
+//! of per-iteration wall time. Results can be dumped as a markdown table or
+//! CSV so EXPERIMENTS.md entries are copy-pasteable.
+
+use super::metrics::Summary;
+use super::timer::{fmt_duration, Timer};
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_secs: f64,
+    pub measure_secs: f64,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_secs: 0.2,
+            measure_secs: 1.0,
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for CI/tests.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_secs: 0.01,
+            measure_secs: 0.05,
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+
+    /// Read overrides from env (`AMS_BENCH_MEASURE_SECS`, `AMS_BENCH_QUICK`).
+    pub fn from_env() -> Self {
+        let mut cfg = if std::env::var("AMS_BENCH_QUICK").is_ok() {
+            Self::quick()
+        } else {
+            Self::default()
+        };
+        if let Ok(v) = std::env::var("AMS_BENCH_MEASURE_SECS") {
+            if let Ok(secs) = v.parse() {
+                cfg.measure_secs = secs;
+            }
+        }
+        cfg
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_secs: f64,
+    pub mean_secs: f64,
+    pub p10_secs: f64,
+    pub p90_secs: f64,
+    /// Optional work metric: how many "units" one iteration processes
+    /// (bytes for bandwidth, flops for compute). Enables derived rates.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    /// Units per second based on the median iteration.
+    pub fn rate(&self) -> f64 {
+        if self.median_secs > 0.0 {
+            self.units_per_iter / self.median_secs
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn line(&self) -> String {
+        let mut s = format!(
+            "{:40} {:>10} iters  median {:>12}  mean {:>12}  p90 {:>12}",
+            self.name,
+            self.iters,
+            fmt_duration(self.median_secs),
+            fmt_duration(self.mean_secs),
+            fmt_duration(self.p90_secs),
+        );
+        if self.units_per_iter > 0.0 {
+            s.push_str(&format!("  rate {:.3e}/s", self.rate()));
+        }
+        s
+    }
+}
+
+/// Benchmark a closure. `black_box` its result yourself if needed.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    bench_with_units(name, cfg, 0.0, &mut f)
+}
+
+pub fn bench_with_units<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    units_per_iter: f64,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup.
+    let w = Timer::start();
+    while w.elapsed_secs() < cfg.warmup_secs {
+        f();
+    }
+    // Measure.
+    let mut s = Summary::new();
+    let total = Timer::start();
+    let mut iters = 0usize;
+    while (total.elapsed_secs() < cfg.measure_secs || iters < cfg.min_iters)
+        && iters < cfg.max_iters
+    {
+        let t = Timer::start();
+        f();
+        s.record(t.elapsed_secs());
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_secs: s.median(),
+        mean_secs: s.mean(),
+        p10_secs: s.percentile(10.0),
+        p90_secs: s.percentile(90.0),
+        units_per_iter,
+    }
+}
+
+/// Opaque use of a value so the optimizer cannot delete the computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Collects results and renders them.
+#[derive(Default)]
+pub struct BenchSuite {
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::from("| bench | iters | median | mean | p90 | rate |\n|---|---|---|---|---|---|\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                r.name,
+                r.iters,
+                fmt_duration(r.median_secs),
+                fmt_duration(r.mean_secs),
+                fmt_duration(r.p90_secs),
+                if r.units_per_iter > 0.0 {
+                    format!("{:.3e}/s", r.rate())
+                } else {
+                    "-".into()
+                }
+            ));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,iters,median_secs,mean_secs,p10_secs,p90_secs,rate\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.name, r.iters, r.median_secs, r.mean_secs, r.p10_secs, r.p90_secs,
+                if r.units_per_iter > 0.0 { r.rate() } else { 0.0 }
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let cfg = BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.0,
+            min_iters: 7,
+            max_iters: 100,
+        };
+        let mut n = 0usize;
+        let r = bench("noop", &cfg, || {
+            n += 1;
+        });
+        assert!(r.iters >= 7);
+        assert!(r.median_secs >= 0.0);
+    }
+
+    #[test]
+    fn rate_derived() {
+        let cfg = BenchConfig::quick();
+        let mut f = || {
+            black_box((0..1000).sum::<u64>());
+        };
+        let r = bench_with_units("sum", &cfg, 1000.0, &mut f);
+        assert!(r.rate() > 0.0);
+    }
+
+    #[test]
+    fn suite_renders() {
+        let mut suite = BenchSuite::new();
+        suite.push(BenchResult {
+            name: "x".into(),
+            iters: 3,
+            median_secs: 1e-3,
+            mean_secs: 1e-3,
+            p10_secs: 1e-3,
+            p90_secs: 1e-3,
+            units_per_iter: 100.0,
+        });
+        assert!(suite.to_markdown().contains("| x |"));
+        assert!(suite.to_csv().lines().count() == 2);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny argv parser (no clap offline): subcommand + `--flag[=| ]value` pairs
+//! + bare `--switch` booleans + positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (first token = subcommand when it
+    /// does not start with '-').
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["serve", "--port", "8080", "--verbose", "--name=x"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["quantize", "in.bin", "out.bin", "--format", "fp4.25"]);
+        assert_eq!(a.positional, vec!["in.bin", "out.bin"]);
+        assert_eq!(a.get("format"), Some("fp4.25"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["x", "--flag", "v", "--sw"]);
+        assert!(a.has("sw"));
+        assert_eq!(a.get("flag"), Some("v"));
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["x", "--formats", "fp16, fp6-e2m3 ,fp4.25"]);
+        assert_eq!(
+            a.get_list("formats").unwrap(),
+            vec!["fp16", "fp6-e2m3", "fp4.25"]
+        );
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--x", "1"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_usize("x", 0), 1);
+    }
+}

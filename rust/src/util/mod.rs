@@ -1,0 +1,11 @@
+//! Foundation substrates built in-repo (the offline environment provides no
+//! tokio/clap/serde/criterion/proptest, so we implement the pieces we need).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod metrics;
+pub mod prng;
+pub mod proptest;
+pub mod threadpool;
+pub mod timer;

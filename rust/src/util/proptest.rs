@@ -1,0 +1,231 @@
+//! Mini property-testing harness (no proptest crate offline).
+//!
+//! `run_prop(seed, cases, gen, check)` draws `cases` random inputs from a
+//! generator and asserts the property. On failure it performs greedy
+//! shrinking via the generator's `shrink` hook and panics with the minimal
+//! counterexample's Debug rendering, so failures are actionable.
+
+use super::prng::Rng;
+use std::fmt::Debug;
+
+/// Strategy: produce a random value and optionally shrink a failing one.
+pub trait Strategy {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of `v` (tried in order during shrinking).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs.
+pub fn run_prop<S: Strategy>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    strat: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = strat.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Greedy shrink.
+            let mut cur = v;
+            let mut cur_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in strat.shrink(&cur) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// Vec<f32> strategy: length in [min_len, max_len], values from a mixture of
+/// uniform/normal/edge-cases — tuned so quantizer properties see outliers,
+/// zeros and denormal-ish magnitudes.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Strategy for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let len = rng.range(self.min_len, self.max_len + 1);
+        (0..len)
+            .map(|_| match rng.below(10) {
+                0 => 0.0,
+                1 => self.scale * rng.uniform_range(-1.0, 1.0) * 1e-4,
+                2 => self.scale * rng.uniform_range(-8.0, 8.0), // outlier-ish
+                _ => rng.normal_f32(0.0, self.scale),
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // Drop halves, then single elements.
+            let mid = v.len() / 2;
+            if mid >= self.min_len {
+                out.push(v[..mid].to_vec());
+                out.push(v[mid..].to_vec());
+            }
+            let mut minus_last = v.clone();
+            minus_last.pop();
+            if minus_last.len() >= self.min_len {
+                out.push(minus_last);
+            }
+        }
+        // Zero out elements one at a time.
+        for i in 0..v.len().min(8) {
+            if v[i] != 0.0 {
+                let mut z = v.clone();
+                z[i] = 0.0;
+                out.push(z);
+            }
+        }
+        out
+    }
+}
+
+/// usize strategy over an inclusive range.
+pub struct USize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Strategy for USize {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.lo, self.hi + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pair two strategies.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        run_prop(
+            "len-preserved",
+            1,
+            50,
+            &VecF32 {
+                min_len: 0,
+                max_len: 64,
+                scale: 1.0,
+            },
+            |v| {
+                let doubled: Vec<f32> = v.iter().map(|x| x * 2.0).collect();
+                if doubled.len() == v.len() {
+                    Ok(())
+                } else {
+                    Err("len changed".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-tiny'")]
+    fn failing_property_panics_with_shrunk_input() {
+        run_prop(
+            "always-tiny",
+            2,
+            200,
+            &VecF32 {
+                min_len: 1,
+                max_len: 64,
+                scale: 1.0,
+            },
+            |v| {
+                if v.iter().all(|x| x.abs() < 0.01) {
+                    Ok(())
+                } else {
+                    Err("big value".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn usize_strategy_in_range() {
+        run_prop("in-range", 3, 100, &USize { lo: 2, hi: 9 }, |&n| {
+            if (2..=9).contains(&n) {
+                Ok(())
+            } else {
+                Err(format!("{n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    fn pair_strategy() {
+        run_prop(
+            "pair",
+            4,
+            50,
+            &Pair(USize { lo: 1, hi: 4 }, USize { lo: 5, hi: 8 }),
+            |&(a, b)| {
+                if a < b {
+                    Ok(())
+                } else {
+                    Err("order".into())
+                }
+            },
+        );
+    }
+}

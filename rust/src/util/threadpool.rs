@@ -1,0 +1,218 @@
+//! Fixed-size thread pool over std primitives (no tokio offline).
+//!
+//! Two entry points:
+//! - [`ThreadPool::execute`]: fire-and-forget closures (the coordinator's
+//!   worker substrate);
+//! - [`scope_chunks`]: data-parallel helper used by the GEMM hot path to
+//!   split row-ranges across persistent workers without per-call spawns.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("ams-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                if *n == 0 {
+                                    cv.notify_all();
+                                }
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            tx,
+            handles,
+            pending,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool send");
+    }
+
+    /// Block until every queued job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into `chunks`
+/// contiguous ranges on freshly scoped threads. Used by the GEMM hot path;
+/// scoped threads let us borrow non-'static data (weight/activation slices).
+pub fn scope_chunks<F>(n: usize, chunks: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let chunks = chunks.max(1).min(n.max(1));
+    if chunks <= 1 {
+        f(0, 0, n);
+        return;
+    }
+    let per = n.div_ceil(chunks);
+    thread::scope(|s| {
+        for c in 0..chunks {
+            let start = c * per;
+            let end = ((c + 1) * per).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(c, start, end));
+        }
+    });
+}
+
+/// Number of worker threads to use by default (leave one core for the
+/// coordinator).
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+/// A simple atomic work-stealing-free dynamic counter for irregular loops.
+pub struct WorkQueue {
+    next: AtomicUsize,
+    total: usize,
+}
+
+impl WorkQueue {
+    pub fn new(total: usize) -> Self {
+        Self {
+            next: AtomicUsize::new(0),
+            total,
+        }
+    }
+
+    /// Grab the next batch of up to `grain` indices; None when exhausted.
+    pub fn take(&self, grain: usize) -> Option<(usize, usize)> {
+        let start = self.next.fetch_add(grain, Ordering::Relaxed);
+        if start >= self.total {
+            None
+        } else {
+            Some((start, (start + grain).min(self.total)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn scope_chunks_covers_range() {
+        let n = 1003;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        scope_chunks(n, 7, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scope_chunks_single() {
+        let mut seen = (0, 0);
+        scope_chunks(10, 1, |c, s, e| {
+            assert_eq!(c, 0);
+            let _ = &seen;
+            let _ = (s, e);
+        });
+        seen = (0, 10);
+        assert_eq!(seen, (0, 10));
+    }
+
+    #[test]
+    fn work_queue_exact_coverage() {
+        let q = WorkQueue::new(100);
+        let mut covered = vec![false; 100];
+        while let Some((s, e)) = q.take(7) {
+            for c in covered.iter_mut().take(e).skip(s) {
+                assert!(!*c);
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+}

@@ -1,0 +1,80 @@
+//! Wall-clock timing helpers shared by the bench harness and coordinator
+//! metrics.
+
+use std::time::{Duration, Instant};
+
+/// A started stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_secs() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Pretty-print a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(2.5).ends_with(" s"));
+        assert!(fmt_duration(2.5e-3).ends_with(" ms"));
+        assert!(fmt_duration(2.5e-6).ends_with(" µs"));
+        assert!(fmt_duration(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let (v, secs) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Cross-module integration: checkpoint -> quantize -> pack -> serve,
+//! on a synthetic model (no artifacts required).
+
+use ams_quant::coordinator::batcher::{BatchPolicy, Scheduler};
+use ams_quant::coordinator::router::Router;
+use ams_quant::coordinator::server::Server;
+use ams_quant::coordinator::GenRequest;
+use ams_quant::eval::{evaluate_against_reference, reference_trace};
+use ams_quant::formats::registry::Scheme;
+use ams_quant::model::checkpoint::Checkpoint;
+use ams_quant::model::synthetic::synthetic_checkpoint;
+use ams_quant::model::transformer::Transformer;
+use ams_quant::model::ModelConfig;
+use ams_quant::quant::QuantConfig;
+
+fn model() -> Transformer {
+    let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 99);
+    Transformer::from_checkpoint(&ck).unwrap()
+}
+
+#[test]
+fn checkpoint_disk_roundtrip_preserves_logits() {
+    let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 7);
+    let m1 = Transformer::from_checkpoint(&ck).unwrap();
+    let dir = std::env::temp_dir().join("ams_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("it.amsz");
+    ck.save(&path).unwrap();
+    let m2 = Transformer::from_checkpoint(&Checkpoint::load(&path).unwrap()).unwrap();
+    let mut c1 = m1.new_cache();
+    let mut c2 = m2.new_cache();
+    for (p, &t) in [5u32, 9, 2].iter().enumerate() {
+        let l1 = m1.forward(t, p, &mut c1);
+        let l2 = m2.forward(t, p, &mut c2);
+        assert_eq!(l1, l2);
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn quantized_serving_end_to_end() {
+    // Quantize to fp4.25 and serve through scheduler: outputs must stay
+    // close to the dense model's (quality) and all requests complete.
+    let base = model();
+    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()));
+    let mut sched = Scheduler::new(q, BatchPolicy { max_batch: 4, eos: None }, 1);
+    for id in 0..6u64 {
+        sched.admit(GenRequest::greedy(id, vec![1 + id as u32, 2, 3], 5));
+    }
+    let out = sched.run_to_completion();
+    assert_eq!(out.len(), 6);
+    assert!(out.iter().all(|r| r.tokens.len() == 5));
+}
+
+#[test]
+fn kl_ordering_holds_end_to_end() {
+    // The paper's core accuracy claim at system level, on synthetic
+    // weights: KL(fp16 || fp6) <= KL(fp16 || fp4.25-ish band) < KL(fp16 || fp4).
+    let base = model();
+    let tokens: Vec<u32> = (0..240).map(|i| (i * 13 % 64) as u32).collect();
+    let trace = reference_trace(&base, &tokens, 60);
+    let kl_of = |name: &str| {
+        let q = base.quantized(&QuantConfig::paper(Scheme::parse(name).unwrap()));
+        evaluate_against_reference(&q, &trace).1
+    };
+    let kl6 = kl_of("fp6");
+    let kl533 = kl_of("fp5.33");
+    let kl425 = kl_of("fp4.25");
+    let kl4 = kl_of("fp4");
+    assert!(kl6 <= kl533 * 2.0, "fp6 {kl6} vs fp5.33 {kl533}");
+    assert!(kl533 < kl4, "fp5.33 {kl533} vs fp4 {kl4}");
+    assert!(kl425 < kl4, "fp4.25 {kl425} must beat fp4 {kl4}");
+}
+
+#[test]
+fn router_with_quantized_replicas() {
+    let base = model();
+    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+    let mut router = Router::new(
+        (0..2)
+            .map(|i| Server::spawn(q.clone(), BatchPolicy::default(), i))
+            .collect(),
+    );
+    for id in 0..6u64 {
+        router.submit(GenRequest::greedy(id, vec![3, 4], 3));
+    }
+    let out = router.collect_all();
+    assert_eq!(out.len(), 6);
+    let stats = router.shutdown();
+    assert_eq!(stats.iter().map(|s| s.requests).sum::<u64>(), 6);
+}
+
+#[test]
+fn context_overflow_retires_gracefully() {
+    // A request whose budget exceeds the model context must finish at the
+    // context boundary instead of panicking mid-batch.
+    let base = model();
+    let max_seq = base.cfg.max_seq; // 64 for test_tiny
+    let mut sched = Scheduler::new(base, BatchPolicy { max_batch: 2, eos: None }, 3);
+    let prompt: Vec<u32> = (0..max_seq as u32 - 10).map(|i| i % 60).collect();
+    sched.admit(GenRequest::greedy(0, prompt.clone(), 1000));
+    // A short request batched alongside must be unaffected.
+    sched.admit(GenRequest::greedy(1, vec![1, 2], 3));
+    let mut out = sched.run_to_completion();
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].tokens.len(), max_seq - prompt.len());
+    assert_eq!(out[1].tokens.len(), 3);
+}
+
+#[test]
+fn serving_stress_mixed_lengths() {
+    // 50 requests with heterogeneous prompt/generation lengths through a
+    // threaded server: all complete, latencies recorded, counts add up.
+    let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+    let srv = Server::spawn(base, BatchPolicy { max_batch: 4, eos: None }, 5);
+    let mut expected_tokens = 0usize;
+    for id in 0..50u64 {
+        let plen = 1 + (id as usize * 7) % 20;
+        let gen = 1 + (id as usize * 3) % 6;
+        expected_tokens += gen;
+        let prompt: Vec<u32> = (0..plen as u32).map(|i| (i * 11 + id as u32) % 60).collect();
+        srv.submit(GenRequest::greedy(id, prompt, gen));
+    }
+    let out = srv.collect(50);
+    assert_eq!(out.len(), 50);
+    let got: usize = out.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(got, expected_tokens);
+    assert_eq!(srv.latency.snapshot().count(), 50);
+    let stats = srv.shutdown();
+    assert_eq!(stats.requests, 50);
+    assert_eq!(stats.tokens_generated as usize, expected_tokens);
+    assert!(stats.mean_batch_occupancy() > 1.0);
+}
+
+#[test]
+fn packed_model_memory_budget() {
+    // FP4.25 projections must land within 5% of the nominal 4.25/16 ratio.
+    let base = model();
+    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()));
+    let ratio = q.projection_bytes() as f64 / base.projection_bytes() as f64;
+    let nominal = 4.25 / 16.0;
+    assert!(
+        (ratio - nominal).abs() / nominal < 0.05,
+        "ratio {ratio:.4} vs nominal {nominal:.4}"
+    );
+}

@@ -1,0 +1,65 @@
+//! L2↔L3 model parity: the rust inference engine must reproduce the JAX
+//! model's logits on the trained checkpoint (same architecture, same
+//! weights, different implementations).
+//!
+//! Skips when `make artifacts` has not produced tiny_lm.amsz/parity.json.
+
+use ams_quant::model::checkpoint::Checkpoint;
+use ams_quant::model::transformer::Transformer;
+use ams_quant::util::json::parse;
+use std::path::PathBuf;
+
+#[test]
+fn rust_engine_matches_jax_logits() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let ckpt = dir.join("tiny_lm.amsz");
+    let parity = dir.join("parity.json");
+    if !ckpt.exists() || !parity.exists() {
+        eprintln!("SKIP: trained checkpoint missing — run `make artifacts`");
+        return;
+    }
+    let model = Transformer::from_checkpoint(&Checkpoint::load(&ckpt).unwrap()).unwrap();
+    let j = parse(&std::fs::read_to_string(&parity).unwrap()).unwrap();
+    let tokens: Vec<u32> = j
+        .get("tokens")
+        .and_then(|t| t.as_arr())
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    let want: Vec<f32> = j
+        .get("logits_last")
+        .and_then(|t| t.as_arr())
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+
+    let mut cache = model.new_cache();
+    let mut logits = Vec::new();
+    for (pos, &t) in tokens.iter().enumerate() {
+        logits = model.forward(t, pos, &mut cache);
+    }
+    assert_eq!(logits.len(), want.len());
+    let max_mag = want.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let mut max_err = 0f32;
+    for (a, b) in logits.iter().zip(&want) {
+        max_err = max_err.max((a - b).abs());
+    }
+    // f32 engine vs f32 jax: tolerance scaled to logit magnitude.
+    assert!(
+        max_err <= 2e-3 * (1.0 + max_mag),
+        "rust vs jax logits: max err {max_err} (mag {max_mag})"
+    );
+    println!("parity OK: max err {max_err:.3e} over {} logits", want.len());
+
+    // Greedy argmax must agree exactly.
+    let ra = ams_quant::model::sampler::argmax(&logits);
+    let ja = want
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(ra, ja, "greedy tokens diverge");
+}

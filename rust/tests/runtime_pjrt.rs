@@ -1,0 +1,87 @@
+//! PJRT runtime integration: load every AOT artifact from the manifest,
+//! execute it, and compare against the native rust kernels on identical
+//! packed buffers — the L1/L2↔L3 parity check.
+//!
+//! Skips (with a notice) when `make artifacts` has not run.
+
+use ams_quant::experiments::{make_linear, random_acts};
+use ams_quant::formats::registry::Scheme;
+use ams_quant::model::synthetic::{llm_weight, WeightProfile};
+use ams_quant::runtime::Runtime;
+use ams_quant::util::json::parse;
+use ams_quant::util::prng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn pjrt_matches_native_for_all_artifacts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return;
+    };
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let entries = parse(&manifest).unwrap();
+    let entries = entries.as_arr().unwrap().to_vec();
+    assert!(!entries.is_empty());
+
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+
+    let mut rng = Rng::new(0xD1CE);
+    for e in &entries {
+        let file = e.req_str("file").unwrap();
+        let scheme = Scheme::parse(e.req_str("scheme").unwrap()).unwrap();
+        let rows = e.req_usize("rows").unwrap();
+        let cols = e.req_usize("cols").unwrap();
+        let batch = e.req_usize("batch").unwrap();
+
+        let w = llm_weight(rows, cols, &WeightProfile::default(), &mut rng);
+        let lin = make_linear(&w, scheme);
+        // Manifest stride must agree with the rust packer.
+        assert_eq!(
+            e.req_usize("w32_stride").unwrap(),
+            lin.packed.row_stride.div_ceil(2),
+            "{file}: stride mismatch between python and rust packers"
+        );
+        let x = random_acts(batch, cols, &mut rng);
+
+        let exe = rt.load(&dir.join(file)).expect(file);
+        let y = exe.run_linear(&lin.packed, x.data(), batch).expect(file);
+        let ynative = lin.gemm(&x);
+        assert_eq!(y.len(), batch * rows);
+        let mut max_err = 0f32;
+        let mut max_mag = 0f32;
+        for (a, b) in y.iter().zip(ynative.data()) {
+            max_err = max_err.max((a - b).abs());
+            max_mag = max_mag.max(b.abs());
+        }
+        assert!(
+            max_err <= 1e-4 * (1.0 + max_mag),
+            "{file}: PJRT vs native max err {max_err} (mag {max_mag})"
+        );
+        println!("{file}: OK (max err {max_err:.2e})");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let entries = parse(&manifest).unwrap();
+    let file = entries.as_arr().unwrap()[0].req_str("file").unwrap().to_string();
+    let t0 = std::time::Instant::now();
+    let _e1 = rt.load(&dir.join(&file)).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _e2 = rt.load(&dir.join(&file)).unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 2, "cache hit {second:?} vs compile {first:?}");
+}
