@@ -4,7 +4,7 @@
 
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
-use ams_quant::model::transformer::KvCache;
+use ams_quant::model::transformer::{ForwardScratch, KvCache};
 use ams_quant::quant::QuantConfig;
 use ams_quant::report::{f, Table};
 use ams_quant::util::bench::{bench_with_units, black_box, BenchConfig};
@@ -30,6 +30,9 @@ fn main() {
     );
 
     let mut fp16_b8 = 0.0f64;
+    // One scratch for the whole sweep: the serving-loop usage pattern
+    // (buffers are high-water sized, decode steps allocate nothing).
+    let mut scratch = ForwardScratch::new();
     for name in ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "fp4"] {
         let scheme = Scheme::parse(name).unwrap();
         let model = base.quantized(&QuantConfig::paper(scheme));
@@ -37,10 +40,11 @@ fn main() {
         let mut b8_rate = 0.0;
         for &b in &batches {
             let tokens: Vec<u32> = (0..b).map(|i| (i as u32 * 17 + 32) % 255).collect();
+            let scratch = &mut scratch;
             let mut fcall = || {
                 let mut caches: Vec<KvCache> = (0..b).map(|_| model.new_cache()).collect();
                 for _ in 0..steps {
-                    black_box(model.forward_batch(&tokens, &mut caches).len());
+                    black_box(model.forward_batch_with(&tokens, &mut caches, scratch).len());
                 }
             };
             let r = bench_with_units(

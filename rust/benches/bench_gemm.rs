@@ -1,0 +1,121 @@
+//! Batched fused-GEMM throughput — scheme × batch ∈ {1, 4, 16, 64} on
+//! MLP-shaped matrices (the projections that dominate decode). Prints the
+//! per-shape speedup table and writes a JSON trajectory file
+//! (`BENCH_GEMM.json` by default, `--json PATH` to override) so runs are
+//! diffable across commits.
+//!
+//! Flags: `--d N` model width (default 768; MLP shapes are [4d, d] and
+//! [d, 4d]), `--threads N` (default 1 = serial kernels; capped at the
+//! shared pool size — set `AMS_THREADS` to grow the pool), `--json PATH`.
+//! Honors `AMS_BENCH_QUICK` / `AMS_BENCH_MEASURE_SECS`.
+
+use ams_quant::experiments as exp;
+use ams_quant::formats::registry::Scheme;
+use ams_quant::gemm::GemmScratch;
+use ams_quant::model::synthetic::{llm_weight, WeightProfile};
+use ams_quant::report::{f, Table};
+use ams_quant::tensor::Tensor;
+use ams_quant::util::bench::{bench_with_units, black_box, BenchConfig};
+use ams_quant::util::cli::Args;
+use ams_quant::util::json::Json;
+use ams_quant::util::prng::Rng;
+
+const BATCHES: [usize; 4] = [1, 4, 16, 64];
+const SCHEMES: [&str; 6] = ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "int4"];
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var("AMS_BENCH_QUICK").is_ok();
+    let d = args.get_usize("d", if quick { 256 } else { 768 });
+    let threads = args.get_usize("threads", 1);
+    let json_path = args.get_or("json", "BENCH_GEMM.json").to_string();
+
+    let shapes: [(&str, usize, usize); 2] = [("mlp-up", 4 * d, d), ("mlp-down", d, 4 * d)];
+    let mut rng = Rng::new(0xD0D0);
+    let mut results: Vec<Json> = Vec::new();
+
+    println!("# fused tiled GEMM bench (d={d}, threads={threads}, tokens/s per scheme×batch)\n");
+    for (shape_name, rows, cols) in shapes {
+        let w = llm_weight(rows, cols, &WeightProfile::default(), &mut rng);
+        let mut header = vec!["Scheme".to_string()];
+        header.extend(BATCHES.iter().map(|b| format!("tok/s b={b}")));
+        header.extend(BATCHES.iter().map(|b| format!("× fp16 b={b}")));
+        let mut table = Table::new(
+            &format!("GEMM throughput — {shape_name} [{rows}x{cols}]"),
+            &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+
+        let mut fp16_rate = [0f64; BATCHES.len()];
+        for scheme_name in SCHEMES {
+            let scheme = Scheme::parse(scheme_name).unwrap();
+            let lin = exp::make_linear(&w, scheme);
+            let mut scratch = GemmScratch::new();
+            let mut cells = vec![scheme.label()];
+            let mut rates = [0f64; BATCHES.len()];
+            for (bi, &batch) in BATCHES.iter().enumerate() {
+                let x = exp::random_acts(batch, cols, &mut rng);
+                let mut y = Tensor::zeros(&[batch, rows]);
+                let mut fcall = || {
+                    if threads > 1 {
+                        lin.gemm_parallel_into(&x, &mut y, threads, &mut scratch);
+                    } else {
+                        lin.gemm_into(&x, &mut y, &mut scratch);
+                    }
+                    black_box(y.data().len());
+                };
+                let r = bench_with_units(
+                    &format!("{shape_name}/{scheme_name}/b{batch}"),
+                    &cfg,
+                    batch as f64,
+                    &mut fcall,
+                );
+                rates[bi] = r.rate();
+                let mut entry = Json::obj();
+                entry
+                    .set("name", Json::Str(format!("{shape_name}/{scheme_name}/b{batch}")))
+                    .set("shape", Json::Str(shape_name.into()))
+                    .set("rows", Json::Num(rows as f64))
+                    .set("cols", Json::Num(cols as f64))
+                    .set("scheme", Json::Str(scheme_name.into()))
+                    .set("batch", Json::Num(batch as f64))
+                    .set("threads", Json::Num(threads as f64))
+                    .set("iters", Json::Num(r.iters as f64))
+                    .set("median_secs", Json::Num(r.median_secs))
+                    .set("mean_secs", Json::Num(r.mean_secs))
+                    .set("p10_secs", Json::Num(r.p10_secs))
+                    .set("p90_secs", Json::Num(r.p90_secs))
+                    .set("tokens_per_s", Json::Num(r.rate()));
+                results.push(entry);
+            }
+            if scheme == Scheme::Fp16 {
+                fp16_rate = rates;
+            }
+            for &rate in &rates {
+                cells.push(f(rate, 1));
+            }
+            for (bi, &rate) in rates.iter().enumerate() {
+                cells.push(if fp16_rate[bi] > 0.0 {
+                    f(rate / fp16_rate[bi], 2)
+                } else {
+                    "-".into()
+                });
+            }
+            table.row(cells);
+        }
+        println!("{}", table.to_console());
+        println!("{}", table.to_markdown());
+    }
+
+    let mut root = Json::obj();
+    root.set("bench", Json::Str("gemm".into()))
+        .set("schema_version", Json::Num(1.0))
+        .set("d", Json::Num(d as f64))
+        .set("threads", Json::Num(threads as f64))
+        .set("measure_secs", Json::Num(cfg.measure_secs))
+        .set("results", Json::Arr(results));
+    match std::fs::write(&json_path, root.to_string_pretty()) {
+        Ok(()) => eprintln!("# wrote {json_path}"),
+        Err(e) => eprintln!("# could not write {json_path}: {e}"),
+    }
+}

@@ -6,9 +6,10 @@
 //! after `max_new_tokens`, and the running batch never exceeds `max_batch`.
 
 use super::{GenRequest, GenResponse};
-use crate::model::transformer::{KvCache, Transformer};
+use crate::model::transformer::{ForwardScratch, KvCache, Transformer};
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
+use std::borrow::BorrowMut;
 use std::collections::VecDeque;
 
 #[derive(Clone, Copy, Debug)]
@@ -38,13 +39,30 @@ struct Active {
     steps: usize,
 }
 
-/// Continuous-batching scheduler bound to one model replica.
+impl BorrowMut<KvCache> for Active {
+    fn borrow_mut(&mut self) -> &mut KvCache {
+        &mut self.cache
+    }
+}
+
+impl std::borrow::Borrow<KvCache> for Active {
+    fn borrow(&self) -> &KvCache {
+        &self.cache
+    }
+}
+
+/// Continuous-batching scheduler bound to one model replica. Owns one
+/// [`ForwardScratch`], so steady-state decode steps perform no heap
+/// allocation (caches are decoded in place — no per-step cache churn).
 pub struct Scheduler {
     model: Transformer,
     policy: BatchPolicy,
     queue: VecDeque<GenRequest>,
     active: Vec<Active>,
     rng: Rng,
+    scratch: ForwardScratch,
+    /// Reused per-step token staging buffer.
+    tok_buf: Vec<u32>,
     pub steps_executed: u64,
     pub batched_tokens: u64,
 }
@@ -57,6 +75,8 @@ impl Scheduler {
             queue: VecDeque::new(),
             active: Vec::new(),
             rng: Rng::new(seed),
+            scratch: ForwardScratch::new(),
+            tok_buf: Vec::new(),
             steps_executed: 0,
             batched_tokens: 0,
         }
@@ -81,15 +101,15 @@ impl Scheduler {
     fn start(&mut self, req: GenRequest) {
         let mut cache = self.model.new_cache();
         let timer = Timer::start();
-        let mut logits = vec![0f32; self.model.cfg.vocab_size];
         assert!(
             !req.prompt.is_empty(),
             "empty prompt: nothing to condition on"
         );
+        let mut logits: &[f32] = &[];
         for (pos, &t) in req.prompt.iter().enumerate() {
-            logits = self.model.forward(t, pos, &mut cache);
+            logits = self.model.forward_with(t, pos, &mut cache, &mut self.scratch);
         }
-        let first = req.sampler.sample(&logits, &mut self.rng);
+        let first = req.sampler.sample(logits, &mut self.rng);
         self.active.push(Active {
             req,
             cache,
@@ -125,21 +145,18 @@ impl Scheduler {
             return done;
         }
 
-        let tokens: Vec<u32> = self.active.iter().map(|a| a.next_token).collect();
-        let mut caches: Vec<KvCache> = self
-            .active
-            .iter_mut()
-            .map(|a| std::mem::replace(&mut a.cache, KvCache::new(&self.model.cfg)))
-            .collect();
-        let logits = self.model.forward_batch(&tokens, &mut caches);
+        self.tok_buf.clear();
+        self.tok_buf.extend(self.active.iter().map(|a| a.next_token));
+        // Caches are decoded in place through `Active: BorrowMut<KvCache>`
+        // — no per-step cache extraction/replacement (the old path
+        // allocated two full KV caches per sequence per step).
+        let logits = self
+            .model
+            .forward_batch_with(&self.tok_buf, &mut self.active, &mut self.scratch);
         self.steps_executed += 1;
-        self.batched_tokens += tokens.len() as u64;
+        self.batched_tokens += self.tok_buf.len() as u64;
         for (i, a) in self.active.iter_mut().enumerate() {
-            a.cache = std::mem::replace(&mut caches[i], KvCache::new(&self.model.cfg));
-            let row: Vec<f32> = (0..self.model.cfg.vocab_size)
-                .map(|j| logits.at2(i, j))
-                .collect();
-            let t = a.req.sampler.sample(&row, &mut self.rng);
+            let t = a.req.sampler.sample(logits.row(i), &mut self.rng);
             a.generated.push(t);
             a.next_token = t;
             a.steps += 1;

@@ -1,7 +1,9 @@
-//! Scheme-specialized row kernels. Each streams a packed row's words and
-//! either fuses dequant+dot (`row_dot`) or materializes the dequantized
-//! row (`row_values`, used by the batched path where the decode cost is
-//! amortized over the batch).
+//! Scheme-specialized scalar row kernels. Each streams a packed row's
+//! words and either fuses dequant+dot (`row_dot`, the table-served GEMV
+//! path) or materializes the dequantized row (`row_values`, kept as the
+//! bit-exact oracle for layout tests). The batched hot path lives in
+//! [`super::simd`] (`dotn_*` tile kernels) — rows are no longer decoded
+//! to dense f32 there.
 
 use crate::formats::registry::Scheme;
 use crate::formats::FpFormat;
@@ -58,47 +60,6 @@ pub fn row_values(scheme: Scheme, words: &[u16], cols: usize, table: &[f32], out
             for (o, &c) in out.iter_mut().zip(&codes) {
                 *o = table[c as usize];
             }
-        }
-    }
-}
-
-/// `acc[b] += Σ_c vals[c] * xt[c*batch + b]` — the batched inner loop,
-/// written so LLVM vectorizes over the batch dimension.
-pub fn batch_fma(vals: &[f32], xt: &[f32], batch: usize, acc: &mut [f32]) {
-    debug_assert_eq!(acc.len(), batch);
-    // No zero-skip branch: a data-dependent branch in the inner loop
-    // defeats auto-vectorization and costs more than the skipped FMAs
-    // (§Perf iteration log).
-    for (c, &v) in vals.iter().enumerate() {
-        let xrow = &xt[c * batch..(c + 1) * batch];
-        for (a, &xv) in acc.iter_mut().zip(xrow) {
-            *a += v * xv;
-        }
-    }
-}
-
-/// Batched FMA over a transposed activation block `xt: [cols, batch]`,
-/// using `vals` (len >= cols) as decode scratch.
-pub fn row_dot_batch(
-    scheme: Scheme,
-    words: &[u16],
-    cols: usize,
-    table: &[f32],
-    xt: &[f32],
-    batch: usize,
-    vals: &mut [f32],
-    acc: &mut [f32],
-) {
-    row_values(scheme, words, cols, table, vals);
-    debug_assert_eq!(acc.len(), batch);
-    for c in 0..cols {
-        let v = vals[c];
-        if v == 0.0 {
-            continue;
-        }
-        let xrow = &xt[c * batch..(c + 1) * batch];
-        for (a, &xv) in acc.iter_mut().zip(xrow) {
-            *a += v * xv;
         }
     }
 }

@@ -1,12 +1,29 @@
 //! Fused unpack–dequant GEMV/GEMM — the CPU analog of the paper's CUDA
 //! linear kernels (§3.3).
 //!
-//! The weight matrix stays packed in memory; each row kernel streams the
-//! row's words, reconstructs values through a ≤256-entry dequant table
-//! (see [`crate::restore::lut`]), and fuses the multiply–accumulate. The
-//! per-channel scale is applied once per output element, so the inner loop
-//! is exactly: load word → shift/and → table gather → FMA, mirroring the
+//! The weight matrix stays packed in memory end to end. The single-vector
+//! path streams each row's words, reconstructs values arithmetically (or
+//! through a ≤256-entry dequant table), and fuses the multiply–accumulate;
+//! the per-channel scale is applied once per output element, so the inner
+//! loop is exactly: load word → shift/and → decode → FMA, mirroring the
 //! paper's load → bit-op restore → MMA pipeline.
+//!
+//! **Tiled batched layout (§Perf).** `gemm` no longer dequantizes rows to
+//! dense f32: it streams each packed row once per *tile* of up to
+//! [`simd::NTILE`] activation rows (taken contiguously from row-major `X`,
+//! so no transpose is built), decoding every code exactly once per
+//! row-tile and fanning the value into per-column register accumulators
+//! (`simd::dotn_*`). Results are produced in a transposed
+//! `[rows, batch]` staging buffer — so parallel workers own disjoint
+//! contiguous row-range slices — and transposed once into `Y: [batch,
+//! rows]` at the end.
+//!
+//! **Scratch ownership.** All intermediate buffers (unpacked codes, the
+//! FP5.33 de-interleaved activation streams, the transposed staging
+//! buffer) live in a caller-owned [`GemmScratch`], created once per
+//! `Transformer`/worker and borrowed per call; the steady-state decode
+//! loop performs zero heap allocation. Parallel workers use a
+//! thread-local scratch (see [`parallel`]).
 //!
 //! `y = W · x` with `W: [rows, cols]` packed, `x: [cols]`, `y: [rows]`.
 //! The batched path computes `Y = X · Wᵀ` for `X: [batch, cols]`.
@@ -17,6 +34,7 @@ pub mod simd;
 
 use crate::formats::fp16::fp16_to_f32;
 use crate::formats::registry::Scheme;
+use crate::formats::FpFormat;
 use crate::pack::PackedTensor;
 use crate::tensor::Tensor;
 
@@ -35,19 +53,175 @@ pub fn dequant_table(scheme: Scheme) -> Vec<f32> {
     }
 }
 
-/// A packed linear layer with its dequant table resolved — the unit the
-/// coordinator serves.
+/// Reusable workspace for the GEMV/GEMM hot path. Create once per
+/// `Transformer`/worker; buffers grow to the high-water mark on first use
+/// and are reused allocation-free afterwards.
+#[derive(Clone, Debug, Default)]
+pub struct GemmScratch {
+    /// Unpacked row codes (code-buffer kernel families).
+    codes: Vec<u16>,
+    /// FP5.33 stride-3 de-interleaved activation streams, `[batch][groups]`.
+    x0: Vec<f32>,
+    x1: Vec<f32>,
+    x2: Vec<f32>,
+    /// Transposed staging output `[rows, batch]`.
+    yt: Vec<f32>,
+}
+
+impl GemmScratch {
+    pub fn new() -> GemmScratch {
+        GemmScratch::default()
+    }
+}
+
+/// Which fused row kernel serves a scheme (resolved once at construction).
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum RowKernel {
+    /// Native half words through VCVTPH2PS / the half table.
+    Fp16Bits,
+    /// Contiguous 8-bit codes (FP8-e4m3).
+    Bytes(FpFormat),
+    /// High-nibble stream + low-bit stream (FP6, FP5, FP4.x).
+    Segmented(FpFormat, simd::LowBits),
+    /// FP5.33 continuous half-word groups (e2m3, k=3).
+    Fp533,
+    /// Unpack to a code buffer, then arithmetic decode+dot.
+    Codes(FpFormat),
+    /// Unpack/stream through the dequant table (INT schemes).
+    Table,
+}
+
+impl RowKernel {
+    fn for_scheme(scheme: Scheme) -> RowKernel {
+        match scheme {
+            Scheme::Fp16 => RowKernel::Fp16Bits,
+            Scheme::Fp(f) if f.bits() == 8 => RowKernel::Bytes(f),
+            Scheme::Fp(f) if f.bits() == 6 => RowKernel::Segmented(f, simd::LowBits::PerCode2),
+            Scheme::Fp(f) if f.bits() == 5 => RowKernel::Segmented(f, simd::LowBits::PerCode1),
+            Scheme::Fp(f) => RowKernel::Codes(f),
+            Scheme::Ams { base, k } if base == FpFormat::E2M3 && k == 3 => RowKernel::Fp533,
+            Scheme::Ams { base, k } if base.bits() == 5 => {
+                RowKernel::Segmented(base, simd::LowBits::Group(k))
+            }
+            Scheme::Ams { base, .. } => RowKernel::Codes(base),
+            Scheme::Int { .. } => RowKernel::Table,
+        }
+    }
+}
+
+/// De-interleave every row of `x` into the stride-3 streams used by the
+/// FP5.33 kernels, laid out `[batch][groups]`. Returns the group count.
+fn deinterleave3_batch(
+    x: &Tensor,
+    x0: &mut Vec<f32>,
+    x1: &mut Vec<f32>,
+    x2: &mut Vec<f32>,
+) -> usize {
+    let groups = x.cols().div_ceil(3);
+    let batch = x.rows();
+    for v in [&mut *x0, &mut *x1, &mut *x2] {
+        v.clear();
+        v.resize(batch * groups, 0.0);
+    }
+    for b in 0..batch {
+        let base = b * groups;
+        for (j, chunk) in x.row(b).chunks(3).enumerate() {
+            x0[base + j] = chunk[0];
+            if chunk.len() > 1 {
+                x1[base + j] = chunk[1];
+            }
+            if chunk.len() > 2 {
+                x2[base + j] = chunk[2];
+            }
+        }
+    }
+    groups
+}
+
+/// `yt: [rows, batch]` → `y: [batch, rows]`.
+pub(crate) fn transpose_into(yt: &[f32], rows: usize, batch: usize, y: &mut [f32]) {
+    debug_assert_eq!(yt.len(), rows * batch);
+    debug_assert_eq!(y.len(), rows * batch);
+    for r in 0..rows {
+        let src = &yt[r * batch..(r + 1) * batch];
+        for (b, &v) in src.iter().enumerate() {
+            y[b * rows + r] = v;
+        }
+    }
+}
+
+/// Dense f32 batched product through the same tile micro-kernels:
+/// `Y[batch, rows] = X[batch, cols] · Wᵀ`. Serves the FP16-reference
+/// baseline so speedup comparisons measure the format, not kernel quality.
+pub fn dense_gemm_into(w: &Tensor, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
+    let (rows, cols) = (w.rows(), w.cols());
+    let batch = x.rows();
+    assert_eq!(x.cols(), cols);
+    assert_eq!(y.shape(), &[batch, rows]);
+    let yt = &mut scratch.yt;
+    yt.clear();
+    yt.resize(rows * batch, 0.0);
+    for r in 0..rows {
+        let wr = w.row(r);
+        let orow = &mut yt[r * batch..(r + 1) * batch];
+        let mut b = 0usize;
+        while b < batch {
+            let rem = batch - b;
+            if rem >= 8 {
+                dense_tile::<8>(wr, x, b, &mut orow[b..b + 8]);
+                b += 8;
+            } else if rem >= 4 {
+                dense_tile::<4>(wr, x, b, &mut orow[b..b + 4]);
+                b += 4;
+            } else if rem >= 2 {
+                dense_tile::<2>(wr, x, b, &mut orow[b..b + 2]);
+                b += 2;
+            } else {
+                dense_tile::<1>(wr, x, b, &mut orow[b..b + 1]);
+                b += 1;
+            }
+        }
+    }
+    transpose_into(yt, rows, batch, y.data_mut());
+}
+
+#[inline]
+fn dense_tile<const T: usize>(wr: &[f32], x: &Tensor, b0: usize, out: &mut [f32]) {
+    let xs: [&[f32]; T] = core::array::from_fn(|j| x.row(b0 + j));
+    let d = simd::dotn_dense(wr, &xs);
+    out[..T].copy_from_slice(&d);
+}
+
+/// Scheme names the kernel tests must cover — shared by the unit tests
+/// here and the fused-GEMM property test in `util::proptest` so the two
+/// cannot drift.
+#[cfg(test)]
+pub(crate) const TEST_SCHEMES: &[&str] = &[
+    "fp16", "fp8", "int8", "int4", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4-e2m1",
+    "fp5.33", "fp4.5", "fp4.3", "fp4.25", "ams-e3m2-k4",
+];
+
+/// A packed linear layer with its dequant table and kernel family
+/// resolved — the unit the coordinator serves.
 #[derive(Clone, Debug)]
 pub struct QuantLinear {
     pub packed: PackedTensor,
     table: Vec<f32>,
-
+    kernel: RowKernel,
 }
+
+/// MACs below which parallel dispatch is not worth the pool hand-off.
+const PAR_MIN_MACS: usize = 1 << 18;
 
 impl QuantLinear {
     pub fn new(packed: PackedTensor) -> QuantLinear {
         let table = dequant_table(packed.scheme);
-        QuantLinear { packed, table }
+        let kernel = RowKernel::for_scheme(packed.scheme);
+        QuantLinear {
+            packed,
+            table,
+            kernel,
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -63,75 +237,97 @@ impl QuantLinear {
     }
 
     /// Single-vector product: `y[r] = scale_r * Σ_c deq(W[r,c]) x[c]`.
-    ///
-    /// Two-phase hot path for FP schemes (§Perf): (1) unpack the row's
-    /// codes into a reusable buffer, (2) vectorized bit-placement decode +
-    /// FMA (`simd::dot_codes`), with the exponent rebias folded into the
-    /// channel scale. FP16 uses VCVTPH2PS. Integer schemes keep the
-    /// table kernels.
+    /// Allocates a transient scratch; hot paths use [`QuantLinear::gemv_with`].
     pub fn gemv(&self, x: &[f32], y: &mut [f32]) {
+        let mut scratch = GemmScratch::new();
+        self.gemv_with(x, y, &mut scratch);
+    }
+
+    /// Zero-alloc GEMV against a caller-owned scratch.
+    ///
+    /// Two-phase hot path for FP schemes (§Perf): fully-fused SIMD decode
+    /// per layout family (`simd::dotn_*`), with the exponent rebias folded
+    /// into the channel scale; FP16 uses VCVTPH2PS; integer schemes keep
+    /// the table kernels.
+    pub fn gemv_with(&self, x: &[f32], y: &mut [f32], scratch: &mut GemmScratch) {
         assert_eq!(x.len(), self.packed.cols);
         assert_eq!(y.len(), self.packed.rows);
-        self.gemv_rows(0, self.packed.rows, x, y);
+        self.gemv_rows(0, self.packed.rows, x, y, scratch);
     }
 
     /// GEMV over a row range `[start, end)`; `y` has `end - start` slots.
     /// Shared by the serial and parallel paths.
-    pub(crate) fn gemv_rows(&self, start: usize, end: usize, x: &[f32], y: &mut [f32]) {
+    pub(crate) fn gemv_rows(
+        &self,
+        start: usize,
+        end: usize,
+        x: &[f32],
+        y: &mut [f32],
+        scratch: &mut GemmScratch,
+    ) {
         let cols = self.packed.cols;
-        match self.packed.scheme {
-            Scheme::Fp16 => {
+        let GemmScratch {
+            codes, x0, x1, x2, ..
+        } = scratch;
+        match self.kernel {
+            RowKernel::Fp16Bits => {
                 for (i, r) in (start..end).enumerate() {
                     y[i] = simd::dot_fp16_bits(&self.packed.row_words(r)[..cols], x, &self.table)
                         * self.packed.scales[r];
                 }
             }
-            Scheme::Fp(fmt) | Scheme::Ams { base: fmt, .. } => {
-                // Fully-fused SIMD paths per layout family; fall back to
-                // unpack + vectorized decode-dot where none applies.
-                let is_fp533 = matches!(
-                    self.packed.scheme,
-                    Scheme::Ams { base, k } if base == crate::formats::FpFormat::E2M3 && k == 3
-                );
-                let seg = match self.packed.scheme {
-                    Scheme::Fp(f) if f.bits() == 6 => Some(simd::LowBits::PerCode2),
-                    Scheme::Fp(f) if f.bits() == 5 => Some(simd::LowBits::PerCode1),
-                    Scheme::Ams { base, k } if base.bits() == 5 => Some(simd::LowBits::Group(k)),
-                    _ => None,
-                };
-                let is_bytes = matches!(self.packed.scheme, Scheme::Fp(f) if f.bits() == 8);
-                let hi_len = cols.div_ceil(4);
-                // Stride-3 de-interleaved activations for FP5.33 (amortized
-                // over all rows).
-                let (mut x0, mut x1, mut x2) = (Vec::new(), Vec::new(), Vec::new());
-                if is_fp533 {
-                    simd::deinterleave3(x, &mut x0, &mut x1, &mut x2);
-                }
-                let mut codes = vec![0u16; cols];
+            RowKernel::Bytes(fmt) => {
                 for (i, r) in (start..end).enumerate() {
-                    let words = self.packed.row_words(r);
-                    if is_fp533 {
-                        if let Some(dot) = simd::dot_fp533(words, cols, &x0, &x1, &x2, x) {
-                            y[i] = dot * self.packed.scales[r];
-                            continue;
-                        }
-                    } else if is_bytes {
-                        if let Some(dot) = simd::dot_bytes(words, cols, x, fmt) {
-                            y[i] = dot * self.packed.scales[r];
-                            continue;
-                        }
-                    } else if let Some(low) = seg {
-                        let (hi, lo) = words.split_at(hi_len);
-                        if let Some(dot) = simd::dot_segmented(hi, lo, cols, x, fmt, low) {
-                            y[i] = dot * self.packed.scales[r];
-                            continue;
-                        }
-                    }
-                    crate::pack::unpack_row(self.packed.scheme, words, cols, &mut codes);
-                    y[i] = simd::dot_codes(&codes, x, fmt) * self.packed.scales[r];
+                    y[i] = simd::dotn_bytes::<1>(self.packed.row_words(r), cols, &[x], fmt)[0]
+                        * self.packed.scales[r];
                 }
             }
-            _ => {
+            RowKernel::Segmented(fmt, low) => {
+                let hi_len = cols.div_ceil(4);
+                for (i, r) in (start..end).enumerate() {
+                    let (hi, lo) = self.packed.row_words(r).split_at(hi_len);
+                    y[i] = simd::dotn_segmented::<1>(hi, lo, cols, &[x], fmt, low)[0]
+                        * self.packed.scales[r];
+                }
+            }
+            RowKernel::Fp533 => {
+                // Stride-3 de-interleaved activations (amortized over
+                // rows) — only built when the AVX-512 path will read them.
+                let use_deint = simd::fp533_uses_deint(cols);
+                if use_deint {
+                    simd::deinterleave3(x, x0, x1, x2);
+                }
+                let (a0, a1, a2): (&[f32], &[f32], &[f32]) = if use_deint {
+                    (x0.as_slice(), x1.as_slice(), x2.as_slice())
+                } else {
+                    (&[], &[], &[])
+                };
+                for (i, r) in (start..end).enumerate() {
+                    let d = simd::dotn_fp533::<1>(
+                        self.packed.row_words(r),
+                        cols,
+                        &[a0],
+                        &[a1],
+                        &[a2],
+                        &[x],
+                    );
+                    y[i] = d[0] * self.packed.scales[r];
+                }
+            }
+            RowKernel::Codes(fmt) => {
+                codes.clear();
+                codes.resize(cols, 0);
+                for (i, r) in (start..end).enumerate() {
+                    crate::pack::unpack_row(
+                        self.packed.scheme,
+                        self.packed.row_words(r),
+                        cols,
+                        codes,
+                    );
+                    y[i] = simd::dot_codes(codes, x, fmt) * self.packed.scales[r];
+                }
+            }
+            RowKernel::Table => {
                 for (i, r) in (start..end).enumerate() {
                     y[i] = kernels::row_dot(
                         self.packed.scheme,
@@ -146,49 +342,177 @@ impl QuantLinear {
     }
 
     /// Batched product: `X: [batch, cols]` row-major → `Y: [batch, rows]`.
-    /// Internally transposes X once so the inner loop reads a contiguous
-    /// per-column activation block (the CPU analog of coalesced loads).
+    /// Allocates the output and a transient scratch; hot paths use
+    /// [`QuantLinear::gemm_into`].
     pub fn gemm(&self, x: &Tensor) -> Tensor {
-        assert_eq!(x.ndim(), 2);
-        assert_eq!(x.cols(), self.packed.cols);
-        let batch = x.rows();
-        let xt = x.transpose(); // [cols, batch]
-        let mut y = Tensor::zeros(&[batch, self.packed.rows]);
-        let mut acc = vec![0f32; batch];
-        let mut vals = vec![0f32; self.packed.cols];
-        let mut codes = vec![0u16; self.packed.cols];
-        for r in 0..self.packed.rows {
-            acc.fill(0.0);
-            self.row_values_fast(r, &mut codes, &mut vals);
-            kernels::batch_fma(&vals, xt.data(), batch, &mut acc);
-            // The fold factor is baked into `vals` only on the table path;
-            // apply scale (and fold for the decode path) at the end.
-            let s = self.packed.scales[r];
-            for b in 0..batch {
-                y.set2(b, r, acc[b] * s);
-            }
-        }
+        let mut scratch = GemmScratch::new();
+        self.gemm_with(x, &mut scratch)
+    }
+
+    /// Batched product against a caller-owned scratch (output allocated).
+    pub fn gemm_with(&self, x: &Tensor, scratch: &mut GemmScratch) -> Tensor {
+        let mut y = Tensor::zeros(&[x.rows(), self.packed.rows]);
+        self.gemm_into(x, &mut y, scratch);
         y
     }
 
-    /// Decode one packed row into pre-scale (fold-applied) values.
-    fn row_values_fast(&self, r: usize, codes: &mut [u16], vals: &mut [f32]) {
-        let cols = self.packed.cols;
-        match self.packed.scheme {
-            Scheme::Fp(fmt) | Scheme::Ams { base: fmt, .. } => {
-                crate::pack::unpack_row(self.packed.scheme, self.packed.row_words(r), cols, codes);
-                simd::decode_codes(codes, vals, fmt);
-            }
-            _ => kernels::row_values(
-                self.packed.scheme,
-                self.packed.row_words(r),
-                cols,
-                &self.table,
-                vals,
-            ),
+    /// Zero-alloc batched product into a pre-shaped `y: [batch, rows]`.
+    pub fn gemm_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.cols(), self.packed.cols);
+        let batch = x.rows();
+        let rows = self.packed.rows;
+        assert_eq!(y.shape(), &[batch, rows]);
+        let GemmScratch {
+            codes,
+            x0,
+            x1,
+            x2,
+            yt,
+        } = scratch;
+        let deint = if matches!(self.kernel, RowKernel::Fp533)
+            && simd::fp533_uses_deint(self.packed.cols)
+        {
+            let groups = deinterleave3_batch(x, x0, x1, x2);
+            Some((x0.as_slice(), x1.as_slice(), x2.as_slice(), groups))
+        } else {
+            None
+        };
+        yt.clear();
+        yt.resize(rows * batch, 0.0);
+        self.gemm_rows_t(0, rows, x, deint, codes, yt);
+        transpose_into(yt, rows, batch, y.data_mut());
+    }
+
+    /// Pick a worker count for this matrix (1 = stay serial). Consults the
+    /// shared pool only above the size floor so small models never spin it
+    /// up.
+    pub(crate) fn auto_threads(&self, batch: usize) -> usize {
+        let macs = self.packed.rows * self.packed.cols * batch.max(1);
+        if macs < PAR_MIN_MACS {
+            return 1;
+        }
+        let t = crate::util::threadpool::shared_pool().size();
+        if t <= 1 || self.packed.rows < 4 * t {
+            1
+        } else {
+            t
         }
     }
 
+    /// GEMV that self-selects serial vs pool-parallel execution.
+    pub fn gemv_auto(&self, x: &[f32], y: &mut [f32], scratch: &mut GemmScratch) {
+        let threads = self.auto_threads(1);
+        if threads > 1 {
+            self.gemv_parallel(x, y, threads);
+        } else {
+            self.gemv_with(x, y, scratch);
+        }
+    }
+
+    /// Batched product that self-selects serial vs pool-parallel execution.
+    pub fn gemm_auto_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
+        let threads = self.auto_threads(x.rows());
+        if threads > 1 {
+            self.gemm_parallel_into(x, y, threads, scratch);
+        } else {
+            self.gemm_into(x, y, scratch);
+        }
+    }
+
+    /// Tiled batched kernel over rows `[r0, r1)`: writes the transposed
+    /// block `out[(r - r0) * batch + b] = scale_r · Σ_c deq(W[r,c])·X[b,c]`.
+    /// Each packed row is streamed once per ≤[`simd::NTILE`]-column tile;
+    /// `deint` carries the shared FP5.33 activation streams.
+    pub(crate) fn gemm_rows_t(
+        &self,
+        r0: usize,
+        r1: usize,
+        x: &Tensor,
+        deint: Option<(&[f32], &[f32], &[f32], usize)>,
+        codes: &mut Vec<u16>,
+        out: &mut [f32],
+    ) {
+        let cols = self.packed.cols;
+        let batch = x.rows();
+        debug_assert_eq!(out.len(), (r1 - r0) * batch);
+        codes.clear();
+        codes.resize(cols, 0);
+        for r in r0..r1 {
+            let words = self.packed.row_words(r);
+            // Code-buffer families unpack once per row; the streaming
+            // families decode straight from the packed words per tile.
+            if matches!(self.kernel, RowKernel::Codes(_) | RowKernel::Table) {
+                crate::pack::unpack_row(self.packed.scheme, words, cols, codes);
+            }
+            let scale = self.packed.scales[r];
+            let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
+            let mut b = 0usize;
+            while b < batch {
+                let rem = batch - b;
+                if rem >= 8 {
+                    self.row_tile::<8>(words, x, deint, codes, b, &mut orow[b..b + 8], scale);
+                    b += 8;
+                } else if rem >= 4 {
+                    self.row_tile::<4>(words, x, deint, codes, b, &mut orow[b..b + 4], scale);
+                    b += 4;
+                } else if rem >= 2 {
+                    self.row_tile::<2>(words, x, deint, codes, b, &mut orow[b..b + 2], scale);
+                    b += 2;
+                } else {
+                    self.row_tile::<1>(words, x, deint, codes, b, &mut orow[b..b + 1], scale);
+                    b += 1;
+                }
+            }
+        }
+    }
+
+    /// One fused row × T-column tile: decode each code once, fan the value
+    /// into T register accumulators.
+    #[inline]
+    fn row_tile<const T: usize>(
+        &self,
+        words: &[u16],
+        x: &Tensor,
+        deint: Option<(&[f32], &[f32], &[f32], usize)>,
+        codes: &[u16],
+        b0: usize,
+        out: &mut [f32],
+        scale: f32,
+    ) {
+        let cols = self.packed.cols;
+        let xs: [&[f32]; T] = core::array::from_fn(|j| x.row(b0 + j));
+        let d = match self.kernel {
+            RowKernel::Fp16Bits => simd::dotn_fp16_bits(&words[..cols], &xs, &self.table),
+            RowKernel::Bytes(fmt) => simd::dotn_bytes(words, cols, &xs, fmt),
+            RowKernel::Segmented(fmt, low) => {
+                let (hi, lo) = words.split_at(cols.div_ceil(4));
+                simd::dotn_segmented(hi, lo, cols, &xs, fmt, low)
+            }
+            RowKernel::Fp533 => match deint {
+                Some((x0, x1, x2, groups)) => {
+                    let x0s: [&[f32]; T] =
+                        core::array::from_fn(|j| &x0[(b0 + j) * groups..(b0 + j + 1) * groups]);
+                    let x1s: [&[f32]; T] =
+                        core::array::from_fn(|j| &x1[(b0 + j) * groups..(b0 + j + 1) * groups]);
+                    let x2s: [&[f32]; T] =
+                        core::array::from_fn(|j| &x2[(b0 + j) * groups..(b0 + j + 1) * groups]);
+                    simd::dotn_fp533(words, cols, &x0s, &x1s, &x2s, &xs)
+                }
+                // No streams were built: the kernel's scalar path (the
+                // same `fp533_uses_deint` gate) never reads them.
+                None => {
+                    let empty: [&[f32]; T] = [&[]; T];
+                    simd::dotn_fp533(words, cols, &empty, &empty, &empty, &xs)
+                }
+            },
+            RowKernel::Codes(fmt) => simd::dotn_codes(&codes[..cols], &xs, fmt),
+            RowKernel::Table => simd::dotn_table(&codes[..cols], &xs, &self.table),
+        };
+        for j in 0..T {
+            out[j] = d[j] * scale;
+        }
+    }
 
     /// Reference implementation: unpack codes row by row, dequantize
     /// through the table, dense dot. Independent of the fused kernels.
@@ -235,10 +559,7 @@ mod tests {
         QuantLinear::new(packed)
     }
 
-    const SCHEMES: &[&str] = &[
-        "fp16", "fp8", "int8", "int4", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4-e2m1",
-        "fp5.33", "fp4.5", "fp4.3", "fp4.25", "ams-e3m2-k4",
-    ];
+    pub(crate) const SCHEMES: &[&str] = super::TEST_SCHEMES;
 
     #[test]
     fn gemv_matches_reference_all_schemes() {
@@ -258,25 +579,91 @@ mod tests {
         }
     }
 
+    /// The tiled batched path must agree with per-row GEMV for every
+    /// scheme, at shapes that are deliberately ragged for every layout:
+    /// cols not a multiple of the SIMD lane count (16), the FP5.33 group
+    /// width (3/48), or the shared-bit group size k; batch widths that
+    /// exercise the 8/4/2/1 tile ladder (1, 3, tile+1, 2·tile+1).
     #[test]
     fn gemm_matches_gemv_per_row() {
         let mut rng = Rng::new(101);
-        for name in ["fp16", "fp5.33", "fp4.25", "fp6-e2m3", "int8"] {
-            let lin = make_linear(name, 9, 48, 2);
-            let x = init::gaussian(&[5, 48], 0.0, 1.0, &mut rng);
-            let y = lin.gemm(&x);
-            assert_eq!(y.shape(), &[5, 9]);
-            for b in 0..5 {
-                let mut yr = vec![0f32; 9];
-                lin.gemv(x.row(b), &mut yr);
+        for name in SCHEMES {
+            for cols in [48usize, 61] {
+                let lin = make_linear(name, 9, cols, 2);
+                let mut scratch = GemmScratch::new();
+                for batch in [1usize, 3, 5, 9, 17] {
+                    let x = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
+                    let y = lin.gemm_with(&x, &mut scratch);
+                    assert_eq!(y.shape(), &[batch, 9]);
+                    for b in 0..batch {
+                        let mut yr = vec![0f32; 9];
+                        lin.gemv(x.row(b), &mut yr);
+                        for r in 0..9 {
+                            assert!(
+                                (y.at2(b, r) - yr[r]).abs() <= 1e-4 * (1.0 + yr[r].abs()),
+                                "{name} cols={cols} batch={batch} b={b} r={r}: {} vs {}",
+                                y.at2(b, r),
+                                yr[r]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One scratch reused across shrinking/growing batches stays correct
+    /// (buffers are high-water sized, never stale).
+    #[test]
+    fn scratch_reuse_across_batches() {
+        let mut rng = Rng::new(102);
+        let lin = make_linear("fp5.33", 11, 51, 3);
+        let mut scratch = GemmScratch::new();
+        for &batch in &[9usize, 2, 5, 1, 8] {
+            let x = init::gaussian(&[batch, 51], 0.0, 1.0, &mut rng);
+            let fresh = lin.gemm(&x);
+            let reused = lin.gemm_with(&x, &mut scratch);
+            assert_eq!(fresh, reused, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn dense_gemm_matches_matmul() {
+        let mut rng = Rng::new(103);
+        let w = init::gaussian(&[9, 37], 0.0, 1.0, &mut rng);
+        let mut scratch = GemmScratch::new();
+        for batch in [1usize, 3, 8, 11] {
+            let x = init::gaussian(&[batch, 37], 0.0, 1.0, &mut rng);
+            let mut y = Tensor::zeros(&[batch, 9]);
+            dense_gemm_into(&w, &x, &mut y, &mut scratch);
+            let yref = x.matmul(&w.transpose());
+            for b in 0..batch {
                 for r in 0..9 {
                     assert!(
-                        (y.at2(b, r) - yr[r]).abs() <= 1e-4 * (1.0 + yr[r].abs()),
-                        "{name} b={b} r={r}"
+                        (y.at2(b, r) - yref.at2(b, r)).abs()
+                            <= 1e-4 * (1.0 + yref.at2(b, r).abs()),
+                        "batch={batch} b={b} r={r}"
                     );
                 }
             }
         }
+    }
+
+    /// The auto path (which may engage the shared pool) must match the
+    /// serial path bit-for-bit: work is row-sharded, per-row math is
+    /// identical.
+    #[test]
+    fn gemm_auto_matches_serial() {
+        let mut rng = Rng::new(104);
+        let lin = make_linear("fp4.25", 256, 1024, 4);
+        let x = init::gaussian(&[5, 1024], 0.0, 1.0, &mut rng);
+        let mut s1 = GemmScratch::new();
+        let mut s2 = GemmScratch::new();
+        let mut y_auto = Tensor::zeros(&[5, 256]);
+        lin.gemm_auto_into(&x, &mut y_auto, &mut s1);
+        let mut y_serial = Tensor::zeros(&[5, 256]);
+        lin.gemm_into(&x, &mut y_serial, &mut s2);
+        assert_eq!(y_auto, y_serial);
     }
 
     #[test]

@@ -1,75 +1,145 @@
-//! Row-sharded parallel GEMV/GEMM over scoped threads.
+//! Row-sharded parallel GEMV/GEMM on the shared persistent thread pool.
 //!
 //! Output rows are independent, so the packed matrix is split into
-//! contiguous row blocks, one per worker. Used by the serving hot path for
-//! the large MLP projections where a single core cannot saturate memory
-//! bandwidth.
+//! contiguous row blocks, one per worker. Workers write *pre-split
+//! disjoint output slices* — the GEMV output directly, the GEMM through
+//! the `[rows, batch]` staging buffer whose row-range chunks are
+//! contiguous — so there is no lock and no per-element splice on the
+//! merge path. Per-worker decode scratch is thread-local to the pool
+//! workers (created once per worker thread, reused across calls), keeping
+//! the steady-state decode loop allocation-free.
+//!
+//! Used by the serving hot path for the large projections where a single
+//! core cannot saturate memory bandwidth; `QuantLinear::{gemv,gemm}_auto*`
+//! dispatch here automatically above the size floor.
 
-use super::{kernels, QuantLinear};
+use super::{GemmScratch, QuantLinear, RowKernel};
 use crate::tensor::Tensor;
-use crate::util::threadpool::scope_chunks;
-use std::sync::Mutex;
+use crate::util::threadpool::shared_pool;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread decode scratch for pool workers (and any other thread
+    /// that lands here): one allocation high-water per worker, reused for
+    /// every job.
+    static WORKER_SCRATCH: RefCell<GemmScratch> = RefCell::new(GemmScratch::new());
+}
+
+fn with_worker_scratch<R>(f: impl FnOnce(&mut GemmScratch) -> R) -> R {
+    WORKER_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// Split `buf` into per-chunk `(start_row, slice)` parts of `per` rows
+/// each (`row_width` elements per row). Disjoint by construction.
+fn split_rows<'a>(
+    buf: &'a mut [f32],
+    rows: usize,
+    per: usize,
+    row_width: usize,
+) -> Vec<(usize, &'a mut [f32])> {
+    let mut parts = Vec::with_capacity(rows.div_ceil(per));
+    let mut rest = buf;
+    let mut start = 0usize;
+    while start < rows {
+        let take = per.min(rows - start);
+        let (head, tail) = rest.split_at_mut(take * row_width);
+        parts.push((start, head));
+        start += take;
+        rest = tail;
+    }
+    parts
+}
 
 impl QuantLinear {
-    /// Parallel `gemv` across `threads` row blocks.
+    /// Parallel `gemv` across up to `threads` row blocks on the shared
+    /// pool. Each worker owns a disjoint contiguous slice of `y`.
+    ///
+    /// `threads` is a sharding hint capped at the shared pool's size —
+    /// the real concurrency ceiling. Set `AMS_THREADS` to grow the pool
+    /// (e.g. for oversubscription experiments); numerical results are
+    /// identical at any worker count (row-sharded, per-row math fixed).
     pub fn gemv_parallel(&self, x: &[f32], y: &mut [f32], threads: usize) {
         assert_eq!(x.len(), self.packed.cols);
         assert_eq!(y.len(), self.packed.rows);
-        if threads <= 1 || self.packed.rows < 2 * threads {
+        let rows = self.packed.rows;
+        let threads = threads.min(shared_pool().size());
+        if threads <= 1 || rows < 2 * threads {
             self.gemv(x, y);
             return;
         }
-        let y_cell = Mutex::new(&mut *y);
-        // Each worker owns a disjoint row range; collect into a local buffer
-        // then splice under the lock (short critical section). Each worker
-        // computes rows through a thread-local gemv on a row-sliced view.
-        scope_chunks(self.packed.rows, threads, |_, start, end| {
-            let mut local = vec![0f32; end - start];
-            self.gemv_rows(start, end, x, &mut local);
-            let mut guard = y_cell.lock().unwrap();
-            guard[start..end].copy_from_slice(&local);
+        let per = rows.div_ceil(threads);
+        let parts = split_rows(y, rows, per, 1);
+        shared_pool().scope_parts(parts, &|_, (start, yslice): (usize, &mut [f32])| {
+            with_worker_scratch(|scratch| {
+                self.gemv_rows(start, start + yslice.len(), x, yslice, scratch);
+            });
         });
     }
 
     /// Parallel batched product (see [`QuantLinear::gemm`]).
     pub fn gemm_parallel(&self, x: &Tensor, threads: usize) -> Tensor {
+        let mut scratch = GemmScratch::new();
+        let mut y = Tensor::zeros(&[x.rows(), self.packed.rows]);
+        self.gemm_parallel_into(x, &mut y, threads, &mut scratch);
+        y
+    }
+
+    /// Zero-alloc parallel batched product into a pre-shaped
+    /// `y: [batch, rows]`. Row ranges of the `[rows, batch]` staging
+    /// buffer are pre-split into disjoint chunks, one per worker; the
+    /// single transpose into `y` happens on the caller thread.
+    ///
+    /// `threads` is a sharding hint capped at the shared pool's size (see
+    /// [`QuantLinear::gemv_parallel`]; `AMS_THREADS` grows the pool).
+    pub fn gemm_parallel_into(
+        &self,
+        x: &Tensor,
+        y: &mut Tensor,
+        threads: usize,
+        scratch: &mut GemmScratch,
+    ) {
         assert_eq!(x.ndim(), 2);
         assert_eq!(x.cols(), self.packed.cols);
         let batch = x.rows();
-        if threads <= 1 || self.packed.rows < 2 * threads {
-            return self.gemm(x);
+        let rows = self.packed.rows;
+        assert_eq!(y.shape(), &[batch, rows]);
+        let threads = threads.min(shared_pool().size());
+        if threads <= 1 || rows < 2 * threads {
+            return self.gemm_into(x, y, scratch);
         }
-        let xt = x.transpose();
-        let y = Mutex::new(Tensor::zeros(&[batch, self.packed.rows]));
-        scope_chunks(self.packed.rows, threads, |_, start, end| {
-            let mut acc = vec![0f32; batch];
-            let mut vals = vec![0f32; self.packed.cols];
-            let mut codes = vec![0u16; self.packed.cols];
-            let mut local = vec![0f32; (end - start) * batch]; // [rows_local, batch]
-            for r in start..end {
-                acc.fill(0.0);
-                self.row_values_fast(r, &mut codes, &mut vals);
-                kernels::batch_fma(&vals, xt.data(), batch, &mut acc);
-                let s = self.packed.scales[r];
-                for b in 0..batch {
-                    local[(r - start) * batch + b] = acc[b] * s;
-                }
-            }
-            let mut guard = y.lock().unwrap();
-            for r in start..end {
-                for b in 0..batch {
-                    guard.set2(b, r, local[(r - start) * batch + b]);
-                }
-            }
+        let GemmScratch {
+            x0, x1, x2, yt, ..
+        } = scratch;
+        // FP5.33 de-interleaved activation streams are built once on the
+        // caller and shared read-only by every worker (skipped when the
+        // kernel's scalar path would never read them).
+        let deint = if matches!(self.kernel, RowKernel::Fp533)
+            && super::simd::fp533_uses_deint(self.packed.cols)
+        {
+            let groups = super::deinterleave3_batch(x, x0, x1, x2);
+            Some((x0.as_slice(), x1.as_slice(), x2.as_slice(), groups))
+        } else {
+            None
+        };
+        yt.clear();
+        yt.resize(rows * batch, 0.0);
+        let per = rows.div_ceil(threads);
+        let parts = split_rows(yt, rows, per, batch);
+        shared_pool().scope_parts(parts, &|_, (start, chunk): (usize, &mut [f32])| {
+            let nrows = chunk.len() / batch;
+            with_worker_scratch(|ws| {
+                self.gemm_rows_t(start, start + nrows, x, deint, &mut ws.codes, chunk);
+            });
         });
-        y.into_inner().unwrap()
+        super::transpose_into(yt, rows, batch, y.data_mut());
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::tests::make_linear;
-    use crate::tensor::init;
+    use super::super::GemmScratch;
+    use crate::tensor::{init, Tensor};
     use crate::util::prng::Rng;
 
     #[test]
@@ -89,11 +159,29 @@ mod tests {
     #[test]
     fn parallel_matches_serial_gemm() {
         let mut rng = Rng::new(8);
-        let lin = make_linear("fp4.25", 48, 96, 4);
-        let x = init::gaussian(&[8, 96], 0.0, 1.0, &mut rng);
-        let a = lin.gemm(&x);
-        let b = lin.gemm_parallel(&x, 4);
-        assert_eq!(a, b);
+        // Batch widths across the 8/4/2/1 tile ladder, incl. a ragged one.
+        for name in ["fp4.25", "fp5.33", "fp16"] {
+            let lin = make_linear(name, 48, 96, 4);
+            for batch in [5usize, 8] {
+                let x = init::gaussian(&[batch, 96], 0.0, 1.0, &mut rng);
+                let a = lin.gemm(&x);
+                let b = lin.gemm_parallel(&x, 4);
+                assert_eq!(a, b, "{name} batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_into_reuses_scratch() {
+        let mut rng = Rng::new(9);
+        let lin = make_linear("fp5.33", 48, 96, 5);
+        let mut scratch = GemmScratch::new();
+        for &batch in &[8usize, 3, 8] {
+            let x = init::gaussian(&[batch, 96], 0.0, 1.0, &mut rng);
+            let mut y = Tensor::zeros(&[batch, 48]);
+            lin.gemm_parallel_into(&x, &mut y, 4, &mut scratch);
+            assert_eq!(y, lin.gemm(&x), "batch={batch}");
+        }
     }
 
     #[test]

@@ -481,6 +481,517 @@ unsafe fn dot_fp16_avx512(words: &[u16], x: &[f32]) -> f32 {
     s
 }
 
+// --- tiled batch kernels (dotN) -----------------------------------------
+//
+// The batched GEMM hot path streams one packed row once against a *tile*
+// of `T` activation rows (T ∈ {8, 4, 2, 1}, picked by the caller from the
+// remaining batch width). Each code is decoded exactly once per row-tile
+// and fan-out FMAd into `T` register accumulators, so the packed words —
+// not dequantized f32 — are the only weight traffic. Activation rows come
+// straight from row-major `X` (contiguous per row), so no transpose is
+// needed. All dotn_* kernels are *total*: AVX-512 when available and the
+// shape qualifies, an equivalent scalar loop otherwise.
+
+/// Largest tile width the batched path uses (activation rows per pass).
+pub const NTILE: usize = 8;
+
+/// Every activation row must cover `n` elements — guards the unchecked
+/// vector loads inside the AVX-512 tile kernels (safe-fn boundary).
+#[inline]
+fn assert_xs_len<const T: usize>(xs: &[&[f32]; T], n: usize) {
+    for x in xs {
+        assert!(x.len() >= n, "activation row too short: {} < {n}", x.len());
+    }
+}
+
+/// Whether the FP5.33 AVX-512 fast path — and therefore the
+/// de-interleaved activation streams it consumes — applies at this column
+/// count on this host. Callers skip building the streams when false.
+pub fn fp533_uses_deint(cols: usize) -> bool {
+    is_avx512() && cols >= 48
+}
+
+/// Fused decode+dot of a code buffer against `T` activation rows.
+/// Returns the pre-channel-scale dots (fold applied, see [`dot_codes`]).
+pub fn dotn_codes<const T: usize>(codes: &[u16], xs: &[&[f32]; T], fmt: FpFormat) -> [f32; T] {
+    assert_xs_len(xs, codes.len());
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && codes.len() >= 16 {
+            // SAFETY: feature checked at runtime; xs lengths asserted.
+            return unsafe { dotn_codes_avx512(codes, xs, e, m, eb) };
+        }
+    }
+    let mut acc = [0f32; T];
+    for (i, &c) in codes.iter().enumerate() {
+        let v = decode_arith(u32::from(c), e, m, eb);
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dotn_codes_avx512<const T: usize>(
+    codes: &[u16],
+    xs: &[&[f32]; T],
+    e: u32,
+    m: u32,
+    eb: i32,
+) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let n = codes.len();
+    let dec = DecodeConsts::new(e, m, eb);
+    let mut acc = [_mm512_setzero_ps(); T];
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let c8 = _mm256_loadu_si256(codes.as_ptr().add(i) as *const _);
+        let v = dec.decode(_mm512_cvtepu16_epi32(c8));
+        for j in 0..T {
+            acc[j] = _mm512_fmadd_ps(v, _mm512_loadu_ps(xs[j].as_ptr().add(i)), acc[j]);
+        }
+        i += 16;
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(acc[j]);
+    }
+    while i < n {
+        let v = decode_arith(u32::from(codes[i]), e, m, eb);
+        for j in 0..T {
+            out[j] += v * xs[j][i];
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Table-gather dot of a code buffer against `T` activation rows (INT and
+/// other LUT-served schemes). The `T`-wide inner fan-out auto-vectorizes.
+pub fn dotn_table<const T: usize>(codes: &[u16], xs: &[&[f32]; T], table: &[f32]) -> [f32; T] {
+    assert_xs_len(xs, codes.len());
+    let mut acc = [0f32; T];
+    for (i, &c) in codes.iter().enumerate() {
+        let v = table[c as usize];
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+/// Fused fp16-bits dot against `T` activation rows (W16A16 baseline).
+pub fn dotn_fp16_bits<const T: usize>(
+    words: &[u16],
+    xs: &[&[f32]; T],
+    table: &[f32],
+) -> [f32; T] {
+    assert_xs_len(xs, words.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && words.len() >= 16 {
+            // SAFETY: feature checked; xs lengths asserted.
+            return unsafe { dotn_fp16_avx512(words, xs) };
+        }
+    }
+    let mut acc = [0f32; T];
+    for (i, &w) in words.iter().enumerate() {
+        let v = table[w as usize];
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn dotn_fp16_avx512<const T: usize>(words: &[u16], xs: &[&[f32]; T]) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let n = words.len();
+    let mut acc = [_mm512_setzero_ps(); T];
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let v = _mm512_cvtph_ps(_mm256_loadu_si256(words.as_ptr().add(i) as *const _));
+        for j in 0..T {
+            acc[j] = _mm512_fmadd_ps(v, _mm512_loadu_ps(xs[j].as_ptr().add(i)), acc[j]);
+        }
+        i += 16;
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(acc[j]);
+    }
+    while i < n {
+        let v = crate::formats::fp16::fp16_to_f32(words[i]);
+        for j in 0..T {
+            out[j] += v * xs[j][i];
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Fused 8-bit-code dot (FP8-e4m3) against `T` activation rows.
+pub fn dotn_bytes<const T: usize>(
+    words: &[u16],
+    cols: usize,
+    xs: &[&[f32]; T],
+    fmt: FpFormat,
+) -> [f32; T] {
+    assert_xs_len(xs, cols);
+    assert!(words.len() * 2 >= cols, "byte stream too short");
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && cols >= 16 {
+            // SAFETY: feature checked; stream and xs lengths asserted.
+            return unsafe { dotn_bytes_avx512(words, cols, xs, e, m, eb) };
+        }
+    }
+    let mut acc = [0f32; T];
+    for i in 0..cols {
+        // Little-endian: byte i of the u16 stream is code i.
+        let code = (u32::from(words[i / 2]) >> (8 * (i % 2))) & 0xFF;
+        let v = decode_arith(code, e, m, eb);
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dotn_bytes_avx512<const T: usize>(
+    words: &[u16],
+    cols: usize,
+    xs: &[&[f32]; T],
+    e: u32,
+    m: u32,
+    eb: i32,
+) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let dec = DecodeConsts::new(e, m, eb);
+    let bytes = words.as_ptr() as *const u8; // little-endian: byte i = code i
+    let mut acc = [_mm512_setzero_ps(); T];
+    let blocks = cols / 16;
+    for b in 0..blocks {
+        let c8 = _mm_loadu_si128(bytes.add(b * 16) as *const _);
+        let v = dec.decode(_mm512_cvtepu8_epi32(c8));
+        for j in 0..T {
+            acc[j] = _mm512_fmadd_ps(v, _mm512_loadu_ps(xs[j].as_ptr().add(b * 16)), acc[j]);
+        }
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(acc[j]);
+    }
+    for i in blocks * 16..cols {
+        let v = decode_arith(u32::from(*bytes.add(i)), e, m, eb);
+        for j in 0..T {
+            out[j] += v * xs[j][i];
+        }
+    }
+    out
+}
+
+/// Fused unpack+decode+dot for segmented layouts (FP6, FP5, FP4.x) against
+/// `T` activation rows. Total: falls back to a scalar extract+decode loop
+/// when the AVX-512 path does not apply (non-x86, tiny rows, or group
+/// widths that straddle 16-lane blocks).
+pub fn dotn_segmented<const T: usize>(
+    hi_words: &[u16],
+    low_words: &[u16],
+    cols: usize,
+    xs: &[&[f32]; T],
+    fmt: FpFormat,
+    low: LowBits,
+) -> [f32; T] {
+    assert_xs_len(xs, cols);
+    assert!(hi_words.len() >= cols.div_ceil(4), "hi stream too short");
+    let low_needed = match low {
+        LowBits::PerCode1 => cols.div_ceil(16),
+        LowBits::PerCode2 => cols.div_ceil(8),
+        LowBits::Group(k) => cols.div_ceil(k).div_ceil(16),
+    };
+    assert!(low_words.len() >= low_needed, "low stream too short");
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    #[cfg(target_arch = "x86_64")]
+    {
+        let lanes_ok = match low {
+            LowBits::Group(k) => k == 2 || k == 4,
+            _ => true,
+        };
+        if is_avx512() && cols >= 16 && lanes_ok {
+            // SAFETY: feature checked; stream and xs lengths asserted.
+            return unsafe { dotn_segmented_avx512(hi_words, low_words, cols, xs, fmt, low) };
+        }
+    }
+    let low_width = match low {
+        LowBits::PerCode2 => 2,
+        _ => 1,
+    };
+    let mut acc = [0f32; T];
+    for i in 0..cols {
+        let hi = (u32::from(hi_words[i / 4]) >> (4 * (i % 4))) & 0xF;
+        let lowbits = match low {
+            LowBits::PerCode1 => (u32::from(low_words[i / 16]) >> (i % 16)) & 1,
+            LowBits::PerCode2 => (u32::from(low_words[i / 8]) >> (2 * (i % 8))) & 3,
+            LowBits::Group(k) => {
+                let g = i / k;
+                (u32::from(low_words[g / 16]) >> (g % 16)) & 1
+            }
+        };
+        let v = decode_arith((hi << low_width) | lowbits, e, m, eb);
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dotn_segmented_avx512<const T: usize>(
+    hi_words: &[u16],
+    low_words: &[u16],
+    cols: usize,
+    xs: &[&[f32]; T],
+    fmt: FpFormat,
+    low: LowBits,
+) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    let dec = DecodeConsts::new(e, m, eb);
+    let nib_shifts = _mm512_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28, 0, 4, 8, 12, 16, 20, 24, 28);
+    let one = _mm512_set1_epi32(1);
+    let low_shifts = match low {
+        LowBits::PerCode1 => {
+            _mm512_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15)
+        }
+        LowBits::PerCode2 => {
+            _mm512_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14, 16, 18, 20, 22, 24, 26, 28, 30)
+        }
+        LowBits::Group(2) => _mm512_setr_epi32(0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7),
+        LowBits::Group(_) => _mm512_setr_epi32(0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3),
+    };
+    let (low_width, low_mask) = match low {
+        LowBits::PerCode2 => (2, _mm512_set1_epi32(3)),
+        _ => (1, one),
+    };
+    let mut acc = [_mm512_setzero_ps(); T];
+    let blocks = cols / 16;
+    for b in 0..blocks {
+        let hi64 = (hi_words.as_ptr().add(b * 4) as *const u64).read_unaligned();
+        let vlo = _mm512_set1_epi32(hi64 as u32 as i32);
+        let vhi = _mm512_set1_epi32((hi64 >> 32) as u32 as i32);
+        let packed = _mm512_mask_blend_epi32(0xFF00, vlo, vhi);
+        let nib = _mm512_and_si512(_mm512_srlv_epi32(packed, nib_shifts), _mm512_set1_epi32(0xF));
+        let lw = match low {
+            LowBits::PerCode1 => u32::from(*low_words.get_unchecked(b)),
+            LowBits::PerCode2 => {
+                let p = low_words.as_ptr().add(b * 2) as *const u32;
+                p.read_unaligned()
+            }
+            LowBits::Group(k) => {
+                let g0 = b * 16 / k;
+                u32::from(*low_words.get_unchecked(g0 / 16)) >> (g0 % 16)
+            }
+        };
+        let lowv = _mm512_and_si512(
+            _mm512_srlv_epi32(_mm512_set1_epi32(lw as i32), low_shifts),
+            low_mask,
+        );
+        let code = _mm512_or_si512(_mm512_sllv_epi32(nib, _mm512_set1_epi32(low_width)), lowv);
+        let v = dec.decode(code);
+        for j in 0..T {
+            acc[j] = _mm512_fmadd_ps(v, _mm512_loadu_ps(xs[j].as_ptr().add(b * 16)), acc[j]);
+        }
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(acc[j]);
+    }
+    for i in blocks * 16..cols {
+        let hi = (u32::from(hi_words[i / 4]) >> (4 * (i % 4))) & 0xF;
+        let lowbits = match low {
+            LowBits::PerCode1 => (u32::from(low_words[i / 16]) >> (i % 16)) & 1,
+            LowBits::PerCode2 => (u32::from(low_words[i / 8]) >> (2 * (i % 8))) & 3,
+            LowBits::Group(k) => {
+                let g = i / k;
+                (u32::from(low_words[g / 16]) >> (g % 16)) & 1
+            }
+        };
+        let v = decode_arith((hi << low_width) | lowbits, e, m, eb);
+        for j in 0..T {
+            out[j] += v * xs[j][i];
+        }
+    }
+    out
+}
+
+/// Fused FP5.33 dot against `T` activation rows. `x0s/x1s/x2s` hold the
+/// stride-3 de-interleaved streams of each activation row (built once per
+/// GEMM call, see [`deinterleave3`]); `xs` are the natural rows used by
+/// the scalar path and tail.
+pub fn dotn_fp533<const T: usize>(
+    words: &[u16],
+    cols: usize,
+    x0s: &[&[f32]; T],
+    x1s: &[&[f32]; T],
+    x2s: &[&[f32]; T],
+    xs: &[&[f32]; T],
+) -> [f32; T] {
+    assert_xs_len(xs, cols);
+    assert!(words.len() >= cols.div_ceil(3), "group stream too short");
+    let fmt = FpFormat::E2M3;
+    let eb = expo_base(fmt);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if fp533_uses_deint(cols) {
+            let full_groups = cols / 3;
+            assert_xs_len(x0s, full_groups);
+            assert_xs_len(x1s, full_groups);
+            assert_xs_len(x2s, full_groups);
+            // SAFETY: feature checked; stream and xs lengths asserted.
+            return unsafe { dotn_fp533_avx512(words, cols, x0s, x1s, x2s, xs) };
+        }
+    }
+    let _ = (x0s, x1s, x2s);
+    let mut acc = [0f32; T];
+    for i in 0..cols {
+        let w = u32::from(words[i / 3]);
+        let shared = (w >> 15) & 1;
+        let code = (((w >> (5 * (i % 3))) & 0x1F) << 1) | shared;
+        let v = decode_arith(code, fmt.ebits, fmt.mbits, eb);
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dotn_fp533_avx512<const T: usize>(
+    words: &[u16],
+    cols: usize,
+    x0s: &[&[f32]; T],
+    x1s: &[&[f32]; T],
+    x2s: &[&[f32]; T],
+    xs: &[&[f32]; T],
+) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let fmt = FpFormat::E2M3;
+    let eb = expo_base(fmt);
+    let dec = DecodeConsts::new(fmt.ebits, fmt.mbits, eb);
+    let m5 = _mm512_set1_epi32(0x1F);
+    let one = _mm512_set1_epi32(1);
+    let full_groups = cols / 3;
+    let blocks = full_groups / 16;
+    // Two accumulators per tile column: streams 0+2 and stream 1, keeping
+    // each FMA chain short while bounding register pressure at T=8.
+    let mut acc_a = [_mm512_setzero_ps(); T];
+    let mut acc_b = [_mm512_setzero_ps(); T];
+    for b in 0..blocks {
+        let w16 = _mm256_loadu_si256(words.as_ptr().add(b * 16) as *const _);
+        let w = _mm512_cvtepu16_epi32(w16);
+        let shared = _mm512_and_si512(_mm512_srli_epi32::<15>(w), one);
+        let c0 = _mm512_or_si512(_mm512_slli_epi32::<1>(_mm512_and_si512(w, m5)), shared);
+        let c1 = _mm512_or_si512(
+            _mm512_slli_epi32::<1>(_mm512_and_si512(_mm512_srli_epi32::<5>(w), m5)),
+            shared,
+        );
+        let c2 = _mm512_or_si512(
+            _mm512_slli_epi32::<1>(_mm512_and_si512(_mm512_srli_epi32::<10>(w), m5)),
+            shared,
+        );
+        let v0 = dec.decode(c0);
+        let v1 = dec.decode(c1);
+        let v2 = dec.decode(c2);
+        for j in 0..T {
+            acc_a[j] = _mm512_fmadd_ps(v0, _mm512_loadu_ps(x0s[j].as_ptr().add(b * 16)), acc_a[j]);
+            acc_b[j] = _mm512_fmadd_ps(v1, _mm512_loadu_ps(x1s[j].as_ptr().add(b * 16)), acc_b[j]);
+            acc_a[j] = _mm512_fmadd_ps(v2, _mm512_loadu_ps(x2s[j].as_ptr().add(b * 16)), acc_a[j]);
+        }
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(_mm512_add_ps(acc_a[j], acc_b[j]));
+    }
+    for i in blocks * 48..cols {
+        let w = u32::from(words[i / 3]);
+        let shared = (w >> 15) & 1;
+        let code = (((w >> (5 * (i % 3))) & 0x1F) << 1) | shared;
+        let v = decode_arith(code, fmt.ebits, fmt.mbits, eb);
+        for j in 0..T {
+            out[j] += v * xs[j][i];
+        }
+    }
+    out
+}
+
+/// Dense f32 dot against `T` activation rows (FP16-reference baseline and
+/// dense projections). Register-tiled like the packed kernels so speedup
+/// comparisons measure the format, not kernel quality.
+pub fn dotn_dense<const T: usize>(w: &[f32], xs: &[&[f32]; T]) -> [f32; T] {
+    assert_xs_len(xs, w.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && w.len() >= 16 {
+            // SAFETY: feature checked; xs lengths asserted.
+            return unsafe { dotn_dense_avx512(w, xs) };
+        }
+    }
+    let mut acc = [0f32; T];
+    for (i, &v) in w.iter().enumerate() {
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+/// Dense f32 dot product (vectorized `Σ a[i]·b[i]`); `b` must cover `a`.
+pub fn dot_dense(a: &[f32], b: &[f32]) -> f32 {
+    dotn_dense::<1>(a, &[b])[0]
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn dotn_dense_avx512<const T: usize>(w: &[f32], xs: &[&[f32]; T]) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let n = w.len();
+    let mut acc = [_mm512_setzero_ps(); T];
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let v = _mm512_loadu_ps(w.as_ptr().add(i));
+        for j in 0..T {
+            acc[j] = _mm512_fmadd_ps(v, _mm512_loadu_ps(xs[j].as_ptr().add(i)), acc[j]);
+        }
+        i += 16;
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(acc[j]);
+    }
+    while i < n {
+        for j in 0..T {
+            out[j] += w[i] * xs[j][i];
+        }
+        i += 1;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -568,6 +1079,85 @@ mod tests {
             assert!(
                 (fused - reference).abs() <= 1e-2 * (1.0 + mag),
                 "n={n}: {fused} vs {reference}"
+            );
+        }
+    }
+
+    #[test]
+    fn dotn_codes_matches_per_column() {
+        let mut rng = Rng::new(9);
+        let fmt = FpFormat::E2M3;
+        for n in [1usize, 15, 16, 33, 100] {
+            let codes: Vec<u16> = (0..n)
+                .map(|_| (rng.next_u32() as u16) & fmt.code_mask())
+                .collect();
+            let cols: Vec<Vec<f32>> = (0..4)
+                .map(|_| (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect();
+            let xs: [&[f32]; 4] = [&cols[0], &cols[1], &cols[2], &cols[3]];
+            let tiled = dotn_codes(&codes, &xs, fmt);
+            for j in 0..4 {
+                let single = dot_codes(&codes, xs[j], fmt);
+                assert!(
+                    (tiled[j] - single).abs() <= 2e-4 * (1.0 + single.abs()),
+                    "n={n} j={j}: {} vs {single}",
+                    tiled[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dotn_dense_matches_scalar() {
+        let mut rng = Rng::new(10);
+        for n in [1usize, 16, 47, 128] {
+            let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let cols: Vec<Vec<f32>> = (0..8)
+                .map(|_| (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect();
+            let xs: [&[f32]; 8] = core::array::from_fn(|j| cols[j].as_slice());
+            let tiled = dotn_dense(&w, &xs);
+            for j in 0..8 {
+                let scalar: f32 = w.iter().zip(xs[j]).map(|(&a, &b)| a * b).sum();
+                assert!(
+                    (tiled[j] - scalar).abs() <= 1e-4 * (1.0 + scalar.abs()),
+                    "n={n} j={j}: {} vs {scalar}",
+                    tiled[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dotn_fp16_matches_table() {
+        let mut rng = Rng::new(11);
+        let table = crate::gemm::dequant_table(crate::formats::registry::Scheme::Fp16);
+        let n = 64usize;
+        let words: Vec<u16> = (0..n)
+            .map(|_| {
+                let w = rng.next_u32() as u16;
+                if (w >> 10) & 0x1F == 0x1F {
+                    w & !(1 << 14)
+                } else {
+                    w
+                }
+            })
+            .collect();
+        let cols: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let xs: [&[f32]; 2] = [&cols[0], &cols[1]];
+        let tiled = dotn_fp16_bits(&words, &xs, &table);
+        for j in 0..2 {
+            let reference: f32 = words
+                .iter()
+                .zip(xs[j])
+                .map(|(&w, &xv)| table[w as usize] * xv)
+                .sum();
+            assert!(
+                (tiled[j] - reference).abs() <= 1e-2 * (1.0 + reference.abs()),
+                "j={j}: {} vs {reference}",
+                tiled[j]
             );
         }
     }

@@ -29,6 +29,7 @@ pub mod pack;
 pub mod quant;
 pub mod report;
 pub mod restore;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

@@ -346,6 +346,12 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt(_args: &Args, _artifacts: &Path) -> Result<()> {
+    bail!("this binary was built without the 'pjrt' feature (rebuild with `--features pjrt`)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt(args: &Args, artifacts: &Path) -> Result<()> {
     let manifest_path = artifacts.join("manifest.json");
     let manifest = std::fs::read_to_string(&manifest_path)

@@ -6,15 +6,22 @@
 //! sequences (`forward_batch`) — the latter is the workload of Table 3:
 //! the linear layers see a `[batch, d]` GEMM while attention stays
 //! per-sequence against its own KV cache.
+//!
+//! The `*_with` variants take a caller-owned [`ForwardScratch`] (create
+//! one per `Transformer` user — scheduler, bench loop, worker thread) and
+//! perform zero heap allocation at steady state; large projections are
+//! dispatched onto the shared thread pool automatically (see
+//! [`crate::gemm::QuantLinear::gemm_auto_into`]).
 
 use super::checkpoint::Checkpoint;
 use super::ModelConfig;
 use crate::formats::registry::Scheme;
-use crate::gemm::QuantLinear;
+use crate::gemm::{dense_gemm_into, simd, GemmScratch, QuantLinear};
 use crate::quant::sharing::quantize;
 use crate::quant::QuantConfig;
 use crate::tensor::Tensor;
 use anyhow::Result;
+use std::borrow::BorrowMut;
 
 /// A projection: dense f32 (FP16-reference path) or packed-quantized.
 #[derive(Clone, Debug)]
@@ -38,23 +45,40 @@ impl Linear {
         }
     }
 
-    /// `y = W x`.
+    /// `y = W x`. Allocates a transient scratch for the quantized path;
+    /// hot loops use [`Linear::apply_with`].
     pub fn apply(&self, x: &[f32], y: &mut [f32]) {
         match self {
-            Linear::Dense(w) => {
-                for r in 0..w.rows() {
-                    y[r] = w.row(r).iter().zip(x).map(|(&a, &b)| a * b).sum();
-                }
-            }
+            Linear::Dense(w) => dense_gemv(w, x, y),
             Linear::Quant(q) => q.gemv(x, y),
         }
     }
 
-    /// `Y[batch, out] = X[batch, in] Wᵀ`.
-    pub fn apply_batch(&self, x: &Tensor) -> Tensor {
+    /// Zero-alloc `y = W x` against a caller-owned scratch. Large packed
+    /// projections self-dispatch onto the shared pool.
+    pub fn apply_with(&self, x: &[f32], y: &mut [f32], scratch: &mut GemmScratch) {
         match self {
-            Linear::Dense(w) => x.matmul(&w.transpose()),
-            Linear::Quant(q) => q.gemm(x),
+            Linear::Dense(w) => dense_gemv(w, x, y),
+            Linear::Quant(q) => q.gemv_auto(x, y, scratch),
+        }
+    }
+
+    /// `Y[batch, out] = X[batch, in] Wᵀ` (allocating convenience wrapper).
+    pub fn apply_batch(&self, x: &Tensor) -> Tensor {
+        let mut scratch = GemmScratch::new();
+        let mut y = Tensor::zeros(&[x.rows(), self.out_dim()]);
+        self.apply_batch_into(x, &mut y, &mut scratch);
+        y
+    }
+
+    /// Zero-alloc batched apply: re-shapes `y` to `[batch, out]` in place
+    /// and runs the tiled fused kernels (packed) or the register-tiled
+    /// dense kernel (FP16-reference baseline).
+    pub fn apply_batch_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
+        y.resize(&[x.rows(), self.out_dim()]);
+        match self {
+            Linear::Dense(w) => dense_gemm_into(w, x, y, scratch),
+            Linear::Quant(q) => q.gemm_auto_into(x, y, scratch),
         }
     }
 
@@ -64,6 +88,15 @@ impl Linear {
             Linear::Dense(t) => t.len() * 2, // counted as fp16 storage
             Linear::Quant(q) => q.packed.payload_bytes(),
         }
+    }
+}
+
+/// Vectorized dense GEMV (the FP16-reference baseline's single-token
+/// path) — register-tiled like the packed kernels so speedup comparisons
+/// measure the format, not kernel quality.
+fn dense_gemv(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    for r in 0..w.rows() {
+        y[r] = simd::dot_dense(w.row(r), x);
     }
 }
 
@@ -103,6 +136,82 @@ impl KvCache {
     pub fn reset(&mut self) {
         self.len = 0;
     }
+}
+
+/// Reusable per-worker buffers for the decode paths. Create once per
+/// `Transformer` user; every buffer grows to its high-water mark on first
+/// use and the forward loops allocate nothing afterwards.
+#[derive(Clone, Debug)]
+pub struct ForwardScratch {
+    gemm: GemmScratch,
+    // single-token path
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    scores: Vec<f32>,
+    logits: Vec<f32>,
+    // batched path
+    qi: Vec<f32>,
+    xb: Tensor,
+    hb: Tensor,
+    qb: Tensor,
+    kxb: Tensor,
+    vxb: Tensor,
+    attnb: Tensor,
+    ob: Tensor,
+    gateb: Tensor,
+    upb: Tensor,
+    actb: Tensor,
+    downb: Tensor,
+    logitsb: Tensor,
+}
+
+impl ForwardScratch {
+    pub fn new() -> ForwardScratch {
+        let empty = || Tensor::zeros(&[0, 0]);
+        ForwardScratch {
+            gemm: GemmScratch::new(),
+            x: Vec::new(),
+            h: Vec::new(),
+            q: Vec::new(),
+            attn: Vec::new(),
+            proj: Vec::new(),
+            gate: Vec::new(),
+            up: Vec::new(),
+            scores: Vec::new(),
+            logits: Vec::new(),
+            qi: Vec::new(),
+            xb: empty(),
+            hb: empty(),
+            qb: empty(),
+            kxb: empty(),
+            vxb: empty(),
+            attnb: empty(),
+            ob: empty(),
+            gateb: empty(),
+            upb: empty(),
+            actb: empty(),
+            downb: empty(),
+            logitsb: empty(),
+        }
+    }
+}
+
+impl Default for ForwardScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Re-size a scratch vector to `n` zeros without shrinking capacity.
+#[inline]
+fn ensure(v: &mut Vec<f32>, n: usize) {
+    v.clear();
+    v.resize(n, 0.0);
 }
 
 #[derive(Clone, Debug)]
@@ -232,6 +341,11 @@ impl Transformer {
         c
     }
 
+    /// Fresh decode scratch sized lazily by first use.
+    pub fn new_scratch(&self) -> ForwardScratch {
+        ForwardScratch::new()
+    }
+
     /// Projection weight bytes (the quantity the paper's speedup divides).
     pub fn projection_bytes(&self) -> usize {
         self.layers
@@ -249,30 +363,63 @@ impl Transformer {
     }
 
     /// Single-token decode step: returns logits. `pos` must equal
-    /// `cache.len`.
+    /// `cache.len`. Allocating convenience wrapper over
+    /// [`Transformer::forward_with`].
     pub fn forward(&self, token: u32, pos: usize, cache: &mut KvCache) -> Vec<f32> {
+        let mut scratch = ForwardScratch::new();
+        self.forward_with(token, pos, cache, &mut scratch).to_vec()
+    }
+
+    /// Single-token decode step against a caller-owned scratch; the
+    /// returned logits borrow the scratch. Zero heap allocation at steady
+    /// state.
+    pub fn forward_with<'s>(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut KvCache,
+        scratch: &'s mut ForwardScratch,
+    ) -> &'s [f32] {
         assert_eq!(pos, cache.len, "positions must be fed in order");
         assert!(pos < self.cfg.max_seq, "sequence overflow");
         let cfg = &self.cfg;
         let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
         let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
 
-        let mut x = self.embed.row(token as usize).to_vec();
-        let mut h = vec![0f32; d];
-        let mut q = vec![0f32; d];
-        let mut attn_out = vec![0f32; d];
-        let mut proj = vec![0f32; d.max(cfg.d_ff)];
-        let mut gate = vec![0f32; cfg.d_ff];
-        let mut up = vec![0f32; cfg.d_ff];
+        let ForwardScratch {
+            gemm,
+            x,
+            h,
+            q,
+            attn,
+            proj,
+            gate,
+            up,
+            scores,
+            logits,
+            ..
+        } = scratch;
+        x.clear();
+        x.extend_from_slice(self.embed.row(token as usize));
+        ensure(h, d);
+        ensure(q, d);
+        ensure(attn, d);
+        ensure(proj, d.max(cfg.d_ff));
+        ensure(gate, cfg.d_ff);
+        ensure(up, cfg.d_ff);
 
         for (li, layer) in self.layers.iter().enumerate() {
             // --- attention ---
-            rmsnorm(&x, &layer.attn_norm, &mut h);
-            layer.wq.apply(&h, &mut q);
+            rmsnorm(x, &layer.attn_norm, h);
+            layer.wq.apply_with(h, q, gemm);
             let kc = &mut cache.k[li];
             let vc = &mut cache.v[li];
-            layer.wk.apply(&h, &mut kc[pos * kvd..(pos + 1) * kvd]);
-            layer.wv.apply(&h, &mut vc[pos * kvd..(pos + 1) * kvd]);
+            layer
+                .wk
+                .apply_with(h, &mut kc[pos * kvd..(pos + 1) * kvd], gemm);
+            layer
+                .wv
+                .apply_with(h, &mut vc[pos * kvd..(pos + 1) * kvd], gemm);
             for hh in 0..cfg.n_heads {
                 rope(&mut q[hh * hd..(hh + 1) * hd], pos, hd);
             }
@@ -280,7 +427,7 @@ impl Transformer {
                 rope(&mut kc[pos * kvd + g * hd..pos * kvd + (g + 1) * hd], pos, hd);
             }
             let scale = 1.0 / (hd as f32).sqrt();
-            let mut scores = vec![0f32; pos + 1];
+            ensure(scores, pos + 1);
             for hh in 0..cfg.n_heads {
                 let g = hh / heads_per_kv;
                 let qh = &q[hh * hd..(hh + 1) * hd];
@@ -288,8 +435,8 @@ impl Transformer {
                     let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
                     *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
                 }
-                softmax_inplace(&mut scores);
-                let oh = &mut attn_out[hh * hd..(hh + 1) * hd];
+                softmax_inplace(scores);
+                let oh = &mut attn[hh * hd..(hh + 1) * hd];
                 oh.fill(0.0);
                 for (t, &p) in scores.iter().enumerate() {
                     let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
@@ -298,62 +445,103 @@ impl Transformer {
                     }
                 }
             }
-            layer.wo.apply(&attn_out, &mut proj[..d]);
+            layer.wo.apply_with(attn, &mut proj[..d], gemm);
             for i in 0..d {
                 x[i] += proj[i];
             }
             // --- MLP (SwiGLU) ---
-            rmsnorm(&x, &layer.mlp_norm, &mut h);
-            layer.w_gate.apply(&h, &mut gate);
-            layer.w_up.apply(&h, &mut up);
+            rmsnorm(x, &layer.mlp_norm, h);
+            layer.w_gate.apply_with(h, gate, gemm);
+            layer.w_up.apply_with(h, up, gemm);
             for i in 0..cfg.d_ff {
                 gate[i] = silu(gate[i]) * up[i];
             }
-            layer.w_down.apply(&gate, &mut proj[..d]);
+            layer.w_down.apply_with(gate, &mut proj[..d], gemm);
             for i in 0..d {
                 x[i] += proj[i];
             }
         }
         cache.len = pos + 1;
 
-        rmsnorm(&x.clone(), &self.final_norm, &mut x);
-        let mut logits = vec![0f32; cfg.vocab_size];
-        self.lm_head.apply(&x, &mut logits);
+        h[..d].copy_from_slice(x);
+        rmsnorm(&h[..d], &self.final_norm, x);
+        ensure(logits, cfg.vocab_size);
+        self.lm_head.apply_with(x, logits, gemm);
         logits
     }
 
-    /// Batched decode across independent sequences: `tokens[i]` is appended
-    /// to `caches[i]` at its own position. Linear layers run as one
-    /// `[batch, ·]` GEMM; attention runs per sequence.
-    pub fn forward_batch(&self, tokens: &[u32], caches: &mut [KvCache]) -> Tensor {
+    /// Batched decode across independent sequences (allocating wrapper
+    /// over [`Transformer::forward_batch_with`]): `tokens[i]` is appended
+    /// to `caches[i]` at its own position.
+    pub fn forward_batch<C: BorrowMut<KvCache>>(
+        &self,
+        tokens: &[u32],
+        caches: &mut [C],
+    ) -> Tensor {
+        let mut scratch = ForwardScratch::new();
+        self.forward_batch_with(tokens, caches, &mut scratch).clone()
+    }
+
+    /// Batched decode against a caller-owned scratch; the returned logits
+    /// `[batch, vocab]` borrow the scratch. Linear layers run as one
+    /// `[batch, ·]` tiled fused GEMM; attention runs per sequence. Zero
+    /// heap allocation at steady state (the caches are mutated in place —
+    /// no per-step cache churn).
+    pub fn forward_batch_with<'s, C: BorrowMut<KvCache>>(
+        &self,
+        tokens: &[u32],
+        caches: &mut [C],
+        scratch: &'s mut ForwardScratch,
+    ) -> &'s Tensor {
         let b = tokens.len();
         assert_eq!(b, caches.len());
         let cfg = &self.cfg;
         let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
         let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
 
-        let mut x = Tensor::zeros(&[b, d]);
+        let ForwardScratch {
+            gemm,
+            scores,
+            qi,
+            xb,
+            hb,
+            qb,
+            kxb,
+            vxb,
+            attnb,
+            ob,
+            gateb,
+            upb,
+            actb,
+            downb,
+            logitsb,
+            ..
+        } = scratch;
+
+        xb.resize(&[b, d]);
         for (i, &t) in tokens.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(self.embed.row(t as usize));
+            xb.row_mut(i).copy_from_slice(self.embed.row(t as usize));
         }
-        let mut h = Tensor::zeros(&[b, d]);
+        hb.resize(&[b, d]);
 
         for (li, layer) in self.layers.iter().enumerate() {
             for i in 0..b {
-                rmsnorm(x.row(i), &layer.attn_norm, h.row_mut(i));
+                rmsnorm(xb.row(i), &layer.attn_norm, hb.row_mut(i));
             }
-            let q = layer.wq.apply_batch(&h); // [b, d]
-            let kx = layer.wk.apply_batch(&h); // [b, kvd]
-            let vx = layer.wv.apply_batch(&h);
-            let mut attn = Tensor::zeros(&[b, d]);
+            layer.wq.apply_batch_into(hb, qb, gemm); // [b, d]
+            layer.wk.apply_batch_into(hb, kxb, gemm); // [b, kvd]
+            layer.wv.apply_batch_into(hb, vxb, gemm);
+            attnb.resize(&[b, d]);
             for i in 0..b {
-                let pos = caches[i].len;
+                let cache = caches[i].borrow_mut();
+                let pos = cache.len;
                 assert!(pos < cfg.max_seq, "sequence overflow");
-                let kc = &mut caches[i].k[li];
-                let vc = &mut caches[i].v[li];
-                kc[pos * kvd..(pos + 1) * kvd].copy_from_slice(kx.row(i));
-                vc[pos * kvd..(pos + 1) * kvd].copy_from_slice(vx.row(i));
-                let mut qi = q.row(i).to_vec();
+                let kc = &mut cache.k[li];
+                let vc = &mut cache.v[li];
+                kc[pos * kvd..(pos + 1) * kvd].copy_from_slice(kxb.row(i));
+                vc[pos * kvd..(pos + 1) * kvd].copy_from_slice(vxb.row(i));
+                qi.clear();
+                qi.extend_from_slice(qb.row(i));
                 for hh in 0..cfg.n_heads {
                     rope(&mut qi[hh * hd..(hh + 1) * hd], pos, hd);
                 }
@@ -365,8 +553,8 @@ impl Transformer {
                     );
                 }
                 let scale = 1.0 / (hd as f32).sqrt();
-                let mut scores = vec![0f32; pos + 1];
-                let oi = attn.row_mut(i);
+                ensure(scores, pos + 1);
+                let oi = attnb.row_mut(i);
                 for hh in 0..cfg.n_heads {
                     let g = hh / heads_per_kv;
                     let qh = &qi[hh * hd..(hh + 1) * hd];
@@ -374,7 +562,7 @@ impl Transformer {
                         let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
                         *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
                     }
-                    softmax_inplace(&mut scores);
+                    softmax_inplace(scores);
                     let oh = &mut oi[hh * hd..(hh + 1) * hd];
                     for (t, &p) in scores.iter().enumerate() {
                         let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
@@ -384,43 +572,45 @@ impl Transformer {
                     }
                 }
             }
-            let o = layer.wo.apply_batch(&attn);
+            layer.wo.apply_batch_into(attnb, ob, gemm);
             for i in 0..b {
-                let xr = x.row_mut(i);
-                for (j, &v) in o.row(i).iter().enumerate() {
+                let xr = xb.row_mut(i);
+                for (j, &v) in ob.row(i).iter().enumerate() {
                     xr[j] += v;
                 }
             }
             for i in 0..b {
-                rmsnorm(x.row(i), &layer.mlp_norm, h.row_mut(i));
+                rmsnorm(xb.row(i), &layer.mlp_norm, hb.row_mut(i));
             }
-            let gate = layer.w_gate.apply_batch(&h);
-            let up = layer.w_up.apply_batch(&h);
-            let mut act = Tensor::zeros(&[b, cfg.d_ff]);
+            layer.w_gate.apply_batch_into(hb, gateb, gemm);
+            layer.w_up.apply_batch_into(hb, upb, gemm);
+            actb.resize(&[b, cfg.d_ff]);
             for i in 0..b {
-                let ar = act.row_mut(i);
-                let gr = gate.row(i);
-                let ur = up.row(i);
+                let ar = actb.row_mut(i);
+                let gr = gateb.row(i);
+                let ur = upb.row(i);
                 for j in 0..cfg.d_ff {
                     ar[j] = silu(gr[j]) * ur[j];
                 }
             }
-            let down = layer.w_down.apply_batch(&act);
+            layer.w_down.apply_batch_into(actb, downb, gemm);
             for i in 0..b {
-                let xr = x.row_mut(i);
-                for (j, &v) in down.row(i).iter().enumerate() {
+                let xr = xb.row_mut(i);
+                for (j, &v) in downb.row(i).iter().enumerate() {
                     xr[j] += v;
                 }
             }
         }
         for c in caches.iter_mut() {
-            c.len += 1;
+            c.borrow_mut().len += 1;
         }
         for i in 0..b {
-            let xi = x.row(i).to_vec();
-            rmsnorm(&xi, &self.final_norm, x.row_mut(i));
+            qi.clear();
+            qi.extend_from_slice(xb.row(i));
+            rmsnorm(qi, &self.final_norm, xb.row_mut(i));
         }
-        self.lm_head.apply_batch(&x)
+        self.lm_head.apply_batch_into(xb, logitsb, gemm);
+        logitsb
     }
 }
 
@@ -444,6 +634,39 @@ mod tests {
         assert_eq!(l1.len(), m.cfg.vocab_size);
         assert_eq!(l1, l2);
         assert!(l1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_with_reused_scratch_matches_forward() {
+        let m = tiny_model();
+        let mut ca = m.new_cache();
+        let mut cb = m.new_cache();
+        let mut scratch = m.new_scratch();
+        for (p, &t) in [1u32, 5, 9, 2].iter().enumerate() {
+            let fresh = m.forward(t, p, &mut ca);
+            let reused = m.forward_with(t, p, &mut cb, &mut scratch);
+            assert_eq!(fresh.as_slice(), reused, "pos {p}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_with_reused_scratch_matches() {
+        let m = tiny_model();
+        let mut scratch = m.new_scratch();
+        // Varying batch widths through one scratch (continuous batching).
+        let mut caches: Vec<KvCache> = (0..3).map(|_| m.new_cache()).collect();
+        let l3 = m
+            .forward_batch_with(&[1, 2, 3], &mut caches, &mut scratch)
+            .clone();
+        let mut fresh: Vec<KvCache> = (0..3).map(|_| m.new_cache()).collect();
+        let l3_fresh = m.forward_batch(&[1, 2, 3], &mut fresh);
+        assert_eq!(l3, l3_fresh);
+        // Shrink the batch: reuse two of the caches.
+        let mut two: Vec<&mut KvCache> = caches.iter_mut().take(2).collect();
+        let l2 = m.forward_batch_with(&[7, 8], &mut two, &mut scratch).clone();
+        let mut two_fresh: Vec<&mut KvCache> = fresh.iter_mut().take(2).collect();
+        let l2_fresh = m.forward_batch(&[7, 8], &mut two_fresh);
+        assert_eq!(l2, l2_fresh);
     }
 
     #[test]

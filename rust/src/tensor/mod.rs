@@ -102,6 +102,17 @@ impl Tensor {
         self.data[r * cols + c] = v;
     }
 
+    /// Re-shape in place to a zero-filled tensor, growing the backing
+    /// storage as needed. Capacity is kept across calls (never shrunk),
+    /// so steady-state reuse in scratch buffers is allocation-free.
+    pub fn resize(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        self.data.clear();
+        self.data.resize(n, 0.0);
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+    }
+
     pub fn reshape(mut self, shape: &[usize]) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),

@@ -228,4 +228,62 @@ mod tests {
             },
         );
     }
+
+    /// Property: the tiled fused batched GEMM agrees with the
+    /// kernel-independent `gemv_reference` for random schemes, ragged
+    /// shapes and batch widths across the whole tile ladder.
+    #[test]
+    fn fused_gemm_matches_reference() {
+        use crate::formats::registry::Scheme;
+        use crate::gemm::{GemmScratch, QuantLinear};
+        use crate::quant::sharing::quantize;
+        use crate::quant::QuantConfig;
+        use crate::tensor::init;
+
+        use crate::gemm::TEST_SCHEMES as SCHEMES;
+        let strat = Pair(
+            USize { lo: 0, hi: SCHEMES.len() - 1 },
+            Pair(
+                USize { lo: 1, hi: 10 },          // rows
+                Pair(USize { lo: 1, hi: 70 }, USize { lo: 1, hi: 12 }), // cols, batch
+            ),
+        );
+        run_prop(
+            "fused-gemm-matches-reference",
+            0xF00D,
+            24,
+            &strat,
+            |&(si, (rows, (cols, batch)))| {
+                let scheme = Scheme::parse(SCHEMES[si]).unwrap();
+                let mut rng = Rng::new((si * 100_000 + rows * 10_000 + cols * 100 + batch) as u64);
+                let w = init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng);
+                let packed = if scheme == Scheme::Fp16 {
+                    crate::baselines::pack_fp16(&w)
+                } else if matches!(scheme, Scheme::Int { .. }) {
+                    crate::baselines::quantize_int(&w, scheme)
+                } else {
+                    crate::pack::pack(&quantize(&w, &QuantConfig::paper(scheme)))
+                };
+                let lin = QuantLinear::new(packed);
+                let x = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
+                let mut scratch = GemmScratch::new();
+                let y = lin.gemm_with(&x, &mut scratch);
+                for b in 0..batch {
+                    let yref = lin.gemv_reference(x.row(b));
+                    for r in 0..rows {
+                        let err = (y.at2(b, r) - yref[r]).abs();
+                        if err > 1e-4 * (1.0 + yref[r].abs()) {
+                            return Err(format!(
+                                "{} [{rows}x{cols}] b={b}/{batch} r={r}: {} vs {}",
+                                SCHEMES[si],
+                                y.at2(b, r),
+                                yref[r]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }

@@ -1,14 +1,22 @@
 //! Fixed-size thread pool over std primitives (no tokio offline).
 //!
-//! Two entry points:
+//! Entry points:
 //! - [`ThreadPool::execute`]: fire-and-forget closures (the coordinator's
 //!   worker substrate);
-//! - [`scope_chunks`]: data-parallel helper used by the GEMM hot path to
-//!   split row-ranges across persistent workers without per-call spawns.
+//! - [`ThreadPool::scope_parts`]: data-parallel scoped execution on the
+//!   *persistent* workers — each part becomes one job, the caller blocks
+//!   until every job has run, so jobs may borrow non-`'static` data
+//!   (weight/activation slices). This is the GEMM hot path's substrate:
+//!   no per-call thread spawns.
+//! - [`shared_pool`]: the process-wide pool the model layer dispatches
+//!   large projections onto (size from `AMS_THREADS`, default
+//!   `available_parallelism - 1`).
+//! - [`scope_chunks`]: legacy helper over freshly scoped threads (kept for
+//!   one-off callers that do not want the shared pool).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -18,8 +26,52 @@ enum Msg {
     Shutdown,
 }
 
+/// Completion latch for one `scope_parts` call: counts outstanding jobs
+/// and records whether any of them panicked.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn wait(&self) {
+        let mut n = self.remaining.lock().unwrap();
+        while *n > 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+    }
+}
+
+/// Decrements the latch even when the job unwinds, so a panicking kernel
+/// cannot deadlock the caller.
+struct LatchGuard(Arc<Latch>);
+
+impl Drop for LatchGuard {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.0.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut n = self.0.remaining.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.0.cv.notify_all();
+        }
+    }
+}
+
 pub struct ThreadPool {
-    tx: mpsc::Sender<Msg>,
+    /// Sender behind a mutex so the pool is `Sync` on every toolchain
+    /// (`mpsc::Sender` only became `Sync` in recent std versions).
+    tx: Mutex<mpsc::Sender<Msg>>,
     handles: Vec<thread::JoinHandle<()>>,
     pending: Arc<(Mutex<usize>, Condvar)>,
     size: usize,
@@ -42,12 +94,26 @@ impl ThreadPool {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {
                             Ok(Msg::Run(job)) => {
-                                job();
+                                // Contain job panics so one bad closure
+                                // neither kills the worker nor wedges
+                                // `wait_idle`.
+                                let r = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
                                 let (lock, cv) = &*pending;
                                 let mut n = lock.lock().unwrap();
                                 *n -= 1;
                                 if *n == 0 {
                                     cv.notify_all();
+                                }
+                                drop(n);
+                                if let Err(e) = r {
+                                    let msg = e
+                                        .downcast_ref::<&str>()
+                                        .map(|s| s.to_string())
+                                        .or_else(|| e.downcast_ref::<String>().cloned())
+                                        .unwrap_or_else(|| "<non-string panic>".into());
+                                    eprintln!("ams-worker-{i}: job panicked: {msg}");
                                 }
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
@@ -57,7 +123,7 @@ impl ThreadPool {
             );
         }
         ThreadPool {
-            tx,
+            tx: Mutex::new(tx),
             handles,
             pending,
             size,
@@ -69,9 +135,13 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.execute_boxed(Box::new(f));
+    }
+
+    fn execute_boxed(&self, job: Job) {
         let (lock, _) = &*self.pending;
         *lock.lock().unwrap() += 1;
-        self.tx.send(Msg::Run(Box::new(f))).expect("pool send");
+        self.tx.lock().unwrap().send(Msg::Run(job)).expect("pool send");
     }
 
     /// Block until every queued job has finished.
@@ -82,12 +152,61 @@ impl ThreadPool {
             n = cv.wait(n).unwrap();
         }
     }
+
+    /// Run one job per part on the pool's persistent workers, blocking
+    /// until all complete. Parts are moved into their jobs; `f` may borrow
+    /// non-`'static` data — the blocking wait keeps every borrow alive for
+    /// the jobs' whole execution.
+    ///
+    /// Must not be called from inside a pool job (the pool could be
+    /// saturated with waiters and deadlock); the model layer only calls it
+    /// from coordinator/bench threads.
+    ///
+    /// Panics if any job panicked (after all jobs have settled).
+    pub fn scope_parts<T, F>(&self, parts: Vec<T>, f: &F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        if parts.len() <= 1 {
+            for (i, part) in parts.into_iter().enumerate() {
+                f(i, part);
+            }
+            return;
+        }
+        /// Erase the job's borrow lifetime so it can ride the `'static`
+        /// pool channel.
+        fn erase_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+            // SAFETY: layout-identical fat pointers; soundness is the
+            // caller's obligation (see the call site below).
+            unsafe { std::mem::transmute(job) }
+        }
+        let latch = Arc::new(Latch::new(parts.len()));
+        for (i, part) in parts.into_iter().enumerate() {
+            let guard_latch = Arc::clone(&latch);
+            // SAFETY of the erasure: `job` borrows `f` and the caller's
+            // data, which are not `'static` — but `latch.wait()` below
+            // blocks this thread until every job has finished (the guard
+            // decrements even on unwind), so all borrows strictly outlive
+            // their use.
+            let job = erase_lifetime(Box::new(move || {
+                let _g = LatchGuard(guard_latch);
+                f(i, part);
+            }));
+            self.execute_boxed(job);
+        }
+        latch.wait();
+        assert!(
+            !latch.panicked.load(Ordering::SeqCst),
+            "a scope_parts job panicked"
+        );
+    }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Msg::Shutdown);
+            let _ = self.tx.lock().unwrap().send(Msg::Shutdown);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -95,9 +214,26 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Process-wide pool serving the model layer's large projections. Sized
+/// by `AMS_THREADS` when set (1 disables parallel dispatch), otherwise
+/// [`default_parallelism`]. Built lazily on first use so small-model runs
+/// never spawn it.
+pub fn shared_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::env::var("AMS_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(default_parallelism);
+        ThreadPool::new(n)
+    })
+}
+
 /// Run `f(chunk_index, start, end)` over `n` items split into `chunks`
-/// contiguous ranges on freshly scoped threads. Used by the GEMM hot path;
-/// scoped threads let us borrow non-'static data (weight/activation slices).
+/// contiguous ranges on freshly scoped threads. Legacy substrate for
+/// one-off data-parallel callers; the GEMM hot path uses
+/// [`ThreadPool::scope_parts`] on the shared pool instead.
 pub fn scope_chunks<F>(n: usize, chunks: usize, f: F)
 where
     F: Fn(usize, usize, usize) + Sync,
@@ -177,6 +313,73 @@ mod tests {
     fn wait_idle_on_empty_pool() {
         let pool = ThreadPool::new(2);
         pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn scope_parts_disjoint_slices() {
+        // The canonical GEMM merge pattern: pre-split an output buffer
+        // into disjoint slices, one per worker, no locks.
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0u64; 1003];
+        let parts: Vec<(usize, &mut [u64])> = {
+            let mut v = Vec::new();
+            let mut rest: &mut [u64] = &mut out;
+            let mut start = 0usize;
+            let per = 1003usize.div_ceil(5);
+            while !rest.is_empty() {
+                let take = per.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                v.push((start, head));
+                start += take;
+                rest = tail;
+            }
+            v
+        };
+        pool.scope_parts(parts, &|_, (start, slice): (usize, &mut [u64])| {
+            for (i, v) in slice.iter_mut().enumerate() {
+                *v = (start + i) as u64;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn scope_parts_borrows_caller_data() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<u64> = (0..64).collect();
+        let sums = Mutex::new(0u64);
+        let parts: Vec<std::ops::Range<usize>> = vec![0..16, 16..32, 32..48, 48..64];
+        pool.scope_parts(parts, &|_, range: std::ops::Range<usize>| {
+            let s: u64 = data[range].iter().sum();
+            *sums.lock().unwrap() += s;
+        });
+        assert_eq!(*sums.lock().unwrap(), (0..64).sum::<u64>());
+    }
+
+    #[test]
+    fn scope_parts_single_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let flag = AtomicUsize::new(0);
+        pool.scope_parts(vec![7usize], &|i, v| {
+            assert_eq!(i, 0);
+            flag.fetch_add(v, Ordering::SeqCst);
+        });
+        assert_eq!(flag.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn shared_pool_is_usable() {
+        let pool = shared_pool();
+        assert!(pool.size() >= 1);
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
     }
 
     #[test]

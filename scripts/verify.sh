@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the single entry point builders and CI share
+# (referenced from ROADMAP.md). Fails on build or test regressions;
+# clippy runs as a non-fatal advisory step.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release || exit 1
+
+echo "== tier-1: cargo test -q =="
+cargo test -q || exit 1
+
+echo "== advisory: cargo clippy -- -D warnings (non-fatal) =="
+if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings || echo "!! clippy reported warnings (non-fatal)"
+else
+    echo "clippy not installed; skipping"
+fi
+
+echo "tier-1 verify: OK"
