@@ -10,9 +10,7 @@
 //! Run after `make artifacts`:
 //!   cargo run --release --example serve_llm [-- --requests 24 --max-batch 8]
 
-use ams_quant::coordinator::batcher::BatchPolicy;
-use ams_quant::coordinator::server::Server;
-use ams_quant::coordinator::GenRequest;
+use ams_quant::coordinator::{Engine, GenRequest, RequestHandle};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
 use ams_quant::model::sampler::Sampler;
@@ -60,21 +58,30 @@ fn main() -> anyhow::Result<()> {
             base.quantized(&QuantConfig::paper(scheme))
         };
         let bytes = model.projection_bytes();
-        let srv = Server::spawn(model, BatchPolicy { max_batch, eos: None }, 1);
+        let eng = Engine::builder().max_batch(max_batch).seed(1).build(model);
         let wall = Timer::start();
-        for (id, p) in prompts.iter().enumerate() {
-            srv.submit(GenRequest {
-                id: id as u64,
-                prompt: p.clone(),
-                max_new_tokens: max_new,
-                sampler: Sampler::Greedy,
-            });
-        }
-        let mut responses = srv.collect(n_requests);
+        let handles: Vec<RequestHandle> = prompts
+            .iter()
+            .enumerate()
+            .map(|(id, p)| {
+                eng.submit(GenRequest {
+                    id: id as u64,
+                    prompt: p.clone(),
+                    max_new_tokens: max_new,
+                    sampler: Sampler::Greedy,
+                })
+                .expect("engine accepts while under capacity")
+            })
+            .collect();
+        let mut responses: Vec<_> = handles
+            .into_iter()
+            .filter_map(|h| h.wait())
+            .collect();
         let wall_s = wall.elapsed_secs();
         responses.sort_by_key(|r| r.id);
-        let lat = srv.latency.snapshot();
-        let stats = srv.shutdown();
+        eng.drain();
+        let lat = eng.latency();
+        let stats = eng.shutdown();
 
         let agree = if fp16_outputs.is_empty() {
             fp16_outputs = responses.iter().map(|r| r.tokens.clone()).collect();

@@ -1,14 +1,25 @@
 //! E9 perf — batched decode throughput of the transformer engine across
 //! schemes and batch sizes (the model-level realization of Table 3's
-//! batch sweep: linear layers dominate, attention is per-sequence).
+//! batch sweep: linear layers dominate, attention is per-sequence), plus
+//! an end-to-end serving trajectory through the `Engine` (throughput,
+//! batch occupancy, TTFT percentiles) written to `BENCH_SERVE.json`
+//! (`--json-serve PATH` to override) so serving-latency regressions are
+//! diffable across commits, like `BENCH_GEMM.json` for the kernels.
+//!
+//! Flags: `--steps N` decode steps per iteration, `--serve-requests N`,
+//! `--serve-max-batch B`, `--serve-max-new-tokens T`, `--json-serve PATH`.
+//! Honors `AMS_BENCH_QUICK` / `AMS_BENCH_MEASURE_SECS`.
 
+use ams_quant::coordinator::{Engine, GenRequest, RequestHandle};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
-use ams_quant::model::transformer::{ForwardScratch, KvCache};
+use ams_quant::model::transformer::{ForwardScratch, KvCache, Transformer};
 use ams_quant::quant::QuantConfig;
 use ams_quant::report::{f, Table};
 use ams_quant::util::bench::{bench_with_units, black_box, BenchConfig};
 use ams_quant::util::cli::Args;
+use ams_quant::util::json::Json;
+use ams_quant::util::timer::Timer;
 use std::path::Path;
 
 fn main() {
@@ -71,4 +82,90 @@ fn main() {
     }
     println!("{}", t.to_console());
     println!("{}", t.to_markdown());
+
+    serve_trajectory(&args, &base, quick);
+}
+
+/// End-to-end serving sweep: one `Engine` per scheme, a fixed request
+/// mix, JSON trajectory of throughput / occupancy / TTFT percentiles.
+fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
+    let n_requests = args.get_usize("serve-requests", if quick { 8 } else { 24 });
+    let max_batch = args.get_usize("serve-max-batch", 8);
+    let max_new = args.get_usize("serve-max-new-tokens", if quick { 8 } else { 24 });
+    let json_path = args.get_or("json-serve", "BENCH_SERVE.json").to_string();
+
+    let vocab = base.cfg.vocab_size as u32;
+    let prompts: Vec<Vec<u32>> = (0..n_requests)
+        .map(|i| {
+            let plen = 4 + (i * 5) % 17;
+            (0..plen as u32).map(|j| (j * 13 + i as u32 * 7 + 1) % vocab).collect()
+        })
+        .collect();
+
+    let mut table = Table::new(
+        &format!("E9 — serving trajectory ({n_requests} req, max_batch={max_batch})"),
+        &["Scheme", "tok/s", "occupancy", "ttft p50 ms", "ttft p99 ms", "lat p50 ms"],
+    );
+    let mut results: Vec<Json> = Vec::new();
+    for name in ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "fp4"] {
+        let scheme = Scheme::parse(name).unwrap();
+        let model = base.quantized(&QuantConfig::paper(scheme));
+        let eng = Engine::builder().max_batch(max_batch).seed(1).build(model);
+        let wall = Timer::start();
+        let handles: Vec<RequestHandle> = prompts
+            .iter()
+            .enumerate()
+            .map(|(id, p)| {
+                eng.submit(GenRequest::greedy(id as u64, p.clone(), max_new))
+                    .expect("engine accepts while under capacity")
+            })
+            .collect();
+        let done = handles.into_iter().filter_map(|h| h.wait()).count();
+        let wall_s = wall.elapsed_secs();
+        eng.drain();
+        let ttft = eng.ttft();
+        let lat = eng.latency();
+        let stats = eng.shutdown();
+        assert_eq!(done, n_requests, "{name}: all requests must complete");
+
+        let tps = stats.tokens_generated as f64 / wall_s;
+        table.row(vec![
+            scheme.label(),
+            f(tps, 1),
+            f(stats.mean_batch_occupancy(), 2),
+            f(ttft.percentile(50.0) * 1e3, 3),
+            f(ttft.percentile(99.0) * 1e3, 3),
+            f(lat.percentile(50.0) * 1e3, 3),
+        ]);
+        let mut entry = Json::obj();
+        entry
+            .set("name", Json::Str(format!("serve/{name}/b{max_batch}")))
+            .set("scheme", Json::Str(name.into()))
+            .set("requests", Json::Num(n_requests as f64))
+            .set("max_batch", Json::Num(max_batch as f64))
+            .set("max_new_tokens", Json::Num(max_new as f64))
+            .set("wall_s", Json::Num(wall_s))
+            .set("tokens_per_s", Json::Num(tps))
+            .set("mean_occupancy", Json::Num(stats.mean_batch_occupancy()))
+            .set("decode_steps", Json::Num(stats.decode_steps as f64))
+            .set("ttft_p50_s", Json::Num(ttft.percentile(50.0)))
+            .set("ttft_p99_s", Json::Num(ttft.percentile(99.0)))
+            .set("latency_p50_s", Json::Num(lat.percentile(50.0)))
+            .set("latency_p99_s", Json::Num(lat.percentile(99.0)));
+        results.push(entry);
+    }
+    println!("{}", table.to_console());
+    println!("{}", table.to_markdown());
+
+    let mut root = Json::obj();
+    root.set("bench", Json::Str("serve".into()))
+        .set("schema_version", Json::Num(1.0))
+        .set("requests", Json::Num(n_requests as f64))
+        .set("max_batch", Json::Num(max_batch as f64))
+        .set("max_new_tokens", Json::Num(max_new as f64))
+        .set("results", Json::Arr(results));
+    match std::fs::write(&json_path, root.to_string_pretty()) {
+        Ok(()) => eprintln!("# wrote {json_path}"),
+        Err(e) => eprintln!("# could not write {json_path}: {e}"),
+    }
 }

@@ -1,16 +1,27 @@
 //! Continuous dynamic batching scheduler.
 //!
-//! Pure state machine (no threads) so it is unit-testable: the server
-//! drives it with `admit` / `step`. Invariants (property-tested):
-//! every admitted request finishes exactly once, no token is generated
-//! after `max_new_tokens`, and the running batch never exceeds `max_batch`.
+//! Pure state machine (no threads) so it is unit-testable: the engine
+//! worker drives it with `admit_submission` / `step`. Invariants
+//! (property-tested): every admitted request reaches exactly one terminal
+//! [`Outcome`] (`Done` or `Cancelled`), no token is generated after
+//! `max_new_tokens`, the running batch never exceeds `max_batch`, and a
+//! cancelled sequence never occupies a batch slot on the step after its
+//! cancel flag is observed.
+//!
+//! Admission runs a **chunked prefill**: the whole prompt goes through
+//! [`Transformer::forward_prefill_with`], so every projection sees one
+//! `[prompt_len, ·]` GEMM through the tiled fused kernels instead of
+//! `prompt_len` GEMVs. Request timing (TTFT, total) measures from
+//! [`Submission`] creation — queue wait included.
 
-use super::{GenRequest, GenResponse};
+use super::{Event, GenRequest, GenResponse};
 use crate::model::transformer::{ForwardScratch, KvCache, Transformer};
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
 use std::borrow::BorrowMut;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -29,13 +40,104 @@ impl Default for BatchPolicy {
     }
 }
 
-struct Active {
+/// A request wrapped with its lifecycle plumbing: the submission-time
+/// stopwatch (TTFT and total time are measured from here, so queue wait
+/// counts), the shared cancel flag, and an optional per-request event
+/// channel. [`Engine::submit`](super::Engine::submit) builds one per
+/// request; direct scheduler users get the same wrapping via
+/// [`Scheduler::admit`].
+pub struct Submission {
     req: GenRequest,
+    submitted: Timer,
+    cancel: Arc<AtomicBool>,
+    events: Option<mpsc::Sender<Event>>,
+}
+
+impl Submission {
+    /// Wrap a request; the TTFT stopwatch starts now.
+    pub fn new(req: GenRequest) -> Submission {
+        Submission {
+            req,
+            submitted: Timer::start(),
+            cancel: Arc::new(AtomicBool::new(false)),
+            events: None,
+        }
+    }
+
+    /// Wrap a request with a per-request event stream.
+    pub fn with_events(req: GenRequest, events: mpsc::Sender<Event>) -> Submission {
+        Submission {
+            events: Some(events),
+            ..Submission::new(req)
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.req.id
+    }
+
+    /// Shared flag that cancels this request at the next step boundary.
+    pub fn cancel_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.cancel)
+    }
+
+    pub fn into_request(self) -> GenRequest {
+        self.req
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+
+    /// Best-effort event emission (a dropped handle just detaches the
+    /// stream; the request keeps running).
+    fn emit(&self, ev: Event) {
+        if let Some(tx) = &self.events {
+            let _ = tx.send(ev);
+        }
+    }
+
+    /// Lazy variant for events whose construction allocates (terminal
+    /// events clone the token vector): the closure only runs when a
+    /// stream is attached, so bare-scheduler users pay nothing.
+    fn emit_with(&self, f: impl FnOnce() -> Event) {
+        if let Some(tx) = &self.events {
+            let _ = tx.send(f());
+        }
+    }
+}
+
+/// Terminal result of one scheduled request.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Done(GenResponse),
+    /// Cancelled before completion; carries the tokens generated so far
+    /// (empty if the request never left the queue).
+    Cancelled { id: u64, tokens: Vec<u32> },
+}
+
+impl Outcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            Outcome::Done(r) => r.id,
+            Outcome::Cancelled { id, .. } => *id,
+        }
+    }
+
+    pub fn into_done(self) -> Option<GenResponse> {
+        match self {
+            Outcome::Done(r) => Some(r),
+            Outcome::Cancelled { .. } => None,
+        }
+    }
+}
+
+struct Active {
+    sub: Submission,
     cache: KvCache,
     generated: Vec<u32>,
     next_token: u32,
-    admitted: Timer,
-    ttft_s: Option<f64>,
+    ttft_s: f64,
     steps: usize,
 }
 
@@ -57,7 +159,7 @@ impl std::borrow::Borrow<KvCache> for Active {
 pub struct Scheduler {
     model: Transformer,
     policy: BatchPolicy,
-    queue: VecDeque<GenRequest>,
+    queue: VecDeque<Submission>,
     active: Vec<Active>,
     rng: Rng,
     scratch: ForwardScratch,
@@ -86,114 +188,173 @@ impl Scheduler {
         &self.model
     }
 
-    /// Enqueue a request (admission happens at the next step boundary).
+    /// Enqueue a bare request (admission happens at the next step
+    /// boundary; the TTFT stopwatch starts now).
     pub fn admit(&mut self, req: GenRequest) {
-        self.queue.push_back(req);
+        self.admit_submission(Submission::new(req));
+    }
+
+    /// Enqueue a wrapped request carrying its own submission timer,
+    /// cancel flag and event stream.
+    pub fn admit_submission(&mut self, sub: Submission) {
+        self.queue.push_back(sub);
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.active.len()
     }
 
-    /// Prefill a request's prompt and move it into the running batch.
-    /// Prompt tokens run through the single-token path (a serving system
-    /// would use a chunked prefill; our prompts are short).
-    fn start(&mut self, req: GenRequest) {
-        let mut cache = self.model.new_cache();
-        let timer = Timer::start();
+    /// Ids currently occupying batch slots (introspection/tests).
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.active.iter().map(|a| a.sub.id()).collect()
+    }
+
+    /// Chunked prefill: run the whole prompt as one multi-position pass
+    /// and move the request into the running batch.
+    fn start(&mut self, sub: Submission) {
         assert!(
-            !req.prompt.is_empty(),
+            !sub.req.prompt.is_empty(),
             "empty prompt: nothing to condition on"
         );
-        let mut logits: &[f32] = &[];
-        for (pos, &t) in req.prompt.iter().enumerate() {
-            logits = self.model.forward_with(t, pos, &mut cache, &mut self.scratch);
-        }
-        let first = req.sampler.sample(logits, &mut self.rng);
+        let mut cache = self.model.new_cache();
+        let logits = self
+            .model
+            .forward_prefill_with(&sub.req.prompt, &mut cache, &mut self.scratch);
+        let first = sub.req.sampler.sample(logits, &mut self.rng);
+        let ttft_s = sub.submitted.elapsed_secs();
+        sub.emit(Event::FirstToken {
+            id: sub.id(),
+            token: first,
+            ttft_s,
+        });
         self.active.push(Active {
-            req,
+            sub,
             cache,
             generated: vec![first],
             next_token: first,
-            admitted: timer,
-            ttft_s: None,
+            ttft_s,
             steps: 1,
         });
-        let a = self.active.last_mut().unwrap();
-        a.ttft_s = Some(a.admitted.elapsed_secs());
     }
 
-    /// One scheduler iteration: admit up to capacity, run one batched
-    /// decode step, retire finished sequences. Returns responses finished
-    /// in this step.
-    pub fn step(&mut self) -> Vec<GenResponse> {
-        // Admission.
-        while self.active.len() < self.policy.max_batch {
-            match self.queue.pop_front() {
-                Some(r) => self.start(r),
-                None => break,
+    fn cancel_out(sub: Submission, tokens: Vec<u32>) -> Outcome {
+        sub.emit_with(|| Event::Cancelled {
+            id: sub.id(),
+            tokens: tokens.clone(),
+        });
+        Outcome::Cancelled {
+            id: sub.id(),
+            tokens,
+        }
+    }
+
+    /// Drop cancelled work at the step boundary: queued requests are
+    /// discarded before they ever prefill; active sequences leave the
+    /// batch and their KV cache storage is released immediately.
+    fn sweep_cancelled(&mut self, out: &mut Vec<Outcome>) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].cancelled() {
+                let sub = self.queue.remove(i).expect("index in bounds");
+                out.push(Self::cancel_out(sub, Vec::new()));
+            } else {
+                i += 1;
             }
         }
-        let mut done = Vec::new();
-        if self.active.is_empty() {
-            return done;
-        }
-        // Retire sequences that already satisfied their budget (including
-        // single-token generations) before spending a decode step on them.
-        self.retire(&mut done);
-        if self.active.is_empty() {
-            return done;
-        }
-
-        self.tok_buf.clear();
-        self.tok_buf.extend(self.active.iter().map(|a| a.next_token));
-        // Caches are decoded in place through `Active: BorrowMut<KvCache>`
-        // — no per-step cache extraction/replacement (the old path
-        // allocated two full KV caches per sequence per step).
-        let logits = self
-            .model
-            .forward_batch_with(&self.tok_buf, &mut self.active, &mut self.scratch);
-        self.steps_executed += 1;
-        self.batched_tokens += self.tok_buf.len() as u64;
-        for (i, a) in self.active.iter_mut().enumerate() {
-            let t = a.req.sampler.sample(logits.row(i), &mut self.rng);
-            a.generated.push(t);
-            a.next_token = t;
-            a.steps += 1;
-        }
-        self.retire(&mut done);
-        done
-    }
-
-    fn retire(&mut self, done: &mut Vec<GenResponse>) {
-        let eos = self.policy.eos;
-        let cfg_max = self.model.cfg.max_seq;
         let mut i = 0;
         while i < self.active.len() {
-            let a = &self.active[i];
-            let hit_eos = eos.map(|e| a.generated.last() == Some(&e)).unwrap_or(false);
-            let budget = a.generated.len() >= a.req.max_new_tokens;
-            let ctx_full = a.req.prompt.len() + a.generated.len() >= cfg_max;
-            if hit_eos || budget || ctx_full {
+            if self.active[i].sub.cancelled() {
+                // Dropping the Active frees its KV cache immediately — a
+                // cancelled sequence holds no memory past this boundary.
                 let a = self.active.swap_remove(i);
-                done.push(GenResponse {
-                    id: a.req.id,
-                    tokens: a.generated,
-                    ttft_s: a.ttft_s.unwrap_or(0.0),
-                    total_s: a.admitted.elapsed_secs(),
-                    steps: a.steps,
-                });
+                out.push(Self::cancel_out(a.sub, a.generated));
             } else {
                 i += 1;
             }
         }
     }
 
-    /// Drive to completion, returning all responses.
+    /// One scheduler iteration: sweep cancellations, admit up to capacity
+    /// (chunked prefill), run one batched decode step, retire finished
+    /// sequences. Returns the terminal outcomes produced by this step.
+    pub fn step(&mut self) -> Vec<Outcome> {
+        let mut out = Vec::new();
+        self.sweep_cancelled(&mut out);
+        // Admission.
+        while self.active.len() < self.policy.max_batch {
+            match self.queue.pop_front() {
+                Some(sub) if sub.cancelled() => out.push(Self::cancel_out(sub, Vec::new())),
+                Some(sub) => self.start(sub),
+                None => break,
+            }
+        }
+        if self.active.is_empty() {
+            return out;
+        }
+        // Retire sequences that already satisfied their budget (including
+        // single-token generations) before spending a decode step on them.
+        self.retire(&mut out);
+        if self.active.is_empty() {
+            return out;
+        }
+
+        self.tok_buf.clear();
+        self.tok_buf.extend(self.active.iter().map(|a| a.next_token));
+        // Caches are decoded in place through `Active: BorrowMut<KvCache>`
+        // — no per-step cache extraction/replacement.
+        let logits = self
+            .model
+            .forward_batch_with(&self.tok_buf, &mut self.active, &mut self.scratch);
+        self.steps_executed += 1;
+        self.batched_tokens += self.tok_buf.len() as u64;
+        for (i, a) in self.active.iter_mut().enumerate() {
+            let t = a.sub.req.sampler.sample(logits.row(i), &mut self.rng);
+            a.generated.push(t);
+            a.next_token = t;
+            a.steps += 1;
+            a.sub.emit(Event::Token {
+                id: a.sub.id(),
+                token: t,
+                index: a.generated.len() - 1,
+            });
+        }
+        self.retire(&mut out);
+        out
+    }
+
+    fn retire(&mut self, out: &mut Vec<Outcome>) {
+        let eos = self.policy.eos;
+        let cfg_max = self.model.cfg.max_seq;
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &self.active[i];
+            let hit_eos = eos.map(|e| a.generated.last() == Some(&e)).unwrap_or(false);
+            let budget = a.generated.len() >= a.sub.req.max_new_tokens;
+            let ctx_full = a.sub.req.prompt.len() + a.generated.len() >= cfg_max;
+            if hit_eos || budget || ctx_full {
+                let a = self.active.swap_remove(i);
+                let resp = GenResponse {
+                    id: a.sub.id(),
+                    tokens: a.generated,
+                    ttft_s: a.ttft_s,
+                    total_s: a.sub.submitted.elapsed_secs(),
+                    steps: a.steps,
+                };
+                a.sub.emit_with(|| Event::Done(resp.clone()));
+                out.push(Outcome::Done(resp));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Drive to completion, returning the completed responses (cancelled
+    /// requests are swept but not returned — stream their terminal events
+    /// instead).
     pub fn run_to_completion(&mut self) -> Vec<GenResponse> {
         let mut out = Vec::new();
         while self.pending() > 0 {
-            out.extend(self.step());
+            out.extend(self.step().into_iter().filter_map(Outcome::into_done));
         }
         out
     }
@@ -332,5 +493,147 @@ mod tests {
         assert!(s.steps_executed > 0);
         let occ = s.batched_tokens as f64 / s.steps_executed as f64;
         assert!(occ > 1.0, "occupancy {occ} should exceed 1 with 4 concurrent requests");
+    }
+
+    /// Satellite regression: the TTFT stopwatch starts at submission, so
+    /// queue wait is part of TTFT (the old code started it inside
+    /// `start`, under-reporting TTFT by the whole queue delay).
+    #[test]
+    fn ttft_includes_queue_wait() {
+        let mut s = sched(1);
+        let sub = Submission::new(GenRequest::greedy(0, vec![1, 2], 2));
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        s.admit_submission(sub);
+        let out = s.run_to_completion();
+        assert!(
+            out[0].ttft_s >= 0.015,
+            "ttft {} must include the 15ms pre-admission wait",
+            out[0].ttft_s
+        );
+
+        // Saturated batch: with max_batch = 1, later requests wait for
+        // every earlier generation, so TTFT grows with queue position (it
+        // would be flat at ~prefill time under the old accounting).
+        let mut s = sched(1);
+        for id in 0..4u64 {
+            s.admit(GenRequest::greedy(id, vec![1, 2, 3], 6));
+        }
+        let mut out = s.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        for w in out.windows(2) {
+            assert!(
+                w[1].ttft_s >= w[0].ttft_s,
+                "ttft must be monotone in queue position: {} then {}",
+                w[0].ttft_s,
+                w[1].ttft_s
+            );
+        }
+        assert!(
+            out[3].ttft_s > out[0].total_s * 0.5,
+            "last ttft {} must reflect waiting behind earlier generations ({})",
+            out[3].ttft_s,
+            out[0].total_s
+        );
+    }
+
+    #[test]
+    fn cancelled_active_leaves_batch() {
+        let mut s = sched(2);
+        let sub = Submission::new(GenRequest::greedy(0, vec![1, 2], 50));
+        let flag = sub.cancel_flag();
+        s.admit_submission(sub);
+        s.admit(GenRequest::greedy(1, vec![3], 4));
+        let first = s.step(); // both admitted + one decode step
+        assert!(first.is_empty(), "nothing terminal yet: {first:?}");
+        flag.store(true, Ordering::SeqCst);
+        let mut cancelled = 0;
+        let mut done = Vec::new();
+        while s.pending() > 0 {
+            for o in s.step() {
+                match o {
+                    Outcome::Done(r) => done.push(r),
+                    Outcome::Cancelled { id, tokens } => {
+                        cancelled += 1;
+                        assert_eq!(id, 0);
+                        assert!(!tokens.is_empty(), "one step ran before the cancel");
+                    }
+                }
+            }
+            // Never occupies a batch slot after the boundary sweep.
+            assert!(!s.active_ids().contains(&0));
+        }
+        assert_eq!(cancelled, 1);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].tokens.len(), 4, "survivor unaffected by the cancel");
+    }
+
+    #[test]
+    fn cancelled_queued_never_prefills() {
+        let mut s = sched(1);
+        s.admit(GenRequest::greedy(0, vec![1], 30)); // holds the only slot
+        let sub = Submission::new(GenRequest::greedy(1, vec![2], 30));
+        let flag = sub.cancel_flag();
+        s.admit_submission(sub);
+        s.step();
+        flag.store(true, Ordering::SeqCst);
+        let mut saw = false;
+        while s.pending() > 0 {
+            for o in s.step() {
+                if let Outcome::Cancelled { id, tokens } = o {
+                    assert_eq!(id, 1);
+                    assert!(tokens.is_empty(), "queued cancel must not generate");
+                    saw = true;
+                }
+            }
+        }
+        assert!(saw, "queued request must still emit its terminal outcome");
+    }
+
+    /// Property: under random loads with random cancellations, every
+    /// submitted request yields exactly one terminal outcome.
+    #[test]
+    fn prop_cancels_terminate_exactly_once() {
+        run_prop(
+            "cancel-terminates-once",
+            0xCAFE,
+            6,
+            &USize { lo: 1, hi: 10 },
+            |&n| {
+                let mut s = sched(3);
+                let mut flags = Vec::new();
+                for id in 0..n as u64 {
+                    let sub = Submission::new(GenRequest::greedy(
+                        id,
+                        vec![(id as u32 % 50) + 1],
+                        2 + (id as usize % 4),
+                    ));
+                    flags.push(sub.cancel_flag());
+                    s.admit_submission(sub);
+                }
+                let mut terminals = vec![0usize; n];
+                for o in s.step() {
+                    terminals[o.id() as usize] += 1;
+                }
+                // Cancel every third request after the first step — some
+                // will be active, some queued, some already done.
+                for (id, f) in flags.iter().enumerate() {
+                    if id % 3 == 0 {
+                        f.store(true, Ordering::SeqCst);
+                    }
+                }
+                while s.pending() > 0 {
+                    for o in s.step() {
+                        terminals[o.id() as usize] += 1;
+                    }
+                }
+                for (id, &c) in terminals.iter().enumerate() {
+                    if c != 1 {
+                        return Err(format!("req {id} got {c} terminal outcomes"));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,0 +1,787 @@
+//! The [`Engine`] serving facade: bounded admission, replica dispatch,
+//! streaming per-request handles, and cancellation.
+//!
+//! One worker thread per replica owns a [`Scheduler`] and drains a
+//! *bounded* request channel: [`Engine::submit`] blocks when the queue is
+//! full (admission control), [`Engine::try_submit`] surfaces
+//! [`EngineError::QueueFull`] so callers can shed load instead. Every
+//! accepted request gets a [`RequestHandle`] streaming [`Event`]s over its
+//! own channel; `cancel()` flips a shared flag the scheduler observes at
+//! the next step boundary (the sequence leaves the batch, its KV cache is
+//! freed). Replica choice is an internal [`DispatchPolicy`] —
+//! least-outstanding (the vllm-router default) or round-robin.
+
+use super::batcher::{BatchPolicy, Outcome, Scheduler, Submission};
+use super::{Event, GenRequest, GenResponse, ServeStats};
+use crate::model::transformer::Transformer;
+use crate::util::metrics::{LatencyRecorder, Summary};
+use crate::util::timer::Timer;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+/// Errors surfaced by the submission paths. Every variant hands the
+/// request back so the caller can retry, re-route or drop it.
+#[derive(Debug)]
+pub enum EngineError {
+    /// The selected replica's bounded queue is full (backpressure).
+    QueueFull(GenRequest),
+    /// The engine is shutting down; no replica accepts work.
+    Shutdown(GenRequest),
+    /// The request can never be served (e.g. empty prompt) — rejected at
+    /// submission rather than poisoning a replica worker.
+    InvalidRequest(GenRequest, &'static str),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::QueueFull(r) => write!(f, "queue full (request {})", r.id),
+            EngineError::Shutdown(r) => write!(f, "engine shut down (request {})", r.id),
+            EngineError::InvalidRequest(r, why) => {
+                write!(f, "invalid request {}: {why}", r.id)
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// How [`Engine::submit`] picks a replica.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Fewest outstanding requests, ties broken by replica index.
+    #[default]
+    LeastOutstanding,
+    /// Strict rotation, ignoring load.
+    RoundRobin,
+}
+
+/// Streaming handle to one submitted request.
+///
+/// Events arrive in order: `Queued`, `FirstToken`, then `Token`s, ending
+/// with exactly one terminal event (`Done` or `Cancelled`). Dropping the
+/// handle detaches the stream but does **not** cancel the request — call
+/// [`RequestHandle::cancel`] for that.
+pub struct RequestHandle {
+    id: u64,
+    rx: mpsc::Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+    finished: bool,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the scheduler to drop this request at its next step boundary.
+    /// The stream still ends with a terminal event (`Cancelled`, or `Done`
+    /// if the request won the race by finishing first). A request still
+    /// waiting in the bounded admission queue keeps its queue slot until
+    /// the replica dequeues it (at which point it settles as `Cancelled`
+    /// without ever prefilling).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Blocking receive of the next lifecycle event. Returns `None` after
+    /// the terminal event has been delivered (or if the engine vanished).
+    pub fn next_event(&mut self) -> Option<Event> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                self.finished = ev.is_terminal();
+                Some(ev)
+            }
+            Err(_) => {
+                self.finished = true;
+                None
+            }
+        }
+    }
+
+    /// Non-blocking variant of [`RequestHandle::next_event`]. A `None`
+    /// can mean "no event yet" or "stream over" — check
+    /// [`RequestHandle::is_finished`] to tell them apart.
+    pub fn try_next_event(&mut self) -> Option<Event> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                self.finished = ev.is_terminal();
+                Some(ev)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.finished = true;
+                None
+            }
+        }
+    }
+
+    /// True once the terminal event has been delivered (or the stream
+    /// disconnected) — no further events will ever arrive.
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Drain the stream to its terminal event. `Some(response)` when the
+    /// request completed, `None` when it was cancelled (or the engine
+    /// disappeared mid-flight).
+    pub fn wait(mut self) -> Option<GenResponse> {
+        while let Some(ev) = self.next_event() {
+            match ev {
+                Event::Done(r) => return Some(r),
+                Event::Cancelled { .. } => return None,
+                _ => {}
+            }
+        }
+        None
+    }
+}
+
+struct Replica {
+    tx: Option<mpsc::SyncSender<Submission>>,
+    handle: Option<thread::JoinHandle<ServeStats>>,
+    outstanding: Arc<AtomicUsize>,
+}
+
+/// Configures and builds an [`Engine`].
+pub struct EngineBuilder {
+    replicas: usize,
+    batch: BatchPolicy,
+    dispatch: DispatchPolicy,
+    queue_capacity: usize,
+    seed: u64,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            replicas: 1,
+            batch: BatchPolicy::default(),
+            dispatch: DispatchPolicy::default(),
+            queue_capacity: 64,
+            seed: 0,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Number of model replicas (worker threads); each gets a clone of
+    /// the model. Default 1.
+    pub fn replicas(mut self, n: usize) -> Self {
+        assert!(n > 0, "at least one replica");
+        self.replicas = n;
+        self
+    }
+
+    /// Full batch policy for every replica's scheduler.
+    pub fn batch_policy(mut self, policy: BatchPolicy) -> Self {
+        self.batch = policy;
+        self
+    }
+
+    /// Maximum sequences decoded together per replica (default 8).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        assert!(n > 0, "max_batch must be positive");
+        self.batch.max_batch = n;
+        self
+    }
+
+    /// Token id that terminates a sequence early.
+    pub fn eos(mut self, token: u32) -> Self {
+        self.batch.eos = Some(token);
+        self
+    }
+
+    /// Replica dispatch policy (default least-outstanding).
+    pub fn dispatch(mut self, policy: DispatchPolicy) -> Self {
+        self.dispatch = policy;
+        self
+    }
+
+    /// Bound of each replica's pending-request queue (default 64):
+    /// `submit` blocks and `try_submit` returns
+    /// [`EngineError::QueueFull`] once a replica holds this many
+    /// un-admitted requests.
+    pub fn queue_capacity(mut self, n: usize) -> Self {
+        assert!(n > 0, "queue capacity must be positive");
+        self.queue_capacity = n;
+        self
+    }
+
+    /// Sampler seed; replica `i` uses `seed + i` so multi-replica runs
+    /// stay deterministic per replica.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Spawn the replica workers and return the engine.
+    pub fn build(self, model: Transformer) -> Engine {
+        let latency = Arc::new(LatencyRecorder::new());
+        let ttft = Arc::new(LatencyRecorder::new());
+        let max_seq = model.cfg.max_seq;
+        let mut replicas = Vec::with_capacity(self.replicas);
+        let mut model = Some(model);
+        for i in 0..self.replicas {
+            // The last replica takes the original model; earlier ones
+            // clone it.
+            let m = if i + 1 == self.replicas {
+                model.take().expect("model present for last replica")
+            } else {
+                model.as_ref().expect("model present").clone()
+            };
+            let (tx, rx) = mpsc::sync_channel::<Submission>(self.queue_capacity);
+            let outstanding = Arc::new(AtomicUsize::new(0));
+            let out_ctr = Arc::clone(&outstanding);
+            let lat = Arc::clone(&latency);
+            let ttf = Arc::clone(&ttft);
+            let policy = self.batch;
+            let seed = self.seed.wrapping_add(i as u64);
+            let handle = thread::Builder::new()
+                .name(format!("ams-engine-{i}"))
+                .spawn(move || replica_main(rx, m, policy, seed, out_ctr, lat, ttf))
+                .expect("spawn engine replica");
+            replicas.push(Replica {
+                tx: Some(tx),
+                handle: Some(handle),
+                outstanding,
+            });
+        }
+        Engine {
+            replicas,
+            dispatch: self.dispatch,
+            rr: AtomicUsize::new(0),
+            max_seq,
+            latency,
+            ttft,
+        }
+    }
+}
+
+/// Replica worker: drain the bounded queue into the scheduler, step it,
+/// settle outcomes. Exits once the engine drops the sender *and* all
+/// in-flight work has finished.
+fn replica_main(
+    rx: mpsc::Receiver<Submission>,
+    model: Transformer,
+    policy: BatchPolicy,
+    seed: u64,
+    outstanding: Arc<AtomicUsize>,
+    latency: Arc<LatencyRecorder>,
+    ttft: Arc<LatencyRecorder>,
+) -> ServeStats {
+    let mut sched = Scheduler::new(model, policy, seed);
+    let mut stats = ServeStats::default();
+    let wall = Timer::start();
+    loop {
+        // Block for work only when idle; otherwise pull between decode
+        // steps — but only enough to fill the free batch slots, so the
+        // *bounded channel* stays the real admission queue and
+        // `queue_capacity` is an honest backpressure bound (draining
+        // eagerly would just relocate the backlog into the scheduler's
+        // unbounded queue).
+        if sched.pending() == 0 {
+            match rx.recv() {
+                Ok(sub) => sched.admit_submission(sub),
+                Err(_) => break, // disconnected and idle: done
+            }
+        }
+        while sched.pending() < policy.max_batch {
+            match rx.try_recv() {
+                Ok(sub) => sched.admit_submission(sub),
+                Err(_) => break,
+            }
+        }
+        for o in sched.step() {
+            match o {
+                Outcome::Done(r) => {
+                    stats.requests += 1;
+                    stats.tokens_generated += r.tokens.len() as u64;
+                    latency.record(r.total_s);
+                    ttft.record(r.ttft_s);
+                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                }
+                Outcome::Cancelled { .. } => {
+                    stats.cancelled += 1;
+                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+    stats.decode_steps = sched.steps_executed;
+    stats.batched_tokens = sched.batched_tokens;
+    stats.wall_s = wall.elapsed_secs();
+    stats
+}
+
+/// The serving engine: the only public entry point for batched
+/// generation. See the [module docs](self) for the lifecycle.
+pub struct Engine {
+    replicas: Vec<Replica>,
+    dispatch: DispatchPolicy,
+    rr: AtomicUsize,
+    /// Model context bound, for request validation at submit.
+    max_seq: usize,
+    latency: Arc<LatencyRecorder>,
+    ttft: Arc<LatencyRecorder>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Requests accepted but not yet settled, across all replicas.
+    pub fn outstanding(&self) -> usize {
+        self.replicas
+            .iter()
+            .map(|r| r.outstanding.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Block until every accepted request has settled. Workers record a
+    /// request's metrics *before* decrementing its outstanding count, so
+    /// [`Engine::latency`]/[`Engine::ttft`] snapshots taken after this
+    /// are complete. (Callers normally await their handles first, making
+    /// this a microsecond formality.)
+    pub fn drain(&self) {
+        // Poll with a short sleep rather than a hot spin, so a long tail
+        // generation is not taxed by a burning core while it decodes.
+        while self.outstanding() > 0 {
+            thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    /// End-to-end latency samples (completed requests only).
+    pub fn latency(&self) -> Summary {
+        self.latency.snapshot()
+    }
+
+    /// Time-to-first-token samples, measured from submission.
+    pub fn ttft(&self) -> Summary {
+        self.ttft.snapshot()
+    }
+
+    fn pick_replica(&self) -> usize {
+        match self.dispatch {
+            DispatchPolicy::LeastOutstanding => {
+                self.replicas
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(i, r)| (r.outstanding.load(Ordering::SeqCst), *i))
+                    .map(|(i, _)| i)
+                    .expect("at least one replica")
+            }
+            DispatchPolicy::RoundRobin => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % self.replicas.len()
+            }
+        }
+    }
+
+    fn dispatch_to(
+        &self,
+        idx: usize,
+        req: GenRequest,
+        block: bool,
+    ) -> Result<RequestHandle, EngineError> {
+        // The scheduler/model assert on these; reject here so a bad
+        // request can never panic a replica worker.
+        if req.prompt.is_empty() {
+            return Err(EngineError::InvalidRequest(req, "empty prompt"));
+        }
+        if req.prompt.len() > self.max_seq {
+            return Err(EngineError::InvalidRequest(
+                req,
+                "prompt exceeds the model context",
+            ));
+        }
+        let (tx_ev, rx_ev) = mpsc::channel::<Event>();
+        // The TTFT stopwatch starts inside `Submission` — before any
+        // queue wait, including a blocking send on a full queue.
+        let sub = Submission::with_events(req, tx_ev.clone());
+        let id = sub.id();
+        let cancel = sub.cancel_flag();
+        let _ = tx_ev.send(Event::Queued { id });
+        let replica = &self.replicas[idx];
+        let tx = replica.tx.as_ref().expect("engine not shut down");
+        replica.outstanding.fetch_add(1, Ordering::SeqCst);
+        let send_result = if block {
+            tx.send(sub).map_err(|e| EngineError::Shutdown(e.0.into_request()))
+        } else {
+            tx.try_send(sub).map_err(|e| match e {
+                mpsc::TrySendError::Full(s) => EngineError::QueueFull(s.into_request()),
+                mpsc::TrySendError::Disconnected(s) => EngineError::Shutdown(s.into_request()),
+            })
+        };
+        match send_result {
+            Ok(()) => Ok(RequestHandle {
+                id,
+                rx: rx_ev,
+                cancel,
+                finished: false,
+            }),
+            Err(err) => {
+                replica.outstanding.fetch_sub(1, Ordering::SeqCst);
+                Err(err)
+            }
+        }
+    }
+
+    /// Submit a request, blocking while the chosen replica's queue is
+    /// full (bounded admission). Returns the streaming handle.
+    pub fn submit(&self, req: GenRequest) -> Result<RequestHandle, EngineError> {
+        let idx = self.pick_replica();
+        self.dispatch_to(idx, req, true)
+    }
+
+    /// Non-blocking submit: [`EngineError::QueueFull`] when the chosen
+    /// replica's queue is at capacity, handing the request back to the
+    /// caller (shed, retry or spill to another engine).
+    pub fn try_submit(&self, req: GenRequest) -> Result<RequestHandle, EngineError> {
+        let idx = self.pick_replica();
+        self.dispatch_to(idx, req, false)
+    }
+
+    /// Stop accepting work, finish everything in flight, join the
+    /// replicas and return merged statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> ServeStats {
+        // Disconnect every queue first so replicas drain concurrently.
+        for r in &mut self.replicas {
+            r.tx.take();
+        }
+        let mut total = ServeStats::default();
+        for r in &mut self.replicas {
+            if let Some(h) = r.handle.take() {
+                total.merge(&h.join().unwrap_or_default());
+            }
+        }
+        total
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::synthetic_checkpoint;
+    use crate::model::ModelConfig;
+    use crate::util::proptest::{run_prop, USize};
+
+    fn model() -> Transformer {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 33);
+        Transformer::from_checkpoint(&ck).unwrap()
+    }
+
+    fn engine(replicas: usize, max_batch: usize) -> Engine {
+        Engine::builder()
+            .replicas(replicas)
+            .max_batch(max_batch)
+            .seed(1)
+            .build(model())
+    }
+
+    #[test]
+    fn serves_and_shuts_down() {
+        let eng = engine(1, 8);
+        let handles: Vec<RequestHandle> = (0..5u64)
+            .map(|id| eng.submit(GenRequest::greedy(id, vec![1, 2], 3)).unwrap())
+            .collect();
+        let out: Vec<GenResponse> = handles.into_iter().filter_map(|h| h.wait()).collect();
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|r| r.tokens.len() == 3));
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.tokens_generated, 15);
+        assert!(stats.wall_s > 0.0);
+    }
+
+    #[test]
+    fn event_stream_orders_and_matches_response() {
+        let eng = engine(1, 4);
+        let mut h = eng.submit(GenRequest::greedy(7, vec![1, 2, 3], 5)).unwrap();
+        let mut streamed = Vec::new();
+        let mut saw_queued = false;
+        let mut done: Option<GenResponse> = None;
+        while let Some(ev) = h.next_event() {
+            match ev {
+                Event::Queued { id } => {
+                    assert_eq!(id, 7);
+                    assert!(streamed.is_empty(), "Queued must precede tokens");
+                    saw_queued = true;
+                }
+                Event::FirstToken { id, token, ttft_s } => {
+                    assert_eq!(id, 7);
+                    assert!(streamed.is_empty(), "FirstToken must be the first token");
+                    assert!(ttft_s >= 0.0);
+                    streamed.push(token);
+                }
+                Event::Token { id, token, index } => {
+                    assert_eq!(id, 7);
+                    assert_eq!(index, streamed.len(), "tokens must arrive in order");
+                    streamed.push(token);
+                }
+                Event::Done(r) => done = Some(r),
+                Event::Cancelled { .. } => panic!("never cancelled"),
+            }
+        }
+        assert!(saw_queued);
+        let done = done.expect("terminal Done");
+        // Streaming satellite: greedy streamed tokens == the final result.
+        assert_eq!(streamed, done.tokens);
+        assert_eq!(streamed.len(), 5);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn streaming_equals_non_streaming_greedy() {
+        // The engine path (chunked prefill + streaming) must produce the
+        // same greedy tokens as a bare scheduler fed the same requests.
+        let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![9, 8], vec![4], vec![5, 6, 7, 8]];
+        let mut sched = Scheduler::new(model(), BatchPolicy { max_batch: 4, eos: None }, 1);
+        for (i, p) in prompts.iter().enumerate() {
+            sched.admit(GenRequest::greedy(i as u64, p.clone(), 6));
+        }
+        let mut reference = sched.run_to_completion();
+        reference.sort_by_key(|r| r.id);
+
+        let eng = Engine::builder().max_batch(4).seed(1).build(model());
+        let handles: Vec<RequestHandle> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| eng.submit(GenRequest::greedy(i as u64, p.clone(), 6)).unwrap())
+            .collect();
+        let mut out: Vec<GenResponse> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        out.sort_by_key(|r| r.id);
+        for (a, b) in out.iter().zip(&reference) {
+            assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        }
+        eng.shutdown();
+    }
+
+    #[test]
+    fn cancel_mid_generation() {
+        let eng = engine(1, 2);
+        // A long request we cancel and a short one that must be unaffected.
+        let long = eng.submit(GenRequest::greedy(0, vec![1, 2], 400)).unwrap();
+        let short = eng.submit(GenRequest::greedy(1, vec![3], 4)).unwrap();
+        long.cancel();
+        assert!(long.wait().is_none(), "cancelled requests yield no response");
+        let r = short.wait().expect("survivor completes");
+        assert_eq!(r.tokens.len(), 4);
+        let stats = eng.shutdown();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn cancelled_stream_ends_with_terminal_event() {
+        let eng = engine(1, 2);
+        let mut h = eng.submit(GenRequest::greedy(0, vec![1, 2], 400)).unwrap();
+        h.cancel();
+        let mut terminal = 0;
+        let mut after_terminal = 0;
+        while let Some(ev) = h.next_event() {
+            if terminal > 0 {
+                after_terminal += 1;
+            }
+            if ev.is_terminal() {
+                assert!(matches!(ev, Event::Cancelled { .. }));
+                terminal += 1;
+            }
+        }
+        assert_eq!(terminal, 1);
+        assert_eq!(after_terminal, 0, "nothing may follow the terminal event");
+        eng.shutdown();
+    }
+
+    /// Property (satellite): every submitted request yields exactly one
+    /// terminal event, whether it completes or is cancelled at a random
+    /// point in its lifecycle.
+    #[test]
+    fn prop_exactly_one_terminal_event() {
+        run_prop(
+            "one-terminal-event",
+            0xE7E7,
+            5,
+            &USize { lo: 1, hi: 9 },
+            |&n| {
+                let eng = Engine::builder().max_batch(3).seed(2).build(model());
+                let mut handles = Vec::new();
+                for id in 0..n as u64 {
+                    let h = eng
+                        .submit(GenRequest::greedy(
+                            id,
+                            vec![(id as u32 % 50) + 1],
+                            2 + (id as usize % 5),
+                        ))
+                        .unwrap();
+                    if id % 3 == 1 {
+                        h.cancel();
+                    }
+                    handles.push(h);
+                }
+                for mut h in handles {
+                    let mut terminals = 0;
+                    while let Some(ev) = h.next_event() {
+                        if ev.is_terminal() {
+                            terminals += 1;
+                        }
+                    }
+                    if terminals != 1 {
+                        return Err(format!("request {} saw {terminals} terminal events", h.id()));
+                    }
+                }
+                eng.shutdown();
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn try_submit_surfaces_queue_full() {
+        // Capacity 1 and a slow long-running request: the queue must fill
+        // and try_submit must hand the request back instead of panicking.
+        let eng = Engine::builder()
+            .max_batch(1)
+            .queue_capacity(1)
+            .seed(3)
+            .build(model());
+        let first = eng.submit(GenRequest::greedy(0, vec![1, 2], 60)).unwrap();
+        let mut full_seen = false;
+        let mut accepted = Vec::new();
+        // Push until the bounded queue rejects one (the worker may admit
+        // the first request before the queue fills, hence the loop).
+        for id in 1..50u64 {
+            match eng.try_submit(GenRequest::greedy(id, vec![2], 60)) {
+                Ok(h) => accepted.push(h),
+                Err(EngineError::QueueFull(req)) => {
+                    assert_eq!(req.id, id, "rejected request handed back intact");
+                    full_seen = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(full_seen, "bounded queue never reported QueueFull");
+        // Unblock the system: cancel everything and drain (a request may
+        // legitimately win the race and complete before its cancel).
+        first.cancel();
+        for h in &accepted {
+            h.cancel();
+        }
+        let _ = first.wait();
+        for h in accepted {
+            h.wait();
+        }
+        eng.shutdown();
+    }
+
+    #[test]
+    fn empty_prompt_rejected_at_submit() {
+        let eng = engine(1, 2);
+        match eng.submit(GenRequest::greedy(0, vec![], 4)) {
+            Err(EngineError::InvalidRequest(req, why)) => {
+                assert_eq!(req.id, 0, "request handed back intact");
+                assert!(why.contains("empty"));
+            }
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("empty prompt must be rejected, not panic a worker"),
+        }
+        // Prompts beyond the model context are rejected up front too.
+        let too_long = vec![1u32; ModelConfig::test_tiny().max_seq + 1];
+        match eng.submit(GenRequest::greedy(2, too_long, 2)) {
+            Err(EngineError::InvalidRequest(req, why)) => {
+                assert_eq!(req.id, 2);
+                assert!(why.contains("context"));
+            }
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("over-long prompt must be rejected, not panic a worker"),
+        }
+        // The engine stays healthy afterwards.
+        let h = eng.submit(GenRequest::greedy(1, vec![1], 2)).unwrap();
+        assert_eq!(h.wait().expect("serves normally").tokens.len(), 2);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn round_robin_rotates_replicas() {
+        let eng = Engine::builder()
+            .replicas(3)
+            .dispatch(DispatchPolicy::RoundRobin)
+            .seed(4)
+            .build(model());
+        assert_eq!(eng.replica_count(), 3);
+        assert_eq!(eng.pick_replica(), 0);
+        assert_eq!(eng.pick_replica(), 1);
+        assert_eq!(eng.pick_replica(), 2);
+        assert_eq!(eng.pick_replica(), 0);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn least_outstanding_spreads_load() {
+        let eng = Engine::builder().replicas(3).seed(5).build(model());
+        // Long generations keep requests outstanding, so the three
+        // dispatch decisions must fan out across replicas.
+        let handles: Vec<RequestHandle> = (0..3u64)
+            .map(|id| eng.submit(GenRequest::greedy(id, vec![1, 2, 3, 4], 24)).unwrap())
+            .collect();
+        let out: Vec<GenResponse> = handles.into_iter().filter_map(|h| h.wait()).collect();
+        assert_eq!(out.len(), 3);
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 3);
+        eng_stats_sane(&stats);
+    }
+
+    fn eng_stats_sane(stats: &ServeStats) {
+        assert!(stats.wall_s > 0.0);
+        assert!(stats.decode_steps > 0);
+    }
+
+    #[test]
+    fn shutdown_completes_inflight() {
+        let eng = engine(1, 4);
+        let handles: Vec<RequestHandle> = (0..3u64)
+            .map(|id| eng.submit(GenRequest::greedy(id, vec![1], 2)).unwrap())
+            .collect();
+        // Immediate shutdown: responses must still be produced.
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 3);
+        for h in handles {
+            assert!(h.wait().is_some(), "in-flight work finishes before join");
+        }
+    }
+
+    #[test]
+    fn latency_and_ttft_recorded() {
+        let eng = engine(1, 2);
+        let h = eng.submit(GenRequest::greedy(0, vec![3], 2)).unwrap();
+        let r = h.wait().unwrap();
+        assert!(r.ttft_s > 0.0);
+        assert!(r.total_s >= r.ttft_s);
+        eng.drain();
+        assert_eq!(eng.latency().count(), 1);
+        assert_eq!(eng.ttft().count(), 1);
+        eng.shutdown();
+    }
+}

@@ -1,15 +1,41 @@
-//! L3 serving coordinator: request types, continuous dynamic batcher,
-//! engine workers and a replica router.
+//! L3 serving coordinator: the [`Engine`] facade over request queues,
+//! continuous dynamic batching, chunked prefill, streaming responses and
+//! replica dispatch.
 //!
 //! The paper's contribution is the numeric format + kernels, so the
-//! coordinator is deliberately vLLM-router-shaped but lean: requests enter
-//! a queue, a scheduler admits them into the running batch (continuous
-//! batching up to `max_batch`), every step runs one batched decode through
-//! the packed kernels, finished sequences leave the batch immediately.
+//! coordinator is deliberately vLLM-router-shaped but lean. The request
+//! lifecycle API is what real quantized-serving systems expose:
+//!
+//! ```text
+//! Engine::builder().replicas(2).max_batch(8).queue_capacity(64).build(model)
+//!   └─ submit(req)      -> RequestHandle (blocking when the queue is full)
+//!   └─ try_submit(req)  -> Err(EngineError::QueueFull) for backpressure
+//! RequestHandle
+//!   └─ next_event()     -> Queued | FirstToken | Token | Done | Cancelled
+//!   └─ cancel()         -> sequence dropped at the next step boundary
+//!                          once admitted (queued requests settle when
+//!                          dequeued), KV cache freed, terminal
+//!                          Cancelled event
+//!   └─ wait()           -> drain to the terminal event
+//! ```
+//!
+//! Under the facade each replica worker owns a [`batcher::Scheduler`]:
+//! requests enter a bounded queue, the scheduler admits them into the
+//! running batch (continuous batching up to `max_batch`) with a *chunked
+//! prefill* — the whole prompt runs as one `[prompt_len, ·]` GEMM per
+//! projection through the tiled fused kernels — then every step runs one
+//! batched decode, finished sequences leave the batch immediately, and
+//! per-token events stream back over the per-request channel. Replica
+//! dispatch (least-outstanding or round-robin) is an internal policy of
+//! the engine, not a second user-facing type.
+//!
+//! All request timing measures from **submission**: `ttft_s` and
+//! `total_s` include queue wait.
 
 pub mod batcher;
-pub mod router;
-pub mod server;
+pub mod engine;
+
+pub use engine::{DispatchPolicy, Engine, EngineBuilder, EngineError, RequestHandle};
 
 use crate::model::sampler::Sampler;
 
@@ -39,18 +65,59 @@ pub struct GenResponse {
     pub id: u64,
     /// Generated tokens (prompt excluded).
     pub tokens: Vec<u32>,
-    /// Seconds from admission to first generated token.
+    /// Seconds from submission to first generated token (queue wait
+    /// included).
     pub ttft_s: f64,
-    /// Seconds from admission to completion.
+    /// Seconds from submission to completion.
     pub total_s: f64,
-    /// Decode steps executed on behalf of this request.
+    /// Decode steps executed on behalf of this request (prefill counts as
+    /// one).
     pub steps: usize,
+}
+
+/// Per-request lifecycle event streamed over a [`RequestHandle`].
+///
+/// Exactly one terminal event ([`Event::Done`] or [`Event::Cancelled`]) is
+/// emitted per submitted request.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Accepted into the engine queue.
+    Queued { id: u64 },
+    /// First generated token (end of prefill). `ttft_s` measures from
+    /// submission, queue wait included.
+    FirstToken { id: u64, token: u32, ttft_s: f64 },
+    /// A subsequent generated token; `index` is its position in the
+    /// generated sequence (the first token has index 0).
+    Token { id: u64, token: u32, index: usize },
+    /// Terminal: the request finished (budget, EOS or context bound).
+    Done(GenResponse),
+    /// Terminal: the request was cancelled; carries whatever tokens were
+    /// generated before the cut.
+    Cancelled { id: u64, tokens: Vec<u32> },
+}
+
+impl Event {
+    pub fn id(&self) -> u64 {
+        match self {
+            Event::Queued { id }
+            | Event::FirstToken { id, .. }
+            | Event::Token { id, .. }
+            | Event::Cancelled { id, .. } => *id,
+            Event::Done(r) => r.id,
+        }
+    }
+
+    /// Done or Cancelled — the last event a request ever emits.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Done(_) | Event::Cancelled { .. })
+    }
 }
 
 /// Aggregate serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub requests: u64,
+    pub cancelled: u64,
     pub tokens_generated: u64,
     pub decode_steps: u64,
     pub batched_tokens: u64,
@@ -72,5 +139,16 @@ impl ServeStats {
         } else {
             0.0
         }
+    }
+
+    /// Fold another replica's stats into this one (counters add, wall
+    /// clocks overlap so the max is the fleet wall time).
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.requests += other.requests;
+        self.cancelled += other.cancelled;
+        self.tokens_generated += other.tokens_generated;
+        self.decode_steps += other.decode_steps;
+        self.batched_tokens += other.batched_tokens;
+        self.wall_s = self.wall_s.max(other.wall_s);
     }
 }

@@ -161,9 +161,19 @@ pub fn dense_gemm_into(w: &Tensor, x: &Tensor, y: &mut Tensor, scratch: &mut Gem
     let yt = &mut scratch.yt;
     yt.clear();
     yt.resize(rows * batch, 0.0);
-    for r in 0..rows {
+    dense_rows_t(w, 0, rows, x, yt);
+    transpose_into(yt, rows, batch, y.data_mut());
+}
+
+/// Dense tiled kernel over rows `[r0, r1)` writing the transposed block
+/// `out[(r - r0) * batch + b]`. Shared by the serial and pool-sharded
+/// dense paths (per-row math is identical at any worker count).
+pub(crate) fn dense_rows_t(w: &Tensor, r0: usize, r1: usize, x: &Tensor, out: &mut [f32]) {
+    let batch = x.rows();
+    debug_assert_eq!(out.len(), (r1 - r0) * batch);
+    for r in r0..r1 {
         let wr = w.row(r);
-        let orow = &mut yt[r * batch..(r + 1) * batch];
+        let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
         let mut b = 0usize;
         while b < batch {
             let rem = batch - b;
@@ -182,7 +192,6 @@ pub fn dense_gemm_into(w: &Tensor, x: &Tensor, y: &mut Tensor, scratch: &mut Gem
             }
         }
     }
-    transpose_into(yt, rows, batch, y.data_mut());
 }
 
 #[inline]
@@ -190,6 +199,51 @@ fn dense_tile<const T: usize>(wr: &[f32], x: &Tensor, b0: usize, out: &mut [f32]
     let xs: [&[f32]; T] = core::array::from_fn(|j| x.row(b0 + j));
     let d = simd::dotn_dense(wr, &xs);
     out[..T].copy_from_slice(&d);
+}
+
+/// Worker count for a `[rows, cols] × batch` product (1 = stay serial):
+/// consult the shared pool only above the size floor so small models
+/// never spin it up. One policy for the packed *and* dense-reference
+/// paths — a tuning change here moves both together, keeping baseline
+/// comparisons fair.
+pub(crate) fn auto_threads(rows: usize, cols: usize, batch: usize) -> usize {
+    let macs = rows * cols * batch.max(1);
+    if macs < PAR_MIN_MACS {
+        return 1;
+    }
+    let t = crate::util::threadpool::shared_pool().size();
+    if t <= 1 || rows < 4 * t {
+        1
+    } else {
+        t
+    }
+}
+
+/// Dense GEMV that self-selects serial vs pool-parallel execution — the
+/// FP16-reference baseline analog of [`QuantLinear::gemv_auto`], so
+/// baseline numbers at high thread counts stay fair.
+pub fn dense_gemv_auto(w: &Tensor, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.cols());
+    assert_eq!(y.len(), w.rows());
+    let threads = auto_threads(w.rows(), w.cols(), 1);
+    if threads > 1 {
+        parallel::dense_gemv_parallel(w, x, y, threads);
+    } else {
+        for r in 0..w.rows() {
+            y[r] = simd::dot_dense(w.row(r), x);
+        }
+    }
+}
+
+/// Dense batched product that self-selects serial vs pool-parallel
+/// execution (analog of [`QuantLinear::gemm_auto_into`]).
+pub fn dense_gemm_auto_into(w: &Tensor, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
+    let threads = auto_threads(w.rows(), w.cols(), x.rows());
+    if threads > 1 {
+        parallel::dense_gemm_parallel_into(w, x, y, threads, scratch);
+    } else {
+        dense_gemm_into(w, x, y, scratch);
+    }
 }
 
 /// Scheme names the kernel tests must cover — shared by the unit tests
@@ -384,20 +438,11 @@ impl QuantLinear {
         transpose_into(yt, rows, batch, y.data_mut());
     }
 
-    /// Pick a worker count for this matrix (1 = stay serial). Consults the
-    /// shared pool only above the size floor so small models never spin it
-    /// up.
+    /// Pick a worker count for this matrix (1 = stay serial) — the shared
+    /// policy of [`auto_threads`], so the packed and dense-reference paths
+    /// can never diverge in when they go parallel.
     pub(crate) fn auto_threads(&self, batch: usize) -> usize {
-        let macs = self.packed.rows * self.packed.cols * batch.max(1);
-        if macs < PAR_MIN_MACS {
-            return 1;
-        }
-        let t = crate::util::threadpool::shared_pool().size();
-        if t <= 1 || self.packed.rows < 4 * t {
-            1
-        } else {
-            t
-        }
+        auto_threads(self.packed.rows, self.packed.cols, batch)
     }
 
     /// GEMV that self-selects serial vs pool-parallel execution.

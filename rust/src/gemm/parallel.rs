@@ -135,10 +135,66 @@ impl QuantLinear {
     }
 }
 
+/// Pool-sharded dense GEMV (the FP16-reference baseline's analog of
+/// [`QuantLinear::gemv_parallel`]): contiguous row blocks, one per worker,
+/// each writing a disjoint slice of `y`. Per-row math is identical at any
+/// worker count, so results match the serial path bit-for-bit.
+pub fn dense_gemv_parallel(w: &Tensor, x: &[f32], y: &mut [f32], threads: usize) {
+    assert_eq!(x.len(), w.cols());
+    assert_eq!(y.len(), w.rows());
+    let rows = w.rows();
+    let threads = threads.min(shared_pool().size());
+    if threads <= 1 || rows < 2 * threads {
+        for (r, yv) in y.iter_mut().enumerate() {
+            *yv = super::simd::dot_dense(w.row(r), x);
+        }
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    let parts = split_rows(y, rows, per, 1);
+    shared_pool().scope_parts(parts, &|_, (start, yslice): (usize, &mut [f32])| {
+        for (i, yv) in yslice.iter_mut().enumerate() {
+            *yv = super::simd::dot_dense(w.row(start + i), x);
+        }
+    });
+}
+
+/// Pool-sharded dense batched product into a pre-shaped `y: [batch, rows]`
+/// (see [`QuantLinear::gemm_parallel_into`] for the packed analog): workers
+/// own disjoint row-range chunks of the `[rows, batch]` staging buffer, the
+/// single transpose into `y` happens on the caller thread.
+pub fn dense_gemm_parallel_into(
+    w: &Tensor,
+    x: &Tensor,
+    y: &mut Tensor,
+    threads: usize,
+    scratch: &mut GemmScratch,
+) {
+    assert_eq!(x.cols(), w.cols());
+    let batch = x.rows();
+    let rows = w.rows();
+    assert_eq!(y.shape(), &[batch, rows]);
+    let threads = threads.min(shared_pool().size());
+    if threads <= 1 || rows < 2 * threads {
+        return super::dense_gemm_into(w, x, y, scratch);
+    }
+    let yt = &mut scratch.yt;
+    yt.clear();
+    yt.resize(rows * batch, 0.0);
+    let per = rows.div_ceil(threads);
+    let parts = split_rows(yt, rows, per, batch);
+    shared_pool().scope_parts(parts, &|_, (start, chunk): (usize, &mut [f32])| {
+        let nrows = chunk.len() / batch;
+        super::dense_rows_t(w, start, start + nrows, x, chunk);
+    });
+    super::transpose_into(yt, rows, batch, y.data_mut());
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::tests::make_linear;
     use super::super::GemmScratch;
+    use super::{dense_gemm_parallel_into, dense_gemv_parallel};
     use crate::tensor::{init, Tensor};
     use crate::util::prng::Rng;
 
@@ -181,6 +237,48 @@ mod tests {
             let mut y = Tensor::zeros(&[batch, 48]);
             lin.gemm_parallel_into(&x, &mut y, 4, &mut scratch);
             assert_eq!(y, lin.gemm(&x), "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn dense_parallel_matches_serial() {
+        let mut rng = Rng::new(11);
+        let w = init::gaussian(&[96, 128], 0.0, 0.5, &mut rng);
+        // GEMV: sharded rows, identical per-row math -> exact equality.
+        let x: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y1 = vec![0f32; 96];
+        let mut y4 = vec![0f32; 96];
+        for (r, yv) in y1.iter_mut().enumerate() {
+            *yv = super::super::simd::dot_dense(w.row(r), &x);
+        }
+        dense_gemv_parallel(&w, &x, &mut y4, 4);
+        assert_eq!(y1, y4);
+        let mut y_auto = vec![0f32; 96];
+        super::super::dense_gemv_auto(&w, &x, &mut y_auto);
+        assert_eq!(y1, y_auto);
+        // GEMM across ragged batch widths (tile ladder 8/4/2/1).
+        let mut s1 = GemmScratch::new();
+        let mut s4 = GemmScratch::new();
+        for batch in [1usize, 5, 8, 11] {
+            let xb = init::gaussian(&[batch, 128], 0.0, 1.0, &mut rng);
+            let mut a = Tensor::zeros(&[batch, 96]);
+            let mut b = Tensor::zeros(&[batch, 96]);
+            super::super::dense_gemm_into(&w, &xb, &mut a, &mut s1);
+            dense_gemm_parallel_into(&w, &xb, &mut b, 4, &mut s4);
+            assert_eq!(a, b, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn dense_parallel_small_falls_back() {
+        let mut rng = Rng::new(12);
+        let w = init::gaussian(&[3, 16], 0.0, 1.0, &mut rng);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0f32; 3];
+        dense_gemv_parallel(&w, &x, &mut y, 8); // rows < 2*threads -> serial
+        for (r, &yv) in y.iter().enumerate() {
+            let want = super::super::simd::dot_dense(w.row(r), &x);
+            assert_eq!(yv, want);
         }
     }
 

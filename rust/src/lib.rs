@@ -11,7 +11,9 @@
 //! - [`restore`] — bit-level FPx→FP16 restoration (SHIFT/AND/OR and LUT).
 //! - [`gemm`] — fused unpack–dequant GEMV/GEMM hot path.
 //! - [`model`] — transformer inference engine + checkpoints.
-//! - [`coordinator`] — request router, dynamic batcher, serving loop.
+//! - [`coordinator`] — the [`Engine`] serving facade: bounded admission,
+//!   chunked prefill, continuous batching, streaming handles,
+//!   cancellation, replica dispatch.
 //! - [`runtime`] — PJRT client running AOT-lowered JAX/Pallas artifacts.
 //! - [`sim`] — roofline simulator of the paper's GPU (Table 3).
 //! - [`baselines`] — INT RTN / W8A16 / TC-FPx comparators.
@@ -34,3 +36,8 @@ pub mod runtime;
 pub mod sim;
 pub mod tensor;
 pub mod util;
+
+pub use coordinator::{
+    DispatchPolicy, Engine, EngineBuilder, EngineError, Event, GenRequest, GenResponse,
+    RequestHandle, ServeStats,
+};

@@ -18,9 +18,7 @@
 //! Common flags: --artifacts DIR (default ./artifacts), --out FILE (write
 //! markdown/CSV instead of stdout).
 
-use ams_quant::coordinator::batcher::BatchPolicy;
-use ams_quant::coordinator::server::Server;
-use ams_quant::coordinator::GenRequest;
+use ams_quant::coordinator::{DispatchPolicy, Engine, GenRequest, RequestHandle};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
 use ams_quant::formats::FpFormat;
@@ -92,7 +90,8 @@ fn print_help() {
          tools:\n\
          \x20 quantize --scheme S [--ckpt file.amsz]\n\
          \x20 eval --scheme S [--tokens N]\n\
-         \x20 serve --scheme S --requests N --max-batch B\n\
+         \x20 serve --scheme S --requests N --max-batch B --replicas R\n\
+         \x20       [--queue-capacity Q --dispatch least-outstanding|round-robin]\n\
          \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
          common flags: --artifacts DIR  --out FILE  --csv"
     );
@@ -296,6 +295,13 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     let n_requests = args.get_usize("requests", 16);
     let max_batch = args.get_usize("max-batch", 8);
     let max_new = args.get_usize("max-new-tokens", 32);
+    let replicas = args.get_usize("replicas", 1);
+    let queue_capacity = args.get_usize("queue-capacity", 64);
+    let dispatch = match args.get_or("dispatch", "least-outstanding") {
+        "round-robin" => DispatchPolicy::RoundRobin,
+        "least-outstanding" => DispatchPolicy::LeastOutstanding,
+        other => bail!("unknown dispatch policy '{other}' (least-outstanding | round-robin)"),
+    };
     let (base, heldout, kind) = exp::load_model(artifacts)?;
     let model = if scheme_name == "fp32" {
         base
@@ -304,26 +310,38 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         base.quantized(&QuantConfig::paper(scheme))
     };
     eprintln!(
-        "# serving tiny LM ({kind}) under {scheme_name}, {n_requests} requests, max_batch={max_batch}"
+        "# serving tiny LM ({kind}) under {scheme_name}: {n_requests} requests, \
+         max_batch={max_batch}, replicas={replicas}, queue_capacity={queue_capacity}"
     );
 
     let mut rng = Rng::new(args.get_u64("seed", 0));
-    let srv = Server::spawn(model, BatchPolicy { max_batch, eos: None }, 1);
+    let eng = Engine::builder()
+        .replicas(replicas)
+        .max_batch(max_batch)
+        .queue_capacity(queue_capacity)
+        .dispatch(dispatch)
+        .seed(1)
+        .build(model);
     let wall = ams_quant::util::timer::Timer::start();
-    for id in 0..n_requests as u64 {
-        let start = rng.range(0, heldout.len().saturating_sub(40).max(1));
-        let prompt: Vec<u32> = heldout[start..(start + 16).min(heldout.len())].to_vec();
-        srv.submit(GenRequest {
-            id,
-            prompt,
-            max_new_tokens: max_new,
-            sampler: Sampler::Greedy,
-        });
-    }
-    let responses = srv.collect(n_requests);
+    let handles: Vec<RequestHandle> = (0..n_requests as u64)
+        .map(|id| {
+            let start = rng.range(0, heldout.len().saturating_sub(40).max(1));
+            let prompt: Vec<u32> = heldout[start..(start + 16).min(heldout.len())].to_vec();
+            eng.submit(GenRequest {
+                id,
+                prompt,
+                max_new_tokens: max_new,
+                sampler: Sampler::Greedy,
+            })
+            .map_err(|e| anyhow::anyhow!("submit failed: {e}"))
+        })
+        .collect::<Result<_>>()?;
+    let responses: Vec<_> = handles.into_iter().filter_map(|h| h.wait()).collect();
     let wall_s = wall.elapsed_secs();
-    let lat = srv.latency.snapshot();
-    let stats = srv.shutdown();
+    eng.drain();
+    let lat = eng.latency();
+    let ttft = eng.ttft();
+    let stats = eng.shutdown();
 
     let mut t = Table::new("Serving report (E9)", &["metric", "value"]);
     t.row(vec!["requests".into(), responses.len().to_string()]);
@@ -339,6 +357,8 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     ]);
     t.row(vec!["latency p50 s".into(), f(lat.percentile(50.0), 3)]);
     t.row(vec!["latency p90 s".into(), f(lat.percentile(90.0), 3)]);
+    t.row(vec!["ttft p50 s".into(), f(ttft.percentile(50.0), 4)]);
+    t.row(vec!["ttft p99 s".into(), f(ttft.percentile(99.0), 4)]);
     emit_table(args, &t)?;
     if let Some(r) = responses.first() {
         eprintln!("# sample continuation: {:?}", tokenizer::decode(&r.tokens));

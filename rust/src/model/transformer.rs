@@ -16,7 +16,7 @@
 use super::checkpoint::Checkpoint;
 use super::ModelConfig;
 use crate::formats::registry::Scheme;
-use crate::gemm::{dense_gemm_into, simd, GemmScratch, QuantLinear};
+use crate::gemm::{dense_gemm_auto_into, dense_gemv_auto, GemmScratch, QuantLinear};
 use crate::quant::sharing::quantize;
 use crate::quant::QuantConfig;
 use crate::tensor::Tensor;
@@ -49,16 +49,17 @@ impl Linear {
     /// hot loops use [`Linear::apply_with`].
     pub fn apply(&self, x: &[f32], y: &mut [f32]) {
         match self {
-            Linear::Dense(w) => dense_gemv(w, x, y),
+            Linear::Dense(w) => dense_gemv_auto(w, x, y),
             Linear::Quant(q) => q.gemv(x, y),
         }
     }
 
-    /// Zero-alloc `y = W x` against a caller-owned scratch. Large packed
-    /// projections self-dispatch onto the shared pool.
+    /// Zero-alloc `y = W x` against a caller-owned scratch. Large
+    /// projections — packed *and* dense-reference — self-dispatch onto the
+    /// shared pool, so baseline numbers at high thread counts stay fair.
     pub fn apply_with(&self, x: &[f32], y: &mut [f32], scratch: &mut GemmScratch) {
         match self {
-            Linear::Dense(w) => dense_gemv(w, x, y),
+            Linear::Dense(w) => dense_gemv_auto(w, x, y),
             Linear::Quant(q) => q.gemv_auto(x, y, scratch),
         }
     }
@@ -77,7 +78,7 @@ impl Linear {
     pub fn apply_batch_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
         y.resize(&[x.rows(), self.out_dim()]);
         match self {
-            Linear::Dense(w) => dense_gemm_into(w, x, y, scratch),
+            Linear::Dense(w) => dense_gemm_auto_into(w, x, y, scratch),
             Linear::Quant(q) => q.gemm_auto_into(x, y, scratch),
         }
     }
@@ -88,15 +89,6 @@ impl Linear {
             Linear::Dense(t) => t.len() * 2, // counted as fp16 storage
             Linear::Quant(q) => q.packed.payload_bytes(),
         }
-    }
-}
-
-/// Vectorized dense GEMV (the FP16-reference baseline's single-token
-/// path) — register-tiled like the packed kernels so speedup comparisons
-/// measure the format, not kernel quality.
-fn dense_gemv(w: &Tensor, x: &[f32], y: &mut [f32]) {
-    for r in 0..w.rows() {
-        y[r] = simd::dot_dense(w.row(r), x);
     }
 }
 
@@ -612,6 +604,150 @@ impl Transformer {
         self.lm_head.apply_batch_into(xb, logitsb, gemm);
         logitsb
     }
+
+    /// Chunked prefill (allocating wrapper over
+    /// [`Transformer::forward_prefill_with`]).
+    pub fn forward_prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Vec<f32> {
+        let mut scratch = ForwardScratch::new();
+        self.forward_prefill_with(tokens, cache, &mut scratch).to_vec()
+    }
+
+    /// Chunked prefill: append `tokens` (a prompt, or a chunk of one) to a
+    /// single sequence's cache in one pass. Every projection sees one
+    /// `[n, ·]` GEMM through the tiled fused kernels instead of `n` GEMVs;
+    /// attention is causal inside the chunk and attends the cache prefix.
+    /// Returns logits for the last position only (all prefill needs: one
+    /// lm_head GEMV instead of an `[n, vocab]` GEMM) — equal to feeding
+    /// the tokens one at a time through [`Transformer::forward_with`]:
+    /// the tile kernels accumulate each output column in the same order at
+    /// any tile width.
+    pub fn forward_prefill_with<'s>(
+        &self,
+        tokens: &[u32],
+        cache: &mut KvCache,
+        scratch: &'s mut ForwardScratch,
+    ) -> &'s [f32] {
+        let n = tokens.len();
+        assert!(n > 0, "empty prefill chunk");
+        let pos0 = cache.len;
+        assert!(pos0 + n <= self.cfg.max_seq, "sequence overflow");
+        let cfg = &self.cfg;
+        let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
+        let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+
+        let ForwardScratch {
+            gemm,
+            scores,
+            logits,
+            h,
+            qi,
+            xb,
+            hb,
+            qb,
+            kxb,
+            vxb,
+            attnb,
+            ob,
+            gateb,
+            upb,
+            actb,
+            downb,
+            ..
+        } = scratch;
+
+        xb.resize(&[n, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            xb.row_mut(i).copy_from_slice(self.embed.row(t as usize));
+        }
+        hb.resize(&[n, d]);
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            for i in 0..n {
+                rmsnorm(xb.row(i), &layer.attn_norm, hb.row_mut(i));
+            }
+            layer.wq.apply_batch_into(hb, qb, gemm); // [n, d]
+            layer.wk.apply_batch_into(hb, kxb, gemm); // [n, kvd]
+            layer.wv.apply_batch_into(hb, vxb, gemm);
+            let kc = &mut cache.k[li];
+            let vc = &mut cache.v[li];
+            // Write + rope the whole chunk's K/V first; attention row i may
+            // then read any position <= pos0 + i (causal by construction).
+            for i in 0..n {
+                let pos = pos0 + i;
+                kc[pos * kvd..(pos + 1) * kvd].copy_from_slice(kxb.row(i));
+                vc[pos * kvd..(pos + 1) * kvd].copy_from_slice(vxb.row(i));
+                for g in 0..cfg.n_kv_heads {
+                    rope(
+                        &mut kc[pos * kvd + g * hd..pos * kvd + (g + 1) * hd],
+                        pos,
+                        hd,
+                    );
+                }
+            }
+            attnb.resize(&[n, d]);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for i in 0..n {
+                let pos = pos0 + i;
+                qi.clear();
+                qi.extend_from_slice(qb.row(i));
+                for hh in 0..cfg.n_heads {
+                    rope(&mut qi[hh * hd..(hh + 1) * hd], pos, hd);
+                }
+                ensure(scores, pos + 1);
+                let oi = attnb.row_mut(i);
+                for hh in 0..cfg.n_heads {
+                    let g = hh / heads_per_kv;
+                    let qh = &qi[hh * hd..(hh + 1) * hd];
+                    for (t, s) in scores.iter_mut().enumerate() {
+                        let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
+                        *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
+                    }
+                    softmax_inplace(scores);
+                    let oh = &mut oi[hh * hd..(hh + 1) * hd];
+                    for (t, &p) in scores.iter().enumerate() {
+                        let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
+                        for j in 0..hd {
+                            oh[j] += p * vh[j];
+                        }
+                    }
+                }
+            }
+            layer.wo.apply_batch_into(attnb, ob, gemm);
+            for i in 0..n {
+                let xr = xb.row_mut(i);
+                for (j, &v) in ob.row(i).iter().enumerate() {
+                    xr[j] += v;
+                }
+            }
+            for i in 0..n {
+                rmsnorm(xb.row(i), &layer.mlp_norm, hb.row_mut(i));
+            }
+            layer.w_gate.apply_batch_into(hb, gateb, gemm);
+            layer.w_up.apply_batch_into(hb, upb, gemm);
+            actb.resize(&[n, cfg.d_ff]);
+            for i in 0..n {
+                let ar = actb.row_mut(i);
+                let gr = gateb.row(i);
+                let ur = upb.row(i);
+                for j in 0..cfg.d_ff {
+                    ar[j] = silu(gr[j]) * ur[j];
+                }
+            }
+            layer.w_down.apply_batch_into(actb, downb, gemm);
+            for i in 0..n {
+                let xr = xb.row_mut(i);
+                for (j, &v) in downb.row(i).iter().enumerate() {
+                    xr[j] += v;
+                }
+            }
+        }
+        cache.len = pos0 + n;
+        ensure(h, d);
+        rmsnorm(xb.row(n - 1), &self.final_norm, h);
+        ensure(logits, cfg.vocab_size);
+        self.lm_head.apply_with(h, logits, gemm);
+        logits
+    }
 }
 
 #[cfg(test)]
@@ -724,6 +860,77 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Acceptance: chunked prefill vs token-by-token, for the dense
+    /// reference and every packed serving scheme family. Logits of the
+    /// last prompt position must agree, and the caches must be
+    /// interchangeable for subsequent decode steps.
+    #[test]
+    fn prefill_matches_token_by_token_all_schemes() {
+        let m = tiny_model();
+        let prompt = [1u32, 5, 9, 2, 17, 33];
+        let mut models = vec![("dense".to_string(), m.clone())];
+        for name in ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "fp4", "int8", "int4"] {
+            let scheme = Scheme::parse(name).unwrap();
+            models.push((name.to_string(), m.quantized(&QuantConfig::paper(scheme))));
+        }
+        for (name, model) in &models {
+            let mut c_tok = model.new_cache();
+            let mut l_tok = Vec::new();
+            for (p, &t) in prompt.iter().enumerate() {
+                l_tok = model.forward(t, p, &mut c_tok);
+            }
+            let mut c_pre = model.new_cache();
+            let l_pre = model.forward_prefill(&prompt, &mut c_pre);
+            assert_eq!(c_pre.len, prompt.len(), "{name}");
+            assert_eq!(l_pre.len(), l_tok.len(), "{name}");
+            for (j, (a, b)) in l_pre.iter().zip(&l_tok).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "{name} logit {j}: {a} vs {b}"
+                );
+            }
+            // Continue decoding one token from both caches: histories must
+            // be interchangeable.
+            let mut s = model.new_scratch();
+            let la = model.forward_with(7, prompt.len(), &mut c_tok, &mut s).to_vec();
+            let lb = model.forward_with(7, prompt.len(), &mut c_pre, &mut s).to_vec();
+            for (j, (a, b)) in lb.iter().zip(&la).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "{name} post-decode logit {j}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_in_chunks_matches_single_chunk() {
+        let m = tiny_model().quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+        let prompt = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let mut scratch = m.new_scratch();
+        let mut c1 = m.new_cache();
+        let l1 = m.forward_prefill_with(&prompt, &mut c1, &mut scratch).to_vec();
+        let mut c2 = m.new_cache();
+        m.forward_prefill_with(&prompt[..3], &mut c2, &mut scratch);
+        let l2 = m.forward_prefill_with(&prompt[3..], &mut c2, &mut scratch).to_vec();
+        assert_eq!(c2.len, prompt.len());
+        for (j, (a, b)) in l2.iter().zip(&l1).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "logit {j}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sequence overflow")]
+    fn prefill_overflow_panics() {
+        let m = tiny_model();
+        let mut c = m.new_cache();
+        let too_long: Vec<u32> = (0..m.cfg.max_seq as u32 + 1).map(|i| i % 60).collect();
+        m.forward_prefill(&too_long, &mut c);
     }
 
     #[test]

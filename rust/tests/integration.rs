@@ -2,9 +2,7 @@
 //! on a synthetic model (no artifacts required).
 
 use ams_quant::coordinator::batcher::{BatchPolicy, Scheduler};
-use ams_quant::coordinator::router::Router;
-use ams_quant::coordinator::server::Server;
-use ams_quant::coordinator::GenRequest;
+use ams_quant::coordinator::{DispatchPolicy, Engine, GenRequest, RequestHandle};
 use ams_quant::eval::{evaluate_against_reference, reference_trace};
 use ams_quant::formats::registry::Scheme;
 use ams_quant::model::checkpoint::Checkpoint;
@@ -73,21 +71,27 @@ fn kl_ordering_holds_end_to_end() {
 }
 
 #[test]
-fn router_with_quantized_replicas() {
+fn engine_with_quantized_replicas() {
     let base = model();
     let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
-    let mut router = Router::new(
-        (0..2)
-            .map(|i| Server::spawn(q.clone(), BatchPolicy::default(), i))
-            .collect(),
-    );
-    for id in 0..6u64 {
-        router.submit(GenRequest::greedy(id, vec![3, 4], 3));
+    for dispatch in [DispatchPolicy::LeastOutstanding, DispatchPolicy::RoundRobin] {
+        let eng = Engine::builder()
+            .replicas(2)
+            .dispatch(dispatch)
+            .seed(1)
+            .build(q.clone());
+        let handles: Vec<RequestHandle> = (0..6u64)
+            .map(|id| eng.submit(GenRequest::greedy(id, vec![3, 4], 3)).unwrap())
+            .collect();
+        let mut ids: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.wait().expect("completes").id)
+            .collect();
+        ids.sort();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>(), "{dispatch:?}");
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 6, "{dispatch:?}");
     }
-    let out = router.collect_all();
-    assert_eq!(out.len(), 6);
-    let stats = router.shutdown();
-    assert_eq!(stats.iter().map(|s| s.requests).sum::<u64>(), 6);
 }
 
 #[test]
@@ -110,27 +114,99 @@ fn context_overflow_retires_gracefully() {
 
 #[test]
 fn serving_stress_mixed_lengths() {
-    // 50 requests with heterogeneous prompt/generation lengths through a
-    // threaded server: all complete, latencies recorded, counts add up.
+    // 50 requests with heterogeneous prompt/generation lengths through
+    // the engine: all complete, latencies recorded, counts add up.
     let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
-    let srv = Server::spawn(base, BatchPolicy { max_batch: 4, eos: None }, 5);
+    let eng = Engine::builder().max_batch(4).seed(5).build(base);
     let mut expected_tokens = 0usize;
+    let mut handles = Vec::new();
     for id in 0..50u64 {
         let plen = 1 + (id as usize * 7) % 20;
         let gen = 1 + (id as usize * 3) % 6;
         expected_tokens += gen;
         let prompt: Vec<u32> = (0..plen as u32).map(|i| (i * 11 + id as u32) % 60).collect();
-        srv.submit(GenRequest::greedy(id, prompt, gen));
+        handles.push(eng.submit(GenRequest::greedy(id, prompt, gen)).unwrap());
     }
-    let out = srv.collect(50);
+    let out: Vec<_> = handles
+        .into_iter()
+        .map(|h| h.wait().expect("completes"))
+        .collect();
     assert_eq!(out.len(), 50);
     let got: usize = out.iter().map(|r| r.tokens.len()).sum();
     assert_eq!(got, expected_tokens);
-    assert_eq!(srv.latency.snapshot().count(), 50);
-    let stats = srv.shutdown();
+    for r in &out {
+        assert!(r.ttft_s > 0.0 && r.total_s >= r.ttft_s, "req {}", r.id);
+    }
+    eng.drain();
+    assert_eq!(eng.latency().count(), 50);
+    assert_eq!(eng.ttft().count(), 50);
+    let stats = eng.shutdown();
     assert_eq!(stats.requests, 50);
     assert_eq!(stats.tokens_generated as usize, expected_tokens);
     assert!(stats.mean_batch_occupancy() > 1.0);
+}
+
+#[test]
+fn engine_streaming_cancel_backpressure_end_to_end() {
+    // The full lifecycle on a quantized model: stream one request
+    // token-by-token, cancel another mid-flight, and drive the bounded
+    // queue into backpressure.
+    use ams_quant::coordinator::{EngineError, Event};
+    let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()));
+    let eng = Engine::builder()
+        .max_batch(1)
+        .queue_capacity(2)
+        .seed(9)
+        .build(base);
+    let mut streamed = eng.submit(GenRequest::greedy(0, vec![1, 2, 3], 6)).unwrap();
+    let victim = eng.submit(GenRequest::greedy(1, vec![4], 300)).unwrap();
+    victim.cancel();
+    // Fill the bounded queue until try_submit sheds load.
+    let mut spill = Vec::new();
+    let mut shed = false;
+    for id in 2..40u64 {
+        match eng.try_submit(GenRequest::greedy(id, vec![5], 200)) {
+            Ok(h) => spill.push(h),
+            Err(EngineError::QueueFull(req)) => {
+                assert_eq!(req.id, id);
+                shed = true;
+                break;
+            }
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(shed, "bounded queue must eventually report QueueFull");
+    // The streamed request finishes with tokens arriving in order.
+    let mut toks = Vec::new();
+    let mut done = None;
+    while let Some(ev) = streamed.next_event() {
+        match ev {
+            Event::FirstToken { token, .. } => toks.push(token),
+            Event::Token { token, index, .. } => {
+                assert_eq!(index, toks.len());
+                toks.push(token);
+            }
+            Event::Done(r) => done = Some(r),
+            Event::Queued { .. } => {}
+            Event::Cancelled { .. } => panic!("request 0 was never cancelled"),
+        }
+    }
+    assert_eq!(done.expect("finishes").tokens, toks);
+    assert_eq!(toks.len(), 6);
+    assert!(victim.wait().is_none(), "cancelled request has no response");
+    let accepted = 2 + spill.len() as u64;
+    for h in &spill {
+        h.cancel();
+    }
+    for h in spill {
+        h.wait();
+    }
+    let stats = eng.shutdown();
+    // Every accepted request settles exactly once, as either a completion
+    // or a cancellation.
+    assert_eq!(stats.requests + stats.cancelled, accepted);
+    assert!(stats.requests >= 1, "request 0 completed");
+    assert!(stats.cancelled >= 1, "the victim was cancelled");
 }
 
 #[test]
