@@ -20,7 +20,7 @@ fn main() {
     let fmt = FpFormat::E2M3;
     println!("weights: {:?}", w.data());
 
-    let q = quantize(&w, &QuantConfig::paper(scheme));
+    let q = quantize(&w, &QuantConfig::paper(scheme)).unwrap();
     println!("\nchannel scale s = amax/M = {:.6}", q.scales[0]);
     println!("RTN+shared codes (s|ee|mmm):");
     for (i, &c) in q.codes.iter().enumerate() {
@@ -36,7 +36,7 @@ fn main() {
 
     // Pack: the paper's special case — 3x5-bit high segments + shared bit
     // fit exactly one u16 ("continuous packing without segmentation").
-    let p = pack::pack(&q);
+    let p = pack::pack(&q).unwrap();
     assert_eq!(p.row_stride, 1);
     let word = p.words[0];
     println!("\npacked half-word: {word:#018b}");

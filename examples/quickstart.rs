@@ -1,15 +1,13 @@
-//! Quickstart: quantize a weight matrix to FP4.25, pack it, run the fused
-//! GEMV, and inspect error/compression — the 60-second tour of the API.
+//! Quickstart: build a `Quantizer`, run the full RTN → adaptive-search →
+//! pack pipeline on a weight matrix, inspect the per-layer report, and
+//! run the fused GEMV — the 60-second tour of the API.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use ams_quant::formats::registry::Scheme;
 use ams_quant::gemm::QuantLinear;
 use ams_quant::model::synthetic::{llm_weight, WeightProfile};
-use ams_quant::pack;
-use ams_quant::quant::error::sqnr_db;
-use ams_quant::quant::sharing::quantize;
-use ams_quant::quant::QuantConfig;
+use ams_quant::quant::{Granularity, LayerRole, QuantConfig, Quantizer};
 use ams_quant::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -19,30 +17,31 @@ fn main() -> anyhow::Result<()> {
     let w = llm_weight(256, 1024, &WeightProfile::default(), &mut rng);
     println!("weights: 256x1024, amax={:.4}", w.abs_max());
 
-    // 2. Quantize with the paper's pipeline: channel-wise RTN to e2m2,
-    //    then groups of k=4 share their mantissa LSB -> 4.25 bits/weight.
+    // 2. The paper's pipeline through the one public entry point:
+    //    channel-wise RTN to e2m2, then groups of k=4 share their mantissa
+    //    LSB -> 4.25 bits/weight, packed in one call.
     let scheme = Scheme::parse("fp4.25").unwrap();
-    let q = quantize(&w, &QuantConfig::paper(scheme));
-    let deq = q.dequantize();
+    let quantizer = Quantizer::uniform(QuantConfig::paper(scheme))?;
+    let (packed, report) = quantizer.quantize_layer("demo", LayerRole::Other, &w)?;
     println!(
-        "scheme: {}  ({} bits/weight)",
+        "scheme: {}  ({} bits/weight nominal, {:.3} achieved)",
         scheme.label(),
-        scheme.bits_per_weight()
+        scheme.bits_per_weight(),
+        report.bits_per_weight
     );
-    println!("weight MSE:  {:.3e}", w.mse(&deq));
-    println!("weight SQNR: {:.2} dB", sqnr_db(&w, &deq));
-
-    // 3. Pack for serving: 16 high-segment words + 1 shared-LSB word per
-    //    64 weights (§3.2 of the paper).
-    let packed = pack::pack(&q);
+    println!("weight MSE:  {:.3e}", report.mse);
+    println!("weight SQNR: {:.2} dB", report.sqnr_db);
     println!(
-        "packed: {} bytes  ({:.3} bits/weight incl. row padding, {:.2}x smaller than fp16)",
+        "adaptive search picked shared bit 1 for {}/{} groups",
+        report.shared_ones, report.shared_groups
+    );
+    println!(
+        "packed: {} bytes ({:.2}x smaller than fp16)",
         packed.payload_bytes(),
-        packed.bits_per_weight(),
         16.0 / packed.bits_per_weight()
     );
 
-    // 4. Fused unpack-dequant GEMV straight off the packed words.
+    // 3. Fused unpack-dequant GEMV straight off the packed words.
     let lin = QuantLinear::new(packed);
     let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let mut y = vec![0f32; 256];
@@ -56,6 +55,25 @@ fn main() -> anyhow::Result<()> {
         .fold(0f32, |m, (a, b)| m.max((a - b).abs()));
     println!("fused GEMV vs reference: max |Δ| = {max_err:.2e}");
     assert!(max_err < 1e-4);
+
+    // 4. The same pipeline with group-wise scales (g = 64): finer scale
+    //    granularity, still served by the fused kernels.
+    let grouped = Quantizer::uniform(
+        QuantConfig::paper(scheme).with_granularity(Granularity::PerGroup(64)),
+    )?;
+    let (gp, grep) = grouped.quantize_layer("demo-g64", LayerRole::Other, &w)?;
+    println!(
+        "per-group(64): SQNR {:.2} dB (vs {:.2} per-channel), +{:.2} bits/weight of scales",
+        grep.sqnr_db,
+        report.sqnr_db,
+        32.0 / 64.0
+    );
+    let glin = QuantLinear::new(gp);
+    let mut gy = vec![0f32; 256];
+    glin.gemv(&x, &mut gy);
+    let gref = glin.gemv_reference(&x);
+    let gerr = gy.iter().zip(&gref).fold(0f32, |m, (a, b)| m.max((a - b).abs()));
+    assert!(gerr < 1e-4);
     println!("OK");
     Ok(())
 }

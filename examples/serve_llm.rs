@@ -51,12 +51,9 @@ fn main() -> anyhow::Result<()> {
 
     for name in schemes {
         let scheme = Scheme::parse(name).unwrap();
-        let model = if scheme == Scheme::Fp16 {
-            // fp16 storage through the same packed path (the W16A16 baseline).
-            base.quantized(&QuantConfig::paper(scheme))
-        } else {
-            base.quantized(&QuantConfig::paper(scheme))
-        };
+        // fp16 storage runs through the same packed path (the W16A16
+        // baseline) — one Quantizer entry point for every scheme.
+        let model = base.quantized(&QuantConfig::paper(scheme)).unwrap();
         let bytes = model.projection_bytes();
         let eng = Engine::builder().max_batch(max_batch).seed(1).build(model);
         let wall = Timer::start();

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let scheme = Scheme::parse(scheme_name).map_err(|e| anyhow::anyhow!(e))?;
 
     let (base, heldout, kind) = exp::load_model(Path::new("artifacts"))?;
-    let model = base.quantized(&QuantConfig::paper(scheme));
+    let model = base.quantized(&QuantConfig::paper(scheme)).unwrap();
     println!("model: {kind}, scheme: {scheme_name}\n");
 
     // 1. Builder: every serving knob in one place.

@@ -46,7 +46,7 @@ fn main() {
     let mut scratch = ForwardScratch::new();
     for name in ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "fp4"] {
         let scheme = Scheme::parse(name).unwrap();
-        let model = base.quantized(&QuantConfig::paper(scheme));
+        let model = base.quantized(&QuantConfig::paper(scheme)).unwrap();
         let mut cells = vec![scheme.label()];
         let mut b8_rate = 0.0;
         for &b in &batches {
@@ -109,7 +109,7 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
     let mut results: Vec<Json> = Vec::new();
     for name in ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "fp4"] {
         let scheme = Scheme::parse(name).unwrap();
-        let model = base.quantized(&QuantConfig::paper(scheme));
+        let model = base.quantized(&QuantConfig::paper(scheme)).unwrap();
         let eng = Engine::builder().max_batch(max_batch).seed(1).build(model);
         let wall = Timer::start();
         let handles: Vec<RequestHandle> = prompts

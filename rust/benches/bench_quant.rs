@@ -6,7 +6,7 @@
 
 use ams_quant::formats::registry::Scheme;
 use ams_quant::model::synthetic::{llm_weight, WeightProfile};
-use ams_quant::quant::error::sqnr_db;
+use ams_quant::quant::metrics::sqnr_db;
 use ams_quant::quant::sharing::quantize;
 use ams_quant::quant::{QuantConfig, SearchPolicy, ShareDim, SharePolicy};
 use ams_quant::report::{f, Table};
@@ -34,10 +34,10 @@ fn main() {
     ] {
         let mut qc = QuantConfig::paper(scheme);
         qc.search_policy = policy;
-        let q = quantize(&w, &qc);
+        let q = quantize(&w, &qc).unwrap();
         let deq = q.dequantize();
         let mut fcall = || {
-            black_box(quantize(&w, &qc).codes.len());
+            black_box(quantize(&w, &qc).unwrap().codes.len());
         };
         let r = bench_with_units(label, &cfg, (rows * cols) as f64, &mut fcall);
         t.row(vec![
@@ -59,9 +59,9 @@ fn main() {
         let scheme = Scheme::parse(name).unwrap();
         let mut qc = QuantConfig::paper(scheme);
         qc.share_policy = SharePolicy::SetLsb;
-        let m_set = w.mse(&quantize(&w, &qc).dequantize());
+        let m_set = w.mse(&quantize(&w, &qc).unwrap().dequantize());
         qc.share_policy = SharePolicy::Reround;
-        let m_rr = w.mse(&quantize(&w, &qc).dequantize());
+        let m_rr = w.mse(&quantize(&w, &qc).unwrap().dequantize());
         t.row(vec![
             scheme.label(),
             format!("{m_set:.4e}"),
@@ -87,9 +87,9 @@ fn main() {
         let scheme = Scheme::parse(name).unwrap();
         let mut qc = QuantConfig::paper(scheme);
         qc.share_dim = ShareDim::Input;
-        let m_in = w2.mse(&quantize(&w2, &qc).dequantize());
+        let m_in = w2.mse(&quantize(&w2, &qc).unwrap().dequantize());
         qc.share_dim = ShareDim::Output;
-        let m_out = w2.mse(&quantize(&w2, &qc).dequantize());
+        let m_out = w2.mse(&quantize(&w2, &qc).unwrap().dequantize());
         t.row(vec![
             scheme.label(),
             format!("{m_in:.4e}"),
@@ -109,7 +109,7 @@ fn main() {
             if matches!(scheme, Scheme::Int { .. }) {
                 black_box(ams_quant::baselines::quantize_int(&w, scheme).words.len());
             } else {
-                black_box(quantize(&w, &qc).codes.len());
+                black_box(quantize(&w, &qc).unwrap().codes.len());
             }
         };
         suite.push(bench_with_units(

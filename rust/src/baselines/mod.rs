@@ -11,74 +11,45 @@
 //!
 //! All baselines share the GEMV kernels and scale conventions of the main
 //! path so speed and accuracy comparisons isolate the *format*, exactly as
-//! in the paper's §4.2.
+//! in the paper's §4.2. Both helpers are thin conveniences over the
+//! unified [`Quantizer`](crate::quant::Quantizer) pipeline — the single
+//! entry point that produces every packed layout.
 
-use crate::formats::fp16::f32_to_fp16;
 use crate::formats::registry::Scheme;
-use crate::pack::{pack_row, row_stride, PackedTensor};
+use crate::pack::PackedTensor;
+use crate::quant::pipeline::quantize_packed;
+use crate::quant::QuantConfig;
 use crate::tensor::Tensor;
 
 /// Store a weight tensor as raw fp16 words (the W16A16 baseline).
+/// Delegates to the [`Quantizer`](crate::quant::Quantizer) pipeline's
+/// FP16 passthrough path.
 pub fn pack_fp16(w: &Tensor) -> PackedTensor {
-    assert_eq!(w.ndim(), 2);
-    let (rows, cols) = (w.rows(), w.cols());
-    let mut words = vec![0u16; rows * cols];
-    for (o, &x) in words.iter_mut().zip(w.data()) {
-        *o = f32_to_fp16(x);
-    }
-    PackedTensor {
-        scheme: Scheme::Fp16,
-        rows,
-        cols,
-        words,
-        row_stride: cols,
-        scales: vec![1.0; rows],
-    }
+    quantize_packed(w, &QuantConfig::paper(Scheme::Fp16))
+        .expect("fp16 passthrough of a 2-D tensor is always packable")
 }
 
 /// Symmetric per-channel integer RTN quantization (INT4 / INT8), stored
 /// offset-binary so the shared dequant-table machinery applies:
-/// `code = round(w/s) + 2^(b-1)`, `value = code - 2^(b-1)`, `s = amax / (2^(b-1) - 1)`.
+/// `code = round(w/s) + 2^(b-1)`, `value = code - 2^(b-1)`,
+/// `s = amax / (2^(b-1) - 1)`. Delegates to the
+/// [`Quantizer`](crate::quant::Quantizer) pipeline's integer path (which
+/// also serves per-tensor/per-group scales; this baseline keeps the
+/// paper's per-channel convention).
 pub fn quantize_int(w: &Tensor, scheme: Scheme) -> PackedTensor {
-    let bits = match scheme {
-        Scheme::Int { bits } => bits,
-        other => panic!("quantize_int got {other:?}"),
-    };
-    assert!(bits == 4 || bits == 8);
-    assert_eq!(w.ndim(), 2);
-    let (rows, cols) = (w.rows(), w.cols());
-    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
-    let offset = (1u16 << (bits - 1)) as i32;
-    let stride = row_stride(scheme, cols);
-    let mut words = vec![0u16; rows * stride];
-    let mut scales = Vec::with_capacity(rows);
-    let mut codes = vec![0u16; cols];
-    for r in 0..rows {
-        let row = w.row(r);
-        let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
-        let s = if amax == 0.0 { 1.0 } else { amax / qmax };
-        scales.push(s);
-        for (c, &x) in row.iter().enumerate() {
-            let q = (x / s).round().clamp(-qmax, qmax) as i32;
-            codes[c] = (q + offset) as u16;
-        }
-        pack_row(scheme, &codes, &mut words[r * stride..(r + 1) * stride]);
-    }
-    PackedTensor {
-        scheme,
-        rows,
-        cols,
-        words,
-        row_stride: stride,
-        scales,
-    }
+    assert!(
+        matches!(scheme, Scheme::Int { bits: 4 | 8 }),
+        "quantize_int serves int4/int8, got {scheme:?}"
+    );
+    quantize_packed(w, &QuantConfig::paper(scheme))
+        .expect("per-channel int4/int8 of a 2-D tensor is always packable")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gemm::QuantLinear;
-    use crate::quant::error::sqnr_db;
+    use crate::quant::metrics::sqnr_db;
     use crate::tensor::init;
     use crate::util::prng::Rng;
 
@@ -147,6 +118,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let w = init::gaussian(&[16, 256], 0.0, 0.02, &mut rng);
         let fp4 = quantize_fp(&w, &QuantConfig::paper(Scheme::parse("fp4-e2m1").unwrap()))
+            .unwrap()
             .dequantize();
         let int4 = {
             let p = quantize_int(&w, Scheme::Int { bits: 4 });

@@ -156,8 +156,13 @@ impl std::borrow::Borrow<KvCache> for Active {
 /// Continuous-batching scheduler bound to one model replica. Owns one
 /// [`ForwardScratch`], so steady-state decode steps perform no heap
 /// allocation (caches are decoded in place — no per-step cache churn).
+///
+/// Weights are held behind an `Arc`: they are read-only at serve time,
+/// so N replica schedulers over one model share a single copy (~1×
+/// memory instead of N×). `Scheduler::new` still accepts a bare
+/// `Transformer` (it converts via `Into<Arc<_>>`).
 pub struct Scheduler {
-    model: Transformer,
+    model: Arc<Transformer>,
     policy: BatchPolicy,
     queue: VecDeque<Submission>,
     active: Vec<Active>,
@@ -170,9 +175,9 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    pub fn new(model: Transformer, policy: BatchPolicy, seed: u64) -> Scheduler {
+    pub fn new(model: impl Into<Arc<Transformer>>, policy: BatchPolicy, seed: u64) -> Scheduler {
         Scheduler {
-            model,
+            model: model.into(),
             policy,
             queue: VecDeque::new(),
             active: Vec::new(),

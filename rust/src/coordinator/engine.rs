@@ -62,17 +62,32 @@ pub enum DispatchPolicy {
 /// Events arrive in order: `Queued`, `FirstToken`, then `Token`s, ending
 /// with exactly one terminal event (`Done` or `Cancelled`). Dropping the
 /// handle detaches the stream but does **not** cancel the request — call
-/// [`RequestHandle::cancel`] for that.
+/// [`RequestHandle::cancel`], or opt in to
+/// [`RequestHandle::cancel_on_drop`] so abandoned streams reclaim their
+/// batch slot and KV cache automatically.
 pub struct RequestHandle {
     id: u64,
     rx: mpsc::Receiver<Event>,
     cancel: Arc<AtomicBool>,
     finished: bool,
+    cancel_on_drop: bool,
 }
 
 impl RequestHandle {
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// Opt in to drop-cancellation: if this handle is dropped before the
+    /// request settles, the request is cancelled as if
+    /// [`RequestHandle::cancel`] had been called — the scheduler drops
+    /// the sequence at its next step boundary and frees its KV cache, so
+    /// abandoned streams (client went away, timeout paths, early `?`
+    /// returns) never keep decoding. Consuming builder style:
+    /// `engine.submit(req)?.cancel_on_drop()`.
+    pub fn cancel_on_drop(mut self) -> Self {
+        self.cancel_on_drop = true;
+        self
     }
 
     /// Ask the scheduler to drop this request at its next step boundary.
@@ -144,6 +159,17 @@ impl RequestHandle {
     }
 }
 
+impl Drop for RequestHandle {
+    fn drop(&mut self) {
+        // `finished` is only set once the terminal event was delivered,
+        // so an opted-in drop before that point requests cancellation
+        // (a no-op race if the request wins by completing first).
+        if self.cancel_on_drop && !self.finished {
+            self.cancel.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
 struct Replica {
     tx: Option<mpsc::SyncSender<Submission>>,
     handle: Option<thread::JoinHandle<ServeStats>>,
@@ -172,8 +198,9 @@ impl Default for EngineBuilder {
 }
 
 impl EngineBuilder {
-    /// Number of model replicas (worker threads); each gets a clone of
-    /// the model. Default 1.
+    /// Number of model replicas (worker threads); all share one
+    /// `Arc`-held copy of the weights (read-only at serve time), so
+    /// N-replica memory is ~1× the model. Default 1.
     pub fn replicas(mut self, n: usize) -> Self {
         assert!(n > 0, "at least one replica");
         self.replicas = n;
@@ -222,21 +249,16 @@ impl EngineBuilder {
         self
     }
 
-    /// Spawn the replica workers and return the engine.
+    /// Spawn the replica workers and return the engine. The model moves
+    /// behind one `Arc`; every replica scheduler reads the same weights.
     pub fn build(self, model: Transformer) -> Engine {
         let latency = Arc::new(LatencyRecorder::new());
         let ttft = Arc::new(LatencyRecorder::new());
         let max_seq = model.cfg.max_seq;
         let mut replicas = Vec::with_capacity(self.replicas);
-        let mut model = Some(model);
+        let model = Arc::new(model);
         for i in 0..self.replicas {
-            // The last replica takes the original model; earlier ones
-            // clone it.
-            let m = if i + 1 == self.replicas {
-                model.take().expect("model present for last replica")
-            } else {
-                model.as_ref().expect("model present").clone()
-            };
+            let m = Arc::clone(&model);
             let (tx, rx) = mpsc::sync_channel::<Submission>(self.queue_capacity);
             let outstanding = Arc::new(AtomicUsize::new(0));
             let out_ctr = Arc::clone(&outstanding);
@@ -270,7 +292,7 @@ impl EngineBuilder {
 /// in-flight work has finished.
 fn replica_main(
     rx: mpsc::Receiver<Submission>,
-    model: Transformer,
+    model: Arc<Transformer>,
     policy: BatchPolicy,
     seed: u64,
     outstanding: Arc<AtomicUsize>,
@@ -406,6 +428,12 @@ impl Engine {
                 "prompt exceeds the model context",
             ));
         }
+        let replica = &self.replicas[idx];
+        // A closed engine surfaces the same typed error as a racing
+        // disconnect — never a panic on user input.
+        let Some(tx) = replica.tx.as_ref() else {
+            return Err(EngineError::Shutdown(req));
+        };
         let (tx_ev, rx_ev) = mpsc::channel::<Event>();
         // The TTFT stopwatch starts inside `Submission` — before any
         // queue wait, including a blocking send on a full queue.
@@ -413,8 +441,6 @@ impl Engine {
         let id = sub.id();
         let cancel = sub.cancel_flag();
         let _ = tx_ev.send(Event::Queued { id });
-        let replica = &self.replicas[idx];
-        let tx = replica.tx.as_ref().expect("engine not shut down");
         replica.outstanding.fetch_add(1, Ordering::SeqCst);
         let send_result = if block {
             tx.send(sub).map_err(|e| EngineError::Shutdown(e.0.into_request()))
@@ -430,6 +456,7 @@ impl Engine {
                 rx: rx_ev,
                 cancel,
                 finished: false,
+                cancel_on_drop: false,
             }),
             Err(err) => {
                 replica.outstanding.fetch_sub(1, Ordering::SeqCst);
@@ -451,6 +478,17 @@ impl Engine {
     pub fn try_submit(&self, req: GenRequest) -> Result<RequestHandle, EngineError> {
         let idx = self.pick_replica();
         self.dispatch_to(idx, req, false)
+    }
+
+    /// Stop accepting new work without joining the replicas: every
+    /// queue is disconnected, in-flight requests keep decoding to
+    /// completion, and any later `submit`/`try_submit` returns
+    /// [`EngineError::Shutdown`] with the request handed back. Call
+    /// [`Engine::shutdown`] afterwards to join and collect statistics.
+    pub fn close(&mut self) {
+        for r in &mut self.replicas {
+            r.tx.take();
+        }
     }
 
     /// Stop accepting work, finish everything in flight, join the
@@ -694,6 +732,76 @@ mod tests {
             h.wait();
         }
         eng.shutdown();
+    }
+
+    /// Satellite: submitting to a closed engine surfaces the typed
+    /// `Shutdown` error (request handed back) instead of panicking.
+    #[test]
+    fn submit_after_close_returns_shutdown_error() {
+        let mut eng = engine(1, 2);
+        let h = eng.submit(GenRequest::greedy(0, vec![1], 2)).unwrap();
+        eng.close();
+        match eng.submit(GenRequest::greedy(1, vec![2], 2)) {
+            Err(EngineError::Shutdown(req)) => assert_eq!(req.id, 1, "request handed back"),
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("closed engine must reject submissions"),
+        }
+        match eng.try_submit(GenRequest::greedy(2, vec![3], 2)) {
+            Err(EngineError::Shutdown(req)) => assert_eq!(req.id, 2),
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("closed engine must reject try_submit too"),
+        }
+        // In-flight work before the close still completes.
+        assert!(h.wait().is_some());
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 1);
+    }
+
+    /// Satellite: an abandoned handle with cancel_on_drop reclaims its
+    /// sequence — the request settles as cancelled, the survivor is
+    /// unaffected.
+    #[test]
+    fn cancel_on_drop_reclaims_abandoned_stream() {
+        let eng = engine(1, 2);
+        let long = eng
+            .submit(GenRequest::greedy(0, vec![1, 2], 400))
+            .unwrap()
+            .cancel_on_drop();
+        let short = eng.submit(GenRequest::greedy(1, vec![3], 4)).unwrap();
+        drop(long); // client went away — the stream is abandoned
+        let r = short.wait().expect("survivor completes");
+        assert_eq!(r.tokens.len(), 4);
+        let stats = eng.shutdown();
+        assert_eq!(stats.cancelled, 1, "dropped handle cancelled its request");
+        assert_eq!(stats.requests, 1);
+    }
+
+    /// Without the opt-in, dropping a handle only detaches the stream;
+    /// the request still runs to completion (the documented default).
+    #[test]
+    fn plain_drop_does_not_cancel() {
+        let eng = engine(1, 2);
+        let h = eng.submit(GenRequest::greedy(0, vec![1, 2], 5)).unwrap();
+        drop(h);
+        let stats = eng.shutdown(); // waits for in-flight work
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.cancelled, 0);
+    }
+
+    /// A handle consumed by `wait()` (terminal event delivered) must not
+    /// flip the cancel flag on drop even with cancel_on_drop set.
+    #[test]
+    fn cancel_on_drop_noop_after_completion() {
+        let eng = engine(1, 2);
+        let h = eng
+            .submit(GenRequest::greedy(0, vec![1], 3))
+            .unwrap()
+            .cancel_on_drop();
+        let r = h.wait().expect("completes normally");
+        assert_eq!(r.tokens.len(), 3);
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.cancelled, 0);
     }
 
     #[test]

@@ -81,6 +81,7 @@ pub fn accuracy_suite(
             base.clone()
         } else {
             base.quantized(&QuantConfig::paper(scheme))
+                .expect("paper config is always packable")
         };
         let ev = evaluate_corpus(&model, held, window);
         let pat = pattern_accuracy(&model, &cases);
@@ -202,17 +203,17 @@ pub fn table3_measured(
     out
 }
 
-/// Build a QuantLinear for any scheme (shared with benches/examples).
+/// Build a QuantLinear for any scheme (shared with benches/examples) —
+/// one `Quantizer` pipeline call regardless of scheme family.
 pub fn make_linear(w: &Tensor, scheme: Scheme) -> QuantLinear {
-    let packed = match scheme {
-        Scheme::Fp16 => crate::baselines::pack_fp16(w),
-        Scheme::Int { .. } => crate::baselines::quantize_int(w, scheme),
-        _ => crate::pack::pack(&crate::quant::sharing::quantize(
-            w,
-            &QuantConfig::paper(scheme),
-        )),
-    };
-    QuantLinear::new(packed)
+    make_linear_with(w, &QuantConfig::paper(scheme))
+}
+
+/// Build a QuantLinear under any full config (granularity, policies).
+pub fn make_linear_with(w: &Tensor, cfg: &QuantConfig) -> QuantLinear {
+    QuantLinear::new(
+        crate::quant::pipeline::quantize_packed(w, cfg).expect("bench config must be packable"),
+    )
 }
 
 pub fn random_acts(batch: usize, cols: usize, rng: &mut Rng) -> Tensor {
@@ -283,23 +284,23 @@ pub fn k_sweep(base: FpFormat, ks: &[usize], seed: u64) -> Table {
         &["k", "bits/w", "MSE", "SQNR dB"],
     );
     // k=1: plain FPx.
-    let q0 = crate::quant::sharing::quantize(&w, &QuantConfig::paper(Scheme::Fp(base)));
+    let q0 = crate::quant::sharing::quantize(&w, &QuantConfig::paper(Scheme::Fp(base))).unwrap();
     let d0 = q0.dequantize();
     t.row(vec![
         "1 (no sharing)".into(),
         f(base.bits() as f64, 2),
         format!("{:.3e}", w.mse(&d0)),
-        f(crate::quant::error::sqnr_db(&w, &d0), 2),
+        f(crate::quant::metrics::sqnr_db(&w, &d0), 2),
     ]);
     for &k in ks {
         let scheme = Scheme::Ams { base, k };
-        let q = crate::quant::sharing::quantize(&w, &QuantConfig::paper(scheme));
+        let q = crate::quant::sharing::quantize(&w, &QuantConfig::paper(scheme)).unwrap();
         let d = q.dequantize();
         t.row(vec![
             k.to_string(),
             f(scheme.bits_per_weight(), 3),
             format!("{:.3e}", w.mse(&d)),
-            f(crate::quant::error::sqnr_db(&w, &d), 2),
+            f(crate::quant::metrics::sqnr_db(&w, &d), 2),
         ]);
     }
     t

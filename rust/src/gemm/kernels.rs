@@ -270,7 +270,7 @@ mod tests {
                 let p = if matches!(scheme, Scheme::Int { .. }) {
                     crate::baselines::quantize_int(&w, scheme)
                 } else {
-                    pack(&quantize(&w, &QuantConfig::paper(scheme)))
+                    pack(&quantize(&w, &QuantConfig::paper(scheme)).unwrap()).unwrap()
                 };
                 let table = dequant_table(scheme);
                 let mut vals = vec![0f32; cols];

@@ -60,6 +60,9 @@ pub fn dequant_table(scheme: Scheme) -> Vec<f32> {
 pub struct GemmScratch {
     /// Unpacked row codes (code-buffer kernel families).
     codes: Vec<u16>,
+    /// Decoded row values with the per-group scale folded in (per-group
+    /// tensors decode each row once, then run the dense tile kernels).
+    vals: Vec<f32>,
     /// FP5.33 stride-3 de-interleaved activation streams, `[batch][groups]`.
     x0: Vec<f32>,
     x1: Vec<f32>,
@@ -71,6 +74,21 @@ pub struct GemmScratch {
 impl GemmScratch {
     pub fn new() -> GemmScratch {
         GemmScratch::default()
+    }
+}
+
+/// Decode one unpacked row into final f32 values with the group scale
+/// folded in: `vals[c] = table[codes[c]] * gscales[c / g]` — the
+/// per-group analog of folding the exponent rebias into the channel
+/// scale. Done once per row; the dense tile kernels then stream `vals`.
+#[inline]
+fn decode_group_scaled(codes: &[u16], gscales: &[f32], g: usize, table: &[f32], vals: &mut [f32]) {
+    debug_assert_eq!(codes.len(), vals.len());
+    debug_assert!(gscales.len() >= codes.len().div_ceil(g));
+    for ((chunk_c, chunk_v), &s) in codes.chunks(g).zip(vals.chunks_mut(g)).zip(gscales) {
+        for (v, &c) in chunk_v.iter_mut().zip(chunk_c) {
+            *v = table[c as usize] * s;
+        }
     }
 }
 
@@ -172,24 +190,34 @@ pub(crate) fn dense_rows_t(w: &Tensor, r0: usize, r1: usize, x: &Tensor, out: &m
     let batch = x.rows();
     debug_assert_eq!(out.len(), (r1 - r0) * batch);
     for r in r0..r1 {
-        let wr = w.row(r);
         let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
-        let mut b = 0usize;
-        while b < batch {
-            let rem = batch - b;
-            if rem >= 8 {
-                dense_tile::<8>(wr, x, b, &mut orow[b..b + 8]);
-                b += 8;
-            } else if rem >= 4 {
-                dense_tile::<4>(wr, x, b, &mut orow[b..b + 4]);
-                b += 4;
-            } else if rem >= 2 {
-                dense_tile::<2>(wr, x, b, &mut orow[b..b + 2]);
-                b += 2;
-            } else {
-                dense_tile::<1>(wr, x, b, &mut orow[b..b + 1]);
-                b += 1;
-            }
+        dense_row_ladder(w.row(r), x, orow);
+    }
+}
+
+/// Run one f32 row through the 8/4/2/1 dense tile ladder against the
+/// whole batch, writing `orow[b]`. One copy of the ladder shared by the
+/// dense-reference path and the per-group folded-values path, so tile
+/// tuning moves both together.
+#[inline]
+fn dense_row_ladder(wr: &[f32], x: &Tensor, orow: &mut [f32]) {
+    let batch = x.rows();
+    debug_assert_eq!(orow.len(), batch);
+    let mut b = 0usize;
+    while b < batch {
+        let rem = batch - b;
+        if rem >= 8 {
+            dense_tile::<8>(wr, x, b, &mut orow[b..b + 8]);
+            b += 8;
+        } else if rem >= 4 {
+            dense_tile::<4>(wr, x, b, &mut orow[b..b + 4]);
+            b += 4;
+        } else if rem >= 2 {
+            dense_tile::<2>(wr, x, b, &mut orow[b..b + 2]);
+            b += 2;
+        } else {
+            dense_tile::<1>(wr, x, b, &mut orow[b..b + 1]);
+            b += 1;
         }
     }
 }
@@ -252,6 +280,14 @@ pub fn dense_gemm_auto_into(w: &Tensor, x: &Tensor, y: &mut Tensor, scratch: &mu
 #[cfg(test)]
 pub(crate) const TEST_SCHEMES: &[&str] = &[
     "fp16", "fp8", "int8", "int4", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4-e2m1",
+    "fp5.33", "fp4.5", "fp4.3", "fp4.25", "ams-e3m2-k4",
+];
+
+/// Schemes that support per-group scales (everything but the FP16
+/// passthrough baseline) — shared with the per-group property test.
+#[cfg(test)]
+pub(crate) const GROUPED_TEST_SCHEMES: &[&str] = &[
+    "fp8", "int8", "int4", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4-e2m1",
     "fp5.33", "fp4.5", "fp4.3", "fp4.25", "ams-e3m2-k4",
 ];
 
@@ -321,8 +357,28 @@ impl QuantLinear {
     ) {
         let cols = self.packed.cols;
         let GemmScratch {
-            codes, x0, x1, x2, ..
+            codes,
+            vals,
+            x0,
+            x1,
+            x2,
+            ..
         } = scratch;
+        if let Some(gs) = &self.packed.group_scales {
+            // Per-group path: unpack the row, fold the group-scale gather
+            // into the decode, dense-dot the folded values. No trailing
+            // per-row scale — the group scales are the whole scale.
+            codes.clear();
+            codes.resize(cols, 0);
+            vals.clear();
+            vals.resize(cols, 0.0);
+            for (i, r) in (start..end).enumerate() {
+                crate::pack::unpack_row(self.packed.scheme, self.packed.row_words(r), cols, codes);
+                decode_group_scaled(codes, gs.row(r), gs.group_size, &self.table, vals);
+                y[i] = simd::dot_dense(vals, x);
+            }
+            return;
+        }
         match self.kernel {
             RowKernel::Fp16Bits => {
                 for (i, r) in (start..end).enumerate() {
@@ -419,12 +475,14 @@ impl QuantLinear {
         assert_eq!(y.shape(), &[batch, rows]);
         let GemmScratch {
             codes,
+            vals,
             x0,
             x1,
             x2,
             yt,
         } = scratch;
-        let deint = if matches!(self.kernel, RowKernel::Fp533)
+        let deint = if self.packed.group_scales.is_none()
+            && matches!(self.kernel, RowKernel::Fp533)
             && simd::fp533_uses_deint(self.packed.cols)
         {
             let groups = deinterleave3_batch(x, x0, x1, x2);
@@ -434,7 +492,7 @@ impl QuantLinear {
         };
         yt.clear();
         yt.resize(rows * batch, 0.0);
-        self.gemm_rows_t(0, rows, x, deint, codes, yt);
+        self.gemm_rows_t(0, rows, x, deint, codes, vals, yt);
         transpose_into(yt, rows, batch, y.data_mut());
     }
 
@@ -468,7 +526,9 @@ impl QuantLinear {
     /// Tiled batched kernel over rows `[r0, r1)`: writes the transposed
     /// block `out[(r - r0) * batch + b] = scale_r · Σ_c deq(W[r,c])·X[b,c]`.
     /// Each packed row is streamed once per ≤[`simd::NTILE`]-column tile;
-    /// `deint` carries the shared FP5.33 activation streams.
+    /// `deint` carries the shared FP5.33 activation streams. Per-group
+    /// tensors decode each row once (group scales folded into `vals`) and
+    /// run the dense tile kernels over the folded values.
     pub(crate) fn gemm_rows_t(
         &self,
         r0: usize,
@@ -476,6 +536,7 @@ impl QuantLinear {
         x: &Tensor,
         deint: Option<(&[f32], &[f32], &[f32], usize)>,
         codes: &mut Vec<u16>,
+        vals: &mut Vec<f32>,
         out: &mut [f32],
     ) {
         let cols = self.packed.cols;
@@ -483,6 +544,17 @@ impl QuantLinear {
         debug_assert_eq!(out.len(), (r1 - r0) * batch);
         codes.clear();
         codes.resize(cols, 0);
+        if let Some(gs) = &self.packed.group_scales {
+            vals.clear();
+            vals.resize(cols, 0.0);
+            for r in r0..r1 {
+                crate::pack::unpack_row(self.packed.scheme, self.packed.row_words(r), cols, codes);
+                decode_group_scaled(codes, gs.row(r), gs.group_size, &self.table, vals);
+                let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
+                dense_row_ladder(vals, x, orow);
+            }
+            return;
+        }
         for r in r0..r1 {
             let words = self.packed.row_words(r);
             // Code-buffer families unpack once per row; the streaming
@@ -560,7 +632,8 @@ impl QuantLinear {
     }
 
     /// Reference implementation: unpack codes row by row, dequantize
-    /// through the table, dense dot. Independent of the fused kernels.
+    /// through the table, dense dot at the tensor's scale granularity.
+    /// Independent of the fused kernels.
     pub fn gemv_reference(&self, x: &[f32]) -> Vec<f32> {
         let mut y = vec![0f32; self.packed.rows];
         let mut codes = vec![0u16; self.packed.cols];
@@ -571,12 +644,28 @@ impl QuantLinear {
                 self.packed.cols,
                 &mut codes,
             );
-            y[r] = codes
-                .iter()
-                .zip(x)
-                .map(|(&c, &xv)| self.table[c as usize] * xv)
-                .sum::<f32>()
-                * self.packed.scales[r];
+            y[r] = match &self.packed.group_scales {
+                None => {
+                    codes
+                        .iter()
+                        .zip(x)
+                        .map(|(&c, &xv)| self.table[c as usize] * xv)
+                        .sum::<f32>()
+                        * self.packed.scales[r]
+                }
+                Some(gs) => codes
+                    .chunks(gs.group_size)
+                    .zip(x.chunks(gs.group_size))
+                    .zip(gs.row(r))
+                    .map(|((cc, xc), &s)| {
+                        cc.iter()
+                            .zip(xc)
+                            .map(|(&c, &xv)| self.table[c as usize] * xv)
+                            .sum::<f32>()
+                            * s
+                    })
+                    .sum(),
+            };
         }
         y
     }
@@ -585,8 +674,8 @@ impl QuantLinear {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::sharing::quantize;
-    use crate::quant::QuantConfig;
+    use crate::quant::pipeline::quantize_packed;
+    use crate::quant::{Granularity, QuantConfig};
     use crate::tensor::init;
     use crate::util::prng::Rng;
 
@@ -594,17 +683,25 @@ mod tests {
         let mut rng = Rng::new(seed);
         let w = init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng);
         let scheme = Scheme::parse(name).unwrap();
-        let packed = if scheme == Scheme::Fp16 {
-            crate::baselines::pack_fp16(&w)
-        } else if matches!(scheme, Scheme::Int { .. }) {
-            crate::baselines::quantize_int(&w, scheme)
-        } else {
-            crate::pack::pack(&quantize(&w, &QuantConfig::paper(scheme)))
-        };
-        QuantLinear::new(packed)
+        QuantLinear::new(quantize_packed(&w, &QuantConfig::paper(scheme)).unwrap())
+    }
+
+    pub(crate) fn make_linear_grouped(
+        name: &str,
+        rows: usize,
+        cols: usize,
+        g: usize,
+        seed: u64,
+    ) -> QuantLinear {
+        let mut rng = Rng::new(seed);
+        let w = init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng);
+        let cfg = QuantConfig::paper(Scheme::parse(name).unwrap())
+            .with_granularity(Granularity::PerGroup(g));
+        QuantLinear::new(quantize_packed(&w, &cfg).unwrap())
     }
 
     pub(crate) const SCHEMES: &[&str] = super::TEST_SCHEMES;
+    pub(crate) const GROUPED_SCHEMES: &[&str] = super::GROUPED_TEST_SCHEMES;
 
     #[test]
     fn gemv_matches_reference_all_schemes() {
@@ -735,5 +832,101 @@ mod tests {
         lin.gemv(&x, &mut y);
         let yref = lin.gemv_reference(&x);
         assert!((y[0] - yref[0]).abs() < 1e-5);
+    }
+
+    /// Acceptance: fused gemv/gemm over a `PerGroup(g)` tensor match the
+    /// `dequantize` oracle for every grouped scheme, g ∈ {32, 64, 128},
+    /// ragged shapes (cols not a multiple of g, of the SIMD lane count,
+    /// or of the sharing k), and batch widths across the tile ladder.
+    #[test]
+    fn per_group_matches_dequantize_reference() {
+        let mut rng = Rng::new(200);
+        for name in GROUPED_SCHEMES {
+            for g in [32usize, 64, 128] {
+                let (rows, cols) = (7usize, 150usize);
+                let lin = make_linear_grouped(name, rows, cols, g, g as u64);
+                assert!(lin.packed.group_scales.is_some(), "{name}");
+                let deq = lin.packed.dequantize();
+                let mut scratch = GemmScratch::new();
+                // GEMV vs the dequantize oracle.
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let mut y = vec![0f32; rows];
+                lin.gemv_with(&x, &mut y, &mut scratch);
+                for r in 0..rows {
+                    let want: f32 = deq.row(r).iter().zip(&x).map(|(&a, &b)| a * b).sum();
+                    assert!(
+                        (y[r] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "{name} g={g} gemv r={r}: {} vs {want}",
+                        y[r]
+                    );
+                }
+                // And the kernel-independent reference agrees too.
+                let yref = lin.gemv_reference(&x);
+                for r in 0..rows {
+                    assert!(
+                        (y[r] - yref[r]).abs() <= 1e-4 * (1.0 + yref[r].abs()),
+                        "{name} g={g} ref r={r}"
+                    );
+                }
+                // Batched path across the 8/4/2/1 tile ladder.
+                for batch in [1usize, 3, 9] {
+                    let xb = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
+                    let yb = lin.gemm_with(&xb, &mut scratch);
+                    for b in 0..batch {
+                        for r in 0..rows {
+                            let want: f32 =
+                                deq.row(r).iter().zip(xb.row(b)).map(|(&a, &v)| a * v).sum();
+                            assert!(
+                                (yb.at2(b, r) - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                                "{name} g={g} gemm batch={batch} b={b} r={r}: {} vs {want}",
+                                yb.at2(b, r)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One scratch reused across per-group and per-channel tensors and
+    /// shrinking/growing batches stays correct (vals/codes buffers are
+    /// high-water sized, never stale).
+    #[test]
+    fn per_group_scratch_reuse() {
+        let mut rng = Rng::new(201);
+        let grouped = make_linear_grouped("fp4.25", 11, 140, 32, 5);
+        let channel = make_linear("fp4.25", 11, 140, 5);
+        let mut scratch = GemmScratch::new();
+        for &batch in &[9usize, 2, 5, 1, 8] {
+            let x = init::gaussian(&[batch, 140], 0.0, 1.0, &mut rng);
+            let fresh_g = grouped.gemm(&x);
+            let reused_g = grouped.gemm_with(&x, &mut scratch);
+            assert_eq!(fresh_g, reused_g, "grouped batch={batch}");
+            let fresh_c = channel.gemm(&x);
+            let reused_c = channel.gemm_with(&x, &mut scratch);
+            assert_eq!(fresh_c, reused_c, "channel batch={batch}");
+        }
+    }
+
+    /// The auto path (which may engage the shared pool) must match the
+    /// serial per-group path bit-for-bit.
+    #[test]
+    fn per_group_auto_matches_serial() {
+        let mut rng = Rng::new(202);
+        let lin = make_linear_grouped("fp4.25", 256, 1024, 64, 6);
+        let x = init::gaussian(&[5, 1024], 0.0, 1.0, &mut rng);
+        let mut s1 = GemmScratch::new();
+        let mut s2 = GemmScratch::new();
+        let mut y_auto = Tensor::zeros(&[5, 256]);
+        lin.gemm_auto_into(&x, &mut y_auto, &mut s1);
+        let mut y_serial = Tensor::zeros(&[5, 256]);
+        lin.gemm_into(&x, &mut y_serial, &mut s2);
+        assert_eq!(y_auto, y_serial);
+        let xv: Vec<f32> = (0..1024).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut yv_auto = vec![0f32; 256];
+        lin.gemv_auto(&xv, &mut yv_auto, &mut s1);
+        let mut yv_serial = vec![0f32; 256];
+        lin.gemv_with(&xv, &mut yv_serial, &mut s2);
+        assert_eq!(yv_auto, yv_serial);
     }
 }

@@ -112,8 +112,11 @@ impl QuantLinear {
         } = scratch;
         // FP5.33 de-interleaved activation streams are built once on the
         // caller and shared read-only by every worker (skipped when the
-        // kernel's scalar path would never read them).
-        let deint = if matches!(self.kernel, RowKernel::Fp533)
+        // kernel's scalar path would never read them, and by the
+        // per-group path, which decodes through the folded values
+        // buffer instead).
+        let deint = if self.packed.group_scales.is_none()
+            && matches!(self.kernel, RowKernel::Fp533)
             && super::simd::fp533_uses_deint(self.packed.cols)
         {
             let groups = super::deinterleave3_batch(x, x0, x1, x2);
@@ -128,7 +131,8 @@ impl QuantLinear {
         shared_pool().scope_parts(parts, &|_, (start, chunk): (usize, &mut [f32])| {
             let nrows = chunk.len() / batch;
             with_worker_scratch(|ws| {
-                self.gemm_rows_t(start, start + nrows, x, deint, &mut ws.codes, chunk);
+                let GemmScratch { codes, vals, .. } = ws;
+                self.gemm_rows_t(start, start + nrows, x, deint, codes, vals, chunk);
             });
         });
         super::transpose_into(yt, rows, batch, y.data_mut());
@@ -266,6 +270,29 @@ mod tests {
             super::super::dense_gemm_into(&w, &xb, &mut a, &mut s1);
             dense_gemm_parallel_into(&w, &xb, &mut b, 4, &mut s4);
             assert_eq!(a, b, "batch={batch}");
+        }
+    }
+
+    /// Satellite: per-group tensors shard across the pool with results
+    /// identical to the serial path (row-sharded, per-row math fixed).
+    #[test]
+    fn per_group_parallel_matches_serial() {
+        use super::super::tests::make_linear_grouped;
+        let mut rng = Rng::new(13);
+        for g in [32usize, 64] {
+            let lin = make_linear_grouped("fp4.25", 64, 128, g, 6);
+            let x: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut y1 = vec![0f32; 64];
+            let mut y4 = vec![0f32; 64];
+            lin.gemv(&x, &mut y1);
+            lin.gemv_parallel(&x, &mut y4, 4);
+            assert_eq!(y1, y4, "gemv g={g}");
+            for batch in [5usize, 8] {
+                let xb = init::gaussian(&[batch, 128], 0.0, 1.0, &mut rng);
+                let a = lin.gemm(&xb);
+                let b = lin.gemm_parallel(&xb, 4);
+                assert_eq!(a, b, "gemm g={g} batch={batch}");
+            }
         }
     }
 

@@ -5,9 +5,12 @@
 //! system.
 //!
 //! - [`formats`] — FPx format algebra (e2m3, e2m2, ... — Table 1).
-//! - [`quant`] — channel-wise RTN, mantissa-bit sharing, adaptive search.
+//! - [`quant`] — the [`Quantizer`](quant::Quantizer) pipeline: per-layer
+//!   [`QuantPlan`](quant::QuantPlan)s (mixed precision by layer/role),
+//!   RTN → mantissa-sharing adaptive search → pack in one typed-error
+//!   flow, with per-layer [`QuantReport`](quant::QuantReport)s.
 //! - [`pack`] — prepacked storage layouts (TC-FPx 4+2, FP5.33 half-word,
-//!   FP4.25 segmented, ...).
+//!   FP4.25 segmented, ...) with per-row and per-group scale streams.
 //! - [`restore`] — bit-level FPx→FP16 restoration (SHIFT/AND/OR and LUT).
 //! - [`gemm`] — fused unpack–dequant GEMV/GEMM hot path.
 //! - [`model`] — transformer inference engine + checkpoints.

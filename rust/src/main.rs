@@ -22,11 +22,11 @@ use ams_quant::coordinator::{DispatchPolicy, Engine, GenRequest, RequestHandle};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
 use ams_quant::formats::FpFormat;
-use ams_quant::model::checkpoint::Checkpoint;
+use ams_quant::model::checkpoint::{self, Checkpoint};
 use ams_quant::model::sampler::Sampler;
 use ams_quant::model::transformer::Transformer;
 use ams_quant::model::{synthetic, tokenizer, ModelConfig};
-use ams_quant::quant::QuantConfig;
+use ams_quant::quant::{Granularity, LayerRole, QuantConfig, QuantPlan, QuantReport, Quantizer};
 use ams_quant::report::{f, Table};
 use ams_quant::util::bench::BenchConfig;
 use ams_quant::util::cli::Args;
@@ -88,11 +88,17 @@ fn print_help() {
          \x20 formats | fig2a | fig2b | fig3 | table2 | table3 [--measured]\n\
          \x20 fig6 | ksweep | sim --rows R --cols C\n\
          tools:\n\
-         \x20 quantize --scheme S [--ckpt file.amsz]\n\
+         \x20 quantize --scheme S [--ckpt file.amsz] [--save out.amsq]\n\
+         \x20          [--attn S2 --mlp S3 --lm-head S4 --group-size G]\n\
          \x20 eval --scheme S [--tokens N]\n\
-         \x20 serve --scheme S --requests N --max-batch B --replicas R\n\
+         \x20 serve --requests N --max-batch B --replicas R\n\
+         \x20       [--scheme S --attn S2 --mlp S3 --lm-head S4 --group-size G]\n\
+         \x20       [--quantized file.amsq   (exclusive of the plan flags)]\n\
          \x20       [--queue-capacity Q --dispatch least-outstanding|round-robin]\n\
          \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
+         plan flags: --scheme is the model-wide default; --attn/--mlp/--lm-head\n\
+         \x20 override per role (mixed precision); --group-size G uses per-group\n\
+         \x20 scales (g weights per scale) instead of per-channel\n\
          common flags: --artifacts DIR  --out FILE  --csv"
     );
 }
@@ -224,57 +230,130 @@ fn cmd_ksweep(args: &Args) -> Result<()> {
     emit_table(args, &t)
 }
 
-fn cmd_quantize(args: &Args, artifacts: &Path) -> Result<()> {
-    let scheme = Scheme::parse(args.get_or("scheme", "fp4.25")).map_err(|e| anyhow::anyhow!(e))?;
+/// Build the quantization plan described by the CLI flags: `--scheme` is
+/// the model-wide default, `--attn`/`--mlp`/`--lm-head` override per
+/// role, `--group-size G` switches the scale granularity to per-group.
+/// Returns `None` for `--scheme fp32` (dense reference, no plan).
+fn quantizer_from_args(args: &Args, default_scheme: &str) -> Result<Option<Quantizer>> {
+    let scheme_name = args.get_or("scheme", default_scheme);
+    if scheme_name == "fp32" {
+        // Dense reference: plan flags would be silently dead — reject
+        // them, mirroring the --quantized exclusivity check.
+        for flag in ["attn", "mlp", "lm-head", "group-size"] {
+            if args.get(flag).is_some() {
+                bail!("--scheme fp32 serves the dense model; --{flag} cannot be combined");
+            }
+        }
+        return Ok(None);
+    }
+    let gran = match args.get("group-size") {
+        Some(g) => Granularity::PerGroup(
+            g.parse::<usize>()
+                .with_context(|| format!("--group-size '{g}' is not a number"))?,
+        ),
+        None => Granularity::PerChannel,
+    };
+    let cfg_for = |name: &str| -> Result<QuantConfig> {
+        let scheme = Scheme::parse(name).map_err(|e| anyhow::anyhow!(e))?;
+        // FP16 passthrough has no scale grid; it keeps per-channel
+        // identity scales even under --group-size.
+        let g = if scheme == Scheme::Fp16 { Granularity::PerChannel } else { gran };
+        Ok(QuantConfig::paper(scheme).with_granularity(g))
+    };
+    let mut builder = QuantPlan::builder(cfg_for(scheme_name)?);
+    for (flag, role) in [
+        ("attn", LayerRole::Attention),
+        ("mlp", LayerRole::Mlp),
+        ("lm-head", LayerRole::LmHead),
+    ] {
+        if let Some(name) = args.get(flag) {
+            builder = builder.role(role, cfg_for(name)?);
+        }
+    }
+    let plan = builder.build().map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
+    Ok(Some(Quantizer::new(plan)))
+}
+
+fn load_base_model(args: &Args, artifacts: &Path) -> Result<Transformer> {
     let ckpt_path = args
         .get("ckpt")
         .map(PathBuf::from)
         .unwrap_or_else(|| artifacts.join("tiny_lm.amsz"));
-    let base = if ckpt_path.exists() {
-        Transformer::from_checkpoint(&Checkpoint::load(&ckpt_path)?)?
+    if ckpt_path.exists() {
+        Transformer::from_checkpoint(&Checkpoint::load(&ckpt_path)?)
     } else {
         eprintln!("# {} missing; using synthetic model", ckpt_path.display());
         Transformer::from_checkpoint(&synthetic::synthetic_checkpoint(
             &ModelConfig::tiny_lm(),
             1,
-        ))?
-    };
-    let q = base.quantized(&QuantConfig::paper(scheme));
+        ))
+    }
+}
+
+fn report_table(reports: &[QuantReport], title: &str) -> Table {
+    let mut t = Table::new(
+        title,
+        &["layer", "role", "scheme", "gran", "bits/w", "scale b/w", "MSE", "SQNR dB", "shared=1"],
+    );
+    for r in reports {
+        let gran = match r.granularity {
+            Granularity::PerTensor => "tensor".to_string(),
+            Granularity::PerChannel => "channel".to_string(),
+            Granularity::PerGroup(g) => format!("group({g})"),
+        };
+        let shared = if r.shared_groups > 0 {
+            format!("{:.1}%", 100.0 * r.shared_ones as f64 / r.shared_groups as f64)
+        } else {
+            "-".to_string()
+        };
+        t.row(vec![
+            r.layer.clone(),
+            r.role.name().to_string(),
+            r.scheme.label(),
+            gran,
+            f(r.bits_per_weight, 3),
+            f(r.scale_bits_per_weight, 3),
+            format!("{:.3e}", r.mse),
+            f(r.sqnr_db, 2),
+            shared,
+        ]);
+    }
+    t
+}
+
+fn cmd_quantize(args: &Args, artifacts: &Path) -> Result<()> {
+    let quantizer = quantizer_from_args(args, "fp4.25")?
+        .context("quantize needs a quantized scheme (fp32 is the dense reference)")?;
+    let base = load_base_model(args, artifacts)?;
+    let (q, reports) = base
+        .quantized_report(&quantizer)
+        .map_err(|e| anyhow::anyhow!("quantization failed: {e}"))?;
     let dense_bytes = base.projection_bytes();
     let q_bytes = q.projection_bytes();
-    let mut t = Table::new(
-        &format!("Quantization report — {}", scheme.label()),
-        &["metric", "value"],
+    let scheme = quantizer.plan().default_config().scheme;
+    let t = report_table(
+        &reports,
+        &format!("Per-layer quantization report — default {}", scheme.label()),
     );
-    t.row(vec!["bits/weight".into(), f(scheme.bits_per_weight(), 3)]);
-    t.row(vec!["projection bytes (fp16)".into(), dense_bytes.to_string()]);
-    t.row(vec!["projection bytes (packed)".into(), q_bytes.to_string()]);
-    t.row(vec![
-        "compression vs fp16".into(),
-        format!("{:.2}x", dense_bytes as f64 / q_bytes as f64),
-    ]);
-    // Mean weight MSE across a sample of layers.
-    let mut mse_sum = 0.0;
-    let mut n = 0usize;
-    for (ld, lq) in base.layers.iter().zip(&q.layers) {
-        use ams_quant::model::transformer::Linear;
-        for (a, b) in [
-            (&ld.wq, &lq.wq),
-            (&ld.w_gate, &lq.w_gate),
-            (&ld.w_down, &lq.w_down),
-        ] {
-            if let (Linear::Dense(t0), Linear::Quant(qq)) = (a, b) {
-                let deq = ams_quant::pack::unpack(&qq.packed).dequantize();
-                mse_sum += t0.mse(&deq);
-                n += 1;
-            }
-        }
+    emit_table(args, &t)?;
+    let mean_mse = reports.iter().map(|r| r.mse).sum::<f64>() / reports.len().max(1) as f64;
+    // Honest compression: the scale streams (material under per-group)
+    // count against the packed size.
+    let scale_bytes = q.projection_scale_bytes();
+    eprintln!(
+        "# projections: {} -> {} payload + {} scale bytes ({:.2}x vs fp16 incl. scales); \
+         mean weight MSE {:.3e}",
+        dense_bytes,
+        q_bytes,
+        scale_bytes,
+        dense_bytes as f64 / (q_bytes + scale_bytes) as f64,
+        mean_mse
+    );
+    if let Some(path) = args.get("save") {
+        checkpoint::save_quantized(&q, Path::new(path))?;
+        eprintln!("# wrote quantized checkpoint {path}");
     }
-    t.row(vec![
-        "mean weight MSE".into(),
-        format!("{:.3e}", mse_sum / n.max(1) as f64),
-    ]);
-    emit_table(args, &t)
+    Ok(())
 }
 
 fn cmd_eval(args: &Args, artifacts: &Path) -> Result<()> {
@@ -291,7 +370,6 @@ fn cmd_eval(args: &Args, artifacts: &Path) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
-    let scheme_name = args.get_or("scheme", "fp5.33");
     let n_requests = args.get_usize("requests", 16);
     let max_batch = args.get_usize("max-batch", 8);
     let max_new = args.get_usize("max-new-tokens", 32);
@@ -303,14 +381,36 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         other => bail!("unknown dispatch policy '{other}' (least-outstanding | round-robin)"),
     };
     let (base, heldout, kind) = exp::load_model(artifacts)?;
-    let model = if scheme_name == "fp32" {
-        base
+    // --quantized loads a prequantized AMSQ export (the offline
+    // "quantize once" artifact) — its scheme is baked in, so the plan
+    // flags are rejected rather than silently ignored; otherwise the
+    // plan flags quantize here.
+    let model = if let Some(qpath) = args.get("quantized") {
+        for flag in ["scheme", "attn", "mlp", "lm-head", "group-size"] {
+            if args.get(flag).is_some() {
+                bail!(
+                    "--quantized serves the scheme baked into {qpath}; --{flag} cannot be \
+                     combined (re-export with `quantize --save` to change the plan)"
+                );
+            }
+        }
+        checkpoint::load_quantized(Path::new(qpath))?
     } else {
-        let scheme = Scheme::parse(scheme_name).map_err(|e| anyhow::anyhow!(e))?;
-        base.quantized(&QuantConfig::paper(scheme))
+        match quantizer_from_args(args, "fp5.33")? {
+            None => base,
+            Some(quantizer) => base
+                .quantized_with(&quantizer)
+                .map_err(|e| anyhow::anyhow!("quantization failed: {e}"))?,
+        }
     };
+    // Report what is actually served (the loaded/applied scheme), not
+    // what a flag claimed.
+    let served = model
+        .scheme
+        .map(|s| s.id())
+        .unwrap_or_else(|| "fp32 (dense)".to_string());
     eprintln!(
-        "# serving tiny LM ({kind}) under {scheme_name}: {n_requests} requests, \
+        "# serving tiny LM ({kind}) under {served}: {n_requests} requests, \
          max_batch={max_batch}, replicas={replicas}, queue_capacity={queue_capacity}"
     );
 

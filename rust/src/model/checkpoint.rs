@@ -11,8 +11,33 @@
 //!                      "tensors": [{"name","shape":[..],"offset","count"}]}
 //! bytes  f32 payload (offsets are element offsets into this region)
 //! ```
+//!
+//! **Quantized export (AMSQ)** — the "quantize once offline, serve
+//! millions" artifact produced by [`save_quantized`] and read back by
+//! [`load_quantized`]: packed word streams, per-row scales and the
+//! per-group scale streams of every projection, plus the dense
+//! embeddings/norms, in one self-describing file:
+//! ```text
+//! magic  b"AMSQ1\n"
+//! u32    header_len
+//! bytes  header JSON: {"config": {...}, "scheme": "fp4.25",
+//!                      "f32_len": N,
+//!                      "tensors": [
+//!                        {"name","kind":"dense","shape":[..],"off","count"} |
+//!                        {"name","kind":"packed","scheme","rows","cols",
+//!                         "row_stride","words_off","words_count",
+//!                         "scales_off","scales_count",
+//!                         "group_size","groups_per_row",
+//!                         "gscales_off","gscales_count"}]}
+//! bytes  f32 region (N little-endian floats: dense tensors + scales)
+//! bytes  u16 region (packed words)
+//! ```
 
+use super::transformer::{LayerWeights, Linear, Transformer};
 use super::ModelConfig;
+use crate::formats::registry::Scheme;
+use crate::gemm::QuantLinear;
+use crate::pack::{GroupScales, PackedTensor};
 use crate::tensor::Tensor;
 use crate::util::json::{parse, Json};
 use anyhow::{bail, Context, Result};
@@ -21,6 +46,7 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 6] = b"AMSZ1\n";
+const QMAGIC: &[u8; 6] = b"AMSQ1\n";
 
 /// In-memory checkpoint: named f32 tensors + model config.
 #[derive(Clone, Debug)]
@@ -137,6 +163,344 @@ impl Checkpoint {
     }
 }
 
+/// Accumulates the two payload regions while the header is built.
+struct QPayload {
+    f32s: Vec<f32>,
+    words: Vec<u16>,
+}
+
+impl QPayload {
+    fn push_f32(&mut self, data: &[f32]) -> (usize, usize) {
+        let off = self.f32s.len();
+        self.f32s.extend_from_slice(data);
+        (off, data.len())
+    }
+
+    fn push_words(&mut self, data: &[u16]) -> (usize, usize) {
+        let off = self.words.len();
+        self.words.extend_from_slice(data);
+        (off, data.len())
+    }
+}
+
+fn dense_entry(name: &str, shape: &[usize], data: &[f32], p: &mut QPayload) -> Json {
+    let (off, count) = p.push_f32(data);
+    let mut e = Json::obj();
+    e.set("name", Json::Str(name.to_string()))
+        .set("kind", Json::Str("dense".to_string()))
+        .set(
+            "shape",
+            Json::Arr(shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+        )
+        .set("off", Json::Num(off as f64))
+        .set("count", Json::Num(count as f64));
+    e
+}
+
+fn linear_entry(name: &str, l: &Linear, p: &mut QPayload) -> Json {
+    match l {
+        Linear::Dense(t) => dense_entry(name, t.shape(), t.data(), p),
+        Linear::Quant(q) => {
+            let pk = &q.packed;
+            let (woff, wcount) = p.push_words(&pk.words);
+            let (soff, scount) = p.push_f32(&pk.scales);
+            let mut e = Json::obj();
+            e.set("name", Json::Str(name.to_string()))
+                .set("kind", Json::Str("packed".to_string()))
+                .set("scheme", Json::Str(pk.scheme.id()))
+                .set("rows", Json::Num(pk.rows as f64))
+                .set("cols", Json::Num(pk.cols as f64))
+                .set("row_stride", Json::Num(pk.row_stride as f64))
+                .set("words_off", Json::Num(woff as f64))
+                .set("words_count", Json::Num(wcount as f64))
+                .set("scales_off", Json::Num(soff as f64))
+                .set("scales_count", Json::Num(scount as f64));
+            if let Some(gs) = &pk.group_scales {
+                let (goff, gcount) = p.push_f32(&gs.scales);
+                e.set("group_size", Json::Num(gs.group_size as f64))
+                    .set("groups_per_row", Json::Num(gs.groups_per_row as f64))
+                    .set("gscales_off", Json::Num(goff as f64))
+                    .set("gscales_count", Json::Num(gcount as f64));
+            }
+            e
+        }
+    }
+}
+
+/// Export a (typically quantized) model: packed projections keep their
+/// word streams and scale streams verbatim, so a reload serves
+/// bit-identical logits. Dense projections (e.g. an untargeted lm_head)
+/// are stored dense.
+pub fn save_quantized(model: &Transformer, path: &Path) -> Result<()> {
+    let mut p = QPayload { f32s: Vec::new(), words: Vec::new() };
+    let mut entries = Vec::new();
+    entries.push(dense_entry("embed", model.embed.shape(), model.embed.data(), &mut p));
+    entries.push(dense_entry("final_norm", &[model.final_norm.len()], &model.final_norm, &mut p));
+    entries.push(linear_entry("lm_head", &model.lm_head, &mut p));
+    for (i, l) in model.layers.iter().enumerate() {
+        entries.push(dense_entry(
+            &format!("layers.{i}.attn_norm"),
+            &[l.attn_norm.len()],
+            &l.attn_norm,
+            &mut p,
+        ));
+        entries.push(dense_entry(
+            &format!("layers.{i}.mlp_norm"),
+            &[l.mlp_norm.len()],
+            &l.mlp_norm,
+            &mut p,
+        ));
+        for (field, lin) in [
+            ("wq", &l.wq),
+            ("wk", &l.wk),
+            ("wv", &l.wv),
+            ("wo", &l.wo),
+            ("w_gate", &l.w_gate),
+            ("w_up", &l.w_up),
+            ("w_down", &l.w_down),
+        ] {
+            entries.push(linear_entry(&format!("layers.{i}.{field}"), lin, &mut p));
+        }
+    }
+    let mut header = Json::obj();
+    header
+        .set("config", model.cfg.to_json())
+        .set("f32_len", Json::Num(p.f32s.len() as f64))
+        .set("tensors", Json::Arr(entries));
+    if let Some(s) = model.scheme {
+        header.set("scheme", Json::Str(s.id()));
+    }
+    let hbytes = header.to_string().into_bytes();
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(QMAGIC)?;
+    f.write_all(&(hbytes.len() as u32).to_le_bytes())?;
+    f.write_all(&hbytes)?;
+    for &x in &p.f32s {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    for &w in &p.words {
+        f.write_all(&w.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_dense(e: &Json, f32s: &[f32]) -> Result<Tensor> {
+    let shape: Vec<usize> = e
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .context("dense tensor missing shape")?
+        .iter()
+        .map(|d| d.as_usize().unwrap_or(0))
+        .collect();
+    let off = e.req_usize("off").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let count = e.req_usize("count").map_err(|e| anyhow::anyhow!("{e}"))?;
+    if off + count > f32s.len() {
+        bail!("dense tensor exceeds f32 region");
+    }
+    if shape.iter().product::<usize>() != count {
+        bail!("dense tensor shape {shape:?} does not match count {count}");
+    }
+    Ok(Tensor::from_vec(&shape, f32s[off..off + count].to_vec()))
+}
+
+fn read_linear(e: &Json, f32s: &[f32], words: &[u16]) -> Result<Linear> {
+    match e.req_str("kind").map_err(|e| anyhow::anyhow!("{e}"))? {
+        "dense" => Ok(Linear::Dense(read_dense(e, f32s)?)),
+        "packed" => {
+            let scheme = Scheme::parse(e.req_str("scheme").map_err(|e| anyhow::anyhow!("{e}"))?)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let u = |k: &str| -> Result<usize> {
+                e.req_usize(k).map_err(|e| anyhow::anyhow!("{e}"))
+            };
+            let (rows, cols, row_stride) = (u("rows")?, u("cols")?, u("row_stride")?);
+            let (woff, wcount) = (u("words_off")?, u("words_count")?);
+            let (soff, scount) = (u("scales_off")?, u("scales_count")?);
+            // Full geometry validation: a corrupt/truncated header must
+            // fail the load, never panic (or decode garbage) at serve
+            // time.
+            if row_stride != crate::pack::row_stride(scheme, cols) {
+                bail!(
+                    "row_stride {row_stride} does not match scheme {} at {cols} cols",
+                    scheme.id()
+                );
+            }
+            if wcount != rows * row_stride {
+                bail!("words_count {wcount} != rows {rows} * row_stride {row_stride}");
+            }
+            if scount != rows {
+                bail!("scales_count {scount} != rows {rows}");
+            }
+            if woff + wcount > words.len() || soff + scount > f32s.len() {
+                bail!("packed tensor exceeds payload");
+            }
+            let group_scales = match e.get("group_size").map(|g| g.as_usize()) {
+                None => None,
+                Some(None) | Some(Some(0)) => bail!("invalid group_size in packed tensor"),
+                Some(Some(group_size)) => {
+                    let groups_per_row = u("groups_per_row")?;
+                    if groups_per_row != cols.div_ceil(group_size) {
+                        bail!(
+                            "groups_per_row {groups_per_row} != ceil({cols}/{group_size})"
+                        );
+                    }
+                    let (goff, gcount) = (u("gscales_off")?, u("gscales_count")?);
+                    if gcount != rows * groups_per_row {
+                        bail!("gscales_count {gcount} != rows {rows} * groups {groups_per_row}");
+                    }
+                    if goff + gcount > f32s.len() {
+                        bail!("group scales exceed f32 region");
+                    }
+                    Some(GroupScales {
+                        group_size,
+                        groups_per_row,
+                        scales: f32s[goff..goff + gcount].to_vec(),
+                    })
+                }
+            };
+            Ok(Linear::Quant(QuantLinear::new(PackedTensor {
+                scheme,
+                rows,
+                cols,
+                words: words[woff..woff + wcount].to_vec(),
+                row_stride,
+                scales: f32s[soff..soff + scount].to_vec(),
+                group_scales,
+            })))
+        }
+        other => bail!("unknown tensor kind '{other}'"),
+    }
+}
+
+/// Load a quantized model exported by [`save_quantized`].
+pub fn load_quantized(path: &Path) -> Result<Transformer> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != QMAGIC {
+        bail!("{}: not an AMSQ quantized checkpoint", path.display());
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = parse(std::str::from_utf8(&hbytes)?).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let config = ModelConfig::from_json(header.get("config").context("header missing 'config'")?)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let scheme = match header.get("scheme").and_then(|s| s.as_str()) {
+        Some(id) => Some(Scheme::parse(id).map_err(|e| anyhow::anyhow!("{e}"))?),
+        None => None,
+    };
+    let f32_len = header
+        .req_usize("f32_len")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    if payload.len() < f32_len * 4 {
+        bail!("payload shorter than declared f32 region");
+    }
+    let (fbytes, wbytes) = payload.split_at(f32_len * 4);
+    let f32s: Vec<f32> = fbytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let words: Vec<u16> = wbytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect();
+
+    let mut by_name: BTreeMap<String, &Json> = BTreeMap::new();
+    let entries = header
+        .get("tensors")
+        .and_then(|t| t.as_arr())
+        .context("header missing 'tensors'")?;
+    for e in entries {
+        by_name.insert(
+            e.req_str("name").map_err(|e| anyhow::anyhow!("{e}"))?.to_string(),
+            e,
+        );
+    }
+    let entry = |name: &str| -> Result<&&Json> {
+        by_name
+            .get(name)
+            .with_context(|| format!("quantized checkpoint missing tensor '{name}'"))
+    };
+    let densev = |name: &str| -> Result<Vec<f32>> {
+        Ok(read_dense(entry(name)?, &f32s)?.data().to_vec())
+    };
+
+    // Every tensor is cross-checked against the model config, so a file
+    // that is internally consistent but disagrees with its own config
+    // fails the load instead of panicking (or serving garbage) at serve
+    // time.
+    let (d, kvd, dff, vocab) = (
+        config.d_model,
+        config.kv_dim(),
+        config.d_ff,
+        config.vocab_size,
+    );
+    let check_dims = |name: &str, l: &Linear, out_dim: usize, in_dim: usize| -> Result<()> {
+        if l.out_dim() != out_dim || l.in_dim() != in_dim {
+            bail!(
+                "tensor '{name}' is [{}x{}] but the config expects [{out_dim}x{in_dim}]",
+                l.out_dim(),
+                l.in_dim()
+            );
+        }
+        Ok(())
+    };
+    let check_vec = |name: &str, v: &[f32]| -> Result<()> {
+        if v.len() != d {
+            bail!("norm '{name}' has {} weights, config d_model is {d}", v.len());
+        }
+        Ok(())
+    };
+    let mut layers = Vec::with_capacity(config.n_layers);
+    for i in 0..config.n_layers {
+        let lin = |field: &str, out_dim: usize, in_dim: usize| -> Result<Linear> {
+            let name = format!("layers.{i}.{field}");
+            let l = read_linear(entry(&name)?, &f32s, &words)?;
+            check_dims(&name, &l, out_dim, in_dim)?;
+            Ok(l)
+        };
+        let attn_norm = densev(&format!("layers.{i}.attn_norm"))?;
+        check_vec(&format!("layers.{i}.attn_norm"), &attn_norm)?;
+        let mlp_norm = densev(&format!("layers.{i}.mlp_norm"))?;
+        check_vec(&format!("layers.{i}.mlp_norm"), &mlp_norm)?;
+        layers.push(LayerWeights {
+            attn_norm,
+            wq: lin("wq", d, d)?,
+            wk: lin("wk", kvd, d)?,
+            wv: lin("wv", kvd, d)?,
+            wo: lin("wo", d, d)?,
+            mlp_norm,
+            w_gate: lin("w_gate", dff, d)?,
+            w_up: lin("w_up", dff, d)?,
+            w_down: lin("w_down", d, dff)?,
+        });
+    }
+    let embed = read_dense(entry("embed")?, &f32s)?;
+    if embed.shape() != [vocab, d].as_slice() {
+        bail!("embed is {:?}, config expects [{vocab}, {d}]", embed.shape());
+    }
+    let final_norm = densev("final_norm")?;
+    check_vec("final_norm", &final_norm)?;
+    let lm_head = read_linear(entry("lm_head")?, &f32s, &words)?;
+    check_dims("lm_head", &lm_head, vocab, d)?;
+    Ok(Transformer {
+        cfg: config,
+        embed,
+        layers,
+        final_norm,
+        lm_head,
+        scheme,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +538,82 @@ mod tests {
         let path = dir.join("bad.amsz");
         std::fs::write(&path, b"NOTAMSZ...").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        // An AMSZ file is not an AMSQ file and vice versa.
+        assert!(load_quantized(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// A truncated AMSQ payload must fail the load with a clean error —
+    /// geometry is validated up front, never discovered as a panic (or
+    /// silent garbage) at serve time.
+    #[test]
+    fn truncated_quantized_rejected_cleanly() {
+        use crate::model::synthetic::synthetic_checkpoint;
+        use crate::quant::{QuantConfig, Quantizer};
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 78);
+        let base = Transformer::from_checkpoint(&ck).unwrap();
+        let q = base
+            .quantized_with(
+                &Quantizer::uniform(QuantConfig::paper(Scheme::parse("fp4.25").unwrap())).unwrap(),
+            )
+            .unwrap();
+        let dir = std::env::temp_dir().join("ams_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.amsq");
+        save_quantized(&q, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [bytes.len() - 64, bytes.len() / 2] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load_quantized(&path).is_err(), "cut at {cut} must error");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Acceptance: a mixed-precision, per-group quantized model exports
+    /// to AMSQ and reloads serving bit-identical logits — the packed
+    /// words, row scales and group-scale streams all survive verbatim.
+    #[test]
+    fn quantized_export_import_exact() {
+        use crate::model::synthetic::synthetic_checkpoint;
+        use crate::quant::{Granularity, LayerRole, QuantConfig, QuantPlan, Quantizer};
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 77);
+        let base = Transformer::from_checkpoint(&ck).unwrap();
+        let plan = QuantPlan::builder(
+            QuantConfig::paper(Scheme::parse("fp4.25").unwrap())
+                .with_granularity(Granularity::PerGroup(32)),
+        )
+        .role(LayerRole::Attention, QuantConfig::paper(Scheme::parse("fp6").unwrap()))
+        .role(LayerRole::LmHead, QuantConfig::paper(Scheme::parse("fp8").unwrap()))
+        .build()
+        .unwrap();
+        let q = base.quantized_with(&Quantizer::new(plan)).unwrap();
+
+        let dir = std::env::temp_dir().join("ams_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mixed.amsq");
+        save_quantized(&q, &path).unwrap();
+        let back = load_quantized(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(back.cfg, q.cfg);
+        assert_eq!(back.scheme, q.scheme);
+        // Mixed precision and group scales survived.
+        match (&back.layers[0].wq, &back.layers[0].w_gate, &back.lm_head) {
+            (Linear::Quant(wq), Linear::Quant(gate), Linear::Quant(head)) => {
+                assert_eq!(wq.packed.scheme, Scheme::parse("fp6").unwrap());
+                assert_eq!(gate.packed.scheme, Scheme::parse("fp4.25").unwrap());
+                assert!(gate.packed.group_scales.is_some(), "per-group stream restored");
+                assert_eq!(head.packed.scheme, Scheme::parse("fp8").unwrap());
+            }
+            _ => panic!("projections must reload packed"),
+        }
+        // Bit-identical serving.
+        let mut c1 = q.new_cache();
+        let mut c2 = back.new_cache();
+        for (p, &t) in [1u32, 5, 9, 2].iter().enumerate() {
+            let l1 = q.forward(t, p, &mut c1);
+            let l2 = back.forward(t, p, &mut c2);
+            assert_eq!(l1, l2, "pos {p}");
+        }
     }
 }

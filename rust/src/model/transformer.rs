@@ -17,8 +17,7 @@ use super::checkpoint::Checkpoint;
 use super::ModelConfig;
 use crate::formats::registry::Scheme;
 use crate::gemm::{dense_gemm_auto_into, dense_gemv_auto, GemmScratch, QuantLinear};
-use crate::quant::sharing::quantize;
-use crate::quant::QuantConfig;
+use crate::quant::{LayerRole, QuantConfig, QuantError, QuantReport, Quantizer};
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::borrow::BorrowMut;
@@ -88,6 +87,14 @@ impl Linear {
         match self {
             Linear::Dense(t) => t.len() * 2, // counted as fp16 storage
             Linear::Quant(q) => q.packed.payload_bytes(),
+        }
+    }
+
+    /// Storage bytes of the f32 scale streams (0 for dense).
+    pub fn scale_bytes(&self) -> usize {
+        match self {
+            Linear::Dense(_) => 0,
+            Linear::Quant(q) => q.packed.scale_bytes(),
         }
     }
 }
@@ -285,46 +292,103 @@ impl Transformer {
         })
     }
 
-    /// Quantize every projection (wq/wk/wv/wo/gate/up/down) to a scheme.
-    /// Embeddings, norms and lm_head stay dense, as in weight-only LLM
-    /// deployments (they are a small fraction of the weights).
-    pub fn quantized(&self, qcfg: &QuantConfig) -> Transformer {
-        let requant = |l: &Linear| -> Linear {
-            let w = match l {
-                Linear::Dense(t) => t.clone(),
-                Linear::Quant(_) => panic!("quantized() expects a dense source model"),
-            };
-            match qcfg.scheme {
-                Scheme::Fp16 => Linear::Quant(QuantLinear::new(crate::baselines::pack_fp16(&w))),
-                Scheme::Int { .. } => Linear::Quant(QuantLinear::new(
-                    crate::baselines::quantize_int(&w, qcfg.scheme),
-                )),
-                _ => Linear::Quant(QuantLinear::new(crate::pack::pack(&quantize(&w, qcfg)))),
+    /// Uniform quantization convenience: every projection under one
+    /// config (see [`Transformer::quantized_with`] for mixed precision).
+    pub fn quantized(&self, qcfg: &QuantConfig) -> Result<Transformer, QuantError> {
+        self.quantized_with(&Quantizer::uniform(*qcfg)?)
+    }
+
+    /// Quantize every projection (wq/wk/wv/wo/gate/up/down) under a
+    /// per-layer [`QuantPlan`](crate::quant::QuantPlan) — the offline
+    /// "quantize once, serve millions" step. Embeddings and norms stay
+    /// dense, as in weight-only LLM deployments (they are a small
+    /// fraction of the weights); the lm_head also stays dense unless the
+    /// plan explicitly targets [`LayerRole::LmHead`] (or the exact layer
+    /// name `lm_head`).
+    pub fn quantized_with(&self, quantizer: &Quantizer) -> Result<Transformer, QuantError> {
+        self.quantized_inner(quantizer, None)
+    }
+
+    /// Like [`Transformer::quantized_with`], additionally returning the
+    /// per-layer [`QuantReport`]s (bits/weight, MSE, SQNR, chosen shared
+    /// bits) the offline adaptive-search workflow inspects. Building the
+    /// reports costs an extra reconstruction pass per projection;
+    /// [`Transformer::quantized_with`] skips it.
+    pub fn quantized_report(
+        &self,
+        quantizer: &Quantizer,
+    ) -> Result<(Transformer, Vec<QuantReport>), QuantError> {
+        let mut reports = Vec::new();
+        let model = self.quantized_inner(quantizer, Some(&mut reports))?;
+        Ok((model, reports))
+    }
+
+    fn quantized_inner(
+        &self,
+        quantizer: &Quantizer,
+        mut reports: Option<&mut Vec<QuantReport>>,
+    ) -> Result<Transformer, QuantError> {
+        // Every exact-name override must name a real projection — a typo
+        // in a plan must not silently fall back to the default config.
+        for name in quantizer.plan().layer_names() {
+            let known = name == "lm_head"
+                || name
+                    .strip_prefix("layers.")
+                    .and_then(|rest| rest.split_once('.'))
+                    .map(|(i, field)| {
+                        i.parse::<usize>().map(|i| i < self.layers.len()).unwrap_or(false)
+                            && matches!(
+                                field,
+                                "wq" | "wk" | "wv" | "wo" | "w_gate" | "w_up" | "w_down"
+                            )
+                    })
+                    .unwrap_or(false);
+            if !known {
+                return Err(QuantError::UnknownLayer { layer: name.to_string() });
             }
+        }
+        let mut requant = |name: String, role: LayerRole, l: &Linear| -> Result<Linear, QuantError> {
+            let w = match l {
+                Linear::Dense(t) => t,
+                Linear::Quant(_) => return Err(QuantError::SourceNotDense { layer: name }),
+            };
+            let packed = match reports.as_deref_mut() {
+                Some(reps) => {
+                    let (packed, report) = quantizer.quantize_layer(&name, role, w)?;
+                    reps.push(report);
+                    packed
+                }
+                None => quantizer.quantize_for(&name, role, w)?,
+            };
+            Ok(Linear::Quant(QuantLinear::new(packed)))
         };
-        let layers = self
-            .layers
-            .iter()
-            .map(|l| LayerWeights {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for (i, l) in self.layers.iter().enumerate() {
+            layers.push(LayerWeights {
                 attn_norm: l.attn_norm.clone(),
-                wq: requant(&l.wq),
-                wk: requant(&l.wk),
-                wv: requant(&l.wv),
-                wo: requant(&l.wo),
+                wq: requant(format!("layers.{i}.wq"), LayerRole::Attention, &l.wq)?,
+                wk: requant(format!("layers.{i}.wk"), LayerRole::Attention, &l.wk)?,
+                wv: requant(format!("layers.{i}.wv"), LayerRole::Attention, &l.wv)?,
+                wo: requant(format!("layers.{i}.wo"), LayerRole::Attention, &l.wo)?,
                 mlp_norm: l.mlp_norm.clone(),
-                w_gate: requant(&l.w_gate),
-                w_up: requant(&l.w_up),
-                w_down: requant(&l.w_down),
-            })
-            .collect();
-        Transformer {
+                w_gate: requant(format!("layers.{i}.w_gate"), LayerRole::Mlp, &l.w_gate)?,
+                w_up: requant(format!("layers.{i}.w_up"), LayerRole::Mlp, &l.w_up)?,
+                w_down: requant(format!("layers.{i}.w_down"), LayerRole::Mlp, &l.w_down)?,
+            });
+        }
+        let lm_head = if quantizer.plan().has_role(LayerRole::LmHead) {
+            requant("lm_head".to_string(), LayerRole::LmHead, &self.lm_head)?
+        } else {
+            self.lm_head.clone()
+        };
+        Ok(Transformer {
             cfg: self.cfg,
             embed: self.embed.clone(),
             layers,
             final_norm: self.final_norm.clone(),
-            lm_head: self.lm_head.clone(),
-            scheme: Some(qcfg.scheme),
-        }
+            lm_head,
+            scheme: Some(quantizer.plan().default_config().scheme),
+        })
     }
 
     pub fn new_cache(&self) -> KvCache {
@@ -350,6 +414,24 @@ impl Transformer {
                     + l.w_gate.payload_bytes()
                     + l.w_up.payload_bytes()
                     + l.w_down.payload_bytes()
+            })
+            .sum()
+    }
+
+    /// Projection scale-stream bytes (excluded from
+    /// [`Transformer::projection_bytes`]; material for per-group scales
+    /// — `32/g` bits/weight — so size reporting adds it explicitly).
+    pub fn projection_scale_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.wq.scale_bytes()
+                    + l.wk.scale_bytes()
+                    + l.wv.scale_bytes()
+                    + l.wo.scale_bytes()
+                    + l.w_gate.scale_bytes()
+                    + l.w_up.scale_bytes()
+                    + l.w_down.scale_bytes()
             })
             .sum()
     }
@@ -873,7 +955,7 @@ mod tests {
         let mut models = vec![("dense".to_string(), m.clone())];
         for name in ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "fp4", "int8", "int4"] {
             let scheme = Scheme::parse(name).unwrap();
-            models.push((name.to_string(), m.quantized(&QuantConfig::paper(scheme))));
+            models.push((name.to_string(), m.quantized(&QuantConfig::paper(scheme)).unwrap()));
         }
         for (name, model) in &models {
             let mut c_tok = model.new_cache();
@@ -907,7 +989,7 @@ mod tests {
 
     #[test]
     fn prefill_in_chunks_matches_single_chunk() {
-        let m = tiny_model().quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+        let m = tiny_model().quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap();
         let prompt = [3u32, 1, 4, 1, 5, 9, 2, 6];
         let mut scratch = m.new_scratch();
         let mut c1 = m.new_cache();
@@ -936,8 +1018,8 @@ mod tests {
     #[test]
     fn quantized_model_close_to_dense() {
         let m = tiny_model();
-        let q6 = m.quantized(&QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap()));
-        let q4 = m.quantized(&QuantConfig::paper(Scheme::parse("fp4-e2m1").unwrap()));
+        let q6 = m.quantized(&QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap())).unwrap();
+        let q4 = m.quantized(&QuantConfig::paper(Scheme::parse("fp4-e2m1").unwrap())).unwrap();
         let mut cd = m.new_cache();
         let mut c6 = q6.new_cache();
         let mut c4 = q4.new_cache();
@@ -965,7 +1047,7 @@ mod tests {
     #[test]
     fn fp16_scheme_near_lossless() {
         let m = tiny_model();
-        let qf = m.quantized(&QuantConfig::paper(Scheme::Fp16));
+        let qf = m.quantized(&QuantConfig::paper(Scheme::Fp16)).unwrap();
         let mut cd = m.new_cache();
         let mut cf = qf.new_cache();
         for (p, &t) in [1u32, 5, 9].iter().enumerate() {
@@ -977,12 +1059,118 @@ mod tests {
         }
     }
 
+    /// Tentpole acceptance: a mixed-precision plan (fp6 attention /
+    /// fp4.25-per-group MLP / fp8 lm_head) quantizes through one
+    /// `Quantizer`, reports per layer, and serves logits close to dense.
+    #[test]
+    fn mixed_precision_plan_quantizes_and_serves() {
+        use crate::quant::{Granularity, QuantPlan};
+        let m = tiny_model();
+        let plan = QuantPlan::builder(
+            QuantConfig::paper(Scheme::parse("fp4.25").unwrap())
+                .with_granularity(Granularity::PerGroup(32)),
+        )
+        .role(LayerRole::Attention, QuantConfig::paper(Scheme::parse("fp6").unwrap()))
+        .role(LayerRole::LmHead, QuantConfig::paper(Scheme::parse("fp8").unwrap()))
+        .build()
+        .unwrap();
+        let (q, reports) = m.quantized_report(&Quantizer::new(plan)).unwrap();
+        // 7 projections per layer + lm_head, each with a report.
+        assert_eq!(reports.len(), m.cfg.n_layers * 7 + 1);
+        let by_name = |n: &str| reports.iter().find(|r| r.layer == n).unwrap();
+        assert_eq!(by_name("layers.0.wq").scheme, Scheme::parse("fp6").unwrap());
+        assert_eq!(by_name("layers.0.w_gate").scheme, Scheme::parse("fp4.25").unwrap());
+        assert_eq!(
+            by_name("layers.0.w_gate").granularity,
+            Granularity::PerGroup(32)
+        );
+        assert_eq!(by_name("lm_head").scheme, Scheme::parse("fp8").unwrap());
+        assert!(matches!(q.lm_head, Linear::Quant(_)), "lm_head override quantizes it");
+        // The attention projections carry more bits than the MLP ones.
+        assert!(by_name("layers.0.wq").bits_per_weight > by_name("layers.0.w_up").bits_per_weight);
+        // Serving stays close to dense.
+        let mut cd = m.new_cache();
+        let mut cq = q.new_cache();
+        for (p, &t) in [1u32, 5, 9].iter().enumerate() {
+            let ld = m.forward(t, p, &mut cd);
+            let lq = q.forward(t, p, &mut cq);
+            assert!(lq.iter().all(|v| v.is_finite()));
+            let err: f64 = ld
+                .iter()
+                .zip(&lq)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / ld.len() as f64;
+            assert!(err < 1.0, "pos {p}: logit mse {err}");
+        }
+    }
+
+    /// A uniform per-group model decodes through the fused per-group
+    /// path end-to-end and matches the per-channel model's quality class.
+    #[test]
+    fn per_group_model_decodes() {
+        use crate::quant::Granularity;
+        let m = tiny_model();
+        let cfg = QuantConfig::paper(Scheme::parse("fp4.25").unwrap());
+        let qc = m.quantized(&cfg).unwrap();
+        let qg = m
+            .quantized(&cfg.with_granularity(Granularity::PerGroup(32)))
+            .unwrap();
+        let mut cd = m.new_cache();
+        let mut cc = qc.new_cache();
+        let mut cg = qg.new_cache();
+        let mut err_c = 0f64;
+        let mut err_g = 0f64;
+        for (p, &t) in [1u32, 5, 9, 2].iter().enumerate() {
+            let ld = m.forward(t, p, &mut cd);
+            let lc = qc.forward(t, p, &mut cc);
+            let lg = qg.forward(t, p, &mut cg);
+            assert!(lg.iter().all(|v| v.is_finite()));
+            err_c += ld.iter().zip(&lc).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            err_g += ld.iter().zip(&lg).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>();
+        }
+        // Finer scales must not be wildly worse; typically better.
+        assert!(err_g < err_c * 2.0, "per-group {err_g} vs per-channel {err_c}");
+    }
+
+    #[test]
+    fn quantized_source_must_be_dense() {
+        let m = tiny_model();
+        let q = m.quantized(&QuantConfig::paper(Scheme::parse("fp6").unwrap())).unwrap();
+        match q.quantized(&QuantConfig::paper(Scheme::parse("fp4").unwrap())) {
+            Err(QuantError::SourceNotDense { layer }) => assert_eq!(layer, "layers.0.wq"),
+            other => panic!("expected SourceNotDense, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_layer_override_rejected() {
+        use crate::quant::QuantPlan;
+        let m = tiny_model();
+        let plan = QuantPlan::builder(QuantConfig::paper(Scheme::parse("fp4.25").unwrap()))
+            .layer("layers.99.wq", QuantConfig::paper(Scheme::parse("fp6").unwrap()))
+            .build()
+            .unwrap();
+        match m.quantized_with(&Quantizer::new(plan)) {
+            Err(QuantError::UnknownLayer { layer }) => assert_eq!(layer, "layers.99.wq"),
+            other => panic!("expected UnknownLayer, got {other:?}"),
+        }
+        // A valid exact-name override flows through.
+        let plan = QuantPlan::builder(QuantConfig::paper(Scheme::parse("fp4.25").unwrap()))
+            .layer("layers.0.w_down", QuantConfig::paper(Scheme::parse("fp8").unwrap()))
+            .build()
+            .unwrap();
+        let (_, reports) = m.quantized_report(&Quantizer::new(plan)).unwrap();
+        let rep = reports.iter().find(|r| r.layer == "layers.0.w_down").unwrap();
+        assert_eq!(rep.scheme, Scheme::parse("fp8").unwrap());
+    }
+
     #[test]
     fn projection_bytes_scale_with_scheme() {
         let m = tiny_model();
         let dense = m.projection_bytes() as f64; // fp16-equivalent
         let q425 = m
-            .quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()))
+            .quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap())).unwrap()
             .projection_bytes() as f64;
         let ratio = dense / q425;
         assert!(

@@ -21,13 +21,45 @@
 //! region. Relative to the paper's 16-weight tiles this is a row-level
 //! segmentation — identical word counts and streaming behaviour, simpler
 //! addressing (documented deviation, DESIGN.md §7).
+//!
+//! **Scale streams.** Every packed tensor carries one f32 scale per row.
+//! Group-wise quantization (`Granularity::PerGroup(g)`, the
+//! FineQuant/M-ANT axis) additionally carries a [`GroupScales`] stream:
+//! `ceil(cols/g)` f32 scales per row at a fixed per-row stride, so each
+//! row's group scales start word-aligned and are sliced without division.
+//! For per-group tensors the per-row scales are identity (1.0) — the
+//! group scale is folded into the decode by the fused kernels, the same
+//! way the exponent rebias is folded today (see
+//! [`crate::gemm`]).
 
 pub mod bitstream;
 
 use crate::formats::registry::Scheme;
 use crate::formats::FpFormat;
-use crate::quant::{Granularity, QuantizedTensor, ShareDim};
+use crate::quant::{Granularity, QuantError, QuantizedTensor, ShareDim};
+use crate::tensor::Tensor;
 use bitstream::{BitReader, BitWriter};
+
+/// Per-group scale stream of a group-wise quantized [`PackedTensor`]:
+/// row-major `[rows, groups_per_row]`, each row starting at
+/// `r * groups_per_row` (word-aligned per row; tail groups of a ragged
+/// row share the stride).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupScales {
+    /// Contiguous group width along the input dimension.
+    pub group_size: usize,
+    /// `ceil(cols / group_size)` — the per-row stride of `scales`.
+    pub groups_per_row: usize,
+    /// `rows * groups_per_row` scales.
+    pub scales: Vec<f32>,
+}
+
+impl GroupScales {
+    /// One row's group scales.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.scales[r * self.groups_per_row..(r + 1) * self.groups_per_row]
+    }
+}
 
 /// Packed weights ready for the GEMV hot path / PJRT buffers.
 #[derive(Clone, Debug)]
@@ -38,8 +70,12 @@ pub struct PackedTensor {
     /// All rows' words, row-major, `row_stride` words per row.
     pub words: Vec<u16>,
     pub row_stride: usize,
-    /// One scale per row (channel-wise).
+    /// One scale per row (identity when `group_scales` carries the real
+    /// scales).
     pub scales: Vec<f32>,
+    /// Per-group scale stream — `Some` iff the tensor was quantized with
+    /// `Granularity::PerGroup`.
+    pub group_scales: Option<GroupScales>,
 }
 
 impl PackedTensor {
@@ -52,9 +88,55 @@ impl PackedTensor {
         self.words.len() * 2
     }
 
-    /// Achieved bits per weight (includes row-alignment padding).
+    /// Bytes of the f32 scale streams (per-row scales + the per-group
+    /// stream when present). Not part of [`PackedTensor::payload_bytes`]
+    /// / [`PackedTensor::bits_per_weight`]: per-row scales are constant
+    /// across schemes, but per-group scales add a real `32/g` bits per
+    /// weight that size accounting must not hide.
+    pub fn scale_bytes(&self) -> usize {
+        let group = self.group_scales.as_ref().map_or(0, |gs| gs.scales.len());
+        (self.scales.len() + group) * 4
+    }
+
+    /// Achieved bits per weight of the packed code payload (includes
+    /// row-alignment padding, excludes the scale streams — see
+    /// [`PackedTensor::scale_bytes`]).
     pub fn bits_per_weight(&self) -> f64 {
         (self.payload_bytes() * 8) as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Effective scale granularity of this tensor.
+    pub fn granularity(&self) -> Granularity {
+        match &self.group_scales {
+            Some(gs) => Granularity::PerGroup(gs.group_size),
+            None => Granularity::PerChannel,
+        }
+    }
+
+    /// The scale applied to element `(r, c)` at dequantization.
+    #[inline]
+    pub fn scale_for(&self, r: usize, c: usize) -> f32 {
+        match &self.group_scales {
+            Some(gs) => gs.scales[r * gs.groups_per_row + c / gs.group_size],
+            None => self.scales[r],
+        }
+    }
+
+    /// Reference dequantization: unpack every row, decode through the
+    /// scheme's table, apply the per-row or per-group scale. The oracle
+    /// the fused GEMV/GEMM kernels are parity-tested against.
+    pub fn dequantize(&self) -> Tensor {
+        let table = crate::gemm::dequant_table(self.scheme);
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        let mut codes = vec![0u16; self.cols];
+        for r in 0..self.rows {
+            unpack_row(self.scheme, self.row_words(r), self.cols, &mut codes);
+            let orow = out.row_mut(r);
+            for (c, o) in orow.iter_mut().enumerate() {
+                *o = table[codes[c] as usize] * self.scale_for(r, c);
+            }
+        }
+        out
     }
 }
 
@@ -81,18 +163,52 @@ pub fn row_stride(scheme: Scheme, cols: usize) -> usize {
     }
 }
 
-/// Pack a quantized tensor. Requires input-dim sharing and per-channel (or
-/// per-tensor, which is broadcast) scales — the layouts the kernels serve.
-pub fn pack(q: &QuantizedTensor) -> PackedTensor {
-    assert_eq!(
-        q.share_dim,
-        ShareDim::Input,
-        "packed layouts require input-dim sharing"
-    );
-    let scales: Vec<f32> = match q.granularity {
-        Granularity::PerChannel => q.scales.clone(),
-        Granularity::PerTensor => vec![q.scales[0]; q.rows],
-        Granularity::PerGroup(_) => panic!("per-group scales are not packable (use per-channel)"),
+/// Pack a quantized tensor into the word-stream layouts the kernels
+/// serve. Input-dim sharing only; every granularity packs — per-tensor
+/// broadcasts to per-row, per-group emits the word-aligned
+/// [`GroupScales`] stream. Malformed inputs surface a typed
+/// [`QuantError`] instead of panicking.
+pub fn pack(q: &QuantizedTensor) -> Result<PackedTensor, QuantError> {
+    if q.share_dim != ShareDim::Input {
+        return Err(QuantError::UnpackableShareDim { share_dim: q.share_dim });
+    }
+    let (scales, group_scales) = match q.granularity {
+        Granularity::PerChannel => {
+            if q.scales.len() != q.rows {
+                return Err(QuantError::ScaleCountMismatch {
+                    expected: q.rows,
+                    got: q.scales.len(),
+                });
+            }
+            (q.scales.clone(), None)
+        }
+        Granularity::PerTensor => {
+            if q.scales.is_empty() {
+                return Err(QuantError::ScaleCountMismatch { expected: 1, got: 0 });
+            }
+            (vec![q.scales[0]; q.rows], None)
+        }
+        Granularity::PerGroup(g) => {
+            if g == 0 {
+                return Err(QuantError::InvalidGroupSize { g, reason: "must be positive" });
+            }
+            let groups_per_row = q.cols.div_ceil(g);
+            let expected = q.rows * groups_per_row;
+            if q.scales.len() != expected {
+                return Err(QuantError::ScaleCountMismatch {
+                    expected,
+                    got: q.scales.len(),
+                });
+            }
+            (
+                vec![1.0; q.rows],
+                Some(GroupScales {
+                    group_size: g,
+                    groups_per_row,
+                    scales: q.scales.clone(),
+                }),
+            )
+        }
     };
     let stride = row_stride(q.scheme, q.cols);
     let mut words = vec![0u16; q.rows * stride];
@@ -100,14 +216,15 @@ pub fn pack(q: &QuantizedTensor) -> PackedTensor {
         let row_codes = &q.codes[r * q.cols..(r + 1) * q.cols];
         pack_row(q.scheme, row_codes, &mut words[r * stride..(r + 1) * stride]);
     }
-    PackedTensor {
+    Ok(PackedTensor {
         scheme: q.scheme,
         rows: q.rows,
         cols: q.cols,
         words,
         row_stride: stride,
         scales,
-    }
+        group_scales,
+    })
 }
 
 /// Pack one row of codes into `out` (len = row_stride).
@@ -272,8 +389,9 @@ fn unpack_fixed(words: &[u16], bits: u32, cols: usize, out: &mut [u16]) {
     }
 }
 
-/// Unpack a whole tensor back into a `QuantizedTensor` (codes + per-channel
-/// scales). Shared-bit metadata is reconstructed from the codes.
+/// Unpack a whole tensor back into a `QuantizedTensor` (codes + scales at
+/// the packed granularity). Shared-bit metadata is reconstructed from the
+/// codes.
 pub fn unpack(p: &PackedTensor) -> QuantizedTensor {
     let fmt = p
         .scheme
@@ -300,14 +418,18 @@ pub fn unpack(p: &PackedTensor) -> QuantizedTensor {
         }
         _ => Vec::new(),
     };
+    let (granularity, scales) = match &p.group_scales {
+        Some(gs) => (Granularity::PerGroup(gs.group_size), gs.scales.clone()),
+        None => (Granularity::PerChannel, p.scales.clone()),
+    };
     QuantizedTensor {
         fmt,
         scheme: p.scheme,
         rows: p.rows,
         cols: p.cols,
         codes,
-        granularity: Granularity::PerChannel,
-        scales: p.scales.clone(),
+        granularity,
+        scales,
         shared_bits,
         share_dim: ShareDim::Input,
     }
@@ -325,7 +447,7 @@ mod tests {
     fn quantize_named(name: &str, rows: usize, cols: usize, seed: u64) -> QuantizedTensor {
         let mut rng = Rng::new(seed);
         let w = init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng);
-        quantize(&w, &QuantConfig::paper(Scheme::parse(name).unwrap()))
+        quantize(&w, &QuantConfig::paper(Scheme::parse(name).unwrap())).unwrap()
     }
 
     const SCHEMES: &[&str] = &[
@@ -337,7 +459,7 @@ mod tests {
     fn roundtrip_all_schemes() {
         for name in SCHEMES {
             let q = quantize_named(name, 5, 67, 42);
-            let p = pack(&q);
+            let p = pack(&q).unwrap();
             let u = unpack(&p);
             assert_eq!(u.codes, q.codes, "{name}");
             assert_eq!(u.scales, q.scales, "{name}");
@@ -374,7 +496,7 @@ mod tests {
         ];
         for (name, expect) in cases {
             let q = quantize_named(name, 2, 768, 7); // 768 divisible by 3,4,16,k*16
-            let p = pack(&q);
+            let p = pack(&q).unwrap();
             let bpw = p.bits_per_weight();
             assert!(
                 (bpw - expect).abs() < 1e-9,
@@ -387,7 +509,7 @@ mod tests {
     fn fp533_matches_paper_packing() {
         // Paper §3.3: three weights + shared LSB fit one half-word.
         let q = quantize_named("fp5.33", 1, 9, 3);
-        let p = pack(&q);
+        let p = pack(&q).unwrap();
         assert_eq!(p.row_stride, 3);
         // Decode word 0 by hand.
         let w = p.words[0];
@@ -403,7 +525,7 @@ mod tests {
         // Paper §3.2: 64 weights -> 16 u16 of 4-bit segments + 1 u16 of
         // 16 shared LSBs.
         let q = quantize_named("fp4.25", 1, 64, 4);
-        let p = pack(&q);
+        let p = pack(&q).unwrap();
         assert_eq!(p.row_stride, 16 + 1);
         let hi_words = 16;
         for i in 0..64 {
@@ -418,7 +540,7 @@ mod tests {
     fn fp6_tcfpx_4_2_split() {
         // 16 weights -> 4 high words + 2 low words = 6 memory accesses.
         let q = quantize_named("fp6-e2m3", 1, 16, 5);
-        let p = pack(&q);
+        let p = pack(&q).unwrap();
         assert_eq!(p.row_stride, 4 + 2);
     }
 
@@ -432,7 +554,7 @@ mod tests {
             |&cols| {
                 for name in SCHEMES {
                     let q = quantize_named(name, 3, cols, cols as u64);
-                    let p = pack(&q);
+                    let p = pack(&q).unwrap();
                     let u = unpack(&p);
                     if u.codes != q.codes {
                         return Err(format!("{name} cols={cols}: codes mismatch"));
@@ -448,20 +570,64 @@ mod tests {
         for name in ["fp5.33", "fp4.25", "fp6-e2m3"] {
             let q = quantize_named(name, 4, 50, 6);
             let dq1 = q.dequantize();
-            let dq2 = unpack(&pack(&q)).dequantize();
+            let dq2 = unpack(&pack(&q).unwrap()).dequantize();
             assert_eq!(dq1, dq2, "{name}");
         }
     }
 
+    /// Per-group tensors pack with the word-aligned scale stream and
+    /// roundtrip (codes, scales *and* granularity) exactly.
     #[test]
-    #[should_panic(expected = "per-group scales")]
-    fn per_group_scales_rejected() {
+    fn per_group_roundtrip() {
+        let mut rng = Rng::new(1);
+        for name in SCHEMES {
+            for (cols, g) in [(150usize, 32usize), (64, 64), (130, 128)] {
+                let w = init::gaussian(&[3, cols], 0.0, 0.5, &mut rng);
+                let cfg = QuantConfig::paper(Scheme::parse(name).unwrap())
+                    .with_granularity(Granularity::PerGroup(g));
+                let q = quantize(&w, &cfg).unwrap();
+                let p = pack(&q).unwrap();
+                assert_eq!(p.granularity(), Granularity::PerGroup(g), "{name}");
+                assert!(p.scales.iter().all(|&s| s == 1.0), "{name}: row scales identity");
+                let gs = p.group_scales.as_ref().unwrap();
+                assert_eq!(gs.groups_per_row, cols.div_ceil(g), "{name}");
+                assert_eq!(gs.scales.len(), 3 * cols.div_ceil(g), "{name}");
+                assert_eq!(gs.row(1).len(), gs.groups_per_row);
+                let u = unpack(&p);
+                assert_eq!(u.codes, q.codes, "{name} g={g}");
+                assert_eq!(u.scales, q.scales, "{name} g={g}");
+                assert_eq!(u.granularity, Granularity::PerGroup(g), "{name}");
+                assert_eq!(u.dequantize(), q.dequantize(), "{name} g={g}");
+                // PackedTensor::dequantize is the same oracle.
+                assert_eq!(p.dequantize(), q.dequantize(), "{name} g={g}");
+            }
+        }
+    }
+
+    /// Unsupported layouts surface typed errors, not panics.
+    #[test]
+    fn pack_rejects_with_typed_errors() {
         let mut rng = Rng::new(1);
         let w = init::gaussian(&[2, 8], 0.0, 1.0, &mut rng);
-        let mut cfg = QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap());
-        cfg.granularity = Granularity::PerGroup(4);
-        let q = crate::quant::rtn::quantize_rtn(&w, cfg.scheme, cfg.granularity);
-        let _ = pack(&q);
+        // Output-dim sharing is analysis-only.
+        let mut cfg = QuantConfig::paper(Scheme::parse("fp4.25").unwrap());
+        cfg.share_dim = ShareDim::Output;
+        let q = quantize(&w, &cfg).unwrap();
+        assert!(matches!(
+            pack(&q),
+            Err(QuantError::UnpackableShareDim { share_dim: ShareDim::Output })
+        ));
+        // Corrupt scale count.
+        let mut q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap())).unwrap();
+        q.scales.pop();
+        assert!(matches!(
+            pack(&q),
+            Err(QuantError::ScaleCountMismatch { expected: 2, got: 1 })
+        ));
+        // Zero group size.
+        let mut q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap())).unwrap();
+        q.granularity = Granularity::PerGroup(0);
+        assert!(matches!(pack(&q), Err(QuantError::InvalidGroupSize { g: 0, .. })));
     }
 
     #[test]
@@ -470,8 +636,8 @@ mod tests {
         let w = init::gaussian(&[3, 12], 0.0, 1.0, &mut rng);
         let mut cfg = QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap());
         cfg.granularity = Granularity::PerTensor;
-        let q = crate::quant::rtn::quantize_rtn(&w, cfg.scheme, cfg.granularity);
-        let p = pack(&q);
+        let q = crate::quant::rtn::quantize_rtn(&w, cfg.scheme, cfg.granularity).unwrap();
+        let p = pack(&q).unwrap();
         assert_eq!(p.scales.len(), 3);
         assert!(p.scales.iter().all(|&s| s == p.scales[0]));
         let dq = unpack(&p).dequantize();

@@ -1,105 +1,91 @@
-//! Quantization error metrics: MSE (the adaptive-search objective), SQNR,
-//! relative Frobenius error, and per-channel breakdowns used by the
-//! ablation benches.
+//! Typed errors for the quantization pipeline.
+//!
+//! Every failure a caller can provoke with input data — an unpackable
+//! config, a non-matrix weight, a scheme/granularity combination the
+//! kernels cannot serve — surfaces as a [`QuantError`] instead of a
+//! panic, so the offline quantization workflow (and the CLI driving it)
+//! can report and continue.
 
-use crate::tensor::Tensor;
+use super::{Granularity, ShareDim};
+use crate::formats::registry::Scheme;
 
-/// Mean squared error between original and reconstructed weights.
-pub fn mse(orig: &Tensor, deq: &Tensor) -> f64 {
-    orig.mse(deq)
+/// Why a quantize/pack request was rejected.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QuantError {
+    /// The scheme cannot be quantized under this configuration (e.g.
+    /// FP16 passthrough with per-group scales, INT widths other than
+    /// 4/8, codes-level quantization of a non-FP scheme).
+    UnsupportedScheme { scheme: Scheme, reason: &'static str },
+    /// Packed layouts require input-dim sharing; output-dim sharing is
+    /// an analysis-only configuration (ablation A2).
+    UnpackableShareDim { share_dim: ShareDim },
+    /// `Granularity::PerGroup(g)` with an unusable group size.
+    InvalidGroupSize { g: usize, reason: &'static str },
+    /// The weight tensor is not the 2-D `[out_channels, in_channels]`
+    /// matrix the pipeline quantizes.
+    NotMatrix { ndim: usize },
+    /// A packing request whose scale count does not match its declared
+    /// granularity/geometry (corrupt or hand-built `QuantizedTensor`).
+    ScaleCountMismatch { expected: usize, got: usize },
+    /// `Transformer::quantized_with` needs a dense source model; this
+    /// projection is already packed.
+    SourceNotDense { layer: String },
+    /// A per-layer override in a [`QuantPlan`](super::QuantPlan) names a
+    /// layer the model does not have.
+    UnknownLayer { layer: String },
 }
 
-/// Signal-to-quantization-noise ratio in dB: 10 log10(E[w²] / E[(w-ŵ)²]).
-pub fn sqnr_db(orig: &Tensor, deq: &Tensor) -> f64 {
-    let signal: f64 = orig
-        .data()
-        .iter()
-        .map(|&x| (x as f64) * (x as f64))
-        .sum::<f64>()
-        / orig.len().max(1) as f64;
-    let noise = mse(orig, deq);
-    if noise == 0.0 {
-        f64::INFINITY
-    } else {
-        10.0 * (signal / noise).log10()
-    }
-}
-
-/// ‖W - Ŵ‖_F / ‖W‖_F.
-pub fn rel_frobenius(orig: &Tensor, deq: &Tensor) -> f64 {
-    let num: f64 = orig
-        .data()
-        .iter()
-        .zip(deq.data())
-        .map(|(&a, &b)| {
-            let d = (a - b) as f64;
-            d * d
-        })
-        .sum();
-    let den: f64 = orig.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
-    if den == 0.0 {
-        if num == 0.0 {
-            0.0
-        } else {
-            f64::INFINITY
+impl std::fmt::Display for QuantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantError::UnsupportedScheme { scheme, reason } => {
+                write!(f, "scheme {} unsupported here: {reason}", scheme.id())
+            }
+            QuantError::UnpackableShareDim { share_dim } => write!(
+                f,
+                "share dim {share_dim:?} is not packable (packed layouts require input-dim sharing)"
+            ),
+            QuantError::InvalidGroupSize { g, reason } => {
+                write!(f, "invalid scale group size {g}: {reason}")
+            }
+            QuantError::NotMatrix { ndim } => {
+                write!(f, "expected a 2-D [out, in] weight matrix, got {ndim} dims")
+            }
+            QuantError::ScaleCountMismatch { expected, got } => {
+                write!(f, "scale count {got} does not match granularity (expected {expected})")
+            }
+            QuantError::SourceNotDense { layer } => {
+                write!(f, "layer '{layer}' is already quantized; quantization needs a dense source")
+            }
+            QuantError::UnknownLayer { layer } => {
+                write!(f, "plan overrides unknown layer '{layer}'")
+            }
         }
-    } else {
-        (num / den).sqrt()
     }
 }
 
-/// Per-output-channel MSE (row-wise).
-pub fn per_channel_mse(orig: &Tensor, deq: &Tensor) -> Vec<f64> {
-    assert_eq!(orig.shape(), deq.shape());
-    (0..orig.rows())
-        .map(|r| {
-            orig.row(r)
-                .iter()
-                .zip(deq.row(r))
-                .map(|(&a, &b)| {
-                    let d = (a - b) as f64;
-                    d * d
-                })
-                .sum::<f64>()
-                / orig.cols() as f64
-        })
-        .collect()
-}
+impl std::error::Error for QuantError {}
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn perfect_reconstruction() {
-        let w = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
-        assert_eq!(mse(&w, &w), 0.0);
-        assert_eq!(rel_frobenius(&w, &w), 0.0);
-        assert!(sqnr_db(&w, &w).is_infinite());
+    fn display_is_informative() {
+        let e = QuantError::InvalidGroupSize { g: 0, reason: "must be positive" };
+        assert!(e.to_string().contains("group size 0"));
+        let e = QuantError::UnpackableShareDim { share_dim: ShareDim::Output };
+        assert!(e.to_string().contains("input-dim"));
+        let e = QuantError::UnsupportedScheme {
+            scheme: Scheme::Fp16,
+            reason: "per-group scales need a quantized grid",
+        };
+        assert!(e.to_string().contains("fp16"));
     }
 
     #[test]
-    fn known_mse() {
-        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
-        let b = Tensor::from_vec(&[1, 2], vec![1.5, 2.0]);
-        assert!((mse(&a, &b) - 0.125).abs() < 1e-12);
-    }
-
-    #[test]
-    fn sqnr_scale_invariant() {
-        let a = Tensor::from_vec(&[1, 4], vec![1.0, -2.0, 3.0, -4.0]);
-        let b = Tensor::from_vec(&[1, 4], vec![1.1, -2.1, 3.1, -4.1]);
-        let s1 = sqnr_db(&a, &b);
-        let s2 = sqnr_db(&a.scale(10.0), &b.scale(10.0));
-        // f32 rounding of the scaled inputs perturbs the ratio slightly.
-        assert!((s1 - s2).abs() < 1e-3, "{s1} vs {s2}");
-    }
-
-    #[test]
-    fn per_channel_breakdown() {
-        let a = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 2.0, 2.0]);
-        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 2.0, 4.0]);
-        let pc = per_channel_mse(&a, &b);
-        assert_eq!(pc, vec![0.0, 2.0]);
+    fn error_trait_object_safe() {
+        let e: Box<dyn std::error::Error> = Box::new(QuantError::NotMatrix { ndim: 3 });
+        assert!(e.to_string().contains("2-D"));
     }
 }

@@ -1,0 +1,105 @@
+//! Quantization quality metrics: MSE (the adaptive-search objective),
+//! SQNR, relative Frobenius error, and per-channel breakdowns used by the
+//! per-layer [`QuantReport`](super::QuantReport)s and the ablation benches.
+
+use crate::tensor::Tensor;
+
+/// Mean squared error between original and reconstructed weights.
+pub fn mse(orig: &Tensor, deq: &Tensor) -> f64 {
+    orig.mse(deq)
+}
+
+/// Signal-to-quantization-noise ratio in dB: 10 log10(E[w²] / E[(w-ŵ)²]).
+pub fn sqnr_db(orig: &Tensor, deq: &Tensor) -> f64 {
+    let signal: f64 = orig
+        .data()
+        .iter()
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        / orig.len().max(1) as f64;
+    let noise = mse(orig, deq);
+    if noise == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (signal / noise).log10()
+    }
+}
+
+/// ‖W - Ŵ‖_F / ‖W‖_F.
+pub fn rel_frobenius(orig: &Tensor, deq: &Tensor) -> f64 {
+    let num: f64 = orig
+        .data()
+        .iter()
+        .zip(deq.data())
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum();
+    let den: f64 = orig.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Per-output-channel MSE (row-wise).
+pub fn per_channel_mse(orig: &Tensor, deq: &Tensor) -> Vec<f64> {
+    assert_eq!(orig.shape(), deq.shape());
+    (0..orig.rows())
+        .map(|r| {
+            orig.row(r)
+                .iter()
+                .zip(deq.row(r))
+                .map(|(&a, &b)| {
+                    let d = (a - b) as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                / orig.cols() as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_reconstruction() {
+        let w = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(mse(&w, &w), 0.0);
+        assert_eq!(rel_frobenius(&w, &w), 0.0);
+        assert!(sqnr_db(&w, &w).is_infinite());
+    }
+
+    #[test]
+    fn known_mse() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[1, 2], vec![1.5, 2.0]);
+        assert!((mse(&a, &b) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqnr_scale_invariant() {
+        let a = Tensor::from_vec(&[1, 4], vec![1.0, -2.0, 3.0, -4.0]);
+        let b = Tensor::from_vec(&[1, 4], vec![1.1, -2.1, 3.1, -4.1]);
+        let s1 = sqnr_db(&a, &b);
+        let s2 = sqnr_db(&a.scale(10.0), &b.scale(10.0));
+        // f32 rounding of the scaled inputs perturbs the ratio slightly.
+        assert!((s1 - s2).abs() < 1e-3, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn per_channel_breakdown() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 2.0, 2.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 2.0, 4.0]);
+        let pc = per_channel_mse(&a, &b);
+        assert_eq!(pc, vec![0.0, 2.0]);
+    }
+}

@@ -1,12 +1,32 @@
-//! Quantization pipeline (the paper's §3.1):
+//! Quantization pipeline (the paper's §3.1).
 //!
-//! 1. [`rtn`] — channel-wise round-to-nearest FPx quantization (Eqn. 1–2);
-//! 2. [`sharing`] — grouped mantissa-LSB sharing + adaptive searching;
-//! 3. [`error`] — MSE / SQNR metrics used by the search and the evaluation.
+//! The public entry point is the [`Quantizer`]: built from a [`QuantPlan`]
+//! (a model-wide default [`QuantConfig`] plus per-layer/role overrides for
+//! mixed precision), it runs the whole offline flow — RTN →
+//! mantissa-sharing adaptive search → bit-packing — as one
+//! `quantize(&Tensor) -> Result<PackedTensor, QuantError>` call and
+//! reports a per-layer [`QuantReport`] (achieved bits/weight, MSE, SQNR,
+//! chosen shared bits) for the adaptive-search workflow.
+//!
+//! Internals, exposed for analysis and ablations:
+//!
+//! 1. [`rtn`] — round-to-nearest FPx quantization (Eqn. 1–2) at any
+//!    [`Granularity`];
+//! 2. [`sharing`] — grouped mantissa-LSB sharing + adaptive searching
+//!    (codes-level, used by the k-sweep and MSE studies);
+//! 3. [`metrics`] — MSE / SQNR metrics used by the search, the reports
+//!    and the evaluation;
+//! 4. [`error`] — the [`QuantError`] type every stage surfaces instead of
+//!    panicking.
 
 pub mod error;
+pub mod metrics;
+pub mod pipeline;
 pub mod rtn;
 pub mod sharing;
+
+pub use error::QuantError;
+pub use pipeline::{LayerRole, QuantPlan, QuantPlanBuilder, QuantReport, Quantizer};
 
 use crate::formats::registry::Scheme;
 use crate::formats::FpFormat;
@@ -83,6 +103,14 @@ impl QuantConfig {
             search_policy: SearchPolicy::AdaptiveMse,
         }
     }
+
+    /// Same config with another scale granularity (e.g.
+    /// `Granularity::PerGroup(64)` for the FineQuant/M-ANT-style
+    /// group-wise scaling the packed layouts serve).
+    pub fn with_granularity(mut self, granularity: Granularity) -> QuantConfig {
+        self.granularity = granularity;
+        self
+    }
 }
 
 /// A quantized 2-D weight tensor prior to bit-packing: one FPx code per
@@ -129,8 +157,12 @@ impl QuantizedTensor {
         out
     }
 
-    /// Storage bits per weight for this tensor (codes + shared bits, not
-    /// counting scales — constant across schemes).
+    /// Nominal storage bits per weight for this tensor (codes + shared
+    /// bits). Scales are not counted: per-tensor/per-channel scale streams
+    /// are constant across schemes, while `PerGroup(g)` adds a further
+    /// `32/g` bits per weight on top of this figure (the packed layouts
+    /// carry the group scales as a separate word-aligned stream — see
+    /// [`crate::pack::GroupScales`]).
     pub fn bits_per_weight(&self) -> f64 {
         self.scheme.bits_per_weight()
     }

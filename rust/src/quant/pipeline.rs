@@ -1,0 +1,583 @@
+//! The unified quantization pipeline: [`QuantPlan`] → [`Quantizer`] →
+//! [`PackedTensor`] + [`QuantReport`].
+//!
+//! The paper's Adaptive Searching is an *offline* optimization — you
+//! quantize once, then serve millions of requests from the packed
+//! weights. This module is that offline surface: a [`Quantizer`] is
+//! constructed from a [`QuantPlan`] holding a model-wide default
+//! [`QuantConfig`] plus per-layer overrides (by exact layer name or by
+//! [`LayerRole`], enabling mixed precision — e.g. FP6 attention, FP4.25
+//! MLP, FP8 lm_head), and runs RTN → mantissa-sharing adaptive search →
+//! bit-packing as one fallible `quantize` flow. Every scheme the repo
+//! serves — FPx, AMS, FP16 passthrough, INT4/8 — and every scale
+//! [`Granularity`] (per-tensor, per-channel, per-group) goes through the
+//! same entry point; unsupported combinations surface a typed
+//! [`QuantError`] at plan build or quantize time, never a panic.
+
+use super::metrics;
+use super::rtn::compute_scales;
+use super::sharing;
+use super::{Granularity, QuantConfig, QuantError, ShareDim};
+use crate::formats::fp16::f32_to_fp16;
+use crate::formats::registry::Scheme;
+use crate::pack::{self, GroupScales, PackedTensor};
+use crate::tensor::Tensor;
+
+/// Which structural slot of the model a projection occupies — the
+/// coarse-grained axis mixed-precision plans select on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerRole {
+    /// Attention projections (wq / wk / wv / wo).
+    Attention,
+    /// SwiGLU MLP projections (gate / up / down).
+    Mlp,
+    /// The output head. Left dense unless a plan explicitly targets it.
+    LmHead,
+    /// Anything else (standalone matrices quantized outside a model).
+    Other,
+}
+
+impl LayerRole {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerRole::Attention => "attention",
+            LayerRole::Mlp => "mlp",
+            LayerRole::LmHead => "lm_head",
+            LayerRole::Other => "other",
+        }
+    }
+}
+
+/// Validate that a config describes something the packed layouts and
+/// fused kernels can actually serve.
+fn validate_config(cfg: &QuantConfig) -> Result<(), QuantError> {
+    if cfg.share_dim != ShareDim::Input {
+        return Err(QuantError::UnpackableShareDim { share_dim: cfg.share_dim });
+    }
+    if let Granularity::PerGroup(g) = cfg.granularity {
+        if g == 0 {
+            return Err(QuantError::InvalidGroupSize { g, reason: "must be positive" });
+        }
+        if cfg.scheme == Scheme::Fp16 {
+            return Err(QuantError::UnsupportedScheme {
+                scheme: cfg.scheme,
+                reason: "fp16 passthrough stores raw half words; it has no scale grid to group",
+            });
+        }
+    }
+    if let Scheme::Int { bits } = cfg.scheme {
+        if bits != 4 && bits != 8 {
+            return Err(QuantError::UnsupportedScheme {
+                scheme: cfg.scheme,
+                reason: "integer packing supports int4 and int8",
+            });
+        }
+    }
+    Ok(())
+}
+
+/// A model-wide quantization plan: one default config plus overrides,
+/// resolved per layer as exact-name > role > default.
+#[derive(Clone, Debug)]
+pub struct QuantPlan {
+    default: QuantConfig,
+    roles: Vec<(LayerRole, QuantConfig)>,
+    layers: Vec<(String, QuantConfig)>,
+}
+
+impl QuantPlan {
+    /// Start building a plan around a default config.
+    pub fn builder(default: QuantConfig) -> QuantPlanBuilder {
+        QuantPlanBuilder {
+            plan: QuantPlan {
+                default,
+                roles: Vec::new(),
+                layers: Vec::new(),
+            },
+        }
+    }
+
+    /// A plan with no overrides (every layer uses `default`).
+    pub fn uniform(default: QuantConfig) -> Result<QuantPlan, QuantError> {
+        QuantPlan::builder(default).build()
+    }
+
+    pub fn default_config(&self) -> &QuantConfig {
+        &self.default
+    }
+
+    /// Resolve the config for a layer: exact layer name beats role beats
+    /// default.
+    pub fn config_for(&self, layer: &str, role: LayerRole) -> &QuantConfig {
+        if let Some((_, cfg)) = self.layers.iter().find(|(n, _)| n == layer) {
+            return cfg;
+        }
+        if let Some((_, cfg)) = self.roles.iter().find(|(r, _)| *r == role) {
+            return cfg;
+        }
+        &self.default
+    }
+
+    /// Whether any override exists for a role (used by
+    /// `Transformer::quantized_with` to decide if the lm_head leaves its
+    /// default-dense state).
+    pub fn has_role(&self, role: LayerRole) -> bool {
+        self.roles.iter().any(|(r, _)| *r == role)
+            || self.layers.iter().any(|(n, _)| n == role.name())
+    }
+
+    /// Exact-name overrides (for consumed-override bookkeeping).
+    pub(crate) fn layer_names(&self) -> impl Iterator<Item = &str> {
+        self.layers.iter().map(|(n, _)| n.as_str())
+    }
+}
+
+/// Builder for [`QuantPlan`]; `build` validates every config so a plan
+/// that constructs is a plan that packs.
+pub struct QuantPlanBuilder {
+    plan: QuantPlan,
+}
+
+impl QuantPlanBuilder {
+    /// Override every layer of a role (mixed precision axis).
+    pub fn role(mut self, role: LayerRole, cfg: QuantConfig) -> Self {
+        self.plan.roles.retain(|(r, _)| *r != role);
+        self.plan.roles.push((role, cfg));
+        self
+    }
+
+    /// Override one layer by its exact checkpoint name
+    /// (e.g. `layers.3.w_down`, or `lm_head`).
+    pub fn layer(mut self, name: &str, cfg: QuantConfig) -> Self {
+        self.plan.layers.retain(|(n, _)| n != name);
+        self.plan.layers.push((name.to_string(), cfg));
+        self
+    }
+
+    /// Swap the default granularity (e.g. `PerGroup(64)` everywhere).
+    pub fn granularity(mut self, g: Granularity) -> Self {
+        self.plan.default.granularity = g;
+        self
+    }
+
+    pub fn build(self) -> Result<QuantPlan, QuantError> {
+        validate_config(&self.plan.default)?;
+        for (_, cfg) in &self.plan.roles {
+            validate_config(cfg)?;
+        }
+        for (_, cfg) in &self.plan.layers {
+            validate_config(cfg)?;
+        }
+        Ok(self.plan)
+    }
+}
+
+/// Per-layer record of what the pipeline did — the artifact the offline
+/// adaptive-search workflow inspects and the CLI prints.
+#[derive(Clone, Debug)]
+pub struct QuantReport {
+    pub layer: String,
+    pub role: LayerRole,
+    pub scheme: Scheme,
+    pub granularity: Granularity,
+    pub rows: usize,
+    pub cols: usize,
+    /// Achieved storage bits/weight of the packed payload (row-alignment
+    /// padding included; scale streams excluded — see
+    /// [`QuantReport::scale_bits_per_weight`]).
+    pub bits_per_weight: f64,
+    pub payload_bytes: usize,
+    /// Bytes of the f32 scale streams (per-row + per-group).
+    pub scale_bytes: usize,
+    /// Scale-stream overhead in bits/weight — ~`32/rows·cols` per-channel,
+    /// plus `32/g` for `PerGroup(g)`. The cost side of the
+    /// scale-granularity tradeoff this report exists to expose.
+    pub scale_bits_per_weight: f64,
+    /// Reconstruction MSE against the dense source weights.
+    pub mse: f64,
+    pub sqnr_db: f64,
+    /// AMS schemes: sharing groups whose chosen shared bit is 1.
+    pub shared_ones: usize,
+    /// AMS schemes: total sharing groups (0 for non-AMS schemes).
+    pub shared_groups: usize,
+}
+
+/// The pipeline entry point: quantize weights under a [`QuantPlan`].
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    plan: QuantPlan,
+}
+
+impl Quantizer {
+    pub fn new(plan: QuantPlan) -> Quantizer {
+        Quantizer { plan }
+    }
+
+    /// Uniform single-config quantizer (validated).
+    pub fn uniform(cfg: QuantConfig) -> Result<Quantizer, QuantError> {
+        Ok(Quantizer::new(QuantPlan::uniform(cfg)?))
+    }
+
+    pub fn plan(&self) -> &QuantPlan {
+        &self.plan
+    }
+
+    /// Quantize a standalone weight matrix under the plan's default
+    /// config: RTN → adaptive search → pack, one call.
+    pub fn quantize(&self, w: &Tensor) -> Result<PackedTensor, QuantError> {
+        quantize_packed(w, &self.plan.default)
+    }
+
+    /// Quantize a named layer under the plan-resolved config, without
+    /// the report (the serve path — skips the reconstruction metrics).
+    pub fn quantize_for(
+        &self,
+        name: &str,
+        role: LayerRole,
+        w: &Tensor,
+    ) -> Result<PackedTensor, QuantError> {
+        quantize_packed(w, self.plan.config_for(name, role))
+    }
+
+    /// Quantize a named layer under the plan-resolved config, returning
+    /// the packed weights and the per-layer report (dequantize + MSE/
+    /// SQNR + shared-bit census — an extra O(rows·cols) pass the offline
+    /// search workflow wants and the serve path skips via
+    /// [`Quantizer::quantize_for`]).
+    pub fn quantize_layer(
+        &self,
+        name: &str,
+        role: LayerRole,
+        w: &Tensor,
+    ) -> Result<(PackedTensor, QuantReport), QuantError> {
+        let cfg = self.plan.config_for(name, role);
+        let packed = quantize_packed(w, cfg)?;
+        let report = report_for(name, role, cfg, w, &packed);
+        Ok((packed, report))
+    }
+}
+
+/// One-shot pipeline for a single config (what [`Quantizer::quantize`]
+/// runs per layer): validates, quantizes codes, packs.
+pub fn quantize_packed(w: &Tensor, cfg: &QuantConfig) -> Result<PackedTensor, QuantError> {
+    validate_config(cfg)?;
+    if w.ndim() != 2 {
+        return Err(QuantError::NotMatrix { ndim: w.ndim() });
+    }
+    match cfg.scheme {
+        Scheme::Fp16 => Ok(pack_fp16_passthrough(w)),
+        Scheme::Int { bits } => Ok(pack_int(w, cfg.scheme, bits, cfg.granularity)),
+        _ => pack::pack(&sharing::quantize(w, cfg)?),
+    }
+}
+
+/// FP16 passthrough (the W16A16 baseline): raw half words, identity
+/// scales.
+fn pack_fp16_passthrough(w: &Tensor) -> PackedTensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut words = vec![0u16; rows * cols];
+    for (o, &x) in words.iter_mut().zip(w.data()) {
+        *o = f32_to_fp16(x);
+    }
+    PackedTensor {
+        scheme: Scheme::Fp16,
+        rows,
+        cols,
+        words,
+        row_stride: cols,
+        scales: vec![1.0; rows],
+        group_scales: None,
+    }
+}
+
+/// Symmetric integer RTN (INT4/INT8) at any granularity, stored
+/// offset-binary so the shared dequant-table machinery applies:
+/// `code = round(w/s) + 2^(b-1)`, `value = code - 2^(b-1)`,
+/// `s = amax / (2^(b-1) - 1)` per tensor / channel / group.
+fn pack_int(w: &Tensor, scheme: Scheme, bits: u32, gran: Granularity) -> PackedTensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let offset = 1i32 << (bits - 1);
+    let scales = compute_scales(w, qmax, gran);
+    let groups_per_row = match gran {
+        Granularity::PerGroup(g) => cols.div_ceil(g),
+        _ => 0,
+    };
+    let scale_at = |r: usize, c: usize| -> f32 {
+        match gran {
+            Granularity::PerTensor => scales[0],
+            Granularity::PerChannel => scales[r],
+            Granularity::PerGroup(g) => scales[r * groups_per_row + c / g],
+        }
+    };
+    let stride = pack::row_stride(scheme, cols);
+    let mut words = vec![0u16; rows * stride];
+    let mut codes = vec![0u16; cols];
+    for r in 0..rows {
+        let row = w.row(r);
+        for (c, &x) in row.iter().enumerate() {
+            let q = (x / scale_at(r, c)).round().clamp(-qmax, qmax) as i32;
+            codes[c] = (q + offset) as u16;
+        }
+        pack::pack_row(scheme, &codes, &mut words[r * stride..(r + 1) * stride]);
+    }
+    let (row_scales, group_scales) = match gran {
+        Granularity::PerTensor => (vec![scales[0]; rows], None),
+        Granularity::PerChannel => (scales, None),
+        Granularity::PerGroup(g) => (
+            vec![1.0; rows],
+            Some(GroupScales {
+                group_size: g,
+                groups_per_row,
+                scales,
+            }),
+        ),
+    };
+    PackedTensor {
+        scheme,
+        rows,
+        cols,
+        words,
+        row_stride: stride,
+        scales: row_scales,
+        group_scales,
+    }
+}
+
+/// Build the per-layer report: reconstruction metrics against the dense
+/// source plus the chosen-shared-bit census for AMS schemes.
+fn report_for(
+    name: &str,
+    role: LayerRole,
+    cfg: &QuantConfig,
+    w: &Tensor,
+    packed: &PackedTensor,
+) -> QuantReport {
+    let deq = packed.dequantize();
+    let (shared_ones, shared_groups) = match packed.scheme {
+        Scheme::Ams { k, .. } => {
+            let mut codes = vec![0u16; packed.cols];
+            let mut ones = 0usize;
+            let mut groups = 0usize;
+            for r in 0..packed.rows {
+                pack::unpack_row(packed.scheme, packed.row_words(r), packed.cols, &mut codes);
+                for c0 in (0..packed.cols).step_by(k) {
+                    ones += (codes[c0] & 1) as usize;
+                    groups += 1;
+                }
+            }
+            (ones, groups)
+        }
+        _ => (0, 0),
+    };
+    QuantReport {
+        layer: name.to_string(),
+        role,
+        scheme: packed.scheme,
+        granularity: cfg.granularity,
+        rows: packed.rows,
+        cols: packed.cols,
+        bits_per_weight: packed.bits_per_weight(),
+        payload_bytes: packed.payload_bytes(),
+        scale_bytes: packed.scale_bytes(),
+        scale_bits_per_weight: (packed.scale_bytes() * 8) as f64
+            / (packed.rows * packed.cols) as f64,
+        mse: metrics::mse(w, &deq),
+        sqnr_db: metrics::sqnr_db(w, &deq),
+        shared_ones,
+        shared_groups,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{SearchPolicy, SharePolicy};
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+
+    fn cfg(name: &str) -> QuantConfig {
+        QuantConfig::paper(Scheme::parse(name).unwrap())
+    }
+
+    fn rand_w(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng)
+    }
+
+    #[test]
+    fn plan_resolution_precedence() {
+        let plan = QuantPlan::builder(cfg("fp4.25"))
+            .role(LayerRole::Attention, cfg("fp6"))
+            .layer("layers.0.wq", cfg("fp8"))
+            .build()
+            .unwrap();
+        // Exact name wins over role.
+        assert_eq!(
+            plan.config_for("layers.0.wq", LayerRole::Attention).scheme,
+            Scheme::parse("fp8").unwrap()
+        );
+        // Role wins over default.
+        assert_eq!(
+            plan.config_for("layers.0.wk", LayerRole::Attention).scheme,
+            Scheme::parse("fp6").unwrap()
+        );
+        // Default otherwise.
+        assert_eq!(
+            plan.config_for("layers.0.w_gate", LayerRole::Mlp).scheme,
+            Scheme::parse("fp4.25").unwrap()
+        );
+        assert!(plan.has_role(LayerRole::Attention));
+        assert!(!plan.has_role(LayerRole::LmHead));
+    }
+
+    #[test]
+    fn builder_rejects_unpackable_configs() {
+        // Output-dim sharing cannot pack.
+        let mut bad = cfg("fp4.25");
+        bad.share_dim = crate::quant::ShareDim::Output;
+        assert!(matches!(
+            QuantPlan::uniform(bad),
+            Err(QuantError::UnpackableShareDim { .. })
+        ));
+        // Zero group size.
+        let bad = cfg("fp6").with_granularity(Granularity::PerGroup(0));
+        assert!(matches!(
+            QuantPlan::uniform(bad),
+            Err(QuantError::InvalidGroupSize { g: 0, .. })
+        ));
+        // FP16 has no scale grid to group.
+        let bad = cfg("fp16").with_granularity(Granularity::PerGroup(64));
+        assert!(matches!(
+            QuantPlan::uniform(bad),
+            Err(QuantError::UnsupportedScheme { .. })
+        ));
+        // A bad role override also fails the build.
+        let mut bad = cfg("fp6");
+        bad.share_dim = crate::quant::ShareDim::Output;
+        assert!(QuantPlan::builder(cfg("fp4.25"))
+            .role(LayerRole::Mlp, bad)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn pipeline_matches_legacy_two_step() {
+        // Quantizer output == pack(sharing::quantize(...)) for FP/AMS.
+        let w = rand_w(6, 50, 1);
+        for name in ["fp6-e2m3", "fp5.33", "fp4.25", "fp8"] {
+            let c = cfg(name);
+            let q = Quantizer::uniform(c).unwrap();
+            let a = q.quantize(&w).unwrap();
+            let b = pack::pack(&sharing::quantize(&w, &c).unwrap()).unwrap();
+            assert_eq!(a.words, b.words, "{name}");
+            assert_eq!(a.scales, b.scales, "{name}");
+        }
+    }
+
+    #[test]
+    fn non_matrix_rejected() {
+        let w = Tensor::zeros(&[4]);
+        assert!(matches!(
+            quantize_packed(&w, &cfg("fp6")),
+            Err(QuantError::NotMatrix { ndim: 1 })
+        ));
+    }
+
+    #[test]
+    fn int_per_group_beats_per_channel_on_outliers() {
+        let mut rng = Rng::new(3);
+        let mut w = init::gaussian(&[4, 128], 0.0, 0.02, &mut rng);
+        for c in (0..128).step_by(32) {
+            for r in 0..4 {
+                let v = w.at2(r, c) * 40.0;
+                w.set2(r, c, v);
+            }
+        }
+        let mse = |gran| {
+            let p = quantize_packed(&w, &cfg("int4").with_granularity(gran)).unwrap();
+            w.mse(&p.dequantize())
+        };
+        let pc = mse(Granularity::PerChannel);
+        let pg = mse(Granularity::PerGroup(32));
+        assert!(pg < pc, "per-group {pg} must beat per-channel {pc}");
+    }
+
+    #[test]
+    fn per_group_packed_dequantize_matches_codes_reference() {
+        // The packed per-group tensor must reconstruct exactly like the
+        // codes-level QuantizedTensor it came from.
+        for name in ["fp6-e2m3", "fp4.25", "fp5.33"] {
+            for g in [32usize, 64] {
+                let w = rand_w(3, 150, g as u64);
+                let c = cfg(name).with_granularity(Granularity::PerGroup(g));
+                let q = sharing::quantize(&w, &c).unwrap();
+                let packed = pack::pack(&q).unwrap();
+                let a = q.dequantize();
+                let b = packed.dequantize();
+                assert_eq!(a, b, "{name} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn report_tracks_quality_and_sharing() {
+        let w = rand_w(8, 96, 7);
+        let qz = Quantizer::uniform(cfg("fp4.25")).unwrap();
+        let (p, rep) = qz.quantize_layer("layers.0.wq", LayerRole::Attention, &w).unwrap();
+        assert_eq!(rep.layer, "layers.0.wq");
+        assert_eq!(rep.rows, 8);
+        assert_eq!(rep.cols, 96);
+        assert!((rep.bits_per_weight - 4.25).abs() < 0.1);
+        assert_eq!(rep.payload_bytes, p.payload_bytes());
+        assert_eq!(rep.shared_groups, 8 * 24); // k = 4
+        assert!(rep.shared_ones <= rep.shared_groups);
+        assert!(rep.mse > 0.0 && rep.sqnr_db > 5.0);
+        // More bits -> better SQNR in the report.
+        let (_, rep6) = Quantizer::uniform(cfg("fp6"))
+            .unwrap()
+            .quantize_layer("layers.0.wq", LayerRole::Attention, &w)
+            .unwrap();
+        assert!(rep6.sqnr_db > rep.sqnr_db);
+        assert_eq!(rep6.shared_groups, 0, "fp6 has no sharing groups");
+        // Scale-stream accounting: per-channel is 32/cols bits/weight;
+        // per-group adds 32/g on top (the tradeoff the report exposes).
+        assert!((rep.scale_bits_per_weight - 32.0 / 96.0).abs() < 1e-9);
+        let gq = Quantizer::uniform(cfg("fp4.25").with_granularity(Granularity::PerGroup(32)))
+            .unwrap();
+        let (gp, grep) = gq.quantize_layer("layers.0.wq", LayerRole::Attention, &w).unwrap();
+        assert_eq!(grep.scale_bytes, gp.scale_bytes());
+        assert!(
+            (grep.scale_bits_per_weight - (32.0 / 96.0 + 32.0 / 32.0)).abs() < 1e-9,
+            "got {}",
+            grep.scale_bits_per_weight
+        );
+        assert!(grep.scale_bits_per_weight > rep.scale_bits_per_weight);
+    }
+
+    #[test]
+    fn reround_and_search_policies_flow_through() {
+        // Pipeline honors the full QuantConfig, not just the scheme.
+        let w = rand_w(6, 72, 9);
+        let mut c = cfg("fp4.25");
+        c.share_policy = SharePolicy::Reround;
+        c.search_policy = SearchPolicy::AdaptiveMse;
+        let a = quantize_packed(&w, &c).unwrap();
+        c.search_policy = SearchPolicy::AlwaysZero;
+        let b = quantize_packed(&w, &c).unwrap();
+        assert!(
+            w.mse(&a.dequantize()) <= w.mse(&b.dequantize()) + 1e-15,
+            "adaptive must not lose to always-zero"
+        );
+    }
+
+    #[test]
+    fn fp16_and_int_flow_through_quantizer() {
+        let w = rand_w(4, 32, 11);
+        let p16 = quantize_packed(&w, &cfg("fp16")).unwrap();
+        assert_eq!(p16.scheme, Scheme::Fp16);
+        assert!(p16.scales.iter().all(|&s| s == 1.0));
+        let p8 = quantize_packed(&w, &cfg("int8")).unwrap();
+        assert!(crate::quant::metrics::sqnr_db(&w, &p8.dequantize()) > 30.0);
+    }
+}

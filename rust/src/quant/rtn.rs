@@ -2,29 +2,30 @@
 //! paper: `Q(W) = Round(W / s_q)`, `s_q = max|W| / M` with `M` the format's
 //! max-normal, applied per tensor / channel / group.
 
-use super::{Granularity, QuantizedTensor, ShareDim};
+use super::{Granularity, QuantError, QuantizedTensor, ShareDim};
 use crate::formats::registry::Scheme;
-use crate::formats::FpFormat;
 use crate::tensor::Tensor;
 
-/// Compute the scale for a slice of weights: `max|w| / M`. An all-zero
-/// slice gets scale 1.0 (any non-zero value works; codes will all be 0).
-pub fn scale_for_slice(w: impl Iterator<Item = f32>, max_normal: f32) -> f32 {
+/// Compute the scale for a slice of weights: `max|w| / M` with `M` the
+/// grid's largest representable magnitude (FPx max-normal, or `2^(b-1)-1`
+/// for INT). An all-zero slice gets scale 1.0 (any non-zero value works;
+/// codes will all be 0).
+pub fn scale_for_slice(w: impl Iterator<Item = f32>, max_mag: f32) -> f32 {
     let amax = w.fold(0.0f32, |m, x| m.max(x.abs()));
     if amax == 0.0 {
         1.0
     } else {
-        amax / max_normal
+        amax / max_mag
     }
 }
 
 /// Compute all scales for a [rows, cols] tensor under a granularity.
-pub fn compute_scales(w: &Tensor, fmt: FpFormat, gran: Granularity) -> Vec<f32> {
-    let maxn = fmt.max_normal();
+/// `max_mag` is the grid's largest representable magnitude.
+pub fn compute_scales(w: &Tensor, max_mag: f32, gran: Granularity) -> Vec<f32> {
     match gran {
-        Granularity::PerTensor => vec![scale_for_slice(w.data().iter().copied(), maxn)],
+        Granularity::PerTensor => vec![scale_for_slice(w.data().iter().copied(), max_mag)],
         Granularity::PerChannel => (0..w.rows())
-            .map(|r| scale_for_slice(w.row(r).iter().copied(), maxn))
+            .map(|r| scale_for_slice(w.row(r).iter().copied(), max_mag))
             .collect(),
         Granularity::PerGroup(g) => {
             assert!(g > 0);
@@ -33,7 +34,7 @@ pub fn compute_scales(w: &Tensor, fmt: FpFormat, gran: Granularity) -> Vec<f32> 
             for r in 0..w.rows() {
                 let row = w.row(r);
                 for chunk in row.chunks(g) {
-                    scales.push(scale_for_slice(chunk.iter().copied(), maxn));
+                    scales.push(scale_for_slice(chunk.iter().copied(), max_mag));
                 }
             }
             scales
@@ -42,13 +43,23 @@ pub fn compute_scales(w: &Tensor, fmt: FpFormat, gran: Granularity) -> Vec<f32> 
 }
 
 /// RTN-quantize a [rows, cols] weight tensor to FPx codes (no sharing yet).
-pub fn quantize_rtn(w: &Tensor, scheme: Scheme, gran: Granularity) -> QuantizedTensor {
-    let fmt = scheme
-        .fp_format()
-        .expect("quantize_rtn requires a floating-point scheme");
-    assert_eq!(w.ndim(), 2, "quantize_rtn expects [out_channels, in_channels]");
+pub fn quantize_rtn(
+    w: &Tensor,
+    scheme: Scheme,
+    gran: Granularity,
+) -> Result<QuantizedTensor, QuantError> {
+    let fmt = scheme.fp_format().ok_or(QuantError::UnsupportedScheme {
+        scheme,
+        reason: "RTN-to-FPx needs a floating-point scheme (Fp16/Int go through the Quantizer)",
+    })?;
+    if w.ndim() != 2 {
+        return Err(QuantError::NotMatrix { ndim: w.ndim() });
+    }
+    if let Granularity::PerGroup(0) = gran {
+        return Err(QuantError::InvalidGroupSize { g: 0, reason: "must be positive" });
+    }
     let (rows, cols) = (w.rows(), w.cols());
-    let scales = compute_scales(w, fmt, gran);
+    let scales = compute_scales(w, fmt.max_normal(), gran);
     let mut codes = vec![0u16; rows * cols];
 
     let scale_at = |r: usize, c: usize| -> f32 {
@@ -67,7 +78,7 @@ pub fn quantize_rtn(w: &Tensor, scheme: Scheme, gran: Granularity) -> QuantizedT
         }
     }
 
-    QuantizedTensor {
+    Ok(QuantizedTensor {
         fmt,
         scheme,
         rows,
@@ -77,7 +88,7 @@ pub fn quantize_rtn(w: &Tensor, scheme: Scheme, gran: Granularity) -> QuantizedT
         scales,
         shared_bits: Vec::new(),
         share_dim: ShareDim::Input,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -94,9 +105,9 @@ mod tests {
     #[test]
     fn scale_is_amax_over_maxnormal() {
         let w = Tensor::from_vec(&[2, 3], vec![1.0, -3.0, 0.5, 0.25, 0.1, -0.2]);
-        let scales = compute_scales(&w, FpFormat::E2M3, Granularity::PerChannel);
+        let scales = compute_scales(&w, 7.5, Granularity::PerChannel);
         assert_eq!(scales, vec![3.0 / 7.5, 0.25 / 7.5]);
-        let st = compute_scales(&w, FpFormat::E2M3, Granularity::PerTensor);
+        let st = compute_scales(&w, 7.5, Granularity::PerTensor);
         assert_eq!(st, vec![3.0 / 7.5]);
     }
 
@@ -104,7 +115,7 @@ mod tests {
     fn max_value_maps_to_max_code() {
         // The channel max must quantize exactly to ±max_normal * s.
         let w = Tensor::from_vec(&[1, 4], vec![0.1, -2.0, 0.7, 1.3]);
-        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel).unwrap();
         let dq = q.dequantize();
         assert!((dq.at2(0, 1) - (-2.0)).abs() < 1e-6);
     }
@@ -112,7 +123,7 @@ mod tests {
     #[test]
     fn zero_tensor_roundtrips() {
         let w = Tensor::zeros(&[3, 5]);
-        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel).unwrap();
         assert_eq!(q.dequantize(), w);
     }
 
@@ -122,7 +133,7 @@ mod tests {
         // globally it is bounded by s * (max step) / 2.
         let mut rng = Rng::new(9);
         let w = init::gaussian(&[8, 64], 0.0, 0.02, &mut rng);
-        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        let q = quantize_rtn(&w, fp6(), Granularity::PerChannel).unwrap();
         let dq = q.dequantize();
         for r in 0..8 {
             let s = q.scales[r];
@@ -144,9 +155,9 @@ mod tests {
         // Quantizing an already-dequantized tensor is exact (same grid).
         let mut rng = Rng::new(10);
         let w = init::gaussian(&[4, 32], 0.0, 1.0, &mut rng);
-        let q1 = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+        let q1 = quantize_rtn(&w, fp6(), Granularity::PerChannel).unwrap();
         let d1 = q1.dequantize();
-        let q2 = quantize_rtn(&d1, fp6(), Granularity::PerChannel);
+        let q2 = quantize_rtn(&d1, fp6(), Granularity::PerChannel).unwrap();
         let d2 = q2.dequantize();
         assert!(d1.max_abs_diff(&d2) < 1e-6);
     }
@@ -155,7 +166,7 @@ mod tests {
     fn per_group_scales_shape() {
         let mut rng = Rng::new(11);
         let w = init::gaussian(&[3, 10], 0.0, 1.0, &mut rng);
-        let q = quantize_rtn(&w, fp6(), Granularity::PerGroup(4));
+        let q = quantize_rtn(&w, fp6(), Granularity::PerGroup(4)).unwrap();
         assert_eq!(q.scales.len(), 3 * 3); // ceil(10/4) = 3 groups per row
         let dq = q.dequantize();
         assert!(w.mse(&dq) < 0.02);
@@ -173,13 +184,13 @@ mod tests {
                 w.set2(r, c, v);
             }
         }
-        let mt = quantize_rtn(&w, fp6(), Granularity::PerTensor)
+        let mt = quantize_rtn(&w, fp6(), Granularity::PerTensor).unwrap()
             .dequantize()
             .mse(&w);
-        let mc = quantize_rtn(&w, fp6(), Granularity::PerChannel)
+        let mc = quantize_rtn(&w, fp6(), Granularity::PerChannel).unwrap()
             .dequantize()
             .mse(&w);
-        let mg = quantize_rtn(&w, fp6(), Granularity::PerGroup(16))
+        let mg = quantize_rtn(&w, fp6(), Granularity::PerGroup(16)).unwrap()
             .dequantize()
             .mse(&w);
         assert!(mc <= mt * 1.001, "channel {mc} vs tensor {mt}");
@@ -202,7 +213,7 @@ mod tests {
                 let cols = v.len();
                 let w = Tensor::from_vec(&[1, cols], v.clone());
                 let amax = w.abs_max();
-                let q = quantize_rtn(&w, fp6(), Granularity::PerChannel);
+                let q = quantize_rtn(&w, fp6(), Granularity::PerChannel).unwrap();
                 let dq = q.dequantize();
                 for (i, &x) in dq.data().iter().enumerate() {
                     if x.abs() > amax * (1.0 + 1e-6) {
@@ -220,7 +231,7 @@ mod tests {
         let mut rng = Rng::new(13);
         let w = init::gaussian(&[8, 128], 0.0, 0.02, &mut rng);
         let mse = |name: &str| {
-            quantize_rtn(&w, Scheme::parse(name).unwrap(), Granularity::PerChannel)
+            quantize_rtn(&w, Scheme::parse(name).unwrap(), Granularity::PerChannel).unwrap()
                 .dequantize()
                 .mse(&w)
         };

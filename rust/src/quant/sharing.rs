@@ -11,7 +11,7 @@
 //! re-rounds to the nearest code with that LSB (`Reround`, ablation A1).
 
 use super::rtn::quantize_rtn;
-use super::{QuantConfig, QuantizedTensor, SearchPolicy, ShareDim, SharePolicy};
+use super::{QuantConfig, QuantError, QuantizedTensor, SearchPolicy, ShareDim, SharePolicy};
 use crate::formats::registry::Scheme;
 use crate::formats::FpFormat;
 use crate::tensor::Tensor;
@@ -140,17 +140,24 @@ pub fn apply_sharing(q: &mut QuantizedTensor, w: &Tensor, k: usize, cfg: &QuantC
     q.share_dim = cfg.share_dim;
 }
 
-/// Full AMS pipeline: channel-wise RTN then sharing (if the scheme is AMS).
-/// Plain FP schemes just RTN. Panics on `Fp16`/`Int` (handled elsewhere).
-pub fn quantize(w: &Tensor, cfg: &QuantConfig) -> QuantizedTensor {
+/// Codes-level AMS pipeline: RTN then sharing (if the scheme is AMS);
+/// plain FP schemes just RTN. This is the quantization step the
+/// [`Quantizer`](super::Quantizer) drives before packing — call it
+/// directly for MSE/ablation studies that stop at codes. `Fp16`/`Int`
+/// have no FPx code grid and surface [`QuantError::UnsupportedScheme`]
+/// (the `Quantizer` serves them through their own packed paths).
+pub fn quantize(w: &Tensor, cfg: &QuantConfig) -> Result<QuantizedTensor, QuantError> {
     match cfg.scheme {
         Scheme::Fp(_) => quantize_rtn(w, cfg.scheme, cfg.granularity),
         Scheme::Ams { k, .. } => {
-            let mut q = quantize_rtn(w, cfg.scheme, cfg.granularity);
+            let mut q = quantize_rtn(w, cfg.scheme, cfg.granularity)?;
             apply_sharing(&mut q, w, k, cfg);
-            q
+            Ok(q)
         }
-        other => panic!("quantize() does not handle {other:?}"),
+        scheme => Err(QuantError::UnsupportedScheme {
+            scheme,
+            reason: "codes-level quantization needs an FPx grid (use the Quantizer)",
+        }),
     }
 }
 
@@ -175,7 +182,7 @@ mod tests {
         let w = rand_w(4, 33, 1); // 33 -> tail group of len 3 for k=3... 33%3=0; use 32
         let w = Tensor::from_vec(&[4, 33], w.into_vec());
         let c = cfg("fp5.33");
-        let q = quantize(&w, &c);
+        let q = quantize(&w, &c).unwrap();
         // Every group of k=3 along the row shares one LSB.
         for r in 0..4 {
             for c0 in (0..33).step_by(3) {
@@ -194,13 +201,13 @@ mod tests {
         for scheme in ["fp5.33", "fp4.25", "fp4.5"] {
             let mut c = cfg(scheme);
             c.search_policy = SearchPolicy::AdaptiveMse;
-            let adaptive = quantize(&w, &c).dequantize().mse(&w);
+            let adaptive = quantize(&w, &c).unwrap().dequantize().mse(&w);
             c.search_policy = SearchPolicy::AlwaysZero;
-            let zero = quantize(&w, &c).dequantize().mse(&w);
+            let zero = quantize(&w, &c).unwrap().dequantize().mse(&w);
             c.search_policy = SearchPolicy::AlwaysOne;
-            let one = quantize(&w, &c).dequantize().mse(&w);
+            let one = quantize(&w, &c).unwrap().dequantize().mse(&w);
             c.search_policy = SearchPolicy::Majority;
-            let maj = quantize(&w, &c).dequantize().mse(&w);
+            let maj = quantize(&w, &c).unwrap().dequantize().mse(&w);
             assert!(adaptive <= zero + 1e-15, "{scheme}: {adaptive} vs zero {zero}");
             assert!(adaptive <= one + 1e-15, "{scheme}: {adaptive} vs one {one}");
             assert!(adaptive <= maj + 1e-15, "{scheme}: {adaptive} vs majority {maj}");
@@ -213,9 +220,9 @@ mod tests {
         for scheme in ["fp5.33", "fp4.25"] {
             let mut c = cfg(scheme);
             c.share_policy = SharePolicy::SetLsb;
-            let setlsb = quantize(&w, &c).dequantize().mse(&w);
+            let setlsb = quantize(&w, &c).unwrap().dequantize().mse(&w);
             c.share_policy = SharePolicy::Reround;
-            let reround = quantize(&w, &c).dequantize().mse(&w);
+            let reround = quantize(&w, &c).unwrap().dequantize().mse(&w);
             assert!(reround <= setlsb + 1e-15, "{scheme}: reround {reround} vs setlsb {setlsb}");
         }
     }
@@ -226,11 +233,11 @@ mod tests {
         //   mse(fp6) <= mse(fp5.33) <= mse(fp5)-ish. The right inequality is
         // statistical, the left is strict (sharing only removes precision).
         let w = rand_w(16, 192, 4);
-        let m_fp6 = quantize(&w, &cfg("fp6-e2m3")).dequantize().mse(&w);
-        let m_533 = quantize(&w, &cfg("fp5.33")).dequantize().mse(&w);
-        let m_fp5 = quantize(&w, &cfg("fp5-e2m2")).dequantize().mse(&w);
-        let m_425 = quantize(&w, &cfg("fp4.25")).dequantize().mse(&w);
-        let m_fp4 = quantize(&w, &cfg("fp4-e2m1")).dequantize().mse(&w);
+        let m_fp6 = quantize(&w, &cfg("fp6-e2m3")).unwrap().dequantize().mse(&w);
+        let m_533 = quantize(&w, &cfg("fp5.33")).unwrap().dequantize().mse(&w);
+        let m_fp5 = quantize(&w, &cfg("fp5-e2m2")).unwrap().dequantize().mse(&w);
+        let m_425 = quantize(&w, &cfg("fp4.25")).unwrap().dequantize().mse(&w);
+        let m_fp4 = quantize(&w, &cfg("fp4-e2m1")).unwrap().dequantize().mse(&w);
         assert!(m_fp6 <= m_533, "fp6 {m_fp6} vs fp5.33 {m_533}");
         assert!(m_533 <= m_fp5 * 1.5, "fp5.33 {m_533} vs fp5 {m_fp5}");
         assert!(m_fp5 <= m_425, "fp5 {m_fp5} vs fp4.25 {m_425}");
@@ -264,7 +271,7 @@ mod tests {
         let w = rand_w(9, 5, 6);
         let mut c = cfg("fp4.25"); // k = 4
         c.share_dim = ShareDim::Output;
-        let q = quantize(&w, &c);
+        let q = quantize(&w, &c).unwrap();
         assert_eq!(q.shared_bits.len(), 9usize.div_ceil(4) * 5);
         // Groups run down columns.
         for c0 in 0..5 {
@@ -281,7 +288,7 @@ mod tests {
     fn tail_groups_handled() {
         // cols=7, k=4 -> groups of 4 and 3 per row.
         let w = rand_w(2, 7, 7);
-        let q = quantize(&w, &cfg("fp4.25"));
+        let q = quantize(&w, &cfg("fp4.25")).unwrap();
         assert_eq!(q.shared_bits.len(), 2 * 2);
         let dq = q.dequantize();
         assert_eq!(dq.shape(), &[2, 7]);
@@ -290,8 +297,8 @@ mod tests {
     #[test]
     fn deterministic() {
         let w = rand_w(4, 24, 8);
-        let a = quantize(&w, &cfg("fp5.33"));
-        let b = quantize(&w, &cfg("fp5.33"));
+        let a = quantize(&w, &cfg("fp5.33")).unwrap();
+        let b = quantize(&w, &cfg("fp5.33")).unwrap();
         assert_eq!(a.codes, b.codes);
         assert_eq!(a.shared_bits, b.shared_bits);
     }
@@ -331,7 +338,7 @@ mod tests {
         // RTN codes: 15(7.0), 13(5.0), 9(2.5), 9(2.5); LSBs = 1,1,1,1.
         // m0=1 gives zero extra error -> adaptive must pick 1 and stay exact.
         let w = Tensor::from_vec(&[1, 4], vec![7.0, 5.0, 2.5, 2.5]);
-        let q = quantize(&w, &cfg("fp4.25"));
+        let q = quantize(&w, &cfg("fp4.25")).unwrap();
         assert_eq!(q.shared_bits, vec![1]);
         assert_eq!(q.dequantize().data(), &[7.0, 5.0, 2.5, 2.5]);
     }

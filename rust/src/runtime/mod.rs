@@ -133,8 +133,8 @@ mod tests {
     fn u32_repack_layout() {
         let mut rng = Rng::new(1);
         let w = init::gaussian(&[2, 6], 0.0, 0.02, &mut rng);
-        let q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
-        let p = crate::pack::pack(&q);
+        let q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap();
+        let p = crate::pack::pack(&q).unwrap();
         assert_eq!(p.row_stride, 2);
         let u = pack_words_u32(&p);
         assert_eq!(u.len(), 2); // 2 rows x ceil(2/2)=1 u32 each
@@ -146,8 +146,8 @@ mod tests {
     fn odd_stride_zero_padded() {
         let mut rng = Rng::new(2);
         let w = init::gaussian(&[1, 9], 0.0, 0.02, &mut rng);
-        let q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
-        let p = crate::pack::pack(&q);
+        let q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap();
+        let p = crate::pack::pack(&q).unwrap();
         assert_eq!(p.row_stride, 3);
         let u = pack_words_u32(&p);
         assert_eq!(u.len(), 2);

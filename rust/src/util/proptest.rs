@@ -236,7 +236,7 @@ mod tests {
     fn fused_gemm_matches_reference() {
         use crate::formats::registry::Scheme;
         use crate::gemm::{GemmScratch, QuantLinear};
-        use crate::quant::sharing::quantize;
+        use crate::quant::pipeline::quantize_packed;
         use crate::quant::QuantConfig;
         use crate::tensor::init;
 
@@ -257,13 +257,7 @@ mod tests {
                 let scheme = Scheme::parse(SCHEMES[si]).unwrap();
                 let mut rng = Rng::new((si * 100_000 + rows * 10_000 + cols * 100 + batch) as u64);
                 let w = init::gaussian(&[rows, cols], 0.0, 0.02, &mut rng);
-                let packed = if scheme == Scheme::Fp16 {
-                    crate::baselines::pack_fp16(&w)
-                } else if matches!(scheme, Scheme::Int { .. }) {
-                    crate::baselines::quantize_int(&w, scheme)
-                } else {
-                    crate::pack::pack(&quantize(&w, &QuantConfig::paper(scheme)))
-                };
+                let packed = quantize_packed(&w, &QuantConfig::paper(scheme)).unwrap();
                 let lin = QuantLinear::new(packed);
                 let x = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
                 let mut scratch = GemmScratch::new();
@@ -279,6 +273,78 @@ mod tests {
                                 y.at2(b, r),
                                 yref[r]
                             ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property (satellite): fused GEMV *and* GEMM over a `PerGroup(g)`
+    /// `PackedTensor` match the `dequantize` oracle for every grouped
+    /// scheme, g ∈ {32, 64, 128}, ragged shapes and batch widths, with a
+    /// reused scratch and with pool-parallel execution identical to
+    /// serial.
+    #[test]
+    fn per_group_fused_matches_dequantize() {
+        use crate::formats::registry::Scheme;
+        use crate::gemm::{GemmScratch, QuantLinear};
+        use crate::quant::pipeline::quantize_packed;
+        use crate::quant::{Granularity, QuantConfig};
+        use crate::tensor::init;
+
+        use crate::gemm::GROUPED_TEST_SCHEMES as SCHEMES;
+        const GROUPS: [usize; 3] = [32, 64, 128];
+        let strat = Pair(
+            USize { lo: 0, hi: SCHEMES.len() - 1 },
+            Pair(
+                USize { lo: 0, hi: GROUPS.len() - 1 },
+                Pair(USize { lo: 1, hi: 150 }, USize { lo: 1, hi: 10 }), // cols, batch
+            ),
+        );
+        // One scratch reused across every case (run_prop takes Fn, so the
+        // reuse goes through a RefCell).
+        let scratch = std::cell::RefCell::new(GemmScratch::new());
+        run_prop(
+            "per-group-fused-matches-dequantize",
+            0x6409,
+            20,
+            &strat,
+            |&(si, (gi, (cols, batch)))| {
+                let g = GROUPS[gi];
+                let rows = 6usize;
+                let cfg = QuantConfig::paper(Scheme::parse(SCHEMES[si]).unwrap())
+                    .with_granularity(Granularity::PerGroup(g));
+                let mut rng = Rng::new((si * 1_000_000 + g * 1_000 + cols * 16 + batch) as u64);
+                let w = init::gaussian(&[rows, cols], 0.0, 0.05, &mut rng);
+                let lin = QuantLinear::new(quantize_packed(&w, &cfg).unwrap());
+                let deq = lin.packed.dequantize();
+                let x = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
+                let mut scratch2 = GemmScratch::new();
+                let y = lin.gemm_with(&x, &mut scratch2);
+                let y2 = lin.gemm_with(&x, &mut scratch.borrow_mut());
+                if y != y2 {
+                    return Err(format!("{} g={g}: scratch reuse diverged", SCHEMES[si]));
+                }
+                let yp = lin.gemm_parallel(&x, 4);
+                if y != yp {
+                    return Err(format!("{} g={g}: parallel != serial", SCHEMES[si]));
+                }
+                for b in 0..batch {
+                    let mut yv = vec![0f32; rows];
+                    lin.gemv_with(x.row(b), &mut yv, &mut scratch2);
+                    for r in 0..rows {
+                        let want: f32 =
+                            deq.row(r).iter().zip(x.row(b)).map(|(&a, &v)| a * v).sum();
+                        for (label, got) in [("gemm", y.at2(b, r)), ("gemv", yv[r])] {
+                            if (got - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                                return Err(format!(
+                                    "{} g={g} cols={cols} batch={batch} {label} b={b} r={r}: \
+                                     {got} vs {want}",
+                                    SCHEMES[si]
+                                ));
+                            }
                         }
                     }
                 }

@@ -40,7 +40,7 @@ fn quantized_serving_end_to_end() {
     // Quantize to fp4.25 and serve through scheduler: outputs must stay
     // close to the dense model's (quality) and all requests complete.
     let base = model();
-    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()));
+    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap())).unwrap();
     let mut sched = Scheduler::new(q, BatchPolicy { max_batch: 4, eos: None }, 1);
     for id in 0..6u64 {
         sched.admit(GenRequest::greedy(id, vec![1 + id as u32, 2, 3], 5));
@@ -58,7 +58,9 @@ fn kl_ordering_holds_end_to_end() {
     let tokens: Vec<u32> = (0..240).map(|i| (i * 13 % 64) as u32).collect();
     let trace = reference_trace(&base, &tokens, 60);
     let kl_of = |name: &str| {
-        let q = base.quantized(&QuantConfig::paper(Scheme::parse(name).unwrap()));
+        let q = base
+            .quantized(&QuantConfig::paper(Scheme::parse(name).unwrap()))
+            .unwrap();
         evaluate_against_reference(&q, &trace).1
     };
     let kl6 = kl_of("fp6");
@@ -73,7 +75,7 @@ fn kl_ordering_holds_end_to_end() {
 #[test]
 fn engine_with_quantized_replicas() {
     let base = model();
-    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap();
     for dispatch in [DispatchPolicy::LeastOutstanding, DispatchPolicy::RoundRobin] {
         let eng = Engine::builder()
             .replicas(2)
@@ -116,7 +118,7 @@ fn context_overflow_retires_gracefully() {
 fn serving_stress_mixed_lengths() {
     // 50 requests with heterogeneous prompt/generation lengths through
     // the engine: all complete, latencies recorded, counts add up.
-    let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()));
+    let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap();
     let eng = Engine::builder().max_batch(4).seed(5).build(base);
     let mut expected_tokens = 0usize;
     let mut handles = Vec::new();
@@ -152,7 +154,7 @@ fn engine_streaming_cancel_backpressure_end_to_end() {
     // token-by-token, cancel another mid-flight, and drive the bounded
     // queue into backpressure.
     use ams_quant::coordinator::{EngineError, Event};
-    let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()));
+    let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap())).unwrap();
     let eng = Engine::builder()
         .max_batch(1)
         .queue_capacity(2)
@@ -209,11 +211,55 @@ fn engine_streaming_cancel_backpressure_end_to_end() {
     assert!(stats.cancelled >= 1, "the victim was cancelled");
 }
 
+/// The full production shape end to end: build a mixed-precision
+/// per-group plan, quantize offline, export to AMSQ, reload in a fresh
+/// "serving process", and stream generations through the Engine — greedy
+/// outputs identical to serving the in-memory quantized model.
+#[test]
+fn offline_quantize_export_serve_end_to_end() {
+    use ams_quant::model::checkpoint::{load_quantized, save_quantized};
+    use ams_quant::quant::{Granularity, LayerRole, QuantPlan, Quantizer};
+    let base = model();
+    let plan = QuantPlan::builder(
+        QuantConfig::paper(Scheme::parse("fp4.25").unwrap())
+            .with_granularity(Granularity::PerGroup(32)),
+    )
+    .role(
+        LayerRole::Attention,
+        QuantConfig::paper(Scheme::parse("fp6").unwrap())
+            .with_granularity(Granularity::PerGroup(32)),
+    )
+    .role(LayerRole::LmHead, QuantConfig::paper(Scheme::parse("fp8").unwrap()))
+    .build()
+    .unwrap();
+    let (q, reports) = base.quantized_report(&Quantizer::new(plan)).unwrap();
+    assert_eq!(reports.len(), base.cfg.n_layers * 7 + 1);
+
+    let dir = std::env::temp_dir().join("ams_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("offline.amsq");
+    save_quantized(&q, &path).unwrap();
+    let served = load_quantized(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let run = |m: Transformer| -> Vec<Vec<u32>> {
+        let eng = Engine::builder().max_batch(3).seed(11).build(m);
+        let handles: Vec<RequestHandle> = (0..5u64)
+            .map(|id| eng.submit(GenRequest::greedy(id, vec![1 + id as u32, 2], 6)).unwrap())
+            .collect();
+        let mut out: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        out.sort_by_key(|r| r.id);
+        eng.shutdown();
+        out.into_iter().map(|r| r.tokens).collect()
+    };
+    assert_eq!(run(q), run(served), "reloaded model serves identical tokens");
+}
+
 #[test]
 fn packed_model_memory_budget() {
     // FP4.25 projections must land within 5% of the nominal 4.25/16 ratio.
     let base = model();
-    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap()));
+    let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap())).unwrap();
     let ratio = q.projection_bytes() as f64 / base.projection_bytes() as f64;
     let nominal = 4.25 / 16.0;
     assert!(
