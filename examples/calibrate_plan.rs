@@ -1,0 +1,69 @@
+//! Calibration walkthrough: stream a corpus through the dense model
+//! with activation taps, search a mixed-precision `QuantPlan` under a
+//! bits/weight budget, and compare it end-to-end against the uniform
+//! FP5.33 plan it replaces.
+//!
+//! Run: `cargo run --release --example calibrate_plan`
+
+use ams_quant::calib::{CalibConfig, Calibrator};
+use ams_quant::formats::registry::Scheme;
+use ams_quant::model::synthetic::synthetic_checkpoint;
+use ams_quant::model::transformer::Transformer;
+use ams_quant::model::ModelConfig;
+use ams_quant::quant::{QuantConfig, Quantizer};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The dense reference model (stand-in for a real checkpoint).
+    let ck = synthetic_checkpoint(&ModelConfig::tiny_lm(), 7);
+    let base = Transformer::from_checkpoint(&ck)?;
+    let dense_params = base.projection_bytes() / 2;
+
+    // 2. The baseline the search has to beat: uniform FP5.33 everywhere.
+    let uniform = base.quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap()))?;
+    let ubits = ((uniform.projection_bytes() + uniform.projection_scale_bytes()) * 8) as f64
+        / dense_params as f64;
+    println!("uniform fp5.33: {ubits:.3} bits/w (payload + scales)");
+
+    // 3. Calibrate under that same budget: taps -> activation-weighted
+    //    sensitivity per layer -> greedy budgeted search.
+    let cal = Calibrator::new(CalibConfig {
+        budget_bits: ubits,
+        calib_tokens: 2048,
+        window: 128,
+        seed: 1,
+        ..CalibConfig::default()
+    });
+    let corpus = cal.synthetic_corpus(base.cfg.vocab_size);
+    let (plan, report) = cal.calibrate(&base, &corpus)?;
+    println!("{}", report.table().to_console());
+    println!(
+        "searched: {:.3} bits/w (budget {:.3}, {}), act-SQNR {:.2} dB",
+        report.achieved_bits,
+        report.budget_bits,
+        if report.budget_met { "met" } else { "NOT met" },
+        report.act_sqnr_db
+    );
+
+    // 4. End-to-end check on a probe stream: logit error vs dense.
+    let searched = base.quantized_with(&Quantizer::new(plan))?;
+    let probe: Vec<u32> = (0..120u32).map(|i| (i * 31 + 5) % base.cfg.vocab_size as u32).collect();
+    let noise = |q: &Transformer| -> f64 {
+        let mut cd = base.new_cache();
+        let mut cq = q.new_cache();
+        let mut n = 0f64;
+        for (pos, &t) in probe.iter().enumerate() {
+            let ld = base.forward(t, pos, &mut cd);
+            let lq = q.forward(t, pos, &mut cq);
+            n += ld.iter().zip(&lq).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum::<f64>();
+        }
+        n
+    };
+    let (ns, nu) = (noise(&searched), noise(&uniform));
+    println!("logit sq-error vs dense: searched {ns:.3e}  uniform fp5.33 {nu:.3e}");
+    println!(
+        "searched plan is {:.2}x {} at equal bits",
+        (nu / ns).max(ns / nu),
+        if ns <= nu { "better" } else { "worse" }
+    );
+    Ok(())
+}

@@ -1,0 +1,299 @@
+//! Calibration subsystem: activation-aware sensitivity analysis and
+//! automatic [`QuantPlan`] search — the data-driven layer between the
+//! quantization pipeline and the model.
+//!
+//! The paper's Adaptive Searching optimizes *which mantissa bit each
+//! group shares*; this module optimizes *which format each layer gets*.
+//! The flow (`calibrate` CLI, `quantize --auto-plan`, or this API):
+//!
+//! 1. [`Calibrator::collect`] streams a calibration corpus through the
+//!    dense reference model via
+//!    [`Transformer::forward_prefill_tapped`](crate::model::transformer::Transformer::forward_prefill_tapped),
+//!    accumulating per-channel activation moments at every projection
+//!    input ([`stats`]) — running statistics only, no activation storage.
+//! 2. [`sensitivity`] scores every candidate [`QuantConfig`] per layer by
+//!    *output-space* noise against those activations
+//!    (`Σ ΔW² · E[x²]`), replacing weight-space MSE as the ranking
+//!    signal — a layer only earns bits if its quantization error is
+//!    amplified by what it actually sees at inference time.
+//! 3. [`search`] runs a greedy marginal-ratio descent under a global
+//!    bits-per-weight budget (e.g. `--budget-bits 5.0`), with a uniform
+//!    fallback so the result never loses to any feasible uniform plan on
+//!    the calibration objective.
+//! 4. [`report`] serializes the whole decision as a [`CalibReport`]
+//!    (JSON), converts it to a ready-to-use [`QuantPlan`], and emits the
+//!    provenance blob AMSQ checkpoints embed.
+
+pub mod report;
+pub mod search;
+pub mod sensitivity;
+pub mod stats;
+
+pub use report::{CalibReport, CandidateSummary, LayerChoice};
+pub use search::{search_plan, SearchOutcome};
+pub use sensitivity::{score_layer, score_model, CandidateScore, LayerSensitivity};
+pub use stats::{ActivationStats, LayerTaps, ModelTaps};
+
+use crate::formats::registry::Scheme;
+use crate::model::transformer::Transformer;
+use crate::quant::{QuantConfig, QuantError, QuantPlan};
+use crate::util::prng::Rng;
+
+/// Why a calibration run was rejected.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CalibError {
+    /// A candidate failed the quantization pipeline.
+    Quant(QuantError),
+    /// The calibration corpus is empty (or shorter than one position).
+    EmptyCorpus,
+    /// The corpus contains a token id the model's embedding cannot look
+    /// up — caught up front so a mismatched corpus/checkpoint pair
+    /// errors cleanly instead of panicking mid-prefill.
+    TokenOutOfVocab { token: u32, vocab: usize },
+    /// Calibration needs the dense reference model; this projection is
+    /// already packed.
+    NotDense { layer: String },
+}
+
+impl std::fmt::Display for CalibError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CalibError::Quant(e) => write!(f, "candidate quantization failed: {e}"),
+            CalibError::EmptyCorpus => write!(f, "calibration corpus is empty"),
+            CalibError::TokenOutOfVocab { token, vocab } => write!(
+                f,
+                "corpus token {token} exceeds the model vocab ({vocab}); \
+                 the corpus does not match this checkpoint"
+            ),
+            CalibError::NotDense { layer } => write!(
+                f,
+                "layer '{layer}' is already quantized; calibration needs the dense reference model"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CalibError {}
+
+impl From<QuantError> for CalibError {
+    fn from(e: QuantError) -> CalibError {
+        CalibError::Quant(e)
+    }
+}
+
+/// The default candidate ladder: the paper's format vocabulary from FP4
+/// up to FP8, all at per-channel scales with paper policies.
+pub fn default_candidates() -> Vec<QuantConfig> {
+    ["fp4", "fp4.25", "fp4.33", "fp4.5", "fp5", "fp5.33", "fp6", "fp8"]
+        .iter()
+        .map(|s| QuantConfig::paper(Scheme::parse(s).expect("known scheme")))
+        .collect()
+}
+
+/// Calibration parameters.
+#[derive(Clone, Debug)]
+pub struct CalibConfig {
+    /// Global parameter-weighted bits/weight ceiling (scale streams
+    /// included) the searched plan must respect.
+    pub budget_bits: f64,
+    /// Cap on corpus tokens streamed through the taps.
+    pub calib_tokens: usize,
+    /// Prefill window length (clamped to the model context).
+    pub window: usize,
+    /// Recorded in the report; drives [`Calibrator::synthetic_corpus`].
+    pub seed: u64,
+    /// Also score and budget the lm_head (default: leave it dense).
+    pub include_lm_head: bool,
+    /// Candidate configs per layer (default: [`default_candidates`]).
+    pub candidates: Vec<QuantConfig>,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig {
+            budget_bits: 5.0,
+            calib_tokens: 4096,
+            window: 128,
+            seed: 0,
+            include_lm_head: false,
+            candidates: default_candidates(),
+        }
+    }
+}
+
+/// The calibration driver: corpus → taps → sensitivity → searched plan.
+///
+/// Fully deterministic: the same model, corpus and config produce a
+/// bit-identical [`CalibReport`] and [`QuantPlan`] (pinned by tests).
+#[derive(Clone, Debug)]
+pub struct Calibrator {
+    cfg: CalibConfig,
+}
+
+impl Calibrator {
+    pub fn new(cfg: CalibConfig) -> Calibrator {
+        Calibrator { cfg }
+    }
+
+    pub fn config(&self) -> &CalibConfig {
+        &self.cfg
+    }
+
+    /// A deterministic synthetic calibration stream for models without a
+    /// held-out corpus (seeded from the config).
+    pub fn synthetic_corpus(&self, vocab_size: usize) -> Vec<u32> {
+        let mut rng = Rng::new(self.cfg.seed);
+        (0..self.cfg.calib_tokens)
+            .map(|_| rng.below(vocab_size as u64) as u32)
+            .collect()
+    }
+
+    /// Stream the corpus through the reference model, accumulating
+    /// activation moments at every tap site. Each window runs as one
+    /// tapped chunked prefill against a fresh KV cache.
+    pub fn collect(&self, model: &Transformer, corpus: &[u32]) -> Result<ModelTaps, CalibError> {
+        let corpus = &corpus[..corpus.len().min(self.cfg.calib_tokens)];
+        if corpus.is_empty() {
+            return Err(CalibError::EmptyCorpus);
+        }
+        if let Some(&t) = corpus.iter().find(|&&t| t as usize >= model.cfg.vocab_size) {
+            return Err(CalibError::TokenOutOfVocab {
+                token: t,
+                vocab: model.cfg.vocab_size,
+            });
+        }
+        let window = self.cfg.window.clamp(1, model.cfg.max_seq);
+        let mut taps = ModelTaps::new(&model.cfg);
+        let mut scratch = model.new_scratch();
+        for chunk in corpus.chunks(window) {
+            let mut cache = model.new_cache();
+            model.forward_prefill_tapped(chunk, &mut cache, &mut scratch, &mut taps);
+        }
+        Ok(taps)
+    }
+
+    /// The whole flow: collect taps, score every candidate per layer,
+    /// search the plan under the budget, and return the ready-to-use
+    /// [`QuantPlan`] plus the serializable [`CalibReport`].
+    pub fn calibrate(
+        &self,
+        model: &Transformer,
+        corpus: &[u32],
+    ) -> Result<(QuantPlan, CalibReport), CalibError> {
+        let taps = self.collect(model, corpus)?;
+        let layers = score_model(model, &taps, &self.cfg.candidates, self.cfg.include_lm_head)?;
+        let outcome = search_plan(&layers, self.cfg.budget_bits);
+        let report = CalibReport::from_search(
+            &layers,
+            &outcome,
+            self.cfg.budget_bits,
+            taps.tokens_seen,
+            taps.windows,
+            self.cfg.seed,
+        );
+        let plan = report.to_plan()?;
+        Ok((plan, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::synthetic_checkpoint;
+    use crate::model::ModelConfig;
+
+    fn tiny() -> Transformer {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 17);
+        Transformer::from_checkpoint(&ck).unwrap()
+    }
+
+    #[test]
+    fn collect_streams_the_corpus() {
+        let m = tiny();
+        let cal = Calibrator::new(CalibConfig {
+            calib_tokens: 100,
+            window: 16,
+            ..CalibConfig::default()
+        });
+        let corpus: Vec<u32> = (0..200).map(|i| (i * 7 % 64) as u32).collect();
+        let taps = cal.collect(&m, &corpus).unwrap();
+        assert_eq!(taps.tokens_seen, 100, "capped at calib_tokens");
+        assert_eq!(taps.windows, 100 / 16 + 1);
+        let s = taps.stats_for("layers.0.wq").unwrap();
+        assert_eq!(s.rows() as usize, 100, "every position taps the attn input");
+        assert!(s.mean_sq(0) > 0.0);
+        assert!(s.abs_max() > 0.0);
+        // The head tap records one row per window (last position only).
+        assert_eq!(taps.head_in.rows(), taps.windows);
+    }
+
+    #[test]
+    fn empty_corpus_rejected() {
+        let m = tiny();
+        let cal = Calibrator::new(CalibConfig::default());
+        assert!(matches!(
+            cal.collect(&m, &[]),
+            Err(CalibError::EmptyCorpus)
+        ));
+    }
+
+    #[test]
+    fn out_of_vocab_corpus_rejected() {
+        // test_tiny's vocab is 64; a byte-level corpus (ids up to 255)
+        // must error cleanly, not panic in the embedding lookup.
+        let m = tiny();
+        let cal = Calibrator::new(CalibConfig::default());
+        match cal.collect(&m, &[1, 2, 200]) {
+            Err(CalibError::TokenOutOfVocab { token: 200, vocab: 64 }) => {}
+            other => panic!("expected TokenOutOfVocab, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quantized_model_rejected() {
+        use crate::quant::QuantConfig;
+        let m = tiny()
+            .quantized(&QuantConfig::paper(Scheme::parse("fp6").unwrap()))
+            .unwrap();
+        let cal = Calibrator::new(CalibConfig {
+            calib_tokens: 32,
+            ..CalibConfig::default()
+        });
+        let corpus: Vec<u32> = (0..32).map(|i| i % 60).collect();
+        match cal.calibrate(&m, &corpus) {
+            Err(CalibError::NotDense { layer }) => assert_eq!(layer, "layers.0.wq"),
+            other => panic!("expected NotDense, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn calibrate_respects_budget_and_orders_layers() {
+        let m = tiny();
+        let cal = Calibrator::new(CalibConfig {
+            budget_bits: 5.0,
+            calib_tokens: 128,
+            window: 32,
+            ..CalibConfig::default()
+        });
+        let corpus: Vec<u32> = (0..128).map(|i| (i * 13 % 64) as u32).collect();
+        let (plan, report) = cal.calibrate(&m, &corpus).unwrap();
+        assert!(report.budget_met);
+        assert!(report.achieved_bits <= 5.0 + 1e-9);
+        assert_eq!(report.layers.len(), m.cfg.n_layers * 7);
+        // The plan quantizes and serves.
+        let q = m.quantized_with(&crate::quant::Quantizer::new(plan)).unwrap();
+        let mut c = q.new_cache();
+        let l = q.forward(1, 0, &mut c);
+        assert!(l.iter().all(|v| v.is_finite()));
+        // Tap-aware budget accounting matches the packed reality.
+        let dense_params = m.projection_bytes() / 2;
+        let packed_bits = ((q.projection_bytes() + q.projection_scale_bytes()) * 8) as f64
+            / dense_params as f64;
+        assert!(
+            (packed_bits - report.achieved_bits).abs() < 1e-6,
+            "report bits {} vs packed {}",
+            report.achieved_bits,
+            packed_bits
+        );
+    }
+}

@@ -1,0 +1,191 @@
+//! The serializable calibration artifact: per-layer scores, chosen
+//! configs and achieved budget, plus conversion into a ready-to-use
+//! [`QuantPlan`] and the compact provenance blob embedded into AMSQ
+//! checkpoint headers.
+
+use super::search::SearchOutcome;
+use super::sensitivity::LayerSensitivity;
+use crate::quant::{LayerRole, QuantConfig, QuantError, QuantPlan};
+use crate::report::{f, Table};
+use crate::util::json::Json;
+
+/// One candidate's summary inside the per-layer report record.
+#[derive(Clone, Debug)]
+pub struct CandidateSummary {
+    pub scheme: String,
+    pub bits_per_weight: f64,
+    pub act_sqnr_db: f64,
+}
+
+/// The chosen config and scores of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerChoice {
+    pub layer: String,
+    pub role: LayerRole,
+    pub config: QuantConfig,
+    pub params: usize,
+    pub bits_per_weight: f64,
+    pub act_sqnr_db: f64,
+    pub weight_mse: f64,
+    /// Every candidate considered, ascending bit cost.
+    pub candidates: Vec<CandidateSummary>,
+}
+
+/// The full calibration record — everything the offline search saw and
+/// decided, serializable to JSON (`calibrate --report`).
+#[derive(Clone, Debug)]
+pub struct CalibReport {
+    pub budget_bits: f64,
+    pub achieved_bits: f64,
+    pub budget_met: bool,
+    /// Prefill positions streamed through the taps.
+    pub calib_tokens: u64,
+    /// Prefill windows streamed.
+    pub windows: u64,
+    pub seed: u64,
+    /// Model-wide activation-weighted SQNR of the chosen assignment.
+    pub act_sqnr_db: f64,
+    pub layers: Vec<LayerChoice>,
+}
+
+impl CalibReport {
+    /// Assemble the report from the scored layers and the search outcome.
+    pub(super) fn from_search(
+        layers: &[LayerSensitivity],
+        outcome: &SearchOutcome,
+        budget_bits: f64,
+        calib_tokens: u64,
+        windows: u64,
+        seed: u64,
+    ) -> CalibReport {
+        let chosen_layers = layers
+            .iter()
+            .zip(&outcome.chosen)
+            .map(|(l, &ci)| {
+                let c = &l.candidates[ci];
+                LayerChoice {
+                    layer: l.layer.clone(),
+                    role: l.role,
+                    config: c.config,
+                    params: l.params,
+                    bits_per_weight: c.bits_per_weight,
+                    act_sqnr_db: c.act_sqnr_db,
+                    weight_mse: c.weight_mse,
+                    candidates: l
+                        .candidates
+                        .iter()
+                        .map(|c| CandidateSummary {
+                            scheme: c.config.scheme.id(),
+                            bits_per_weight: c.bits_per_weight,
+                            act_sqnr_db: c.act_sqnr_db,
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        let act_sqnr_db =
+            super::sensitivity::sqnr_db(outcome.total_signal, outcome.total_noise);
+        CalibReport {
+            budget_bits,
+            achieved_bits: outcome.achieved_bits,
+            budget_met: outcome.budget_met,
+            calib_tokens,
+            windows,
+            seed,
+            act_sqnr_db,
+            layers: chosen_layers,
+        }
+    }
+
+    /// Build the ready-to-serve plan: every scored layer gets an
+    /// exact-name override (the lm_head is targeted only when it was
+    /// calibrated, so an un-scored head stays dense as usual).
+    pub fn to_plan(&self) -> Result<QuantPlan, QuantError> {
+        let default = self
+            .layers
+            .first()
+            .map(|l| l.config)
+            .expect("calibration scored at least one layer");
+        let mut b = QuantPlan::builder(default);
+        for l in &self.layers {
+            b = b.layer(&l.layer, l.config);
+        }
+        b.build()
+    }
+
+    /// Compact provenance blob for AMSQ checkpoint headers: enough to
+    /// reproduce the calibration (`budget`, corpus size, seed) and to
+    /// audit what it achieved, without the per-layer detail.
+    pub fn provenance(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("budget_bits", Json::Num(self.budget_bits))
+            .set("achieved_bits", Json::Num(self.achieved_bits))
+            .set("budget_met", Json::Bool(self.budget_met))
+            .set("calib_tokens", Json::Num(self.calib_tokens as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("act_sqnr_db", Json::Num(self.act_sqnr_db));
+        o
+    }
+
+    /// Full JSON serialization (`CALIB_REPORT.json`). Field order is the
+    /// serializer's (sorted keys), so two runs over the same inputs emit
+    /// byte-identical text — the determinism contract the tests pin.
+    pub fn to_json(&self) -> Json {
+        let mut o = self.provenance();
+        o.set("windows", Json::Num(self.windows as f64));
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut e = Json::obj();
+                e.set("layer", Json::Str(l.layer.clone()))
+                    .set("role", Json::Str(l.role.name().to_string()))
+                    .set("config", l.config.to_json())
+                    .set("params", Json::Num(l.params as f64))
+                    .set("bits_per_weight", Json::Num(l.bits_per_weight))
+                    .set("act_sqnr_db", Json::Num(l.act_sqnr_db))
+                    .set("weight_mse", Json::Num(l.weight_mse))
+                    .set(
+                        "candidates",
+                        Json::Arr(
+                            l.candidates
+                                .iter()
+                                .map(|c| {
+                                    let mut e = Json::obj();
+                                    e.set("scheme", Json::Str(c.scheme.clone()))
+                                        .set("bits_per_weight", Json::Num(c.bits_per_weight))
+                                        .set("act_sqnr_db", Json::Num(c.act_sqnr_db));
+                                    e
+                                })
+                                .collect(),
+                        ),
+                    );
+                e
+            })
+            .collect();
+        o.set("layers", Json::Arr(layers));
+        o
+    }
+
+    /// Per-layer table for the CLI / examples.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Calibrated plan — budget {:.2} bits/w, achieved {:.3}",
+                self.budget_bits, self.achieved_bits
+            ),
+            &["layer", "role", "scheme", "bits/w", "act SQNR dB", "weight MSE"],
+        );
+        for l in &self.layers {
+            t.row(vec![
+                l.layer.clone(),
+                l.role.name().to_string(),
+                l.config.scheme.id(),
+                f(l.bits_per_weight, 3),
+                f(l.act_sqnr_db, 2),
+                format!("{:.3e}", l.weight_mse),
+            ]);
+        }
+        t
+    }
+}

@@ -1,0 +1,240 @@
+//! Budgeted plan search: greedy/Pareto descent over per-layer candidate
+//! configs under a global bits-per-weight budget.
+//!
+//! Every layer starts at its cheapest candidate; the search then
+//! repeatedly applies the single upgrade (layer → more expensive
+//! candidate) with the best activation-noise reduction per weighted bit
+//! spent, while the parameter-weighted average stays within the budget.
+//! This is the classic marginal-ratio greedy on a layer-separable
+//! objective — near-optimal when each layer's bits→noise frontier is
+//! convex, which the FPx ladder empirically is. As a safety net the
+//! result is compared against every *uniform* assignment that fits the
+//! budget, and the best by total activation noise wins, so the searched
+//! plan never loses to a feasible uniform plan on its own objective.
+
+use super::sensitivity::LayerSensitivity;
+
+/// Outcome of a budgeted search: one chosen candidate index per layer
+/// (into `LayerSensitivity::candidates`) plus the achieved aggregates.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub chosen: Vec<usize>,
+    /// Parameter-weighted average bits/weight (scale streams included).
+    pub achieved_bits: f64,
+    /// False when even the cheapest assignment exceeds the budget.
+    pub budget_met: bool,
+    /// Total activation-weighted noise power of the chosen assignment.
+    pub total_noise: f64,
+    /// Total activation-weighted signal power (assignment-independent).
+    pub total_signal: f64,
+}
+
+fn weighted_bits(layers: &[LayerSensitivity], chosen: &[usize]) -> f64 {
+    let mut bits = 0f64;
+    let mut params = 0f64;
+    for (l, &c) in layers.iter().zip(chosen) {
+        bits += l.candidates[c].bits_per_weight * l.params as f64;
+        params += l.params as f64;
+    }
+    bits / params.max(1.0)
+}
+
+fn total_noise(layers: &[LayerSensitivity], chosen: &[usize]) -> f64 {
+    layers
+        .iter()
+        .zip(chosen)
+        .map(|(l, &c)| l.candidates[c].act_noise)
+        .sum()
+}
+
+/// Run the greedy descent. `layers` must be non-empty and every layer
+/// must carry at least one candidate (all layers share the same
+/// candidate list in the [`Calibrator`](super::Calibrator) flow).
+pub fn search_plan(layers: &[LayerSensitivity], budget_bits: f64) -> SearchOutcome {
+    assert!(!layers.is_empty(), "nothing to search");
+    let total_params: f64 = layers.iter().map(|l| l.params as f64).sum();
+    // Start: cheapest candidate everywhere (index 0 — candidates are
+    // sorted by ascending bits, ties by ascending noise).
+    let mut chosen: Vec<usize> = vec![0; layers.len()];
+    let mut bits = weighted_bits(layers, &chosen);
+    loop {
+        // Best feasible upgrade by noise-reduction per weighted bit.
+        let mut best: Option<(f64, usize, usize)> = None; // (ratio, layer, cand)
+        for (li, l) in layers.iter().enumerate() {
+            let cur = &l.candidates[chosen[li]];
+            for (ci, cand) in l.candidates.iter().enumerate().skip(chosen[li] + 1) {
+                if cand.act_noise >= cur.act_noise {
+                    continue; // not an improvement
+                }
+                let dbits =
+                    (cand.bits_per_weight - cur.bits_per_weight) * l.params as f64 / total_params;
+                if bits + dbits > budget_bits + 1e-12 {
+                    continue; // does not fit
+                }
+                let gain = cur.act_noise - cand.act_noise;
+                // A zero-cost improvement is infinitely good; otherwise
+                // marginal gain per global bit spent.
+                let ratio = if dbits <= 0.0 { f64::INFINITY } else { gain / dbits };
+                let better = match best {
+                    None => true,
+                    // Strict > keeps the tie-break deterministic: first
+                    // layer in model order, then cheapest candidate.
+                    Some((r, _, _)) => ratio > r,
+                };
+                if better {
+                    best = Some((ratio, li, ci));
+                }
+            }
+        }
+        match best {
+            Some((_, li, ci)) => {
+                chosen[li] = ci;
+                bits = weighted_bits(layers, &chosen);
+            }
+            None => break,
+        }
+    }
+    // Uniform safety net: every single-*config* assignment that fits
+    // the budget and beats the greedy result on total noise wins. Match
+    // by config identity, not sorted index — per-layer bit ties (e.g.
+    // two schemes word-padding to the same bits/w at some width) can
+    // order the candidate lists differently per layer.
+    let mut best_noise = total_noise(layers, &chosen);
+    for cand in &layers[0].candidates {
+        let uniform: Option<Vec<usize>> = layers
+            .iter()
+            .map(|l| l.candidates.iter().position(|c| c.config == cand.config))
+            .collect();
+        let Some(uniform) = uniform else { continue };
+        if weighted_bits(layers, &uniform) <= budget_bits + 1e-12 {
+            let noise = total_noise(layers, &uniform);
+            if noise < best_noise {
+                best_noise = noise;
+                chosen = uniform;
+            }
+        }
+    }
+    let achieved_bits = weighted_bits(layers, &chosen);
+    SearchOutcome {
+        budget_met: achieved_bits <= budget_bits + 1e-12,
+        total_noise: total_noise(layers, &chosen),
+        total_signal: layers.iter().map(|l| l.act_signal).sum(),
+        achieved_bits,
+        chosen,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::sensitivity::CandidateScore;
+    use crate::formats::registry::Scheme;
+    use crate::quant::{LayerRole, QuantConfig};
+
+    fn cand(bits: f64, noise: f64) -> CandidateScore {
+        // Distinct config per bits tier, so the config-identity uniform
+        // fallback sees real uniform assignments in these fixtures.
+        let scheme = match bits as u32 {
+            4 => "fp4",
+            5 => "fp5",
+            6 => "fp6",
+            _ => "fp8",
+        };
+        CandidateScore {
+            config: QuantConfig::paper(Scheme::parse(scheme).unwrap()),
+            bits_per_weight: bits,
+            act_noise: noise,
+            act_sqnr_db: 0.0,
+            weight_mse: noise,
+        }
+    }
+
+    fn layer(name: &str, params: usize, cands: Vec<CandidateScore>) -> LayerSensitivity {
+        LayerSensitivity {
+            layer: name.to_string(),
+            role: LayerRole::Other,
+            rows: params,
+            cols: 1,
+            params,
+            act_signal: 1.0,
+            candidates: cands,
+        }
+    }
+
+    #[test]
+    fn spends_budget_on_the_sensitive_layer() {
+        // Layer a: upgrading buys a 100x noise drop; layer b: almost
+        // nothing. Budget allows exactly one upgrade.
+        let layers = vec![
+            layer("a", 100, vec![cand(4.0, 100.0), cand(6.0, 1.0)]),
+            layer("b", 100, vec![cand(4.0, 1.0), cand(6.0, 0.9)]),
+        ];
+        let out = search_plan(&layers, 5.0);
+        assert_eq!(out.chosen, vec![1, 0], "budget goes to the sensitive layer");
+        assert!(out.budget_met);
+        assert!((out.achieved_bits - 5.0).abs() < 1e-9);
+        assert!((out.total_noise - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_budget_stays_at_cheapest() {
+        let layers = vec![layer("a", 10, vec![cand(4.0, 1.0), cand(8.0, 0.1)])];
+        let out = search_plan(&layers, 3.0);
+        assert_eq!(out.chosen, vec![0]);
+        assert!(!out.budget_met, "cheapest already exceeds the budget");
+        assert!((out.achieved_bits - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generous_budget_takes_everything() {
+        let layers = vec![
+            layer("a", 10, vec![cand(4.0, 1.0), cand(8.0, 0.1)]),
+            layer("b", 30, vec![cand(4.0, 2.0), cand(8.0, 0.2)]),
+        ];
+        let out = search_plan(&layers, 8.0);
+        assert_eq!(out.chosen, vec![1, 1]);
+        assert!((out.achieved_bits - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_loses_to_a_feasible_uniform_plan() {
+        // A frontier crafted to trap pure greedy: a huge cheap first
+        // upgrade on one layer starves the budget for the uniformly
+        // better middle candidate. The uniform fallback must rescue it.
+        let layers = vec![
+            layer(
+                "a",
+                100,
+                vec![cand(4.0, 10.0), cand(5.0, 9.9), cand(6.0, 0.1)],
+            ),
+            layer(
+                "b",
+                100,
+                vec![cand(4.0, 10.0), cand(5.0, 0.5), cand(6.0, 0.4)],
+            ),
+        ];
+        let out = search_plan(&layers, 5.0);
+        let uniform_mid_noise = 9.9 + 0.5;
+        assert!(
+            out.total_noise <= uniform_mid_noise + 1e-12,
+            "fallback guarantees parity with feasible uniform plans: {} vs {}",
+            out.total_noise,
+            uniform_mid_noise
+        );
+        assert!(out.achieved_bits <= 5.0 + 1e-12);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let mk = || {
+            vec![
+                layer("a", 10, vec![cand(4.0, 1.0), cand(5.0, 0.5)]),
+                layer("b", 10, vec![cand(4.0, 1.0), cand(5.0, 0.5)]),
+            ]
+        };
+        let a = search_plan(&mk(), 4.5);
+        let b = search_plan(&mk(), 4.5);
+        assert_eq!(a.chosen, b.chosen);
+        assert_eq!(a.chosen, vec![1, 0], "first layer wins the tie");
+    }
+}

@@ -1,0 +1,242 @@
+//! Activation-weighted sensitivity scoring: how much output-space noise
+//! each candidate [`QuantConfig`] injects at each layer, *as seen by the
+//! calibration activations* — the ranking signal that replaces
+//! weight-space MSE.
+//!
+//! Under the diagonal approximation the output-space noise power of a
+//! quantized projection is `E‖(W − Ŵ)x‖² ≈ Σ_rc ΔW²_rc · E[x_c²]`, and
+//! the matching signal power is `Σ_rc W²_rc · E[x_c²]`. Both need only
+//! the per-channel second moments the taps collect, so scoring a
+//! candidate costs one quantize + one dequantize pass — the same
+//! machinery the per-layer [`QuantReport`](crate::quant::QuantReport)s
+//! run, reweighted by what the layer actually sees at inference time.
+
+use super::stats::{ActivationStats, ModelTaps};
+use super::CalibError;
+use crate::model::transformer::{Linear, Transformer};
+use crate::quant::pipeline::quantize_packed;
+use crate::quant::{LayerRole, QuantConfig};
+use crate::tensor::Tensor;
+
+/// Exact reconstruction caps the reported SQNR at a large *finite*
+/// figure (300 dB ≈ 30 orders of magnitude — unreachable for any lossy
+/// candidate), so a zero-noise candidate (fp16 passthrough, all-zero
+/// weights) stays serializable: `f64::INFINITY` would render as invalid
+/// JSON in `CALIB_REPORT.json` and in AMSQ provenance headers.
+pub(super) fn sqnr_db(signal: f64, noise: f64) -> f64 {
+    if noise <= 0.0 {
+        return 300.0;
+    }
+    (10.0 * (signal / noise).log10()).min(300.0)
+}
+
+/// One candidate config's score at one layer.
+#[derive(Clone, Debug)]
+pub struct CandidateScore {
+    pub config: QuantConfig,
+    /// Achieved storage bits/weight of the candidate *including* its
+    /// scale streams (payload padding and per-group overhead count, so
+    /// the budget the search enforces is the honest on-disk figure).
+    pub bits_per_weight: f64,
+    /// Total activation-weighted output noise power `Σ_rc ΔW² E[x_c²]`.
+    pub act_noise: f64,
+    /// `10 log10(signal / noise)` with the same activation weighting.
+    pub act_sqnr_db: f64,
+    /// Plain weight-space reconstruction MSE (the old ranking signal,
+    /// kept for comparison in the report).
+    pub weight_mse: f64,
+}
+
+/// A layer's full sensitivity profile: its activation-weighted signal
+/// power and every candidate's score, sorted by ascending bit cost.
+#[derive(Clone, Debug)]
+pub struct LayerSensitivity {
+    pub layer: String,
+    pub role: LayerRole,
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows * cols` — the weight the search gives this layer when
+    /// averaging bits/weight across the model.
+    pub params: usize,
+    /// Activation-weighted signal power `Σ_rc W² E[x_c²]`.
+    pub act_signal: f64,
+    pub candidates: Vec<CandidateScore>,
+}
+
+/// Score one dense projection against every candidate config.
+pub fn score_layer(
+    name: &str,
+    role: LayerRole,
+    w: &Tensor,
+    stats: &ActivationStats,
+    candidates: &[QuantConfig],
+) -> Result<LayerSensitivity, CalibError> {
+    assert_eq!(w.cols(), stats.channels(), "tap/projection dimension mismatch");
+    let (rows, cols) = (w.rows(), w.cols());
+    // Per-channel activation power, floored so a channel the corpus
+    // never excites cannot erase a weight column from the score.
+    let mut chan_pow = vec![0f64; cols];
+    let mut max_pow = 0f64;
+    for (c, p) in chan_pow.iter_mut().enumerate() {
+        *p = stats.mean_sq(c);
+        max_pow = max_pow.max(*p);
+    }
+    let floor = (max_pow * 1e-6).max(f64::MIN_POSITIVE);
+    for p in chan_pow.iter_mut() {
+        *p = p.max(floor);
+    }
+    let mut act_signal = 0f64;
+    for r in 0..rows {
+        for (c, &x) in w.row(r).iter().enumerate() {
+            act_signal += (x as f64) * (x as f64) * chan_pow[c];
+        }
+    }
+    let mut scored = Vec::with_capacity(candidates.len());
+    for cfg in candidates {
+        let packed = quantize_packed(w, cfg)?;
+        let deq = packed.dequantize();
+        let mut act_noise = 0f64;
+        let mut weight_sse = 0f64;
+        for r in 0..rows {
+            for (c, (&a, &b)) in w.row(r).iter().zip(deq.row(r)).enumerate() {
+                let d = (a as f64) - (b as f64);
+                act_noise += d * d * chan_pow[c];
+                weight_sse += d * d;
+            }
+        }
+        let bits_per_weight =
+            ((packed.payload_bytes() + packed.scale_bytes()) * 8) as f64 / (rows * cols) as f64;
+        let act_sqnr_db = sqnr_db(act_signal, act_noise);
+        scored.push(CandidateScore {
+            config: *cfg,
+            bits_per_weight,
+            act_noise,
+            act_sqnr_db,
+            weight_mse: weight_sse / (rows * cols) as f64,
+        });
+    }
+    // Ascending bit cost; ties broken by lower noise so the search's
+    // "cheapest start" is deterministic and never dominated.
+    scored.sort_by(|a, b| {
+        a.bits_per_weight
+            .total_cmp(&b.bits_per_weight)
+            .then(a.act_noise.total_cmp(&b.act_noise))
+    });
+    Ok(LayerSensitivity {
+        layer: name.to_string(),
+        role,
+        rows,
+        cols,
+        params: rows * cols,
+        act_signal,
+        candidates: scored,
+    })
+}
+
+/// Score every projection of a dense model, in checkpoint order
+/// (`layers.0.wq` ... `layers.{L-1}.w_down`, then `lm_head` when
+/// `include_lm_head`). The model must be the dense reference — a packed
+/// source has already lost the weights the candidates are judged against.
+pub fn score_model(
+    model: &Transformer,
+    taps: &ModelTaps,
+    candidates: &[QuantConfig],
+    include_lm_head: bool,
+) -> Result<Vec<LayerSensitivity>, CalibError> {
+    fn dense<'a>(name: &str, l: &'a Linear) -> Result<&'a Tensor, CalibError> {
+        match l {
+            Linear::Dense(t) => Ok(t),
+            Linear::Quant(_) => Err(CalibError::NotDense {
+                layer: name.to_string(),
+            }),
+        }
+    }
+    let mut out = Vec::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        for (field, role, lin) in [
+            ("wq", LayerRole::Attention, &l.wq),
+            ("wk", LayerRole::Attention, &l.wk),
+            ("wv", LayerRole::Attention, &l.wv),
+            ("wo", LayerRole::Attention, &l.wo),
+            ("w_gate", LayerRole::Mlp, &l.w_gate),
+            ("w_up", LayerRole::Mlp, &l.w_up),
+            ("w_down", LayerRole::Mlp, &l.w_down),
+        ] {
+            let name = format!("layers.{i}.{field}");
+            let w = dense(&name, lin)?;
+            let stats = taps.stats_for(&name).expect("known projection name");
+            out.push(score_layer(&name, role, w, stats, candidates)?);
+        }
+    }
+    if include_lm_head {
+        let w = dense("lm_head", &model.lm_head)?;
+        let stats = taps.stats_for("lm_head").expect("known projection name");
+        out.push(score_layer("lm_head", LayerRole::LmHead, w, stats, candidates)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::registry::Scheme;
+    use crate::tensor::init;
+    use crate::util::prng::Rng;
+
+    fn cfg(name: &str) -> QuantConfig {
+        QuantConfig::paper(Scheme::parse(name).unwrap())
+    }
+
+    #[test]
+    fn more_bits_less_noise() {
+        let mut rng = Rng::new(5);
+        let w = init::gaussian(&[8, 64], 0.0, 0.02, &mut rng);
+        let mut stats = ActivationStats::new(64);
+        for _ in 0..16 {
+            let row: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            stats.record(&row);
+        }
+        let s = score_layer(
+            "layers.0.wq",
+            LayerRole::Attention,
+            &w,
+            &stats,
+            &[cfg("fp4"), cfg("fp6"), cfg("fp8")],
+        )
+        .unwrap();
+        assert_eq!(s.candidates.len(), 3);
+        // Sorted ascending in bits; noise strictly improves with bits.
+        assert!(s.candidates[0].bits_per_weight < s.candidates[2].bits_per_weight);
+        assert!(s.candidates[0].act_noise > s.candidates[1].act_noise);
+        assert!(s.candidates[1].act_noise > s.candidates[2].act_noise);
+        assert!(s.candidates[2].act_sqnr_db > s.candidates[0].act_sqnr_db);
+    }
+
+    #[test]
+    fn activation_weighting_changes_the_ranking_signal() {
+        // Two layers with identical weights but different activation
+        // power must get proportionally different noise scores.
+        let mut rng = Rng::new(6);
+        let w = init::gaussian(&[4, 32], 0.0, 0.02, &mut rng);
+        let mut quiet = ActivationStats::new(32);
+        let mut loud = ActivationStats::new(32);
+        quiet.record(&[0.1; 32]);
+        loud.record(&[10.0; 32]);
+        let cands = [cfg("fp4.25")];
+        let sq = score_layer("a", LayerRole::Other, &w, &quiet, &cands).unwrap();
+        let sl = score_layer("b", LayerRole::Other, &w, &loud, &cands).unwrap();
+        let ratio = sl.candidates[0].act_noise / sq.candidates[0].act_noise;
+        assert!(
+            (ratio - 10_000.0).abs() / 10_000.0 < 1e-6,
+            "noise must scale with activation power: ratio {ratio}"
+        );
+        // SQNR (signal/noise) is invariant to a uniform activation gain.
+        assert!(
+            (sq.candidates[0].act_sqnr_db - sl.candidates[0].act_sqnr_db).abs() < 1e-9
+        );
+        // Weight-space MSE ignores activations entirely.
+        assert!(
+            (sq.candidates[0].weight_mse - sl.candidates[0].weight_mse).abs() < 1e-15
+        );
+    }
+}

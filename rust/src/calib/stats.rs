@@ -1,0 +1,202 @@
+//! Lightweight activation statistics — the taps the calibration pass
+//! hangs off [`Transformer::forward_prefill_tapped`](crate::model::transformer::Transformer::forward_prefill_tapped).
+//!
+//! Nothing here stores activations. Each tap site keeps running moments
+//! only: per-input-channel sums of squares, a row counter and the
+//! absolute maximum. That is exactly what the activation-weighted
+//! sensitivity score needs — under the diagonal approximation,
+//! `E‖(W − Ŵ)x‖² ≈ Σ_rc ΔW²_rc · E[x_c²]`, so per-channel second
+//! moments substitute for the full calibration activations at O(d)
+//! memory per site instead of O(tokens · d).
+
+use crate::model::ModelConfig;
+use crate::tensor::Tensor;
+
+/// Running per-channel activation moments at one tap site.
+#[derive(Clone, Debug)]
+pub struct ActivationStats {
+    channels: usize,
+    rows: u64,
+    sumsq: Vec<f64>,
+    abs_max: f32,
+}
+
+impl ActivationStats {
+    pub fn new(channels: usize) -> ActivationStats {
+        ActivationStats {
+            channels,
+            rows: 0,
+            sumsq: vec![0.0; channels],
+            abs_max: 0.0,
+        }
+    }
+
+    /// Input dimension of the projection(s) this site feeds.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Activation rows (positions) recorded so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Largest |x| seen at this site (outlier magnitude telemetry).
+    pub fn abs_max(&self) -> f32 {
+        self.abs_max
+    }
+
+    /// Record one activation row (a single position's input vector).
+    pub fn record(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.channels, "tap dimension mismatch");
+        for (s, &x) in self.sumsq.iter_mut().zip(row) {
+            *s += (x as f64) * (x as f64);
+            let a = x.abs();
+            if a > self.abs_max {
+                self.abs_max = a;
+            }
+        }
+        self.rows += 1;
+    }
+
+    /// Record every row of a `[n, channels]` activation block.
+    pub fn record_rows(&mut self, t: &Tensor) {
+        for r in 0..t.rows() {
+            self.record(t.row(r));
+        }
+    }
+
+    /// Mean square of channel `c` over everything recorded. Falls back to
+    /// 1.0 before any data arrives, so an un-calibrated site degrades the
+    /// sensitivity score to plain (unweighted) weight MSE instead of
+    /// zeroing it out.
+    pub fn mean_sq(&self, c: usize) -> f64 {
+        if self.rows == 0 {
+            1.0
+        } else {
+            self.sumsq[c] / self.rows as f64
+        }
+    }
+
+    /// Fold another site's moments into this one (multi-corpus runs).
+    pub fn merge(&mut self, other: &ActivationStats) {
+        assert_eq!(self.channels, other.channels, "tap dimension mismatch");
+        for (s, o) in self.sumsq.iter_mut().zip(&other.sumsq) {
+            *s += o;
+        }
+        self.rows += other.rows;
+        self.abs_max = self.abs_max.max(other.abs_max);
+    }
+}
+
+/// The four per-layer tap sites of a transformer block, keyed by which
+/// projections read them.
+#[derive(Clone, Debug)]
+pub struct LayerTaps {
+    /// Post-attn-norm hidden state — input to wq/wk/wv.
+    pub attn_in: ActivationStats,
+    /// Attention output — input to wo.
+    pub attn_out: ActivationStats,
+    /// Post-mlp-norm hidden state — input to w_gate/w_up.
+    pub mlp_in: ActivationStats,
+    /// SwiGLU activation — input to w_down.
+    pub mlp_act: ActivationStats,
+}
+
+/// All tap sites of one model: per-layer blocks plus the final-norm
+/// output feeding the lm_head.
+#[derive(Clone, Debug)]
+pub struct ModelTaps {
+    pub layers: Vec<LayerTaps>,
+    pub head_in: ActivationStats,
+    /// Prefill positions streamed through the taps.
+    pub tokens_seen: u64,
+    /// Prefill windows (independent sequences) streamed.
+    pub windows: u64,
+}
+
+impl ModelTaps {
+    pub fn new(cfg: &ModelConfig) -> ModelTaps {
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerTaps {
+                attn_in: ActivationStats::new(cfg.d_model),
+                attn_out: ActivationStats::new(cfg.d_model),
+                mlp_in: ActivationStats::new(cfg.d_model),
+                mlp_act: ActivationStats::new(cfg.d_ff),
+            })
+            .collect();
+        ModelTaps {
+            layers,
+            head_in: ActivationStats::new(cfg.d_model),
+            tokens_seen: 0,
+            windows: 0,
+        }
+    }
+
+    /// The stats of the tap site feeding a projection, by checkpoint
+    /// layer name (`layers.{i}.wq`, ..., `lm_head`). `None` for names the
+    /// tap layout does not know.
+    pub fn stats_for(&self, layer: &str) -> Option<&ActivationStats> {
+        if layer == "lm_head" {
+            return Some(&self.head_in);
+        }
+        let (idx, field) = layer.strip_prefix("layers.")?.split_once('.')?;
+        let l = self.layers.get(idx.parse::<usize>().ok()?)?;
+        match field {
+            "wq" | "wk" | "wv" => Some(&l.attn_in),
+            "wo" => Some(&l.attn_out),
+            "w_gate" | "w_up" => Some(&l.mlp_in),
+            "w_down" => Some(&l.mlp_act),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_accumulate() {
+        let mut s = ActivationStats::new(2);
+        assert_eq!(s.mean_sq(0), 1.0, "empty site weights like plain MSE");
+        s.record(&[1.0, -2.0]);
+        s.record(&[3.0, 0.0]);
+        assert_eq!(s.rows(), 2);
+        assert!((s.mean_sq(0) - 5.0).abs() < 1e-12);
+        assert!((s.mean_sq(1) - 2.0).abs() < 1e-12);
+        assert_eq!(s.abs_max(), 3.0);
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut a = ActivationStats::new(1);
+        let mut b = ActivationStats::new(1);
+        a.record(&[2.0]);
+        b.record(&[4.0]);
+        let mut both = ActivationStats::new(1);
+        both.record(&[2.0]);
+        both.record(&[4.0]);
+        a.merge(&b);
+        assert_eq!(a.rows(), 2);
+        assert!((a.mean_sq(0) - both.mean_sq(0)).abs() < 1e-12);
+        assert_eq!(a.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn stats_for_maps_projection_names() {
+        let cfg = ModelConfig::test_tiny();
+        let taps = ModelTaps::new(&cfg);
+        for name in ["layers.0.wq", "layers.1.wo", "layers.0.w_up", "lm_head"] {
+            assert!(taps.stats_for(name).is_some(), "{name}");
+        }
+        assert_eq!(
+            taps.stats_for("layers.0.w_down").unwrap().channels(),
+            cfg.d_ff
+        );
+        assert_eq!(taps.stats_for("layers.0.wq").unwrap().channels(), cfg.d_model);
+        assert!(taps.stats_for("layers.9.wq").is_none());
+        assert!(taps.stats_for("layers.0.nope").is_none());
+        assert!(taps.stats_for("embed").is_none());
+    }
+}

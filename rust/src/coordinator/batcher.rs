@@ -8,11 +8,15 @@
 //! cancelled sequence never occupies a batch slot on the step after its
 //! cancel flag is observed.
 //!
-//! Admission runs a **chunked prefill**: the whole prompt goes through
+//! Admission runs a **chunked prefill**: prompt chunks go through
 //! [`Transformer::forward_prefill_with`], so every projection sees one
-//! `[prompt_len, ·]` GEMM through the tiled fused kernels instead of
-//! `prompt_len` GEMVs. Request timing (TTFT, total) measures from
-//! [`Submission`] creation — queue wait included.
+//! `[chunk_len, ·]` GEMM through the tiled fused kernels instead of
+//! per-token GEMVs. Chunks are capped at [`BatchPolicy::prefill_chunk`]
+//! positions (default 128) and interleave with decode steps — one chunk
+//! per prefilling sequence per step — so a very long prompt cannot
+//! stall co-batched decodes for its whole prefill. Request timing
+//! (TTFT, total) measures from [`Submission`] creation — queue wait
+//! included.
 
 use super::{Event, GenRequest, GenResponse};
 use crate::model::transformer::{ForwardScratch, KvCache, Transformer};
@@ -29,6 +33,11 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// Optional token id that terminates a sequence early.
     pub eos: Option<u32>,
+    /// Prefill chunk cap in positions (default 128): a prompt longer
+    /// than this prefills one chunk per scheduler step, interleaved with
+    /// the running batch's decode steps, so a very long prompt no longer
+    /// stalls co-batched decodes for its whole prefill.
+    pub prefill_chunk: usize,
 }
 
 impl Default for BatchPolicy {
@@ -36,6 +45,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 8,
             eos: None,
+            prefill_chunk: 128,
         }
     }
 }
@@ -85,7 +95,9 @@ impl Submission {
         self.req
     }
 
-    fn cancelled(&self) -> bool {
+    /// Whether the cancel flag is set (the admission queue and scheduler
+    /// both observe it to skip doomed work early).
+    pub(crate) fn cancelled(&self) -> bool {
         self.cancel.load(Ordering::SeqCst)
     }
 
@@ -141,6 +153,16 @@ struct Active {
     steps: usize,
 }
 
+/// A sequence mid-prefill: it owns a batch slot and a KV cache but has
+/// not produced its first token yet. One chunk of its prompt runs per
+/// scheduler step (see [`BatchPolicy::prefill_chunk`]).
+struct Prefilling {
+    sub: Submission,
+    cache: KvCache,
+    /// Prompt positions already written into the cache.
+    consumed: usize,
+}
+
 impl BorrowMut<KvCache> for Active {
     fn borrow_mut(&mut self) -> &mut KvCache {
         &mut self.cache
@@ -166,6 +188,7 @@ pub struct Scheduler {
     policy: BatchPolicy,
     queue: VecDeque<Submission>,
     active: Vec<Active>,
+    prefilling: Vec<Prefilling>,
     rng: Rng,
     scratch: ForwardScratch,
     /// Reused per-step token staging buffer.
@@ -181,6 +204,7 @@ impl Scheduler {
             policy,
             queue: VecDeque::new(),
             active: Vec::new(),
+            prefilling: Vec::new(),
             rng: Rng::new(seed),
             scratch: ForwardScratch::new(),
             tok_buf: Vec::new(),
@@ -206,40 +230,81 @@ impl Scheduler {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len()
+        self.queue.len() + self.prefilling.len() + self.active.len()
     }
 
-    /// Ids currently occupying batch slots (introspection/tests).
+    /// Ids currently occupying batch slots with decode state
+    /// (introspection/tests; excludes sequences still prefilling — see
+    /// [`Scheduler::prefilling_ids`]).
     pub fn active_ids(&self) -> Vec<u64> {
         self.active.iter().map(|a| a.sub.id()).collect()
     }
 
-    /// Chunked prefill: run the whole prompt as one multi-position pass
-    /// and move the request into the running batch.
-    fn start(&mut self, sub: Submission) {
-        assert!(
-            !sub.req.prompt.is_empty(),
-            "empty prompt: nothing to condition on"
+    /// Ids of sequences mid-prefill (they hold batch slots but have not
+    /// produced a first token yet).
+    pub fn prefilling_ids(&self) -> Vec<u64> {
+        self.prefilling.iter().map(|p| p.sub.id()).collect()
+    }
+
+    /// Run the next prompt chunk (at most `prefill_chunk` positions) of
+    /// `prefilling[idx]`, in place — no per-step buffer churn on the
+    /// decode hot path. Intermediate chunks write the cache only (no
+    /// lm_head pass); the final chunk samples the first token and moves
+    /// the sequence into the running batch (`swap_remove`). Returns true
+    /// when the sequence left the prefilling list.
+    fn advance_prefill_at(&mut self, idx: usize) -> bool {
+        let chunk = self.policy.prefill_chunk.max(1);
+        let p = &mut self.prefilling[idx];
+        let end = (p.consumed + chunk).min(p.sub.req.prompt.len());
+        if end < p.sub.req.prompt.len() {
+            self.model.forward_prefill_chunk(
+                &p.sub.req.prompt[p.consumed..end],
+                &mut p.cache,
+                &mut self.scratch,
+            );
+            p.consumed = end;
+            return false;
+        }
+        let mut p = self.prefilling.swap_remove(idx);
+        let logits = self.model.forward_prefill_with(
+            &p.sub.req.prompt[p.consumed..end],
+            &mut p.cache,
+            &mut self.scratch,
         );
-        let mut cache = self.model.new_cache();
-        let logits = self
-            .model
-            .forward_prefill_with(&sub.req.prompt, &mut cache, &mut self.scratch);
-        let first = sub.req.sampler.sample(logits, &mut self.rng);
-        let ttft_s = sub.submitted.elapsed_secs();
-        sub.emit(Event::FirstToken {
-            id: sub.id(),
+        p.consumed = end;
+        let first = p.sub.req.sampler.sample(logits, &mut self.rng);
+        let ttft_s = p.sub.submitted.elapsed_secs();
+        p.sub.emit(Event::FirstToken {
+            id: p.sub.id(),
             token: first,
             ttft_s,
         });
         self.active.push(Active {
-            sub,
-            cache,
+            sub: p.sub,
+            cache: p.cache,
             generated: vec![first],
             next_token: first,
             ttft_s,
             steps: 1,
         });
+        true
+    }
+
+    /// Admit a request into a batch slot: its first prefill chunk runs
+    /// immediately (prompts within the chunk cap complete prefill in one
+    /// pass, exactly as before the cap existed).
+    fn start(&mut self, sub: Submission) {
+        assert!(
+            !sub.req.prompt.is_empty(),
+            "empty prompt: nothing to condition on"
+        );
+        let cache = self.model.new_cache();
+        self.prefilling.push(Prefilling {
+            sub,
+            cache,
+            consumed: 0,
+        });
+        self.advance_prefill_at(self.prefilling.len() - 1);
     }
 
     fn cancel_out(sub: Submission, tokens: Vec<u32>) -> Outcome {
@@ -254,14 +319,24 @@ impl Scheduler {
     }
 
     /// Drop cancelled work at the step boundary: queued requests are
-    /// discarded before they ever prefill; active sequences leave the
-    /// batch and their KV cache storage is released immediately.
+    /// discarded before they ever prefill; prefilling sequences abandon
+    /// the rest of their prompt; active sequences leave the batch. In
+    /// every case the KV cache storage is released immediately.
     fn sweep_cancelled(&mut self, out: &mut Vec<Outcome>) {
         let mut i = 0;
         while i < self.queue.len() {
             if self.queue[i].cancelled() {
                 let sub = self.queue.remove(i).expect("index in bounds");
                 out.push(Self::cancel_out(sub, Vec::new()));
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            if self.prefilling[i].sub.cancelled() {
+                let p = self.prefilling.swap_remove(i);
+                out.push(Self::cancel_out(p.sub, Vec::new()));
             } else {
                 i += 1;
             }
@@ -279,14 +354,25 @@ impl Scheduler {
         }
     }
 
-    /// One scheduler iteration: sweep cancellations, admit up to capacity
-    /// (chunked prefill), run one batched decode step, retire finished
-    /// sequences. Returns the terminal outcomes produced by this step.
+    /// One scheduler iteration: sweep cancellations, advance in-flight
+    /// prefills by one chunk each, admit up to capacity (first prefill
+    /// chunk), run one batched decode step, retire finished sequences.
+    /// Long prompts therefore interleave with decodes instead of
+    /// stalling them. Returns the terminal outcomes of this step.
     pub fn step(&mut self) -> Vec<Outcome> {
         let mut out = Vec::new();
         self.sweep_cancelled(&mut out);
-        // Admission.
-        while self.active.len() < self.policy.max_batch {
+        // Advance sequences admitted in earlier steps by one chunk each
+        // (in place; a finishing sequence swap-removes, and the element
+        // swapped into its slot is advanced next — each exactly once).
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            if !self.advance_prefill_at(i) {
+                i += 1;
+            }
+        }
+        // Admission: prefilling sequences occupy batch slots too.
+        while self.active.len() + self.prefilling.len() < self.policy.max_batch {
             match self.queue.pop_front() {
                 Some(sub) if sub.cancelled() => out.push(Self::cancel_out(sub, Vec::new())),
                 Some(sub) => self.start(sub),
@@ -379,7 +465,7 @@ mod tests {
             model,
             BatchPolicy {
                 max_batch,
-                eos: None,
+                ..BatchPolicy::default()
             },
             7,
         )
@@ -439,7 +525,11 @@ mod tests {
             solo_out.push(s.run_to_completion().pop().unwrap().tokens);
         }
 
-        let mut s = Scheduler::new(model, BatchPolicy { max_batch: 4, eos: None }, 1);
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy { max_batch: 4, ..BatchPolicy::default() },
+            1,
+        );
         for (i, p) in prompts.iter().enumerate() {
             s.admit(GenRequest::greedy(i as u64, p.clone(), 6));
         }
@@ -539,6 +629,101 @@ mod tests {
             out[3].ttft_s,
             out[0].total_s
         );
+    }
+
+    /// Satellite: the prefill chunk cap changes *scheduling*, not
+    /// results — greedy tokens are identical whether a prompt prefills
+    /// in one pass or in 3-position chunks.
+    #[test]
+    fn chunked_prefill_matches_unchunked_tokens() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 24);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let prompts: Vec<Vec<u32>> = vec![
+            (0..37u32).map(|i| i % 60).collect(),
+            vec![9, 8, 7],
+            (0..20u32).map(|i| (i * 3) % 60).collect(),
+        ];
+        let run = |chunk: usize| -> Vec<Vec<u32>> {
+            let mut s = Scheduler::new(
+                model.clone(),
+                BatchPolicy { max_batch: 2, prefill_chunk: chunk, ..BatchPolicy::default() },
+                1,
+            );
+            for (i, p) in prompts.iter().enumerate() {
+                s.admit(GenRequest::greedy(i as u64, p.clone(), 5));
+            }
+            let mut out = s.run_to_completion();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect()
+        };
+        assert_eq!(run(3), run(1000), "chunk cap must not change tokens");
+    }
+
+    /// Satellite: a long prompt no longer stalls a co-batched decode —
+    /// the short request finishes while the long prompt is still
+    /// prefilling chunk by chunk.
+    #[test]
+    fn long_prefill_interleaves_with_decode() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 25);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy { max_batch: 2, prefill_chunk: 2, ..BatchPolicy::default() },
+            1,
+        );
+        // Short request first so it occupies a decode slot, then a
+        // 40-position prompt that needs 20 chunks.
+        s.admit(GenRequest::greedy(0, vec![1, 2], 3));
+        let long: Vec<u32> = (0..40u32).map(|i| i % 60).collect();
+        s.admit(GenRequest::greedy(1, long, 2));
+        let mut short_done_while_long_prefilling = false;
+        while s.pending() > 0 {
+            let outs = s.step();
+            if outs.iter().any(|o| o.id() == 0) && s.prefilling_ids().contains(&1) {
+                short_done_while_long_prefilling = true;
+            }
+            // A prefilling sequence owns a batch slot but never a decode
+            // slot.
+            assert!(!s.active_ids().contains(&1) || s.prefilling_ids().is_empty());
+        }
+        assert!(
+            short_done_while_long_prefilling,
+            "the short decode must complete while the long prompt is still prefilling"
+        );
+    }
+
+    /// Cancelling a sequence mid-prefill releases its slot and settles
+    /// it with no generated tokens.
+    #[test]
+    fn cancel_during_prefill_settles_empty() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 26);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy { max_batch: 1, prefill_chunk: 2, ..BatchPolicy::default() },
+            1,
+        );
+        let long: Vec<u32> = (0..30u32).map(|i| i % 60).collect();
+        let sub = Submission::new(GenRequest::greedy(0, long, 5));
+        let flag = sub.cancel_flag();
+        s.admit_submission(sub);
+        s.step(); // first chunk ran; still prefilling
+        assert_eq!(s.prefilling_ids(), vec![0]);
+        flag.store(true, Ordering::SeqCst);
+        let mut saw = false;
+        while s.pending() > 0 {
+            for o in s.step() {
+                match o {
+                    Outcome::Cancelled { id, tokens } => {
+                        assert_eq!(id, 0);
+                        assert!(tokens.is_empty(), "no tokens were generated");
+                        saw = true;
+                    }
+                    other => panic!("unexpected outcome {other:?}"),
+                }
+            }
+        }
+        assert!(saw, "prefilling cancel must settle exactly once");
     }
 
     #[test]

@@ -8,10 +8,14 @@
 //! accepted request gets a [`RequestHandle`] streaming [`Event`]s over its
 //! own channel; `cancel()` flips a shared flag the scheduler observes at
 //! the next step boundary (the sequence leaves the batch, its KV cache is
-//! freed). Replica choice is an internal [`DispatchPolicy`] —
-//! least-outstanding (the vllm-router default) or round-robin.
+//! freed) and the cancel-aware [`AdmissionQueue`] observes on its next
+//! touch (a cancelled-but-still-queued request releases its capacity
+//! slot immediately instead of squatting until dequeue). Replica choice
+//! is an internal [`DispatchPolicy`] — least-outstanding (the
+//! vllm-router default) or round-robin.
 
 use super::batcher::{BatchPolicy, Outcome, Scheduler, Submission};
+use super::queue::{AdmissionQueue, TryPushError};
 use super::{Event, GenRequest, GenResponse, ServeStats};
 use crate::model::transformer::Transformer;
 use crate::util::metrics::{LatencyRecorder, Summary};
@@ -69,6 +73,10 @@ pub struct RequestHandle {
     id: u64,
     rx: mpsc::Receiver<Event>,
     cancel: Arc<AtomicBool>,
+    /// The replica's admission queue, nudged on cancel so a cancelled
+    /// still-queued request frees its capacity slot for blocked
+    /// producers immediately.
+    queue: Arc<AdmissionQueue>,
     finished: bool,
     cancel_on_drop: bool,
 }
@@ -93,11 +101,14 @@ impl RequestHandle {
     /// Ask the scheduler to drop this request at its next step boundary.
     /// The stream still ends with a terminal event (`Cancelled`, or `Done`
     /// if the request won the race by finishing first). A request still
-    /// waiting in the bounded admission queue keeps its queue slot until
-    /// the replica dequeues it (at which point it settles as `Cancelled`
+    /// waiting in the bounded admission queue releases its capacity slot
+    /// as soon as the queue is next touched (it settles as `Cancelled`
     /// without ever prefilling).
     pub fn cancel(&self) {
         self.cancel.store(true, Ordering::SeqCst);
+        // Release a still-queued request's capacity slot right away and
+        // wake any producer blocked on the full queue.
+        self.queue.nudge();
     }
 
     /// Blocking receive of the next lifecycle event. Returns `None` after
@@ -166,12 +177,13 @@ impl Drop for RequestHandle {
         // (a no-op race if the request wins by completing first).
         if self.cancel_on_drop && !self.finished {
             self.cancel.store(true, Ordering::SeqCst);
+            self.queue.nudge();
         }
     }
 }
 
 struct Replica {
-    tx: Option<mpsc::SyncSender<Submission>>,
+    queue: Arc<AdmissionQueue>,
     handle: Option<thread::JoinHandle<ServeStats>>,
     outstanding: Arc<AtomicUsize>,
 }
@@ -226,6 +238,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Prefill chunk cap in positions (default 128): longer prompts
+    /// prefill one chunk per scheduler step, interleaved with the
+    /// running batch's decode steps, so a long prompt cannot stall
+    /// co-batched decodes.
+    pub fn prefill_chunk(mut self, n: usize) -> Self {
+        assert!(n > 0, "prefill chunk must be positive");
+        self.batch.prefill_chunk = n;
+        self
+    }
+
     /// Replica dispatch policy (default least-outstanding).
     pub fn dispatch(mut self, policy: DispatchPolicy) -> Self {
         self.dispatch = policy;
@@ -259,7 +281,8 @@ impl EngineBuilder {
         let model = Arc::new(model);
         for i in 0..self.replicas {
             let m = Arc::clone(&model);
-            let (tx, rx) = mpsc::sync_channel::<Submission>(self.queue_capacity);
+            let queue = Arc::new(AdmissionQueue::new(self.queue_capacity));
+            let q = Arc::clone(&queue);
             let outstanding = Arc::new(AtomicUsize::new(0));
             let out_ctr = Arc::clone(&outstanding);
             let lat = Arc::clone(&latency);
@@ -268,10 +291,10 @@ impl EngineBuilder {
             let seed = self.seed.wrapping_add(i as u64);
             let handle = thread::Builder::new()
                 .name(format!("ams-engine-{i}"))
-                .spawn(move || replica_main(rx, m, policy, seed, out_ctr, lat, ttf))
+                .spawn(move || replica_main(q, m, policy, seed, out_ctr, lat, ttf))
                 .expect("spawn engine replica");
             replicas.push(Replica {
-                tx: Some(tx),
+                queue,
                 handle: Some(handle),
                 outstanding,
             });
@@ -288,10 +311,10 @@ impl EngineBuilder {
 }
 
 /// Replica worker: drain the bounded queue into the scheduler, step it,
-/// settle outcomes. Exits once the engine drops the sender *and* all
+/// settle outcomes. Exits once the engine closes the queue *and* all
 /// in-flight work has finished.
 fn replica_main(
-    rx: mpsc::Receiver<Submission>,
+    queue: Arc<AdmissionQueue>,
     model: Arc<Transformer>,
     policy: BatchPolicy,
     seed: u64,
@@ -305,20 +328,22 @@ fn replica_main(
     loop {
         // Block for work only when idle; otherwise pull between decode
         // steps — but only enough to fill the free batch slots, so the
-        // *bounded channel* stays the real admission queue and
+        // *bounded queue* stays the real admission queue and
         // `queue_capacity` is an honest backpressure bound (draining
         // eagerly would just relocate the backlog into the scheduler's
-        // unbounded queue).
+        // unbounded queue). Cancelled-while-queued submissions drain
+        // here too — the scheduler's sweep settles their terminal
+        // `Cancelled` event without ever prefilling them.
         if sched.pending() == 0 {
-            match rx.recv() {
-                Ok(sub) => sched.admit_submission(sub),
-                Err(_) => break, // disconnected and idle: done
+            match queue.pop_blocking() {
+                Some(sub) => sched.admit_submission(sub),
+                None => break, // closed and idle: done
             }
         }
         while sched.pending() < policy.max_batch {
-            match rx.try_recv() {
-                Ok(sub) => sched.admit_submission(sub),
-                Err(_) => break,
+            match queue.try_pop() {
+                Some(sub) => sched.admit_submission(sub),
+                None => break,
             }
         }
         for o in sched.step() {
@@ -429,25 +454,25 @@ impl Engine {
             ));
         }
         let replica = &self.replicas[idx];
-        // A closed engine surfaces the same typed error as a racing
-        // disconnect — never a panic on user input.
-        let Some(tx) = replica.tx.as_ref() else {
-            return Err(EngineError::Shutdown(req));
-        };
         let (tx_ev, rx_ev) = mpsc::channel::<Event>();
         // The TTFT stopwatch starts inside `Submission` — before any
-        // queue wait, including a blocking send on a full queue.
+        // queue wait, including a blocking push on a full queue.
         let sub = Submission::with_events(req, tx_ev.clone());
         let id = sub.id();
         let cancel = sub.cancel_flag();
         let _ = tx_ev.send(Event::Queued { id });
         replica.outstanding.fetch_add(1, Ordering::SeqCst);
+        // A closed engine surfaces the typed `Shutdown` error with the
+        // request handed back — never a panic on user input.
         let send_result = if block {
-            tx.send(sub).map_err(|e| EngineError::Shutdown(e.0.into_request()))
+            replica
+                .queue
+                .push(sub)
+                .map_err(|s| EngineError::Shutdown(s.into_request()))
         } else {
-            tx.try_send(sub).map_err(|e| match e {
-                mpsc::TrySendError::Full(s) => EngineError::QueueFull(s.into_request()),
-                mpsc::TrySendError::Disconnected(s) => EngineError::Shutdown(s.into_request()),
+            replica.queue.try_push(sub).map_err(|e| match e {
+                TryPushError::Full(s) => EngineError::QueueFull(s.into_request()),
+                TryPushError::Closed(s) => EngineError::Shutdown(s.into_request()),
             })
         };
         match send_result {
@@ -455,6 +480,7 @@ impl Engine {
                 id,
                 rx: rx_ev,
                 cancel,
+                queue: Arc::clone(&replica.queue),
                 finished: false,
                 cancel_on_drop: false,
             }),
@@ -481,13 +507,13 @@ impl Engine {
     }
 
     /// Stop accepting new work without joining the replicas: every
-    /// queue is disconnected, in-flight requests keep decoding to
+    /// queue is closed, in-flight requests keep decoding to
     /// completion, and any later `submit`/`try_submit` returns
     /// [`EngineError::Shutdown`] with the request handed back. Call
     /// [`Engine::shutdown`] afterwards to join and collect statistics.
     pub fn close(&mut self) {
-        for r in &mut self.replicas {
-            r.tx.take();
+        for r in &self.replicas {
+            r.queue.close();
         }
     }
 
@@ -498,9 +524,9 @@ impl Engine {
     }
 
     fn shutdown_inner(&mut self) -> ServeStats {
-        // Disconnect every queue first so replicas drain concurrently.
-        for r in &mut self.replicas {
-            r.tx.take();
+        // Close every queue first so replicas drain concurrently.
+        for r in &self.replicas {
+            r.queue.close();
         }
         let mut total = ServeStats::default();
         for r in &mut self.replicas {
@@ -595,7 +621,11 @@ mod tests {
         // The engine path (chunked prefill + streaming) must produce the
         // same greedy tokens as a bare scheduler fed the same requests.
         let prompts: Vec<Vec<u32>> = vec![vec![1, 2, 3], vec![9, 8], vec![4], vec![5, 6, 7, 8]];
-        let mut sched = Scheduler::new(model(), BatchPolicy { max_batch: 4, eos: None }, 1);
+        let mut sched = Scheduler::new(
+            model(),
+            BatchPolicy { max_batch: 4, ..BatchPolicy::default() },
+            1,
+        );
         for (i, p) in prompts.iter().enumerate() {
             sched.admit(GenRequest::greedy(i as u64, p.clone(), 6));
         }
@@ -732,6 +762,65 @@ mod tests {
             h.wait();
         }
         eng.shutdown();
+    }
+
+    /// Satellite regression: a request cancelled while still in the
+    /// bounded admission queue releases its capacity slot immediately —
+    /// a subsequent try_submit succeeds with no dequeue in between —
+    /// and the cancelled request still settles exactly once, without
+    /// ever prefilling.
+    #[test]
+    fn cancelled_queued_request_frees_queue_slot() {
+        // max_batch 1 + a long-running active request: the worker never
+        // touches the queue while request 0 decodes, so the queue state
+        // is fully deterministic. A long context keeps request 0
+        // decoding for 1500 steps — ctx_full cannot retire it inside
+        // the test window (test_tiny's max_seq of 64 would).
+        let cfg = ModelConfig {
+            max_seq: 2048,
+            ..ModelConfig::test_tiny()
+        };
+        let ck = synthetic_checkpoint(&cfg, 33);
+        let long_ctx = Transformer::from_checkpoint(&ck).unwrap();
+        let eng = Engine::builder()
+            .max_batch(1)
+            .queue_capacity(1)
+            .seed(6)
+            .build(long_ctx);
+        let active = eng.submit(GenRequest::greedy(0, vec![1, 2], 1500)).unwrap();
+        // Wait for the worker to admit request 0 so the queue is empty.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let queued = loop {
+            match eng.try_submit(GenRequest::greedy(1, vec![3], 400)) {
+                Ok(h) => break h,
+                Err(EngineError::QueueFull(_)) => {
+                    assert!(std::time::Instant::now() < deadline, "worker never admitted");
+                    thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        };
+        // The queue now holds request 1; capacity 1 ⇒ full.
+        match eng.try_submit(GenRequest::greedy(2, vec![4], 400)) {
+            Err(EngineError::QueueFull(req)) => assert_eq!(req.id, 2),
+            other => panic!("queue must be full: {:?}", other.map(|h| h.id())),
+        }
+        // Cancel the queued request: its slot frees without any dequeue
+        // (the worker is still busy decoding request 0).
+        queued.cancel();
+        let third = eng
+            .try_submit(GenRequest::greedy(3, vec![5], 4))
+            .expect("cancelled queued request released its capacity slot");
+        // Everyone settles exactly once: 1 was cancelled in-queue (no
+        // tokens, never prefilled), 3 completes once 0 is cancelled.
+        active.cancel();
+        assert!(active.wait().is_none());
+        assert!(queued.wait().is_none(), "queued cancel yields no response");
+        let r = third.wait().expect("replacement request completes");
+        assert_eq!(r.tokens.len(), 4);
+        let stats = eng.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.cancelled, 2);
     }
 
     /// Satellite: submitting to a closed engine surfaces the typed

@@ -34,6 +34,7 @@
 
 pub mod batcher;
 pub mod engine;
+mod queue;
 
 pub use engine::{DispatchPolicy, Engine, EngineBuilder, EngineError, RequestHandle};
 

@@ -1,0 +1,239 @@
+//! Cancel-aware bounded admission queue.
+//!
+//! The engine's replica queue used to be an `mpsc::sync_channel`, which
+//! made a cancelled-but-still-queued request hold its capacity slot
+//! until the replica happened to dequeue it — under backpressure a
+//! client could cancel its way out of a full queue and still be told
+//! `QueueFull`. This queue observes each [`Submission`]'s cancel flag:
+//! every push/pop first *purges* cancelled entries out of the live
+//! window (releasing their capacity slots immediately) into a reaped
+//! side-list. Reaped submissions are still handed to the consumer — the
+//! scheduler settles them with their terminal `Cancelled` event on its
+//! normal sweep path, so the exactly-one-terminal-event invariant is
+//! untouched; they just stop counting against `capacity` the moment the
+//! queue is next touched.
+
+use super::batcher::Submission;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a non-blocking push was refused; both variants hand the
+/// submission back.
+pub(crate) enum TryPushError {
+    Full(Submission),
+    Closed(Submission),
+}
+
+struct State {
+    /// Un-cancelled submissions; only these count against `capacity`.
+    live: VecDeque<Submission>,
+    /// Cancelled-while-queued submissions awaiting their terminal
+    /// settle; drained ahead of live entries.
+    reaped: VecDeque<Submission>,
+    closed: bool,
+}
+
+impl State {
+    /// Move cancelled submissions out of the live window, releasing
+    /// their capacity slots.
+    fn purge(&mut self) {
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].cancelled() {
+                let s = self.live.remove(i).expect("index in bounds");
+                self.reaped.push_back(s);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+pub(crate) struct AdmissionQueue {
+    capacity: usize,
+    state: Mutex<State>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        assert!(capacity > 0, "queue capacity must be positive");
+        AdmissionQueue {
+            capacity,
+            state: Mutex::new(State {
+                live: VecDeque::new(),
+                reaped: VecDeque::new(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Blocking push: waits while the live window is at capacity.
+    /// Returns the submission when the queue is closed.
+    pub fn push(&self, sub: Submission) -> Result<(), Submission> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            if st.closed {
+                return Err(sub);
+            }
+            st.purge();
+            if st.live.len() < self.capacity {
+                st.live.push_back(sub);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).expect("queue lock");
+        }
+    }
+
+    /// Non-blocking push; a full live window (after purging cancelled
+    /// entries) refuses with [`TryPushError::Full`].
+    pub fn try_push(&self, sub: Submission) -> Result<(), TryPushError> {
+        let mut st = self.state.lock().expect("queue lock");
+        if st.closed {
+            return Err(TryPushError::Closed(sub));
+        }
+        st.purge();
+        if st.live.len() >= self.capacity {
+            return Err(TryPushError::Full(sub));
+        }
+        st.live.push_back(sub);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained
+    /// (reaped entries included — they still need their terminal event).
+    pub fn pop_blocking(&self) -> Option<Submission> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            st.purge();
+            if let Some(s) = st.reaped.pop_front() {
+                self.not_full.notify_one();
+                return Some(s);
+            }
+            if let Some(s) = st.live.pop_front() {
+                self.not_full.notify_one();
+                return Some(s);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("queue lock");
+        }
+    }
+
+    /// Non-blocking pop (`None` = nothing available right now).
+    pub fn try_pop(&self) -> Option<Submission> {
+        let mut st = self.state.lock().expect("queue lock");
+        st.purge();
+        let s = st.reaped.pop_front().or_else(|| st.live.pop_front());
+        if s.is_some() {
+            self.not_full.notify_one();
+        }
+        s
+    }
+
+    /// Stop accepting work; wakes every blocked producer and consumer.
+    /// Entries already queued (live or reaped) still drain.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("queue lock");
+        st.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Re-examine the queue after a cancel flag flipped: purge cancelled
+    /// entries out of the live window and wake blocked producers. Called
+    /// from [`RequestHandle::cancel`](super::engine::RequestHandle::cancel)
+    /// so a *blocking* `submit` parked on a full queue benefits from the
+    /// freed slot immediately — not only the next `try_push`/pop.
+    pub fn nudge(&self) {
+        let mut st = self.state.lock().expect("queue lock");
+        st.purge();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenRequest;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    fn sub(id: u64) -> Submission {
+        Submission::new(GenRequest::greedy(id, vec![1], 4))
+    }
+
+    #[test]
+    fn fifo_within_capacity() {
+        let q = AdmissionQueue::new(4);
+        assert!(q.try_push(sub(0)).is_ok());
+        assert!(q.try_push(sub(1)).is_ok());
+        assert_eq!(q.try_pop().unwrap().id(), 0);
+        assert_eq!(q.try_pop().unwrap().id(), 1);
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn full_refuses_and_hands_back() {
+        let q = AdmissionQueue::new(1);
+        assert!(q.try_push(sub(0)).is_ok());
+        match q.try_push(sub(1)) {
+            Err(TryPushError::Full(s)) => assert_eq!(s.id(), 1),
+            _ => panic!("expected Full"),
+        }
+    }
+
+    /// Satellite regression: cancelling a queued submission releases its
+    /// capacity slot immediately — the next push succeeds without any
+    /// dequeue — and the cancelled submission still comes out (ahead of
+    /// live entries) so it can settle its terminal event.
+    #[test]
+    fn cancel_releases_capacity_immediately() {
+        let q = AdmissionQueue::new(1);
+        let s = sub(7);
+        let flag = s.cancel_flag();
+        assert!(q.try_push(s).is_ok());
+        match q.try_push(sub(8)) {
+            Err(TryPushError::Full(s)) => assert_eq!(s.id(), 8),
+            _ => panic!("queue must be full before the cancel"),
+        }
+        flag.store(true, Ordering::SeqCst);
+        assert!(q.try_push(sub(8)).is_ok(), "cancel freed the slot");
+        // The cancelled submission is reaped, not lost: it drains first.
+        assert_eq!(q.try_pop().unwrap().id(), 7);
+        assert_eq!(q.try_pop().unwrap().id(), 8);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert!(t.join().unwrap().is_none());
+        // Closed queue refuses new work, handing the submission back.
+        assert!(q.push(sub(1)).is_err());
+        assert!(matches!(q.try_push(sub(2)), Err(TryPushError::Closed(_))));
+    }
+
+    #[test]
+    fn close_drains_remaining_entries() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.try_push(sub(0)).is_ok());
+        let s = sub(1);
+        s.cancel_flag().store(true, Ordering::SeqCst);
+        assert!(q.try_push(s).is_ok());
+        q.close();
+        // Reaped-first drain, then live, then None.
+        assert_eq!(q.pop_blocking().unwrap().id(), 1);
+        assert_eq!(q.pop_blocking().unwrap().id(), 0);
+        assert!(q.pop_blocking().is_none());
+    }
+}

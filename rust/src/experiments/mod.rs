@@ -21,23 +21,31 @@ use std::path::Path;
 
 /// Load the build-time-trained tiny LM; fall back to a synthetic model of
 /// the same architecture when artifacts are absent (CI without `make
-/// artifacts`). Returns (model, heldout tokens, "trained"/"synthetic").
+/// artifacts`). Returns (model, heldout tokens, kind) where kind is
+/// "trained" / "trained, synthetic heldout" / "synthetic". A missing
+/// held-out corpus never downgrades existing trained *weights* — only
+/// the evaluation/calibration text falls back to the synthetic grammar.
 pub fn load_model(artifacts: &Path) -> Result<(Transformer, Vec<u32>, &'static str)> {
     let ckpt_path = artifacts.join("tiny_lm.amsz");
     let held_path = artifacts.join("corpus_heldout.txt");
-    if ckpt_path.exists() && held_path.exists() {
+    if ckpt_path.exists() {
         let ck = Checkpoint::load(&ckpt_path)?;
         let model = Transformer::from_checkpoint(&ck)?;
-        let text = std::fs::read_to_string(&held_path)?;
-        Ok((model, tokenizer::encode(&text), "trained"))
-    } else {
-        let ck = synthetic_checkpoint(&ModelConfig::tiny_lm(), 0xA11CE);
-        let model = Transformer::from_checkpoint(&ck)?;
-        // Synthetic "heldout": periodic + template text (untrained model
-        // still produces a valid ordering signal via logit degradation).
-        let text = crate::model::synthetic_eval_text();
-        Ok((model, tokenizer::encode(&text), "synthetic"))
+        return match std::fs::read_to_string(&held_path) {
+            Ok(text) => Ok((model, tokenizer::encode(&text), "trained")),
+            Err(_) => Ok((
+                model,
+                tokenizer::encode(&crate::model::synthetic_eval_text()),
+                "trained, synthetic heldout",
+            )),
+        };
     }
+    let ck = synthetic_checkpoint(&ModelConfig::tiny_lm(), 0xA11CE);
+    let model = Transformer::from_checkpoint(&ck)?;
+    // Synthetic "heldout": periodic + template text (untrained model
+    // still produces a valid ordering signal via logit degradation).
+    let text = crate::model::synthetic_eval_text();
+    Ok((model, tokenizer::encode(&text), "synthetic"))
 }
 
 /// One row of the accuracy suite (Table 2 proxy).

@@ -9,6 +9,9 @@
 //!   [`QuantPlan`](quant::QuantPlan)s (mixed precision by layer/role),
 //!   RTN → mantissa-sharing adaptive search → pack in one typed-error
 //!   flow, with per-layer [`QuantReport`](quant::QuantReport)s.
+//! - [`calib`] — activation-aware calibration: per-layer sensitivity
+//!   analysis over tapped activations and automatic
+//!   [`QuantPlan`](quant::QuantPlan) search under a bits/weight budget.
 //! - [`pack`] — prepacked storage layouts (TC-FPx 4+2, FP5.33 half-word,
 //!   FP4.25 segmented, ...) with per-row and per-group scale streams.
 //! - [`restore`] — bit-level FPx→FP16 restoration (SHIFT/AND/OR and LUT).
@@ -24,6 +27,7 @@
 //! - [`tensor`], [`util`] — substrates built in-repo.
 
 pub mod baselines;
+pub mod calib;
 pub mod coordinator;
 pub mod eval;
 pub mod experiments;

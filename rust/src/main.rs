@@ -9,6 +9,7 @@
 //!   table3 [--measured] simulated (default) or measured speedup grid
 //!   fig6               combined speedup curves incl. baselines
 //!   ksweep             A3: bits/weight vs MSE frontier
+//!   calibrate          activation-statistics pass + budgeted plan search
 //!   quantize           quantize a checkpoint, report size + error
 //!   eval               evaluate a checkpoint under one scheme
 //!   serve              run the batched serving workload (E9)
@@ -18,6 +19,7 @@
 //! Common flags: --artifacts DIR (default ./artifacts), --out FILE (write
 //! markdown/CSV instead of stdout).
 
+use ams_quant::calib::{CalibConfig, CalibReport, Calibrator};
 use ams_quant::coordinator::{DispatchPolicy, Engine, GenRequest, RequestHandle};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
@@ -25,7 +27,7 @@ use ams_quant::formats::FpFormat;
 use ams_quant::model::checkpoint::{self, Checkpoint};
 use ams_quant::model::sampler::Sampler;
 use ams_quant::model::transformer::Transformer;
-use ams_quant::model::{synthetic, tokenizer, ModelConfig};
+use ams_quant::model::{synthetic_eval_text, tokenizer};
 use ams_quant::quant::{Granularity, LayerRole, QuantConfig, QuantPlan, QuantReport, Quantizer};
 use ams_quant::report::{f, Table};
 use ams_quant::util::bench::BenchConfig;
@@ -61,6 +63,7 @@ fn run(args: &Args) -> Result<()> {
         Some("table3") => cmd_table3(args),
         Some("fig6") => cmd_fig6(args),
         Some("ksweep") => cmd_ksweep(args),
+        Some("calibrate") => cmd_calibrate(args, &artifacts),
         Some("quantize") => cmd_quantize(args, &artifacts),
         Some("eval") => cmd_eval(args, &artifacts),
         Some("serve") => cmd_serve(args, &artifacts),
@@ -88,17 +91,26 @@ fn print_help() {
          \x20 formats | fig2a | fig2b | fig3 | table2 | table3 [--measured]\n\
          \x20 fig6 | ksweep | sim --rows R --cols C\n\
          tools:\n\
+         \x20 calibrate [--budget-bits 5.0 --calib-tokens N --calib-window W]\n\
+         \x20           [--include-lm-head]\n\
+         \x20           [--report CALIB_REPORT.json --plan-out PLAN.json]\n\
          \x20 quantize --scheme S [--ckpt file.amsz] [--save out.amsq]\n\
          \x20          [--attn S2 --mlp S3 --lm-head S4 --group-size G]\n\
+         \x20          [--auto-plan [--budget-bits B --calib-tokens N]]\n\
+         \x20          [--plan PLAN.json]\n\
          \x20 eval --scheme S [--tokens N]\n\
          \x20 serve --requests N --max-batch B --replicas R\n\
          \x20       [--scheme S --attn S2 --mlp S3 --lm-head S4 --group-size G]\n\
+         \x20       [--auto-plan | --plan PLAN.json]\n\
          \x20       [--quantized file.amsq   (exclusive of the plan flags)]\n\
          \x20       [--queue-capacity Q --dispatch least-outstanding|round-robin]\n\
+         \x20       [--prefill-chunk P]\n\
          \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
          plan flags: --scheme is the model-wide default; --attn/--mlp/--lm-head\n\
          \x20 override per role (mixed precision); --group-size G uses per-group\n\
-         \x20 scales (g weights per scale) instead of per-channel\n\
+         \x20 scales (g weights per scale) instead of per-channel; --auto-plan\n\
+         \x20 searches the plan from calibration activations under --budget-bits;\n\
+         \x20 --plan loads a plan JSON written by calibrate --plan-out\n\
          common flags: --artifacts DIR  --out FILE  --csv"
     );
 }
@@ -274,20 +286,122 @@ fn quantizer_from_args(args: &Args, default_scheme: &str) -> Result<Option<Quant
     Ok(Some(Quantizer::new(plan)))
 }
 
-fn load_base_model(args: &Args, artifacts: &Path) -> Result<Transformer> {
-    let ckpt_path = args
-        .get("ckpt")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| artifacts.join("tiny_lm.amsz"));
-    if ckpt_path.exists() {
-        Transformer::from_checkpoint(&Checkpoint::load(&ckpt_path)?)
-    } else {
-        eprintln!("# {} missing; using synthetic model", ckpt_path.display());
-        Transformer::from_checkpoint(&synthetic::synthetic_checkpoint(
-            &ModelConfig::tiny_lm(),
-            1,
-        ))
+/// Base model plus a matching calibration corpus for `calibrate` /
+/// `quantize`. Without `--ckpt` this is exactly `exp::load_model`'s
+/// model/heldout pair (one rule, one read — the same pair `serve`
+/// uses), so a searched plan is always applied to the model it was
+/// calibrated on. An explicit `--ckpt` pairs with the synthetic
+/// grammar text; `Calibrator::collect` rejects the pair cleanly if the
+/// checkpoint's vocab cannot embed it.
+fn load_base_with_corpus(args: &Args, artifacts: &Path) -> Result<(Transformer, Vec<u32>)> {
+    if let Some(ckpt) = args.get("ckpt") {
+        let model = Transformer::from_checkpoint(&Checkpoint::load(Path::new(ckpt))?)?;
+        return Ok((model, tokenizer::encode(&synthetic_eval_text())));
     }
+    let (model, heldout, kind) = exp::load_model(artifacts)?;
+    if kind == "synthetic" {
+        eprintln!("# trained artifacts missing; using synthetic model");
+    }
+    Ok((model, heldout))
+}
+
+// (No seed flag: the CLI corpus is the deterministic held-out/synthetic
+// text, so a seed would be recorded but change nothing. `CalibConfig::
+// seed` stays an API-level knob for `Calibrator::synthetic_corpus`.)
+fn calib_config_from_args(args: &Args) -> CalibConfig {
+    CalibConfig {
+        budget_bits: args.get_f64("budget-bits", 5.0),
+        calib_tokens: args.get_usize("calib-tokens", 4096),
+        window: args.get_usize("calib-window", 128),
+        include_lm_head: args.has("include-lm-head"),
+        ..CalibConfig::default()
+    }
+}
+
+/// Resolve the quantization source for `quantize`/`serve`:
+/// `--auto-plan` searches the plan from calibration activations,
+/// `--plan FILE` loads a plan JSON, otherwise the manual plan flags
+/// apply (`None` = dense reference). The manual flags conflict with
+/// both automatic paths rather than being silently ignored.
+fn resolve_quantizer(
+    args: &Args,
+    corpus: &[u32],
+    base: &Transformer,
+    default_scheme: &str,
+) -> Result<Option<(Quantizer, Option<CalibReport>)>> {
+    const MANUAL: [&str; 5] = ["scheme", "attn", "mlp", "lm-head", "group-size"];
+    if args.has("auto-plan") {
+        for flag in MANUAL {
+            if args.get(flag).is_some() {
+                bail!("--auto-plan searches the plan from calibration data; --{flag} cannot be combined");
+            }
+        }
+        if args.get("plan").is_some() {
+            bail!("--auto-plan and --plan are exclusive (one searches, one loads)");
+        }
+        let cfg = calib_config_from_args(args);
+        eprintln!(
+            "# calibrating: budget {} bits/w over {} corpus tokens",
+            cfg.budget_bits,
+            corpus.len().min(cfg.calib_tokens)
+        );
+        let (plan, report) = Calibrator::new(cfg)
+            .calibrate(base, corpus)
+            .map_err(|e| anyhow::anyhow!("calibration failed: {e}"))?;
+        eprintln!(
+            "# searched plan: achieved {:.3} bits/w (budget {}), act-SQNR {:.2} dB",
+            report.achieved_bits, report.budget_bits, report.act_sqnr_db
+        );
+        return Ok(Some((Quantizer::new(plan), Some(report))));
+    }
+    if let Some(path) = args.get("plan") {
+        for flag in MANUAL {
+            if args.get(flag).is_some() {
+                bail!("--plan loads a complete plan; --{flag} cannot be combined");
+            }
+        }
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read plan {path}"))?;
+        let j = ams_quant::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let plan = QuantPlan::from_json(&j).map_err(|e| anyhow::anyhow!("invalid plan: {e}"))?;
+        return Ok(Some((Quantizer::new(plan), None)));
+    }
+    Ok(quantizer_from_args(args, default_scheme)?.map(|q| (q, None)))
+}
+
+/// The `calibrate` subcommand: activation-statistics pass → sensitivity
+/// scores → budgeted plan search → CALIB_REPORT.json (+ optional plan
+/// JSON for `quantize --plan` / `serve --plan`).
+fn cmd_calibrate(args: &Args, artifacts: &Path) -> Result<()> {
+    let (base, corpus) = load_base_with_corpus(args, artifacts)?;
+    let cfg = calib_config_from_args(args);
+    eprintln!(
+        "# calibrating: budget {} bits/w, {} corpus tokens (window {}), lm_head {}",
+        cfg.budget_bits,
+        corpus.len().min(cfg.calib_tokens),
+        cfg.window,
+        if cfg.include_lm_head { "scored" } else { "dense" },
+    );
+    let (plan, report) = Calibrator::new(cfg)
+        .calibrate(&base, &corpus)
+        .map_err(|e| anyhow::anyhow!("calibration failed: {e}"))?;
+    emit_table(args, &report.table())?;
+    eprintln!(
+        "# achieved {:.3} bits/w (budget {}, {}), act-SQNR {:.2} dB over {} calib tokens",
+        report.achieved_bits,
+        report.budget_bits,
+        if report.budget_met { "met" } else { "NOT met" },
+        report.act_sqnr_db,
+        report.calib_tokens,
+    );
+    let rpath = args.get_or("report", "CALIB_REPORT.json");
+    std::fs::write(rpath, report.to_json().to_string_pretty())?;
+    eprintln!("# wrote calibration report {rpath}");
+    if let Some(ppath) = args.get("plan-out") {
+        std::fs::write(ppath, plan.to_json().to_string_pretty())?;
+        eprintln!("# wrote plan {ppath} (use with quantize/serve --plan)");
+    }
+    Ok(())
 }
 
 fn report_table(reports: &[QuantReport], title: &str) -> Table {
@@ -322,9 +436,9 @@ fn report_table(reports: &[QuantReport], title: &str) -> Table {
 }
 
 fn cmd_quantize(args: &Args, artifacts: &Path) -> Result<()> {
-    let quantizer = quantizer_from_args(args, "fp4.25")?
+    let (base, corpus) = load_base_with_corpus(args, artifacts)?;
+    let (quantizer, calib) = resolve_quantizer(args, &corpus, &base, "fp4.25")?
         .context("quantize needs a quantized scheme (fp32 is the dense reference)")?;
-    let base = load_base_model(args, artifacts)?;
     let (q, reports) = base
         .quantized_report(&quantizer)
         .map_err(|e| anyhow::anyhow!("quantization failed: {e}"))?;
@@ -350,8 +464,14 @@ fn cmd_quantize(args: &Args, artifacts: &Path) -> Result<()> {
         mean_mse
     );
     if let Some(path) = args.get("save") {
-        checkpoint::save_quantized(&q, Path::new(path))?;
-        eprintln!("# wrote quantized checkpoint {path}");
+        // Auto-planned exports carry their calibration provenance in the
+        // AMSQ header — the checkpoint records how its plan was found.
+        let prov = calib.as_ref().map(|r| r.provenance());
+        checkpoint::save_quantized_with(&q, Path::new(path), prov.as_ref())?;
+        eprintln!(
+            "# wrote quantized checkpoint {path}{}",
+            if prov.is_some() { " (calibration provenance embedded)" } else { "" }
+        );
     }
     Ok(())
 }
@@ -380,13 +500,14 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         "least-outstanding" => DispatchPolicy::LeastOutstanding,
         other => bail!("unknown dispatch policy '{other}' (least-outstanding | round-robin)"),
     };
+    let prefill_chunk = args.get_usize("prefill-chunk", 128);
     let (base, heldout, kind) = exp::load_model(artifacts)?;
     // --quantized loads a prequantized AMSQ export (the offline
     // "quantize once" artifact) — its scheme is baked in, so the plan
-    // flags are rejected rather than silently ignored; otherwise the
-    // plan flags quantize here.
+    // flags (manual, --plan and --auto-plan alike) are rejected rather
+    // than silently ignored; otherwise the plan flags quantize here.
     let model = if let Some(qpath) = args.get("quantized") {
-        for flag in ["scheme", "attn", "mlp", "lm-head", "group-size"] {
+        for flag in ["scheme", "attn", "mlp", "lm-head", "group-size", "plan"] {
             if args.get(flag).is_some() {
                 bail!(
                     "--quantized serves the scheme baked into {qpath}; --{flag} cannot be \
@@ -394,11 +515,23 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
                 );
             }
         }
-        checkpoint::load_quantized(Path::new(qpath))?
+        if args.has("auto-plan") {
+            bail!(
+                "--quantized serves the plan baked into {qpath}; --auto-plan cannot be \
+                 combined (re-export with `quantize --auto-plan --save`)"
+            );
+        }
+        let (m, prov) = checkpoint::load_quantized_meta(Path::new(qpath))?;
+        if let Some(p) = prov {
+            eprintln!("# calibration provenance: {}", p.to_string());
+        }
+        m
     } else {
-        match quantizer_from_args(args, "fp5.33")? {
+        // Serve calibrates against the model + heldout pair it serves —
+        // no separate corpus load that could drift from `exp::load_model`.
+        match resolve_quantizer(args, &heldout, &base, "fp5.33")? {
             None => base,
-            Some(quantizer) => base
+            Some((quantizer, _)) => base
                 .quantized_with(&quantizer)
                 .map_err(|e| anyhow::anyhow!("quantization failed: {e}"))?,
         }
@@ -420,6 +553,7 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         .max_batch(max_batch)
         .queue_capacity(queue_capacity)
         .dispatch(dispatch)
+        .prefill_chunk(prefill_chunk)
         .seed(1)
         .build(model);
     let wall = ams_quant::util::timer::Timer::start();
@@ -491,7 +625,7 @@ fn cmd_pjrt(args: &Args, artifacts: &Path) -> Result<()> {
     let batch = entry.req_usize("batch").unwrap();
 
     let mut rng = Rng::new(1);
-    let w = synthetic::llm_weight(rows, cols, &Default::default(), &mut rng);
+    let w = ams_quant::model::synthetic::llm_weight(rows, cols, &Default::default(), &mut rng);
     let lin = exp::make_linear(&w, scheme);
     let x = exp::random_acts(batch, cols, &mut rng);
 

@@ -232,6 +232,19 @@ fn linear_entry(name: &str, l: &Linear, p: &mut QPayload) -> Json {
 /// bit-identical logits. Dense projections (e.g. an untargeted lm_head)
 /// are stored dense.
 pub fn save_quantized(model: &Transformer, path: &Path) -> Result<()> {
+    save_quantized_with(model, path, None)
+}
+
+/// [`save_quantized`] with an optional provenance blob embedded into the
+/// header under `"calibration"` — the auto-plan workflow records how the
+/// plan was searched (budget, achieved bits, corpus size, seed; see
+/// [`CalibReport::provenance`](crate::calib::CalibReport::provenance)),
+/// so a checkpoint carries its own calibration audit trail.
+pub fn save_quantized_with(
+    model: &Transformer,
+    path: &Path,
+    provenance: Option<&Json>,
+) -> Result<()> {
     let mut p = QPayload { f32s: Vec::new(), words: Vec::new() };
     let mut entries = Vec::new();
     entries.push(dense_entry("embed", model.embed.shape(), model.embed.data(), &mut p));
@@ -269,6 +282,9 @@ pub fn save_quantized(model: &Transformer, path: &Path) -> Result<()> {
         .set("tensors", Json::Arr(entries));
     if let Some(s) = model.scheme {
         header.set("scheme", Json::Str(s.id()));
+    }
+    if let Some(p) = provenance {
+        header.set("calibration", p.clone());
     }
     let hbytes = header.to_string().into_bytes();
 
@@ -374,6 +390,12 @@ fn read_linear(e: &Json, f32s: &[f32], words: &[u16]) -> Result<Linear> {
 
 /// Load a quantized model exported by [`save_quantized`].
 pub fn load_quantized(path: &Path) -> Result<Transformer> {
+    load_quantized_meta(path).map(|(model, _)| model)
+}
+
+/// [`load_quantized`] plus the header's calibration provenance blob
+/// (when the export embedded one via [`save_quantized_with`]).
+pub fn load_quantized_meta(path: &Path) -> Result<(Transformer, Option<Json>)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
     );
@@ -397,6 +419,7 @@ pub fn load_quantized(path: &Path) -> Result<Transformer> {
     let f32_len = header
         .req_usize("f32_len")
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let provenance = header.get("calibration").cloned();
 
     let mut payload = Vec::new();
     f.read_to_end(&mut payload)?;
@@ -491,14 +514,17 @@ pub fn load_quantized(path: &Path) -> Result<Transformer> {
     check_vec("final_norm", &final_norm)?;
     let lm_head = read_linear(entry("lm_head")?, &f32s, &words)?;
     check_dims("lm_head", &lm_head, vocab, d)?;
-    Ok(Transformer {
-        cfg: config,
-        embed,
-        layers,
-        final_norm,
-        lm_head,
-        scheme,
-    })
+    Ok((
+        Transformer {
+            cfg: config,
+            embed,
+            layers,
+            final_norm,
+            lm_head,
+            scheme,
+        },
+        provenance,
+    ))
 }
 
 #[cfg(test)]
@@ -566,6 +592,42 @@ mod tests {
             std::fs::write(&path, &bytes[..cut]).unwrap();
             assert!(load_quantized(&path).is_err(), "cut at {cut} must error");
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Calibration provenance embedded at export survives the round trip
+    /// verbatim, and plain exports report `None`.
+    #[test]
+    fn calibration_provenance_roundtrip() {
+        use crate::model::synthetic::synthetic_checkpoint;
+        use crate::quant::{QuantConfig, Quantizer};
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 79);
+        let base = Transformer::from_checkpoint(&ck).unwrap();
+        let q = base
+            .quantized_with(
+                &Quantizer::uniform(QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap(),
+            )
+            .unwrap();
+        let dir = std::env::temp_dir().join("ams_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prov.amsq");
+
+        let mut prov = Json::obj();
+        prov.set("budget_bits", Json::Num(5.0))
+            .set("achieved_bits", Json::Num(4.98))
+            .set("calib_tokens", Json::Num(4096.0))
+            .set("seed", Json::Num(7.0));
+        save_quantized_with(&q, &path, Some(&prov)).unwrap();
+        let (back, meta) = load_quantized_meta(&path).unwrap();
+        assert_eq!(meta.as_ref(), Some(&prov), "provenance survives verbatim");
+        // The model itself is unaffected by the extra header field.
+        let mut c1 = q.new_cache();
+        let mut c2 = back.new_cache();
+        assert_eq!(q.forward(3, 0, &mut c1), back.forward(3, 0, &mut c2));
+
+        save_quantized(&q, &path).unwrap();
+        let (_, meta) = load_quantized_meta(&path).unwrap();
+        assert!(meta.is_none(), "plain exports carry no provenance");
         std::fs::remove_file(&path).ok();
     }
 

@@ -709,6 +709,52 @@ impl Transformer {
         cache: &mut KvCache,
         scratch: &'s mut ForwardScratch,
     ) -> &'s [f32] {
+        self.prefill_inner(tokens, cache, scratch, None, true)
+    }
+
+    /// Prefill an *intermediate* chunk of a prompt: identical cache
+    /// writes to [`Transformer::forward_prefill_with`] but no final-norm
+    /// / lm_head pass — those logits would be discarded anyway, and at a
+    /// 128-position chunk cap a long prompt would otherwise pay one
+    /// useless `[vocab, d]` GEMV per chunk. Call
+    /// [`Transformer::forward_prefill_with`] for the last chunk to get
+    /// the next-token logits.
+    pub fn forward_prefill_chunk(
+        &self,
+        tokens: &[u32],
+        cache: &mut KvCache,
+        scratch: &mut ForwardScratch,
+    ) {
+        self.prefill_inner(tokens, cache, scratch, None, false);
+    }
+
+    /// Chunked prefill with calibration taps: identical math to
+    /// [`Transformer::forward_prefill_with`], additionally folding every
+    /// projection-input activation block into the running per-channel
+    /// moments of `taps` (see [`crate::calib::stats::ModelTaps`]). The
+    /// taps record running statistics only — no activation storage — so
+    /// a calibration corpus of any length streams at O(d) extra memory.
+    pub fn forward_prefill_tapped<'s>(
+        &self,
+        tokens: &[u32],
+        cache: &mut KvCache,
+        scratch: &'s mut ForwardScratch,
+        taps: &mut crate::calib::stats::ModelTaps,
+    ) -> &'s [f32] {
+        self.prefill_inner(tokens, cache, scratch, Some(taps), true)
+    }
+
+    fn prefill_inner<'s>(
+        &self,
+        tokens: &[u32],
+        cache: &mut KvCache,
+        scratch: &'s mut ForwardScratch,
+        mut taps: Option<&mut crate::calib::stats::ModelTaps>,
+        need_logits: bool,
+    ) -> &'s [f32] {
+        // The tapped path always needs the head pass (head_in site +
+        // token accounting live there).
+        let need_logits = need_logits || taps.is_some();
         let n = tokens.len();
         assert!(n > 0, "empty prefill chunk");
         let pos0 = cache.len;
@@ -746,6 +792,9 @@ impl Transformer {
         for (li, layer) in self.layers.iter().enumerate() {
             for i in 0..n {
                 rmsnorm(xb.row(i), &layer.attn_norm, hb.row_mut(i));
+            }
+            if let Some(t) = taps.as_deref_mut() {
+                t.layers[li].attn_in.record_rows(hb);
             }
             layer.wq.apply_batch_into(hb, qb, gemm); // [n, d]
             layer.wk.apply_batch_into(hb, kxb, gemm); // [n, kvd]
@@ -794,6 +843,9 @@ impl Transformer {
                     }
                 }
             }
+            if let Some(t) = taps.as_deref_mut() {
+                t.layers[li].attn_out.record_rows(attnb);
+            }
             layer.wo.apply_batch_into(attnb, ob, gemm);
             for i in 0..n {
                 let xr = xb.row_mut(i);
@@ -803,6 +855,9 @@ impl Transformer {
             }
             for i in 0..n {
                 rmsnorm(xb.row(i), &layer.mlp_norm, hb.row_mut(i));
+            }
+            if let Some(t) = taps.as_deref_mut() {
+                t.layers[li].mlp_in.record_rows(hb);
             }
             layer.w_gate.apply_batch_into(hb, gateb, gemm);
             layer.w_up.apply_batch_into(hb, upb, gemm);
@@ -815,6 +870,9 @@ impl Transformer {
                     ar[j] = silu(gr[j]) * ur[j];
                 }
             }
+            if let Some(t) = taps.as_deref_mut() {
+                t.layers[li].mlp_act.record_rows(actb);
+            }
             layer.w_down.apply_batch_into(actb, downb, gemm);
             for i in 0..n {
                 let xr = xb.row_mut(i);
@@ -824,8 +882,20 @@ impl Transformer {
             }
         }
         cache.len = pos0 + n;
+        if !need_logits {
+            // Intermediate chunk: the cache is written; skip the head.
+            ensure(logits, 0);
+            return logits;
+        }
         ensure(h, d);
         rmsnorm(xb.row(n - 1), &self.final_norm, h);
+        if let Some(t) = taps.as_deref_mut() {
+            // Only the last position's head input exists in the chunked
+            // prefill (one lm_head GEMV per chunk) — record that row.
+            t.head_in.record(&h[..d]);
+            t.tokens_seen += n as u64;
+            t.windows += 1;
+        }
         ensure(logits, cfg.vocab_size);
         self.lm_head.apply_with(h, logits, gemm);
         logits
@@ -1004,6 +1074,53 @@ mod tests {
                 "logit {j}: {a} vs {b}"
             );
         }
+    }
+
+    /// An intermediate chunk via `forward_prefill_chunk` (no head pass)
+    /// leaves the cache identical to `forward_prefill_with`, so the
+    /// final chunk's logits match the one-pass prefill.
+    #[test]
+    fn prefill_chunk_skips_head_but_matches() {
+        let m = tiny_model();
+        let prompt = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let mut scratch = m.new_scratch();
+        let mut c1 = m.new_cache();
+        let l1 = m.forward_prefill_with(&prompt, &mut c1, &mut scratch).to_vec();
+        let mut c2 = m.new_cache();
+        m.forward_prefill_chunk(&prompt[..5], &mut c2, &mut scratch);
+        assert_eq!(c2.len, 5, "chunk advanced the cache");
+        let l2 = m.forward_prefill_with(&prompt[5..], &mut c2, &mut scratch).to_vec();
+        for (j, (a, b)) in l2.iter().zip(&l1).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "logit {j}: {a} vs {b}"
+            );
+        }
+    }
+
+    /// Tapped prefill returns the same logits as the untapped path and
+    /// fills every tap site.
+    #[test]
+    fn tapped_prefill_matches_and_records() {
+        let m = tiny_model();
+        let prompt = [1u32, 5, 9, 2, 17];
+        let mut scratch = m.new_scratch();
+        let mut c1 = m.new_cache();
+        let plain = m.forward_prefill_with(&prompt, &mut c1, &mut scratch).to_vec();
+        let mut taps = crate::calib::stats::ModelTaps::new(&m.cfg);
+        let mut c2 = m.new_cache();
+        let tapped = m
+            .forward_prefill_tapped(&prompt, &mut c2, &mut scratch, &mut taps)
+            .to_vec();
+        assert_eq!(plain, tapped, "taps must not perturb the math");
+        assert_eq!(taps.tokens_seen, prompt.len() as u64);
+        assert_eq!(taps.windows, 1);
+        for name in ["layers.0.wq", "layers.1.wo", "layers.0.w_up", "layers.1.w_down"] {
+            let s = taps.stats_for(name).unwrap();
+            assert_eq!(s.rows(), prompt.len() as u64, "{name}");
+            assert!(s.mean_sq(0).is_finite() && s.abs_max() > 0.0, "{name}");
+        }
+        assert_eq!(taps.head_in.rows(), 1, "head taps the last position only");
     }
 
     #[test]

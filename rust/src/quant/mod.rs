@@ -31,6 +31,7 @@ pub use pipeline::{LayerRole, QuantPlan, QuantPlanBuilder, QuantReport, Quantize
 use crate::formats::registry::Scheme;
 use crate::formats::FpFormat;
 use crate::tensor::Tensor;
+use crate::util::json::{Json, JsonError};
 
 /// How scales are assigned.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,8 +82,33 @@ pub enum SearchPolicy {
     Majority,
 }
 
+impl Granularity {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Granularity::PerTensor => Json::Str("tensor".to_string()),
+            Granularity::PerChannel => Json::Str("channel".to_string()),
+            Granularity::PerGroup(g) => {
+                let mut o = Json::obj();
+                o.set("group", Json::Num(*g as f64));
+                o
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Granularity, JsonError> {
+        if let Some(g) = j.get("group").and_then(|g| g.as_usize()) {
+            return Ok(Granularity::PerGroup(g));
+        }
+        match j.as_str() {
+            Some("tensor") => Ok(Granularity::PerTensor),
+            Some("channel") => Ok(Granularity::PerChannel),
+            other => Err(JsonError(format!("unknown granularity {other:?}"))),
+        }
+    }
+}
+
 /// Full quantizer configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct QuantConfig {
     pub scheme: Scheme,
     pub granularity: Granularity,
@@ -110,6 +136,81 @@ impl QuantConfig {
     pub fn with_granularity(mut self, granularity: Granularity) -> QuantConfig {
         self.granularity = granularity;
         self
+    }
+
+    /// JSON form (the unit [`QuantPlan`](pipeline::QuantPlan) and
+    /// [`CalibReport`](crate::calib::CalibReport) serialization builds on):
+    /// `{"scheme": "fp5.33", "granularity": ..., "share_dim": ...,
+    /// "share_policy": ..., "search_policy": ...}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("scheme", Json::Str(self.scheme.id()))
+            .set("granularity", self.granularity.to_json())
+            .set(
+                "share_dim",
+                Json::Str(
+                    match self.share_dim {
+                        ShareDim::Input => "input",
+                        ShareDim::Output => "output",
+                    }
+                    .to_string(),
+                ),
+            )
+            .set(
+                "share_policy",
+                Json::Str(
+                    match self.share_policy {
+                        SharePolicy::SetLsb => "set_lsb",
+                        SharePolicy::Reround => "reround",
+                    }
+                    .to_string(),
+                ),
+            )
+            .set(
+                "search_policy",
+                Json::Str(
+                    match self.search_policy {
+                        SearchPolicy::AdaptiveMse => "adaptive_mse",
+                        SearchPolicy::AlwaysZero => "always_zero",
+                        SearchPolicy::AlwaysOne => "always_one",
+                        SearchPolicy::Majority => "majority",
+                    }
+                    .to_string(),
+                ),
+            );
+        o
+    }
+
+    /// Inverse of [`QuantConfig::to_json`].
+    pub fn from_json(j: &Json) -> Result<QuantConfig, JsonError> {
+        let scheme = Scheme::parse(j.req_str("scheme")?).map_err(JsonError)?;
+        let share_dim = match j.req_str("share_dim")? {
+            "input" => ShareDim::Input,
+            "output" => ShareDim::Output,
+            other => return Err(JsonError(format!("unknown share_dim '{other}'"))),
+        };
+        let share_policy = match j.req_str("share_policy")? {
+            "set_lsb" => SharePolicy::SetLsb,
+            "reround" => SharePolicy::Reround,
+            other => return Err(JsonError(format!("unknown share_policy '{other}'"))),
+        };
+        let search_policy = match j.req_str("search_policy")? {
+            "adaptive_mse" => SearchPolicy::AdaptiveMse,
+            "always_zero" => SearchPolicy::AlwaysZero,
+            "always_one" => SearchPolicy::AlwaysOne,
+            "majority" => SearchPolicy::Majority,
+            other => return Err(JsonError(format!("unknown search_policy '{other}'"))),
+        };
+        Ok(QuantConfig {
+            scheme,
+            granularity: Granularity::from_json(
+                j.get("granularity")
+                    .ok_or_else(|| JsonError("missing field 'granularity'".to_string()))?,
+            )?,
+            share_dim,
+            share_policy,
+            search_policy,
+        })
     }
 }
 
@@ -179,5 +280,37 @@ mod tests {
         assert_eq!(c.share_dim, ShareDim::Input);
         assert_eq!(c.share_policy, SharePolicy::SetLsb);
         assert_eq!(c.search_policy, SearchPolicy::AdaptiveMse);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        for name in ["fp16", "fp8", "fp6-e2m3", "fp5.33", "fp4.25", "int4", "int8"] {
+            let mut c = QuantConfig::paper(Scheme::parse(name).unwrap());
+            for gran in [
+                Granularity::PerTensor,
+                Granularity::PerChannel,
+                Granularity::PerGroup(64),
+            ] {
+                c.granularity = gran;
+                c.share_policy = SharePolicy::Reround;
+                c.search_policy = SearchPolicy::Majority;
+                let text = c.to_json().to_string();
+                let back =
+                    QuantConfig::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+                assert_eq!(back, c, "{name} {gran:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn config_from_bad_json_errors() {
+        let bad = crate::util::json::parse(r#"{"scheme":"fp6"}"#).unwrap();
+        assert!(QuantConfig::from_json(&bad).is_err(), "missing fields");
+        let bad = crate::util::json::parse(
+            r#"{"scheme":"nope","granularity":"channel","share_dim":"input",
+                "share_policy":"set_lsb","search_policy":"adaptive_mse"}"#,
+        )
+        .unwrap();
+        assert!(QuantConfig::from_json(&bad).is_err(), "unknown scheme");
     }
 }

@@ -22,6 +22,7 @@ use crate::formats::fp16::f32_to_fp16;
 use crate::formats::registry::Scheme;
 use crate::pack::{self, GroupScales, PackedTensor};
 use crate::tensor::Tensor;
+use crate::util::json::{Json, JsonError};
 
 /// Which structural slot of the model a projection occupies — the
 /// coarse-grained axis mixed-precision plans select on.
@@ -44,6 +45,17 @@ impl LayerRole {
             LayerRole::Mlp => "mlp",
             LayerRole::LmHead => "lm_head",
             LayerRole::Other => "other",
+        }
+    }
+
+    /// Inverse of [`LayerRole::name`].
+    pub fn parse(name: &str) -> Result<LayerRole, String> {
+        match name {
+            "attention" => Ok(LayerRole::Attention),
+            "mlp" => Ok(LayerRole::Mlp),
+            "lm_head" => Ok(LayerRole::LmHead),
+            "other" => Ok(LayerRole::Other),
+            other => Err(format!("unknown layer role '{other}'")),
         }
     }
 }
@@ -78,7 +90,7 @@ fn validate_config(cfg: &QuantConfig) -> Result<(), QuantError> {
 
 /// A model-wide quantization plan: one default config plus overrides,
 /// resolved per layer as exact-name > role > default.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct QuantPlan {
     default: QuantConfig,
     roles: Vec<(LayerRole, QuantConfig)>,
@@ -129,6 +141,71 @@ impl QuantPlan {
     /// Exact-name overrides (for consumed-override bookkeeping).
     pub(crate) fn layer_names(&self) -> impl Iterator<Item = &str> {
         self.layers.iter().map(|(n, _)| n.as_str())
+    }
+
+    /// JSON form — the offline artifact `calibrate --plan-out` writes
+    /// and `quantize`/`serve --plan` read back:
+    /// `{"default": cfg, "roles": [{"role": ..., "config": cfg}],
+    /// "layers": [{"layer": ..., "config": cfg}]}`. Override order is
+    /// preserved, so a round trip is structurally identical.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("default", self.default.to_json())
+            .set(
+                "roles",
+                Json::Arr(
+                    self.roles
+                        .iter()
+                        .map(|(r, c)| {
+                            let mut e = Json::obj();
+                            e.set("role", Json::Str(r.name().to_string()))
+                                .set("config", c.to_json());
+                            e
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|(n, c)| {
+                            let mut e = Json::obj();
+                            e.set("layer", Json::Str(n.clone())).set("config", c.to_json());
+                            e
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    /// Inverse of [`QuantPlan::to_json`]; runs the builder's validation,
+    /// so a plan that parses is a plan that packs.
+    pub fn from_json(j: &Json) -> Result<QuantPlan, JsonError> {
+        let default = QuantConfig::from_json(
+            j.get("default")
+                .ok_or_else(|| JsonError("plan missing 'default'".to_string()))?,
+        )?;
+        let mut b = QuantPlan::builder(default);
+        for e in j.get("roles").and_then(|r| r.as_arr()).unwrap_or(&[]) {
+            let role = LayerRole::parse(e.req_str("role")?).map_err(JsonError)?;
+            let cfg = QuantConfig::from_json(
+                e.get("config")
+                    .ok_or_else(|| JsonError("role override missing 'config'".to_string()))?,
+            )?;
+            b = b.role(role, cfg);
+        }
+        for e in j.get("layers").and_then(|l| l.as_arr()).unwrap_or(&[]) {
+            let name = e.req_str("layer")?;
+            let cfg = QuantConfig::from_json(
+                e.get("config")
+                    .ok_or_else(|| JsonError("layer override missing 'config'".to_string()))?,
+            )?;
+            b = b.layer(name, cfg);
+        }
+        b.build().map_err(|e| JsonError(format!("invalid plan: {e}")))
     }
 }
 
@@ -429,6 +506,42 @@ mod tests {
         );
         assert!(plan.has_role(LayerRole::Attention));
         assert!(!plan.has_role(LayerRole::LmHead));
+    }
+
+    #[test]
+    fn plan_json_roundtrip_preserves_resolution() {
+        let plan = QuantPlan::builder(
+            cfg("fp4.25").with_granularity(Granularity::PerGroup(32)),
+        )
+        .role(LayerRole::Attention, cfg("fp6"))
+        .role(LayerRole::LmHead, cfg("fp8"))
+        .layer("layers.0.wq", cfg("fp5.33"))
+        .build()
+        .unwrap();
+        let text = plan.to_json().to_string();
+        let back = QuantPlan::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        // Resolution semantics survive, not just structure.
+        assert_eq!(
+            back.config_for("layers.0.wq", LayerRole::Attention).scheme,
+            Scheme::parse("fp5.33").unwrap()
+        );
+        assert_eq!(
+            back.config_for("layers.1.w_up", LayerRole::Mlp).granularity,
+            Granularity::PerGroup(32)
+        );
+        assert!(back.has_role(LayerRole::LmHead));
+    }
+
+    #[test]
+    fn plan_from_json_validates() {
+        // An unpackable config (output-dim sharing) must fail from_json
+        // the same way the builder rejects it.
+        let mut bad = cfg("fp6");
+        bad.share_dim = crate::quant::ShareDim::Output;
+        let mut j = Json::obj();
+        j.set("default", bad.to_json());
+        assert!(QuantPlan::from_json(&j).is_err());
     }
 
     #[test]

@@ -41,7 +41,7 @@ fn quantized_serving_end_to_end() {
     // close to the dense model's (quality) and all requests complete.
     let base = model();
     let q = base.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap())).unwrap();
-    let mut sched = Scheduler::new(q, BatchPolicy { max_batch: 4, eos: None }, 1);
+    let mut sched = Scheduler::new(q, BatchPolicy { max_batch: 4, ..BatchPolicy::default() }, 1);
     for id in 0..6u64 {
         sched.admit(GenRequest::greedy(id, vec![1 + id as u32, 2, 3], 5));
     }
@@ -102,7 +102,7 @@ fn context_overflow_retires_gracefully() {
     // context boundary instead of panicking mid-batch.
     let base = model();
     let max_seq = base.cfg.max_seq; // 64 for test_tiny
-    let mut sched = Scheduler::new(base, BatchPolicy { max_batch: 2, eos: None }, 3);
+    let mut sched = Scheduler::new(base, BatchPolicy { max_batch: 2, ..BatchPolicy::default() }, 3);
     let prompt: Vec<u32> = (0..max_seq as u32 - 10).map(|i| i % 60).collect();
     sched.admit(GenRequest::greedy(0, prompt.clone(), 1000));
     // A short request batched alongside must be unaffected.
