@@ -4,6 +4,13 @@
 //! (`BENCH_GEMM.json` by default, `--json PATH` to override) so runs are
 //! diffable across commits.
 //!
+//! Grouped schemes (`PerGroup(g)`) are benched on **both** grouped decode
+//! paths — the stream-direct default and the forced buffered fallback —
+//! so the trajectory records the stream-direct win per commit (the CI
+//! quick-bench job distills it into `GROUPED_DELTA.md`). JSON entries
+//! carry `granularity` / `group_size` / `decode_path` fields; per-channel
+//! entries record `decode_path: "fused"`.
+//!
 //! Flags: `--d N` model width (default 768; MLP shapes are [4d, d] and
 //! [d, 4d]), `--threads N` (default 1 = serial kernels; capped at the
 //! shared pool size — set `AMS_THREADS` to grow the pool), `--json PATH`.
@@ -11,8 +18,9 @@
 
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
-use ams_quant::gemm::GemmScratch;
+use ams_quant::gemm::{GemmScratch, GroupDecodePath, QuantLinear};
 use ams_quant::model::synthetic::{llm_weight, WeightProfile};
+use ams_quant::quant::{Granularity, QuantConfig};
 use ams_quant::report::{f, Table};
 use ams_quant::tensor::Tensor;
 use ams_quant::util::bench::{bench_with_units, black_box, BenchConfig};
@@ -22,6 +30,70 @@ use ams_quant::util::prng::Rng;
 
 const BATCHES: [usize; 4] = [1, 4, 16, 64];
 const SCHEMES: [&str; 6] = ["fp16", "fp8", "fp6", "fp5.33", "fp4.25", "int4"];
+/// Grouped-scheme entries: (scheme, g) — all stream-direct-eligible.
+const GROUPED: [(&str, usize); 4] = [("fp6", 64), ("fp5", 32), ("fp4.25", 32), ("fp4.25", 64)];
+
+/// Bench one linear at every batch width, appending one JSON entry per
+/// batch; returns the tokens/s rates. `group_size == 0` means
+/// per-channel (`decode_path: "fused"`).
+#[allow(clippy::too_many_arguments)]
+fn bench_linear(
+    lin: &QuantLinear,
+    bench_name: &str,
+    shape_name: &str,
+    scheme_name: &str,
+    group_size: usize,
+    decode_path: &str,
+    threads: usize,
+    cfg: &BenchConfig,
+    rng: &mut Rng,
+    results: &mut Vec<Json>,
+) -> [f64; BATCHES.len()] {
+    let (rows, cols) = (lin.rows(), lin.cols());
+    let mut scratch = GemmScratch::new();
+    let mut rates = [0f64; BATCHES.len()];
+    for (bi, &batch) in BATCHES.iter().enumerate() {
+        let x = exp::random_acts(batch, cols, rng);
+        let mut y = Tensor::zeros(&[batch, rows]);
+        let mut fcall = || {
+            if threads > 1 {
+                lin.gemm_parallel_into(&x, &mut y, threads, &mut scratch);
+            } else {
+                lin.gemm_into(&x, &mut y, &mut scratch);
+            }
+            black_box(y.data().len());
+        };
+        let r = bench_with_units(&format!("{bench_name}/b{batch}"), cfg, batch as f64, &mut fcall);
+        rates[bi] = r.rate();
+        let mut entry = Json::obj();
+        entry
+            .set("name", Json::Str(format!("{bench_name}/b{batch}")))
+            .set("shape", Json::Str(shape_name.into()))
+            .set("rows", Json::Num(rows as f64))
+            .set("cols", Json::Num(cols as f64))
+            .set("scheme", Json::Str(scheme_name.into()))
+            .set(
+                "granularity",
+                Json::Str(if group_size == 0 {
+                    "per-channel".into()
+                } else {
+                    format!("g{group_size}")
+                }),
+            )
+            .set("group_size", Json::Num(group_size as f64))
+            .set("decode_path", Json::Str(decode_path.into()))
+            .set("batch", Json::Num(batch as f64))
+            .set("threads", Json::Num(threads as f64))
+            .set("iters", Json::Num(r.iters as f64))
+            .set("median_secs", Json::Num(r.median_secs))
+            .set("mean_secs", Json::Num(r.mean_secs))
+            .set("p10_secs", Json::Num(r.p10_secs))
+            .set("p90_secs", Json::Num(r.p90_secs))
+            .set("tokens_per_s", Json::Num(r.rate()));
+        results.push(entry);
+    }
+    rates
+}
 
 fn main() {
     let args = Args::from_env();
@@ -34,6 +106,8 @@ fn main() {
     let shapes: [(&str, usize, usize); 2] = [("mlp-up", 4 * d, d), ("mlp-down", d, 4 * d)];
     let mut rng = Rng::new(0xD0D0);
     let mut results: Vec<Json> = Vec::new();
+    // (shape, scheme, g, batch) -> stream-direct / buffered tok/s ratio.
+    let mut delta_rows: Vec<(String, f64)> = Vec::new();
 
     println!("# fused tiled GEMM bench (d={d}, threads={threads}, tokens/s per scheme×batch)\n");
     for (shape_name, rows, cols) in shapes {
@@ -45,71 +119,98 @@ fn main() {
             &format!("GEMM throughput — {shape_name} [{rows}x{cols}]"),
             &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
         );
+        let push_row = |table: &mut Table, label: String, rates: &[f64], fp16: &[f64]| {
+            let mut cells = vec![label];
+            for &rate in rates {
+                cells.push(f(rate, 1));
+            }
+            for (bi, &rate) in rates.iter().enumerate() {
+                cells.push(if fp16[bi] > 0.0 { f(rate / fp16[bi], 2) } else { "-".into() });
+            }
+            table.row(cells);
+        };
 
         let mut fp16_rate = [0f64; BATCHES.len()];
         for scheme_name in SCHEMES {
             let scheme = Scheme::parse(scheme_name).unwrap();
             let lin = exp::make_linear(&w, scheme);
-            let mut scratch = GemmScratch::new();
-            let mut cells = vec![scheme.label()];
-            let mut rates = [0f64; BATCHES.len()];
-            for (bi, &batch) in BATCHES.iter().enumerate() {
-                let x = exp::random_acts(batch, cols, &mut rng);
-                let mut y = Tensor::zeros(&[batch, rows]);
-                let mut fcall = || {
-                    if threads > 1 {
-                        lin.gemm_parallel_into(&x, &mut y, threads, &mut scratch);
-                    } else {
-                        lin.gemm_into(&x, &mut y, &mut scratch);
-                    }
-                    black_box(y.data().len());
-                };
-                let r = bench_with_units(
-                    &format!("{shape_name}/{scheme_name}/b{batch}"),
-                    &cfg,
-                    batch as f64,
-                    &mut fcall,
-                );
-                rates[bi] = r.rate();
-                let mut entry = Json::obj();
-                entry
-                    .set("name", Json::Str(format!("{shape_name}/{scheme_name}/b{batch}")))
-                    .set("shape", Json::Str(shape_name.into()))
-                    .set("rows", Json::Num(rows as f64))
-                    .set("cols", Json::Num(cols as f64))
-                    .set("scheme", Json::Str(scheme_name.into()))
-                    .set("batch", Json::Num(batch as f64))
-                    .set("threads", Json::Num(threads as f64))
-                    .set("iters", Json::Num(r.iters as f64))
-                    .set("median_secs", Json::Num(r.median_secs))
-                    .set("mean_secs", Json::Num(r.mean_secs))
-                    .set("p10_secs", Json::Num(r.p10_secs))
-                    .set("p90_secs", Json::Num(r.p90_secs))
-                    .set("tokens_per_s", Json::Num(r.rate()));
-                results.push(entry);
-            }
+            let rates = bench_linear(
+                &lin,
+                &format!("{shape_name}/{scheme_name}"),
+                shape_name,
+                scheme_name,
+                0,
+                "fused",
+                threads,
+                &cfg,
+                &mut rng,
+                &mut results,
+            );
             if scheme == Scheme::Fp16 {
                 fp16_rate = rates;
             }
-            for &rate in &rates {
-                cells.push(f(rate, 1));
+            push_row(&mut table, scheme.label(), &rates, &fp16_rate);
+        }
+
+        // Grouped schemes: stream-direct default vs forced buffered.
+        for (scheme_name, g) in GROUPED {
+            let qcfg = QuantConfig::paper(Scheme::parse(scheme_name).unwrap())
+                .with_granularity(Granularity::PerGroup(g));
+            let lin = exp::make_linear_with(&w, &qcfg);
+            assert_eq!(
+                lin.group_decode_path(),
+                Some(GroupDecodePath::StreamDirect),
+                "{scheme_name} g={g} must be stream-direct-eligible"
+            );
+            let mut buffered = lin.clone();
+            buffered.force_buffered_group_decode();
+            let stream_rates = bench_linear(
+                &lin,
+                &format!("{shape_name}/{scheme_name}-g{g}/stream"),
+                shape_name,
+                scheme_name,
+                g,
+                "stream",
+                threads,
+                &cfg,
+                &mut rng,
+                &mut results,
+            );
+            let buf_rates = bench_linear(
+                &buffered,
+                &format!("{shape_name}/{scheme_name}-g{g}/buffered"),
+                shape_name,
+                scheme_name,
+                g,
+                "buffered",
+                threads,
+                &cfg,
+                &mut rng,
+                &mut results,
+            );
+            push_row(&mut table, format!("{scheme_name}-g{g} (stream)"), &stream_rates, &fp16_rate);
+            push_row(&mut table, format!("{scheme_name}-g{g} (buffered)"), &buf_rates, &fp16_rate);
+            for (bi, &batch) in BATCHES.iter().enumerate() {
+                if buf_rates[bi] > 0.0 {
+                    delta_rows.push((
+                        format!("{shape_name}/{scheme_name} g{g} b{batch}"),
+                        stream_rates[bi] / buf_rates[bi],
+                    ));
+                }
             }
-            for (bi, &rate) in rates.iter().enumerate() {
-                cells.push(if fp16_rate[bi] > 0.0 {
-                    f(rate / fp16_rate[bi], 2)
-                } else {
-                    "-".into()
-                });
-            }
-            table.row(cells);
         }
         println!("{}", table.to_console());
         println!("{}", table.to_markdown());
     }
 
+    println!("# stream-direct vs buffered grouped decode (tokens/s ratio; >1 = stream wins)");
+    for (name, ratio) in &delta_rows {
+        println!("#   {name}: {ratio:.2}x");
+    }
+
     let mut root = Json::obj();
     root.set("bench", Json::Str("gemm".into()))
-        .set("schema_version", Json::Num(1.0))
+        .set("schema_version", Json::Num(2.0))
         .set("d", Json::Num(d as f64))
         .set("threads", Json::Num(threads as f64))
         .set("measure_secs", Json::Num(cfg.measure_secs))

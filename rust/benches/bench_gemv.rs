@@ -5,9 +5,13 @@
 //!
 //! The paper's claim shape: speedup ordered by bits/weight at small batch
 //! (memory-bound), shrinking as batch grows (compute takes over).
+//! Grouped-scale rows (`PerGroup(g)`, served through the stream-direct
+//! segment kernels at aligned g) ride the same table, so the scale-
+//! granularity cost shows up next to the per-channel formats.
 
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
+use ams_quant::quant::{Granularity, QuantConfig};
 use ams_quant::util::bench::BenchConfig;
 use ams_quant::util::cli::Args;
 
@@ -22,15 +26,26 @@ fn main() {
     } else {
         vec![1, 2, 4, 8, 16, 32]
     };
-    let schemes: Vec<Scheme> = ["fp8", "int8", "fp6", "fp5", "fp5.33", "fp4.25"]
+    let mut entries: Vec<(String, QuantConfig)> = ["fp8", "int8", "fp6", "fp5", "fp5.33", "fp4.25"]
         .iter()
-        .map(|s| Scheme::parse(s).unwrap())
+        .map(|s| {
+            let scheme = Scheme::parse(s).unwrap();
+            (scheme.label(), QuantConfig::paper(scheme))
+        })
         .collect();
+    // Grouped-scale variants: stream-direct decode at word-aligned g.
+    for (name, g) in [("fp6", 64usize), ("fp4.25", 32)] {
+        let scheme = Scheme::parse(name).unwrap();
+        entries.push((
+            format!("{} g{g}", scheme.label()),
+            QuantConfig::paper(scheme).with_granularity(Granularity::PerGroup(g)),
+        ));
+    }
     let shapes = exp::scaled_table3_shapes(shrink);
     println!(
         "# measured Table 3 / Fig 6 (CPU, shrink={shrink}, threads={threads}, speedup vs fp16-storage GEMM)\n"
     );
-    for t in exp::table3_measured(&shapes, &schemes, &batches, &cfg, threads) {
+    for t in exp::table3_measured_configs(&shapes, &entries, &batches, &cfg, threads) {
         println!("{}", t.to_console());
         println!("{}", t.to_markdown());
     }

@@ -29,14 +29,14 @@ pub mod search;
 pub mod sensitivity;
 pub mod stats;
 
-pub use report::{CalibReport, CandidateSummary, LayerChoice};
+pub use report::{config_label, CalibReport, CandidateSummary, LayerChoice};
 pub use search::{search_plan, SearchOutcome};
 pub use sensitivity::{score_layer, score_model, CandidateScore, LayerSensitivity};
 pub use stats::{ActivationStats, LayerTaps, ModelTaps};
 
 use crate::formats::registry::Scheme;
 use crate::model::transformer::Transformer;
-use crate::quant::{QuantConfig, QuantError, QuantPlan};
+use crate::quant::{Granularity, QuantConfig, QuantError, QuantPlan};
 use crate::util::prng::Rng;
 
 /// Why a calibration run was rejected.
@@ -82,12 +82,30 @@ impl From<QuantError> for CalibError {
 }
 
 /// The default candidate ladder: the paper's format vocabulary from FP4
-/// up to FP8, all at per-channel scales with paper policies.
+/// up to FP8 at per-channel scales with paper policies, plus
+/// `PerGroup(32/64)` variants of the low-bit formats (`32/g` extra
+/// bits/w for the group-scale stream). The fp4.25/fp5 variants decode
+/// stream-direct at these segment-aligned g (see
+/// [`crate::gemm::GroupDecodePath`]); plain fp4 serves on the buffered
+/// grouped fallback (codes-family layout — a stream-direct table path
+/// is a ROADMAP follow-on) but stays in the ladder as the best
+/// accuracy-per-bit point on outlier-heavy layers. Grouped variants let
+/// the search trade scale granularity against format bits (the
+/// FineQuant / M-ANT axis).
 pub fn default_candidates() -> Vec<QuantConfig> {
-    ["fp4", "fp4.25", "fp4.33", "fp4.5", "fp5", "fp5.33", "fp6", "fp8"]
+    let mut v: Vec<QuantConfig> = ["fp4", "fp4.25", "fp4.33", "fp4.5", "fp5", "fp5.33", "fp6", "fp8"]
         .iter()
         .map(|s| QuantConfig::paper(Scheme::parse(s).expect("known scheme")))
-        .collect()
+        .collect();
+    for name in ["fp4", "fp4.25", "fp5"] {
+        for g in [32usize, 64] {
+            v.push(
+                QuantConfig::paper(Scheme::parse(name).expect("known scheme"))
+                    .with_granularity(Granularity::PerGroup(g)),
+            );
+        }
+    }
+    v
 }
 
 /// Calibration parameters.
@@ -205,6 +223,30 @@ mod tests {
     fn tiny() -> Transformer {
         let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 17);
         Transformer::from_checkpoint(&ck).unwrap()
+    }
+
+    #[test]
+    fn ladder_carries_grouped_candidates() {
+        let cands = default_candidates();
+        assert_eq!(cands.len(), 8 + 6);
+        let grouped: Vec<_> = cands
+            .iter()
+            .filter(|c| matches!(c.granularity, Granularity::PerGroup(_)))
+            .collect();
+        assert_eq!(grouped.len(), 6);
+        for g in [32usize, 64] {
+            for name in ["fp4", "fp4.25", "fp5"] {
+                assert!(
+                    grouped.iter().any(|c| c.scheme == Scheme::parse(name).unwrap()
+                        && c.granularity == Granularity::PerGroup(g)),
+                    "{name} PerGroup({g}) missing from the ladder"
+                );
+            }
+        }
+        // Every candidate must be packable (the builder's invariant).
+        for c in &cands {
+            assert!(QuantPlan::uniform(*c).is_ok(), "{c:?}");
+        }
     }
 
     #[test]

@@ -5,13 +5,26 @@
 
 use super::search::SearchOutcome;
 use super::sensitivity::LayerSensitivity;
-use crate::quant::{LayerRole, QuantConfig, QuantError, QuantPlan};
+use crate::quant::{Granularity, LayerRole, QuantConfig, QuantError, QuantPlan};
 use crate::report::{f, Table};
 use crate::util::json::Json;
+
+/// Human-readable label of a candidate config: the scheme id plus a
+/// `-gN` suffix for group-wise scales, so the `PerGroup` ladder variants
+/// (PR 5) stay distinguishable from their per-channel twins in report
+/// tables and candidate matrices.
+pub fn config_label(cfg: &QuantConfig) -> String {
+    match cfg.granularity {
+        Granularity::PerGroup(g) => format!("{}-g{g}", cfg.scheme.id()),
+        _ => cfg.scheme.id(),
+    }
+}
 
 /// One candidate's summary inside the per-layer report record.
 #[derive(Clone, Debug)]
 pub struct CandidateSummary {
+    /// Config label ([`config_label`]): scheme id, `-gN`-suffixed for
+    /// group-wise candidates.
     pub scheme: String,
     pub bits_per_weight: f64,
     pub act_sqnr_db: f64,
@@ -75,7 +88,7 @@ impl CalibReport {
                         .candidates
                         .iter()
                         .map(|c| CandidateSummary {
-                            scheme: c.config.scheme.id(),
+                            scheme: config_label(&c.config),
                             bits_per_weight: c.bits_per_weight,
                             act_sqnr_db: c.act_sqnr_db,
                         })
@@ -180,7 +193,7 @@ impl CalibReport {
             t.row(vec![
                 l.layer.clone(),
                 l.role.name().to_string(),
-                l.config.scheme.id(),
+                config_label(&l.config),
                 f(l.bits_per_weight, 3),
                 f(l.act_sqnr_db, 2),
                 format!("{:.3e}", l.weight_mse),

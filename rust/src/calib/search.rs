@@ -224,6 +224,67 @@ mod tests {
         assert!(out.achieved_bits <= 5.0 + 1e-12);
     }
 
+    /// PR 5: `PerGroup` variants ride the ladder like any other config —
+    /// at a bit-cost tie with a per-channel format the lower-noise
+    /// grouped candidate wins, and the config-identity uniform fallback
+    /// matches grouped configs correctly.
+    #[test]
+    fn grouped_candidates_compete_at_equal_bits() {
+        use crate::quant::Granularity;
+        let pg = |name: &str, g: usize| {
+            QuantConfig::paper(Scheme::parse(name).unwrap())
+                .with_granularity(Granularity::PerGroup(g))
+        };
+        let cand_cfg = |config: QuantConfig, bits: f64, noise: f64| CandidateScore {
+            config,
+            bits_per_weight: bits,
+            act_noise: noise,
+            act_sqnr_db: 0.0,
+            weight_mse: noise,
+        };
+        // fp4 + PerGroup(32) prices like fp5 per-channel (4 + 32/32 ≈ 5);
+        // on the outlier layer it is the low-noise candidate at that
+        // price point, on the smooth layer the per-channel format wins.
+        let outlier = layer(
+            "outlier",
+            100,
+            vec![
+                cand(4.0, 50.0),
+                cand_cfg(pg("fp4", 32), 5.0, 0.5),
+                cand(5.0, 30.0),
+                cand(6.0, 0.3),
+            ],
+        );
+        let smooth = layer(
+            "smooth",
+            100,
+            vec![
+                cand(4.0, 1.0),
+                cand_cfg(pg("fp4", 32), 5.0, 0.9),
+                cand(5.0, 0.95),
+                cand(6.0, 0.2),
+            ],
+        );
+        // Budget 4.75: exactly one half-bit upgrade fits — the marginal-
+        // ratio greedy must spend it on the grouped candidate of the
+        // outlier layer (ratio ~99 vs ≤2 for every alternative).
+        let out = search_plan(&[outlier.clone(), smooth.clone()], 4.75);
+        assert!(out.budget_met);
+        let chosen_outlier = &outlier.candidates[out.chosen[0]].config;
+        assert_eq!(
+            chosen_outlier.granularity,
+            Granularity::PerGroup(32),
+            "grouped candidate must win the outlier layer: {out:?}"
+        );
+        assert_eq!(
+            smooth.candidates[out.chosen[1]].config.granularity,
+            Granularity::PerChannel,
+            "the smooth layer stays per-channel: {out:?}"
+        );
+        assert!((out.achieved_bits - 4.5).abs() < 1e-9);
+        assert!((out.total_noise - (0.5 + 1.0)).abs() < 1e-12, "{}", out.total_noise);
+    }
+
     #[test]
     fn deterministic_tie_break() {
         let mk = || {

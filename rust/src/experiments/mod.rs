@@ -161,6 +161,24 @@ pub fn table3_measured(
     cfg: &BenchConfig,
     threads: usize,
 ) -> Vec<Table> {
+    let entries: Vec<(String, QuantConfig)> = schemes
+        .iter()
+        .map(|&s| (s.label(), QuantConfig::paper(s)))
+        .collect();
+    table3_measured_configs(shapes, &entries, batches, cfg, threads)
+}
+
+/// [`table3_measured`] over full `(label, QuantConfig)` entries, so
+/// grouped-scale variants (`PerGroup(g)`, served stream-direct at
+/// aligned g) ride the same harness and baseline as the per-channel
+/// schemes (used by `benches/bench_gemv.rs`).
+pub fn table3_measured_configs(
+    shapes: &[(String, usize, usize)],
+    entries: &[(String, QuantConfig)],
+    batches: &[usize],
+    cfg: &BenchConfig,
+    threads: usize,
+) -> Vec<Table> {
     let mut rng = Rng::new(0xBEEF);
     let mut out = Vec::new();
     for (name, rows, cols) in shapes {
@@ -188,9 +206,9 @@ pub fn table3_measured(
             let r = bench_with_units("fp16", cfg, (rows * cols) as f64, &mut fcall);
             base_lat.push(r.median_secs);
         }
-        for &scheme in schemes {
-            let lin = make_linear(&w, scheme);
-            let mut cells = vec![scheme.label()];
+        for (label, qcfg) in entries {
+            let lin = make_linear_with(&w, qcfg);
+            let mut cells = vec![label.clone()];
             for (bi, &b) in batches.iter().enumerate() {
                 let x = random_acts(b, cols, &mut rng);
                 let mut fcall = || {
@@ -201,7 +219,7 @@ pub fn table3_measured(
                     };
                     crate::util::bench::black_box(y.len());
                 };
-                let r = bench_with_units(&scheme.id(), cfg, (rows * cols) as f64, &mut fcall);
+                let r = bench_with_units(&qcfg.scheme.id(), cfg, (rows * cols) as f64, &mut fcall);
                 cells.push(f(base_lat[bi] / r.median_secs, 2));
             }
             t.row(cells);

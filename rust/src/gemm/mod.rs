@@ -18,12 +18,28 @@
 //! contiguous row-range slices — and transposed once into `Y: [batch,
 //! rows]` at the end.
 //!
+//! **Stream-direct per-group decode (§Perf, PR 5).** Group-wise tensors
+//! (`Granularity::PerGroup(g)`, the FineQuant/M-ANT axis) serve through
+//! one dot per group *segment* with the group scale folded into the
+//! accumulation. When every group boundary is segment-addressable in the
+//! scheme's packed streams (`g % 16 == 0` on the byte/segmented layouts,
+//! plus `g % k == 0` for the AMS shared-bit families — see
+//! [`crate::pack::group_segments_aligned`]), the segments decode
+//! *straight from the packed words*: no codes unpack, no values staging,
+//! zero scratch — the CPU analog of the paper's decode-in-kernel CUDA
+//! path. Ragged `g` and codes/table/FP5.33 layouts keep a buffered
+//! fallback (unpack → unscaled decode → dense segment dots) whose
+//! reduction structure matches segment for segment, so the two paths are
+//! bit-identical wherever both apply (locked by `tests/kernels.rs`
+//! golden vectors and the three-way property suite).
+//!
 //! **Scratch ownership.** All intermediate buffers (unpacked codes, the
 //! FP5.33 de-interleaved activation streams, the transposed staging
 //! buffer) live in a caller-owned [`GemmScratch`], created once per
 //! `Transformer`/worker and borrowed per call; the steady-state decode
-//! loop performs zero heap allocation. Parallel workers use a
-//! thread-local scratch (see [`parallel`]).
+//! loop performs zero heap allocation — and the stream-direct grouped
+//! path touches no scratch at all. Parallel workers use a thread-local
+//! scratch (see [`parallel`]).
 //!
 //! `y = W · x` with `W: [rows, cols]` packed, `x: [cols]`, `y: [rows]`.
 //! The batched path computes `Y = X · Wᵀ` for `X: [batch, cols]`.
@@ -60,8 +76,10 @@ pub fn dequant_table(scheme: Scheme) -> Vec<f32> {
 pub struct GemmScratch {
     /// Unpacked row codes (code-buffer kernel families).
     codes: Vec<u16>,
-    /// Decoded row values with the per-group scale folded in (per-group
-    /// tensors decode each row once, then run the dense tile kernels).
+    /// Unscaled decoded row values — only the *buffered* grouped path
+    /// (ragged `g` / codes-family layouts) stages through here; the
+    /// stream-direct grouped path decodes straight from the packed words
+    /// and leaves this buffer untouched.
     vals: Vec<f32>,
     /// FP5.33 stride-3 de-interleaved activation streams, `[batch][groups]`.
     x0: Vec<f32>,
@@ -77,19 +95,60 @@ impl GemmScratch {
     }
 }
 
-/// Decode one unpacked row into final f32 values with the group scale
-/// folded in: `vals[c] = table[codes[c]] * gscales[c / g]` — the
-/// per-group analog of folding the exponent rebias into the channel
-/// scale. Done once per row; the dense tile kernels then stream `vals`.
+/// How the kernels fold a tensor's per-group scales into the decode —
+/// resolved once at [`QuantLinear`] construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupDecodePath {
+    /// Segment-addressable `g` (see [`crate::pack::group_segments_aligned`]) on
+    /// a byte/segmented kernel family: each group segment decodes
+    /// straight from the packed hi/lo streams with the group scale
+    /// folded into the accumulation — no codes unpack, no values
+    /// staging, zero scratch. The CPU analog of the paper's
+    /// decode-in-kernel CUDA path.
+    StreamDirect,
+    /// Ragged `g`, or a layout without segment-addressable streams:
+    /// unpack the row once, decode *unscaled* values, then run the same
+    /// per-segment dense dots. The reduction structure matches the
+    /// stream-direct path segment for segment, so where both apply they
+    /// produce bit-identical results (pinned by the golden-vector and
+    /// three-way property suites).
+    Buffered,
+}
+
+/// Decode one unpacked row of codes into *unscaled* f32 values — the
+/// buffered grouped path's staging step (the group scale is folded into
+/// the per-segment accumulation, mirroring the stream-direct path).
 #[inline]
-fn decode_group_scaled(codes: &[u16], gscales: &[f32], g: usize, table: &[f32], vals: &mut [f32]) {
+fn decode_codes_table(codes: &[u16], table: &[f32], vals: &mut [f32]) {
     debug_assert_eq!(codes.len(), vals.len());
-    debug_assert!(gscales.len() >= codes.len().div_ceil(g));
-    for ((chunk_c, chunk_v), &s) in codes.chunks(g).zip(vals.chunks_mut(g)).zip(gscales) {
-        for (v, &c) in chunk_v.iter_mut().zip(chunk_c) {
-            *v = table[c as usize] * s;
+    for (v, &c) in vals.iter_mut().zip(codes) {
+        *v = table[c as usize];
+    }
+}
+
+/// Grouped dot of one decoded row against `T` activation rows: one dense
+/// dot per group segment, group scale folded into the accumulation.
+/// The buffered twin of [`QuantLinear::stream_grouped_dot`] — identical
+/// segment reduction order, so the two are bit-identical.
+#[inline]
+fn dense_grouped_dot<const T: usize>(
+    vals: &[f32],
+    gscales: &[f32],
+    g: usize,
+    xs: &[&[f32]; T],
+) -> [f32; T] {
+    debug_assert_eq!(gscales.len(), vals.len().div_ceil(g));
+    let mut acc = [0f32; T];
+    for (gi, &s) in gscales.iter().enumerate() {
+        let c0 = gi * g;
+        let len = g.min(vals.len() - c0);
+        let seg: [&[f32]; T] = core::array::from_fn(|j| &xs[j][c0..c0 + len]);
+        let d = simd::dotn_dense(&vals[c0..c0 + len], &seg);
+        for j in 0..T {
+            acc[j] += d[j] * s;
         }
     }
+    acc
 }
 
 /// Which fused row kernel serves a scheme (resolved once at construction).
@@ -124,6 +183,25 @@ impl RowKernel {
             Scheme::Ams { base, .. } => RowKernel::Codes(base),
             Scheme::Int { .. } => RowKernel::Table,
         }
+    }
+}
+
+/// Whether the stream-direct grouped path serves this (kernel, scheme,
+/// group size): the packed layout must segment at every group boundary
+/// ([`crate::pack::group_segments_aligned`]) *and* the kernel family must
+/// decode straight from the word streams. Codes/table/FP5.33 families
+/// keep the buffered fallback; AMS shared-bit layouts additionally need
+/// an AVX-lane-servable k so the stream and buffered paths share one
+/// SIMD/scalar gating and stay bit-identical.
+fn stream_direct_serves(kernel: RowKernel, scheme: Scheme, g: usize) -> bool {
+    if !crate::pack::group_segments_aligned(scheme, g) {
+        return false;
+    }
+    match kernel {
+        RowKernel::Bytes(_) => true,
+        RowKernel::Segmented(_, simd::LowBits::PerCode1 | simd::LowBits::PerCode2) => true,
+        RowKernel::Segmented(_, simd::LowBits::Group(k)) => k == 2 || k == 4,
+        _ => false,
     }
 }
 
@@ -291,13 +369,15 @@ pub(crate) const GROUPED_TEST_SCHEMES: &[&str] = &[
     "fp5.33", "fp4.5", "fp4.3", "fp4.25", "ams-e3m2-k4",
 ];
 
-/// A packed linear layer with its dequant table and kernel family
-/// resolved — the unit the coordinator serves.
+/// A packed linear layer with its dequant table, kernel family and
+/// grouped decode path resolved — the unit the coordinator serves.
 #[derive(Clone, Debug)]
 pub struct QuantLinear {
     pub packed: PackedTensor,
     table: Vec<f32>,
     kernel: RowKernel,
+    /// `Some` iff the tensor carries per-group scales.
+    group_path: Option<GroupDecodePath>,
 }
 
 /// MACs below which parallel dispatch is not worth the pool hand-off.
@@ -307,10 +387,35 @@ impl QuantLinear {
     pub fn new(packed: PackedTensor) -> QuantLinear {
         let table = dequant_table(packed.scheme);
         let kernel = RowKernel::for_scheme(packed.scheme);
+        let group_path = packed.group_scales.as_ref().map(|gs| {
+            if stream_direct_serves(kernel, packed.scheme, gs.group_size) {
+                GroupDecodePath::StreamDirect
+            } else {
+                GroupDecodePath::Buffered
+            }
+        });
         QuantLinear {
             packed,
             table,
             kernel,
+            group_path,
+        }
+    }
+
+    /// The decode path serving this tensor's per-group scales (`None`
+    /// for per-channel/per-tensor scales).
+    pub fn group_decode_path(&self) -> Option<GroupDecodePath> {
+        self.group_path
+    }
+
+    /// Force the buffered grouped path on a stream-direct-eligible
+    /// tensor. Test/bench hook: the golden-vector and three-way property
+    /// suites compare the two paths bit for bit, and `bench_gemm`
+    /// records the stream-direct vs buffered throughput delta. No-op for
+    /// per-channel tensors.
+    pub fn force_buffered_group_decode(&mut self) {
+        if self.group_path.is_some() {
+            self.group_path = Some(GroupDecodePath::Buffered);
         }
     }
 
@@ -365,17 +470,36 @@ impl QuantLinear {
             ..
         } = scratch;
         if let Some(gs) = &self.packed.group_scales {
-            // Per-group path: unpack the row, fold the group-scale gather
-            // into the decode, dense-dot the folded values. No trailing
-            // per-row scale — the group scales are the whole scale.
-            codes.clear();
-            codes.resize(cols, 0);
-            vals.clear();
-            vals.resize(cols, 0.0);
-            for (i, r) in (start..end).enumerate() {
-                crate::pack::unpack_row(self.packed.scheme, self.packed.row_words(r), cols, codes);
-                decode_group_scaled(codes, gs.row(r), gs.group_size, &self.table, vals);
-                y[i] = simd::dot_dense(vals, x);
+            // Per-group path: one dot per group segment with the scale
+            // folded into the accumulation. No trailing per-row scale —
+            // the group scales are the whole scale.
+            match self.group_path {
+                Some(GroupDecodePath::StreamDirect) => {
+                    // Decode straight from the packed hi/lo streams:
+                    // no codes unpack, no values staging, zero scratch.
+                    for (i, r) in (start..end).enumerate() {
+                        y[i] = self.stream_grouped_dot::<1>(r, gs.row(r), gs.group_size, &[x])[0];
+                    }
+                }
+                _ => {
+                    // Buffered fallback (ragged g / codes-family
+                    // layouts): unpack once, decode unscaled values,
+                    // same per-segment dense dots.
+                    codes.clear();
+                    codes.resize(cols, 0);
+                    vals.clear();
+                    vals.resize(cols, 0.0);
+                    for (i, r) in (start..end).enumerate() {
+                        crate::pack::unpack_row(
+                            self.packed.scheme,
+                            self.packed.row_words(r),
+                            cols,
+                            codes,
+                        );
+                        decode_codes_table(codes, &self.table, vals);
+                        y[i] = dense_grouped_dot::<1>(vals, gs.row(r), gs.group_size, &[x])[0];
+                    }
+                }
             }
             return;
         }
@@ -527,8 +651,10 @@ impl QuantLinear {
     /// block `out[(r - r0) * batch + b] = scale_r · Σ_c deq(W[r,c])·X[b,c]`.
     /// Each packed row is streamed once per ≤[`simd::NTILE`]-column tile;
     /// `deint` carries the shared FP5.33 activation streams. Per-group
-    /// tensors decode each row once (group scales folded into `vals`) and
-    /// run the dense tile kernels over the folded values.
+    /// tensors run one segment dot per group with the scale folded into
+    /// the accumulation — straight from the packed words on the
+    /// stream-direct path, through `codes`/`vals` on the buffered
+    /// fallback (see [`GroupDecodePath`]).
     pub(crate) fn gemm_rows_t(
         &self,
         r0: usize,
@@ -542,19 +668,49 @@ impl QuantLinear {
         let cols = self.packed.cols;
         let batch = x.rows();
         debug_assert_eq!(out.len(), (r1 - r0) * batch);
-        codes.clear();
-        codes.resize(cols, 0);
         if let Some(gs) = &self.packed.group_scales {
-            vals.clear();
-            vals.resize(cols, 0.0);
+            let g = gs.group_size;
+            let stream = self.group_path == Some(GroupDecodePath::StreamDirect);
+            if !stream {
+                codes.clear();
+                codes.resize(cols, 0);
+                vals.clear();
+                vals.resize(cols, 0.0);
+            }
             for r in r0..r1 {
-                crate::pack::unpack_row(self.packed.scheme, self.packed.row_words(r), cols, codes);
-                decode_group_scaled(codes, gs.row(r), gs.group_size, &self.table, vals);
+                if !stream {
+                    crate::pack::unpack_row(
+                        self.packed.scheme,
+                        self.packed.row_words(r),
+                        cols,
+                        codes,
+                    );
+                    decode_codes_table(codes, &self.table, vals);
+                }
+                let gsr = gs.row(r);
                 let orow = &mut out[(r - r0) * batch..(r - r0 + 1) * batch];
-                dense_row_ladder(vals, x, orow);
+                let mut b = 0usize;
+                while b < batch {
+                    let rem = batch - b;
+                    if rem >= 8 {
+                        self.grouped_tile::<8>(r, vals, gsr, g, stream, x, b, &mut orow[b..b + 8]);
+                        b += 8;
+                    } else if rem >= 4 {
+                        self.grouped_tile::<4>(r, vals, gsr, g, stream, x, b, &mut orow[b..b + 4]);
+                        b += 4;
+                    } else if rem >= 2 {
+                        self.grouped_tile::<2>(r, vals, gsr, g, stream, x, b, &mut orow[b..b + 2]);
+                        b += 2;
+                    } else {
+                        self.grouped_tile::<1>(r, vals, gsr, g, stream, x, b, &mut orow[b..b + 1]);
+                        b += 1;
+                    }
+                }
             }
             return;
         }
+        codes.clear();
+        codes.resize(cols, 0);
         for r in r0..r1 {
             let words = self.packed.row_words(r);
             // Code-buffer families unpack once per row; the streaming
@@ -629,6 +785,74 @@ impl QuantLinear {
         for j in 0..T {
             out[j] = d[j] * scale;
         }
+    }
+
+    /// One grouped row × T-column tile: dispatch to the stream-direct or
+    /// buffered segment dot (`vals` holds the decoded row on the
+    /// buffered path and is unread on the stream path).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn grouped_tile<const T: usize>(
+        &self,
+        r: usize,
+        vals: &[f32],
+        gscales: &[f32],
+        g: usize,
+        stream: bool,
+        x: &Tensor,
+        b0: usize,
+        out: &mut [f32],
+    ) {
+        let xs: [&[f32]; T] = core::array::from_fn(|j| x.row(b0 + j));
+        let d = if stream {
+            self.stream_grouped_dot::<T>(r, gscales, g, &xs)
+        } else {
+            dense_grouped_dot::<T>(vals, gscales, g, &xs)
+        };
+        out[..T].copy_from_slice(&d);
+    }
+
+    /// Stream-direct grouped dot of packed row `r` against `T`
+    /// activation rows: decode each group segment straight from the
+    /// hi/lo word streams — no codes unpack, no values staging — with
+    /// the group scale folded into the accumulation. Only reachable for
+    /// the byte/segmented kernel families at segment-aligned `g` (see
+    /// [`stream_direct_serves`]).
+    #[inline]
+    fn stream_grouped_dot<const T: usize>(
+        &self,
+        r: usize,
+        gscales: &[f32],
+        g: usize,
+        xs: &[&[f32]; T],
+    ) -> [f32; T] {
+        let cols = self.packed.cols;
+        debug_assert_eq!(gscales.len(), cols.div_ceil(g));
+        let (hi, lo) = self.packed.row_streams(r);
+        let mut acc = [0f32; T];
+        for (gi, &s) in gscales.iter().enumerate() {
+            let c0 = gi * g;
+            let len = g.min(cols - c0);
+            let seg: [&[f32]; T] = core::array::from_fn(|j| &xs[j][c0..c0 + len]);
+            let d = match self.kernel {
+                RowKernel::Bytes(fmt) => simd::dotn_bytes(&hi[c0 / 2..], len, &seg, fmt),
+                RowKernel::Segmented(fmt, low @ simd::LowBits::PerCode1) => {
+                    simd::dotn_segmented(&hi[c0 / 4..], &lo[c0 / 16..], len, &seg, fmt, low)
+                }
+                RowKernel::Segmented(fmt, low @ simd::LowBits::PerCode2) => {
+                    simd::dotn_segmented(&hi[c0 / 4..], &lo[c0 / 8..], len, &seg, fmt, low)
+                }
+                RowKernel::Segmented(fmt, simd::LowBits::Group(k)) => {
+                    simd::dotn_segmented_group_at(&hi[c0 / 4..], lo, c0 / k, len, &seg, fmt, k)
+                }
+                // Unreachable: gated at construction by stream_direct_serves.
+                _ => unreachable!("stream-direct path admits only byte/segmented kernels"),
+            };
+            for j in 0..T {
+                acc[j] += d[j] * s;
+            }
+        }
+        acc
     }
 
     /// Reference implementation: unpack codes row by row, dequantize
@@ -886,6 +1110,85 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Which grouped tensors resolve to the stream-direct path: the
+    /// byte/segmented families at segment-aligned g; everything else
+    /// buffered.
+    #[test]
+    fn stream_direct_path_resolution() {
+        let path = |name: &str, g: usize| {
+            make_linear_grouped(name, 4, 256, g, 1).group_decode_path()
+        };
+        use GroupDecodePath::*;
+        for g in [32usize, 64, 128] {
+            for name in ["fp8", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4.5", "fp4.25"] {
+                assert_eq!(path(name, g), Some(StreamDirect), "{name} g={g}");
+            }
+            // k=3 shared groups straddle segments; codes/table families
+            // and the continuous FP5.33 layout have no segment kernels.
+            for name in ["fp4.33", "fp5.33", "fp4-e2m1", "int4", "int8", "ams-e3m2-k4"] {
+                assert_eq!(path(name, g), Some(Buffered), "{name} g={g}");
+            }
+        }
+        // Ragged g buffers everywhere; per-channel tensors have no path.
+        assert_eq!(path("fp4.25", 24), Some(Buffered));
+        assert_eq!(make_linear("fp4.25", 4, 256, 1).group_decode_path(), None);
+    }
+
+    /// Acceptance (PR 5): the stream-direct grouped path is bit-identical
+    /// to the buffered fallback — same segment reduction order, same
+    /// SIMD/scalar gating — across every stream-direct scheme, g, ragged
+    /// shapes and the whole batch tile ladder.
+    #[test]
+    fn stream_direct_matches_buffered_bitwise() {
+        let mut rng = Rng::new(400);
+        for name in ["fp8", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4.5", "fp4.25"] {
+            for g in [32usize, 64, 128] {
+                for cols in [120usize, 150] {
+                    let rows = 7usize;
+                    let lin = make_linear_grouped(name, rows, cols, g, g as u64 + 7);
+                    assert_eq!(lin.group_decode_path(), Some(GroupDecodePath::StreamDirect));
+                    let mut buf = lin.clone();
+                    buf.force_buffered_group_decode();
+                    assert_eq!(buf.group_decode_path(), Some(GroupDecodePath::Buffered));
+                    let mut s1 = GemmScratch::new();
+                    let mut s2 = GemmScratch::new();
+                    let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let mut ys = vec![0f32; rows];
+                    let mut yb = vec![0f32; rows];
+                    lin.gemv_with(&x, &mut ys, &mut s1);
+                    buf.gemv_with(&x, &mut yb, &mut s2);
+                    assert_eq!(ys, yb, "{name} g={g} cols={cols} gemv");
+                    for batch in [1usize, 3, 9, 17] {
+                        let xb = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
+                        let a = lin.gemm_with(&xb, &mut s1);
+                        let b = buf.gemm_with(&xb, &mut s2);
+                        assert_eq!(a, b, "{name} g={g} cols={cols} batch={batch}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The stream-direct path allocates nothing: a fresh scratch stays
+    /// untouched (codes/vals never sized) through gemv and gemm.
+    #[test]
+    fn stream_direct_leaves_scratch_untouched() {
+        let mut rng = Rng::new(401);
+        let lin = make_linear_grouped("fp4.25", 9, 128, 32, 9);
+        assert_eq!(lin.group_decode_path(), Some(GroupDecodePath::StreamDirect));
+        let mut scratch = GemmScratch::new();
+        let x: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0f32; 9];
+        lin.gemv_with(&x, &mut y, &mut scratch);
+        let xb = init::gaussian(&[5, 128], 0.0, 1.0, &mut rng);
+        let mut yb = Tensor::zeros(&[5, 9]);
+        lin.gemm_into(&xb, &mut yb, &mut scratch);
+        assert!(scratch.codes.is_empty(), "no codes unpack on the aligned-g path");
+        assert!(scratch.vals.is_empty(), "no values staging on the aligned-g path");
+        // (yt is the transposed output staging, not a decode buffer.)
+        assert_eq!(scratch.yt.len(), 5 * 9);
     }
 
     /// One scratch reused across per-group and per-channel tensors and

@@ -7,7 +7,9 @@
 //! contiguous — so there is no lock and no per-element splice on the
 //! merge path. Per-worker decode scratch is thread-local to the pool
 //! workers (created once per worker thread, reused across calls), keeping
-//! the steady-state decode loop allocation-free.
+//! the steady-state decode loop allocation-free; grouped tensors on the
+//! stream-direct path (segment-aligned `g`) don't touch the worker
+//! scratch at all.
 //!
 //! Used by the serving hot path for the large projections where a single
 //! core cannot saturate memory bandwidth; `QuantLinear::{gemv,gemm}_auto*`
@@ -113,8 +115,9 @@ impl QuantLinear {
         // FP5.33 de-interleaved activation streams are built once on the
         // caller and shared read-only by every worker (skipped when the
         // kernel's scalar path would never read them, and by the
-        // per-group path, which decodes through the folded values
-        // buffer instead).
+        // per-group paths — stream-direct decodes straight from the
+        // packed words, the buffered fallback stages through the
+        // worker-local codes/vals buffers).
         let deint = if self.packed.group_scales.is_none()
             && matches!(self.kernel, RowKernel::Fp533)
             && super::simd::fp533_uses_deint(self.packed.cols)

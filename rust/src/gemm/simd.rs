@@ -838,6 +838,124 @@ unsafe fn dotn_segmented_avx512<const T: usize>(
     out
 }
 
+/// Shared-bit segmented dot over a column *segment* of a row — the
+/// stream-direct grouped kernel for the AMS (4 + 1/k) layouts, where a
+/// `PerGroup` boundary can fall mid-word in the shared-bit stream (e.g.
+/// g=32, k=4 → bit 8 of word 0). `hi_words` is the row's high-nibble
+/// stream sliced at the segment (the caller guarantees `c0 % 4 == 0`);
+/// `low_words` is the row's *full* shared-bit stream, addressed
+/// absolutely through `g_base = c0 / k`, the shared-group index of the
+/// segment's first code (`c0 % k == 0`). Total: AVX-512 for k ∈ {2, 4}
+/// at in-word-aligned bases, an equivalent scalar loop otherwise. The
+/// reduction structure matches [`dotn_dense`] block-for-block, so the
+/// buffered grouped path (decode to values, dense segment dot) produces
+/// bit-identical results.
+pub fn dotn_segmented_group_at<const T: usize>(
+    hi_words: &[u16],
+    low_words: &[u16],
+    g_base: usize,
+    cols: usize,
+    xs: &[&[f32]; T],
+    fmt: FpFormat,
+    k: usize,
+) -> [f32; T] {
+    assert!(k > 0, "shared-group width must be positive");
+    assert_xs_len(xs, cols);
+    assert!(hi_words.len() >= cols.div_ceil(4), "hi stream too short");
+    if cols > 0 {
+        let last_group = g_base + (cols - 1) / k;
+        assert!(low_words.len() * 16 > last_group, "shared-bit stream too short");
+    }
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Each 16-lane block broadcasts 16/k shared bits from one word;
+        // that needs k ∈ {2, 4} and a base whose in-word bit offset is a
+        // multiple of the per-block stride (guaranteed when the caller's
+        // group size satisfies g % 16 == 0).
+        let lanes_ok = (k == 2 || k == 4) && g_base % (16 / k) == 0;
+        if is_avx512() && cols >= 16 && lanes_ok {
+            // SAFETY: feature checked; stream and xs lengths asserted.
+            return unsafe {
+                dotn_segmented_group_at_avx512(hi_words, low_words, g_base, cols, xs, fmt, k)
+            };
+        }
+    }
+    let mut acc = [0f32; T];
+    for i in 0..cols {
+        let hi = (u32::from(hi_words[i / 4]) >> (4 * (i % 4))) & 0xF;
+        let g = g_base + i / k;
+        let shared = (u32::from(low_words[g / 16]) >> (g % 16)) & 1;
+        let v = decode_arith((hi << 1) | shared, e, m, eb);
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dotn_segmented_group_at_avx512<const T: usize>(
+    hi_words: &[u16],
+    low_words: &[u16],
+    g_base: usize,
+    cols: usize,
+    xs: &[&[f32]; T],
+    fmt: FpFormat,
+    k: usize,
+) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    let dec = DecodeConsts::new(e, m, eb);
+    let nib_shifts = _mm512_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28, 0, 4, 8, 12, 16, 20, 24, 28);
+    let one = _mm512_set1_epi32(1);
+    let low_shifts = if k == 2 {
+        _mm512_setr_epi32(0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7)
+    } else {
+        _mm512_setr_epi32(0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3)
+    };
+    let mut acc = [_mm512_setzero_ps(); T];
+    let blocks = cols / 16;
+    for b in 0..blocks {
+        let hi64 = (hi_words.as_ptr().add(b * 4) as *const u64).read_unaligned();
+        let vlo = _mm512_set1_epi32(hi64 as u32 as i32);
+        let vhi = _mm512_set1_epi32((hi64 >> 32) as u32 as i32);
+        let packed = _mm512_mask_blend_epi32(0xFF00, vlo, vhi);
+        let nib = _mm512_and_si512(_mm512_srlv_epi32(packed, nib_shifts), _mm512_set1_epi32(0xF));
+        // Absolute shared-group index of the block's first code; the
+        // 16/k bits the block needs never straddle a word (base offset
+        // is a multiple of 16/k, checked by the caller gate).
+        let g0 = g_base + b * 16 / k;
+        let lw = u32::from(*low_words.get_unchecked(g0 / 16)) >> (g0 % 16);
+        let lowv = _mm512_and_si512(
+            _mm512_srlv_epi32(_mm512_set1_epi32(lw as i32), low_shifts),
+            one,
+        );
+        let code = _mm512_or_si512(_mm512_slli_epi32::<1>(nib), lowv);
+        let v = dec.decode(code);
+        for j in 0..T {
+            acc[j] = _mm512_fmadd_ps(v, _mm512_loadu_ps(xs[j].as_ptr().add(b * 16)), acc[j]);
+        }
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(acc[j]);
+    }
+    for i in blocks * 16..cols {
+        let hi = (u32::from(hi_words[i / 4]) >> (4 * (i % 4))) & 0xF;
+        let g = g_base + i / k;
+        let shared = (u32::from(low_words[g / 16]) >> (g % 16)) & 1;
+        let v = decode_arith((hi << 1) | shared, e, m, eb);
+        for j in 0..T {
+            out[j] += v * xs[j][i];
+        }
+    }
+    out
+}
+
 /// Fused FP5.33 dot against `T` activation rows. `x0s/x1s/x2s` hold the
 /// stride-3 de-interleaved streams of each activation row (built once per
 /// GEMM call, see [`deinterleave3`]); `xs` are the natural rows used by
@@ -1103,6 +1221,57 @@ mod tests {
                     "n={n} j={j}: {} vs {single}",
                     tiled[j]
                 );
+            }
+        }
+    }
+
+    /// The shared-bit segment kernel (stream-direct grouped path) must
+    /// match a scalar decode of the same codes at every word-aligned
+    /// segment of the row, for both AVX-servable k values and for a
+    /// scalar-only k.
+    #[test]
+    fn dotn_segmented_group_at_matches_reference() {
+        let mut rng = Rng::new(21);
+        let fmt = FpFormat::E2M2;
+        let cols = 160usize;
+        for k in [2usize, 4, 5] {
+            // Synthetic codes with a consistent shared LSB per k-group.
+            let mut codes = vec![0u16; cols];
+            for g0 in (0..cols).step_by(k) {
+                let shared = (rng.next_u32() & 1) as u16;
+                for c in codes.iter_mut().skip(g0).take(k) {
+                    *c = ((rng.next_u32() as u16 & 0xF) << 1) | shared;
+                }
+            }
+            // Pack: hi-nibble stream + shared-bit stream (1 bit/group).
+            let mut hi = vec![0u16; cols.div_ceil(4)];
+            let mut lo = vec![0u16; cols.div_ceil(k).div_ceil(16)];
+            for (i, &c) in codes.iter().enumerate() {
+                hi[i / 4] |= ((c >> 1) & 0xF) << (4 * (i % 4));
+            }
+            for (g, grp) in codes.chunks(k).enumerate() {
+                lo[g / 16] |= (grp[0] & 1) << (g % 16);
+            }
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            // Segment sizes that keep c0 % (4, k) == 0.
+            let g_seg = if k == 5 { 80 } else { 32 };
+            let mut c0 = 0usize;
+            while c0 < cols {
+                let len = g_seg.min(cols - c0);
+                let xs: [&[f32]; 2] = [&x[c0..c0 + len], &x[c0..c0 + len]];
+                let d = dotn_segmented_group_at(&hi[c0 / 4..], &lo, c0 / k, len, &xs, fmt, k);
+                let want: f32 = codes[c0..c0 + len]
+                    .iter()
+                    .zip(&x[c0..c0 + len])
+                    .map(|(&c, &xv)| fmt.decode(c) * xv)
+                    .sum();
+                for got in d {
+                    assert!(
+                        (got - want).abs() <= 2e-4 * (1.0 + want.abs()),
+                        "k={k} c0={c0}: {got} vs {want}"
+                    );
+                }
+                c0 += len;
             }
         }
     }

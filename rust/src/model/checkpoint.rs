@@ -374,15 +374,20 @@ fn read_linear(e: &Json, f32s: &[f32], words: &[u16]) -> Result<Linear> {
                     })
                 }
             };
-            Ok(Linear::Quant(QuantLinear::new(PackedTensor {
+            // The validated constructor re-checks the whole stream
+            // geometry (incl. the group-scale stream), so a corrupt
+            // header that slipped past the field checks above still
+            // fails the load instead of the serve path.
+            let packed = PackedTensor::new(
                 scheme,
                 rows,
                 cols,
-                words: words[woff..woff + wcount].to_vec(),
-                row_stride,
-                scales: f32s[soff..soff + scount].to_vec(),
+                words[woff..woff + wcount].to_vec(),
+                f32s[soff..soff + scount].to_vec(),
                 group_scales,
-            })))
+            )
+            .map_err(|e| anyhow::anyhow!("packed tensor geometry: {e}"))?;
+            Ok(Linear::Quant(QuantLinear::new(packed)))
         }
         other => bail!("unknown tensor kind '{other}'"),
     }

@@ -79,8 +79,80 @@ pub struct PackedTensor {
 }
 
 impl PackedTensor {
+    /// Validated constructor: every stream is cross-checked against the
+    /// declared geometry, so a truncated words / row-scale / group-scale
+    /// stream fails *here* — at pack or checkpoint-load time — with a
+    /// typed [`QuantError`] instead of indexing out of bounds (or
+    /// decoding garbage) in the serve hot path. `row_stride` is derived
+    /// from the scheme; callers with an externally declared stride
+    /// compare it first.
+    pub fn new(
+        scheme: Scheme,
+        rows: usize,
+        cols: usize,
+        words: Vec<u16>,
+        scales: Vec<f32>,
+        group_scales: Option<GroupScales>,
+    ) -> Result<PackedTensor, QuantError> {
+        let row_stride = row_stride(scheme, cols);
+        if words.len() != rows * row_stride {
+            return Err(QuantError::StreamGeometry {
+                stream: "packed words",
+                expected: rows * row_stride,
+                got: words.len(),
+            });
+        }
+        if scales.len() != rows {
+            return Err(QuantError::StreamGeometry {
+                stream: "row scales",
+                expected: rows,
+                got: scales.len(),
+            });
+        }
+        if let Some(gs) = &group_scales {
+            if gs.group_size == 0 {
+                return Err(QuantError::InvalidGroupSize { g: 0, reason: "must be positive" });
+            }
+            let groups = cols.div_ceil(gs.group_size);
+            if gs.groups_per_row != groups {
+                return Err(QuantError::StreamGeometry {
+                    stream: "groups per row",
+                    expected: groups,
+                    got: gs.groups_per_row,
+                });
+            }
+            if gs.scales.len() != rows * groups {
+                return Err(QuantError::StreamGeometry {
+                    stream: "group scales",
+                    expected: rows * groups,
+                    got: gs.scales.len(),
+                });
+            }
+        }
+        Ok(PackedTensor {
+            scheme,
+            rows,
+            cols,
+            words,
+            row_stride,
+            scales,
+            group_scales,
+        })
+    }
+
     pub fn row_words(&self, r: usize) -> &[u16] {
         &self.words[r * self.row_stride..(r + 1) * self.row_stride]
+    }
+
+    /// One row's words split into the (high/primary, low/shared) segment
+    /// streams — the addressable unit of the stream-direct grouped
+    /// kernels. Single-stream layouts (FP16, byte codes, dense
+    /// bit-streams) return the whole row as the primary stream and an
+    /// empty low stream.
+    pub fn row_streams(&self, r: usize) -> (&[u16], &[u16]) {
+        let words = self.row_words(r);
+        let hi = hi_stream_words(self.scheme, self.cols).min(words.len());
+        words.split_at(hi)
     }
 
     /// Total storage bytes for the quantized payload (excludes scales).
@@ -137,6 +209,54 @@ impl PackedTensor {
             }
         }
         out
+    }
+}
+
+/// Words of the high/primary segment stream at the front of each packed
+/// row — the split point of [`PackedTensor::row_streams`]. Equal to the
+/// full [`row_stride`] for single-stream layouts.
+pub fn hi_stream_words(scheme: Scheme, cols: usize) -> usize {
+    match scheme {
+        // Two-stream layouts: a 4-bit high-segment stream precedes the
+        // low/shared-bit stream.
+        Scheme::Fp(f) if f.bits() == 6 || f.bits() == 5 => cols.div_ceil(4),
+        Scheme::Ams { base, k } if !(base == FpFormat::E2M3 && k == 3) && base.bits() == 5 => {
+            cols.div_ceil(4)
+        }
+        Scheme::Ams { base, k } if !(base == FpFormat::E2M3 && k == 3) => {
+            (cols * (base.bits() as usize - 1)).div_ceil(16)
+        }
+        // Everything else is a single stream.
+        _ => row_stride(scheme, cols),
+    }
+}
+
+/// Whether every `Granularity::PerGroup(g)` boundary lands on an
+/// addressable position of this scheme's packed streams: word-aligned in
+/// the high/byte streams and the per-code low streams (`g % 16 == 0`
+/// covers all of them), on a 3-code word boundary for the continuous
+/// FP5.33 layout, and on a shared-bit group boundary for the AMS
+/// segmented layouts. This is the *layout* precondition for decoding a
+/// group segment straight from the packed words without touching
+/// neighbouring groups; the kernels in [`crate::gemm`] additionally
+/// require a segment-capable kernel family before taking the
+/// stream-direct path.
+pub fn group_segments_aligned(scheme: Scheme, g: usize) -> bool {
+    if g == 0 || g % 16 != 0 {
+        return false;
+    }
+    match scheme {
+        // One code per word / byte stream / nibble streams: any 16-code
+        // boundary is a word boundary in every stream.
+        Scheme::Fp16 => true,
+        Scheme::Fp(f) if matches!(f.bits(), 4..=6 | 8) => true,
+        Scheme::Int { bits: 4 | 8 } => true,
+        // Continuous FP5.33: one u16 holds a whole 3-code group.
+        Scheme::Ams { base, k } if base == FpFormat::E2M3 && k == 3 => g % 3 == 0,
+        // Segmented AMS: shared-bit groups must not straddle a segment.
+        Scheme::Ams { base, k } if base.bits() == 5 => g % k == 0,
+        // Generic dense bit-streams have no word-aligned segments.
+        _ => false,
     }
 }
 
@@ -216,15 +336,7 @@ pub fn pack(q: &QuantizedTensor) -> Result<PackedTensor, QuantError> {
         let row_codes = &q.codes[r * q.cols..(r + 1) * q.cols];
         pack_row(q.scheme, row_codes, &mut words[r * stride..(r + 1) * stride]);
     }
-    Ok(PackedTensor {
-        scheme: q.scheme,
-        rows: q.rows,
-        cols: q.cols,
-        words,
-        row_stride: stride,
-        scales,
-        group_scales,
-    })
+    PackedTensor::new(q.scheme, q.rows, q.cols, words, scales, group_scales)
 }
 
 /// Pack one row of codes into `out` (len = row_stride).
@@ -628,6 +740,107 @@ mod tests {
         let mut q = quantize(&w, &QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap())).unwrap();
         q.granularity = Granularity::PerGroup(0);
         assert!(matches!(pack(&q), Err(QuantError::InvalidGroupSize { g: 0, .. })));
+    }
+
+    /// Satellite (PR 5): a truncated words / scale / group-scale stream
+    /// is a typed error at construction, not an out-of-bounds panic in
+    /// the decode hot path.
+    #[test]
+    fn constructor_rejects_truncated_streams() {
+        let scheme = Scheme::parse("fp4.25").unwrap();
+        let (rows, cols) = (3usize, 64usize);
+        let stride = row_stride(scheme, cols);
+        let mk_gs = |n: usize| {
+            Some(GroupScales {
+                group_size: 32,
+                groups_per_row: 2,
+                scales: vec![1.0; n],
+            })
+        };
+        // Well-formed baseline constructs.
+        assert!(PackedTensor::new(
+            scheme,
+            rows,
+            cols,
+            vec![0u16; rows * stride],
+            vec![1.0; rows],
+            mk_gs(rows * 2),
+        )
+        .is_ok());
+        // Truncated word payload.
+        assert!(matches!(
+            PackedTensor::new(scheme, rows, cols, vec![0u16; rows * stride - 1],
+                vec![1.0; rows], None),
+            Err(QuantError::StreamGeometry { stream: "packed words", .. })
+        ));
+        // Short row-scale stream.
+        assert!(matches!(
+            PackedTensor::new(scheme, rows, cols, vec![0u16; rows * stride],
+                vec![1.0; rows - 1], None),
+            Err(QuantError::StreamGeometry { stream: "row scales", .. })
+        ));
+        // Short group-scale stream (the truncated-AMSQ shape).
+        assert!(matches!(
+            PackedTensor::new(scheme, rows, cols, vec![0u16; rows * stride],
+                vec![1.0; rows], mk_gs(rows * 2 - 1)),
+            Err(QuantError::StreamGeometry { stream: "group scales", expected: 6, got: 5 })
+        ));
+        // Inconsistent groups_per_row.
+        let bad = Some(GroupScales { group_size: 32, groups_per_row: 3, scales: vec![1.0; 9] });
+        assert!(matches!(
+            PackedTensor::new(scheme, rows, cols, vec![0u16; rows * stride],
+                vec![1.0; rows], bad),
+            Err(QuantError::StreamGeometry { stream: "groups per row", .. })
+        ));
+    }
+
+    /// The stream-direct layout predicate: word-aligned g on segmented /
+    /// byte layouts, shared-group divisibility for AMS, never for the
+    /// generic dense bit-streams.
+    #[test]
+    fn group_segment_alignment_predicate() {
+        let p = |name: &str, g: usize| group_segments_aligned(Scheme::parse(name).unwrap(), g);
+        for g in [32usize, 64, 128] {
+            for name in ["fp8", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4.5", "fp4.25", "int4", "int8"] {
+                assert!(p(name, g), "{name} g={g}");
+            }
+            // k = 3 shared groups straddle any 16-multiple boundary.
+            assert!(!p("fp4.33", g), "fp4.33 g={g}");
+            assert!(!p("fp5.33", g), "fp5.33 g={g}");
+            // Generic dense bit-stream (5-bit hi stream) has no word
+            // boundaries at code granularity.
+            assert!(!p("ams-e3m2-k4", g), "ams-e3m2-k4 g={g}");
+        }
+        // Ragged group sizes never align.
+        for name in ["fp8", "fp6-e2m3", "fp4.25"] {
+            for g in [0usize, 8, 24, 48 + 1, 100] {
+                assert!(!p(name, g), "{name} g={g}");
+            }
+        }
+        // 48 is word-aligned and a 3-multiple: fp5.33 segments exactly.
+        assert!(p("fp5.33", 48));
+        assert!(p("fp6-e2m3", 48));
+    }
+
+    /// `row_streams` splits each row at the documented hi/low boundary.
+    #[test]
+    fn row_streams_split_points() {
+        let cases = [
+            ("fp6-e2m3", 61usize, 61usize.div_ceil(4)),
+            ("fp5-e2m2", 61, 61usize.div_ceil(4)),
+            ("fp4.25", 64, 16),
+            ("fp8", 61, 61usize.div_ceil(2)), // single stream: all hi
+            ("fp5.33", 61, 61usize.div_ceil(3)), // continuous: all hi
+            ("ams-e3m2-k4", 61, (61 * 5usize).div_ceil(16)),
+        ];
+        for (name, cols, hi) in cases {
+            let q = quantize_named(name, 2, cols, 9);
+            let p = pack(&q).unwrap();
+            let (h, l) = p.row_streams(1);
+            assert_eq!(h.len(), hi, "{name}");
+            assert_eq!(h.len() + l.len(), p.row_stride, "{name}");
+            assert_eq!(hi_stream_words(p.scheme, cols), hi, "{name}");
+        }
     }
 
     #[test]

@@ -27,6 +27,15 @@ pub enum QuantError {
     /// A packing request whose scale count does not match its declared
     /// granularity/geometry (corrupt or hand-built `QuantizedTensor`).
     ScaleCountMismatch { expected: usize, got: usize },
+    /// A `PackedTensor` whose stream lengths are inconsistent with its
+    /// declared geometry (truncated word payload, short row-scale or
+    /// group-scale stream). Caught at construction — pack or checkpoint
+    /// load — so the decode hot path never indexes past a stream.
+    StreamGeometry {
+        stream: &'static str,
+        expected: usize,
+        got: usize,
+    },
     /// `Transformer::quantized_with` needs a dense source model; this
     /// projection is already packed.
     SourceNotDense { layer: String },
@@ -53,6 +62,12 @@ impl std::fmt::Display for QuantError {
             }
             QuantError::ScaleCountMismatch { expected, got } => {
                 write!(f, "scale count {got} does not match granularity (expected {expected})")
+            }
+            QuantError::StreamGeometry { stream, expected, got } => {
+                write!(
+                    f,
+                    "{stream} stream holds {got} entries but the declared geometry requires {expected}"
+                )
             }
             QuantError::SourceNotDense { layer } => {
                 write!(f, "layer '{layer}' is already quantized; quantization needs a dense source")
@@ -81,6 +96,9 @@ mod tests {
             reason: "per-group scales need a quantized grid",
         };
         assert!(e.to_string().contains("fp16"));
+        let e = QuantError::StreamGeometry { stream: "group scales", expected: 12, got: 7 };
+        assert!(e.to_string().contains("group scales"));
+        assert!(e.to_string().contains("12") && e.to_string().contains('7'));
     }
 
     #[test]

@@ -342,36 +342,33 @@ pub fn quantize_packed(w: &Tensor, cfg: &QuantConfig) -> Result<PackedTensor, Qu
         return Err(QuantError::NotMatrix { ndim: w.ndim() });
     }
     match cfg.scheme {
-        Scheme::Fp16 => Ok(pack_fp16_passthrough(w)),
-        Scheme::Int { bits } => Ok(pack_int(w, cfg.scheme, bits, cfg.granularity)),
+        Scheme::Fp16 => pack_fp16_passthrough(w),
+        Scheme::Int { bits } => pack_int(w, cfg.scheme, bits, cfg.granularity),
         _ => pack::pack(&sharing::quantize(w, cfg)?),
     }
 }
 
 /// FP16 passthrough (the W16A16 baseline): raw half words, identity
 /// scales.
-fn pack_fp16_passthrough(w: &Tensor) -> PackedTensor {
+fn pack_fp16_passthrough(w: &Tensor) -> Result<PackedTensor, QuantError> {
     let (rows, cols) = (w.rows(), w.cols());
     let mut words = vec![0u16; rows * cols];
     for (o, &x) in words.iter_mut().zip(w.data()) {
         *o = f32_to_fp16(x);
     }
-    PackedTensor {
-        scheme: Scheme::Fp16,
-        rows,
-        cols,
-        words,
-        row_stride: cols,
-        scales: vec![1.0; rows],
-        group_scales: None,
-    }
+    PackedTensor::new(Scheme::Fp16, rows, cols, words, vec![1.0; rows], None)
 }
 
 /// Symmetric integer RTN (INT4/INT8) at any granularity, stored
 /// offset-binary so the shared dequant-table machinery applies:
 /// `code = round(w/s) + 2^(b-1)`, `value = code - 2^(b-1)`,
 /// `s = amax / (2^(b-1) - 1)` per tensor / channel / group.
-fn pack_int(w: &Tensor, scheme: Scheme, bits: u32, gran: Granularity) -> PackedTensor {
+fn pack_int(
+    w: &Tensor,
+    scheme: Scheme,
+    bits: u32,
+    gran: Granularity,
+) -> Result<PackedTensor, QuantError> {
     let (rows, cols) = (w.rows(), w.cols());
     let qmax = ((1i32 << (bits - 1)) - 1) as f32;
     let offset = 1i32 << (bits - 1);
@@ -410,15 +407,7 @@ fn pack_int(w: &Tensor, scheme: Scheme, bits: u32, gran: Granularity) -> PackedT
             }),
         ),
     };
-    PackedTensor {
-        scheme,
-        rows,
-        cols,
-        words,
-        row_stride: stride,
-        scales: row_scales,
-        group_scales,
-    }
+    PackedTensor::new(scheme, rows, cols, words, row_scales, group_scales)
 }
 
 /// Build the per-layer report: reconstruction metrics against the dense

@@ -18,7 +18,19 @@ pub trait Strategy {
     }
 }
 
-/// Run a property over `cases` random inputs.
+/// Case-count override for every property suite: `PROPTEST_CASES` in the
+/// environment replaces the per-test default (the nightly-ish CI tier
+/// runs the `--ignored` kernel suites with it bumped).
+pub fn prop_cases(default_cases: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default_cases)
+}
+
+/// Run a property over `cases` random inputs (`PROPTEST_CASES` overrides
+/// the count, see [`prop_cases`]).
 pub fn run_prop<S: Strategy>(
     name: &str,
     seed: u64,
@@ -26,6 +38,7 @@ pub fn run_prop<S: Strategy>(
     strat: &S,
     prop: impl Fn(&S::Value) -> Result<(), String>,
 ) {
+    let cases = prop_cases(cases);
     let mut rng = Rng::new(seed);
     for case in 0..cases {
         let v = strat.generate(&mut rng);
@@ -279,6 +292,109 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Shared body of the stream-direct ≡ buffered ≡ dequantize-oracle
+    /// three-way grouped property (satellite, PR 5). For every
+    /// stream-direct scheme × word-aligned g × ragged (cols, batch):
+    ///
+    /// 1. stream-direct gemv/gemm are **bit-identical** to the buffered
+    ///    fallback (same segment reduction order by construction);
+    /// 2. both match the kernel-independent `dequantize` oracle within
+    ///    tolerance;
+    /// 3. a scratch reused across cases matches a fresh one bit for bit
+    ///    (and the stream path leaves it untouched);
+    /// 4. pool-parallel execution is bit-identical to serial.
+    fn three_way_grouped(name: &str, seed: u64, cases: usize) {
+        use crate::formats::registry::Scheme;
+        use crate::gemm::{GemmScratch, GroupDecodePath, QuantLinear};
+        use crate::quant::pipeline::quantize_packed;
+        use crate::quant::{Granularity, QuantConfig};
+        use crate::tensor::init;
+
+        const SCHEMES: [&str; 6] = ["fp8", "fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4.5", "fp4.25"];
+        const GROUPS: [usize; 4] = [32, 48, 64, 128];
+        let strat = Pair(
+            USize { lo: 0, hi: SCHEMES.len() - 1 },
+            Pair(
+                USize { lo: 0, hi: GROUPS.len() - 1 },
+                Pair(USize { lo: 1, hi: 200 }, USize { lo: 1, hi: 10 }), // cols, batch
+            ),
+        );
+        let reused = std::cell::RefCell::new(GemmScratch::new());
+        run_prop(name, seed, cases, &strat, |&(si, (gi, (cols, batch)))| {
+            let g = GROUPS[gi];
+            let rows = 6usize;
+            let cfg = QuantConfig::paper(Scheme::parse(SCHEMES[si]).unwrap())
+                .with_granularity(Granularity::PerGroup(g));
+            let mut rng = Rng::new(seed ^ (si * 4_000_000 + g * 16_000 + cols * 16 + batch) as u64);
+            let w = init::gaussian(&[rows, cols], 0.0, 0.05, &mut rng);
+            let lin = QuantLinear::new(quantize_packed(&w, &cfg).unwrap());
+            if lin.group_decode_path() != Some(GroupDecodePath::StreamDirect) {
+                return Err(format!("{} g={g}: expected stream-direct", SCHEMES[si]));
+            }
+            let mut buf = lin.clone();
+            buf.force_buffered_group_decode();
+            let deq = lin.packed.dequantize();
+            let x = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
+            // Stream ≡ buffered, bit for bit (gemm, fresh scratches).
+            let mut s_stream = GemmScratch::new();
+            let mut s_buf = GemmScratch::new();
+            let y = lin.gemm_with(&x, &mut s_stream);
+            let yb = buf.gemm_with(&x, &mut s_buf);
+            if y != yb {
+                return Err(format!("{} g={g} cols={cols} batch={batch}: stream != buffered", SCHEMES[si]));
+            }
+            // Reused scratch matches fresh.
+            let y2 = lin.gemm_with(&x, &mut reused.borrow_mut());
+            if y != y2 {
+                return Err(format!("{} g={g}: scratch reuse diverged", SCHEMES[si]));
+            }
+            // Parallel ≡ serial (row-sharded, per-row math fixed).
+            let yp = lin.gemm_parallel(&x, 4);
+            if y != yp {
+                return Err(format!("{} g={g}: parallel != serial", SCHEMES[si]));
+            }
+            // GEMV: three ways again, plus the oracle.
+            for b in 0..batch {
+                let mut ys = vec![0f32; rows];
+                let mut ybv = vec![0f32; rows];
+                lin.gemv_with(x.row(b), &mut ys, &mut s_stream);
+                buf.gemv_with(x.row(b), &mut ybv, &mut s_buf);
+                if ys != ybv {
+                    return Err(format!("{} g={g} b={b}: gemv stream != buffered", SCHEMES[si]));
+                }
+                for r in 0..rows {
+                    let want: f32 = deq.row(r).iter().zip(x.row(b)).map(|(&a, &v)| a * v).sum();
+                    for (label, got) in [("gemm", y.at2(b, r)), ("gemv", ys[r])] {
+                        if (got - want).abs() > 1e-4 * (1.0 + want.abs()) {
+                            return Err(format!(
+                                "{} g={g} cols={cols} batch={batch} {label} b={b} r={r}: \
+                                 {got} vs oracle {want}",
+                                SCHEMES[si]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Quick tier of the three-way property (every `cargo test` run).
+    #[test]
+    fn per_group_three_way_stream_buffered_oracle() {
+        three_way_grouped("per-group-three-way", 0x57AD, 16);
+    }
+
+    /// Expensive tier: the same property at a much larger case count —
+    /// the nightly-ish `kernel-proptests` CI job runs it via
+    /// `cargo test -q -- --ignored` with `PROPTEST_CASES` bumped higher
+    /// still.
+    #[test]
+    #[ignore = "expensive: nightly kernel-proptests tier"]
+    fn per_group_three_way_exhaustive() {
+        three_way_grouped("per-group-three-way-exhaustive", 0x57AE, 400);
     }
 
     /// Property (satellite): fused GEMV *and* GEMM over a `PerGroup(g)`

@@ -208,6 +208,90 @@ fn searched_plan_beats_uniform_fp533_at_equal_bits() {
     );
 }
 
+/// Satellite (PR 5): per-group candidates in the search ladder — a
+/// synthetic outlier-heavy layer (one large spike per row) where
+/// `PerGroup(32)` beats every per-channel candidate at equal budget:
+/// one per-channel scale per row is set by the spike and crushes the
+/// other 127 columns below the format's resolution, while a per-group
+/// scale quarantines the spike in its own 32-column block. The search
+/// must pick the grouped candidate, and the emitted plan must quantize
+/// and serve end-to-end.
+#[test]
+fn searched_plan_uses_per_group_when_it_wins() {
+    use ams_quant::calib::{score_layer, search_plan, ActivationStats};
+    use ams_quant::model::transformer::Linear;
+    use ams_quant::tensor::Tensor;
+
+    let (rows, cols) = (8usize, 128usize);
+    let mut rng = Rng::new(77);
+    let mut w = Tensor::zeros(&[rows, cols]);
+    for r in 0..rows {
+        for c in 0..cols {
+            w.set2(r, c, rng.normal_f32(0.0, 1.0));
+        }
+        w.set2(r, 0, 120.0); // per-row outlier spike in block 0
+    }
+    let mut stats = ActivationStats::new(cols);
+    for _ in 0..8 {
+        let row: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        stats.record(&row);
+    }
+    let pg = QuantConfig::paper(Scheme::parse("fp4").unwrap())
+        .with_granularity(Granularity::PerGroup(32));
+    let candidates = [
+        QuantConfig::paper(Scheme::parse("fp4").unwrap()),
+        QuantConfig::paper(Scheme::parse("fp5").unwrap()),
+        pg,
+    ];
+    let sens = score_layer("layers.0.w_gate", LayerRole::Mlp, &w, &stats, &candidates).unwrap();
+    // Equal budget: admit every candidate (fp4+g32 ≈ 5.3 bits/w is the
+    // priciest; fp6 per-channel would cost more and is deliberately
+    // absent so granularity competes against format bits alone).
+    let budget = sens
+        .candidates
+        .iter()
+        .map(|c| c.bits_per_weight)
+        .fold(0.0f64, f64::max);
+    assert!(budget < 5.6, "grouped fp4 stays near the 5-bit point: {budget}");
+    let out = search_plan(std::slice::from_ref(&sens), budget);
+    let chosen = &sens.candidates[out.chosen[0]];
+    assert_eq!(
+        chosen.config.granularity,
+        Granularity::PerGroup(32),
+        "per-group must win the outlier-heavy layer at equal budget \
+         (noise: {:?})",
+        sens.candidates
+            .iter()
+            .map(|c| (c.config.granularity, c.act_noise))
+            .collect::<Vec<_>>()
+    );
+    // And the grouped candidate's activation noise is strictly the best.
+    for c in &sens.candidates {
+        if c.config != chosen.config {
+            assert!(chosen.act_noise < c.act_noise, "{:?}", c.config);
+        }
+    }
+
+    // The winning config serves end-to-end through a plan override.
+    let base = model(55);
+    let plan = QuantPlan::builder(QuantConfig::paper(Scheme::parse("fp6").unwrap()))
+        .layer("layers.0.w_gate", chosen.config)
+        .build()
+        .unwrap();
+    let q = base.quantized_with(&Quantizer::new(plan)).unwrap();
+    match &q.layers[0].w_gate {
+        Linear::Quant(l) => {
+            assert_eq!(l.packed.granularity(), Granularity::PerGroup(32));
+        }
+        Linear::Dense(_) => panic!("w_gate must be packed"),
+    }
+    let eng = Engine::builder().max_batch(2).seed(7).build(q);
+    let h = eng.submit(GenRequest::greedy(1, vec![3, 1, 4], 8)).unwrap();
+    let done = h.wait().unwrap();
+    assert!(!done.tokens.is_empty());
+    eng.shutdown();
+}
+
 /// The searched plan under a *tight* budget still serves sane logits
 /// and lands under budget (the CLI's `--budget-bits 5.0` path).
 #[test]

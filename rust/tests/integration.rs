@@ -255,6 +255,74 @@ fn offline_quantize_export_serve_end_to_end() {
     assert_eq!(run(q), run(served), "reloaded model serves identical tokens");
 }
 
+/// Regression (PR 5 satellite): a corrupt AMSQ whose per-group scale
+/// stream comes up short must fail the *load* with an error — both
+/// header-level tampering and payload truncation — never panic or serve
+/// garbage. (The matching typed-error unit lives at
+/// `PackedTensor::new`; this exercises the checkpoint path.)
+#[test]
+fn corrupt_amsq_short_group_scales_fails_load() {
+    use ams_quant::model::checkpoint::{load_quantized, save_quantized};
+    use ams_quant::quant::{Granularity, QuantPlan, Quantizer};
+    use ams_quant::util::json::{parse, Json};
+
+    let base = model();
+    let plan = QuantPlan::uniform(
+        QuantConfig::paper(Scheme::parse("fp4.25").unwrap())
+            .with_granularity(Granularity::PerGroup(32)),
+    )
+    .unwrap();
+    let q = base.quantized_with(&Quantizer::new(plan)).unwrap();
+    let dir = std::env::temp_dir().join("ams_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("corrupt_gs.amsq");
+    save_quantized(&q, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let write_and_load = |name: &str, data: &[u8]| {
+        let p = dir.join(name);
+        std::fs::write(&p, data).unwrap();
+        let r = load_quantized(&p);
+        std::fs::remove_file(&p).ok();
+        r
+    };
+    // Sanity: the pristine bytes load and serve.
+    assert!(write_and_load("pristine.amsq", &bytes).is_ok());
+
+    // (a) Header tamper: shrink the first packed tensor's declared
+    // group-scale count by one entry.
+    let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    let mut header = parse(std::str::from_utf8(&bytes[10..10 + hlen]).unwrap()).unwrap();
+    let mut tampered = false;
+    if let Json::Obj(m) = &mut header {
+        if let Some(Json::Arr(tensors)) = m.get_mut("tensors") {
+            for e in tensors.iter_mut() {
+                if let Json::Obj(em) = e {
+                    if let Some(Json::Num(n)) = em.get_mut("gscales_count") {
+                        *n -= 1.0;
+                        tampered = true;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    assert!(tampered, "per-group export must declare gscales_count");
+    let htext = header.to_string().into_bytes();
+    let mut corrupt = Vec::new();
+    corrupt.extend_from_slice(&bytes[..6]);
+    corrupt.extend_from_slice(&(htext.len() as u32).to_le_bytes());
+    corrupt.extend_from_slice(&htext);
+    corrupt.extend_from_slice(&bytes[10 + hlen..]);
+    let err = write_and_load("tampered.amsq", &corrupt);
+    assert!(err.is_err(), "short group-scale declaration must fail the load");
+
+    // (b) Truncated payload: the streams physically end early.
+    let err = write_and_load("truncated.amsq", &bytes[..bytes.len() - 64]);
+    assert!(err.is_err(), "truncated payload must fail the load");
+}
+
 #[test]
 fn packed_model_memory_budget() {
     // FP4.25 projections must land within 5% of the nominal 4.25/16 ratio.
