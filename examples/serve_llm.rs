@@ -13,7 +13,6 @@
 use ams_quant::coordinator::{Engine, GenRequest, RequestHandle};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
-use ams_quant::model::sampler::Sampler;
 use ams_quant::quant::QuantConfig;
 use ams_quant::report::{f, Table};
 use ams_quant::util::cli::Args;
@@ -61,13 +60,8 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .enumerate()
             .map(|(id, p)| {
-                eng.submit(GenRequest {
-                    id: id as u64,
-                    prompt: p.clone(),
-                    max_new_tokens: max_new,
-                    sampler: Sampler::Greedy,
-                })
-                .expect("engine accepts while under capacity")
+                eng.submit(GenRequest::greedy(id as u64, p.clone(), max_new))
+                    .expect("engine accepts while under capacity")
             })
             .collect();
         let mut responses: Vec<_> = handles

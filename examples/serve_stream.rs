@@ -60,7 +60,9 @@ fn main() -> anyhow::Result<()> {
                     tokenizer::decode(&r.tokens)
                 );
             }
-            Event::Cancelled { .. } => unreachable!("request 0 is never cancelled"),
+            Event::Cancelled { .. } | Event::TimedOut { .. } | Event::Failed { .. } => {
+                unreachable!("request 0 completes normally")
+            }
         }
     }
 

@@ -3,10 +3,10 @@
 //! Pure state machine (no threads) so it is unit-testable: the engine
 //! worker drives it with `admit_submission` / `step`. Invariants
 //! (property-tested): every admitted request reaches exactly one terminal
-//! [`Outcome`] (`Done` or `Cancelled`), no token is generated after
-//! `max_new_tokens`, the running batch never exceeds `max_batch`, and a
-//! cancelled sequence never occupies a batch slot on the step after its
-//! cancel flag is observed.
+//! [`Outcome`] (`Done`, `Cancelled` or `TimedOut`), no token is generated
+//! after `max_new_tokens`, the running batch never exceeds `max_batch`,
+//! and a cancelled or deadline-expired sequence never occupies a batch
+//! slot on the step after its flag/deadline is observed.
 //!
 //! Admission runs a **chunked prefill**: prompt chunks go through
 //! [`Transformer::forward_prefill_with`], so every projection sees one
@@ -17,14 +17,21 @@
 //! stall co-batched decodes for its whole prefill. Request timing
 //! (TTFT, total) measures from [`Submission`] creation — queue wait
 //! included.
+//!
+//! For fault injection the scheduler hits the [`failpoint::STEP`] site
+//! at every step boundary and [`failpoint::PREFILL`] before every prompt
+//! chunk; after a panic unwinds through `step`, the supervising engine
+//! worker reclaims the in-flight submissions with
+//! [`Scheduler::take_inflight`] and settles each with a terminal event.
 
-use super::{Event, GenRequest, GenResponse};
+use super::failpoint::{self, FailPoints};
+use super::{Event, GenRequest, GenResponse, Priority};
 use crate::model::transformer::{ForwardScratch, KvCache, Transformer};
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
 use std::borrow::BorrowMut;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
 #[derive(Clone, Copy, Debug)]
@@ -50,17 +57,46 @@ impl Default for BatchPolicy {
     }
 }
 
+/// RAII share of a replica's outstanding-request counter: incremented on
+/// acquire, decremented on drop. Attached to a [`Submission`] at
+/// dispatch so the count stays exact on *every* settle path — normal
+/// completion, cancel, deadline expiry, and the panic path where the
+/// worker never gets to report an [`Outcome`] (the unwound scheduler
+/// drops or hands back its submissions, and each drop releases its
+/// share).
+pub(crate) struct OutstandingGuard(Arc<AtomicUsize>);
+
+impl OutstandingGuard {
+    pub fn acquire(counter: &Arc<AtomicUsize>) -> OutstandingGuard {
+        counter.fetch_add(1, Ordering::SeqCst);
+        OutstandingGuard(Arc::clone(counter))
+    }
+}
+
+impl Drop for OutstandingGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// A request wrapped with its lifecycle plumbing: the submission-time
-/// stopwatch (TTFT and total time are measured from here, so queue wait
-/// counts), the shared cancel flag, and an optional per-request event
-/// channel. [`Engine::submit`](super::Engine::submit) builds one per
-/// request; direct scheduler users get the same wrapping via
-/// [`Scheduler::admit`].
+/// stopwatch (TTFT, total time and both deadlines are measured from
+/// here, so queue wait counts), the shared cancel flag, and an optional
+/// per-request event channel. [`Engine::submit`](super::Engine::submit)
+/// builds one per request; direct scheduler users get the same wrapping
+/// via [`Scheduler::admit`].
 pub struct Submission {
     req: GenRequest,
     submitted: Timer,
     cancel: Arc<AtomicBool>,
     events: Option<mpsc::Sender<Event>>,
+    /// Engine-attached outstanding-counter share (None for bare
+    /// scheduler users).
+    guard: Option<OutstandingGuard>,
+    /// Times this submission has been re-dispatched after a replica
+    /// panic; capped by the engine so a poison-pill request cannot
+    /// crash-loop the fleet.
+    retries: u32,
 }
 
 impl Submission {
@@ -71,6 +107,8 @@ impl Submission {
             submitted: Timer::start(),
             cancel: Arc::new(AtomicBool::new(false)),
             events: None,
+            guard: None,
+            retries: 0,
         }
     }
 
@@ -95,10 +133,66 @@ impl Submission {
         self.req
     }
 
+    pub(crate) fn priority(&self) -> Priority {
+        self.req.priority
+    }
+
     /// Whether the cancel flag is set (the admission queue and scheduler
     /// both observe it to skip doomed work early).
     pub(crate) fn cancelled(&self) -> bool {
         self.cancel.load(Ordering::SeqCst)
+    }
+
+    /// Whether the queue deadline elapsed (meaningful only while the
+    /// submission is still queued).
+    pub(crate) fn queue_expired(&self) -> bool {
+        self.req
+            .queue_deadline
+            .is_some_and(|d| self.submitted.elapsed() >= d)
+    }
+
+    /// Whether the end-to-end deadline elapsed.
+    pub(crate) fn total_expired(&self) -> bool {
+        self.req
+            .total_deadline
+            .is_some_and(|d| self.submitted.elapsed() >= d)
+    }
+
+    /// Attach an engine outstanding-counter share (replaces any previous
+    /// one; the old share releases on drop).
+    pub(crate) fn attach_guard(&mut self, guard: OutstandingGuard) {
+        self.guard = Some(guard);
+    }
+
+    /// Move the outstanding-counter share to another replica's counter —
+    /// used when a request is re-dispatched after a panic.
+    pub(crate) fn retarget(&mut self, counter: &Arc<AtomicUsize>) {
+        self.guard = Some(OutstandingGuard::acquire(counter));
+    }
+
+    pub(crate) fn retries(&self) -> u32 {
+        self.retries
+    }
+
+    pub(crate) fn mark_retried(&mut self) {
+        self.retries += 1;
+    }
+
+    /// Terminal settle on the panic path: emit [`Event::Failed`] and
+    /// release the outstanding share.
+    pub(crate) fn settle_failed(self, error: &str) {
+        let id = self.id();
+        self.emit_with(|| Event::Failed {
+            id,
+            error: error.to_string(),
+        });
+    }
+
+    /// Terminal settle for a cancelled submission reclaimed outside the
+    /// scheduler (e.g. in-flight during a replica panic).
+    pub(crate) fn settle_cancelled(self, tokens: Vec<u32>) {
+        let id = self.id();
+        self.emit_with(|| Event::Cancelled { id, tokens });
     }
 
     /// Best-effort event emission (a dropped handle just detaches the
@@ -126,20 +220,23 @@ pub enum Outcome {
     /// Cancelled before completion; carries the tokens generated so far
     /// (empty if the request never left the queue).
     Cancelled { id: u64, tokens: Vec<u32> },
+    /// A queue or total deadline expired; carries the tokens generated
+    /// before eviction (empty if the request never left the queue).
+    TimedOut { id: u64, tokens: Vec<u32> },
 }
 
 impl Outcome {
     pub fn id(&self) -> u64 {
         match self {
             Outcome::Done(r) => r.id,
-            Outcome::Cancelled { id, .. } => *id,
+            Outcome::Cancelled { id, .. } | Outcome::TimedOut { id, .. } => *id,
         }
     }
 
     pub fn into_done(self) -> Option<GenResponse> {
         match self {
             Outcome::Done(r) => Some(r),
-            Outcome::Cancelled { .. } => None,
+            Outcome::Cancelled { .. } | Outcome::TimedOut { .. } => None,
         }
     }
 }
@@ -193,8 +290,12 @@ pub struct Scheduler {
     scratch: ForwardScratch,
     /// Reused per-step token staging buffer.
     tok_buf: Vec<u32>,
+    failpoints: Arc<FailPoints>,
+    fp_tag: u64,
     pub steps_executed: u64,
     pub batched_tokens: u64,
+    /// Requests settled `TimedOut` by this scheduler.
+    pub timed_out: u64,
 }
 
 impl Scheduler {
@@ -208,9 +309,20 @@ impl Scheduler {
             rng: Rng::new(seed),
             scratch: ForwardScratch::new(),
             tok_buf: Vec::new(),
+            failpoints: FailPoints::new(),
+            fp_tag: 0,
             steps_executed: 0,
             batched_tokens: 0,
+            timed_out: 0,
         }
+    }
+
+    /// Wire this scheduler into a fault-injection registry; `tag` is the
+    /// owning replica's index.
+    pub fn with_failpoints(mut self, failpoints: Arc<FailPoints>, tag: u64) -> Scheduler {
+        self.failpoints = failpoints;
+        self.fp_tag = tag;
+        self
     }
 
     pub fn model(&self) -> &Transformer {
@@ -246,6 +358,31 @@ impl Scheduler {
         self.prefilling.iter().map(|p| p.sub.id()).collect()
     }
 
+    /// Reclaim every in-flight submission after a panic unwound through
+    /// [`Scheduler::step`]: queued, prefilling and active sequences come
+    /// back with the tokens they had generated, and their KV caches are
+    /// released. The supervisor settles each with a terminal event
+    /// (retry, `Cancelled` or `Failed`) — the scheduler itself cannot,
+    /// because it no longer knows which outcomes of the panicking step
+    /// already reached their streams.
+    ///
+    /// Submissions whose terminal outcome was emitted *before* the panic
+    /// left scheduler state at that moment, so they cannot reappear here
+    /// — the exactly-one-terminal-event invariant survives the unwind.
+    pub(crate) fn take_inflight(&mut self) -> Vec<(Submission, Vec<u32>)> {
+        let mut out = Vec::new();
+        for sub in self.queue.drain(..) {
+            out.push((sub, Vec::new()));
+        }
+        for p in self.prefilling.drain(..) {
+            out.push((p.sub, Vec::new()));
+        }
+        for a in self.active.drain(..) {
+            out.push((a.sub, a.generated));
+        }
+        out
+    }
+
     /// Run the next prompt chunk (at most `prefill_chunk` positions) of
     /// `prefilling[idx]`, in place — no per-step buffer churn on the
     /// decode hot path. Intermediate chunks write the cache only (no
@@ -253,6 +390,7 @@ impl Scheduler {
     /// the sequence into the running batch (`swap_remove`). Returns true
     /// when the sequence left the prefilling list.
     fn advance_prefill_at(&mut self, idx: usize) -> bool {
+        self.failpoints.hit(failpoint::PREFILL, self.fp_tag);
         let chunk = self.policy.prefill_chunk.max(1);
         let p = &mut self.prefilling[idx];
         let end = (p.consumed + chunk).min(p.sub.req.prompt.len());
@@ -318,50 +456,80 @@ impl Scheduler {
         }
     }
 
-    /// Drop cancelled work at the step boundary: queued requests are
-    /// discarded before they ever prefill; prefilling sequences abandon
-    /// the rest of their prompt; active sequences leave the batch. In
-    /// every case the KV cache storage is released immediately.
-    fn sweep_cancelled(&mut self, out: &mut Vec<Outcome>) {
+    fn timeout_out(sub: Submission, tokens: Vec<u32>) -> Outcome {
+        sub.emit_with(|| Event::TimedOut {
+            id: sub.id(),
+            tokens: tokens.clone(),
+        });
+        Outcome::TimedOut {
+            id: sub.id(),
+            tokens,
+        }
+    }
+
+    /// Drop dead work at the step boundary: cancelled requests and
+    /// deadline-expired requests leave the queue, the prefill list and
+    /// the batch (cancel wins when both apply — the caller asked first).
+    /// Queued requests are discarded before they ever prefill;
+    /// prefilling sequences abandon the rest of their prompt; active
+    /// sequences leave the batch. In every case the KV cache storage is
+    /// released immediately.
+    fn sweep_dead(&mut self, out: &mut Vec<Outcome>) {
         let mut i = 0;
         while i < self.queue.len() {
-            if self.queue[i].cancelled() {
+            let s = &self.queue[i];
+            if s.cancelled() {
                 let sub = self.queue.remove(i).expect("index in bounds");
                 out.push(Self::cancel_out(sub, Vec::new()));
+            } else if s.queue_expired() || s.total_expired() {
+                let sub = self.queue.remove(i).expect("index in bounds");
+                self.timed_out += 1;
+                out.push(Self::timeout_out(sub, Vec::new()));
             } else {
                 i += 1;
             }
         }
         let mut i = 0;
         while i < self.prefilling.len() {
-            if self.prefilling[i].sub.cancelled() {
+            let s = &self.prefilling[i].sub;
+            if s.cancelled() {
                 let p = self.prefilling.swap_remove(i);
                 out.push(Self::cancel_out(p.sub, Vec::new()));
+            } else if s.total_expired() {
+                let p = self.prefilling.swap_remove(i);
+                self.timed_out += 1;
+                out.push(Self::timeout_out(p.sub, Vec::new()));
             } else {
                 i += 1;
             }
         }
         let mut i = 0;
         while i < self.active.len() {
-            if self.active[i].sub.cancelled() {
+            let s = &self.active[i].sub;
+            if s.cancelled() {
                 // Dropping the Active frees its KV cache immediately — a
                 // cancelled sequence holds no memory past this boundary.
                 let a = self.active.swap_remove(i);
                 out.push(Self::cancel_out(a.sub, a.generated));
+            } else if s.total_expired() {
+                let a = self.active.swap_remove(i);
+                self.timed_out += 1;
+                out.push(Self::timeout_out(a.sub, a.generated));
             } else {
                 i += 1;
             }
         }
     }
 
-    /// One scheduler iteration: sweep cancellations, advance in-flight
-    /// prefills by one chunk each, admit up to capacity (first prefill
-    /// chunk), run one batched decode step, retire finished sequences.
-    /// Long prompts therefore interleave with decodes instead of
-    /// stalling them. Returns the terminal outcomes of this step.
+    /// One scheduler iteration: sweep cancellations/expiries, advance
+    /// in-flight prefills by one chunk each, admit up to capacity (first
+    /// prefill chunk), run one batched decode step, retire finished
+    /// sequences. Long prompts therefore interleave with decodes instead
+    /// of stalling them. Returns the terminal outcomes of this step.
     pub fn step(&mut self) -> Vec<Outcome> {
+        self.failpoints.hit(failpoint::STEP, self.fp_tag);
         let mut out = Vec::new();
-        self.sweep_cancelled(&mut out);
+        self.sweep_dead(&mut out);
         // Advance sequences admitted in earlier steps by one chunk each
         // (in place; a finishing sequence swap-removes, and the element
         // swapped into its slot is advanced next — each exactly once).
@@ -375,6 +543,10 @@ impl Scheduler {
         while self.active.len() + self.prefilling.len() < self.policy.max_batch {
             match self.queue.pop_front() {
                 Some(sub) if sub.cancelled() => out.push(Self::cancel_out(sub, Vec::new())),
+                Some(sub) if sub.queue_expired() || sub.total_expired() => {
+                    self.timed_out += 1;
+                    out.push(Self::timeout_out(sub, Vec::new()));
+                }
                 Some(sub) => self.start(sub),
                 None => break,
             }
@@ -440,8 +612,8 @@ impl Scheduler {
     }
 
     /// Drive to completion, returning the completed responses (cancelled
-    /// requests are swept but not returned — stream their terminal events
-    /// instead).
+    /// and timed-out requests are swept but not returned — stream their
+    /// terminal events instead).
     pub fn run_to_completion(&mut self) -> Vec<GenResponse> {
         let mut out = Vec::new();
         while self.pending() > 0 {
@@ -454,9 +626,11 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::failpoint::FailSpec;
     use crate::model::synthetic::synthetic_checkpoint;
     use crate::model::ModelConfig;
     use crate::util::proptest::{run_prop, USize};
+    use std::time::Duration;
 
     fn sched(max_batch: usize) -> Scheduler {
         let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 21);
@@ -747,6 +921,7 @@ mod tests {
                         assert_eq!(id, 0);
                         assert!(!tokens.is_empty(), "one step ran before the cancel");
                     }
+                    other => panic!("unexpected outcome {other:?}"),
                 }
             }
             // Never occupies a batch slot after the boundary sweep.
@@ -825,5 +1000,85 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// A queued request whose queue deadline expires settles TimedOut
+    /// with no tokens and never touches the model.
+    #[test]
+    fn queue_deadline_times_out_queued_request() {
+        let mut s = sched(1);
+        s.admit(GenRequest::greedy(0, vec![1], 30)); // holds the only slot
+        s.admit_submission(Submission::new(
+            GenRequest::greedy(1, vec![2], 30).with_queue_deadline(Duration::from_millis(5)),
+        ));
+        s.step();
+        std::thread::sleep(Duration::from_millis(10));
+        let mut saw = false;
+        while s.pending() > 0 {
+            for o in s.step() {
+                if let Outcome::TimedOut { id, tokens } = o {
+                    assert_eq!(id, 1);
+                    assert!(tokens.is_empty(), "never admitted, so no tokens");
+                    saw = true;
+                }
+            }
+        }
+        assert!(saw, "expired queued request must settle TimedOut");
+        assert_eq!(s.timed_out, 1);
+    }
+
+    /// A total deadline expiring mid-generation evicts the sequence and
+    /// returns the tokens generated so far.
+    #[test]
+    fn total_deadline_evicts_active_sequence() {
+        let mut s = sched(2);
+        s.admit_submission(Submission::new(
+            GenRequest::greedy(0, vec![1, 2], 10_000)
+                .with_total_deadline(Duration::from_millis(20)),
+        ));
+        let mut tokens_at_timeout = None;
+        let t = Timer::start();
+        while s.pending() > 0 {
+            for o in s.step() {
+                match o {
+                    Outcome::TimedOut { id, tokens } => {
+                        assert_eq!(id, 0);
+                        tokens_at_timeout = Some(tokens);
+                    }
+                    other => panic!("unexpected outcome {other:?}"),
+                }
+            }
+            assert!(
+                t.elapsed() < Duration::from_secs(30),
+                "deadline must evict the sequence long before the token budget"
+            );
+        }
+        let toks = tokens_at_timeout.expect("sequence must settle TimedOut");
+        assert!(!toks.is_empty(), "generation had started before expiry");
+        assert!(s.active_ids().is_empty());
+    }
+
+    /// A step failpoint panic unwinds through `step`; `take_inflight`
+    /// then reclaims every in-flight submission with its partial tokens,
+    /// leaving the scheduler empty (KV caches released).
+    #[test]
+    fn panic_unwinds_and_take_inflight_reclaims() {
+        let fp = FailPoints::new();
+        let mut s = sched(4).with_failpoints(Arc::clone(&fp), 0);
+        for id in 0..3u64 {
+            s.admit(GenRequest::greedy(id, vec![(id as u32) + 1], 20));
+        }
+        s.step(); // all three admitted + first decode
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::panic_on_hit(1));
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| s.step()));
+        assert!(r.is_err(), "armed step failpoint must panic");
+        let inflight = s.take_inflight();
+        let mut ids: Vec<u64> = inflight.iter().map(|(sub, _)| sub.id()).collect();
+        ids.sort();
+        assert_eq!(ids, vec![0, 1, 2]);
+        for (_, tokens) in &inflight {
+            assert!(!tokens.is_empty(), "one decode step ran before the panic");
+        }
+        assert_eq!(s.pending(), 0, "scheduler fully drained after reclaim");
     }
 }

@@ -1,5 +1,5 @@
 //! The [`Engine`] serving facade: bounded admission, replica dispatch,
-//! streaming per-request handles, and cancellation.
+//! streaming per-request handles, cancellation, and fault tolerance.
 //!
 //! One worker thread per replica owns a [`Scheduler`] and drains a
 //! *bounded* request channel: [`Engine::submit`] blocks when the queue is
@@ -12,17 +12,33 @@
 //! touch (a cancelled-but-still-queued request releases its capacity
 //! slot immediately instead of squatting until dequeue). Replica choice
 //! is an internal [`DispatchPolicy`] — least-outstanding (the
-//! vllm-router default) or round-robin.
+//! vllm-router default) or round-robin — and both route around
+//! unhealthy replicas.
+//!
+//! **Supervision.** Each worker's serve loop runs under `catch_unwind`.
+//! On a panic the supervisor marks the replica unhealthy, reclaims every
+//! in-flight submission from the unwound scheduler
+//! ([`Scheduler::take_inflight`]) and settles each with a terminal
+//! event: cancelled requests settle `Cancelled`, idempotent requests
+//! (zero tokens emitted, never retried before) are re-dispatched once to
+//! a healthy replica, and everything else settles [`Event::Failed`].
+//! The worker then restarts with capped exponential backoff and marks
+//! itself healthy again. The exactly-one-terminal-event invariant holds
+//! across the unwind: outcomes emitted before the panic had already left
+//! scheduler state, so they cannot be settled twice.
 
-use super::batcher::{BatchPolicy, Outcome, Scheduler, Submission};
+use super::batcher::{BatchPolicy, Outcome, OutstandingGuard, Scheduler, Submission};
+use super::failpoint::FailPoints;
 use super::queue::{AdmissionQueue, TryPushError};
 use super::{Event, GenRequest, GenResponse, ServeStats};
 use crate::model::transformer::Transformer;
-use crate::util::metrics::{LatencyRecorder, Summary};
+use crate::util::metrics::{FaultCounters, FaultMeter, LatencyRecorder, Summary};
 use crate::util::timer::Timer;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
+use std::time::Duration;
 
 /// Errors surfaced by the submission paths. Every variant hands the
 /// request back so the caller can retry, re-route or drop it.
@@ -30,6 +46,10 @@ use std::thread;
 pub enum EngineError {
     /// The selected replica's bounded queue is full (backpressure).
     QueueFull(GenRequest),
+    /// A bulk request was shed to keep the interactive reserve free
+    /// (priority-aware load shedding; interactive submissions may still
+    /// be accepted).
+    Overloaded(GenRequest),
     /// The engine is shutting down; no replica accepts work.
     Shutdown(GenRequest),
     /// The request can never be served (e.g. empty prompt) — rejected at
@@ -41,6 +61,9 @@ impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             EngineError::QueueFull(r) => write!(f, "queue full (request {})", r.id),
+            EngineError::Overloaded(r) => {
+                write!(f, "overloaded: bulk request {} shed", r.id)
+            }
             EngineError::Shutdown(r) => write!(f, "engine shut down (request {})", r.id),
             EngineError::InvalidRequest(r, why) => {
                 write!(f, "invalid request {}: {why}", r.id)
@@ -51,7 +74,11 @@ impl std::fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
-/// How [`Engine::submit`] picks a replica.
+/// How [`Engine::submit`] picks a replica. Both policies skip unhealthy
+/// replicas (a replica is unhealthy between a panic and the completion
+/// of its restart); if every replica is unhealthy they fall back to the
+/// plain choice — queues stay open during a restart, so the request is
+/// served once the worker is back.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum DispatchPolicy {
     /// Fewest outstanding requests, ties broken by replica index.
@@ -61,22 +88,34 @@ pub enum DispatchPolicy {
     RoundRobin,
 }
 
+/// State shared between the engine facade, one replica worker, and the
+/// request handles it issued.
+struct ReplicaShared {
+    queue: AdmissionQueue,
+    /// Requests dispatched here and not yet settled (guard-counted, so
+    /// exact across every settle path including panics).
+    outstanding: Arc<AtomicUsize>,
+    /// False between a worker panic and the completion of its restart;
+    /// dispatch routes around unhealthy replicas.
+    healthy: AtomicBool,
+}
+
 /// Streaming handle to one submitted request.
 ///
 /// Events arrive in order: `Queued`, `FirstToken`, then `Token`s, ending
-/// with exactly one terminal event (`Done` or `Cancelled`). Dropping the
-/// handle detaches the stream but does **not** cancel the request — call
-/// [`RequestHandle::cancel`], or opt in to
+/// with exactly one terminal event (`Done`, `Cancelled`, `TimedOut` or
+/// `Failed`). Dropping the handle detaches the stream but does **not**
+/// cancel the request — call [`RequestHandle::cancel`], or opt in to
 /// [`RequestHandle::cancel_on_drop`] so abandoned streams reclaim their
 /// batch slot and KV cache automatically.
 pub struct RequestHandle {
     id: u64,
     rx: mpsc::Receiver<Event>,
     cancel: Arc<AtomicBool>,
-    /// The replica's admission queue, nudged on cancel so a cancelled
-    /// still-queued request frees its capacity slot for blocked
-    /// producers immediately.
-    queue: Arc<AdmissionQueue>,
+    /// The replica this request was dispatched to; its admission queue
+    /// is nudged on cancel so a cancelled still-queued request frees its
+    /// capacity slot for blocked producers immediately.
+    shared: Arc<ReplicaShared>,
     finished: bool,
     cancel_on_drop: bool,
 }
@@ -108,7 +147,7 @@ impl RequestHandle {
         self.cancel.store(true, Ordering::SeqCst);
         // Release a still-queued request's capacity slot right away and
         // wake any producer blocked on the full queue.
-        self.queue.nudge();
+        self.shared.queue.nudge();
     }
 
     /// Blocking receive of the next lifecycle event. Returns `None` after
@@ -123,6 +162,28 @@ impl RequestHandle {
                 Some(ev)
             }
             Err(_) => {
+                self.finished = true;
+                None
+            }
+        }
+    }
+
+    /// Bounded-wait variant of [`RequestHandle::next_event`]: blocks at
+    /// most `timeout`, so a caller never hangs on a wedged stream (e.g.
+    /// a replica stalled mid-forward). `None` can mean "nothing within
+    /// the timeout" or "stream over" — check
+    /// [`RequestHandle::is_finished`] to tell them apart.
+    pub fn next_event_timeout(&mut self, timeout: Duration) -> Option<Event> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => {
+                self.finished = ev.is_terminal();
+                Some(ev)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
                 self.finished = true;
                 None
             }
@@ -156,17 +217,33 @@ impl RequestHandle {
     }
 
     /// Drain the stream to its terminal event. `Some(response)` when the
-    /// request completed, `None` when it was cancelled (or the engine
-    /// disappeared mid-flight).
+    /// request completed, `None` when it was cancelled, timed out,
+    /// failed, or the engine disappeared mid-flight.
     pub fn wait(mut self) -> Option<GenResponse> {
         while let Some(ev) = self.next_event() {
-            match ev {
-                Event::Done(r) => return Some(r),
-                Event::Cancelled { .. } => return None,
-                _ => {}
+            if let Event::Done(r) = ev {
+                return Some(r);
             }
         }
         None
+    }
+
+    /// Bounded [`RequestHandle::wait`]: drain toward the terminal event
+    /// for at most `timeout` overall. `Ok` carries the usual wait result;
+    /// `Err` hands the handle back un-finished so the caller can keep
+    /// waiting, cancel, or abandon it.
+    pub fn wait_timeout(mut self, timeout: Duration) -> Result<Option<GenResponse>, RequestHandle> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            match self.next_event_timeout(remaining) {
+                Some(Event::Done(r)) => return Ok(Some(r)),
+                Some(ev) if ev.is_terminal() => return Ok(None),
+                Some(_) => {}
+                None if self.finished => return Ok(None),
+                None => return Err(self),
+            }
+        }
     }
 }
 
@@ -177,15 +254,9 @@ impl Drop for RequestHandle {
         // (a no-op race if the request wins by completing first).
         if self.cancel_on_drop && !self.finished {
             self.cancel.store(true, Ordering::SeqCst);
-            self.queue.nudge();
+            self.shared.queue.nudge();
         }
     }
-}
-
-struct Replica {
-    queue: Arc<AdmissionQueue>,
-    handle: Option<thread::JoinHandle<ServeStats>>,
-    outstanding: Arc<AtomicUsize>,
 }
 
 /// Configures and builds an [`Engine`].
@@ -194,7 +265,12 @@ pub struct EngineBuilder {
     batch: BatchPolicy,
     dispatch: DispatchPolicy,
     queue_capacity: usize,
+    interactive_reserve: Option<usize>,
     seed: u64,
+    retry_idempotent: bool,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+    failpoints: Arc<FailPoints>,
 }
 
 impl Default for EngineBuilder {
@@ -204,7 +280,12 @@ impl Default for EngineBuilder {
             batch: BatchPolicy::default(),
             dispatch: DispatchPolicy::default(),
             queue_capacity: 64,
+            interactive_reserve: None,
             seed: 0,
+            retry_idempotent: true,
+            backoff_base: Duration::from_millis(20),
+            backoff_cap: Duration::from_millis(500),
+            failpoints: FailPoints::new(),
         }
     }
 }
@@ -264,10 +345,46 @@ impl EngineBuilder {
         self
     }
 
+    /// Queue slots reserved for interactive traffic: bulk submissions
+    /// are shed ([`EngineError::Overloaded`]) once a replica's queue
+    /// occupancy reaches `capacity - reserve`. Defaults to 1/8 of the
+    /// capacity (at least one slot, when capacity permits).
+    pub fn interactive_reserve(mut self, n: usize) -> Self {
+        self.interactive_reserve = Some(n);
+        self
+    }
+
     /// Sampler seed; replica `i` uses `seed + i` so multi-replica runs
     /// stay deterministic per replica.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Whether a replica panic re-dispatches idempotent in-flight
+    /// requests (zero tokens emitted, never retried before) to a
+    /// healthy replica instead of failing them (default true). Each
+    /// request is retried at most once, so a poison-pill request cannot
+    /// crash-loop the fleet.
+    pub fn retry_idempotent(mut self, yes: bool) -> Self {
+        self.retry_idempotent = yes;
+        self
+    }
+
+    /// Restart backoff after a worker panic: the n-th consecutive panic
+    /// sleeps `base * 2^(n-1)`, capped at `cap`. Defaults 20 ms / 500 ms.
+    pub fn restart_backoff(mut self, base: Duration, cap: Duration) -> Self {
+        self.backoff_base = base;
+        self.backoff_cap = cap;
+        self
+    }
+
+    /// Wire a fault-injection registry through the engine: every
+    /// replica's scheduler and admission queue hit its sites, tagged by
+    /// replica index. Inert unless schedules are armed (and compiled to
+    /// nothing without `cfg(any(test, feature = "failpoints"))`).
+    pub fn failpoints(mut self, fp: Arc<FailPoints>) -> Self {
+        self.failpoints = fp;
         self
     }
 
@@ -276,72 +393,210 @@ impl EngineBuilder {
     pub fn build(self, model: Transformer) -> Engine {
         let latency = Arc::new(LatencyRecorder::new());
         let ttft = Arc::new(LatencyRecorder::new());
+        let meter = Arc::new(FaultMeter::new());
         let max_seq = model.cfg.max_seq;
-        let mut replicas = Vec::with_capacity(self.replicas);
         let model = Arc::new(model);
+        let reserve = self
+            .interactive_reserve
+            .unwrap_or_else(|| (self.queue_capacity / 8).max(1))
+            // capacity 1 leaves no room for a reserve
+            .min(self.queue_capacity.saturating_sub(1));
+        let shared: Arc<Vec<Arc<ReplicaShared>>> = Arc::new(
+            (0..self.replicas)
+                .map(|i| {
+                    Arc::new(ReplicaShared {
+                        queue: AdmissionQueue::with_policy(
+                            self.queue_capacity,
+                            reserve,
+                            Arc::clone(&self.failpoints),
+                            i as u64,
+                        ),
+                        outstanding: Arc::new(AtomicUsize::new(0)),
+                        healthy: AtomicBool::new(true),
+                    })
+                })
+                .collect(),
+        );
+        let mut handles = Vec::with_capacity(self.replicas);
         for i in 0..self.replicas {
-            let m = Arc::clone(&model);
-            let queue = Arc::new(AdmissionQueue::new(self.queue_capacity));
-            let q = Arc::clone(&queue);
-            let outstanding = Arc::new(AtomicUsize::new(0));
-            let out_ctr = Arc::clone(&outstanding);
-            let lat = Arc::clone(&latency);
-            let ttf = Arc::clone(&ttft);
-            let policy = self.batch;
-            let seed = self.seed.wrapping_add(i as u64);
+            let ctx = WorkerCtx {
+                shared: Arc::clone(&shared),
+                index: i,
+                model: Arc::clone(&model),
+                policy: self.batch,
+                seed: self.seed.wrapping_add(i as u64),
+                latency: Arc::clone(&latency),
+                ttft: Arc::clone(&ttft),
+                meter: Arc::clone(&meter),
+                failpoints: Arc::clone(&self.failpoints),
+                retry_idempotent: self.retry_idempotent,
+                backoff_base: self.backoff_base,
+                backoff_cap: self.backoff_cap,
+            };
             let handle = thread::Builder::new()
                 .name(format!("ams-engine-{i}"))
-                .spawn(move || replica_main(q, m, policy, seed, out_ctr, lat, ttf))
+                .spawn(move || replica_main(ctx))
                 .expect("spawn engine replica");
-            replicas.push(Replica {
-                queue,
-                handle: Some(handle),
-                outstanding,
-            });
+            handles.push(Some(handle));
         }
         Engine {
-            replicas,
+            shared,
+            handles,
             dispatch: self.dispatch,
             rr: AtomicUsize::new(0),
             max_seq,
             latency,
             ttft,
+            meter,
         }
     }
 }
 
-/// Replica worker: drain the bounded queue into the scheduler, step it,
-/// settle outcomes. Exits once the engine closes the queue *and* all
-/// in-flight work has finished.
-fn replica_main(
-    queue: Arc<AdmissionQueue>,
+/// Everything a replica worker thread needs; owned by the thread.
+struct WorkerCtx {
+    shared: Arc<Vec<Arc<ReplicaShared>>>,
+    index: usize,
     model: Arc<Transformer>,
     policy: BatchPolicy,
     seed: u64,
-    outstanding: Arc<AtomicUsize>,
     latency: Arc<LatencyRecorder>,
     ttft: Arc<LatencyRecorder>,
-) -> ServeStats {
-    let mut sched = Scheduler::new(model, policy, seed);
+    meter: Arc<FaultMeter>,
+    failpoints: Arc<FailPoints>,
+    retry_idempotent: bool,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+}
+
+/// Extract a human-readable message from a panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "replica worker panicked".to_string()
+    }
+}
+
+/// Re-dispatch an idempotent request to the least-loaded healthy
+/// replica other than `ctx.index`; hands the submission back when no
+/// target exists or the target's queue refuses it.
+fn redispatch(ctx: &WorkerCtx, mut sub: Submission) -> Result<(), Submission> {
+    let target = ctx
+        .shared
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| *i != ctx.index && r.healthy.load(Ordering::SeqCst))
+        .min_by_key(|(i, r)| (r.outstanding.load(Ordering::SeqCst), *i))
+        .map(|(i, _)| i);
+    let Some(t) = target else {
+        return Err(sub);
+    };
+    sub.mark_retried();
+    // Move the outstanding share to the target replica so drain() and
+    // least-outstanding dispatch see the request where it now lives.
+    sub.retarget(&ctx.shared[t].outstanding);
+    ctx.shared[t]
+        .queue
+        .try_push(sub)
+        .map_err(TryPushError::into_submission)
+}
+
+/// Replica worker: supervise the serve loop under `catch_unwind`. A
+/// clean exit (queue closed and drained) ends the thread; a panic
+/// settles the in-flight work, backs off, and restarts the loop with a
+/// fresh scheduler (the old one's KV caches died with the unwind).
+fn replica_main(ctx: WorkerCtx) -> ServeStats {
+    let me = Arc::clone(&ctx.shared[ctx.index]);
     let mut stats = ServeStats::default();
     let wall = Timer::start();
+    let mut consecutive_panics: u32 = 0;
     loop {
+        let mut sched = Scheduler::new(Arc::clone(&ctx.model), ctx.policy, ctx.seed)
+            .with_failpoints(Arc::clone(&ctx.failpoints), ctx.index as u64);
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            serve_loop(&mut sched, &me, &ctx, &mut stats)
+        }));
+        // Scheduler counters survive the unwind; fold them in before the
+        // scheduler (and its caches) is dropped or rebuilt.
+        stats.decode_steps += sched.steps_executed;
+        stats.batched_tokens += sched.batched_tokens;
+        stats.timed_out += sched.timed_out;
+        match run {
+            Ok(()) => break, // queue closed and drained
+            Err(payload) => {
+                me.healthy.store(false, Ordering::SeqCst);
+                stats.panics_recovered += 1;
+                ctx.meter.panics_recovered.inc();
+                consecutive_panics += 1;
+                let msg = panic_message(payload.as_ref());
+                // Settle everything the dead scheduler still held.
+                // Outcomes emitted before the panic already left its
+                // state, so nothing here settles twice.
+                for (sub, tokens) in sched.take_inflight() {
+                    if sub.cancelled() {
+                        stats.cancelled += 1;
+                        sub.settle_cancelled(tokens);
+                    } else if ctx.retry_idempotent && tokens.is_empty() && sub.retries() == 0 {
+                        match redispatch(&ctx, sub) {
+                            Ok(()) => {
+                                stats.retries += 1;
+                                ctx.meter.retries.inc();
+                            }
+                            Err(sub) => {
+                                stats.failed += 1;
+                                sub.settle_failed(&msg);
+                            }
+                        }
+                    } else {
+                        stats.failed += 1;
+                        sub.settle_failed(&msg);
+                    }
+                }
+                let exp = consecutive_panics.saturating_sub(1).min(16);
+                let delay = ctx.backoff_base.saturating_mul(1 << exp).min(ctx.backoff_cap);
+                thread::sleep(delay);
+                stats.restarts += 1;
+                ctx.meter.restarts.inc();
+                me.healthy.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+    stats.wall_s = wall.elapsed_secs();
+    stats
+}
+
+/// The supervised inner loop: drain the bounded queue into the
+/// scheduler, step it, settle outcomes. Returns once the engine closes
+/// the queue *and* all in-flight work has finished.
+fn serve_loop(
+    sched: &mut Scheduler,
+    me: &ReplicaShared,
+    ctx: &WorkerCtx,
+    stats: &mut ServeStats,
+) {
+    loop {
+        // Reaped entries (cancelled or expired while queued) need no
+        // batch slot, only their terminal settle — drain them even when
+        // the batch is full so they never wait behind running sequences.
+        while let Some(sub) = me.queue.pop_reaped() {
+            sched.admit_submission(sub);
+        }
         // Block for work only when idle; otherwise pull between decode
         // steps — but only enough to fill the free batch slots, so the
         // *bounded queue* stays the real admission queue and
         // `queue_capacity` is an honest backpressure bound (draining
         // eagerly would just relocate the backlog into the scheduler's
-        // unbounded queue). Cancelled-while-queued submissions drain
-        // here too — the scheduler's sweep settles their terminal
-        // `Cancelled` event without ever prefilling them.
+        // unbounded queue).
         if sched.pending() == 0 {
-            match queue.pop_blocking() {
+            match me.queue.pop_blocking() {
                 Some(sub) => sched.admit_submission(sub),
                 None => break, // closed and idle: done
             }
         }
-        while sched.pending() < policy.max_batch {
-            match queue.try_pop() {
+        while sched.pending() < ctx.policy.max_batch {
+            match me.queue.try_pop() {
                 Some(sub) => sched.admit_submission(sub),
                 None => break,
             }
@@ -351,33 +606,30 @@ fn replica_main(
                 Outcome::Done(r) => {
                     stats.requests += 1;
                     stats.tokens_generated += r.tokens.len() as u64;
-                    latency.record(r.total_s);
-                    ttft.record(r.ttft_s);
-                    outstanding.fetch_sub(1, Ordering::SeqCst);
+                    ctx.latency.record(r.total_s);
+                    ctx.ttft.record(r.ttft_s);
                 }
-                Outcome::Cancelled { .. } => {
-                    stats.cancelled += 1;
-                    outstanding.fetch_sub(1, Ordering::SeqCst);
-                }
+                Outcome::Cancelled { .. } => stats.cancelled += 1,
+                // `stats.timed_out` is folded from the scheduler counter
+                // by the supervisor; only the live meter ticks here.
+                Outcome::TimedOut { .. } => ctx.meter.timeouts.inc(),
             }
         }
     }
-    stats.decode_steps = sched.steps_executed;
-    stats.batched_tokens = sched.batched_tokens;
-    stats.wall_s = wall.elapsed_secs();
-    stats
 }
 
 /// The serving engine: the only public entry point for batched
 /// generation. See the [module docs](self) for the lifecycle.
 pub struct Engine {
-    replicas: Vec<Replica>,
+    shared: Arc<Vec<Arc<ReplicaShared>>>,
+    handles: Vec<Option<thread::JoinHandle<ServeStats>>>,
     dispatch: DispatchPolicy,
     rr: AtomicUsize,
     /// Model context bound, for request validation at submit.
     max_seq: usize,
     latency: Arc<LatencyRecorder>,
     ttft: Arc<LatencyRecorder>,
+    meter: Arc<FaultMeter>,
 }
 
 impl Engine {
@@ -386,15 +638,36 @@ impl Engine {
     }
 
     pub fn replica_count(&self) -> usize {
-        self.replicas.len()
+        self.shared.len()
     }
 
     /// Requests accepted but not yet settled, across all replicas.
     pub fn outstanding(&self) -> usize {
-        self.replicas
+        self.shared
             .iter()
             .map(|r| r.outstanding.load(Ordering::SeqCst))
             .sum()
+    }
+
+    /// Replicas currently accepting dispatch (healthy). A replica is
+    /// unhealthy only between a panic and the completion of its restart.
+    pub fn healthy_replicas(&self) -> usize {
+        self.shared
+            .iter()
+            .filter(|r| r.healthy.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Live occupancy of each replica's bounded admission queue — the
+    /// capacity probe used by the chaos suite (all zeros once drained).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shared.iter().map(|r| r.queue.depth()).collect()
+    }
+
+    /// Point-in-time fault counters: panics recovered, restarts,
+    /// timeouts, sheds, retries.
+    pub fn faults(&self) -> FaultCounters {
+        self.meter.snapshot()
     }
 
     /// Block until every accepted request has settled. Workers record a
@@ -421,17 +694,34 @@ impl Engine {
     }
 
     fn pick_replica(&self) -> usize {
+        let healthy = |r: &ReplicaShared| r.healthy.load(Ordering::SeqCst);
         match self.dispatch {
-            DispatchPolicy::LeastOutstanding => {
-                self.replicas
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(i, r)| (r.outstanding.load(Ordering::SeqCst), *i))
-                    .map(|(i, _)| i)
-                    .expect("at least one replica")
-            }
+            DispatchPolicy::LeastOutstanding => self
+                .shared
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| healthy(r))
+                .min_by_key(|(i, r)| (r.outstanding.load(Ordering::SeqCst), *i))
+                .map(|(i, _)| i)
+                .unwrap_or_else(|| {
+                    // Every replica is mid-restart: queues stay open, so
+                    // fall back to the least-loaded one regardless.
+                    self.shared
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(i, r)| (r.outstanding.load(Ordering::SeqCst), *i))
+                        .map(|(i, _)| i)
+                        .expect("at least one replica")
+                }),
             DispatchPolicy::RoundRobin => {
-                self.rr.fetch_add(1, Ordering::Relaxed) % self.replicas.len()
+                let n = self.shared.len();
+                for _ in 0..n {
+                    let idx = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                    if healthy(&self.shared[idx]) {
+                        return idx;
+                    }
+                }
+                self.rr.fetch_add(1, Ordering::Relaxed) % n
             }
         }
     }
@@ -453,15 +743,17 @@ impl Engine {
                 "prompt exceeds the model context",
             ));
         }
-        let replica = &self.replicas[idx];
+        let replica = &self.shared[idx];
         let (tx_ev, rx_ev) = mpsc::channel::<Event>();
         // The TTFT stopwatch starts inside `Submission` — before any
         // queue wait, including a blocking push on a full queue.
-        let sub = Submission::with_events(req, tx_ev.clone());
+        let mut sub = Submission::with_events(req, tx_ev.clone());
         let id = sub.id();
         let cancel = sub.cancel_flag();
         let _ = tx_ev.send(Event::Queued { id });
-        replica.outstanding.fetch_add(1, Ordering::SeqCst);
+        // Guard-held outstanding count: released wherever the submission
+        // dies — normal settle, push failure below, or a worker panic.
+        sub.attach_guard(OutstandingGuard::acquire(&replica.outstanding));
         // A closed engine surfaces the typed `Shutdown` error with the
         // request handed back — never a panic on user input.
         let send_result = if block {
@@ -472,23 +764,21 @@ impl Engine {
         } else {
             replica.queue.try_push(sub).map_err(|e| match e {
                 TryPushError::Full(s) => EngineError::QueueFull(s.into_request()),
+                TryPushError::Shed(s) => {
+                    self.meter.sheds.inc();
+                    EngineError::Overloaded(s.into_request())
+                }
                 TryPushError::Closed(s) => EngineError::Shutdown(s.into_request()),
             })
         };
-        match send_result {
-            Ok(()) => Ok(RequestHandle {
-                id,
-                rx: rx_ev,
-                cancel,
-                queue: Arc::clone(&replica.queue),
-                finished: false,
-                cancel_on_drop: false,
-            }),
-            Err(err) => {
-                replica.outstanding.fetch_sub(1, Ordering::SeqCst);
-                Err(err)
-            }
-        }
+        send_result.map(|()| RequestHandle {
+            id,
+            rx: rx_ev,
+            cancel,
+            shared: Arc::clone(replica),
+            finished: false,
+            cancel_on_drop: false,
+        })
     }
 
     /// Submit a request, blocking while the chosen replica's queue is
@@ -499,20 +789,25 @@ impl Engine {
     }
 
     /// Non-blocking submit: [`EngineError::QueueFull`] when the chosen
-    /// replica's queue is at capacity, handing the request back to the
-    /// caller (shed, retry or spill to another engine).
+    /// replica's queue is at capacity (handing the request back to the
+    /// caller — shed, retry or spill to another engine), and
+    /// [`EngineError::Overloaded`] when a bulk request is shed to keep
+    /// the interactive reserve free.
     pub fn try_submit(&self, req: GenRequest) -> Result<RequestHandle, EngineError> {
         let idx = self.pick_replica();
         self.dispatch_to(idx, req, false)
     }
 
     /// Stop accepting new work without joining the replicas: every
-    /// queue is closed, in-flight requests keep decoding to
-    /// completion, and any later `submit`/`try_submit` returns
-    /// [`EngineError::Shutdown`] with the request handed back. Call
-    /// [`Engine::shutdown`] afterwards to join and collect statistics.
-    pub fn close(&mut self) {
-        for r in &self.replicas {
+    /// queue is closed, in-flight requests keep decoding to completion,
+    /// any submitter *parked* on a full queue wakes with
+    /// [`EngineError::Shutdown`], and any later `submit`/`try_submit`
+    /// returns the same error with the request handed back. Takes
+    /// `&self` so it can race concurrent submitters by design — that is
+    /// the point. Call [`Engine::shutdown`] afterwards to join and
+    /// collect statistics.
+    pub fn close(&self) {
+        for r in self.shared.iter() {
             r.queue.close();
         }
     }
@@ -525,15 +820,15 @@ impl Engine {
 
     fn shutdown_inner(&mut self) -> ServeStats {
         // Close every queue first so replicas drain concurrently.
-        for r in &self.replicas {
-            r.queue.close();
-        }
+        self.close();
         let mut total = ServeStats::default();
-        for r in &mut self.replicas {
-            if let Some(h) = r.handle.take() {
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
                 total.merge(&h.join().unwrap_or_default());
             }
         }
+        // Sheds happen on the dispatch path, not in any worker.
+        total.shed += self.meter.sheds.get();
         total
     }
 }
@@ -547,12 +842,26 @@ impl Drop for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::failpoint::{self, FailSpec};
+    use crate::coordinator::Priority;
     use crate::model::synthetic::synthetic_checkpoint;
     use crate::model::ModelConfig;
     use crate::util::proptest::{run_prop, USize};
 
     fn model() -> Transformer {
         let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 33);
+        Transformer::from_checkpoint(&ck).unwrap()
+    }
+
+    /// A model with a long context bound, for tests that need a request
+    /// to keep decoding for hundreds of steps (test_tiny's max_seq of 64
+    /// would retire it via ctx_full).
+    fn long_ctx_model() -> Transformer {
+        let cfg = ModelConfig {
+            max_seq: 2048,
+            ..ModelConfig::test_tiny()
+        };
+        let ck = synthetic_checkpoint(&cfg, 33);
         Transformer::from_checkpoint(&ck).unwrap()
     }
 
@@ -577,6 +886,8 @@ mod tests {
         assert_eq!(stats.requests, 5);
         assert_eq!(stats.tokens_generated, 15);
         assert!(stats.wall_s > 0.0);
+        assert_eq!(stats.panics_recovered, 0);
+        assert_eq!(stats.failed, 0);
     }
 
     #[test]
@@ -605,7 +916,9 @@ mod tests {
                     streamed.push(token);
                 }
                 Event::Done(r) => done = Some(r),
-                Event::Cancelled { .. } => panic!("never cancelled"),
+                Event::Cancelled { .. } | Event::TimedOut { .. } | Event::Failed { .. } => {
+                    panic!("unexpected terminal: {ev:?}")
+                }
             }
         }
         assert!(saw_queued);
@@ -773,20 +1086,17 @@ mod tests {
     fn cancelled_queued_request_frees_queue_slot() {
         // max_batch 1 + a long-running active request: the worker never
         // touches the queue while request 0 decodes, so the queue state
-        // is fully deterministic. A long context keeps request 0
-        // decoding for 1500 steps — ctx_full cannot retire it inside
-        // the test window (test_tiny's max_seq of 64 would).
-        let cfg = ModelConfig {
-            max_seq: 2048,
-            ..ModelConfig::test_tiny()
-        };
-        let ck = synthetic_checkpoint(&cfg, 33);
-        let long_ctx = Transformer::from_checkpoint(&ck).unwrap();
+        // is fully deterministic. Steps pinned at >= 1ms (and a long
+        // context so ctx_full cannot retire it) keep request 0 active
+        // for the whole test window on any machine.
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::stall_ms(1).times(100_000));
         let eng = Engine::builder()
             .max_batch(1)
             .queue_capacity(1)
             .seed(6)
-            .build(long_ctx);
+            .failpoints(Arc::clone(&fp))
+            .build(long_ctx_model());
         let active = eng.submit(GenRequest::greedy(0, vec![1, 2], 1500)).unwrap();
         // Wait for the worker to admit request 0 so the queue is empty.
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
@@ -827,7 +1137,7 @@ mod tests {
     /// `Shutdown` error (request handed back) instead of panicking.
     #[test]
     fn submit_after_close_returns_shutdown_error() {
-        let mut eng = engine(1, 2);
+        let eng = engine(1, 2);
         let h = eng.submit(GenRequest::greedy(0, vec![1], 2)).unwrap();
         eng.close();
         match eng.submit(GenRequest::greedy(1, vec![2], 2)) {
@@ -844,6 +1154,59 @@ mod tests {
         assert!(h.wait().is_some());
         let stats = eng.shutdown();
         assert_eq!(stats.requests, 1);
+    }
+
+    /// Satellite regression: `close()` must wake a submitter *parked*
+    /// on a full queue with `Shutdown` instead of leaving it parked
+    /// forever. (The old `close(&mut self)` could not even be called
+    /// while another thread was blocked inside `submit(&self)`.)
+    #[test]
+    fn close_wakes_parked_submitter() {
+        // Same pinning as above: request 0 must still be decoding when
+        // the parked submitter is woken by close().
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::stall_ms(1).times(100_000));
+        let eng = Engine::builder()
+            .max_batch(1)
+            .queue_capacity(1)
+            .seed(6)
+            .failpoints(Arc::clone(&fp))
+            .build(long_ctx_model());
+        let active = eng.submit(GenRequest::greedy(0, vec![1, 2], 1500)).unwrap();
+        // Fill the queue deterministically (wait for the worker to admit
+        // request 0 first).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let queued = loop {
+            match eng.try_submit(GenRequest::greedy(1, vec![3], 400)) {
+                Ok(h) => break h,
+                Err(EngineError::QueueFull(_)) => {
+                    assert!(std::time::Instant::now() < deadline, "worker never admitted");
+                    thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        };
+        thread::scope(|s| {
+            let parked = s.spawn(|| eng.submit(GenRequest::greedy(2, vec![4], 4)));
+            // Give the submitter time to park on the full queue.
+            thread::sleep(std::time::Duration::from_millis(30));
+            eng.close();
+            match parked.join().expect("parked submitter must return") {
+                Err(EngineError::Shutdown(req)) => {
+                    assert_eq!(req.id, 2, "request handed back to the woken submitter")
+                }
+                Err(e) => panic!("wrong error for parked submitter: {e}"),
+                Ok(_) => panic!("queue was full and closing; submit cannot succeed"),
+            }
+        });
+        // In-flight and queued work still settles after the close.
+        active.cancel();
+        queued.cancel();
+        assert!(active.wait().is_none());
+        assert!(queued.wait().is_none());
+        let stats = eng.shutdown();
+        assert_eq!(stats.cancelled, 2);
+        assert_eq!(stats.requests, 0);
     }
 
     /// Satellite: an abandoned handle with cancel_on_drop reclaims its
@@ -979,6 +1342,340 @@ mod tests {
         eng.drain();
         assert_eq!(eng.latency().count(), 1);
         assert_eq!(eng.ttft().count(), 1);
+        eng.shutdown();
+    }
+
+    // ---- fault tolerance -------------------------------------------------
+
+    /// Tentpole: a replica panic settles every in-flight request with a
+    /// terminal event, the worker restarts, and the engine keeps
+    /// serving. Requests that had emitted tokens settle `Failed`; the
+    /// conservation law done + failed + cancelled + timed_out ==
+    /// submitted holds; outstanding() returns to 0.
+    #[test]
+    fn panic_recovery_settles_and_restarts() {
+        let fp = FailPoints::new();
+        // Panic on the 3rd step of replica 0's scheduler.
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::panic_on_hit(3));
+        let eng = Engine::builder()
+            .replicas(2)
+            .dispatch(DispatchPolicy::RoundRobin)
+            .max_batch(4)
+            .seed(7)
+            .restart_backoff(Duration::from_millis(1), Duration::from_millis(10))
+            .failpoints(Arc::clone(&fp))
+            .build(model());
+        let handles: Vec<RequestHandle> = (0..8u64)
+            .map(|id| eng.submit(GenRequest::greedy(id, vec![(id as u32) + 1], 12)).unwrap())
+            .collect();
+        let mut terminals = 0;
+        let mut done = 0;
+        let mut failed = 0;
+        for mut h in handles {
+            let mut mine = 0;
+            while let Some(ev) = h.next_event() {
+                if ev.is_terminal() {
+                    mine += 1;
+                    match ev {
+                        Event::Done(_) => done += 1,
+                        Event::Failed { error, .. } => {
+                            assert!(error.contains("failpoint"), "panic message propagated");
+                            failed += 1;
+                        }
+                        other => panic!("unexpected terminal {other:?}"),
+                    }
+                }
+            }
+            assert_eq!(mine, 1, "exactly one terminal event per request");
+            terminals += mine;
+        }
+        assert_eq!(terminals, 8);
+        eng.drain();
+        assert_eq!(eng.outstanding(), 0, "guards released on every settle path");
+        assert_eq!(eng.queue_depths(), vec![0, 0], "no queue slots leaked");
+        assert_eq!(fp.fired(failpoint::STEP), 1, "the fault was injected");
+        // The restart (backoff included) races the handle drain; poll
+        // briefly instead of asserting an instantaneous recovery.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while eng.healthy_replicas() < 2 || eng.faults().restarts < 1 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "panicked replica never recovered"
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+        let faults = eng.faults();
+        assert_eq!(faults.panics_recovered, 1);
+        assert_eq!(faults.restarts, 1);
+        let stats = eng.shutdown();
+        assert_eq!(stats.panics_recovered, 1);
+        assert_eq!(stats.restarts, 1);
+        assert_eq!(stats.requests, done as u64);
+        assert_eq!(stats.failed, failed as u64);
+        assert_eq!(
+            stats.requests + stats.failed + stats.cancelled + stats.timed_out,
+            8,
+            "conservation: every request settled exactly once"
+        );
+    }
+
+    /// A panicked replica restarts and serves again — even with a single
+    /// replica (no retry target), the next request completes.
+    #[test]
+    fn single_replica_restarts_and_serves_again() {
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::panic_on_hit(2));
+        let eng = Engine::builder()
+            .seed(8)
+            .failpoints(Arc::clone(&fp))
+            .restart_backoff(Duration::from_millis(1), Duration::from_millis(10))
+            .build(model());
+        let mut victim = eng.submit(GenRequest::greedy(0, vec![1, 2], 30)).unwrap();
+        let mut saw_failed = false;
+        while let Some(ev) = victim.next_event() {
+            if let Event::Failed { id, .. } = ev {
+                assert_eq!(id, 0);
+                saw_failed = true;
+            }
+        }
+        assert!(saw_failed, "no retry target exists, so the request fails");
+        // The supervisor restarted the worker; the engine serves again.
+        let h = eng.submit(GenRequest::greedy(1, vec![3], 4)).unwrap();
+        assert_eq!(h.wait().expect("served after restart").tokens.len(), 4);
+        let stats = eng.shutdown();
+        assert_eq!(stats.restarts, 1);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.requests, 1);
+    }
+
+    /// Idempotent requests (zero tokens emitted — e.g. still prefilling
+    /// a chunked prompt) are re-dispatched to a healthy replica after a
+    /// panic and complete as Done; nothing fails.
+    #[test]
+    fn panic_mid_prefill_retries_idempotent() {
+        let fp = FailPoints::new();
+        // Panic on step 2: with prefill_chunk 2 and 10-token prompts, the
+        // admitted sequence is still prefilling (zero tokens emitted).
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::panic_on_hit(2));
+        let eng = Engine::builder()
+            .replicas(2)
+            .max_batch(2)
+            .prefill_chunk(2)
+            .seed(9)
+            .failpoints(Arc::clone(&fp))
+            .build(model());
+        let prompt: Vec<u32> = (1..11u32).collect();
+        let a = eng.dispatch_to(0, GenRequest::greedy(0, prompt.clone(), 3), true).unwrap();
+        let b = eng.dispatch_to(0, GenRequest::greedy(1, prompt, 3), true).unwrap();
+        let ra = a.wait().expect("retried on the healthy replica");
+        let rb = b.wait().expect("retried or served after restart");
+        assert_eq!(ra.tokens.len(), 3);
+        assert_eq!(rb.tokens.len(), 3);
+        let stats = eng.shutdown();
+        assert_eq!(stats.panics_recovered, 1);
+        assert_eq!(stats.failed, 0, "zero-token requests never fail, they retry");
+        assert!(stats.retries >= 1, "at least the in-flight prefill was retried");
+        assert_eq!(stats.requests, 2);
+    }
+
+    /// With retry disabled, the same panic fails the in-flight prefill
+    /// instead of re-dispatching it.
+    #[test]
+    fn retry_disabled_fails_idempotent_requests() {
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::panic_on_hit(2));
+        let eng = Engine::builder()
+            .replicas(2)
+            .max_batch(2)
+            .prefill_chunk(2)
+            .seed(10)
+            .retry_idempotent(false)
+            .failpoints(Arc::clone(&fp))
+            .build(model());
+        let prompt: Vec<u32> = (1..11u32).collect();
+        // Request 0 is deterministically in-flight (its 10-token prompt
+        // needs 5 chunks) when step 2 panics.
+        let a = eng.dispatch_to(0, GenRequest::greedy(0, prompt, 3), true).unwrap();
+        assert!(a.wait().is_none(), "failed request yields no response");
+        let stats = eng.shutdown();
+        assert_eq!(stats.panics_recovered, 1);
+        assert!(stats.failed >= 1);
+        assert_eq!(stats.retries, 0);
+    }
+
+    /// Deadline satellite: a queue deadline expires while the request
+    /// waits behind a saturated batch — terminal TimedOut, empty tokens,
+    /// queue slot restored.
+    #[test]
+    fn queue_deadline_times_out_with_terminal_event() {
+        // Pin each scheduler step at >= 1ms so request 0 provably holds
+        // the only batch slot past the 60ms queue deadline regardless of
+        // machine speed.
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::stall_ms(1).times(100_000));
+        let eng = Engine::builder()
+            .max_batch(1)
+            .seed(11)
+            .failpoints(Arc::clone(&fp))
+            .build(long_ctx_model());
+        let active = eng.submit(GenRequest::greedy(0, vec![1, 2], 1500)).unwrap();
+        let mut h = eng
+            .submit(
+                GenRequest::greedy(1, vec![3], 50)
+                    .with_queue_deadline(Duration::from_millis(60)),
+            )
+            .unwrap();
+        let mut saw = false;
+        while let Some(ev) = h.next_event() {
+            if let Event::TimedOut { id, tokens } = ev {
+                assert_eq!(id, 1);
+                assert!(tokens.is_empty(), "never admitted, so no tokens");
+                saw = true;
+            }
+        }
+        assert!(saw, "queue deadline must settle TimedOut");
+        active.cancel();
+        assert!(active.wait().is_none());
+        eng.drain();
+        assert_eq!(eng.queue_depths(), vec![0]);
+        assert!(eng.faults().timeouts >= 1);
+        let stats = eng.shutdown();
+        assert_eq!(stats.timed_out, 1);
+    }
+
+    /// A total deadline expiring mid-generation evicts the sequence with
+    /// the tokens generated so far.
+    #[test]
+    fn total_deadline_times_out_mid_generation() {
+        // Pin steps at >= 3ms: the first token lands well inside the
+        // 120ms budget (step 1), and the 1500-token request provably
+        // outlives it (would need 4.5s) — no dependence on machine speed.
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::stall_ms(3).times(100_000));
+        let eng = Engine::builder()
+            .max_batch(2)
+            .seed(12)
+            .failpoints(Arc::clone(&fp))
+            .build(long_ctx_model());
+        let mut h = eng
+            .submit(
+                GenRequest::greedy(0, vec![1, 2], 1500)
+                    .with_total_deadline(Duration::from_millis(120)),
+            )
+            .unwrap();
+        let mut timed_out_tokens = None;
+        while let Some(ev) = h.next_event() {
+            if let Event::TimedOut { id, tokens } = ev {
+                assert_eq!(id, 0);
+                timed_out_tokens = Some(tokens);
+            }
+        }
+        let toks = timed_out_tokens.expect("must settle TimedOut");
+        assert!(!toks.is_empty(), "generation had started before expiry");
+        let stats = eng.shutdown();
+        assert_eq!(stats.timed_out, 1);
+        assert_eq!(stats.requests, 0);
+    }
+
+    /// Priority satellite: bulk requests shed with `Overloaded` once the
+    /// interactive reserve is all that remains; interactive requests
+    /// still get in.
+    #[test]
+    fn bulk_sheds_before_interactive_under_overload() {
+        // capacity 4, reserve 2 ⇒ bulk ceiling 2. Steps pinned at >= 1ms
+        // so request 0 occupies the only batch slot for the whole test
+        // body and queue occupancy stays deterministic.
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::STEP, 0, FailSpec::stall_ms(1).times(100_000));
+        let eng = Engine::builder()
+            .max_batch(1)
+            .queue_capacity(4)
+            .interactive_reserve(2)
+            .seed(13)
+            .failpoints(Arc::clone(&fp))
+            .build(long_ctx_model());
+        let active = eng.submit(GenRequest::greedy(0, vec![1, 2], 1500)).unwrap();
+        // Wait until the worker admits request 0 (queue empty again).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let b1 = loop {
+            match eng.try_submit(
+                GenRequest::greedy(1, vec![3], 400).with_priority(Priority::Bulk),
+            ) {
+                Ok(h) => break h,
+                Err(EngineError::QueueFull(_)) | Err(EngineError::Overloaded(_)) => {
+                    assert!(std::time::Instant::now() < deadline, "worker never admitted");
+                    thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        };
+        let b2 = eng
+            .try_submit(GenRequest::greedy(2, vec![4], 400).with_priority(Priority::Bulk))
+            .expect("second bulk fits under the ceiling");
+        match eng.try_submit(GenRequest::greedy(3, vec![5], 400).with_priority(Priority::Bulk)) {
+            Err(EngineError::Overloaded(req)) => assert_eq!(req.id, 3, "bulk shed, handed back"),
+            other => panic!("expected Overloaded: {:?}", other.map(|h| h.id())),
+        }
+        // The reserve still admits interactive traffic...
+        let i1 = eng
+            .try_submit(GenRequest::greedy(4, vec![6], 400))
+            .expect("interactive uses the reserve");
+        let i2 = eng
+            .try_submit(GenRequest::greedy(5, vec![7], 400))
+            .expect("interactive fills to the brim");
+        // ...until the queue is truly full, which is QueueFull even for
+        // interactive.
+        match eng.try_submit(GenRequest::greedy(6, vec![8], 400)) {
+            Err(EngineError::QueueFull(req)) => assert_eq!(req.id, 6),
+            other => panic!("expected QueueFull: {:?}", other.map(|h| h.id())),
+        }
+        assert!(eng.faults().sheds >= 1);
+        for h in [&active, &b1, &b2, &i1, &i2] {
+            h.cancel();
+        }
+        for h in [active, b1, b2, i1, i2] {
+            let _ = h.wait();
+        }
+        let stats = eng.shutdown();
+        assert!(stats.shed >= 1, "sheds observable in merged stats");
+    }
+
+    /// Timeout-API satellite: against a replica stalled in prefill, the
+    /// bounded-wait accessors return instead of hanging, and the handle
+    /// survives to be waited again.
+    #[test]
+    fn next_event_timeout_against_stalled_replica() {
+        let fp = FailPoints::new();
+        fp.arm_tagged(failpoint::PREFILL, 0, FailSpec::stall_ms(250));
+        let eng = Engine::builder()
+            .seed(14)
+            .failpoints(Arc::clone(&fp))
+            .build(model());
+        let mut h = eng.submit(GenRequest::greedy(0, vec![1, 2], 3)).unwrap();
+        // Queued is sent on the dispatch path, before the stall.
+        match h.next_event_timeout(Duration::from_secs(2)) {
+            Some(Event::Queued { id }) => assert_eq!(id, 0),
+            other => panic!("expected Queued, got {other:?}"),
+        }
+        // The replica is stalled: a bounded wait returns None quickly
+        // with the stream still open.
+        let t = Timer::start();
+        assert!(h.next_event_timeout(Duration::from_millis(10)).is_none());
+        assert!(!h.is_finished(), "timeout is not a terminal state");
+        assert!(t.elapsed_secs() < 1.0, "must not block past the timeout");
+        // wait_timeout hands the un-finished handle back on expiry...
+        let h = match h.wait_timeout(Duration::from_millis(10)) {
+            Err(h) => h,
+            Ok(r) => panic!("stalled stream cannot settle this fast: {r:?}"),
+        };
+        // ...and a generous retry drains to completion once the stall
+        // clears.
+        let r = h
+            .wait_timeout(Duration::from_secs(30))
+            .expect("stall cleared well within 30s")
+            .expect("request completes");
+        assert_eq!(r.tokens.len(), 3);
+        assert_eq!(fp.fired(failpoint::PREFILL), 1);
         eng.shutdown();
     }
 }

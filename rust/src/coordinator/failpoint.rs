@@ -1,0 +1,337 @@
+//! Deterministic fault injection for the serving coordinator.
+//!
+//! A [`FailPoints`] registry is a set of *armed* fault schedules keyed by
+//! site name (see the `SITE` constants) and optionally scoped to one
+//! replica via a numeric tag. Instrumented sites in the engine worker,
+//! scheduler and admission queue call [`FailPoints::hit`]; an armed entry
+//! whose skip/times window covers that hit fires its [`FailAction`]:
+//! panic the calling thread (a replica crash), stall it (a wedged
+//! forward), or report denial to the call site (a synthetic queue-full
+//! burst). Schedules are deterministic — trigger steps are fixed at arm
+//! time, and the registry's own randomness ([`FailPoints::seeded`] +
+//! [`FailPoints::arm_random_panic`]) derives from an explicit seed — so
+//! a chaos run is reproducible from its seed alone.
+//!
+//! The registry is process-external state *injected* through
+//! [`EngineBuilder::failpoints`](super::engine::EngineBuilder::failpoints)
+//! (never a global), so concurrent tests cannot interfere with each
+//! other. The real implementation is compiled only under
+//! `cfg(any(test, feature = "failpoints"))`; production builds get
+//! inert zero-sized stubs, and every call site compiles away.
+
+/// Site name: hit at the top of every [`Scheduler::step`]
+/// (tag = replica index). Arm with a panic action to crash a replica at
+/// a chosen decode step.
+pub const STEP: &str = "replica-step";
+
+/// Site name: hit before every prefill chunk (tag = replica index). Arm
+/// with a stall action to wedge a replica mid-prefill.
+pub const PREFILL: &str = "prefill-chunk";
+
+/// Site name: hit on every non-blocking admission-queue push
+/// (tag = replica index). Arm with a deny action for a synthetic
+/// queue-full burst.
+pub const QUEUE_PUSH: &str = "queue-push";
+
+#[cfg(any(test, feature = "failpoints"))]
+mod imp {
+    use crate::util::prng::Rng;
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+
+    /// What an armed failpoint does when its schedule triggers.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum FailAction {
+        /// Panic the calling thread — simulates a replica worker crash.
+        Panic,
+        /// Sleep for the given milliseconds — simulates a stalled or
+        /// wedged step.
+        StallMs(u64),
+        /// Report denial to the call site — the admission queue treats
+        /// the push as refused (synthetic queue-full burst).
+        Deny,
+    }
+
+    /// One armed schedule: ignore the first `skip` matching hits, fire
+    /// on each of the next `times`, then stay inert.
+    #[derive(Clone, Copy, Debug)]
+    pub struct FailSpec {
+        pub action: FailAction,
+        pub skip: u64,
+        pub times: u64,
+    }
+
+    impl FailSpec {
+        /// Panic on the `n`-th matching hit (1-based).
+        pub fn panic_on_hit(n: u64) -> FailSpec {
+            FailSpec { action: FailAction::Panic, skip: n.saturating_sub(1), times: 1 }
+        }
+
+        /// Stall `ms` milliseconds on the first matching hit.
+        pub fn stall_ms(ms: u64) -> FailSpec {
+            FailSpec { action: FailAction::StallMs(ms), skip: 0, times: 1 }
+        }
+
+        /// Deny the next `times` matching hits.
+        pub fn deny(times: u64) -> FailSpec {
+            FailSpec { action: FailAction::Deny, skip: 0, times }
+        }
+
+        /// Shift the schedule: ignore the first `skip` hits.
+        pub fn after(mut self, skip: u64) -> FailSpec {
+            self.skip = skip;
+            self
+        }
+
+        /// Fire on `times` consecutive hits instead of one.
+        pub fn times(mut self, times: u64) -> FailSpec {
+            self.times = times;
+            self
+        }
+    }
+
+    struct Armed {
+        tag: Option<u64>,
+        spec: FailSpec,
+        hits: u64,
+        fired: u64,
+    }
+
+    #[derive(Default)]
+    struct Registry {
+        points: HashMap<String, Vec<Armed>>,
+        fired: HashMap<String, u64>,
+    }
+
+    /// See the [module docs](super) for the model.
+    pub struct FailPoints {
+        state: Mutex<Registry>,
+        rng: Mutex<Rng>,
+    }
+
+    enum Fire {
+        No,
+        Panic,
+        Stall(u64),
+        Deny,
+    }
+
+    impl FailPoints {
+        /// An inert registry (seed 0); arm sites to make it dangerous.
+        pub fn new() -> Arc<FailPoints> {
+            FailPoints::seeded(0)
+        }
+
+        /// A registry whose random schedules derive from `seed`.
+        pub fn seeded(seed: u64) -> Arc<FailPoints> {
+            Arc::new(FailPoints {
+                state: Mutex::new(Registry::default()),
+                rng: Mutex::new(Rng::new(seed)),
+            })
+        }
+
+        /// Arm `name` for hits from every tag.
+        pub fn arm(&self, name: &str, spec: FailSpec) {
+            self.arm_entry(name, None, spec);
+        }
+
+        /// Arm `name` for hits from one tag (replica) only.
+        pub fn arm_tagged(&self, name: &str, tag: u64, spec: FailSpec) {
+            self.arm_entry(name, Some(tag), spec);
+        }
+
+        /// Arm a panic for `tag` on a hit drawn uniformly from
+        /// `[lo, hi)` with the registry's seeded rng; returns the chosen
+        /// 1-based hit index so the schedule can be logged/reproduced.
+        pub fn arm_random_panic(&self, name: &str, tag: u64, lo: u64, hi: u64) -> u64 {
+            debug_assert!(lo >= 1 && hi > lo, "hit indices are 1-based");
+            let n = lo + self.rng.lock().expect("failpoint rng").below(hi - lo);
+            self.arm_tagged(name, tag, FailSpec::panic_on_hit(n));
+            n
+        }
+
+        fn arm_entry(&self, name: &str, tag: Option<u64>, spec: FailSpec) {
+            let mut st = self.state.lock().expect("failpoint registry");
+            st.points
+                .entry(name.to_string())
+                .or_default()
+                .push(Armed { tag, spec, hits: 0, fired: 0 });
+        }
+
+        /// Remove every schedule armed under `name`.
+        pub fn disarm(&self, name: &str) {
+            let mut st = self.state.lock().expect("failpoint registry");
+            st.points.remove(name);
+        }
+
+        /// Total fires recorded for `name` (across tags, including
+        /// schedules since disarmed) — lets tests assert a fault was
+        /// actually injected.
+        pub fn fired(&self, name: &str) -> u64 {
+            let st = self.state.lock().expect("failpoint registry");
+            st.fired.get(name).copied().unwrap_or(0)
+        }
+
+        /// Record a hit at site `name` from replica `tag`. Returns true
+        /// when a deny action fired; panic/stall actions take effect
+        /// directly (the panic is raised *after* the registry lock is
+        /// released, so the registry survives its own faults).
+        pub fn hit(&self, name: &str, tag: u64) -> bool {
+            let fire = {
+                let mut st = self.state.lock().expect("failpoint registry");
+                let mut fire = Fire::No;
+                if let Some(list) = st.points.get_mut(name) {
+                    for a in list.iter_mut() {
+                        if a.tag.map_or(true, |t| t == tag) {
+                            a.hits += 1;
+                            if a.hits > a.spec.skip && a.fired < a.spec.times {
+                                a.fired += 1;
+                                fire = match a.spec.action {
+                                    FailAction::Panic => Fire::Panic,
+                                    FailAction::StallMs(ms) => Fire::Stall(ms),
+                                    FailAction::Deny => Fire::Deny,
+                                };
+                                break;
+                            }
+                        }
+                    }
+                }
+                if !matches!(fire, Fire::No) {
+                    *st.fired.entry(name.to_string()).or_insert(0) += 1;
+                }
+                fire
+            };
+            match fire {
+                Fire::No => false,
+                Fire::Panic => panic!("failpoint '{name}' fired (tag {tag})"),
+                Fire::Stall(ms) => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                    false
+                }
+                Fire::Deny => true,
+            }
+        }
+    }
+}
+
+#[cfg(not(any(test, feature = "failpoints")))]
+mod imp {
+    //! Inert production stubs: the same API surface with no state; every
+    //! call compiles away.
+    use std::sync::Arc;
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum FailAction {
+        Panic,
+        StallMs(u64),
+        Deny,
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    pub struct FailSpec {
+        pub action: FailAction,
+        pub skip: u64,
+        pub times: u64,
+    }
+
+    impl FailSpec {
+        pub fn panic_on_hit(n: u64) -> FailSpec {
+            FailSpec { action: FailAction::Panic, skip: n.saturating_sub(1), times: 1 }
+        }
+        pub fn stall_ms(ms: u64) -> FailSpec {
+            FailSpec { action: FailAction::StallMs(ms), skip: 0, times: 1 }
+        }
+        pub fn deny(times: u64) -> FailSpec {
+            FailSpec { action: FailAction::Deny, skip: 0, times }
+        }
+        pub fn after(mut self, skip: u64) -> FailSpec {
+            self.skip = skip;
+            self
+        }
+        pub fn times(mut self, times: u64) -> FailSpec {
+            self.times = times;
+            self
+        }
+    }
+
+    /// Inert registry stub (build without `--features failpoints`).
+    pub struct FailPoints;
+
+    impl FailPoints {
+        pub fn new() -> Arc<FailPoints> {
+            Arc::new(FailPoints)
+        }
+        pub fn seeded(_seed: u64) -> Arc<FailPoints> {
+            Arc::new(FailPoints)
+        }
+        pub fn arm(&self, _name: &str, _spec: FailSpec) {}
+        pub fn arm_tagged(&self, _name: &str, _tag: u64, _spec: FailSpec) {}
+        pub fn arm_random_panic(&self, _name: &str, _tag: u64, _lo: u64, _hi: u64) -> u64 {
+            0
+        }
+        pub fn disarm(&self, _name: &str) {}
+        pub fn fired(&self, _name: &str) -> u64 {
+            0
+        }
+        #[inline(always)]
+        pub fn hit(&self, _name: &str, _tag: u64) -> bool {
+            false
+        }
+    }
+}
+
+pub use imp::{FailAction, FailPoints, FailSpec};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_on_nth_hit_only() {
+        let fp = FailPoints::new();
+        fp.arm_tagged(STEP, 0, FailSpec::panic_on_hit(3));
+        assert!(!fp.hit(STEP, 0));
+        assert!(!fp.hit(STEP, 0));
+        assert!(!fp.hit(STEP, 1), "other tags never match a tagged arm");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fp.hit(STEP, 0)));
+        assert!(r.is_err(), "third matching hit must panic");
+        assert_eq!(fp.fired(STEP), 1);
+        assert!(!fp.hit(STEP, 0), "one-shot schedule stays inert after firing");
+    }
+
+    #[test]
+    fn deny_burst_then_inert() {
+        let fp = FailPoints::new();
+        fp.arm(QUEUE_PUSH, FailSpec::deny(2));
+        assert!(fp.hit(QUEUE_PUSH, 5));
+        assert!(fp.hit(QUEUE_PUSH, 6));
+        assert!(!fp.hit(QUEUE_PUSH, 5));
+        assert_eq!(fp.fired(QUEUE_PUSH), 2);
+    }
+
+    #[test]
+    fn seeded_random_schedule_is_reproducible() {
+        let a = FailPoints::seeded(42).arm_random_panic(STEP, 0, 1, 50);
+        let b = FailPoints::seeded(42).arm_random_panic(STEP, 0, 1, 50);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!((1..50).contains(&a));
+    }
+
+    #[test]
+    fn disarm_clears() {
+        let fp = FailPoints::new();
+        fp.arm(STEP, FailSpec::panic_on_hit(1));
+        fp.disarm(STEP);
+        assert!(!fp.hit(STEP, 0));
+    }
+
+    #[test]
+    fn skip_window_with_times() {
+        let fp = FailPoints::new();
+        fp.arm(QUEUE_PUSH, FailSpec::deny(2).after(1));
+        assert!(!fp.hit(QUEUE_PUSH, 0), "first hit skipped");
+        assert!(fp.hit(QUEUE_PUSH, 0));
+        assert!(fp.hit(QUEUE_PUSH, 0));
+        assert!(!fp.hit(QUEUE_PUSH, 0));
+    }
+}

@@ -9,9 +9,10 @@
 //! ```text
 //! Engine::builder().replicas(2).max_batch(8).queue_capacity(64).build(model)
 //!   └─ submit(req)      -> RequestHandle (blocking when the queue is full)
-//!   └─ try_submit(req)  -> Err(EngineError::QueueFull) for backpressure
+//!   └─ try_submit(req)  -> Err(EngineError::QueueFull | Overloaded)
 //! RequestHandle
 //!   └─ next_event()     -> Queued | FirstToken | Token | Done | Cancelled
+//!                          | TimedOut | Failed
 //!   └─ cancel()         -> sequence dropped at the next step boundary
 //!                          once admitted (queued requests settle when
 //!                          dequeued), KV cache freed, terminal
@@ -29,16 +30,47 @@
 //! dispatch (least-outstanding or round-robin) is an internal policy of
 //! the engine, not a second user-facing type.
 //!
+//! **Fault tolerance.** Replica workers run under `catch_unwind`
+//! supervision: a panic settles every in-flight sequence on that replica
+//! with a terminal [`Event::Failed`] (idempotent requests — zero tokens
+//! emitted — may be retried on a healthy replica instead), marks the
+//! replica unhealthy so dispatch routes around it, and restarts the
+//! worker with capped exponential backoff. Requests carry optional
+//! [`GenRequest::queue_deadline`] / [`GenRequest::total_deadline`]
+//! budgets that settle with [`Event::TimedOut`] on expiry, and a
+//! [`Priority`] class: interactive requests overtake bulk in the
+//! admission queue, and under overload bulk is shed first
+//! ([`engine::EngineError::Overloaded`]). The [`failpoint`] registry
+//! injects deterministic faults (panics, stalls, queue-full bursts) for
+//! the chaos test suite.
+//!
 //! All request timing measures from **submission**: `ttft_s` and
 //! `total_s` include queue wait.
 
 pub mod batcher;
 pub mod engine;
+pub mod failpoint;
 mod queue;
 
 pub use engine::{DispatchPolicy, Engine, EngineBuilder, EngineError, RequestHandle};
+pub use failpoint::{FailPoints, FailSpec};
 
 use crate::model::sampler::Sampler;
+use std::time::Duration;
+
+/// Scheduling class of a request. Interactive requests overtake bulk
+/// jobs in the admission queue, and under overload bulk is shed first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive: dequeued first, admitted up to full queue
+    /// capacity.
+    #[default]
+    Interactive,
+    /// Throughput traffic: dequeued after interactive, and refused
+    /// ([`engine::EngineError::Overloaded`]) once the queue's bulk share
+    /// is exhausted.
+    Bulk,
+}
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -47,6 +79,15 @@ pub struct GenRequest {
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
     pub sampler: Sampler,
+    /// Scheduling class (default [`Priority::Interactive`]).
+    pub priority: Priority,
+    /// Max time the request may sit queued before admission; on expiry
+    /// it settles with [`Event::TimedOut`] without touching the model.
+    pub queue_deadline: Option<Duration>,
+    /// Max time from submission to completion; on expiry mid-generation
+    /// the sequence is evicted and settles with [`Event::TimedOut`]
+    /// carrying the tokens generated so far.
+    pub total_deadline: Option<Duration>,
 }
 
 impl GenRequest {
@@ -56,7 +97,25 @@ impl GenRequest {
             prompt,
             max_new_tokens,
             sampler: Sampler::Greedy,
+            priority: Priority::Interactive,
+            queue_deadline: None,
+            total_deadline: None,
         }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> GenRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_queue_deadline(mut self, d: Duration) -> GenRequest {
+        self.queue_deadline = Some(d);
+        self
+    }
+
+    pub fn with_total_deadline(mut self, d: Duration) -> GenRequest {
+        self.total_deadline = Some(d);
+        self
     }
 }
 
@@ -78,8 +137,9 @@ pub struct GenResponse {
 
 /// Per-request lifecycle event streamed over a [`RequestHandle`].
 ///
-/// Exactly one terminal event ([`Event::Done`] or [`Event::Cancelled`]) is
-/// emitted per submitted request.
+/// Exactly one terminal event ([`Event::Done`], [`Event::Cancelled`],
+/// [`Event::TimedOut`] or [`Event::Failed`]) is emitted per submitted
+/// request — under replica panics and injected faults included.
 #[derive(Clone, Debug)]
 pub enum Event {
     /// Accepted into the engine queue.
@@ -95,6 +155,12 @@ pub enum Event {
     /// Terminal: the request was cancelled; carries whatever tokens were
     /// generated before the cut.
     Cancelled { id: u64, tokens: Vec<u32> },
+    /// Terminal: a deadline expired; carries whatever tokens were
+    /// generated before eviction (empty when it never left the queue).
+    TimedOut { id: u64, tokens: Vec<u32> },
+    /// Terminal: the replica serving the request panicked and the
+    /// request could not be (or was not eligible to be) retried.
+    Failed { id: u64, error: String },
 }
 
 impl Event {
@@ -103,14 +169,23 @@ impl Event {
             Event::Queued { id }
             | Event::FirstToken { id, .. }
             | Event::Token { id, .. }
-            | Event::Cancelled { id, .. } => *id,
+            | Event::Cancelled { id, .. }
+            | Event::TimedOut { id, .. }
+            | Event::Failed { id, .. } => *id,
             Event::Done(r) => r.id,
         }
     }
 
-    /// Done or Cancelled — the last event a request ever emits.
+    /// Done, Cancelled, TimedOut or Failed — the last event a request
+    /// ever emits.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, Event::Done(_) | Event::Cancelled { .. })
+        matches!(
+            self,
+            Event::Done(_)
+                | Event::Cancelled { .. }
+                | Event::TimedOut { .. }
+                | Event::Failed { .. }
+        )
     }
 }
 
@@ -123,6 +198,19 @@ pub struct ServeStats {
     pub decode_steps: u64,
     pub batched_tokens: u64,
     pub wall_s: f64,
+    /// Requests that settled [`Event::TimedOut`] on a deadline.
+    pub timed_out: u64,
+    /// Requests that settled [`Event::Failed`] after a replica panic.
+    pub failed: u64,
+    /// Bulk requests refused under overload (`EngineError::Overloaded`).
+    pub shed: u64,
+    /// Idempotent requests re-dispatched to a healthy replica after a
+    /// panic.
+    pub retries: u64,
+    /// Worker panics caught by the supervisor.
+    pub panics_recovered: u64,
+    /// Worker restarts performed by the supervisor.
+    pub restarts: u64,
 }
 
 impl ServeStats {
@@ -151,5 +239,11 @@ impl ServeStats {
         self.decode_steps += other.decode_steps;
         self.batched_tokens += other.batched_tokens;
         self.wall_s = self.wall_s.max(other.wall_s);
+        self.timed_out += other.timed_out;
+        self.failed += other.failed;
+        self.shed += other.shed;
+        self.retries += other.retries;
+        self.panics_recovered += other.panics_recovered;
+        self.restarts += other.restarts;
     }
 }

@@ -1,49 +1,82 @@
-//! Cancel-aware bounded admission queue.
+//! Cancel-aware, deadline-aware, priority-ordered bounded admission
+//! queue.
 //!
 //! The engine's replica queue used to be an `mpsc::sync_channel`, which
 //! made a cancelled-but-still-queued request hold its capacity slot
 //! until the replica happened to dequeue it — under backpressure a
 //! client could cancel its way out of a full queue and still be told
-//! `QueueFull`. This queue observes each [`Submission`]'s cancel flag:
-//! every push/pop first *purges* cancelled entries out of the live
-//! window (releasing their capacity slots immediately) into a reaped
-//! side-list. Reaped submissions are still handed to the consumer — the
-//! scheduler settles them with their terminal `Cancelled` event on its
-//! normal sweep path, so the exactly-one-terminal-event invariant is
-//! untouched; they just stop counting against `capacity` the moment the
-//! queue is next touched.
+//! `QueueFull`. This queue observes each [`Submission`]'s cancel flag
+//! *and* queue deadline: every push/pop first *purges* cancelled or
+//! expired entries out of the live window (releasing their capacity
+//! slots immediately) into a reaped side-list. Reaped submissions are
+//! still handed to the consumer — the scheduler settles them with their
+//! terminal `Cancelled`/`TimedOut` event on its normal sweep path, so
+//! the exactly-one-terminal-event invariant is untouched; they just stop
+//! counting against `capacity` the moment the queue is next touched.
+//!
+//! **Priority.** The live window is two lanes: interactive entries are
+//! always dequeued before bulk, so short latency-sensitive requests
+//! overtake batch jobs that arrived earlier. Overload sheds
+//! lowest-priority-first: bulk pushes are refused
+//! ([`TryPushError::Shed`]) once occupancy reaches
+//! `capacity - interactive_reserve`, keeping the reserve for interactive
+//! traffic (which may fill the queue to the brim).
 
 use super::batcher::Submission;
+use super::failpoint::{self, FailPoints};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Why a non-blocking push was refused; both variants hand the
+/// Why a non-blocking push was refused; every variant hands the
 /// submission back.
 pub(crate) enum TryPushError {
+    /// Live window at full capacity (even an interactive push would be
+    /// refused).
     Full(Submission),
+    /// Bulk push refused to keep the interactive reserve free; the
+    /// engine surfaces this as `EngineError::Overloaded`.
+    Shed(Submission),
     Closed(Submission),
 }
 
+impl TryPushError {
+    pub fn into_submission(self) -> Submission {
+        match self {
+            TryPushError::Full(s) | TryPushError::Shed(s) | TryPushError::Closed(s) => s,
+        }
+    }
+}
+
 struct State {
-    /// Un-cancelled submissions; only these count against `capacity`.
-    live: VecDeque<Submission>,
-    /// Cancelled-while-queued submissions awaiting their terminal
-    /// settle; drained ahead of live entries.
+    /// Un-cancelled, un-expired interactive submissions.
+    interactive: VecDeque<Submission>,
+    /// Un-cancelled, un-expired bulk submissions; dequeued after every
+    /// interactive entry.
+    bulk: VecDeque<Submission>,
+    /// Cancelled- or expired-while-queued submissions awaiting their
+    /// terminal settle; drained ahead of live entries and free of
+    /// capacity accounting.
     reaped: VecDeque<Submission>,
     closed: bool,
 }
 
 impl State {
-    /// Move cancelled submissions out of the live window, releasing
-    /// their capacity slots.
+    fn live_len(&self) -> usize {
+        self.interactive.len() + self.bulk.len()
+    }
+
+    /// Move cancelled or queue-expired submissions out of the live
+    /// window, releasing their capacity slots.
     fn purge(&mut self) {
-        let mut i = 0;
-        while i < self.live.len() {
-            if self.live[i].cancelled() {
-                let s = self.live.remove(i).expect("index in bounds");
-                self.reaped.push_back(s);
-            } else {
-                i += 1;
+        for lane in [&mut self.interactive, &mut self.bulk] {
+            let mut i = 0;
+            while i < lane.len() {
+                if lane[i].cancelled() || lane[i].queue_expired() {
+                    let s = lane.remove(i).expect("index in bounds");
+                    self.reaped.push_back(s);
+                } else {
+                    i += 1;
+                }
             }
         }
     }
@@ -51,28 +84,69 @@ impl State {
 
 pub(crate) struct AdmissionQueue {
     capacity: usize,
+    /// Occupancy ceiling for bulk admission (`capacity` minus the
+    /// interactive reserve).
+    bulk_capacity: usize,
     state: Mutex<State>,
     not_full: Condvar,
     not_empty: Condvar,
+    failpoints: Arc<FailPoints>,
+    fp_tag: u64,
 }
 
 impl AdmissionQueue {
+    /// A queue with no interactive reserve and inert failpoints.
     pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue::with_policy(capacity, 0, FailPoints::new(), 0)
+    }
+
+    /// `interactive_reserve` slots are admitted only to interactive
+    /// submissions; `failpoints`/`tag` wire the queue into a fault
+    /// registry (tag = owning replica index).
+    pub fn with_policy(
+        capacity: usize,
+        interactive_reserve: usize,
+        failpoints: Arc<FailPoints>,
+        tag: u64,
+    ) -> AdmissionQueue {
         assert!(capacity > 0, "queue capacity must be positive");
+        assert!(
+            interactive_reserve < capacity,
+            "interactive reserve must leave room for bulk"
+        );
         AdmissionQueue {
             capacity,
+            bulk_capacity: capacity - interactive_reserve,
             state: Mutex::new(State {
-                live: VecDeque::new(),
+                interactive: VecDeque::new(),
+                bulk: VecDeque::new(),
                 reaped: VecDeque::new(),
                 closed: false,
             }),
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
+            failpoints,
+            fp_tag: tag,
         }
     }
 
-    /// Blocking push: waits while the live window is at capacity.
-    /// Returns the submission when the queue is closed.
+    fn is_bulk(sub: &Submission) -> bool {
+        sub.priority() == super::Priority::Bulk
+    }
+
+    /// Occupancy ceiling that applies to `sub`'s priority class.
+    fn cap_for(&self, sub: &Submission) -> usize {
+        if Self::is_bulk(sub) {
+            self.bulk_capacity
+        } else {
+            self.capacity
+        }
+    }
+
+    /// Blocking push: waits while the submission's priority class is at
+    /// its occupancy ceiling. Returns the submission when the queue is
+    /// closed (including when closed *while parked* — close wakes every
+    /// blocked producer).
     pub fn push(&self, sub: Submission) -> Result<(), Submission> {
         let mut st = self.state.lock().expect("queue lock");
         loop {
@@ -80,8 +154,13 @@ impl AdmissionQueue {
                 return Err(sub);
             }
             st.purge();
-            if st.live.len() < self.capacity {
-                st.live.push_back(sub);
+            if st.live_len() < self.cap_for(&sub) {
+                let lane = if Self::is_bulk(&sub) {
+                    &mut st.bulk
+                } else {
+                    &mut st.interactive
+                };
+                lane.push_back(sub);
                 self.not_empty.notify_one();
                 return Ok(());
             }
@@ -89,33 +168,51 @@ impl AdmissionQueue {
         }
     }
 
-    /// Non-blocking push; a full live window (after purging cancelled
-    /// entries) refuses with [`TryPushError::Full`].
+    /// Non-blocking push. A full live window (after purging dead
+    /// entries) refuses with [`TryPushError::Full`]; a bulk push over
+    /// the bulk ceiling (but under total capacity) sheds with
+    /// [`TryPushError::Shed`]. A `queue-push` failpoint deny reads as
+    /// `Full` — a synthetic queue-full burst.
     pub fn try_push(&self, sub: Submission) -> Result<(), TryPushError> {
+        // The failpoint fires before the lock is taken so an injected
+        // panic can never poison the queue mutex.
+        if self.failpoints.hit(failpoint::QUEUE_PUSH, self.fp_tag) {
+            return Err(TryPushError::Full(sub));
+        }
         let mut st = self.state.lock().expect("queue lock");
         if st.closed {
             return Err(TryPushError::Closed(sub));
         }
         st.purge();
-        if st.live.len() >= self.capacity {
+        if st.live_len() >= self.capacity {
             return Err(TryPushError::Full(sub));
         }
-        st.live.push_back(sub);
+        if Self::is_bulk(&sub) && st.live_len() >= self.bulk_capacity {
+            return Err(TryPushError::Shed(sub));
+        }
+        let lane = if Self::is_bulk(&sub) {
+            &mut st.bulk
+        } else {
+            &mut st.interactive
+        };
+        lane.push_back(sub);
         self.not_empty.notify_one();
         Ok(())
     }
 
     /// Blocking pop; `None` once the queue is closed *and* drained
     /// (reaped entries included — they still need their terminal event).
+    /// Order: reaped, then interactive, then bulk.
     pub fn pop_blocking(&self) -> Option<Submission> {
         let mut st = self.state.lock().expect("queue lock");
         loop {
             st.purge();
-            if let Some(s) = st.reaped.pop_front() {
-                self.not_full.notify_one();
-                return Some(s);
-            }
-            if let Some(s) = st.live.pop_front() {
+            if let Some(s) = st
+                .reaped
+                .pop_front()
+                .or_else(|| st.interactive.pop_front())
+                .or_else(|| st.bulk.pop_front())
+            {
                 self.not_full.notify_one();
                 return Some(s);
             }
@@ -130,11 +227,38 @@ impl AdmissionQueue {
     pub fn try_pop(&self) -> Option<Submission> {
         let mut st = self.state.lock().expect("queue lock");
         st.purge();
-        let s = st.reaped.pop_front().or_else(|| st.live.pop_front());
+        let s = st
+            .reaped
+            .pop_front()
+            .or_else(|| st.interactive.pop_front())
+            .or_else(|| st.bulk.pop_front());
         if s.is_some() {
             self.not_full.notify_one();
         }
         s
+    }
+
+    /// Non-blocking pop of *reaped* entries only — submissions that need
+    /// nothing but their terminal settle. The worker drains these even
+    /// when its batch is full, so cancelled/expired requests never wait
+    /// behind running sequences for their terminal event.
+    pub fn pop_reaped(&self) -> Option<Submission> {
+        let mut st = self.state.lock().expect("queue lock");
+        st.purge();
+        let s = st.reaped.pop_front();
+        if s.is_some() {
+            self.not_full.notify_one();
+        }
+        s
+    }
+
+    /// Live occupancy (capacity slots currently held) after a purge.
+    /// A drained queue reports 0 — the capacity-restoration probe used
+    /// by the chaos suite.
+    pub fn depth(&self) -> usize {
+        let mut st = self.state.lock().expect("queue lock");
+        st.purge();
+        st.live_len()
     }
 
     /// Stop accepting work; wakes every blocked producer and consumer.
@@ -146,7 +270,7 @@ impl AdmissionQueue {
         self.not_empty.notify_all();
     }
 
-    /// Re-examine the queue after a cancel flag flipped: purge cancelled
+    /// Re-examine the queue after a cancel flag flipped: purge dead
     /// entries out of the live window and wake blocked producers. Called
     /// from [`RequestHandle::cancel`](super::engine::RequestHandle::cancel)
     /// so a *blocking* `submit` parked on a full queue benefits from the
@@ -161,12 +285,17 @@ impl AdmissionQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::GenRequest;
+    use crate::coordinator::failpoint::FailSpec;
+    use crate::coordinator::{GenRequest, Priority};
     use std::sync::atomic::Ordering;
-    use std::sync::Arc;
+    use std::time::Duration;
 
     fn sub(id: u64) -> Submission {
         Submission::new(GenRequest::greedy(id, vec![1], 4))
+    }
+
+    fn bulk(id: u64) -> Submission {
+        Submission::new(GenRequest::greedy(id, vec![1], 4).with_priority(Priority::Bulk))
     }
 
     #[test]
@@ -212,10 +341,10 @@ mod tests {
 
     #[test]
     fn close_wakes_blocked_consumer() {
-        let q = Arc::new(AdmissionQueue::new(1));
-        let q2 = Arc::clone(&q);
+        let q = std::sync::Arc::new(AdmissionQueue::new(1));
+        let q2 = std::sync::Arc::clone(&q);
         let t = std::thread::spawn(move || q2.pop_blocking());
-        std::thread::sleep(std::time::Duration::from_millis(10));
+        std::thread::sleep(Duration::from_millis(10));
         q.close();
         assert!(t.join().unwrap().is_none());
         // Closed queue refuses new work, handing the submission back.
@@ -235,5 +364,63 @@ mod tests {
         assert_eq!(q.pop_blocking().unwrap().id(), 1);
         assert_eq!(q.pop_blocking().unwrap().id(), 0);
         assert!(q.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn interactive_overtakes_bulk() {
+        let q = AdmissionQueue::new(4);
+        assert!(q.try_push(bulk(0)).is_ok());
+        assert!(q.try_push(bulk(1)).is_ok());
+        assert!(q.try_push(sub(2)).is_ok());
+        // Interactive dequeues first despite arriving last; bulk keeps
+        // FIFO order among itself.
+        assert_eq!(q.try_pop().unwrap().id(), 2);
+        assert_eq!(q.try_pop().unwrap().id(), 0);
+        assert_eq!(q.try_pop().unwrap().id(), 1);
+    }
+
+    #[test]
+    fn bulk_sheds_at_reserve_interactive_fills_to_brim() {
+        // capacity 3, reserve 1 => bulk ceiling 2.
+        let q = AdmissionQueue::with_policy(3, 1, FailPoints::new(), 0);
+        assert!(q.try_push(bulk(0)).is_ok());
+        assert!(q.try_push(bulk(1)).is_ok());
+        match q.try_push(bulk(2)) {
+            Err(TryPushError::Shed(s)) => assert_eq!(s.id(), 2),
+            _ => panic!("expected Shed at the bulk ceiling"),
+        }
+        // The reserved slot is still open to interactive traffic...
+        assert!(q.try_push(sub(3)).is_ok());
+        // ...and a full queue refuses even interactive with Full.
+        assert!(matches!(q.try_push(sub(4)), Err(TryPushError::Full(_))));
+    }
+
+    #[test]
+    fn queue_deadline_expiry_frees_slot_and_reaps() {
+        let q = AdmissionQueue::new(1);
+        let s = Submission::new(
+            GenRequest::greedy(9, vec![1], 4).with_queue_deadline(Duration::from_millis(5)),
+        );
+        assert!(q.try_push(s).is_ok());
+        assert_eq!(q.depth(), 1);
+        std::thread::sleep(Duration::from_millis(10));
+        // Expiry released the capacity slot; the expired entry is still
+        // delivered (via the reaped lane) for its terminal settle.
+        assert_eq!(q.depth(), 0);
+        assert!(q.try_push(sub(10)).is_ok());
+        assert_eq!(q.pop_reaped().unwrap().id(), 9);
+        assert!(q.pop_reaped().is_none(), "live entries are not reaped");
+        assert_eq!(q.try_pop().unwrap().id(), 10);
+    }
+
+    #[test]
+    fn failpoint_deny_reads_as_full_burst() {
+        let fp = FailPoints::new();
+        let q = AdmissionQueue::with_policy(4, 0, std::sync::Arc::clone(&fp), 3);
+        fp.arm_tagged(crate::coordinator::failpoint::QUEUE_PUSH, 3, FailSpec::deny(2));
+        assert!(matches!(q.try_push(sub(0)), Err(TryPushError::Full(_))));
+        assert!(matches!(q.try_push(sub(0)), Err(TryPushError::Full(_))));
+        assert!(q.try_push(sub(0)).is_ok(), "burst over, queue admits again");
+        assert_eq!(q.depth(), 1);
     }
 }

@@ -19,7 +19,8 @@
 //! - [`model`] — transformer inference engine + checkpoints.
 //! - [`coordinator`] — the [`Engine`] serving facade: bounded admission,
 //!   chunked prefill, continuous batching, streaming handles,
-//!   cancellation, replica dispatch.
+//!   cancellation, replica dispatch, and fault tolerance (supervised
+//!   workers, deadlines, priority shedding, fault injection).
 //! - [`runtime`] — PJRT client running AOT-lowered JAX/Pallas artifacts.
 //! - [`sim`] — roofline simulator of the paper's GPU (Table 3).
 //! - [`baselines`] — INT RTN / W8A16 / TC-FPx comparators.
@@ -45,6 +46,6 @@ pub mod tensor;
 pub mod util;
 
 pub use coordinator::{
-    DispatchPolicy, Engine, EngineBuilder, EngineError, Event, GenRequest, GenResponse,
-    RequestHandle, ServeStats,
+    DispatchPolicy, Engine, EngineBuilder, EngineError, Event, FailPoints, FailSpec, GenRequest,
+    GenResponse, Priority, RequestHandle, ServeStats,
 };

@@ -20,12 +20,11 @@
 //! markdown/CSV instead of stdout).
 
 use ams_quant::calib::{CalibConfig, CalibReport, Calibrator};
-use ams_quant::coordinator::{DispatchPolicy, Engine, GenRequest, RequestHandle};
+use ams_quant::coordinator::{DispatchPolicy, Engine, GenRequest, Priority, RequestHandle};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
 use ams_quant::formats::FpFormat;
 use ams_quant::model::checkpoint::{self, Checkpoint};
-use ams_quant::model::sampler::Sampler;
 use ams_quant::model::transformer::Transformer;
 use ams_quant::model::{synthetic_eval_text, tokenizer};
 use ams_quant::quant::{Granularity, LayerRole, QuantConfig, QuantPlan, QuantReport, Quantizer};
@@ -105,6 +104,8 @@ fn print_help() {
          \x20       [--quantized file.amsq   (exclusive of the plan flags)]\n\
          \x20       [--queue-capacity Q --dispatch least-outstanding|round-robin]\n\
          \x20       [--prefill-chunk P]\n\
+         \x20       [--deadline-ms T --queue-deadline-ms T]\n\
+         \x20       [--priority interactive|bulk|mixed]\n\
          \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
          plan flags: --scheme is the model-wide default; --attn/--mlp/--lm-head\n\
          \x20 override per role (mixed precision); --group-size G uses per-group\n\
@@ -501,6 +502,36 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         other => bail!("unknown dispatch policy '{other}' (least-outstanding | round-robin)"),
     };
     let prefill_chunk = args.get_usize("prefill-chunk", 128);
+    // Fault-tolerance knobs: optional per-request deadlines (0 = none)
+    // and the workload's priority mix. "mixed" alternates interactive /
+    // bulk so the priority lanes and shed path are exercised.
+    let total_deadline = match args.get_u64("deadline-ms", 0) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let queue_deadline = match args.get_u64("queue-deadline-ms", 0) {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let priority_of = |id: u64| -> Priority {
+        match args.get_or("priority", "interactive") {
+            "bulk" => Priority::Bulk,
+            "mixed" => {
+                if id % 2 == 1 {
+                    Priority::Bulk
+                } else {
+                    Priority::Interactive
+                }
+            }
+            _ => Priority::Interactive,
+        }
+    };
+    if !matches!(args.get_or("priority", "interactive"), "interactive" | "bulk" | "mixed") {
+        bail!(
+            "unknown priority '{}' (interactive | bulk | mixed)",
+            args.get_or("priority", "interactive")
+        );
+    }
     let (base, heldout, kind) = exp::load_model(artifacts)?;
     // --quantized loads a prequantized AMSQ export (the offline
     // "quantize once" artifact) — its scheme is baked in, so the plan
@@ -561,13 +592,14 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         .map(|id| {
             let start = rng.range(0, heldout.len().saturating_sub(40).max(1));
             let prompt: Vec<u32> = heldout[start..(start + 16).min(heldout.len())].to_vec();
-            eng.submit(GenRequest {
-                id,
-                prompt,
-                max_new_tokens: max_new,
-                sampler: Sampler::Greedy,
-            })
-            .map_err(|e| anyhow::anyhow!("submit failed: {e}"))
+            let mut req = GenRequest::greedy(id, prompt, max_new).with_priority(priority_of(id));
+            if let Some(d) = queue_deadline {
+                req = req.with_queue_deadline(d);
+            }
+            if let Some(d) = total_deadline {
+                req = req.with_total_deadline(d);
+            }
+            eng.submit(req).map_err(|e| anyhow::anyhow!("submit failed: {e}"))
         })
         .collect::<Result<_>>()?;
     let responses: Vec<_> = handles.into_iter().filter_map(|h| h.wait()).collect();
@@ -593,6 +625,15 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     t.row(vec!["latency p90 s".into(), f(lat.percentile(90.0), 3)]);
     t.row(vec!["ttft p50 s".into(), f(ttft.percentile(50.0), 4)]);
     t.row(vec!["ttft p99 s".into(), f(ttft.percentile(99.0), 4)]);
+    // Degradation is part of the report: a run that recovered from
+    // faults or shed load should say so, not hide it in a lower
+    // request count.
+    t.row(vec!["timed out".into(), stats.timed_out.to_string()]);
+    t.row(vec!["failed".into(), stats.failed.to_string()]);
+    t.row(vec!["shed".into(), stats.shed.to_string()]);
+    t.row(vec!["retries".into(), stats.retries.to_string()]);
+    t.row(vec!["panics recovered".into(), stats.panics_recovered.to_string()]);
+    t.row(vec!["replica restarts".into(), stats.restarts.to_string()]);
     emit_table(args, &t)?;
     if let Some(r) = responses.first() {
         eprintln!("# sample continuation: {:?}", tokenizer::decode(&r.tokens));

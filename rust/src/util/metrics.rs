@@ -115,6 +115,50 @@ impl Counter {
     }
 }
 
+/// Shared fault-path counters for the serving engine: incremented by
+/// replica supervisors and the dispatch path, snapshotted into
+/// [`FaultCounters`] for reporting. Degradation is observable rather
+/// than silent.
+#[derive(Debug, Default)]
+pub struct FaultMeter {
+    /// Worker panics caught by `catch_unwind` supervision.
+    pub panics_recovered: Counter,
+    /// Worker restarts performed after a recovered panic.
+    pub restarts: Counter,
+    /// Requests settled `TimedOut` on a queue or total deadline.
+    pub timeouts: Counter,
+    /// Bulk requests refused under overload.
+    pub sheds: Counter,
+    /// Idempotent requests re-dispatched to a healthy replica.
+    pub retries: Counter,
+}
+
+/// Point-in-time copy of a [`FaultMeter`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub panics_recovered: u64,
+    pub restarts: u64,
+    pub timeouts: u64,
+    pub sheds: u64,
+    pub retries: u64,
+}
+
+impl FaultMeter {
+    pub fn new() -> FaultMeter {
+        FaultMeter::default()
+    }
+
+    pub fn snapshot(&self) -> FaultCounters {
+        FaultCounters {
+            panics_recovered: self.panics_recovered.get(),
+            restarts: self.restarts.get(),
+            timeouts: self.timeouts.get(),
+            sheds: self.sheds.get(),
+            retries: self.retries.get(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +202,22 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn fault_meter_snapshot() {
+        let m = FaultMeter::new();
+        m.panics_recovered.inc();
+        m.restarts.inc();
+        m.timeouts.add(3);
+        m.sheds.add(2);
+        m.retries.inc();
+        let s = m.snapshot();
+        assert_eq!(s.panics_recovered, 1);
+        assert_eq!(s.restarts, 1);
+        assert_eq!(s.timeouts, 3);
+        assert_eq!(s.sheds, 2);
+        assert_eq!(s.retries, 1);
     }
 
     #[test]
