@@ -5,6 +5,9 @@
 //! batch occupancy, TTFT percentiles) written to `BENCH_SERVE.json`
 //! (`--json-serve PATH` to override) so serving-latency regressions are
 //! diffable across commits, like `BENCH_GEMM.json` for the kernels.
+//! Schema v2 adds paged-KV columns per entry and a `paged_admission`
+//! probe: at fixed KV memory (a pool sized for 2 worst-case sequences)
+//! the paged path must admit more than 2 concurrent sequences.
 //!
 //! Flags: `--steps N` decode steps per iteration, `--serve-requests N`,
 //! `--serve-max-batch B`, `--serve-max-new-tokens T`, `--json-serve PATH`.
@@ -125,6 +128,7 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
         eng.drain();
         let ttft = eng.ttft();
         let lat = eng.latency();
+        let kv_pages_peak = eng.kv_pages_peak();
         let stats = eng.shutdown();
         assert_eq!(done, n_requests, "{name}: all requests must complete");
 
@@ -151,15 +155,25 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
             .set("ttft_p50_s", Json::Num(ttft.percentile(50.0)))
             .set("ttft_p99_s", Json::Num(ttft.percentile(99.0)))
             .set("latency_p50_s", Json::Num(lat.percentile(50.0)))
-            .set("latency_p99_s", Json::Num(lat.percentile(99.0)));
+            .set("latency_p99_s", Json::Num(lat.percentile(99.0)))
+            // Paged-KV columns (schema v2). These runs use the default
+            // worst-case pool, so preemptions must stay zero.
+            .set("kv_page_size", Json::Num(16.0))
+            .set("kv_pool_pages", Json::Num(0.0))
+            .set("kv_pages_peak", Json::Num(kv_pages_peak as f64))
+            .set("prefix_hits", Json::Num(stats.prefix_hits as f64))
+            .set("preemptions", Json::Num(stats.preemptions as f64))
+            .set("peak_concurrency", Json::Num(stats.peak_concurrency as f64));
         results.push(entry);
     }
     println!("{}", table.to_console());
     println!("{}", table.to_markdown());
 
+    results.push(paged_admission(base, quick));
+
     let mut root = Json::obj();
     root.set("bench", Json::Str("serve".into()))
-        .set("schema_version", Json::Num(1.0))
+        .set("schema_version", Json::Num(2.0))
         .set("requests", Json::Num(n_requests as f64))
         .set("max_batch", Json::Num(max_batch as f64))
         .set("max_new_tokens", Json::Num(max_new as f64))
@@ -168,4 +182,76 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
         Ok(()) => eprintln!("# wrote {json_path}"),
         Err(e) => eprintln!("# could not write {json_path}: {e}"),
     }
+}
+
+/// The tentpole's headline number: admitted concurrency at **fixed KV
+/// memory**. The pool holds exactly 2 worst-case sequences
+/// (`2 * ceil(max_seq / page_size)` pages), so a contiguous,
+/// reservation-based cache could never run more than 2 sequences at
+/// once. Paged allocation + a shared prompt prefix admit whatever
+/// actually fits, and the measured `peak_concurrency` must beat the
+/// worst-case bound — CI asserts it.
+fn paged_admission(base: &Transformer, quick: bool) -> Json {
+    let page_size = 16usize;
+    let worst_pages_per_seq = base.cfg.max_seq.div_ceil(page_size);
+    let pool_pages = 2 * worst_pages_per_seq;
+    let worst_case_admissible = pool_pages / worst_pages_per_seq; // = 2
+    let n_requests = if quick { 12 } else { 16 };
+    let max_new = 4usize;
+
+    let model = base.quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap();
+    let vocab = model.cfg.vocab_size as u32;
+    // One page of common prefix, then a distinct tail per request: only
+    // the page-aligned prefix is shareable.
+    let prefix: Vec<u32> = (0..page_size as u32).map(|j| (j * 11 + 3) % vocab).collect();
+    let eng = Engine::builder()
+        .max_batch(8)
+        .kv_page_size(page_size)
+        .kv_pool_pages(pool_pages)
+        .seed(1)
+        .build(model);
+    let wall = Timer::start();
+    let handles: Vec<RequestHandle> = (0..n_requests as u64)
+        .map(|id| {
+            let mut prompt = prefix.clone();
+            prompt.extend((0..4).map(|j| (id as u32 * 5 + j + 1) % vocab));
+            eng.submit(GenRequest::greedy(id, prompt, max_new)).expect("submit")
+        })
+        .collect();
+    let done = handles.into_iter().filter_map(|h| h.wait()).count();
+    let wall_s = wall.elapsed_secs();
+    eng.drain();
+    let kv_pages_peak = eng.kv_pages_peak();
+    let stats = eng.shutdown();
+    assert_eq!(done, n_requests, "paged_admission: all requests complete");
+    assert!(
+        stats.peak_concurrency > worst_case_admissible,
+        "paged admission must beat the worst-case reservation bound \
+         (peak {} vs bound {})",
+        stats.peak_concurrency,
+        worst_case_admissible
+    );
+
+    println!(
+        "# paged_admission: pool={pool_pages} pages (page_size={page_size}) holds \
+         {worst_case_admissible} worst-case seqs; measured peak concurrency {} \
+         (prefix hits {}, preemptions {}, pages peak {kv_pages_peak})",
+        stats.peak_concurrency, stats.prefix_hits, stats.preemptions
+    );
+    let mut entry = Json::obj();
+    entry
+        .set("name", Json::Str("serve/paged_admission".into()))
+        .set("scheme", Json::Str("fp5.33".into()))
+        .set("requests", Json::Num(n_requests as f64))
+        .set("max_batch", Json::Num(8.0))
+        .set("max_new_tokens", Json::Num(max_new as f64))
+        .set("wall_s", Json::Num(wall_s))
+        .set("kv_page_size", Json::Num(page_size as f64))
+        .set("kv_pool_pages", Json::Num(pool_pages as f64))
+        .set("worst_case_admissible", Json::Num(worst_case_admissible as f64))
+        .set("kv_pages_peak", Json::Num(kv_pages_peak as f64))
+        .set("prefix_hits", Json::Num(stats.prefix_hits as f64))
+        .set("preemptions", Json::Num(stats.preemptions as f64))
+        .set("peak_concurrency", Json::Num(stats.peak_concurrency as f64));
+    entry
 }

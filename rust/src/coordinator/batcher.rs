@@ -3,10 +3,25 @@
 //! Pure state machine (no threads) so it is unit-testable: the engine
 //! worker drives it with `admit_submission` / `step`. Invariants
 //! (property-tested): every admitted request reaches exactly one terminal
-//! [`Outcome`] (`Done`, `Cancelled` or `TimedOut`), no token is generated
-//! after `max_new_tokens`, the running batch never exceeds `max_batch`,
-//! and a cancelled or deadline-expired sequence never occupies a batch
-//! slot on the step after its flag/deadline is observed.
+//! [`Outcome`] (`Done`, `Cancelled`, `TimedOut` or `Failed`), no token is
+//! generated after `max_new_tokens`, the running batch never exceeds
+//! `max_batch`, and a cancelled or deadline-expired sequence never
+//! occupies a batch slot on the step after its flag/deadline is observed.
+//!
+//! KV storage is **paged**: every sequence owns a [`PagedKvCache`]
+//! drawing fixed-size pages from the scheduler's [`PagePool`] one page
+//! at a time, instead of a worst-case contiguous reservation. Admission
+//! is therefore bounded by *actual* page consumption: a sequence enters
+//! whenever a batch slot and its next chunk's pages are free. On pool
+//! exhaustion the scheduler frees memory in escalation order — evict
+//! unreferenced prefix-trie pages, then **preempt the youngest bulk**
+//! decode sequence (its pages free immediately; its decode state parks
+//! and later resumes by re-prefilling prompt + generated tokens, with
+//! prefix-shared pages skipping most of that compute) — so interactive
+//! traffic is never stalled behind bulk. A prompt whose page-aligned
+//! prefix was already committed by an earlier sequence adopts those
+//! pages copy-on-write and skips their prefill entirely
+//! ([`Scheduler::prefix_hits`]).
 //!
 //! Admission runs a **chunked prefill**: prompt chunks go through
 //! [`Transformer::forward_prefill_with`], so every projection sees one
@@ -19,17 +34,19 @@
 //! included.
 //!
 //! For fault injection the scheduler hits the [`failpoint::STEP`] site
-//! at every step boundary and [`failpoint::PREFILL`] before every prompt
-//! chunk; after a panic unwinds through `step`, the supervising engine
+//! at every step boundary, [`failpoint::PREFILL`] before every prompt
+//! chunk, and [`failpoint::POOL`] once per step (a denied hit forces a
+//! synthetic preemption round, exactly as a real exhausted pool would);
+//! after a panic unwinds through `step`, the supervising engine
 //! worker reclaims the in-flight submissions with
 //! [`Scheduler::take_inflight`] and settles each with a terminal event.
 
 use super::failpoint::{self, FailPoints};
 use super::{Event, GenRequest, GenResponse, Priority};
-use crate::model::transformer::{ForwardScratch, KvCache, Transformer};
+use crate::kv::{AsKvStore, KvGauges, KvStore, PageGeometry, PagePool, PagedKvCache};
+use crate::model::transformer::{ForwardScratch, Transformer};
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
-use std::borrow::BorrowMut;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -45,6 +62,15 @@ pub struct BatchPolicy {
     /// the running batch's decode steps, so a very long prompt no longer
     /// stalls co-batched decodes for its whole prefill.
     pub prefill_chunk: usize,
+    /// Positions per KV page (default 16). Smaller pages waste less
+    /// memory on short tails and share finer prefix granularity; larger
+    /// pages mean fewer block-table entries.
+    pub kv_page_size: usize,
+    /// Total pages in the KV pool. `0` (the default) sizes the pool for
+    /// worst-case reservation — `max_batch` full-context sequences — so
+    /// preemption never triggers; a smaller explicit pool admits on
+    /// actual consumption and preempts under pressure.
+    pub kv_pool_pages: usize,
 }
 
 impl Default for BatchPolicy {
@@ -53,6 +79,8 @@ impl Default for BatchPolicy {
             max_batch: 8,
             eos: None,
             prefill_chunk: 128,
+            kv_page_size: 16,
+            kv_pool_pages: 0,
         }
     }
 }
@@ -223,58 +251,99 @@ pub enum Outcome {
     /// A queue or total deadline expired; carries the tokens generated
     /// before eviction (empty if the request never left the queue).
     TimedOut { id: u64, tokens: Vec<u32> },
+    /// The scheduler could not place the request at all — its KV
+    /// footprint exceeds the whole page pool even with everything else
+    /// evicted. Mirrors [`Event::Failed`].
+    Failed { id: u64, error: String },
 }
 
 impl Outcome {
     pub fn id(&self) -> u64 {
         match self {
             Outcome::Done(r) => r.id,
-            Outcome::Cancelled { id, .. } | Outcome::TimedOut { id, .. } => *id,
+            Outcome::Cancelled { id, .. }
+            | Outcome::TimedOut { id, .. }
+            | Outcome::Failed { id, .. } => *id,
         }
     }
 
     pub fn into_done(self) -> Option<GenResponse> {
         match self {
             Outcome::Done(r) => Some(r),
-            Outcome::Cancelled { .. } | Outcome::TimedOut { .. } => None,
+            Outcome::Cancelled { .. } | Outcome::TimedOut { .. } | Outcome::Failed { .. } => None,
         }
     }
 }
 
 struct Active {
     sub: Submission,
-    cache: KvCache,
+    cache: PagedKvCache,
     generated: Vec<u32>,
     next_token: u32,
     ttft_s: f64,
     steps: usize,
+    /// Admission order; pool pressure preempts the *youngest* bulk
+    /// sequence first, so long-running work closest to completion is
+    /// protected.
+    seq_no: u64,
 }
 
 /// A sequence mid-prefill: it owns a batch slot and a KV cache but has
-/// not produced its first token yet. One chunk of its prompt runs per
+/// not produced its first token yet (fresh admissions) or is rebuilding
+/// the cache it lost to a preemption. One chunk of its stream runs per
 /// scheduler step (see [`BatchPolicy::prefill_chunk`]).
 struct Prefilling {
     sub: Submission,
-    cache: KvCache,
-    /// Prompt positions already written into the cache.
+    cache: PagedKvCache,
+    /// Stream positions already written into the cache (adopted prefix
+    /// pages count — they skipped compute entirely).
     consumed: usize,
+    /// Prefill stream override for resumed sequences: prompt followed
+    /// by the already-generated tokens minus the last, which decodes
+    /// next. `None` means the plain prompt.
+    tokens: Option<Vec<u32>>,
+    /// Present when this prefill rebuilds a preempted sequence.
+    resume: Option<ResumeState>,
+    seq_no: u64,
 }
 
-impl BorrowMut<KvCache> for Active {
-    fn borrow_mut(&mut self) -> &mut KvCache {
-        &mut self.cache
-    }
+/// Decode state carried across a preemption: everything needed to put
+/// the sequence back into the batch once its KV cache is rebuilt.
+struct ResumeState {
+    generated: Vec<u32>,
+    ttft_s: f64,
+    steps: usize,
 }
 
-impl std::borrow::Borrow<KvCache> for Active {
-    fn borrow(&self) -> &KvCache {
+/// A sequence parked under page-pool pressure. Its KV pages are already
+/// released; on resume the prompt + generated prefix re-prefills
+/// (prefix-shared pages skip most of that compute).
+struct Preempted {
+    sub: Submission,
+    generated: Vec<u32>,
+    ttft_s: f64,
+    steps: usize,
+    /// Step counter value when parked: a sequence never resumes in the
+    /// very step that parked it, so park/resume cannot livelock inside
+    /// one step.
+    parked_tick: u64,
+}
+
+impl AsKvStore for Active {
+    type Store = PagedKvCache;
+    fn kv(&self) -> &PagedKvCache {
         &self.cache
+    }
+    fn kv_mut(&mut self) -> &mut PagedKvCache {
+        &mut self.cache
     }
 }
 
 /// Continuous-batching scheduler bound to one model replica. Owns one
 /// [`ForwardScratch`], so steady-state decode steps perform no heap
-/// allocation (caches are decoded in place — no per-step cache churn).
+/// allocation (caches are decoded in place — no per-step cache churn),
+/// and one [`PagePool`] that every sequence's [`PagedKvCache`] draws
+/// from one page at a time.
 ///
 /// Weights are held behind an `Arc`: they are read-only at serve time,
 /// so N replica schedulers over one model share a single copy (~1×
@@ -286,34 +355,65 @@ pub struct Scheduler {
     queue: VecDeque<Submission>,
     active: Vec<Active>,
     prefilling: Vec<Prefilling>,
+    /// Sequences parked under page-pool pressure, oldest first.
+    preempted: VecDeque<Preempted>,
+    pool: PagePool,
     rng: Rng,
     scratch: ForwardScratch,
     /// Reused per-step token staging buffer.
     tok_buf: Vec<u32>,
     failpoints: Arc<FailPoints>,
     fp_tag: u64,
+    /// Step counter; gates same-step park/resume cycles.
+    tick: u64,
+    /// Monotone admission counter backing `Active::seq_no`.
+    seq_counter: u64,
     pub steps_executed: u64,
     pub batched_tokens: u64,
     /// Requests settled `TimedOut` by this scheduler.
     pub timed_out: u64,
+    /// Prefix-trie pages adopted instead of prefilled.
+    pub prefix_hits: u64,
+    /// Times a sequence was parked under pool pressure (preemptions and
+    /// re-parks of sequences that could not yet resume).
+    pub preemptions: u64,
+    /// Highest batch occupancy (active + prefilling) observed.
+    pub peak_batch: usize,
 }
 
 impl Scheduler {
     pub fn new(model: impl Into<Arc<Transformer>>, policy: BatchPolicy, seed: u64) -> Scheduler {
+        let model = model.into();
+        let geom = PageGeometry::of(&model.cfg, policy.kv_page_size);
+        let capacity = if policy.kv_pool_pages > 0 {
+            policy.kv_pool_pages
+        } else {
+            // Worst-case reservation: a full batch of full-context
+            // sequences always fits, so the default never preempts.
+            policy.max_batch.max(1) * model.cfg.max_seq.div_ceil(geom.page_size)
+        };
+        let pool = PagePool::new(geom, capacity, Arc::new(KvGauges::default()));
         Scheduler {
-            model: model.into(),
+            model,
             policy,
             queue: VecDeque::new(),
             active: Vec::new(),
             prefilling: Vec::new(),
+            preempted: VecDeque::new(),
+            pool,
             rng: Rng::new(seed),
             scratch: ForwardScratch::new(),
             tok_buf: Vec::new(),
             failpoints: FailPoints::new(),
             fp_tag: 0,
+            tick: 0,
+            seq_counter: 0,
             steps_executed: 0,
             batched_tokens: 0,
             timed_out: 0,
+            prefix_hits: 0,
+            preemptions: 0,
+            peak_batch: 0,
         }
     }
 
@@ -323,6 +423,19 @@ impl Scheduler {
         self.failpoints = failpoints;
         self.fp_tag = tag;
         self
+    }
+
+    /// Rebuild the page pool against shared gauges (engine wiring; must
+    /// run before any admission touches the pool).
+    pub fn with_kv_gauges(mut self, gauges: Arc<KvGauges>) -> Scheduler {
+        assert_eq!(self.pool.used(), 0, "with_kv_gauges after pages were allocated");
+        self.pool = PagePool::new(self.pool.geometry(), self.pool.capacity(), gauges);
+        self
+    }
+
+    /// The KV page pool backing this scheduler's sequences.
+    pub fn kv_pool(&self) -> &PagePool {
+        &self.pool
     }
 
     pub fn model(&self) -> &Transformer {
@@ -342,7 +455,7 @@ impl Scheduler {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.prefilling.len() + self.active.len()
+        self.queue.len() + self.prefilling.len() + self.active.len() + self.preempted.len()
     }
 
     /// Ids currently occupying batch slots with decode state
@@ -356,6 +469,11 @@ impl Scheduler {
     /// produced a first token yet).
     pub fn prefilling_ids(&self) -> Vec<u64> {
         self.prefilling.iter().map(|p| p.sub.id()).collect()
+    }
+
+    /// Ids of sequences parked under page-pool pressure.
+    pub fn preempted_ids(&self) -> Vec<u64> {
+        self.preempted.iter().map(|p| p.sub.id()).collect()
     }
 
     /// Reclaim every in-flight submission after a panic unwound through
@@ -375,74 +493,323 @@ impl Scheduler {
             out.push((sub, Vec::new()));
         }
         for p in self.prefilling.drain(..) {
-            out.push((p.sub, Vec::new()));
+            // A resumed sequence rebuilding its cache still owns the
+            // tokens it generated before preemption.
+            let generated = p.resume.map(|r| r.generated).unwrap_or_default();
+            out.push((p.sub, generated));
         }
         for a in self.active.drain(..) {
             out.push((a.sub, a.generated));
         }
+        for p in self.preempted.drain(..) {
+            out.push((p.sub, p.generated));
+        }
         out
     }
 
-    /// Run the next prompt chunk (at most `prefill_chunk` positions) of
+    /// Run the next stream chunk (at most `prefill_chunk` positions) of
     /// `prefilling[idx]`, in place — no per-step buffer churn on the
-    /// decode hot path. Intermediate chunks write the cache only (no
-    /// lm_head pass); the final chunk samples the first token and moves
-    /// the sequence into the running batch (`swap_remove`). Returns true
-    /// when the sequence left the prefilling list.
-    fn advance_prefill_at(&mut self, idx: usize) -> bool {
+    /// decode hot path. The chunk's pages are reserved up front; on pool
+    /// exhaustion the scheduler frees what it can ([`Self::try_free`])
+    /// and otherwise parks or fails the sequence. Intermediate chunks
+    /// write the cache only (no lm_head pass); the final chunk samples
+    /// the first token and moves the sequence into the running batch
+    /// (`swap_remove`) — or, for a resumed sequence, restores its saved
+    /// decode state without re-emitting `FirstToken`. Returns true when
+    /// the sequence left the prefilling list.
+    fn advance_prefill_at(&mut self, idx: usize, out: &mut Vec<Outcome>) -> bool {
         self.failpoints.hit(failpoint::PREFILL, self.fp_tag);
         let chunk = self.policy.prefill_chunk.max(1);
-        let p = &mut self.prefilling[idx];
-        let end = (p.consumed + chunk).min(p.sub.req.prompt.len());
-        if end < p.sub.req.prompt.len() {
-            self.model.forward_prefill_chunk(
-                &p.sub.req.prompt[p.consumed..end],
-                &mut p.cache,
-                &mut self.scratch,
-            );
+        let (consumed, end, stream_len) = {
+            let p = &self.prefilling[idx];
+            let stream_len = p.tokens.as_deref().unwrap_or(&p.sub.req.prompt).len();
+            (p.consumed, (p.consumed + chunk).min(stream_len), stream_len)
+        };
+        let need = self.prefilling[idx].cache.pages_needed(end);
+        if need > self.pool.available() && !self.try_free(need) {
+            return self.park_or_fail_prefill(idx, out);
+        }
+        if end < stream_len {
+            let p = &mut self.prefilling[idx];
+            p.cache.reserve(end).expect("pages freed before reserve");
+            let stream = p.tokens.as_deref().unwrap_or(&p.sub.req.prompt);
+            self.model
+                .forward_prefill_chunk(&stream[consumed..end], &mut p.cache, &mut self.scratch);
             p.consumed = end;
             return false;
         }
-        let mut p = self.prefilling.swap_remove(idx);
-        let logits = self.model.forward_prefill_with(
-            &p.sub.req.prompt[p.consumed..end],
-            &mut p.cache,
-            &mut self.scratch,
-        );
-        p.consumed = end;
-        let first = p.sub.req.sampler.sample(logits, &mut self.rng);
-        let ttft_s = p.sub.submitted.elapsed_secs();
-        p.sub.emit(Event::FirstToken {
-            id: p.sub.id(),
-            token: first,
-            ttft_s,
-        });
-        self.active.push(Active {
-            sub: p.sub,
-            cache: p.cache,
-            generated: vec![first],
-            next_token: first,
-            ttft_s,
-            steps: 1,
-        });
+        let Prefilling {
+            sub,
+            mut cache,
+            tokens,
+            resume,
+            seq_no,
+            ..
+        } = self.prefilling.swap_remove(idx);
+        cache.reserve(end).expect("pages freed before reserve");
+        let stream = tokens.as_deref().unwrap_or(&sub.req.prompt);
+        let active = match resume {
+            None => {
+                let logits = self.model.forward_prefill_with(
+                    &stream[consumed..end],
+                    &mut cache,
+                    &mut self.scratch,
+                );
+                let first = sub.req.sampler.sample(logits, &mut self.rng);
+                let ttft_s = sub.submitted.elapsed_secs();
+                sub.emit(Event::FirstToken {
+                    id: sub.id(),
+                    token: first,
+                    ttft_s,
+                });
+                Active {
+                    sub,
+                    cache,
+                    generated: vec![first],
+                    next_token: first,
+                    ttft_s,
+                    steps: 1,
+                    seq_no,
+                }
+            }
+            Some(rs) => {
+                // Rebuilding a preempted sequence: no logits and no
+                // FirstToken re-emission — its stream already emitted
+                // them before it was parked.
+                self.model
+                    .forward_prefill_chunk(&stream[consumed..end], &mut cache, &mut self.scratch);
+                let next = *rs.generated.last().expect("preempted decode state has tokens");
+                Active {
+                    sub,
+                    cache,
+                    generated: rs.generated,
+                    next_token: next,
+                    ttft_s: rs.ttft_s,
+                    steps: rs.steps,
+                    seq_no,
+                }
+            }
+        };
+        // Commit the full prompt pages so identical prompt prefixes can
+        // adopt them (insert dedups: already-committed pages win).
+        let ps = self.pool.geometry().page_size;
+        let full = active.sub.req.prompt.len() / ps;
+        if full > 0 {
+            self.pool
+                .commit_prefix(&active.sub.req.prompt[..full * ps], &active.cache.table()[..full]);
+        }
+        self.active.push(active);
         true
     }
 
-    /// Admit a request into a batch slot: its first prefill chunk runs
-    /// immediately (prompts within the chunk cap complete prefill in one
-    /// pass, exactly as before the cap existed).
-    fn start(&mut self, sub: Submission) {
+    /// Admit a request into a batch slot: adopt any committed prefix
+    /// pages from the pool's trie (refcount bumps — their prefill is
+    /// skipped entirely), then run the first prefill chunk immediately
+    /// (prompts within the chunk cap complete prefill in one pass).
+    /// `tokens` and `resume` carry a preempted sequence's rebuilt stream
+    /// and decode state; both are `None` for fresh admissions.
+    fn begin_prefill(
+        &mut self,
+        sub: Submission,
+        tokens: Option<Vec<u32>>,
+        resume: Option<ResumeState>,
+        out: &mut Vec<Outcome>,
+    ) {
         assert!(
             !sub.req.prompt.is_empty(),
             "empty prompt: nothing to condition on"
         );
-        let cache = self.model.new_cache();
+        let mut cache = PagedKvCache::new(&self.pool);
+        let ps = self.pool.geometry().page_size;
+        let stream_len = tokens.as_deref().unwrap_or(&sub.req.prompt).len();
+        // Never adopt the final position: the last chunk must recompute
+        // so fresh prefills produce first-token logits.
+        let max_pages = (stream_len - 1) / ps;
+        let shared = self
+            .pool
+            .shared_prefix(tokens.as_deref().unwrap_or(&sub.req.prompt), max_pages);
+        let matched = shared.len();
+        if matched > 0 {
+            self.prefix_hits += matched as u64;
+            self.pool
+                .gauges()
+                .prefix_hits
+                .fetch_add(matched as u64, std::sync::atomic::Ordering::Relaxed);
+            cache.adopt_prefix(shared);
+        }
+        let seq_no = self.seq_counter;
+        self.seq_counter += 1;
         self.prefilling.push(Prefilling {
             sub,
             cache,
-            consumed: 0,
+            consumed: matched * ps,
+            tokens,
+            resume,
+            seq_no,
         });
-        self.advance_prefill_at(self.prefilling.len() - 1);
+        self.advance_prefill_at(self.prefilling.len() - 1, out);
+    }
+
+    /// Try to make `need` pages allocatable: evict trie entries no live
+    /// sequence references, then preempt bulk decode sequences youngest
+    /// first (their pages free immediately; they park for resume).
+    /// Interactive sequences are never preempted. Returns false when the
+    /// target is unreachable.
+    fn try_free(&mut self, need: usize) -> bool {
+        loop {
+            if self.pool.available() >= need {
+                return true;
+            }
+            if self.pool.evict_unreferenced() > 0 {
+                continue;
+            }
+            if !self.preempt_youngest_bulk() {
+                return false;
+            }
+        }
+    }
+
+    /// Park the youngest bulk decode sequence, freeing its pages.
+    /// Returns false when no bulk sequence is active.
+    fn preempt_youngest_bulk(&mut self) -> bool {
+        let Some(idx) = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.sub.priority() == Priority::Bulk)
+            .max_by_key(|(_, a)| a.seq_no)
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        self.park(idx);
+        true
+    }
+
+    /// Move `active[idx]` to the preempted queue; dropping its cache
+    /// releases every page it held exclusively.
+    fn park(&mut self, idx: usize) {
+        let a = self.active.swap_remove(idx);
+        self.note_preemption();
+        self.preempted.push_back(Preempted {
+            sub: a.sub,
+            generated: a.generated,
+            ttft_s: a.ttft_s,
+            steps: a.steps,
+            parked_tick: self.tick,
+        });
+    }
+
+    /// A prefilling sequence could not get pages even after freeing:
+    /// park it for resume — unless nothing else is in flight, in which
+    /// case not even the whole pool can hold it and it fails instead of
+    /// spinning forever. Always removes `prefilling[idx]`.
+    fn park_or_fail_prefill(&mut self, idx: usize, out: &mut Vec<Outcome>) -> bool {
+        let Prefilling { sub, resume, .. } = self.prefilling.swap_remove(idx);
+        let (generated, ttft_s, steps) = match resume {
+            Some(rs) => (rs.generated, rs.ttft_s, rs.steps),
+            None => (Vec::new(), 0.0, 0),
+        };
+        if self.active.is_empty() && self.prefilling.is_empty() {
+            out.push(Self::failed_out(sub, "kv page pool exhausted"));
+            return true;
+        }
+        self.note_preemption();
+        self.preempted.push_back(Preempted {
+            sub,
+            generated,
+            ttft_s,
+            steps,
+            parked_tick: self.tick,
+        });
+        true
+    }
+
+    /// Re-admit a parked sequence through the prefill path. A sequence
+    /// parked before its first token restarts from scratch; one parked
+    /// mid-decode re-prefills prompt + generated tokens (minus the last,
+    /// which decodes next) and then rejoins the batch where it left off.
+    fn resume_preempted(&mut self, p: Preempted, out: &mut Vec<Outcome>) {
+        let Preempted {
+            sub,
+            generated,
+            ttft_s,
+            steps,
+            ..
+        } = p;
+        if generated.is_empty() {
+            self.begin_prefill(sub, None, None, out);
+        } else {
+            let mut stream = sub.req.prompt.clone();
+            stream.extend_from_slice(&generated[..generated.len() - 1]);
+            self.begin_prefill(
+                sub,
+                Some(stream),
+                Some(ResumeState {
+                    generated,
+                    ttft_s,
+                    steps,
+                }),
+                out,
+            );
+        }
+    }
+
+    /// Make every active sequence's next decode position writable before
+    /// the batched forward, so row writes cannot fail mid-step. Under
+    /// exhaustion: evict, preempt bulk, and as a last resort park the
+    /// youngest active outright — the batch must shrink or the step
+    /// cannot run at all. (A sequence too big for even an empty pool
+    /// settles `Failed` on its resume prefill.)
+    fn ensure_decode_pages(&mut self) {
+        loop {
+            let need: usize = self
+                .active
+                .iter()
+                .map(|a| a.cache.pages_needed(a.cache.len() + 1))
+                .sum();
+            if need <= self.pool.available() {
+                break;
+            }
+            if self.pool.evict_unreferenced() > 0 {
+                continue;
+            }
+            if self.preempt_youngest_bulk() {
+                continue;
+            }
+            let idx = self
+                .active
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, a)| a.seq_no)
+                .map(|(i, _)| i)
+                .expect("need > 0 implies a non-empty batch");
+            self.park(idx);
+        }
+        for a in &mut self.active {
+            let len = a.cache.len();
+            a.cache.reserve(len + 1).expect("pages available after ensure");
+        }
+    }
+
+    fn note_preemption(&mut self) {
+        self.preemptions += 1;
+        self.pool
+            .gauges()
+            .preemptions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn failed_out(sub: Submission, error: &str) -> Outcome {
+        let id = sub.id();
+        sub.emit_with(|| Event::Failed {
+            id,
+            error: error.to_string(),
+        });
+        Outcome::Failed {
+            id,
+            error: error.to_string(),
+        }
     }
 
     fn cancel_out(sub: Submission, tokens: Vec<u32>) -> Outcome {
@@ -519,6 +886,20 @@ impl Scheduler {
                 i += 1;
             }
         }
+        let mut i = 0;
+        while i < self.preempted.len() {
+            let s = &self.preempted[i].sub;
+            if s.cancelled() {
+                let p = self.preempted.remove(i).expect("index in bounds");
+                out.push(Self::cancel_out(p.sub, p.generated));
+            } else if s.total_expired() {
+                let p = self.preempted.remove(i).expect("index in bounds");
+                self.timed_out += 1;
+                out.push(Self::timeout_out(p.sub, p.generated));
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// One scheduler iteration: sweep cancellations/expiries, advance
@@ -528,16 +909,33 @@ impl Scheduler {
     /// of stalling them. Returns the terminal outcomes of this step.
     pub fn step(&mut self) -> Vec<Outcome> {
         self.failpoints.hit(failpoint::STEP, self.fp_tag);
+        self.tick += 1;
         let mut out = Vec::new();
         self.sweep_dead(&mut out);
+        // Synthetic page-pool pressure: each denied POOL hit forces one
+        // preemption round, exactly as a real exhausted pool would.
+        if self.failpoints.hit(failpoint::POOL, self.fp_tag) {
+            self.preempt_youngest_bulk();
+        }
         // Advance sequences admitted in earlier steps by one chunk each
         // (in place; a finishing sequence swap-removes, and the element
         // swapped into its slot is advanced next — each exactly once).
         let mut i = 0;
         while i < self.prefilling.len() {
-            if !self.advance_prefill_at(i) {
+            if !self.advance_prefill_at(i, &mut out) {
                 i += 1;
             }
+        }
+        // Resume parked sequences (oldest first) before admitting new
+        // work — but never in the very step that parked them.
+        while self.active.len() + self.prefilling.len() < self.policy.max_batch
+            && self
+                .preempted
+                .front()
+                .is_some_and(|p| p.parked_tick < self.tick)
+        {
+            let p = self.preempted.pop_front().expect("front checked");
+            self.resume_preempted(p, &mut out);
         }
         // Admission: prefilling sequences occupy batch slots too.
         while self.active.len() + self.prefilling.len() < self.policy.max_batch {
@@ -547,24 +945,28 @@ impl Scheduler {
                     self.timed_out += 1;
                     out.push(Self::timeout_out(sub, Vec::new()));
                 }
-                Some(sub) => self.start(sub),
+                Some(sub) => self.begin_prefill(sub, None, None, &mut out),
                 None => break,
             }
         }
+        self.peak_batch = self.peak_batch.max(self.active.len() + self.prefilling.len());
         if self.active.is_empty() {
             return out;
         }
         // Retire sequences that already satisfied their budget (including
         // single-token generations) before spending a decode step on them.
         self.retire(&mut out);
+        // Reserve next-position pages for the whole batch up front
+        // (shrinking it if the pool cannot cover everyone).
+        self.ensure_decode_pages();
         if self.active.is_empty() {
             return out;
         }
 
         self.tok_buf.clear();
         self.tok_buf.extend(self.active.iter().map(|a| a.next_token));
-        // Caches are decoded in place through `Active: BorrowMut<KvCache>`
-        // — no per-step cache extraction/replacement.
+        // Caches are decoded in place through `Active: AsKvStore` — no
+        // per-step cache extraction/replacement.
         let logits = self
             .model
             .forward_batch_with(&self.tok_buf, &mut self.active, &mut self.scratch);
@@ -1080,5 +1482,152 @@ mod tests {
             assert!(!tokens.is_empty(), "one decode step ran before the panic");
         }
         assert_eq!(s.pending(), 0, "scheduler fully drained after reclaim");
+    }
+
+    /// Tentpole: a second identical prompt adopts the committed prefix
+    /// pages (no recompute, counted in `prefix_hits`) and still produces
+    /// identical greedy tokens.
+    #[test]
+    fn identical_prompts_share_prefix_pages() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 27);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy { max_batch: 1, kv_page_size: 4, ..BatchPolicy::default() },
+            1,
+        );
+        let prompt: Vec<u32> = (0..10u32).map(|i| i % 60).collect();
+        s.admit(GenRequest::greedy(0, prompt.clone(), 4));
+        let first = s.run_to_completion().pop().unwrap().tokens;
+        assert_eq!(s.prefix_hits, 0, "nothing committed before the first prefill");
+        s.admit(GenRequest::greedy(1, prompt, 4));
+        let second = s.run_to_completion().pop().unwrap().tokens;
+        assert_eq!(s.prefix_hits, 2, "a 10-token prompt shares two 4-position pages");
+        assert_eq!(first, second, "adopted prefix pages must not change tokens");
+    }
+
+    /// Tentpole: with a pool too small for two sequences, admission
+    /// preempts the youngest bulk decode instead of stalling, and the
+    /// parked sequence later resumes — both finish with full budgets.
+    #[test]
+    fn tiny_pool_preempts_bulk_and_completes() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 28);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy {
+                max_batch: 2,
+                kv_page_size: 4,
+                kv_pool_pages: 3,
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        s.admit(GenRequest::greedy(0, vec![1, 2, 3, 4, 5], 6).with_priority(Priority::Bulk));
+        s.admit(GenRequest::greedy(1, vec![9, 8, 7, 6, 5], 6));
+        let mut out = s.run_to_completion();
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2, "both must finish despite pool pressure");
+        assert_eq!(out[0].tokens.len(), 6);
+        assert_eq!(out[1].tokens.len(), 6);
+        assert!(
+            s.preemptions > 0,
+            "a 3-page pool cannot hold two 5-token prompts at once"
+        );
+    }
+
+    /// Preemption changes scheduling, not results: greedy tokens after a
+    /// park/resume cycle are identical to an undisturbed run.
+    #[test]
+    fn pool_failpoint_forces_preemption_and_resume_is_exact() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 29);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut undisturbed = Scheduler::new(model.clone(), BatchPolicy::default(), 1);
+        undisturbed.admit(GenRequest::greedy(0, vec![1, 2], 8).with_priority(Priority::Bulk));
+        let want = undisturbed.run_to_completion().pop().unwrap().tokens;
+
+        let fp = FailPoints::new();
+        let mut s =
+            Scheduler::new(model, BatchPolicy::default(), 1).with_failpoints(Arc::clone(&fp), 0);
+        s.admit(GenRequest::greedy(0, vec![1, 2], 8).with_priority(Priority::Bulk));
+        s.step(); // admitted; prefill + first decode ran
+        fp.arm_tagged(failpoint::POOL, 0, FailSpec::deny(1));
+        s.step(); // deny fires: the only (bulk) sequence parks
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.preempted_ids(), vec![0]);
+        let out = s.run_to_completion();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens, want, "park/resume must not change tokens");
+    }
+
+    /// A request whose KV footprint cannot fit even an empty pool
+    /// settles `Failed` (exactly once) instead of spinning forever.
+    #[test]
+    fn oversized_request_fails_terminally() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 30);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy {
+                max_batch: 2,
+                kv_page_size: 4,
+                kv_pool_pages: 2,
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        // 12 positions = 3 pages > the whole 2-page pool.
+        let long: Vec<u32> = (0..12u32).map(|i| i % 60).collect();
+        s.admit(GenRequest::greedy(0, long, 4));
+        let mut failed = 0;
+        while s.pending() > 0 {
+            for o in s.step() {
+                match o {
+                    Outcome::Failed { id, error } => {
+                        assert_eq!(id, 0);
+                        assert!(error.contains("pool exhausted"), "{error}");
+                        failed += 1;
+                    }
+                    other => panic!("unexpected outcome {other:?}"),
+                }
+            }
+        }
+        assert_eq!(failed, 1, "oversized request settles Failed exactly once");
+        assert_eq!(s.kv_pool().used(), 0, "no pages leak from the failed prefill");
+    }
+
+    /// Cancelling a parked sequence settles it with the tokens it had
+    /// generated before preemption.
+    #[test]
+    fn cancel_while_preempted_settles_with_partial_tokens() {
+        let fp = FailPoints::new();
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 31);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s =
+            Scheduler::new(model, BatchPolicy::default(), 1).with_failpoints(Arc::clone(&fp), 0);
+        let sub = Submission::new(
+            GenRequest::greedy(0, vec![1, 2], 20).with_priority(Priority::Bulk),
+        );
+        let flag = sub.cancel_flag();
+        s.admit_submission(sub);
+        s.step();
+        fp.arm_tagged(failpoint::POOL, 0, FailSpec::deny(1));
+        s.step();
+        assert_eq!(s.preempted_ids(), vec![0]);
+        flag.store(true, Ordering::SeqCst);
+        let mut saw = false;
+        while s.pending() > 0 {
+            for o in s.step() {
+                match o {
+                    Outcome::Cancelled { id, tokens } => {
+                        assert_eq!(id, 0);
+                        assert!(!tokens.is_empty(), "tokens from before the park survive");
+                        saw = true;
+                    }
+                    other => panic!("unexpected outcome {other:?}"),
+                }
+            }
+        }
+        assert!(saw, "parked cancel must settle exactly once");
     }
 }

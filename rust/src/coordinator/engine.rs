@@ -31,6 +31,7 @@ use super::batcher::{BatchPolicy, Outcome, OutstandingGuard, Scheduler, Submissi
 use super::failpoint::FailPoints;
 use super::queue::{AdmissionQueue, TryPushError};
 use super::{Event, GenRequest, GenResponse, ServeStats};
+use crate::kv::KvGauges;
 use crate::model::transformer::Transformer;
 use crate::util::metrics::{FaultCounters, FaultMeter, LatencyRecorder, Summary};
 use crate::util::timer::Timer;
@@ -329,6 +330,27 @@ impl EngineBuilder {
         self
     }
 
+    /// KV page size in token positions (default 16): the granularity of
+    /// paged cache growth, copy-on-write forks, and prefix sharing
+    /// (only whole-page prompt chunks are ever shared).
+    pub fn kv_page_size(mut self, n: usize) -> Self {
+        assert!(n > 0, "kv page size must be positive");
+        self.batch.kv_page_size = n;
+        self
+    }
+
+    /// Capacity of each replica's KV page pool. `0` (the default) sizes
+    /// the pool for the worst case — `max_batch` sequences at full
+    /// context — so nothing ever preempts. A smaller explicit value
+    /// over-commits memory and relies on continuous batching: admission
+    /// proceeds whenever pages are actually free, and exhaustion
+    /// preempts the youngest bulk sequence instead of stalling
+    /// interactive traffic.
+    pub fn kv_pool_pages(mut self, n: usize) -> Self {
+        self.batch.kv_pool_pages = n;
+        self
+    }
+
     /// Replica dispatch policy (default least-outstanding).
     pub fn dispatch(mut self, policy: DispatchPolicy) -> Self {
         self.dispatch = policy;
@@ -394,6 +416,7 @@ impl EngineBuilder {
         let latency = Arc::new(LatencyRecorder::new());
         let ttft = Arc::new(LatencyRecorder::new());
         let meter = Arc::new(FaultMeter::new());
+        let kv_gauges = Arc::new(KvGauges::default());
         let max_seq = model.cfg.max_seq;
         let model = Arc::new(model);
         let reserve = self
@@ -428,6 +451,7 @@ impl EngineBuilder {
                 latency: Arc::clone(&latency),
                 ttft: Arc::clone(&ttft),
                 meter: Arc::clone(&meter),
+                kv_gauges: Arc::clone(&kv_gauges),
                 failpoints: Arc::clone(&self.failpoints),
                 retry_idempotent: self.retry_idempotent,
                 backoff_base: self.backoff_base,
@@ -448,6 +472,7 @@ impl EngineBuilder {
             latency,
             ttft,
             meter,
+            kv_gauges,
         }
     }
 }
@@ -462,6 +487,7 @@ struct WorkerCtx {
     latency: Arc<LatencyRecorder>,
     ttft: Arc<LatencyRecorder>,
     meter: Arc<FaultMeter>,
+    kv_gauges: Arc<KvGauges>,
     failpoints: Arc<FailPoints>,
     retry_idempotent: bool,
     backoff_base: Duration,
@@ -514,7 +540,8 @@ fn replica_main(ctx: WorkerCtx) -> ServeStats {
     let mut consecutive_panics: u32 = 0;
     loop {
         let mut sched = Scheduler::new(Arc::clone(&ctx.model), ctx.policy, ctx.seed)
-            .with_failpoints(Arc::clone(&ctx.failpoints), ctx.index as u64);
+            .with_failpoints(Arc::clone(&ctx.failpoints), ctx.index as u64)
+            .with_kv_gauges(Arc::clone(&ctx.kv_gauges));
         let run = catch_unwind(AssertUnwindSafe(|| {
             serve_loop(&mut sched, &me, &ctx, &mut stats)
         }));
@@ -523,6 +550,9 @@ fn replica_main(ctx: WorkerCtx) -> ServeStats {
         stats.decode_steps += sched.steps_executed;
         stats.batched_tokens += sched.batched_tokens;
         stats.timed_out += sched.timed_out;
+        stats.prefix_hits += sched.prefix_hits;
+        stats.preemptions += sched.preemptions;
+        stats.peak_concurrency = stats.peak_concurrency.max(sched.peak_batch);
         match run {
             Ok(()) => break, // queue closed and drained
             Err(payload) => {
@@ -613,6 +643,9 @@ fn serve_loop(
                 // `stats.timed_out` is folded from the scheduler counter
                 // by the supervisor; only the live meter ticks here.
                 Outcome::TimedOut { .. } => ctx.meter.timeouts.inc(),
+                // Scheduler-originated terminal failure (an oversized
+                // request the pool can never hold).
+                Outcome::Failed { .. } => stats.failed += 1,
             }
         }
     }
@@ -630,6 +663,7 @@ pub struct Engine {
     latency: Arc<LatencyRecorder>,
     ttft: Arc<LatencyRecorder>,
     meter: Arc<FaultMeter>,
+    kv_gauges: Arc<KvGauges>,
 }
 
 impl Engine {
@@ -668,6 +702,47 @@ impl Engine {
     /// timeouts, sheds, retries.
     pub fn faults(&self) -> FaultCounters {
         self.meter.snapshot()
+    }
+
+    /// KV page-pool gauges shared by every replica. Cloning the `Arc`
+    /// lets the chaos suite audit the pool *after* shutdown (used and
+    /// leaked must both read zero once all schedulers have dropped).
+    pub fn kv_gauges(&self) -> Arc<KvGauges> {
+        Arc::clone(&self.kv_gauges)
+    }
+
+    /// KV pages currently in use, summed over replicas.
+    pub fn kv_pages_used(&self) -> u64 {
+        self.kv_gauges.pages_used.load(Ordering::Relaxed)
+    }
+
+    /// KV pages currently free, summed over replicas.
+    pub fn kv_pages_free(&self) -> u64 {
+        self.kv_gauges
+            .pages_capacity
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.kv_pages_used())
+    }
+
+    /// High-water mark of concurrent KV page usage.
+    pub fn kv_pages_peak(&self) -> u64 {
+        self.kv_gauges.pages_peak.load(Ordering::Relaxed)
+    }
+
+    /// Prompt-prefix pages adopted from the trie instead of prefilled.
+    pub fn prefix_hits(&self) -> u64 {
+        self.kv_gauges.prefix_hits.load(Ordering::Relaxed)
+    }
+
+    /// Sequences preempted (parked) on pool pressure.
+    pub fn preemptions(&self) -> u64 {
+        self.kv_gauges.preemptions.load(Ordering::Relaxed)
+    }
+
+    /// Pages a dropped pool could not account for (drop-audit; must
+    /// stay zero).
+    pub fn pages_leaked(&self) -> u64 {
+        self.kv_gauges.leaked.load(Ordering::Relaxed)
     }
 
     /// Block until every accepted request has settled. Workers record a

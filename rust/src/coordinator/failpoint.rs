@@ -33,6 +33,12 @@ pub const PREFILL: &str = "prefill-chunk";
 /// queue-full burst.
 pub const QUEUE_PUSH: &str = "queue-push";
 
+/// Site name: hit at the top of every [`Scheduler::step`] with the KV
+/// page pool live (tag = replica index). Arm with a deny action to
+/// force one preempt-youngest-bulk round per fire, simulating pool
+/// exhaustion without actually shrinking the pool.
+pub const POOL: &str = "kv-pool";
+
 #[cfg(any(test, feature = "failpoints"))]
 mod imp {
     use crate::util::prng::Rng;

@@ -159,7 +159,9 @@ pub enum Event {
     /// generated before eviction (empty when it never left the queue).
     TimedOut { id: u64, tokens: Vec<u32> },
     /// Terminal: the replica serving the request panicked and the
-    /// request could not be (or was not eligible to be) retried.
+    /// request could not be (or was not eligible to be) retried — or
+    /// the KV page pool cannot hold the request even with the replica
+    /// otherwise idle.
     Failed { id: u64, error: String },
 }
 
@@ -200,7 +202,9 @@ pub struct ServeStats {
     pub wall_s: f64,
     /// Requests that settled [`Event::TimedOut`] on a deadline.
     pub timed_out: u64,
-    /// Requests that settled [`Event::Failed`] after a replica panic.
+    /// Requests that settled [`Event::Failed`] — after a replica panic,
+    /// or because the KV page pool can never hold the request even with
+    /// the replica otherwise idle.
     pub failed: u64,
     /// Bulk requests refused under overload (`EngineError::Overloaded`).
     pub shed: u64,
@@ -211,6 +215,14 @@ pub struct ServeStats {
     pub panics_recovered: u64,
     /// Worker restarts performed by the supervisor.
     pub restarts: u64,
+    /// Prompt-prefix pages adopted from the KV trie instead of
+    /// prefilled (each unit is one whole page of skipped prefill).
+    pub prefix_hits: u64,
+    /// Sequences preempted (parked) to relieve KV page-pool pressure.
+    pub preemptions: u64,
+    /// High-water mark of sequences concurrently admitted (active +
+    /// prefilling) on any single replica.
+    pub peak_concurrency: usize,
 }
 
 impl ServeStats {
@@ -245,5 +257,8 @@ impl ServeStats {
         self.retries += other.retries;
         self.panics_recovered += other.panics_recovered;
         self.restarts += other.restarts;
+        self.prefix_hits += other.prefix_hits;
+        self.preemptions += other.preemptions;
+        self.peak_concurrency = self.peak_concurrency.max(other.peak_concurrency);
     }
 }

@@ -1,0 +1,106 @@
+//! Paged KV-cache subsystem: fixed-size pages, a free-list
+//! [`PagePool`] with per-page refcounts, per-sequence block tables
+//! ([`PagedKvCache`]), and prompt-prefix sharing over committed pages.
+//!
+//! The storage contract is the [`KvStore`] accessor trait: attention
+//! reads and writes K/V strictly through per-`(layer, position)` row
+//! slices, each contiguous in memory. The contiguous
+//! [`KvCache`](crate::model::transformer::KvCache) implements it by
+//! slicing one `[max_seq * kv_dim]` buffer per layer; [`PagedKvCache`]
+//! implements it by slicing inside the page that holds the position.
+//! Because the row view is identical either way, every `forward*` path
+//! produces **bit-identical** logits over both backings (pinned by
+//! `rust/tests/paged_parity.rs`) — paging changes where a row lives,
+//! never the float sequence that touches it.
+//!
+//! Sharing model:
+//!
+//! - A page covers `page_size` consecutive positions across **all**
+//!   layers (K and V), so one refcount shares a prompt-prefix chunk
+//!   end to end. RoPE is applied to K at cache-write time and depends
+//!   only on the absolute position, so a shared page is valid for every
+//!   sequence whose prompt starts with the same tokens.
+//! - Completed prefills commit their *full* prompt pages into a
+//!   token-keyed prefix trie owned by the pool; later prompts that
+//!   start with the same page-aligned chunks adopt the physical pages
+//!   (refcount bump, no prefill compute) and copy-on-write on the first
+//!   divergent write ([`PagedKvCache::reserve`]).
+//! - When the pool runs dry, trie entries nobody references are evicted
+//!   first ([`PagePool::evict_unreferenced`]); the scheduler escalates
+//!   to preempting sequences only after that.
+
+pub mod paged;
+pub mod pool;
+pub(crate) mod trie;
+
+pub use paged::PagedKvCache;
+pub use pool::{PageBuf, PageGeometry, PagePool, PoolExhausted};
+
+use std::sync::atomic::AtomicU64;
+
+/// Accessor contract between the attention paths and a KV backing
+/// store. Rows are contiguous `[kv_dim]` float slices; `k_row(l, t)`
+/// for `t <= len()` must return exactly the bytes written by the
+/// earlier `k_row_mut(l, t)`. Row methods are infallible — page
+/// allocation happens in [`PagedKvCache::reserve`] (or implicitly on
+/// first write), so the forward hot loops never see an allocator.
+pub trait KvStore {
+    /// Positions currently committed (the next write position).
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Commit positions `< len` (the forwards call this once per step /
+    /// chunk, after all rows are written).
+    fn set_len(&mut self, len: usize);
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32];
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32];
+    fn k_row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32];
+    fn v_row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32];
+}
+
+/// Projection from a batch-slot element to its KV store, so
+/// `forward_batch_with` can decode scheduler-owned slot types (which
+/// carry a submission next to the cache) and bare caches through one
+/// signature. The associated type keeps inference exact: the element
+/// type alone determines the store, so `Vec<KvCache>`,
+/// `Vec<&mut KvCache>` and `Vec<Active>` all resolve without
+/// annotations.
+pub trait AsKvStore {
+    type Store: KvStore;
+    fn kv(&self) -> &Self::Store;
+    fn kv_mut(&mut self) -> &mut Self::Store;
+}
+
+impl<T: AsKvStore> AsKvStore for &mut T {
+    type Store = T::Store;
+    fn kv(&self) -> &T::Store {
+        (**self).kv()
+    }
+    fn kv_mut(&mut self) -> &mut T::Store {
+        (**self).kv_mut()
+    }
+}
+
+/// Shared pool gauges, readable across threads (the engine facade reads
+/// them live while replica schedulers mutate them). One instance spans
+/// every replica's pool, so `pages_used`/`pages_capacity` aggregate the
+/// fleet and `leaked` survives replica restarts — the chaos suite
+/// asserts it stays 0 through panics and preemption storms.
+#[derive(Debug, Default)]
+pub struct KvGauges {
+    /// Physical pages currently allocated (live `PageBuf`s).
+    pub pages_used: AtomicU64,
+    /// Sum of pool capacities currently alive.
+    pub pages_capacity: AtomicU64,
+    /// High-water mark of `pages_used`.
+    pub pages_peak: AtomicU64,
+    /// Prompt-prefix pages adopted from the trie instead of prefilled.
+    pub prefix_hits: AtomicU64,
+    /// Sequences preempted (or parked mid-prefill) on pool pressure.
+    pub preemptions: AtomicU64,
+    /// Drop-audit: pages a pool still considered sequence-held when it
+    /// was destroyed. Non-zero means a block table outlived its
+    /// scheduler — a leak.
+    pub leaked: AtomicU64,
+}

@@ -1,0 +1,295 @@
+//! Per-sequence paged KV cache: a block table of refcounted pages that
+//! grows one page at a time from a shared [`PagePool`].
+
+use std::rc::Rc;
+
+use super::pool::{PageBuf, PagePool, PoolExhausted};
+use super::{AsKvStore, KvStore};
+
+/// KV storage for one sequence, backed by pool pages instead of a
+/// worst-case contiguous buffer. Implements [`KvStore`], so every
+/// `forward*` path runs over it unchanged — and bit-identically to the
+/// contiguous cache, since attention only ever sees per-position row
+/// slices.
+///
+/// Pages adopted from the prefix trie (or duplicated via [`fork`])
+/// are shared; [`reserve`] copy-on-write forks a shared page before
+/// the first write that lands in it.
+///
+/// [`fork`]: PagedKvCache::fork
+/// [`reserve`]: PagedKvCache::reserve
+pub struct PagedKvCache {
+    // Declared before `pool` so pages recycle into a live pool on drop.
+    pages: Vec<Rc<PageBuf>>,
+    len: usize,
+    pool: PagePool,
+}
+
+impl PagedKvCache {
+    pub fn new(pool: &PagePool) -> PagedKvCache {
+        PagedKvCache {
+            pages: Vec::new(),
+            len: 0,
+            pool: pool.clone(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.pool.geometry().page_size
+    }
+
+    /// Physical pages this sequence holds (shared pages count once).
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Block table view (tests and the trie commit path).
+    pub fn table(&self) -> &[Rc<PageBuf>] {
+        &self.pages
+    }
+
+    /// Adopt already-committed prefix pages (refcount bumps, no
+    /// compute); the cache then behaves as if those positions were
+    /// prefilled. Only valid on an empty cache.
+    pub fn adopt_prefix(&mut self, pages: Vec<Rc<PageBuf>>) {
+        assert!(self.pages.is_empty() && self.len == 0, "adopt_prefix on a used cache");
+        self.len = pages.len() * self.page_size();
+        self.pages = pages;
+    }
+
+    /// Share this cache's pages with a second sequence (COW: either
+    /// side forks a page when it first writes into it).
+    pub fn fork(&self) -> PagedKvCache {
+        PagedKvCache {
+            pages: self.pages.clone(),
+            len: self.len,
+            pool: self.pool.clone(),
+        }
+    }
+
+    /// Drop all pages back to the pool.
+    pub fn reset(&mut self) {
+        self.pages.clear();
+        self.len = 0;
+    }
+
+    fn is_unique(&self, page_idx: usize) -> bool {
+        Rc::strong_count(&self.pages[page_idx]) == 1
+    }
+
+    /// Pages `reserve(positions)` would have to allocate right now:
+    /// missing tail pages plus shared pages in the upcoming write range
+    /// that need a copy-on-write fork. The scheduler budgets admission
+    /// and preemption against this.
+    pub fn pages_needed(&self, positions: usize) -> usize {
+        let ps = self.page_size();
+        let need = positions.div_ceil(ps);
+        let grow = need.saturating_sub(self.pages.len());
+        let first_write = self.len / ps;
+        let cow = (first_write..self.pages.len().min(need))
+            .filter(|&pi| !self.is_unique(pi))
+            .count();
+        grow + cow
+    }
+
+    /// Make positions `< positions` writable: allocate missing tail
+    /// pages and COW-fork shared pages the write range touches. After
+    /// a successful reserve, row writes up to `positions` cannot fail.
+    pub fn reserve(&mut self, positions: usize) -> Result<(), PoolExhausted> {
+        let ps = self.page_size();
+        let need = positions.div_ceil(ps);
+        let first_write = self.len / ps;
+        for pi in first_write..self.pages.len().min(need) {
+            if !self.is_unique(pi) {
+                self.cow_page(pi)?;
+            }
+        }
+        while self.pages.len() < need {
+            self.pages.push(self.pool.alloc()?);
+        }
+        Ok(())
+    }
+
+    /// Replace a shared page with a private copy of its contents.
+    fn cow_page(&mut self, page_idx: usize) -> Result<(), PoolExhausted> {
+        let mut fresh = self.pool.alloc()?;
+        Rc::get_mut(&mut fresh)
+            .expect("freshly allocated page is unshared")
+            .floats_mut()
+            .copy_from_slice(self.pages[page_idx].floats());
+        self.pages[page_idx] = fresh;
+        Ok(())
+    }
+
+    fn row(&self, layer: usize, which_v: bool, pos: usize) -> &[f32] {
+        let geom = self.pool.geometry();
+        let page = &self.pages[pos / geom.page_size];
+        let off = geom.row_offset(layer, which_v, pos % geom.page_size);
+        &page.floats()[off..off + geom.kv_dim]
+    }
+
+    fn row_mut(&mut self, layer: usize, which_v: bool, pos: usize) -> &mut [f32] {
+        let geom = self.pool.geometry();
+        let pi = pos / geom.page_size;
+        // Implicit grow/COW keeps direct forward calls (tests, benches)
+        // working without scheduler involvement; the scheduler reserves
+        // ahead of time so this is a no-op on the serve path.
+        if pi >= self.pages.len() {
+            self.reserve(pos + 1).expect("kv page pool exhausted (reserve before writing)");
+        }
+        if !self.is_unique(pi) {
+            self.cow_page(pi).expect("kv page pool exhausted (reserve before writing)");
+        }
+        let off = geom.row_offset(layer, which_v, pos % geom.page_size);
+        let floats = Rc::get_mut(&mut self.pages[pi])
+            .expect("page unshared after reserve")
+            .floats_mut();
+        &mut floats[off..off + geom.kv_dim]
+    }
+}
+
+impl KvStore for PagedKvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.row(layer, false, pos)
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        self.row(layer, true, pos)
+    }
+
+    fn k_row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32] {
+        self.row_mut(layer, false, pos)
+    }
+
+    fn v_row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32] {
+        self.row_mut(layer, true, pos)
+    }
+}
+
+impl AsKvStore for PagedKvCache {
+    type Store = PagedKvCache;
+    fn kv(&self) -> &PagedKvCache {
+        self
+    }
+    fn kv_mut(&mut self) -> &mut PagedKvCache {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::pool::PageGeometry;
+    use crate::kv::KvGauges;
+    use std::sync::Arc;
+
+    fn pool(capacity: usize) -> PagePool {
+        let geom = PageGeometry {
+            n_layers: 2,
+            kv_dim: 4,
+            page_size: 4,
+        };
+        PagePool::new(geom, capacity, Arc::new(KvGauges::default()))
+    }
+
+    fn write_pos(cache: &mut PagedKvCache, pos: usize, val: f32) {
+        for layer in 0..2 {
+            cache.k_row_mut(layer, pos).fill(val);
+            cache.v_row_mut(layer, pos).fill(-val);
+        }
+        cache.set_len(pos + 1);
+    }
+
+    #[test]
+    fn grows_one_page_at_a_time_and_reads_back() {
+        let pool = pool(4);
+        let mut cache = PagedKvCache::new(&pool);
+        assert_eq!(cache.pages_held(), 0);
+        for pos in 0..10 {
+            write_pos(&mut cache, pos, pos as f32 + 1.0);
+            assert_eq!(cache.pages_held(), pos / 4 + 1);
+        }
+        for pos in 0..10 {
+            let want = pos as f32 + 1.0;
+            assert!(cache.k_row(1, pos).iter().all(|&x| x == want));
+            assert!(cache.v_row(0, pos).iter().all(|&x| x == -want));
+        }
+        assert_eq!(pool.used(), 3);
+        cache.reset();
+        assert_eq!(pool.used(), 0);
+    }
+
+    #[test]
+    fn fork_shares_pages_and_cow_splits_on_divergent_write() {
+        let pool = pool(4);
+        let mut a = PagedKvCache::new(&pool);
+        for pos in 0..4 {
+            write_pos(&mut a, pos, 1.0);
+        }
+        let mut b = a.fork();
+        // Physically identical: same page, one allocation.
+        assert!(Rc::ptr_eq(&a.table()[0], &b.table()[0]));
+        assert_eq!(pool.used(), 1);
+        // First divergent write forks the shared page...
+        write_pos(&mut b, 3, 9.0);
+        assert!(!Rc::ptr_eq(&a.table()[0], &b.table()[0]));
+        assert_eq!(pool.used(), 2);
+        // ...copying the untouched positions and leaving `a` intact.
+        assert!(b.k_row(0, 0).iter().all(|&x| x == 1.0));
+        assert!(b.k_row(0, 3).iter().all(|&x| x == 9.0));
+        assert!(a.k_row(0, 3).iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn cow_does_not_fork_pages_behind_the_write_frontier() {
+        let pool = pool(4);
+        let mut a = PagedKvCache::new(&pool);
+        for pos in 0..6 {
+            write_pos(&mut a, pos, 1.0);
+        }
+        let mut b = a.fork();
+        // b's next write lands on page 1; page 0 stays shared.
+        assert_eq!(b.pages_needed(7), 1);
+        write_pos(&mut b, 6, 2.0);
+        assert!(Rc::ptr_eq(&a.table()[0], &b.table()[0]));
+        assert!(!Rc::ptr_eq(&a.table()[1], &b.table()[1]));
+        assert_eq!(pool.used(), 3);
+    }
+
+    #[test]
+    fn reserve_reports_exhaustion_without_partial_leak_confusion() {
+        let pool = pool(2);
+        let mut cache = PagedKvCache::new(&pool);
+        assert!(cache.reserve(8).is_ok());
+        let mut other = PagedKvCache::new(&pool);
+        assert_eq!(other.reserve(4), Err(PoolExhausted));
+        // Freeing makes the same reserve succeed.
+        cache.reset();
+        assert!(other.reserve(4).is_ok());
+    }
+
+    #[test]
+    fn adopted_prefix_counts_as_committed_positions() {
+        let pool = pool(4);
+        let mut a = PagedKvCache::new(&pool);
+        for pos in 0..8 {
+            write_pos(&mut a, pos, 3.0);
+        }
+        pool.commit_prefix(&[1, 2, 3, 4, 5, 6, 7, 8], &a.table()[..2]);
+        let shared = pool.shared_prefix(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 2);
+        assert_eq!(shared.len(), 2);
+        let mut b = PagedKvCache::new(&pool);
+        b.adopt_prefix(shared);
+        assert_eq!(b.len(), 8);
+        assert!(Rc::ptr_eq(&a.table()[1], &b.table()[1]));
+        assert!(b.k_row(0, 5).iter().all(|&x| x == 3.0));
+    }
+}

@@ -1,0 +1,317 @@
+//! Fixed-size KV page pool: free-list allocator, drop-recycling pages,
+//! and the prompt-prefix trie that shares committed pages across
+//! sequences.
+
+use std::cell::{Cell, RefCell};
+use std::fmt;
+use std::mem;
+use std::rc::{Rc, Weak};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use super::trie::PrefixTrie;
+use super::KvGauges;
+use crate::model::ModelConfig;
+
+/// Shape of every page in a pool: one page holds K and V rows for
+/// `page_size` consecutive positions across all layers, so a single
+/// refcount covers a position range end to end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageGeometry {
+    pub n_layers: usize,
+    pub kv_dim: usize,
+    /// Positions per page.
+    pub page_size: usize,
+}
+
+impl PageGeometry {
+    pub fn of(cfg: &ModelConfig, page_size: usize) -> PageGeometry {
+        assert!(page_size > 0, "kv page size must be positive");
+        PageGeometry {
+            n_layers: cfg.n_layers,
+            kv_dim: cfg.kv_dim(),
+            page_size,
+        }
+    }
+
+    pub fn floats_per_page(&self) -> usize {
+        // Layout: [layer][k|v][slot][kv_dim].
+        self.n_layers * 2 * self.page_size * self.kv_dim
+    }
+
+    pub(crate) fn row_offset(&self, layer: usize, which_v: bool, slot: usize) -> usize {
+        debug_assert!(layer < self.n_layers && slot < self.page_size);
+        ((layer * 2 + usize::from(which_v)) * self.page_size + slot) * self.kv_dim
+    }
+}
+
+/// The pool has no free pages left (and the caller could not free any).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted;
+
+impl fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "kv page pool exhausted")
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// One physical KV page. Shared via `Rc`: `Rc::strong_count == 1`
+/// means the owning block table may write into it; a shared page must
+/// be copy-on-write forked first ([`super::PagedKvCache::reserve`]).
+/// Dropping the last `Rc` recycles the buffer into its pool's free
+/// list — pages can never leak back to the allocator individually,
+/// which is what makes the pool drop-audit exact.
+pub struct PageBuf {
+    data: Vec<f32>,
+    pool: Weak<PoolInner>,
+}
+
+impl PageBuf {
+    pub fn floats(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable view; reachable only through `Rc::get_mut`, i.e. when
+    /// the page is unshared.
+    pub(crate) fn floats_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+impl fmt::Debug for PageBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PageBuf").field("floats", &self.data.len()).finish()
+    }
+}
+
+impl Drop for PageBuf {
+    fn drop(&mut self) {
+        // During PoolInner's own teardown the upgrade fails and the
+        // buffer just frees; the pool's Drop already accounted for it.
+        if let Some(pool) = self.pool.upgrade() {
+            pool.free.borrow_mut().push(mem::take(&mut self.data));
+            pool.used.set(pool.used.get() - 1);
+            pool.gauges.pages_used.fetch_sub(1, Relaxed);
+        }
+    }
+}
+
+pub(crate) struct PoolInner {
+    geom: PageGeometry,
+    capacity: usize,
+    /// Recycled page buffers, ready for reuse without reallocation.
+    free: RefCell<Vec<Vec<f32>>>,
+    /// Live pages (everything allocated and not yet recycled).
+    used: Cell<usize>,
+    gauges: Arc<KvGauges>,
+    trie: RefCell<PrefixTrie>,
+}
+
+impl Drop for PoolInner {
+    fn drop(&mut self) {
+        // Drop-audit: at pool teardown the only legitimate page holder
+        // left is the prefix trie (sequences must be settled first).
+        // Anything else still counted in `used` is a leaked block
+        // table; the chaos suite asserts this stays zero through
+        // panics and preemption storms.
+        let held = self.used.get() as u64;
+        let cached = self.trie.borrow().pages() as u64;
+        self.gauges.leaked.fetch_add(held.saturating_sub(cached), Relaxed);
+        self.gauges.pages_used.fetch_sub(held, Relaxed);
+        self.gauges.pages_capacity.fetch_sub(self.capacity as u64, Relaxed);
+    }
+}
+
+/// Fixed-capacity page allocator shared by every sequence on one
+/// scheduler. Cloning is cheap (an `Rc` bump); all clones draw from the
+/// same free list, trie, and capacity.
+#[derive(Clone)]
+pub struct PagePool {
+    inner: Rc<PoolInner>,
+}
+
+impl PagePool {
+    pub fn new(geom: PageGeometry, capacity: usize, gauges: Arc<KvGauges>) -> PagePool {
+        assert!(capacity > 0, "kv pool needs at least one page");
+        gauges.pages_capacity.fetch_add(capacity as u64, Relaxed);
+        PagePool {
+            inner: Rc::new(PoolInner {
+                geom,
+                capacity,
+                free: RefCell::new(Vec::new()),
+                used: Cell::new(0),
+                gauges,
+                trie: RefCell::new(PrefixTrie::new(geom.page_size)),
+            }),
+        }
+    }
+
+    pub fn geometry(&self) -> PageGeometry {
+        self.inner.geom
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Pages currently allocated (sequence-held plus trie-only).
+    pub fn used(&self) -> usize {
+        self.inner.used.get()
+    }
+
+    /// Pages that `alloc` can still hand out without freeing anything.
+    pub fn available(&self) -> usize {
+        self.inner.capacity - self.inner.used.get()
+    }
+
+    pub fn gauges(&self) -> &Arc<KvGauges> {
+        &self.inner.gauges
+    }
+
+    /// Allocate one zeroed page, recycling a retired buffer when one is
+    /// on the free list.
+    pub fn alloc(&self) -> Result<Rc<PageBuf>, PoolExhausted> {
+        let inner = &self.inner;
+        if inner.used.get() >= inner.capacity {
+            return Err(PoolExhausted);
+        }
+        let data = match inner.free.borrow_mut().pop() {
+            Some(mut buf) => {
+                // Zero recycled buffers so a fresh page is
+                // indistinguishable from a newly allocated one.
+                buf.fill(0.0);
+                buf
+            }
+            None => vec![0.0; inner.geom.floats_per_page()],
+        };
+        inner.used.set(inner.used.get() + 1);
+        let used_now = inner.gauges.pages_used.fetch_add(1, Relaxed) + 1;
+        inner.gauges.pages_peak.fetch_max(used_now, Relaxed);
+        Ok(Rc::new(PageBuf {
+            data,
+            pool: Rc::downgrade(inner),
+        }))
+    }
+
+    /// Longest page-aligned prefix of `tokens` already committed to the
+    /// trie, capped at `max_pages`. Returned pages are refcount bumps
+    /// of the physical pages — adopting them skips their prefill.
+    pub fn shared_prefix(&self, tokens: &[u32], max_pages: usize) -> Vec<Rc<PageBuf>> {
+        self.inner.trie.borrow().lookup(tokens, max_pages)
+    }
+
+    /// Commit the full prompt pages of a finished prefill so later
+    /// prompts with the same page-aligned prefix can adopt them.
+    /// `tokens` must be page-aligned and `pages` must cover it.
+    pub fn commit_prefix(&self, tokens: &[u32], pages: &[Rc<PageBuf>]) {
+        self.inner.trie.borrow_mut().insert(tokens, pages);
+    }
+
+    /// Evict trie entries no live sequence references, returning the
+    /// number of pages released. The scheduler calls this before
+    /// escalating to preemption.
+    pub fn evict_unreferenced(&self) -> usize {
+        self.inner.trie.borrow_mut().evict_unreferenced()
+    }
+
+    /// Pages currently held only by the prefix trie (diagnostics).
+    pub fn cached_prefix_pages(&self) -> usize {
+        self.inner.trie.borrow().pages()
+    }
+}
+
+impl fmt::Debug for PagePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PagePool")
+            .field("geom", &self.inner.geom)
+            .field("capacity", &self.inner.capacity)
+            .field("used", &self.inner.used.get())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    fn geom() -> PageGeometry {
+        PageGeometry {
+            n_layers: 2,
+            kv_dim: 4,
+            page_size: 8,
+        }
+    }
+
+    #[test]
+    fn alloc_free_recycles_and_tracks_gauges() {
+        let gauges = Arc::new(KvGauges::default());
+        let pool = PagePool::new(geom(), 2, Arc::clone(&gauges));
+        assert_eq!(pool.available(), 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_eq!(pool.available(), 0);
+        assert!(pool.alloc().is_err());
+        assert_eq!(gauges.pages_used.load(Relaxed), 2);
+        assert_eq!(gauges.pages_peak.load(Relaxed), 2);
+        drop(a);
+        assert_eq!(pool.available(), 1);
+        assert_eq!(gauges.pages_used.load(Relaxed), 1);
+        // A recycled page comes back zeroed.
+        let c = pool.alloc().unwrap();
+        assert!(c.floats().iter().all(|&x| x == 0.0));
+        drop((b, c));
+        drop(pool);
+        assert_eq!(gauges.pages_used.load(Relaxed), 0);
+        assert_eq!(gauges.pages_capacity.load(Relaxed), 0);
+        assert_eq!(gauges.leaked.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn refcount_shares_one_physical_page() {
+        let pool = PagePool::new(geom(), 1, Arc::new(KvGauges::default()));
+        let a = pool.alloc().unwrap();
+        let b = Rc::clone(&a);
+        // Shared: still one physical page, pool stays exhausted until
+        // BOTH handles drop.
+        assert_eq!(pool.used(), 1);
+        assert!(pool.alloc().is_err());
+        drop(a);
+        assert!(pool.alloc().is_err());
+        drop(b);
+        assert_eq!(pool.available(), 1);
+    }
+
+    #[test]
+    fn drop_audit_counts_pages_outliving_the_pool() {
+        let gauges = Arc::new(KvGauges::default());
+        let pool = PagePool::new(geom(), 2, Arc::clone(&gauges));
+        let page = pool.alloc().unwrap();
+        drop(pool);
+        assert_eq!(gauges.leaked.load(Relaxed), 1);
+        assert_eq!(gauges.pages_used.load(Relaxed), 0);
+        // The straggler frees without touching the dead pool.
+        drop(page);
+        assert_eq!(gauges.pages_used.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn row_offsets_tile_the_page_exactly() {
+        let g = geom();
+        let mut seen = vec![false; g.floats_per_page() / g.kv_dim];
+        for layer in 0..g.n_layers {
+            for which_v in [false, true] {
+                for slot in 0..g.page_size {
+                    let off = g.row_offset(layer, which_v, slot);
+                    assert_eq!(off % g.kv_dim, 0);
+                    let row = off / g.kv_dim;
+                    assert!(!seen[row], "row aliased");
+                    seen[row] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,176 @@
+//! Token-keyed prefix trie over committed KV pages.
+//!
+//! Each edge is an exact `page_size`-token chunk mapping to the
+//! physical page that holds that chunk's K/V rows. Lookup walks the
+//! prompt chunk by chunk and hands back `Rc` clones of every matched
+//! page; insert commits a finished prefill's full prompt pages,
+//! deduplicating against chunks already present (the existing page is
+//! kept — same tokens at the same absolute positions produce the same
+//! rows, so either copy is valid and keeping the old one preserves
+//! sharing with its current holders).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::pool::PageBuf;
+
+#[derive(Default)]
+struct Node {
+    children: HashMap<Box<[u32]>, Edge>,
+}
+
+struct Edge {
+    page: Rc<PageBuf>,
+    node: Node,
+}
+
+pub(crate) struct PrefixTrie {
+    page_size: usize,
+    root: Node,
+    pages: usize,
+}
+
+impl PrefixTrie {
+    pub(crate) fn new(page_size: usize) -> PrefixTrie {
+        PrefixTrie {
+            page_size,
+            root: Node::default(),
+            pages: 0,
+        }
+    }
+
+    /// Pages currently held by the trie.
+    pub(crate) fn pages(&self) -> usize {
+        self.pages
+    }
+
+    pub(crate) fn lookup(&self, tokens: &[u32], max_pages: usize) -> Vec<Rc<PageBuf>> {
+        let mut node = &self.root;
+        let mut out = Vec::new();
+        for chunk in tokens.chunks_exact(self.page_size).take(max_pages) {
+            match node.children.get(chunk) {
+                Some(edge) => {
+                    out.push(Rc::clone(&edge.page));
+                    node = &edge.node;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub(crate) fn insert(&mut self, tokens: &[u32], pages: &[Rc<PageBuf>]) {
+        let mut added = 0;
+        let mut node = &mut self.root;
+        for (chunk, page) in tokens.chunks_exact(self.page_size).zip(pages) {
+            let edge = node
+                .children
+                .entry(chunk.into())
+                .or_insert_with(|| {
+                    added += 1;
+                    Edge {
+                        page: Rc::clone(page),
+                        node: Node::default(),
+                    }
+                });
+            node = &mut edge.node;
+        }
+        self.pages += added;
+    }
+
+    /// Drop every entry whose page no live sequence shares
+    /// (`Rc::strong_count == 1` — the trie holds the only handle),
+    /// leaves first so a referenced deep chunk keeps its ancestors.
+    /// Returns the number of pages released.
+    pub(crate) fn evict_unreferenced(&mut self) -> usize {
+        fn walk(node: &mut Node) -> usize {
+            let mut removed = 0;
+            node.children.retain(|_, edge| {
+                removed += walk(&mut edge.node);
+                let keep = !edge.node.children.is_empty() || Rc::strong_count(&edge.page) > 1;
+                if !keep {
+                    removed += 1;
+                }
+                keep
+            });
+            removed
+        }
+        let removed = walk(&mut self.root);
+        self.pages -= removed;
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::pool::{PageGeometry, PagePool};
+    use crate::kv::KvGauges;
+    use std::sync::Arc;
+
+    fn pool(capacity: usize) -> PagePool {
+        let geom = PageGeometry {
+            n_layers: 1,
+            kv_dim: 2,
+            page_size: 4,
+        };
+        PagePool::new(geom, capacity, Arc::new(KvGauges::default()))
+    }
+
+    #[test]
+    fn lookup_matches_longest_committed_prefix() {
+        let pool = pool(8);
+        let mut trie = PrefixTrie::new(4);
+        let prompt: Vec<u32> = (0..12).collect();
+        let pages: Vec<_> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+        trie.insert(&prompt, &pages);
+        assert_eq!(trie.pages(), 3);
+
+        // Full match, capped match, partial match, miss.
+        let hit = trie.lookup(&prompt, 3);
+        assert_eq!(hit.len(), 3);
+        assert!(Rc::ptr_eq(&hit[0], &pages[0]) && Rc::ptr_eq(&hit[2], &pages[2]));
+        assert_eq!(trie.lookup(&prompt, 2).len(), 2);
+        let diverging: Vec<u32> = (0..8).chain([99, 99, 99, 99]).collect();
+        assert_eq!(trie.lookup(&diverging, 3).len(), 2);
+        assert_eq!(trie.lookup(&[7, 7, 7, 7], 1).len(), 0);
+        // A trailing partial chunk never matches.
+        assert_eq!(trie.lookup(&prompt[..6], 9).len(), 1);
+    }
+
+    #[test]
+    fn insert_dedups_existing_chunks() {
+        let pool = pool(8);
+        let mut trie = PrefixTrie::new(4);
+        let prompt: Vec<u32> = (0..8).collect();
+        let first: Vec<_> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        trie.insert(&prompt, &first);
+        // Re-committing the same prefix with different physical pages
+        // keeps the originals (they may already be shared).
+        let second: Vec<_> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        trie.insert(&prompt, &second);
+        assert_eq!(trie.pages(), 2);
+        let hit = trie.lookup(&prompt, 2);
+        assert!(Rc::ptr_eq(&hit[0], &first[0]) && Rc::ptr_eq(&hit[1], &first[1]));
+    }
+
+    #[test]
+    fn evicts_only_unreferenced_leaves_first() {
+        let pool = pool(8);
+        let mut trie = PrefixTrie::new(4);
+        let prompt: Vec<u32> = (0..8).collect();
+        let pages: Vec<_> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        trie.insert(&prompt, &pages);
+        // Keep a live reference to the DEEP page: its ancestor chain
+        // must survive even though the root page itself is unshared.
+        let held = Rc::clone(&pages[1]);
+        drop(pages);
+        assert_eq!(trie.evict_unreferenced(), 0);
+        assert_eq!(trie.pages(), 2);
+        drop(held);
+        assert_eq!(trie.evict_unreferenced(), 2);
+        assert_eq!(trie.pages(), 0);
+        // Pages actually returned to the pool.
+        assert_eq!(pool.available(), pool.capacity());
+    }
+}

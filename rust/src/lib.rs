@@ -17,6 +17,9 @@
 //! - [`restore`] — bit-level FPx→FP16 restoration (SHIFT/AND/OR and LUT).
 //! - [`gemm`] — fused unpack–dequant GEMV/GEMM hot path.
 //! - [`model`] — transformer inference engine + checkpoints.
+//! - [`kv`] — paged KV-cache subsystem: fixed-size page pool,
+//!   per-sequence block tables, prompt-prefix sharing (COW), and the
+//!   [`KvStore`](kv::KvStore) accessor the attention paths run over.
 //! - [`coordinator`] — the [`Engine`] serving facade: bounded admission,
 //!   chunked prefill, continuous batching, streaming handles,
 //!   cancellation, replica dispatch, and fault tolerance (supervised
@@ -34,6 +37,7 @@ pub mod eval;
 pub mod experiments;
 pub mod formats;
 pub mod gemm;
+pub mod kv;
 pub mod model;
 pub mod pack;
 pub mod quant;

@@ -104,6 +104,7 @@ fn print_help() {
          \x20       [--quantized file.amsq   (exclusive of the plan flags)]\n\
          \x20       [--queue-capacity Q --dispatch least-outstanding|round-robin]\n\
          \x20       [--prefill-chunk P]\n\
+         \x20       [--kv-page-size S --kv-pool-pages N  (0 = worst-case reserve)]\n\
          \x20       [--deadline-ms T --queue-deadline-ms T]\n\
          \x20       [--priority interactive|bulk|mixed]\n\
          \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
@@ -502,6 +503,13 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         other => bail!("unknown dispatch policy '{other}' (least-outstanding | round-robin)"),
     };
     let prefill_chunk = args.get_usize("prefill-chunk", 128);
+    // Paged-KV knobs: page granularity and pool capacity. Pool 0 (the
+    // default) reserves the worst case — max_batch full-context
+    // sequences — so nothing preempts; a smaller explicit pool
+    // over-commits memory and leans on continuous batching +
+    // preemption.
+    let kv_page_size = args.get_usize("kv-page-size", 16);
+    let kv_pool_pages = args.get_usize("kv-pool-pages", 0);
     // Fault-tolerance knobs: optional per-request deadlines (0 = none)
     // and the workload's priority mix. "mixed" alternates interactive /
     // bulk so the priority lanes and shed path are exercised.
@@ -585,6 +593,8 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         .queue_capacity(queue_capacity)
         .dispatch(dispatch)
         .prefill_chunk(prefill_chunk)
+        .kv_page_size(kv_page_size)
+        .kv_pool_pages(kv_pool_pages)
         .seed(1)
         .build(model);
     let wall = ams_quant::util::timer::Timer::start();
@@ -607,7 +617,10 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     eng.drain();
     let lat = eng.latency();
     let ttft = eng.ttft();
+    let kv_pages_peak = eng.kv_pages_peak();
+    let gauges = eng.kv_gauges();
     let stats = eng.shutdown();
+    let kv_pages_leaked = gauges.leaked.load(std::sync::atomic::Ordering::Relaxed);
 
     let mut t = Table::new("Serving report (E9)", &["metric", "value"]);
     t.row(vec!["requests".into(), responses.len().to_string()]);
@@ -634,6 +647,14 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     t.row(vec!["retries".into(), stats.retries.to_string()]);
     t.row(vec!["panics recovered".into(), stats.panics_recovered.to_string()]);
     t.row(vec!["replica restarts".into(), stats.restarts.to_string()]);
+    // Paged-KV economics: pool pressure, prefix reuse and the
+    // preemptions paid for over-committing pages.
+    t.row(vec!["kv page size".into(), kv_page_size.to_string()]);
+    t.row(vec!["kv pages peak".into(), kv_pages_peak.to_string()]);
+    t.row(vec!["kv pages leaked".into(), kv_pages_leaked.to_string()]);
+    t.row(vec!["kv prefix hits".into(), stats.prefix_hits.to_string()]);
+    t.row(vec!["kv preemptions".into(), stats.preemptions.to_string()]);
+    t.row(vec!["peak concurrency".into(), stats.peak_concurrency.to_string()]);
     emit_table(args, &t)?;
     if let Some(r) = responses.first() {
         eprintln!("# sample continuation: {:?}", tokenizer::decode(&r.tokens));

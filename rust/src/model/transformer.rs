@@ -19,8 +19,8 @@ use crate::formats::registry::Scheme;
 use crate::gemm::{dense_gemm_auto_into, dense_gemv_auto, GemmScratch, QuantLinear};
 use crate::quant::{LayerRole, QuantConfig, QuantError, QuantReport, Quantizer};
 use crate::tensor::Tensor;
+use crate::kv::{AsKvStore, KvStore};
 use anyhow::Result;
-use std::borrow::BorrowMut;
 
 /// A projection: dense f32 (FP16-reference path) or packed-quantized.
 #[derive(Clone, Debug)]
@@ -112,7 +112,12 @@ pub struct LayerWeights {
     pub w_down: Linear,
 }
 
-/// Per-sequence KV cache.
+/// Per-sequence contiguous KV cache, sized worst-case at construction
+/// (`max_seq` positions per layer). The serve path uses the paged
+/// [`crate::kv::PagedKvCache`] instead; this stays as the
+/// zero-bookkeeping backing for single-sequence tools (eval, calib,
+/// benches) and as the reference side of the paged parity suite — both
+/// implement [`KvStore`], so every `forward*` runs over either.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     /// Per layer: [max_seq * kv_dim].
@@ -123,17 +128,56 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Fully initialized from the config — `kv_dim` included, so a
+    /// cache built here works with the forwards directly (no
+    /// post-construction patching by `new_cache`).
     pub fn new(cfg: &ModelConfig) -> KvCache {
         KvCache {
             k: vec![vec![0.0; cfg.max_seq * cfg.kv_dim()]; cfg.n_layers],
             v: vec![vec![0.0; cfg.max_seq * cfg.kv_dim()]; cfg.n_layers],
             len: 0,
-            kv_dim: 0,
+            kv_dim: cfg.kv_dim(),
         }
     }
 
     pub fn reset(&mut self) {
         self.len = 0;
+    }
+}
+
+impl KvStore for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+
+    fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
+        &self.k[layer][pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+
+    fn v_row(&self, layer: usize, pos: usize) -> &[f32] {
+        &self.v[layer][pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+
+    fn k_row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32] {
+        &mut self.k[layer][pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+
+    fn v_row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32] {
+        &mut self.v[layer][pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+}
+
+impl AsKvStore for KvCache {
+    type Store = KvCache;
+    fn kv(&self) -> &KvCache {
+        self
+    }
+    fn kv_mut(&mut self) -> &mut KvCache {
+        self
     }
 }
 
@@ -259,6 +303,57 @@ fn rope(v: &mut [f32], pos: usize, head_dim: usize) {
         let (a, b) = (v[i], v[i + half]);
         v[i] = a * cos - b * sin;
         v[i + half] = a * sin + b * cos;
+    }
+}
+
+/// Rope every K head of one freshly written cache row in place. RoPE
+/// depends only on the absolute position, which is what makes
+/// prefix-shared KV pages valid across sequences.
+fn rope_k<S: KvStore + ?Sized>(cache: &mut S, li: usize, pos: usize, n_kv_heads: usize, hd: usize) {
+    let kr = cache.k_row_mut(li, pos);
+    for g in 0..n_kv_heads {
+        rope(&mut kr[g * hd..(g + 1) * hd], pos, hd);
+    }
+}
+
+/// One query's attention over the cache prefix `0..=pos`, reading K/V
+/// through the [`KvStore`] row accessor. Every forward variant —
+/// single-token, batched decode, and the prefill family — funnels its
+/// attention through this one body, so paged and contiguous caches see
+/// the identical float sequence and logits stay bit-identical across
+/// backings (the GEMM staging around it differs per variant; the
+/// per-position math does not).
+#[allow(clippy::too_many_arguments)]
+fn attend<S: KvStore + ?Sized>(
+    cache: &S,
+    li: usize,
+    pos: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    hd: usize,
+    q: &[f32],
+    out: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    let heads_per_kv = n_heads / n_kv_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    ensure(scores, pos + 1);
+    for hh in 0..n_heads {
+        let g = hh / heads_per_kv;
+        let qh = &q[hh * hd..(hh + 1) * hd];
+        for (t, s) in scores.iter_mut().enumerate() {
+            let kh = &cache.k_row(li, t)[g * hd..(g + 1) * hd];
+            *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
+        }
+        softmax_inplace(scores);
+        let oh = &mut out[hh * hd..(hh + 1) * hd];
+        oh.fill(0.0);
+        for (t, &p) in scores.iter().enumerate() {
+            let vh = &cache.v_row(li, t)[g * hd..(g + 1) * hd];
+            for i in 0..hd {
+                oh[i] += p * vh[i];
+            }
+        }
     }
 }
 
@@ -392,9 +487,7 @@ impl Transformer {
     }
 
     pub fn new_cache(&self) -> KvCache {
-        let mut c = KvCache::new(&self.cfg);
-        c.kv_dim = self.cfg.kv_dim();
-        c
+        KvCache::new(&self.cfg)
     }
 
     /// Fresh decode scratch sized lazily by first use.
@@ -439,26 +532,26 @@ impl Transformer {
     /// Single-token decode step: returns logits. `pos` must equal
     /// `cache.len`. Allocating convenience wrapper over
     /// [`Transformer::forward_with`].
-    pub fn forward(&self, token: u32, pos: usize, cache: &mut KvCache) -> Vec<f32> {
+    pub fn forward<C: AsKvStore>(&self, token: u32, pos: usize, cache: &mut C) -> Vec<f32> {
         let mut scratch = ForwardScratch::new();
         self.forward_with(token, pos, cache, &mut scratch).to_vec()
     }
 
     /// Single-token decode step against a caller-owned scratch; the
     /// returned logits borrow the scratch. Zero heap allocation at steady
-    /// state.
-    pub fn forward_with<'s>(
+    /// state. Runs over any [`KvStore`] backing (contiguous or paged).
+    pub fn forward_with<'s, C: AsKvStore>(
         &self,
         token: u32,
         pos: usize,
-        cache: &mut KvCache,
+        cache: &mut C,
         scratch: &'s mut ForwardScratch,
     ) -> &'s [f32] {
-        assert_eq!(pos, cache.len, "positions must be fed in order");
+        let kv = cache.kv_mut();
+        assert_eq!(pos, kv.len(), "positions must be fed in order");
         assert!(pos < self.cfg.max_seq, "sequence overflow");
         let cfg = &self.cfg;
-        let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
-        let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+        let (d, hd) = (cfg.d_model, cfg.head_dim());
 
         let ForwardScratch {
             gemm,
@@ -486,39 +579,13 @@ impl Transformer {
             // --- attention ---
             rmsnorm(x, &layer.attn_norm, h);
             layer.wq.apply_with(h, q, gemm);
-            let kc = &mut cache.k[li];
-            let vc = &mut cache.v[li];
-            layer
-                .wk
-                .apply_with(h, &mut kc[pos * kvd..(pos + 1) * kvd], gemm);
-            layer
-                .wv
-                .apply_with(h, &mut vc[pos * kvd..(pos + 1) * kvd], gemm);
+            layer.wk.apply_with(h, kv.k_row_mut(li, pos), gemm);
+            layer.wv.apply_with(h, kv.v_row_mut(li, pos), gemm);
             for hh in 0..cfg.n_heads {
                 rope(&mut q[hh * hd..(hh + 1) * hd], pos, hd);
             }
-            for g in 0..cfg.n_kv_heads {
-                rope(&mut kc[pos * kvd + g * hd..pos * kvd + (g + 1) * hd], pos, hd);
-            }
-            let scale = 1.0 / (hd as f32).sqrt();
-            ensure(scores, pos + 1);
-            for hh in 0..cfg.n_heads {
-                let g = hh / heads_per_kv;
-                let qh = &q[hh * hd..(hh + 1) * hd];
-                for (t, s) in scores.iter_mut().enumerate() {
-                    let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
-                    *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
-                }
-                softmax_inplace(scores);
-                let oh = &mut attn[hh * hd..(hh + 1) * hd];
-                oh.fill(0.0);
-                for (t, &p) in scores.iter().enumerate() {
-                    let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
-                    for i in 0..hd {
-                        oh[i] += p * vh[i];
-                    }
-                }
-            }
+            rope_k(kv, li, pos, cfg.n_kv_heads, hd);
+            attend(&*kv, li, pos, cfg.n_heads, cfg.n_kv_heads, hd, q, attn, scores);
             layer.wo.apply_with(attn, &mut proj[..d], gemm);
             for i in 0..d {
                 x[i] += proj[i];
@@ -535,7 +602,7 @@ impl Transformer {
                 x[i] += proj[i];
             }
         }
-        cache.len = pos + 1;
+        kv.set_len(pos + 1);
 
         h[..d].copy_from_slice(x);
         rmsnorm(&h[..d], &self.final_norm, x);
@@ -547,11 +614,7 @@ impl Transformer {
     /// Batched decode across independent sequences (allocating wrapper
     /// over [`Transformer::forward_batch_with`]): `tokens[i]` is appended
     /// to `caches[i]` at its own position.
-    pub fn forward_batch<C: BorrowMut<KvCache>>(
-        &self,
-        tokens: &[u32],
-        caches: &mut [C],
-    ) -> Tensor {
+    pub fn forward_batch<C: AsKvStore>(&self, tokens: &[u32], caches: &mut [C]) -> Tensor {
         let mut scratch = ForwardScratch::new();
         self.forward_batch_with(tokens, caches, &mut scratch).clone()
     }
@@ -561,7 +624,7 @@ impl Transformer {
     /// `[batch, ·]` tiled fused GEMM; attention runs per sequence. Zero
     /// heap allocation at steady state (the caches are mutated in place —
     /// no per-step cache churn).
-    pub fn forward_batch_with<'s, C: BorrowMut<KvCache>>(
+    pub fn forward_batch_with<'s, C: AsKvStore>(
         &self,
         tokens: &[u32],
         caches: &mut [C],
@@ -570,8 +633,7 @@ impl Transformer {
         let b = tokens.len();
         assert_eq!(b, caches.len());
         let cfg = &self.cfg;
-        let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
-        let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+        let (d, hd) = (cfg.d_model, cfg.head_dim());
 
         let ForwardScratch {
             gemm,
@@ -607,44 +669,28 @@ impl Transformer {
             layer.wv.apply_batch_into(hb, vxb, gemm);
             attnb.resize(&[b, d]);
             for i in 0..b {
-                let cache = caches[i].borrow_mut();
-                let pos = cache.len;
+                let kv = caches[i].kv_mut();
+                let pos = kv.len();
                 assert!(pos < cfg.max_seq, "sequence overflow");
-                let kc = &mut cache.k[li];
-                let vc = &mut cache.v[li];
-                kc[pos * kvd..(pos + 1) * kvd].copy_from_slice(kxb.row(i));
-                vc[pos * kvd..(pos + 1) * kvd].copy_from_slice(vxb.row(i));
+                kv.k_row_mut(li, pos).copy_from_slice(kxb.row(i));
+                kv.v_row_mut(li, pos).copy_from_slice(vxb.row(i));
                 qi.clear();
                 qi.extend_from_slice(qb.row(i));
                 for hh in 0..cfg.n_heads {
                     rope(&mut qi[hh * hd..(hh + 1) * hd], pos, hd);
                 }
-                for g in 0..cfg.n_kv_heads {
-                    rope(
-                        &mut kc[pos * kvd + g * hd..pos * kvd + (g + 1) * hd],
-                        pos,
-                        hd,
-                    );
-                }
-                let scale = 1.0 / (hd as f32).sqrt();
-                ensure(scores, pos + 1);
-                let oi = attnb.row_mut(i);
-                for hh in 0..cfg.n_heads {
-                    let g = hh / heads_per_kv;
-                    let qh = &qi[hh * hd..(hh + 1) * hd];
-                    for (t, s) in scores.iter_mut().enumerate() {
-                        let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
-                        *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
-                    }
-                    softmax_inplace(scores);
-                    let oh = &mut oi[hh * hd..(hh + 1) * hd];
-                    for (t, &p) in scores.iter().enumerate() {
-                        let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
-                        for j in 0..hd {
-                            oh[j] += p * vh[j];
-                        }
-                    }
-                }
+                rope_k(kv, li, pos, cfg.n_kv_heads, hd);
+                attend(
+                    &*kv,
+                    li,
+                    pos,
+                    cfg.n_heads,
+                    cfg.n_kv_heads,
+                    hd,
+                    qi,
+                    attnb.row_mut(i),
+                    scores,
+                );
             }
             layer.wo.apply_batch_into(attnb, ob, gemm);
             for i in 0..b {
@@ -676,7 +722,9 @@ impl Transformer {
             }
         }
         for c in caches.iter_mut() {
-            c.borrow_mut().len += 1;
+            let kv = c.kv_mut();
+            let len = kv.len();
+            kv.set_len(len + 1);
         }
         for i in 0..b {
             qi.clear();
@@ -689,7 +737,7 @@ impl Transformer {
 
     /// Chunked prefill (allocating wrapper over
     /// [`Transformer::forward_prefill_with`]).
-    pub fn forward_prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Vec<f32> {
+    pub fn forward_prefill<C: AsKvStore>(&self, tokens: &[u32], cache: &mut C) -> Vec<f32> {
         let mut scratch = ForwardScratch::new();
         self.forward_prefill_with(tokens, cache, &mut scratch).to_vec()
     }
@@ -703,10 +751,10 @@ impl Transformer {
     /// the tokens one at a time through [`Transformer::forward_with`]:
     /// the tile kernels accumulate each output column in the same order at
     /// any tile width.
-    pub fn forward_prefill_with<'s>(
+    pub fn forward_prefill_with<'s, C: AsKvStore>(
         &self,
         tokens: &[u32],
-        cache: &mut KvCache,
+        cache: &mut C,
         scratch: &'s mut ForwardScratch,
     ) -> &'s [f32] {
         self.prefill_inner(tokens, cache, scratch, None, true)
@@ -719,10 +767,10 @@ impl Transformer {
     /// useless `[vocab, d]` GEMV per chunk. Call
     /// [`Transformer::forward_prefill_with`] for the last chunk to get
     /// the next-token logits.
-    pub fn forward_prefill_chunk(
+    pub fn forward_prefill_chunk<C: AsKvStore>(
         &self,
         tokens: &[u32],
-        cache: &mut KvCache,
+        cache: &mut C,
         scratch: &mut ForwardScratch,
     ) {
         self.prefill_inner(tokens, cache, scratch, None, false);
@@ -734,34 +782,34 @@ impl Transformer {
     /// moments of `taps` (see [`crate::calib::stats::ModelTaps`]). The
     /// taps record running statistics only — no activation storage — so
     /// a calibration corpus of any length streams at O(d) extra memory.
-    pub fn forward_prefill_tapped<'s>(
+    pub fn forward_prefill_tapped<'s, C: AsKvStore>(
         &self,
         tokens: &[u32],
-        cache: &mut KvCache,
+        cache: &mut C,
         scratch: &'s mut ForwardScratch,
         taps: &mut crate::calib::stats::ModelTaps,
     ) -> &'s [f32] {
         self.prefill_inner(tokens, cache, scratch, Some(taps), true)
     }
 
-    fn prefill_inner<'s>(
+    fn prefill_inner<'s, C: AsKvStore>(
         &self,
         tokens: &[u32],
-        cache: &mut KvCache,
+        cache: &mut C,
         scratch: &'s mut ForwardScratch,
         mut taps: Option<&mut crate::calib::stats::ModelTaps>,
         need_logits: bool,
     ) -> &'s [f32] {
+        let kv = cache.kv_mut();
         // The tapped path always needs the head pass (head_in site +
         // token accounting live there).
         let need_logits = need_logits || taps.is_some();
         let n = tokens.len();
         assert!(n > 0, "empty prefill chunk");
-        let pos0 = cache.len;
+        let pos0 = kv.len();
         assert!(pos0 + n <= self.cfg.max_seq, "sequence overflow");
         let cfg = &self.cfg;
-        let (d, hd, kvd) = (cfg.d_model, cfg.head_dim(), cfg.kv_dim());
-        let heads_per_kv = cfg.n_heads / cfg.n_kv_heads;
+        let (d, hd) = (cfg.d_model, cfg.head_dim());
 
         let ForwardScratch {
             gemm,
@@ -799,24 +847,15 @@ impl Transformer {
             layer.wq.apply_batch_into(hb, qb, gemm); // [n, d]
             layer.wk.apply_batch_into(hb, kxb, gemm); // [n, kvd]
             layer.wv.apply_batch_into(hb, vxb, gemm);
-            let kc = &mut cache.k[li];
-            let vc = &mut cache.v[li];
             // Write + rope the whole chunk's K/V first; attention row i may
             // then read any position <= pos0 + i (causal by construction).
             for i in 0..n {
                 let pos = pos0 + i;
-                kc[pos * kvd..(pos + 1) * kvd].copy_from_slice(kxb.row(i));
-                vc[pos * kvd..(pos + 1) * kvd].copy_from_slice(vxb.row(i));
-                for g in 0..cfg.n_kv_heads {
-                    rope(
-                        &mut kc[pos * kvd + g * hd..pos * kvd + (g + 1) * hd],
-                        pos,
-                        hd,
-                    );
-                }
+                kv.k_row_mut(li, pos).copy_from_slice(kxb.row(i));
+                kv.v_row_mut(li, pos).copy_from_slice(vxb.row(i));
+                rope_k(kv, li, pos, cfg.n_kv_heads, hd);
             }
             attnb.resize(&[n, d]);
-            let scale = 1.0 / (hd as f32).sqrt();
             for i in 0..n {
                 let pos = pos0 + i;
                 qi.clear();
@@ -824,24 +863,17 @@ impl Transformer {
                 for hh in 0..cfg.n_heads {
                     rope(&mut qi[hh * hd..(hh + 1) * hd], pos, hd);
                 }
-                ensure(scores, pos + 1);
-                let oi = attnb.row_mut(i);
-                for hh in 0..cfg.n_heads {
-                    let g = hh / heads_per_kv;
-                    let qh = &qi[hh * hd..(hh + 1) * hd];
-                    for (t, s) in scores.iter_mut().enumerate() {
-                        let kh = &kc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
-                        *s = qh.iter().zip(kh).map(|(&a, &b)| a * b).sum::<f32>() * scale;
-                    }
-                    softmax_inplace(scores);
-                    let oh = &mut oi[hh * hd..(hh + 1) * hd];
-                    for (t, &p) in scores.iter().enumerate() {
-                        let vh = &vc[t * kvd + g * hd..t * kvd + (g + 1) * hd];
-                        for j in 0..hd {
-                            oh[j] += p * vh[j];
-                        }
-                    }
-                }
+                attend(
+                    &*kv,
+                    li,
+                    pos,
+                    cfg.n_heads,
+                    cfg.n_kv_heads,
+                    hd,
+                    qi,
+                    attnb.row_mut(i),
+                    scores,
+                );
             }
             if let Some(t) = taps.as_deref_mut() {
                 t.layers[li].attn_out.record_rows(attnb);
@@ -881,7 +913,7 @@ impl Transformer {
                 }
             }
         }
-        cache.len = pos0 + n;
+        kv.set_len(pos0 + n);
         if !need_logits {
             // Intermediate chunk: the cache is written; skip the head.
             ensure(logits, 0);

@@ -23,7 +23,7 @@
 //! round. Set `CHAOS_REPORT=/path/file.txt` to append one summary line
 //! per round for artifact archiving.
 
-use ams_quant::coordinator::failpoint::{PREFILL, QUEUE_PUSH, STEP};
+use ams_quant::coordinator::failpoint::{POOL, PREFILL, QUEUE_PUSH, STEP};
 use ams_quant::coordinator::{
     DispatchPolicy, Engine, EngineError, Event, FailPoints, FailSpec, GenRequest, Priority,
 };
@@ -300,6 +300,100 @@ fn chaos_round(seed: u64) -> String {
         stats.retries,
         stats.restarts
     )
+}
+
+/// PR 7 acceptance round: KV page-pool exhaustion under an
+/// over-committed pool plus a forced `POOL` deny burst. The pool holds
+/// 10 pages while 4 co-batched sequences want up to 16, so continuous
+/// batching must preempt (park) and later resume sequences instead of
+/// stalling or failing them; cancels land on running *and* parked
+/// sequences. Invariants: exactly one terminal per request, nothing
+/// settles `Failed` (every request individually fits the pool), and
+/// the drop-audit proves zero leaked pages once the engine is gone.
+#[test]
+fn pool_exhaustion_preempts_and_leaks_no_pages() {
+    const SEED: u64 = 0x9A6E5;
+    let fp = FailPoints::seeded(SEED);
+    // Deny three pool checks starting at step 2: each translates into
+    // one forced preempt-youngest-bulk round, independent of whether
+    // organic pressure has built up yet.
+    fp.arm_tagged(POOL, 0, FailSpec::deny(3).after(1));
+
+    let eng = Engine::builder()
+        .replicas(1)
+        .max_batch(4)
+        .kv_page_size(4)
+        // Worst case is 4 sequences * 4 pages (5-token prompt + 10 new
+        // tokens = 15 positions); 10 pages force organic preemption on
+        // top of the injected denies.
+        .kv_pool_pages(10)
+        .queue_capacity(64)
+        .seed(SEED)
+        .restart_backoff(Duration::from_millis(1), Duration::from_millis(20))
+        .failpoints(std::sync::Arc::clone(&fp))
+        .build(model());
+    let gauges = eng.kv_gauges();
+
+    let mut live = Vec::new();
+    let mut rng = Rng::new(SEED);
+    let mut cancelled_sent = 0u64;
+    for id in 0..24u64 {
+        // Mostly bulk so the preemption victim-picker always has prey;
+        // a sprinkle of interactive rides through the storms untouched.
+        let prio = if id % 3 == 0 { Priority::Interactive } else { Priority::Bulk };
+        // Distinct first page per prompt: the prefix trie accumulates
+        // unshareable pages, forcing eviction under pool pressure.
+        let prompt = vec![(id as u32 % 50) + 1, (id as u32 % 7) + 2, 3, 4, 5];
+        let h = eng
+            .submit(GenRequest::greedy(id, prompt, 10).with_priority(prio))
+            .expect("capacity 64 holds the workload");
+        if rng.below(5) == 0 {
+            h.cancel();
+            cancelled_sent += 1;
+        }
+        live.push(h);
+    }
+
+    let mut t = Terminals::default();
+    t.drain(live, "pool-exhaustion");
+    assert_eq!(t.total(), 24);
+    assert_eq!(
+        t.failed, 0,
+        "every request fits the pool on an idle replica, so preemption \
+         must never escalate to Failed: {t:?}"
+    );
+    assert!(t.cancelled >= cancelled_sent.min(1), "cancels settled: {t:?}");
+    assert_eq!(fp.fired(POOL), 3, "the injected deny burst ran");
+
+    eng.drain();
+    assert_eq!(eng.outstanding(), 0, "no leaked outstanding shares");
+    assert_eq!(eng.queue_depths(), vec![0], "no leaked queue slots");
+    let preemptions = eng.preemptions();
+    assert!(
+        preemptions > 0,
+        "a deny at step 2 with an all-bulk batch must have parked someone"
+    );
+
+    let stats = eng.shutdown();
+    assert_eq!(stats.preemptions, preemptions, "stats fold the scheduler counter");
+    assert_eq!(
+        stats.requests + stats.cancelled + stats.timed_out + stats.failed,
+        24,
+        "terminal conservation: {stats:?}"
+    );
+    // Drop-audit: the engine (and every scheduler pool) is gone; the
+    // shared gauges must show every page recycled and none orphaned.
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(gauges.pages_used.load(Relaxed), 0, "pages still marked used");
+    assert_eq!(gauges.leaked.load(Relaxed), 0, "block-table pages leaked");
+    report(&format!(
+        "pool-exhaustion seed={SEED:#x} done={} cancelled={} preemptions={preemptions} \
+         pages_peak={} prefix_hits={}",
+        t.done,
+        t.cancelled,
+        gauges.pages_peak.load(Relaxed),
+        stats.prefix_hits
+    ));
 }
 
 /// Pinned seeds: run on every build so a regression bisects cleanly.

@@ -1,0 +1,195 @@
+//! Paged-vs-contiguous KV equivalence suite.
+//!
+//! The paged cache is the default serve path, so it must not merely be
+//! "close" to the contiguous [`KvCache`] — it must be **bit-identical**
+//! on every forward variant. Attention reads the cache only through
+//! per-position row slices ([`KvStore`]), so the page layout can never
+//! reorder a reduction; these tests pin that down across single-token
+//! decode, batched decode, one-shot and chunked prefill, for the dense
+//! model and two quantized schemes, plus the prefix-adoption and
+//! copy-on-write fork paths the scheduler uses.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use ams_quant::formats::registry::Scheme;
+use ams_quant::kv::{KvGauges, KvStore, PageGeometry, PagePool, PagedKvCache};
+use ams_quant::model::synthetic::synthetic_checkpoint;
+use ams_quant::model::transformer::Transformer;
+use ams_quant::model::ModelConfig;
+use ams_quant::quant::QuantConfig;
+
+fn dense_model() -> Transformer {
+    let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 41);
+    Transformer::from_checkpoint(&ck).unwrap()
+}
+
+/// Dense plus two packed schemes: equivalence must hold regardless of
+/// how the weights themselves are stored.
+fn model_variants() -> Vec<(String, Transformer)> {
+    let base = dense_model();
+    let mut out: Vec<(String, Transformer)> = ["fp6-e2m3", "fp4.25"]
+        .iter()
+        .map(|name| {
+            let q = base
+                .quantized(&QuantConfig::paper(Scheme::parse(name).unwrap()))
+                .unwrap();
+            (name.to_string(), q)
+        })
+        .collect();
+    out.insert(0, ("dense".to_string(), base));
+    out
+}
+
+/// A pool whose page size deliberately does not divide the prompt
+/// lengths used below, so partial trailing pages are always exercised.
+fn pool_for(m: &Transformer, page_size: usize, pages: usize) -> PagePool {
+    PagePool::new(
+        PageGeometry::of(&m.cfg, page_size),
+        pages,
+        Arc::new(KvGauges::default()),
+    )
+}
+
+#[track_caller]
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: logit {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+#[test]
+fn single_token_decode_is_bit_identical() {
+    for (name, m) in model_variants() {
+        let pool = pool_for(&m, 5, 16);
+        let mut paged = PagedKvCache::new(&pool);
+        let mut flat = m.new_cache();
+        let prompt = [3u32, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8];
+        let a = m.forward_prefill(&prompt, &mut paged);
+        let b = m.forward_prefill(&prompt, &mut flat);
+        assert_bits_eq(&a, &b, &format!("{name} prefill"));
+        // Greedy-decode a few steps; feed both paths the same token so
+        // any divergence is the cache's fault alone.
+        for step in 0..8 {
+            let pos = prompt.len() + step;
+            let tok = (step as u32 * 7 + 2) % m.cfg.vocab_size as u32;
+            let a = m.forward(tok, pos, &mut paged);
+            let b = m.forward(tok, pos, &mut flat);
+            assert_bits_eq(&a, &b, &format!("{name} decode step {step}"));
+        }
+        assert_eq!(paged.len(), flat.len);
+    }
+}
+
+#[test]
+fn batched_decode_is_bit_identical() {
+    for (name, m) in model_variants() {
+        let pool = pool_for(&m, 5, 32);
+        let prompts: [&[u32]; 3] = [&[1, 2, 3], &[9, 8, 7, 6, 5, 4, 3], &[11]];
+        let mut paged: Vec<PagedKvCache> = Vec::new();
+        let mut flat = Vec::new();
+        for p in prompts {
+            let mut pc = PagedKvCache::new(&pool);
+            let mut fc = m.new_cache();
+            m.forward_prefill(p, &mut pc);
+            m.forward_prefill(p, &mut fc);
+            paged.push(pc);
+            flat.push(fc);
+        }
+        let mut scratch_a = m.new_scratch();
+        let mut scratch_b = m.new_scratch();
+        for step in 0..6u32 {
+            let toks: Vec<u32> = (0..3).map(|i| (step * 3 + i) % 60).collect();
+            let a = m.forward_batch_with(&toks, &mut paged, &mut scratch_a).clone();
+            let b = m.forward_batch_with(&toks, &mut flat, &mut scratch_b).clone();
+            assert_bits_eq(a.data(), b.data(), &format!("{name} batch step {step}"));
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_is_bit_identical() {
+    for (name, m) in model_variants() {
+        let pool = pool_for(&m, 4, 16);
+        let prompt = [2u32, 7, 1, 8, 2, 8, 1, 8, 2, 8, 4, 5, 9, 0];
+        let mut scratch = m.new_scratch();
+        let mut paged = PagedKvCache::new(&pool);
+        // Chunk boundaries chosen to straddle page boundaries (4) in
+        // both directions.
+        m.forward_prefill_chunk(&prompt[..5], &mut paged, &mut scratch);
+        m.forward_prefill_chunk(&prompt[5..11], &mut paged, &mut scratch);
+        let a = m.forward_prefill_with(&prompt[11..], &mut paged, &mut scratch).to_vec();
+        let mut flat = m.new_cache();
+        let b = m.forward_prefill_with(&prompt, &mut flat, &mut scratch).to_vec();
+        assert_bits_eq(&a, &b, &format!("{name} chunked prefill"));
+        // And decode once off the chunked cache.
+        let c = m.forward(13, prompt.len(), &mut paged);
+        let d = m.forward(13, prompt.len(), &mut flat);
+        assert_bits_eq(&c, &d, &format!("{name} post-chunk decode"));
+    }
+}
+
+#[test]
+fn adopted_prefix_skips_prefill_and_stays_bit_identical() {
+    let m = dense_model();
+    let ps = 4;
+    let pool = pool_for(&m, ps, 16);
+    let prompt = [5u32, 3, 5, 8, 9, 7, 9, 3, 2, 3]; // 2 full pages + 2
+    let mut first = PagedKvCache::new(&pool);
+    m.forward_prefill(&prompt, &mut first);
+    let full = prompt.len() / ps;
+    pool.commit_prefix(&prompt[..full * ps], &first.table()[..full]);
+
+    // A second identical prompt adopts the committed pages — the same
+    // physical memory, no recompute — and prefills only the tail.
+    let shared = pool.shared_prefix(&prompt, (prompt.len() - 1) / ps);
+    assert_eq!(shared.len(), 2, "both full pages adopted");
+    let mut second = PagedKvCache::new(&pool);
+    second.adopt_prefix(shared);
+    assert_eq!(second.len(), full * ps);
+    assert!(Rc::ptr_eq(&first.table()[0], &second.table()[0]));
+    assert!(Rc::ptr_eq(&first.table()[1], &second.table()[1]));
+    let a = m.forward_prefill(&prompt[full * ps..], &mut second);
+
+    // Reference: the same prompt through a contiguous cache.
+    let mut flat = m.new_cache();
+    let b = m.forward_prefill(&prompt, &mut flat);
+    assert_bits_eq(&a, &b, "adopted-prefix prefill");
+    let c = m.forward(17, prompt.len(), &mut second);
+    let d = m.forward(17, prompt.len(), &mut flat);
+    assert_bits_eq(&c, &d, "adopted-prefix decode");
+    // Writing the tail never forked the shared pages.
+    assert!(Rc::ptr_eq(&first.table()[0], &second.table()[0]));
+}
+
+#[test]
+fn forked_caches_diverge_by_cow_without_corruption() {
+    let m = dense_model();
+    let pool = pool_for(&m, 4, 16);
+    let prompt = [1u32, 2, 3, 4, 5, 6]; // ends mid-page
+    let mut a = PagedKvCache::new(&pool);
+    m.forward_prefill(&prompt, &mut a);
+    let mut b = a.fork();
+    assert!(Rc::ptr_eq(&a.table()[1], &b.table()[1]));
+
+    // Divergent decode: both write position 6 (inside the shared last
+    // page), so the writer must COW-fork it rather than clobber the
+    // other sequence's rows.
+    let la = m.forward(30, prompt.len(), &mut a);
+    let lb = m.forward(40, prompt.len(), &mut b);
+    assert!(!Rc::ptr_eq(&a.table()[1], &b.table()[1]), "COW split the page");
+    assert!(Rc::ptr_eq(&a.table()[0], &b.table()[0]), "untouched page still shared");
+
+    // Each fork must match an independent from-scratch run bitwise.
+    for (tok, got) in [(30u32, la), (40u32, lb)] {
+        let mut flat = m.new_cache();
+        m.forward_prefill(&prompt, &mut flat);
+        let want = m.forward(tok, prompt.len(), &mut flat);
+        assert_bits_eq(&got, &want, &format!("fork token {tok}"));
+    }
+}
