@@ -7,7 +7,10 @@
 //! diffable across commits, like `BENCH_GEMM.json` for the kernels.
 //! Schema v2 adds paged-KV columns per entry and a `paged_admission`
 //! probe: at fixed KV memory (a pool sized for 2 worst-case sequences)
-//! the paged path must admit more than 2 concurrent sequences.
+//! the paged path must admit more than 2 concurrent sequences. Schema
+//! v3 adds a `spec_decode` probe: a speculative engine (draft depth
+//! ≥ 2) on a hi/lo-split scheme must land at least one draft — the
+//! acceptance rate and draft economics are recorded for diffing.
 //!
 //! Flags: `--steps N` decode steps per iteration, `--serve-requests N`,
 //! `--serve-max-batch B`, `--serve-max-new-tokens T`, `--json-serve PATH`.
@@ -170,10 +173,11 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
     println!("{}", table.to_markdown());
 
     results.push(paged_admission(base, quick));
+    results.push(spec_decode_probe(base, quick));
 
     let mut root = Json::obj();
     root.set("bench", Json::Str("serve".into()))
-        .set("schema_version", Json::Num(2.0))
+        .set("schema_version", Json::Num(3.0))
         .set("requests", Json::Num(n_requests as f64))
         .set("max_batch", Json::Num(max_batch as f64))
         .set("max_new_tokens", Json::Num(max_new as f64))
@@ -249,6 +253,76 @@ fn paged_admission(base: &Transformer, quick: bool) -> Json {
         .set("kv_page_size", Json::Num(page_size as f64))
         .set("kv_pool_pages", Json::Num(pool_pages as f64))
         .set("worst_case_admissible", Json::Num(worst_case_admissible as f64))
+        .set("kv_pages_peak", Json::Num(kv_pages_peak as f64))
+        .set("prefix_hits", Json::Num(stats.prefix_hits as f64))
+        .set("preemptions", Json::Num(stats.preemptions as f64))
+        .set("peak_concurrency", Json::Num(stats.peak_concurrency as f64));
+    entry
+}
+
+/// Schema v3 probe: self-speculative decoding economics. A speculative
+/// engine (draft depth ≥ 2) serves a greedy workload on a hi/lo-split
+/// scheme; the verify pass must accept at least one draft — CI asserts
+/// `acceptance_rate > 0` — and the entry records the draft/accept
+/// counts so speculation regressions are diffable across commits.
+fn spec_decode_probe(base: &Transformer, quick: bool) -> Json {
+    let draft_depth = 3usize;
+    let n_requests = if quick { 6 } else { 12 };
+    let max_new = if quick { 12 } else { 24 };
+    let model =
+        base.quantized(&QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap())).unwrap();
+    let vocab = model.cfg.vocab_size as u32;
+    let eng = Engine::builder()
+        .max_batch(4)
+        .speculative(true)
+        .draft_depth(draft_depth)
+        .seed(1)
+        .build(model);
+    let wall = Timer::start();
+    let handles: Vec<RequestHandle> = (0..n_requests as u64)
+        .map(|id| {
+            let prompt: Vec<u32> =
+                (0..6).map(|j| (id as u32 * 7 + j * 3 + 1) % vocab).collect();
+            eng.submit(GenRequest::greedy(id, prompt, max_new)).expect("submit")
+        })
+        .collect();
+    let done = handles.into_iter().filter_map(|h| h.wait()).count();
+    let wall_s = wall.elapsed_secs();
+    eng.drain();
+    let kv_pages_peak = eng.kv_pages_peak();
+    let stats = eng.shutdown();
+    assert_eq!(done, n_requests, "spec_decode: all requests complete");
+    assert!(stats.drafted > 0, "spec_decode: speculative rounds must run");
+    assert!(
+        stats.acceptance_rate() > 0.0,
+        "spec_decode: the hi stream landed no drafts (drafted {}, accepted {})",
+        stats.drafted,
+        stats.accepted
+    );
+
+    println!(
+        "# spec_decode: fp6-e2m3 depth={draft_depth} drafted={} accepted={} \
+         acceptance={:.3} tok/s={:.1}",
+        stats.drafted,
+        stats.accepted,
+        stats.acceptance_rate(),
+        stats.tokens_generated as f64 / wall_s
+    );
+    let mut entry = Json::obj();
+    entry
+        .set("name", Json::Str("serve/spec_decode".into()))
+        .set("scheme", Json::Str("fp6-e2m3".into()))
+        .set("requests", Json::Num(n_requests as f64))
+        .set("max_batch", Json::Num(4.0))
+        .set("max_new_tokens", Json::Num(max_new as f64))
+        .set("wall_s", Json::Num(wall_s))
+        .set("tokens_per_s", Json::Num(stats.tokens_generated as f64 / wall_s))
+        .set("draft_depth", Json::Num(draft_depth as f64))
+        .set("drafted", Json::Num(stats.drafted as f64))
+        .set("accepted", Json::Num(stats.accepted as f64))
+        .set("acceptance_rate", Json::Num(stats.acceptance_rate()))
+        .set("kv_page_size", Json::Num(16.0))
+        .set("kv_pool_pages", Json::Num(0.0))
         .set("kv_pages_peak", Json::Num(kv_pages_peak as f64))
         .set("prefix_hits", Json::Num(stats.prefix_hits as f64))
         .set("preemptions", Json::Num(stats.preemptions as f64))

@@ -40,6 +40,10 @@ pub struct LayerChoice {
     pub bits_per_weight: f64,
     pub act_sqnr_db: f64,
     pub weight_mse: f64,
+    /// Weight-space SQNR of the chosen config's hi-stream truncated
+    /// reconstruction (the speculative draft weights); NaN when the
+    /// layout has no hi/lo split.
+    pub hi_sqnr_db: f64,
     /// Every candidate considered, ascending bit cost.
     pub candidates: Vec<CandidateSummary>,
 }
@@ -84,6 +88,7 @@ impl CalibReport {
                     bits_per_weight: c.bits_per_weight,
                     act_sqnr_db: c.act_sqnr_db,
                     weight_mse: c.weight_mse,
+                    hi_sqnr_db: c.hi_sqnr_db,
                     candidates: l
                         .candidates
                         .iter()
@@ -187,7 +192,7 @@ impl CalibReport {
                 "Calibrated plan — budget {:.2} bits/w, achieved {:.3}",
                 self.budget_bits, self.achieved_bits
             ),
-            &["layer", "role", "scheme", "bits/w", "act SQNR dB", "weight MSE"],
+            &["layer", "role", "scheme", "bits/w", "act SQNR dB", "weight MSE", "hi SQNR dB"],
         );
         for l in &self.layers {
             t.row(vec![
@@ -197,6 +202,9 @@ impl CalibReport {
                 f(l.bits_per_weight, 3),
                 f(l.act_sqnr_db, 2),
                 format!("{:.3e}", l.weight_mse),
+                // "-" = no hi/lo split; the hi-only draft decode cannot
+                // serve the chosen layout.
+                if l.hi_sqnr_db.is_nan() { "-".to_string() } else { f(l.hi_sqnr_db, 2) },
             ]);
         }
         t

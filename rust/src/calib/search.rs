@@ -146,6 +146,7 @@ mod tests {
             act_noise: noise,
             act_sqnr_db: 0.0,
             weight_mse: noise,
+            hi_sqnr_db: f64::NAN,
         }
     }
 
@@ -241,6 +242,7 @@ mod tests {
             act_noise: noise,
             act_sqnr_db: 0.0,
             weight_mse: noise,
+            hi_sqnr_db: f64::NAN,
         };
         // fp4 + PerGroup(32) prices like fp5 per-channel (4 + 32/32 ≈ 5);
         // on the outlier layer it is the low-noise candidate at that

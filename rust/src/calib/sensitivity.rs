@@ -45,6 +45,10 @@ pub struct CandidateScore {
     /// Plain weight-space reconstruction MSE (the old ranking signal,
     /// kept for comparison in the report).
     pub weight_mse: f64,
+    /// Weight-space SQNR (dB) of the hi-stream truncated reconstruction
+    /// — the effective draft weights of the speculative decode path.
+    /// NaN when the candidate's layout has no hi/lo split.
+    pub hi_sqnr_db: f64,
 }
 
 /// A layer's full sensitivity profile: its activation-weighted signal
@@ -107,12 +111,16 @@ pub fn score_layer(
         let bits_per_weight =
             ((packed.payload_bytes() + packed.scale_bytes()) * 8) as f64 / (rows * cols) as f64;
         let act_sqnr_db = sqnr_db(act_signal, act_noise);
+        let hi_sqnr_db = crate::gemm::QuantLinear::new(packed)
+            .hi_dequantize()
+            .map_or(f64::NAN, |hi| crate::quant::metrics::sqnr_db(w, &hi));
         scored.push(CandidateScore {
             config: *cfg,
             bits_per_weight,
             act_noise,
             act_sqnr_db,
             weight_mse: weight_sse / (rows * cols) as f64,
+            hi_sqnr_db,
         });
     }
     // Ascending bit cost; ties broken by lower noise so the search's

@@ -45,6 +45,7 @@ use super::failpoint::{self, FailPoints};
 use super::{Event, GenRequest, GenResponse, Priority};
 use crate::kv::{AsKvStore, KvGauges, KvStore, PageGeometry, PagePool, PagedKvCache};
 use crate::model::transformer::{ForwardScratch, Transformer};
+use crate::spec::{Controller, SeqSpec, SpecPolicy};
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
 use std::collections::VecDeque;
@@ -71,6 +72,10 @@ pub struct BatchPolicy {
     /// preemption never triggers; a smaller explicit pool admits on
     /// actual consumption and preempts under pressure.
     pub kv_pool_pages: usize,
+    /// Self-speculative decoding knobs. When enabled, greedy sequences
+    /// decode through draft/verify rounds (token-identical to plain
+    /// greedy); non-greedy samplers keep the plain batched path.
+    pub spec: SpecPolicy,
 }
 
 impl Default for BatchPolicy {
@@ -81,6 +86,7 @@ impl Default for BatchPolicy {
             prefill_chunk: 128,
             kv_page_size: 16,
             kv_pool_pages: 0,
+            spec: SpecPolicy::default(),
         }
     }
 }
@@ -286,6 +292,9 @@ struct Active {
     /// sequence first, so long-running work closest to completion is
     /// protected.
     seq_no: u64,
+    /// Adaptive speculative draft-depth state (idle unless
+    /// [`BatchPolicy::spec`] is enabled and the sampler is greedy).
+    spec: SeqSpec,
 }
 
 /// A sequence mid-prefill: it owns a batch slot and a KV cache but has
@@ -379,6 +388,9 @@ pub struct Scheduler {
     pub preemptions: u64,
     /// Highest batch occupancy (active + prefilling) observed.
     pub peak_batch: usize,
+    /// Speculative-decoding controller: reusable draft/verify buffers
+    /// plus the replica's `drafted`/`accepted` counters.
+    pub spec: Controller,
 }
 
 impl Scheduler {
@@ -414,6 +426,7 @@ impl Scheduler {
             prefix_hits: 0,
             preemptions: 0,
             peak_batch: 0,
+            spec: Controller::new(),
         }
     }
 
@@ -570,6 +583,7 @@ impl Scheduler {
                     ttft_s,
                     steps: 1,
                     seq_no,
+                    spec: SeqSpec::new(&self.policy.spec),
                 }
             }
             Some(rs) => {
@@ -587,6 +601,8 @@ impl Scheduler {
                     ttft_s: rs.ttft_s,
                     steps: rs.steps,
                     seq_no,
+                    // A resumed sequence restarts its depth adaptation.
+                    spec: SeqSpec::new(&self.policy.spec),
                 }
             }
         };
@@ -963,6 +979,12 @@ impl Scheduler {
             return out;
         }
 
+        if self.policy.spec.enabled {
+            self.spec_decode();
+            self.retire(&mut out);
+            return out;
+        }
+
         self.tok_buf.clear();
         self.tok_buf.extend(self.active.iter().map(|a| a.next_token));
         // Caches are decoded in place through `Active: AsKvStore` — no
@@ -985,6 +1007,116 @@ impl Scheduler {
         }
         self.retire(&mut out);
         out
+    }
+
+    /// Speculative decode step: one draft→verify→accept round per
+    /// greedy sequence ([`Controller::round`]); non-greedy samplers
+    /// fall back to plain batched decode ([`Self::decode_plain_rest`])
+    /// because the round's token identity only holds under argmax.
+    ///
+    /// Each round's draft depth is the sequence's adaptive depth capped
+    /// by its remaining token budget, the context room and KV page
+    /// availability — and the round's pages are reserved up front, so
+    /// draft row writes cannot fail mid-round. `ensure_decode_pages`
+    /// already guaranteed one position per sequence, so a round always
+    /// runs at `k ≥ 1` even with the pool drained.
+    fn spec_decode(&mut self) {
+        let fp = Arc::clone(&self.failpoints);
+        let tag = self.fp_tag;
+        let eos = self.policy.eos;
+        let spec_policy = self.policy.spec;
+        let mut emitted_total = 0u64;
+        let mut plain_rest = false;
+        for idx in 0..self.active.len() {
+            if !self.active[idx].sub.req.sampler.is_greedy() {
+                plain_rest = true;
+                continue;
+            }
+            let (len, mut k) = {
+                let a = &self.active[idx];
+                let budget = a.sub.req.max_new_tokens.saturating_sub(a.generated.len());
+                let len = a.cache.len();
+                let room = self.model.cfg.max_seq.saturating_sub(len);
+                (len, a.spec.depth().min(budget).min(room))
+            };
+            if k == 0 {
+                continue; // retired by the next retire() pass
+            }
+            while k > 1 && self.active[idx].cache.pages_needed(len + k) > self.pool.available() {
+                k -= 1;
+            }
+            let a = &mut self.active[idx];
+            a.cache.reserve(len + k).expect("pages available after ensure");
+            let sampler = a.sub.req.sampler;
+            let rng = &mut self.rng;
+            let start = a.generated.len();
+            let stats = self.spec.round(
+                &self.model,
+                &mut a.cache,
+                &mut self.scratch,
+                a.next_token,
+                k,
+                eos,
+                &mut |row| sampler.sample(row, rng),
+                &mut || {
+                    fp.hit(failpoint::VERIFY, tag);
+                },
+                &mut a.generated,
+            );
+            a.next_token = *a.generated.last().expect("round emits at least one token");
+            a.steps += 1;
+            for (j, &t) in a.generated[start..].iter().enumerate() {
+                a.sub.emit(Event::Token {
+                    id: a.sub.id(),
+                    token: t,
+                    index: start + j,
+                });
+            }
+            a.spec.observe(&stats, &spec_policy);
+            emitted_total += stats.emitted as u64;
+        }
+        let rest = if plain_rest { self.decode_plain_rest() } else { 0 };
+        if emitted_total > 0 || rest > 0 {
+            self.steps_executed += 1;
+            self.batched_tokens += emitted_total;
+        }
+    }
+
+    /// Plain batched decode over the non-greedy residue of the batch in
+    /// spec mode. Returns the number of sequences decoded.
+    fn decode_plain_rest(&mut self) -> u64 {
+        self.tok_buf.clear();
+        self.tok_buf.extend(
+            self.active
+                .iter()
+                .filter(|a| !a.sub.req.sampler.is_greedy())
+                .map(|a| a.next_token),
+        );
+        if self.tok_buf.is_empty() {
+            return 0;
+        }
+        let mut rest: Vec<&mut Active> = self
+            .active
+            .iter_mut()
+            .filter(|a| !a.sub.req.sampler.is_greedy())
+            .collect();
+        let logits = self
+            .model
+            .forward_batch_with(&self.tok_buf, &mut rest, &mut self.scratch);
+        for (i, a) in rest.iter_mut().enumerate() {
+            let t = a.sub.req.sampler.sample(logits.row(i), &mut self.rng);
+            a.generated.push(t);
+            a.next_token = t;
+            a.steps += 1;
+            a.sub.emit(Event::Token {
+                id: a.sub.id(),
+                token: t,
+                index: a.generated.len() - 1,
+            });
+        }
+        let n = self.tok_buf.len() as u64;
+        self.batched_tokens += n;
+        n
     }
 
     fn retire(&mut self, out: &mut Vec<Outcome>) {

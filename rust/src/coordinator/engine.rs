@@ -351,6 +351,24 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable self-speculative decoding: greedy sequences draft tokens
+    /// from the hi mantissa stream and verify them in one full-precision
+    /// batched pass per round (token-identical to plain greedy decode;
+    /// see [`crate::spec`]). Non-greedy samplers keep the plain path.
+    pub fn speculative(mut self, yes: bool) -> Self {
+        self.batch.spec.enabled = yes;
+        self
+    }
+
+    /// Baseline speculative draft depth `k` (default 4). The adaptive
+    /// controller floats each sequence's depth in `[1, 2k]` from its
+    /// running acceptance rate.
+    pub fn draft_depth(mut self, k: usize) -> Self {
+        assert!(k > 0, "draft depth must be positive");
+        self.batch.spec.draft_depth = k;
+        self
+    }
+
     /// Replica dispatch policy (default least-outstanding).
     pub fn dispatch(mut self, policy: DispatchPolicy) -> Self {
         self.dispatch = policy;
@@ -553,6 +571,8 @@ fn replica_main(ctx: WorkerCtx) -> ServeStats {
         stats.prefix_hits += sched.prefix_hits;
         stats.preemptions += sched.preemptions;
         stats.peak_concurrency = stats.peak_concurrency.max(sched.peak_batch);
+        stats.drafted += sched.spec.drafted;
+        stats.accepted += sched.spec.accepted;
         match run {
             Ok(()) => break, // queue closed and drained
             Err(payload) => {

@@ -39,6 +39,13 @@ pub const QUEUE_PUSH: &str = "queue-push";
 /// exhaustion without actually shrinking the pool.
 pub const POOL: &str = "kv-pool";
 
+/// Site name: hit after a speculative round's draft pass and before its
+/// verify forward (tag = replica index). Arm with a panic action to
+/// crash a replica mid-round, with draft-quality KV rows written and
+/// the frontier rewound — the chaos suite asserts no page leaks and
+/// exactly one terminal event per request through this window.
+pub const VERIFY: &str = "spec-verify";
+
 #[cfg(any(test, feature = "failpoints"))]
 mod imp {
     use crate::util::prng::Rng;

@@ -223,9 +223,24 @@ pub struct ServeStats {
     /// High-water mark of sequences concurrently admitted (active +
     /// prefilling) on any single replica.
     pub peak_concurrency: usize,
+    /// Tokens drafted by speculative hi-stream rounds (0 unless
+    /// speculative decoding is enabled).
+    pub drafted: u64,
+    /// Drafted tokens the full-precision verify pass accepted.
+    pub accepted: u64,
 }
 
 impl ServeStats {
+    /// Fraction of drafted tokens accepted by verify (0.0 when nothing
+    /// was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted > 0 {
+            self.accepted as f64 / self.drafted as f64
+        } else {
+            0.0
+        }
+    }
+
     pub fn throughput_tps(&self) -> f64 {
         if self.wall_s > 0.0 {
             self.tokens_generated as f64 / self.wall_s
@@ -260,5 +275,7 @@ impl ServeStats {
         self.prefix_hits += other.prefix_hits;
         self.preemptions += other.preemptions;
         self.peak_concurrency = self.peak_concurrency.max(other.peak_concurrency);
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
     }
 }

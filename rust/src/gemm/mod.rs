@@ -95,6 +95,22 @@ impl GemmScratch {
     }
 }
 
+/// Which precision the decode streams at — the draft/verify axis of the
+/// self-speculative path (see [`crate::spec`]). `HiOnly` reads only the
+/// high-nibble stream of a segmented layout, zero-filling the low
+/// mantissa bits and folding the least-squares [`QuantLinear::hi_rescale`]
+/// correction into the scale; layouts without a hi/lo split (FP16, bytes,
+/// FP5.33, codes, tables) fall back to `Full` decode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodePrecision {
+    /// Full-precision decode through both word streams (the verify path).
+    #[default]
+    Full,
+    /// Hi-stream-only truncated decode (the draft path): ~half the weight
+    /// traffic on the segmented layouts, no lo-stream reads at all.
+    HiOnly,
+}
+
 /// How the kernels fold a tensor's per-group scales into the decode —
 /// resolved once at [`QuantLinear`] construction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -202,6 +218,35 @@ fn stream_direct_serves(kernel: RowKernel, scheme: Scheme, g: usize) -> bool {
         RowKernel::Segmented(_, simd::LowBits::PerCode1 | simd::LowBits::PerCode2) => true,
         RowKernel::Segmented(_, simd::LowBits::Group(k)) => k == 2 || k == 4,
         _ => false,
+    }
+}
+
+/// Bits the low stream contributes to each code of a segmented layout.
+#[inline]
+fn low_width_of(low: simd::LowBits) -> u32 {
+    match low {
+        simd::LowBits::PerCode2 => 2,
+        _ => 1,
+    }
+}
+
+/// Least-squares scalar correction for the hi-only truncated decode:
+/// over a uniform code prior, the `a` minimizing
+/// `Σ_c (table[c] - a · table[(c >> w) << w])²` is
+/// `Σ full·trunc / Σ trunc²`. Mantissa truncation always rounds toward
+/// zero, so `a` is slightly above 1 — it recenters the truncated values
+/// on the full-precision ones, which measurably lifts draft acceptance.
+fn hi_rescale_for(table: &[f32], low_width: u32) -> f32 {
+    let (mut num, mut den) = (0f64, 0f64);
+    for (c, &full) in table.iter().enumerate() {
+        let trunc = f64::from(table[(c >> low_width) << low_width]);
+        num += f64::from(full) * trunc;
+        den += trunc * trunc;
+    }
+    if den > 0.0 {
+        (num / den) as f32
+    } else {
+        1.0
     }
 }
 
@@ -378,6 +423,11 @@ pub struct QuantLinear {
     kernel: RowKernel,
     /// `Some` iff the tensor carries per-group scales.
     group_path: Option<GroupDecodePath>,
+    /// Least-squares multiplicative correction for the hi-only truncated
+    /// decode, computed once from the dequant table: the `a` minimizing
+    /// `Σ_codes (full(c) - a · trunc(c))²`. Folded into the row/group
+    /// scale on the `HiOnly` path; 1.0 for layouts without a hi/lo split.
+    hi_rescale: f32,
 }
 
 /// MACs below which parallel dispatch is not worth the pool hand-off.
@@ -394,11 +444,16 @@ impl QuantLinear {
                 GroupDecodePath::Buffered
             }
         });
+        let hi_rescale = match kernel {
+            RowKernel::Segmented(_, low) => hi_rescale_for(&table, low_width_of(low)),
+            _ => 1.0,
+        };
         QuantLinear {
             packed,
             table,
             kernel,
             group_path,
+            hi_rescale,
         }
     }
 
@@ -417,6 +472,54 @@ impl QuantLinear {
         if self.group_path.is_some() {
             self.group_path = Some(GroupDecodePath::Buffered);
         }
+    }
+
+    /// Whether the hi-only truncated decode serves this tensor: the
+    /// kernel must be a two-stream segmented family, and per-group
+    /// tensors additionally need `g % 16 == 0` so every group's first
+    /// code starts word-aligned in the hi-nibble stream. Unlike the
+    /// stream-direct gate there is no shared-bit lane constraint — the
+    /// hi path reads no shared bits, so k=3 layouts serve too.
+    pub fn hi_only_serves(&self) -> bool {
+        matches!(self.kernel, RowKernel::Segmented(..))
+            && self
+                .packed
+                .group_scales
+                .as_ref()
+                .map_or(true, |gs| gs.group_size % 16 == 0)
+    }
+
+    /// The least-squares hi-only scale correction (1.0 when
+    /// [`QuantLinear::hi_only_serves`] is false).
+    pub fn hi_rescale(&self) -> f32 {
+        self.hi_rescale
+    }
+
+    /// Reference dequantization through the hi-only truncated decode —
+    /// the effective weights the speculative draft forward multiplies
+    /// by: low mantissa bits zero-filled, [`QuantLinear::hi_rescale`]
+    /// folded into the scale. `None` when the layout has no hi/lo split
+    /// ([`QuantLinear::hi_only_serves`] is false).
+    pub fn hi_dequantize(&self) -> Option<Tensor> {
+        if !self.hi_only_serves() {
+            return None;
+        }
+        let low = match self.kernel {
+            RowKernel::Segmented(_, low) => low_width_of(low),
+            _ => unreachable!("hi_only_serves implies a segmented kernel"),
+        };
+        let p = &self.packed;
+        let mut out = Tensor::zeros(&[p.rows, p.cols]);
+        let mut codes = vec![0u16; p.cols];
+        for r in 0..p.rows {
+            crate::pack::unpack_row(p.scheme, p.row_words(r), p.cols, &mut codes);
+            let orow = out.row_mut(r);
+            for (c, o) in orow.iter_mut().enumerate() {
+                let trunc = self.table[((codes[c] >> low) << low) as usize];
+                *o = trunc * self.hi_rescale * p.scale_for(r, c);
+            }
+        }
+        Some(out)
     }
 
     pub fn rows(&self) -> usize {
@@ -644,6 +747,131 @@ impl QuantLinear {
             self.gemm_parallel_into(x, y, threads, scratch);
         } else {
             self.gemm_into(x, y, scratch);
+        }
+    }
+
+    /// Precision-dispatched GEMV: `Full` takes the normal auto path;
+    /// `HiOnly` streams only the hi-nibble words where the layout has a
+    /// hi/lo split ([`QuantLinear::hi_only_serves`]) and silently falls
+    /// back to full decode everywhere else — so a mixed-scheme model can
+    /// run a draft forward end to end.
+    pub fn gemv_prec(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        scratch: &mut GemmScratch,
+        prec: DecodePrecision,
+    ) {
+        if prec == DecodePrecision::HiOnly && self.hi_only_serves() {
+            self.gemv_hi(x, y);
+        } else {
+            self.gemv_auto(x, y, scratch);
+        }
+    }
+
+    /// Precision-dispatched batched product (see [`QuantLinear::gemv_prec`]).
+    pub fn gemm_prec_into(
+        &self,
+        x: &Tensor,
+        y: &mut Tensor,
+        scratch: &mut GemmScratch,
+        prec: DecodePrecision,
+    ) {
+        if prec == DecodePrecision::HiOnly && self.hi_only_serves() {
+            self.gemm_hi_into(x, y, scratch);
+        } else {
+            self.gemm_auto_into(x, y, scratch);
+        }
+    }
+
+    /// Hi-only GEMV: truncated decode from the hi-nibble stream alone,
+    /// `hi_rescale` folded into the row/group scale. Reads no lo-stream
+    /// words (the segment kernel takes none).
+    fn gemv_hi(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.packed.cols);
+        assert_eq!(y.len(), self.packed.rows);
+        for r in 0..self.packed.rows {
+            y[r] = self.hi_row_tile::<1>(r, &[x])[0];
+        }
+    }
+
+    /// Hi-only batched product across the same 8/4/2/1 tile ladder as the
+    /// full path.
+    fn gemm_hi_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
+        assert_eq!(x.ndim(), 2);
+        assert_eq!(x.cols(), self.packed.cols);
+        let batch = x.rows();
+        let rows = self.packed.rows;
+        assert_eq!(y.shape(), &[batch, rows]);
+        let yt = &mut scratch.yt;
+        yt.clear();
+        yt.resize(rows * batch, 0.0);
+        for r in 0..rows {
+            let orow = &mut yt[r * batch..(r + 1) * batch];
+            let mut b = 0usize;
+            while b < batch {
+                let rem = batch - b;
+                let take = if rem >= 8 {
+                    8
+                } else if rem >= 4 {
+                    4
+                } else if rem >= 2 {
+                    2
+                } else {
+                    1
+                };
+                match take {
+                    8 => self.hi_tile_into::<8>(r, x, b, &mut orow[b..b + 8]),
+                    4 => self.hi_tile_into::<4>(r, x, b, &mut orow[b..b + 4]),
+                    2 => self.hi_tile_into::<2>(r, x, b, &mut orow[b..b + 2]),
+                    _ => self.hi_tile_into::<1>(r, x, b, &mut orow[b..b + 1]),
+                }
+                b += take;
+            }
+        }
+        transpose_into(yt, rows, batch, y.data_mut());
+    }
+
+    #[inline]
+    fn hi_tile_into<const T: usize>(&self, r: usize, x: &Tensor, b0: usize, out: &mut [f32]) {
+        let xs: [&[f32]; T] = core::array::from_fn(|j| x.row(b0 + j));
+        let d = self.hi_row_tile::<T>(r, &xs);
+        out[..T].copy_from_slice(&d);
+    }
+
+    /// One hi-only row × T-column tile: per-channel rows in one segment
+    /// dot, per-group rows one segment per group with the group scale
+    /// folded in — mirroring [`QuantLinear::stream_grouped_dot`], but
+    /// sliced only through the hi stream (group starts are word-aligned
+    /// by the `g % 16 == 0` serve gate).
+    #[inline]
+    fn hi_row_tile<const T: usize>(&self, r: usize, xs: &[&[f32]; T]) -> [f32; T] {
+        let cols = self.packed.cols;
+        let RowKernel::Segmented(fmt, low) = self.kernel else {
+            unreachable!("hi-only path admits only segmented kernels");
+        };
+        let lw = low_width_of(low);
+        let (hi, _lo) = self.packed.row_streams(r);
+        match &self.packed.group_scales {
+            None => {
+                let d = simd::dotn_segmented_hi(hi, cols, xs, fmt, lw);
+                let s = self.packed.scales[r] * self.hi_rescale;
+                core::array::from_fn(|j| d[j] * s)
+            }
+            Some(gs) => {
+                let g = gs.group_size;
+                let mut acc = [0f32; T];
+                for (gi, &s) in gs.row(r).iter().enumerate() {
+                    let c0 = gi * g;
+                    let len = g.min(cols - c0);
+                    let seg: [&[f32]; T] = core::array::from_fn(|j| &xs[j][c0..c0 + len]);
+                    let d = simd::dotn_segmented_hi(&hi[c0 / 4..], len, &seg, fmt, lw);
+                    for j in 0..T {
+                        acc[j] += d[j] * s;
+                    }
+                }
+                core::array::from_fn(|j| acc[j] * self.hi_rescale)
+            }
         }
     }
 
@@ -1208,6 +1436,155 @@ mod tests {
             let fresh_c = channel.gemm(&x);
             let reused_c = channel.gemm_with(&x, &mut scratch);
             assert_eq!(fresh_c, reused_c, "channel batch={batch}");
+        }
+    }
+
+    /// Which tensors the hi-only draft decode serves: every two-stream
+    /// segmented layout (including k=3, which the stream-direct full path
+    /// rejects), per-channel or at word-aligned g; single-stream layouts
+    /// never.
+    #[test]
+    fn hi_only_serve_resolution() {
+        for name in ["fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4.5", "fp4.33", "fp4.25"] {
+            assert!(make_linear(name, 4, 64, 1).hi_only_serves(), "{name} pc");
+            assert!(make_linear_grouped(name, 4, 128, 32, 1).hi_only_serves(), "{name} g32");
+            assert!(!make_linear_grouped(name, 4, 120, 24, 1).hi_only_serves(), "{name} g24");
+        }
+        for name in ["fp16", "fp8", "int8", "int4", "fp4-e2m1", "fp5.33", "ams-e3m2-k4"] {
+            assert!(!make_linear(name, 4, 64, 1).hi_only_serves(), "{name}");
+        }
+    }
+
+    /// Truncated-decode oracle: unpack the codes, zero the low mantissa
+    /// bits, decode through the table at the tensor's scale granularity,
+    /// apply `hi_rescale`. Kernel-independent.
+    fn hi_reference(lin: &QuantLinear, x: &[f32]) -> Vec<f32> {
+        let w = match lin.kernel {
+            RowKernel::Segmented(_, low) => low_width_of(low),
+            _ => panic!("hi reference needs a segmented layout"),
+        };
+        let mut y = vec![0f32; lin.packed.rows];
+        let mut codes = vec![0u16; lin.packed.cols];
+        for r in 0..lin.packed.rows {
+            crate::pack::unpack_row(lin.packed.scheme, lin.packed.row_words(r), lin.packed.cols, &mut codes);
+            y[r] = codes
+                .iter()
+                .enumerate()
+                .map(|(c, &code)| {
+                    let trunc = (code >> w) << w;
+                    lin.table[trunc as usize] * lin.packed.scale_for(r, c) * x[c]
+                })
+                .sum::<f32>()
+                * lin.hi_rescale;
+        }
+        y
+    }
+
+    /// The hi-only path equals the truncated-decode oracle for every
+    /// segmented scheme, per-channel and grouped, and the batched hi path
+    /// is bit-identical to per-row hi GEMV (same tile reduction order).
+    #[test]
+    fn hi_only_matches_truncated_oracle() {
+        let mut rng = Rng::new(300);
+        for name in ["fp6-e2m3", "fp6-e3m2", "fp5-e2m2", "fp4.5", "fp4.33", "fp4.25"] {
+            for grouped in [false, true] {
+                let (rows, cols) = (7usize, 150usize);
+                let lin = if grouped {
+                    make_linear_grouped(name, rows, cols, 32, 11)
+                } else {
+                    make_linear(name, rows, cols, 11)
+                };
+                assert!(lin.hi_only_serves(), "{name} grouped={grouped}");
+                assert!(lin.hi_rescale() >= 1.0, "{name}: truncation rounds toward zero");
+                let mut scratch = GemmScratch::new();
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let mut y = vec![0f32; rows];
+                lin.gemv_prec(&x, &mut y, &mut scratch, DecodePrecision::HiOnly);
+                let want = hi_reference(&lin, &x);
+                for r in 0..rows {
+                    assert!(
+                        (y[r] - want[r]).abs() <= 1e-4 * (1.0 + want[r].abs()),
+                        "{name} grouped={grouped} r={r}: {} vs {}",
+                        y[r],
+                        want[r]
+                    );
+                }
+                for batch in [1usize, 3, 9] {
+                    let xb = init::gaussian(&[batch, cols], 0.0, 1.0, &mut rng);
+                    let mut yb = Tensor::zeros(&[batch, rows]);
+                    lin.gemm_prec_into(&xb, &mut yb, &mut scratch, DecodePrecision::HiOnly);
+                    for b in 0..batch {
+                        let mut yr = vec![0f32; rows];
+                        lin.gemv_prec(xb.row(b), &mut yr, &mut scratch, DecodePrecision::HiOnly);
+                        for r in 0..rows {
+                            assert_eq!(
+                                yb.at2(b, r).to_bits(),
+                                yr[r].to_bits(),
+                                "{name} grouped={grouped} batch={batch} b={b} r={r}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Instrumented gate: flipping every lo-stream word leaves the
+    /// hi-only output bit-identical (the draft path reads no lo words)
+    /// while the full decode visibly changes.
+    #[test]
+    fn hi_only_reads_no_lo_words() {
+        let mut rng = Rng::new(301);
+        for name in ["fp6-e2m3", "fp5-e2m2", "fp4.25"] {
+            let (rows, cols) = (5usize, 96usize);
+            let lin = make_linear(name, rows, cols, 13);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut scratch = GemmScratch::new();
+            let mut hi_before = vec![0f32; rows];
+            let mut full_before = vec![0f32; rows];
+            lin.gemv_prec(&x, &mut hi_before, &mut scratch, DecodePrecision::HiOnly);
+            lin.gemv_prec(&x, &mut full_before, &mut scratch, DecodePrecision::Full);
+            let mut poisoned = lin.clone();
+            let hi_words = crate::pack::hi_stream_words(poisoned.packed.scheme, cols);
+            let stride = poisoned.packed.row_stride;
+            for r in 0..rows {
+                for w in &mut poisoned.packed.words[r * stride + hi_words..(r + 1) * stride] {
+                    *w = !*w;
+                }
+            }
+            let mut hi_after = vec![0f32; rows];
+            let mut full_after = vec![0f32; rows];
+            poisoned.gemv_prec(&x, &mut hi_after, &mut scratch, DecodePrecision::HiOnly);
+            poisoned.gemv_prec(&x, &mut full_after, &mut scratch, DecodePrecision::Full);
+            for r in 0..rows {
+                assert_eq!(
+                    hi_before[r].to_bits(),
+                    hi_after[r].to_bits(),
+                    "{name} r={r}: hi-only must not read lo words"
+                );
+            }
+            assert_ne!(full_before, full_after, "{name}: full decode must read lo words");
+        }
+    }
+
+    /// Layouts without a hi/lo split fall back to the full decode —
+    /// bit-identically, so a mixed-scheme draft forward stays exact where
+    /// no cheaper decode exists.
+    #[test]
+    fn hi_only_fallback_is_full_decode() {
+        let mut rng = Rng::new(302);
+        for name in ["fp16", "fp8", "int4", "fp5.33", "ams-e3m2-k4"] {
+            let lin = make_linear(name, 6, 80, 17);
+            assert!(!lin.hi_only_serves(), "{name}");
+            assert_eq!(lin.hi_rescale(), 1.0, "{name}");
+            let x: Vec<f32> = (0..80).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut s1 = GemmScratch::new();
+            let mut s2 = GemmScratch::new();
+            let mut y_hi = vec![0f32; 6];
+            let mut y_full = vec![0f32; 6];
+            lin.gemv_prec(&x, &mut y_hi, &mut s1, DecodePrecision::HiOnly);
+            lin.gemv_prec(&x, &mut y_full, &mut s2, DecodePrecision::Full);
+            assert_eq!(y_hi, y_full, "{name}");
         }
     }
 

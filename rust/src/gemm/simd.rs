@@ -838,6 +838,87 @@ unsafe fn dotn_segmented_avx512<const T: usize>(
     out
 }
 
+/// Hi-stream-only dot for segmented layouts: decode each code as
+/// `hi << low_width` — the low mantissa bits zero-filled — against `T`
+/// activation rows, reading **only** the high-nibble stream (the function
+/// takes no low-word argument, so the draft path provably touches no
+/// lo-stream memory). This is the mantissa-truncated draft decode of the
+/// self-speculative path: the caller folds the least-squares
+/// `hi_rescale` correction into the row/group scale. Works for every
+/// segmented `LowBits` variant — with no shared bits to broadcast there
+/// is no lane-alignment gate, so k=3 shared groups serve too.
+pub fn dotn_segmented_hi<const T: usize>(
+    hi_words: &[u16],
+    cols: usize,
+    xs: &[&[f32]; T],
+    fmt: FpFormat,
+    low_width: u32,
+) -> [f32; T] {
+    assert_xs_len(xs, cols);
+    assert!(hi_words.len() >= cols.div_ceil(4), "hi stream too short");
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_avx512() && cols >= 16 {
+            // SAFETY: feature checked; stream and xs lengths asserted.
+            return unsafe { dotn_segmented_hi_avx512(hi_words, cols, xs, fmt, low_width) };
+        }
+    }
+    let mut acc = [0f32; T];
+    for i in 0..cols {
+        let hi = (u32::from(hi_words[i / 4]) >> (4 * (i % 4))) & 0xF;
+        let v = decode_arith(hi << low_width, e, m, eb);
+        for j in 0..T {
+            acc[j] += v * xs[j][i];
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn dotn_segmented_hi_avx512<const T: usize>(
+    hi_words: &[u16],
+    cols: usize,
+    xs: &[&[f32]; T],
+    fmt: FpFormat,
+    low_width: u32,
+) -> [f32; T] {
+    use std::arch::x86_64::*;
+    let (e, m) = (fmt.ebits, fmt.mbits);
+    let eb = expo_base(fmt);
+    let dec = DecodeConsts::new(e, m, eb);
+    let nib_shifts = _mm512_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28, 0, 4, 8, 12, 16, 20, 24, 28);
+    let lw = _mm512_set1_epi32(low_width as i32);
+    let mut acc = [_mm512_setzero_ps(); T];
+    let blocks = cols / 16;
+    for b in 0..blocks {
+        let hi64 = (hi_words.as_ptr().add(b * 4) as *const u64).read_unaligned();
+        let vlo = _mm512_set1_epi32(hi64 as u32 as i32);
+        let vhi = _mm512_set1_epi32((hi64 >> 32) as u32 as i32);
+        let packed = _mm512_mask_blend_epi32(0xFF00, vlo, vhi);
+        let nib = _mm512_and_si512(_mm512_srlv_epi32(packed, nib_shifts), _mm512_set1_epi32(0xF));
+        let code = _mm512_sllv_epi32(nib, lw);
+        let v = dec.decode(code);
+        for j in 0..T {
+            acc[j] = _mm512_fmadd_ps(v, _mm512_loadu_ps(xs[j].as_ptr().add(b * 16)), acc[j]);
+        }
+    }
+    let mut out = [0f32; T];
+    for j in 0..T {
+        out[j] = _mm512_reduce_add_ps(acc[j]);
+    }
+    for i in blocks * 16..cols {
+        let hi = (u32::from(hi_words[i / 4]) >> (4 * (i % 4))) & 0xF;
+        let v = decode_arith(hi << low_width, e, m, eb);
+        for j in 0..T {
+            out[j] += v * xs[j][i];
+        }
+    }
+    out
+}
+
 /// Shared-bit segmented dot over a column *segment* of a row — the
 /// stream-direct grouped kernel for the AMS (4 + 1/k) layouts, where a
 /// `PerGroup` boundary can fall mid-word in the shared-bit stream (e.g.
@@ -1272,6 +1353,41 @@ mod tests {
                     );
                 }
                 c0 += len;
+            }
+        }
+    }
+
+    /// The hi-only draft kernel must equal a scalar decode of the
+    /// mantissa-truncated codes (`(c >> w) << w`) — the zero-filled
+    /// low-bits view of the same tensor — for both low widths and
+    /// ragged/SIMD shapes.
+    #[test]
+    fn dotn_segmented_hi_matches_truncated_reference() {
+        let mut rng = Rng::new(31);
+        for (fmt, w) in [(FpFormat::E2M3, 2u32), (FpFormat::E2M2, 1)] {
+            for cols in [7usize, 16, 61, 160] {
+                let codes: Vec<u16> = (0..cols)
+                    .map(|_| (rng.next_u32() as u16) & fmt.code_mask())
+                    .collect();
+                let mut hi = vec![0u16; cols.div_ceil(4)];
+                for (i, &c) in codes.iter().enumerate() {
+                    hi[i / 4] |= ((c >> w) & 0xF) << (4 * (i % 4));
+                }
+                let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let xs: [&[f32]; 2] = [&x, &x];
+                let got = dotn_segmented_hi(&hi, cols, &xs, fmt, w);
+                let want: f32 = codes
+                    .iter()
+                    .zip(&x)
+                    .map(|(&c, &xv)| fmt.decode((c >> w) << w) * xv)
+                    .sum();
+                for g in got {
+                    assert!(
+                        (g - want).abs() <= 2e-4 * (1.0 + want.abs()),
+                        "{} w={w} cols={cols}: {g} vs {want}",
+                        fmt.name()
+                    );
+                }
             }
         }
     }

@@ -53,6 +53,14 @@ pub trait KvStore {
     /// Commit positions `< len` (the forwards call this once per step /
     /// chunk, after all rows are written).
     fn set_len(&mut self, len: usize);
+    /// Roll the sequence back to `len` positions **and release any
+    /// storage the discarded tail held**. `set_len` only moves the
+    /// logical frontier (the speculative verify pass rewinds with it and
+    /// immediately rewrites the same rows); `truncate` is the rejection
+    /// path — a paged backing returns whole tail pages to its pool.
+    fn truncate(&mut self, len: usize) {
+        self.set_len(len);
+    }
     fn k_row(&self, layer: usize, pos: usize) -> &[f32];
     fn v_row(&self, layer: usize, pos: usize) -> &[f32];
     fn k_row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32];

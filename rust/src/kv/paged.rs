@@ -157,6 +157,19 @@ impl KvStore for PagedKvCache {
         self.len = len;
     }
 
+    /// Rejection rollback: drop the block-table entries wholly past the
+    /// new frontier. Each dropped `Rc` that was this sequence's last
+    /// reference recycles its page into the pool — page-at-a-time, no
+    /// float copying. A page straddling `len` stays (its prefix rows are
+    /// still live).
+    fn truncate(&mut self, len: usize) {
+        self.len = len;
+        let keep = len.div_ceil(self.page_size());
+        if keep < self.pages.len() {
+            self.pages.truncate(keep);
+        }
+    }
+
     fn k_row(&self, layer: usize, pos: usize) -> &[f32] {
         self.row(layer, false, pos)
     }
@@ -274,6 +287,38 @@ mod tests {
         // Freeing makes the same reserve succeed.
         cache.reset();
         assert!(other.reserve(4).is_ok());
+    }
+
+    /// Speculative rollback: `truncate` frees whole tail pages back to
+    /// the pool, keeps a straddling page alive, and leaves the surviving
+    /// prefix readable; plain `set_len` frees nothing.
+    #[test]
+    fn truncate_returns_tail_pages_to_pool() {
+        let pool = pool(4);
+        let mut cache = PagedKvCache::new(&pool);
+        for pos in 0..10 {
+            write_pos(&mut cache, pos, pos as f32 + 1.0);
+        }
+        assert_eq!(pool.used(), 3);
+        // Rewind without rollback: pages stay for the rewrite.
+        cache.set_len(8);
+        assert_eq!(pool.used(), 3);
+        cache.set_len(10);
+        // Reject back into the middle of page 1: page 2 frees, page 1
+        // stays (positions 4..6 still live).
+        cache.truncate(6);
+        assert_eq!(cache.len(), 6);
+        assert_eq!(cache.pages_held(), 2);
+        assert_eq!(pool.used(), 2);
+        for pos in 0..6 {
+            let want = pos as f32 + 1.0;
+            assert!(cache.k_row(0, pos).iter().all(|&x| x == want));
+        }
+        // Growing again reuses the recycled page.
+        write_pos(&mut cache, 6, 99.0);
+        assert_eq!(pool.used(), 2);
+        cache.truncate(0);
+        assert_eq!(pool.used(), 0);
     }
 
     #[test]

@@ -24,6 +24,9 @@
 //!   chunked prefill, continuous batching, streaming handles,
 //!   cancellation, replica dispatch, and fault tolerance (supervised
 //!   workers, deadlines, priority shedding, fault injection).
+//! - [`spec`] — hi-stream self-speculative decoding: draft tokens from
+//!   the hi mantissa stream alone, verify them in one full-precision
+//!   batched pass (token-identical under greedy sampling).
 //! - [`runtime`] — PJRT client running AOT-lowered JAX/Pallas artifacts.
 //! - [`sim`] — roofline simulator of the paper's GPU (Table 3).
 //! - [`baselines`] — INT RTN / W8A16 / TC-FPx comparators.
@@ -46,6 +49,7 @@ pub mod restore;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
+pub mod spec;
 pub mod tensor;
 pub mod util;
 

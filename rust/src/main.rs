@@ -107,6 +107,7 @@ fn print_help() {
          \x20       [--kv-page-size S --kv-pool-pages N  (0 = worst-case reserve)]\n\
          \x20       [--deadline-ms T --queue-deadline-ms T]\n\
          \x20       [--priority interactive|bulk|mixed]\n\
+         \x20       [--speculative [--draft-depth K]   (hi-stream draft/verify)]\n\
          \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
          plan flags: --scheme is the model-wide default; --attn/--mlp/--lm-head\n\
          \x20 override per role (mixed precision); --group-size G uses per-group\n\
@@ -409,7 +410,10 @@ fn cmd_calibrate(args: &Args, artifacts: &Path) -> Result<()> {
 fn report_table(reports: &[QuantReport], title: &str) -> Table {
     let mut t = Table::new(
         title,
-        &["layer", "role", "scheme", "gran", "bits/w", "scale b/w", "MSE", "SQNR dB", "shared=1"],
+        &[
+            "layer", "role", "scheme", "gran", "bits/w", "scale b/w", "MSE", "SQNR dB",
+            "hi SQNR dB", "shared=1",
+        ],
     );
     for r in reports {
         let gran = match r.granularity {
@@ -431,6 +435,9 @@ fn report_table(reports: &[QuantReport], title: &str) -> Table {
             f(r.scale_bits_per_weight, 3),
             format!("{:.3e}", r.mse),
             f(r.sqnr_db, 2),
+            // "-" = no hi/lo split, the hi-only draft decode cannot
+            // serve this layout.
+            if r.hi_sqnr_db.is_nan() { "-".to_string() } else { f(r.hi_sqnr_db, 2) },
             shared,
         ]);
     }
@@ -521,6 +528,13 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         0 => None,
         ms => Some(std::time::Duration::from_millis(ms)),
     };
+    // Self-speculative decoding: draft from the hi mantissa stream,
+    // verify full precision. Token-identical under greedy sampling.
+    let speculative = args.has("speculative");
+    let draft_depth = args.get_usize("draft-depth", 4);
+    if draft_depth == 0 {
+        bail!("--draft-depth must be at least 1");
+    }
     let priority_of = |id: u64| -> Priority {
         match args.get_or("priority", "interactive") {
             "bulk" => Priority::Bulk,
@@ -595,6 +609,8 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         .prefill_chunk(prefill_chunk)
         .kv_page_size(kv_page_size)
         .kv_pool_pages(kv_pool_pages)
+        .speculative(speculative)
+        .draft_depth(draft_depth)
         .seed(1)
         .build(model);
     let wall = ams_quant::util::timer::Timer::start();
@@ -655,6 +671,12 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     t.row(vec!["kv prefix hits".into(), stats.prefix_hits.to_string()]);
     t.row(vec!["kv preemptions".into(), stats.preemptions.to_string()]);
     t.row(vec!["peak concurrency".into(), stats.peak_concurrency.to_string()]);
+    // Speculative economics: how many hi-stream drafts the verify pass
+    // kept. Rows stay in the report even when speculation is off (all
+    // zero) so downstream parsers see a stable schema.
+    t.row(vec!["tokens drafted".into(), stats.drafted.to_string()]);
+    t.row(vec!["drafts accepted".into(), stats.accepted.to_string()]);
+    t.row(vec!["acceptance rate".into(), f(stats.acceptance_rate(), 3)]);
     emit_table(args, &t)?;
     if let Some(r) = responses.first() {
         eprintln!("# sample continuation: {:?}", tokenizer::decode(&r.tokens));

@@ -10,6 +10,13 @@ pub enum Sampler {
 }
 
 impl Sampler {
+    /// Deterministic argmax decoding? The speculative scheduler only
+    /// runs draft/verify rounds for greedy sequences — token identity
+    /// between speculative and plain decoding holds under argmax only.
+    pub fn is_greedy(&self) -> bool {
+        matches!(self, Sampler::Greedy)
+    }
+
     pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
         match *self {
             Sampler::Greedy => argmax(logits) as u32,

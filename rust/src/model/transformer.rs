@@ -16,7 +16,7 @@
 use super::checkpoint::Checkpoint;
 use super::ModelConfig;
 use crate::formats::registry::Scheme;
-use crate::gemm::{dense_gemm_auto_into, dense_gemv_auto, GemmScratch, QuantLinear};
+use crate::gemm::{dense_gemm_auto_into, dense_gemv_auto, DecodePrecision, GemmScratch, QuantLinear};
 use crate::quant::{LayerRole, QuantConfig, QuantError, QuantReport, Quantizer};
 use crate::tensor::Tensor;
 use crate::kv::{AsKvStore, KvStore};
@@ -75,10 +75,26 @@ impl Linear {
     /// and runs the tiled fused kernels (packed) or the register-tiled
     /// dense kernel (FP16-reference baseline).
     pub fn apply_batch_into(&self, x: &Tensor, y: &mut Tensor, scratch: &mut GemmScratch) {
+        self.apply_batch_prec_into(x, y, scratch, DecodePrecision::Full);
+    }
+
+    /// [`Linear::apply_batch_into`] with a decode-precision request: the
+    /// speculative draft forward asks for [`DecodePrecision::HiOnly`],
+    /// which segmented packed layouts serve by streaming only the hi
+    /// mantissa words (see [`QuantLinear::gemm_prec_into`]). Dense
+    /// projections have no hi/lo split and ignore `prec`; packed layouts
+    /// without a split fall back to full decode.
+    pub fn apply_batch_prec_into(
+        &self,
+        x: &Tensor,
+        y: &mut Tensor,
+        scratch: &mut GemmScratch,
+        prec: DecodePrecision,
+    ) {
         y.resize(&[x.rows(), self.out_dim()]);
         match self {
             Linear::Dense(w) => dense_gemm_auto_into(w, x, y, scratch),
-            Linear::Quant(q) => q.gemm_auto_into(x, y, scratch),
+            Linear::Quant(q) => q.gemm_prec_into(x, y, scratch, prec),
         }
     }
 
@@ -187,18 +203,12 @@ impl AsKvStore for KvCache {
 #[derive(Clone, Debug)]
 pub struct ForwardScratch {
     gemm: GemmScratch,
-    // single-token path
-    x: Vec<f32>,
     h: Vec<f32>,
-    q: Vec<f32>,
-    attn: Vec<f32>,
-    proj: Vec<f32>,
-    gate: Vec<f32>,
-    up: Vec<f32>,
     scores: Vec<f32>,
     logits: Vec<f32>,
-    // batched path
     qi: Vec<f32>,
+    /// Per staged row: (cache index, write position).
+    slots: Vec<(usize, usize)>,
     xb: Tensor,
     hb: Tensor,
     qb: Tensor,
@@ -218,16 +228,11 @@ impl ForwardScratch {
         let empty = || Tensor::zeros(&[0, 0]);
         ForwardScratch {
             gemm: GemmScratch::new(),
-            x: Vec::new(),
             h: Vec::new(),
-            q: Vec::new(),
-            attn: Vec::new(),
-            proj: Vec::new(),
-            gate: Vec::new(),
-            up: Vec::new(),
             scores: Vec::new(),
             logits: Vec::new(),
             qi: Vec::new(),
+            slots: Vec::new(),
             xb: empty(),
             hb: empty(),
             qb: empty(),
@@ -255,6 +260,26 @@ impl Default for ForwardScratch {
 fn ensure(v: &mut Vec<f32>, n: usize) {
     v.clear();
     v.resize(n, 0.0);
+}
+
+/// The [`ForwardScratch`] buffers one decoder layer needs, borrowed as a
+/// bundle so [`Transformer::layer_body`] can be the single copy of the
+/// rmsnorm → QKV → attend → SwiGLU sequence shared by every `forward*`
+/// variant (single-token, batched decode, prefill, draft, verify).
+struct LayerBufs<'a> {
+    gemm: &'a mut GemmScratch,
+    scores: &'a mut Vec<f32>,
+    qi: &'a mut Vec<f32>,
+    hb: &'a mut Tensor,
+    qb: &'a mut Tensor,
+    kxb: &'a mut Tensor,
+    vxb: &'a mut Tensor,
+    attnb: &'a mut Tensor,
+    ob: &'a mut Tensor,
+    gateb: &'a mut Tensor,
+    upb: &'a mut Tensor,
+    actb: &'a mut Tensor,
+    downb: &'a mut Tensor,
 }
 
 #[derive(Clone, Debug)]
@@ -547,68 +572,203 @@ impl Transformer {
         cache: &mut C,
         scratch: &'s mut ForwardScratch,
     ) -> &'s [f32] {
-        let kv = cache.kv_mut();
-        assert_eq!(pos, kv.len(), "positions must be fed in order");
-        assert!(pos < self.cfg.max_seq, "sequence overflow");
+        assert_eq!(pos, cache.kv().len(), "positions must be fed in order");
+        self.decode_inner(&[token], std::slice::from_mut(cache), scratch, DecodePrecision::Full)
+            .row(0)
+    }
+
+    /// Single-token *draft* decode: same math as
+    /// [`Transformer::forward_with`] but every projection runs at
+    /// [`DecodePrecision::HiOnly`] — segmented layouts stream only their
+    /// hi mantissa words (~half the weight traffic), everything else
+    /// falls back to full decode. The KV row written at `pos` is
+    /// draft-quality; the speculative controller overwrites it with
+    /// full-precision values during the verify pass before it can leak
+    /// into committed state.
+    pub fn forward_draft_with<'s, C: AsKvStore>(
+        &self,
+        token: u32,
+        pos: usize,
+        cache: &mut C,
+        scratch: &'s mut ForwardScratch,
+    ) -> &'s [f32] {
+        assert_eq!(pos, cache.kv().len(), "positions must be fed in order");
+        self.decode_inner(&[token], std::slice::from_mut(cache), scratch, DecodePrecision::HiOnly)
+            .row(0)
+    }
+
+    /// One decoder layer over `n` staged rows: rmsnorm → QKV → KV write +
+    /// rope → attend → wo + residual → rmsnorm → SwiGLU → down +
+    /// residual. `slots[i] = (cache index, position)` assigns row `i` its
+    /// KV slot. Every row's K/V is written (and roped) before any row
+    /// attends: decode rows live in disjoint caches, prefill/verify rows
+    /// are consecutive positions of one cache — causal either way, and it
+    /// is what lets the verify pass overwrite draft-quality KV rows
+    /// before attention can read them.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_body<C: AsKvStore>(
+        &self,
+        li: usize,
+        layer: &LayerWeights,
+        prec: DecodePrecision,
+        caches: &mut [C],
+        slots: &[(usize, usize)],
+        xb: &mut Tensor,
+        bufs: &mut LayerBufs<'_>,
+        mut taps: Option<&mut crate::calib::stats::ModelTaps>,
+    ) {
         let cfg = &self.cfg;
         let (d, hd) = (cfg.d_model, cfg.head_dim());
-
-        let ForwardScratch {
-            gemm,
-            x,
-            h,
-            q,
-            attn,
-            proj,
-            gate,
-            up,
-            scores,
-            logits,
-            ..
-        } = scratch;
-        x.clear();
-        x.extend_from_slice(self.embed.row(token as usize));
-        ensure(h, d);
-        ensure(q, d);
-        ensure(attn, d);
-        ensure(proj, d.max(cfg.d_ff));
-        ensure(gate, cfg.d_ff);
-        ensure(up, cfg.d_ff);
-
-        for (li, layer) in self.layers.iter().enumerate() {
-            // --- attention ---
-            rmsnorm(x, &layer.attn_norm, h);
-            layer.wq.apply_with(h, q, gemm);
-            layer.wk.apply_with(h, kv.k_row_mut(li, pos), gemm);
-            layer.wv.apply_with(h, kv.v_row_mut(li, pos), gemm);
-            for hh in 0..cfg.n_heads {
-                rope(&mut q[hh * hd..(hh + 1) * hd], pos, hd);
-            }
+        let n = xb.rows();
+        debug_assert_eq!(slots.len(), n);
+        bufs.hb.resize(&[n, d]);
+        for i in 0..n {
+            rmsnorm(xb.row(i), &layer.attn_norm, bufs.hb.row_mut(i));
+        }
+        if let Some(t) = taps.as_deref_mut() {
+            t.layers[li].attn_in.record_rows(bufs.hb);
+        }
+        layer.wq.apply_batch_prec_into(bufs.hb, bufs.qb, bufs.gemm, prec); // [n, d]
+        layer.wk.apply_batch_prec_into(bufs.hb, bufs.kxb, bufs.gemm, prec); // [n, kvd]
+        layer.wv.apply_batch_prec_into(bufs.hb, bufs.vxb, bufs.gemm, prec);
+        for (i, &(ci, pos)) in slots.iter().enumerate() {
+            let kv = caches[ci].kv_mut();
+            kv.k_row_mut(li, pos).copy_from_slice(bufs.kxb.row(i));
+            kv.v_row_mut(li, pos).copy_from_slice(bufs.vxb.row(i));
             rope_k(kv, li, pos, cfg.n_kv_heads, hd);
-            attend(&*kv, li, pos, cfg.n_heads, cfg.n_kv_heads, hd, q, attn, scores);
-            layer.wo.apply_with(attn, &mut proj[..d], gemm);
-            for i in 0..d {
-                x[i] += proj[i];
+        }
+        bufs.attnb.resize(&[n, d]);
+        for (i, &(ci, pos)) in slots.iter().enumerate() {
+            bufs.qi.clear();
+            bufs.qi.extend_from_slice(bufs.qb.row(i));
+            for hh in 0..cfg.n_heads {
+                rope(&mut bufs.qi[hh * hd..(hh + 1) * hd], pos, hd);
             }
-            // --- MLP (SwiGLU) ---
-            rmsnorm(x, &layer.mlp_norm, h);
-            layer.w_gate.apply_with(h, gate, gemm);
-            layer.w_up.apply_with(h, up, gemm);
-            for i in 0..cfg.d_ff {
-                gate[i] = silu(gate[i]) * up[i];
-            }
-            layer.w_down.apply_with(gate, &mut proj[..d], gemm);
-            for i in 0..d {
-                x[i] += proj[i];
+            attend(
+                caches[ci].kv(),
+                li,
+                pos,
+                cfg.n_heads,
+                cfg.n_kv_heads,
+                hd,
+                bufs.qi,
+                bufs.attnb.row_mut(i),
+                bufs.scores,
+            );
+        }
+        if let Some(t) = taps.as_deref_mut() {
+            t.layers[li].attn_out.record_rows(bufs.attnb);
+        }
+        layer.wo.apply_batch_prec_into(bufs.attnb, bufs.ob, bufs.gemm, prec);
+        for i in 0..n {
+            let xr = xb.row_mut(i);
+            for (j, &v) in bufs.ob.row(i).iter().enumerate() {
+                xr[j] += v;
             }
         }
-        kv.set_len(pos + 1);
+        for i in 0..n {
+            rmsnorm(xb.row(i), &layer.mlp_norm, bufs.hb.row_mut(i));
+        }
+        if let Some(t) = taps.as_deref_mut() {
+            t.layers[li].mlp_in.record_rows(bufs.hb);
+        }
+        layer.w_gate.apply_batch_prec_into(bufs.hb, bufs.gateb, bufs.gemm, prec);
+        layer.w_up.apply_batch_prec_into(bufs.hb, bufs.upb, bufs.gemm, prec);
+        bufs.actb.resize(&[n, cfg.d_ff]);
+        for i in 0..n {
+            let ar = bufs.actb.row_mut(i);
+            let gr = bufs.gateb.row(i);
+            let ur = bufs.upb.row(i);
+            for j in 0..cfg.d_ff {
+                ar[j] = silu(gr[j]) * ur[j];
+            }
+        }
+        if let Some(t) = taps.as_deref_mut() {
+            t.layers[li].mlp_act.record_rows(bufs.actb);
+        }
+        layer.w_down.apply_batch_prec_into(bufs.actb, bufs.downb, bufs.gemm, prec);
+        for i in 0..n {
+            let xr = xb.row_mut(i);
+            for (j, &v) in bufs.downb.row(i).iter().enumerate() {
+                xr[j] += v;
+            }
+        }
+    }
 
-        h[..d].copy_from_slice(x);
-        rmsnorm(&h[..d], &self.final_norm, x);
-        ensure(logits, cfg.vocab_size);
-        self.lm_head.apply_with(x, logits, gemm);
-        logits
+    /// Shared decode driver: appends one token per cache (row `i` →
+    /// `caches[i]` at its current length) and returns `[batch, vocab]`
+    /// logits borrowing the scratch.
+    fn decode_inner<'s, C: AsKvStore>(
+        &self,
+        tokens: &[u32],
+        caches: &mut [C],
+        scratch: &'s mut ForwardScratch,
+        prec: DecodePrecision,
+    ) -> &'s Tensor {
+        let b = tokens.len();
+        assert_eq!(b, caches.len());
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let ForwardScratch {
+            gemm,
+            scores,
+            qi,
+            slots,
+            xb,
+            hb,
+            qb,
+            kxb,
+            vxb,
+            attnb,
+            ob,
+            gateb,
+            upb,
+            actb,
+            downb,
+            logitsb,
+            ..
+        } = scratch;
+
+        slots.clear();
+        for (i, c) in caches.iter().enumerate() {
+            let pos = c.kv().len();
+            assert!(pos < cfg.max_seq, "sequence overflow");
+            slots.push((i, pos));
+        }
+        xb.resize(&[b, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            xb.row_mut(i).copy_from_slice(self.embed.row(t as usize));
+        }
+        let mut bufs = LayerBufs {
+            gemm,
+            scores,
+            qi,
+            hb,
+            qb,
+            kxb,
+            vxb,
+            attnb,
+            ob,
+            gateb,
+            upb,
+            actb,
+            downb,
+        };
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.layer_body(li, layer, prec, caches, slots, xb, &mut bufs, None);
+        }
+        for c in caches.iter_mut() {
+            let kv = c.kv_mut();
+            let len = kv.len();
+            kv.set_len(len + 1);
+        }
+        for i in 0..b {
+            bufs.qi.clear();
+            bufs.qi.extend_from_slice(xb.row(i));
+            rmsnorm(bufs.qi, &self.final_norm, xb.row_mut(i));
+        }
+        self.lm_head.apply_batch_prec_into(xb, logitsb, bufs.gemm, prec);
+        logitsb
     }
 
     /// Batched decode across independent sequences (allocating wrapper
@@ -630,109 +790,7 @@ impl Transformer {
         caches: &mut [C],
         scratch: &'s mut ForwardScratch,
     ) -> &'s Tensor {
-        let b = tokens.len();
-        assert_eq!(b, caches.len());
-        let cfg = &self.cfg;
-        let (d, hd) = (cfg.d_model, cfg.head_dim());
-
-        let ForwardScratch {
-            gemm,
-            scores,
-            qi,
-            xb,
-            hb,
-            qb,
-            kxb,
-            vxb,
-            attnb,
-            ob,
-            gateb,
-            upb,
-            actb,
-            downb,
-            logitsb,
-            ..
-        } = scratch;
-
-        xb.resize(&[b, d]);
-        for (i, &t) in tokens.iter().enumerate() {
-            xb.row_mut(i).copy_from_slice(self.embed.row(t as usize));
-        }
-        hb.resize(&[b, d]);
-
-        for (li, layer) in self.layers.iter().enumerate() {
-            for i in 0..b {
-                rmsnorm(xb.row(i), &layer.attn_norm, hb.row_mut(i));
-            }
-            layer.wq.apply_batch_into(hb, qb, gemm); // [b, d]
-            layer.wk.apply_batch_into(hb, kxb, gemm); // [b, kvd]
-            layer.wv.apply_batch_into(hb, vxb, gemm);
-            attnb.resize(&[b, d]);
-            for i in 0..b {
-                let kv = caches[i].kv_mut();
-                let pos = kv.len();
-                assert!(pos < cfg.max_seq, "sequence overflow");
-                kv.k_row_mut(li, pos).copy_from_slice(kxb.row(i));
-                kv.v_row_mut(li, pos).copy_from_slice(vxb.row(i));
-                qi.clear();
-                qi.extend_from_slice(qb.row(i));
-                for hh in 0..cfg.n_heads {
-                    rope(&mut qi[hh * hd..(hh + 1) * hd], pos, hd);
-                }
-                rope_k(kv, li, pos, cfg.n_kv_heads, hd);
-                attend(
-                    &*kv,
-                    li,
-                    pos,
-                    cfg.n_heads,
-                    cfg.n_kv_heads,
-                    hd,
-                    qi,
-                    attnb.row_mut(i),
-                    scores,
-                );
-            }
-            layer.wo.apply_batch_into(attnb, ob, gemm);
-            for i in 0..b {
-                let xr = xb.row_mut(i);
-                for (j, &v) in ob.row(i).iter().enumerate() {
-                    xr[j] += v;
-                }
-            }
-            for i in 0..b {
-                rmsnorm(xb.row(i), &layer.mlp_norm, hb.row_mut(i));
-            }
-            layer.w_gate.apply_batch_into(hb, gateb, gemm);
-            layer.w_up.apply_batch_into(hb, upb, gemm);
-            actb.resize(&[b, cfg.d_ff]);
-            for i in 0..b {
-                let ar = actb.row_mut(i);
-                let gr = gateb.row(i);
-                let ur = upb.row(i);
-                for j in 0..cfg.d_ff {
-                    ar[j] = silu(gr[j]) * ur[j];
-                }
-            }
-            layer.w_down.apply_batch_into(actb, downb, gemm);
-            for i in 0..b {
-                let xr = xb.row_mut(i);
-                for (j, &v) in downb.row(i).iter().enumerate() {
-                    xr[j] += v;
-                }
-            }
-        }
-        for c in caches.iter_mut() {
-            let kv = c.kv_mut();
-            let len = kv.len();
-            kv.set_len(len + 1);
-        }
-        for i in 0..b {
-            qi.clear();
-            qi.extend_from_slice(xb.row(i));
-            rmsnorm(qi, &self.final_norm, xb.row_mut(i));
-        }
-        self.lm_head.apply_batch_into(xb, logitsb, gemm);
-        logitsb
+        self.decode_inner(tokens, caches, scratch, DecodePrecision::Full)
     }
 
     /// Chunked prefill (allocating wrapper over
@@ -800,16 +858,15 @@ impl Transformer {
         mut taps: Option<&mut crate::calib::stats::ModelTaps>,
         need_logits: bool,
     ) -> &'s [f32] {
-        let kv = cache.kv_mut();
         // The tapped path always needs the head pass (head_in site +
         // token accounting live there).
         let need_logits = need_logits || taps.is_some();
         let n = tokens.len();
         assert!(n > 0, "empty prefill chunk");
-        let pos0 = kv.len();
+        let pos0 = cache.kv().len();
         assert!(pos0 + n <= self.cfg.max_seq, "sequence overflow");
         let cfg = &self.cfg;
-        let (d, hd) = (cfg.d_model, cfg.head_dim());
+        let d = cfg.d_model;
 
         let ForwardScratch {
             gemm,
@@ -817,6 +874,7 @@ impl Transformer {
             logits,
             h,
             qi,
+            slots,
             xb,
             hb,
             qb,
@@ -831,89 +889,41 @@ impl Transformer {
             ..
         } = scratch;
 
+        slots.clear();
+        slots.extend((0..n).map(|i| (0usize, pos0 + i)));
         xb.resize(&[n, d]);
         for (i, &t) in tokens.iter().enumerate() {
             xb.row_mut(i).copy_from_slice(self.embed.row(t as usize));
         }
-        hb.resize(&[n, d]);
-
+        let mut bufs = LayerBufs {
+            gemm,
+            scores,
+            qi,
+            hb,
+            qb,
+            kxb,
+            vxb,
+            attnb,
+            ob,
+            gateb,
+            upb,
+            actb,
+            downb,
+        };
+        let caches = std::slice::from_mut(cache);
         for (li, layer) in self.layers.iter().enumerate() {
-            for i in 0..n {
-                rmsnorm(xb.row(i), &layer.attn_norm, hb.row_mut(i));
-            }
-            if let Some(t) = taps.as_deref_mut() {
-                t.layers[li].attn_in.record_rows(hb);
-            }
-            layer.wq.apply_batch_into(hb, qb, gemm); // [n, d]
-            layer.wk.apply_batch_into(hb, kxb, gemm); // [n, kvd]
-            layer.wv.apply_batch_into(hb, vxb, gemm);
-            // Write + rope the whole chunk's K/V first; attention row i may
-            // then read any position <= pos0 + i (causal by construction).
-            for i in 0..n {
-                let pos = pos0 + i;
-                kv.k_row_mut(li, pos).copy_from_slice(kxb.row(i));
-                kv.v_row_mut(li, pos).copy_from_slice(vxb.row(i));
-                rope_k(kv, li, pos, cfg.n_kv_heads, hd);
-            }
-            attnb.resize(&[n, d]);
-            for i in 0..n {
-                let pos = pos0 + i;
-                qi.clear();
-                qi.extend_from_slice(qb.row(i));
-                for hh in 0..cfg.n_heads {
-                    rope(&mut qi[hh * hd..(hh + 1) * hd], pos, hd);
-                }
-                attend(
-                    &*kv,
-                    li,
-                    pos,
-                    cfg.n_heads,
-                    cfg.n_kv_heads,
-                    hd,
-                    qi,
-                    attnb.row_mut(i),
-                    scores,
-                );
-            }
-            if let Some(t) = taps.as_deref_mut() {
-                t.layers[li].attn_out.record_rows(attnb);
-            }
-            layer.wo.apply_batch_into(attnb, ob, gemm);
-            for i in 0..n {
-                let xr = xb.row_mut(i);
-                for (j, &v) in ob.row(i).iter().enumerate() {
-                    xr[j] += v;
-                }
-            }
-            for i in 0..n {
-                rmsnorm(xb.row(i), &layer.mlp_norm, hb.row_mut(i));
-            }
-            if let Some(t) = taps.as_deref_mut() {
-                t.layers[li].mlp_in.record_rows(hb);
-            }
-            layer.w_gate.apply_batch_into(hb, gateb, gemm);
-            layer.w_up.apply_batch_into(hb, upb, gemm);
-            actb.resize(&[n, cfg.d_ff]);
-            for i in 0..n {
-                let ar = actb.row_mut(i);
-                let gr = gateb.row(i);
-                let ur = upb.row(i);
-                for j in 0..cfg.d_ff {
-                    ar[j] = silu(gr[j]) * ur[j];
-                }
-            }
-            if let Some(t) = taps.as_deref_mut() {
-                t.layers[li].mlp_act.record_rows(actb);
-            }
-            layer.w_down.apply_batch_into(actb, downb, gemm);
-            for i in 0..n {
-                let xr = xb.row_mut(i);
-                for (j, &v) in downb.row(i).iter().enumerate() {
-                    xr[j] += v;
-                }
-            }
+            self.layer_body(
+                li,
+                layer,
+                DecodePrecision::Full,
+                caches,
+                slots,
+                xb,
+                &mut bufs,
+                taps.as_deref_mut(),
+            );
         }
-        kv.set_len(pos0 + n);
+        caches[0].kv_mut().set_len(pos0 + n);
         if !need_logits {
             // Intermediate chunk: the cache is written; skip the head.
             ensure(logits, 0);
@@ -929,8 +939,86 @@ impl Transformer {
             t.windows += 1;
         }
         ensure(logits, cfg.vocab_size);
-        self.lm_head.apply_with(h, logits, gemm);
+        self.lm_head.apply_with(h, logits, bufs.gemm);
         logits
+    }
+
+    /// Batched *verify* forward for speculative decoding: append `tokens`
+    /// prefill-style to one cache at full precision — overwriting any
+    /// draft-quality KV rows at those positions before attention reads
+    /// them — and return logits for **every** position, `[n, vocab]`,
+    /// the scores the accept-longest-prefix rule compares against the
+    /// draft tokens. Row `i`'s logits are bit-identical to what a plain
+    /// decode step at position `pos0 + i` would produce for the packed
+    /// segmented schemes: the tile kernels accumulate each output lane
+    /// independently of batch width, and attention reads the same float
+    /// rows either way.
+    pub fn forward_verify_with<'s, C: AsKvStore>(
+        &self,
+        tokens: &[u32],
+        cache: &mut C,
+        scratch: &'s mut ForwardScratch,
+    ) -> &'s Tensor {
+        let n = tokens.len();
+        assert!(n > 0, "empty verify chunk");
+        let pos0 = cache.kv().len();
+        assert!(pos0 + n <= self.cfg.max_seq, "sequence overflow");
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+
+        let ForwardScratch {
+            gemm,
+            scores,
+            qi,
+            slots,
+            xb,
+            hb,
+            qb,
+            kxb,
+            vxb,
+            attnb,
+            ob,
+            gateb,
+            upb,
+            actb,
+            downb,
+            logitsb,
+            ..
+        } = scratch;
+
+        slots.clear();
+        slots.extend((0..n).map(|i| (0usize, pos0 + i)));
+        xb.resize(&[n, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            xb.row_mut(i).copy_from_slice(self.embed.row(t as usize));
+        }
+        let mut bufs = LayerBufs {
+            gemm,
+            scores,
+            qi,
+            hb,
+            qb,
+            kxb,
+            vxb,
+            attnb,
+            ob,
+            gateb,
+            upb,
+            actb,
+            downb,
+        };
+        let caches = std::slice::from_mut(cache);
+        for (li, layer) in self.layers.iter().enumerate() {
+            self.layer_body(li, layer, DecodePrecision::Full, caches, slots, xb, &mut bufs, None);
+        }
+        caches[0].kv_mut().set_len(pos0 + n);
+        for i in 0..n {
+            bufs.qi.clear();
+            bufs.qi.extend_from_slice(xb.row(i));
+            rmsnorm(bufs.qi, &self.final_norm, xb.row_mut(i));
+        }
+        self.lm_head.apply_batch_into(xb, logitsb, bufs.gemm);
+        logitsb
     }
 }
 
@@ -1312,6 +1400,114 @@ mod tests {
         let (_, reports) = m.quantized_report(&Quantizer::new(plan)).unwrap();
         let rep = reports.iter().find(|r| r.layer == "layers.0.w_down").unwrap();
         assert_eq!(rep.scheme, Scheme::parse("fp8").unwrap());
+    }
+
+    /// The verify forward returns, for every fed position, logits
+    /// bit-identical to feeding the same tokens through plain batched
+    /// decode — the property the speculative accept rule relies on —
+    /// and leaves an interchangeable cache.
+    #[test]
+    fn verify_forward_matches_decode_bitwise() {
+        use crate::quant::Granularity;
+        let m = tiny_model();
+        for (name, gran) in [
+            ("fp6-e2m3", Granularity::PerChannel),
+            ("fp5-e2m2", Granularity::PerChannel),
+            ("fp4.25", Granularity::PerGroup(32)),
+        ] {
+            let q = m
+                .quantized(&QuantConfig::paper(Scheme::parse(name).unwrap()).with_granularity(gran))
+                .unwrap();
+            let mut scratch = q.new_scratch();
+            let prompt = [1u32, 5, 9];
+            let step = [2u32, 17, 33, 7];
+            let mut c_dec = q.new_cache();
+            q.forward_prefill_with(&prompt, &mut c_dec, &mut scratch);
+            let mut c_ver = c_dec.clone();
+            let mut dec_logits = Vec::new();
+            for &t in &step {
+                let l = q
+                    .forward_batch_with(&[t], std::slice::from_mut(&mut c_dec), &mut scratch)
+                    .clone();
+                dec_logits.push(l.row(0).to_vec());
+            }
+            let ver = q.forward_verify_with(&step, &mut c_ver, &mut scratch).clone();
+            for (i, dl) in dec_logits.iter().enumerate() {
+                for (j, (a, b)) in ver.row(i).iter().zip(dl).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name} pos {i} logit {j}");
+                }
+            }
+            assert_eq!(c_ver.len, c_dec.len, "{name}");
+            for li in 0..q.cfg.n_layers {
+                for p in 0..c_ver.len {
+                    assert_eq!(c_ver.k_row(li, p), c_dec.k_row(li, p), "{name} k {li}/{p}");
+                    assert_eq!(c_ver.v_row(li, p), c_dec.v_row(li, p), "{name} v {li}/{p}");
+                }
+            }
+        }
+    }
+
+    /// Draft steps write hi-only KV rows; rewinding the length and
+    /// running the verify forward over the same positions leaves the
+    /// cache exactly as if the tokens had been decoded at full precision
+    /// all along (the per-layer write-before-attend ordering guarantees
+    /// no draft-quality row is ever read by the verify pass).
+    #[test]
+    fn verify_overwrites_draft_kv() {
+        let m = tiny_model();
+        let q = m.quantized(&QuantConfig::paper(Scheme::parse("fp4.25").unwrap())).unwrap();
+        let mut scratch = q.new_scratch();
+        let prompt = [3u32, 1, 4];
+        let mut c_spec = q.new_cache();
+        q.forward_prefill_with(&prompt, &mut c_spec, &mut scratch);
+        let mut c_ref = c_spec.clone();
+        let l0 = q.forward_draft_with(7, 3, &mut c_spec, &mut scratch).to_vec();
+        assert!(l0.iter().all(|v| v.is_finite()));
+        q.forward_draft_with(9, 4, &mut c_spec, &mut scratch);
+        c_spec.set_len(3);
+        q.forward_verify_with(&[7, 9], &mut c_spec, &mut scratch);
+        q.forward_verify_with(&[7, 9], &mut c_ref, &mut scratch);
+        for li in 0..q.cfg.n_layers {
+            for p in 0..5 {
+                assert_eq!(c_spec.k_row(li, p), c_ref.k_row(li, p), "k {li}/{p}");
+                assert_eq!(c_spec.v_row(li, p), c_ref.v_row(li, p), "v {li}/{p}");
+            }
+        }
+    }
+
+    /// On a model with no hi/lo split anywhere (dense reference) the
+    /// draft forward is exactly the full forward.
+    #[test]
+    fn draft_on_dense_model_is_full_forward() {
+        let m = tiny_model();
+        let mut s = m.new_scratch();
+        let mut ca = m.new_cache();
+        let mut cb = m.new_cache();
+        for (p, &t) in [1u32, 5, 9].iter().enumerate() {
+            let a = m.forward_with(t, p, &mut ca, &mut s).to_vec();
+            let b = m.forward_draft_with(t, p, &mut cb, &mut s).to_vec();
+            assert_eq!(a, b, "pos {p}");
+        }
+    }
+
+    /// The hi-only draft forward differs from the full forward on a
+    /// segmented-scheme model (it really is reading less mantissa) but
+    /// stays finite and usable as a proposal distribution.
+    #[test]
+    fn draft_on_segmented_model_runs_hi_only() {
+        let m = tiny_model();
+        let q = m.quantized(&QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap())).unwrap();
+        let mut s = q.new_scratch();
+        let mut ca = q.new_cache();
+        let mut cb = q.new_cache();
+        let mut differed = false;
+        for (p, &t) in [1u32, 5, 9].iter().enumerate() {
+            let a = q.forward_with(t, p, &mut ca, &mut s).to_vec();
+            let b = q.forward_draft_with(t, p, &mut cb, &mut s).to_vec();
+            assert!(b.iter().all(|v| v.is_finite()), "pos {p}");
+            differed |= a != b;
+        }
+        assert!(differed, "hi-only draft must not equal the full forward");
     }
 
     #[test]

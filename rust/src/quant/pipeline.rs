@@ -273,6 +273,13 @@ pub struct QuantReport {
     /// Reconstruction MSE against the dense source weights.
     pub mse: f64,
     pub sqnr_db: f64,
+    /// SQNR (dB) of the hi-stream truncated reconstruction — the
+    /// effective weights the speculative draft forward multiplies by
+    /// (low mantissa bits dropped, least-squares rescale applied) —
+    /// against the dense source. The gap to [`QuantReport::sqnr_db`]
+    /// predicts draft quality per layer. NaN when the layout has no
+    /// hi/lo split, so the hi-only draft decode cannot serve it.
+    pub hi_sqnr_db: f64,
     /// AMS schemes: sharing groups whose chosen shared bit is 1.
     pub shared_ones: usize,
     /// AMS schemes: total sharing groups (0 for non-AMS schemes).
@@ -450,6 +457,9 @@ fn report_for(
             / (packed.rows * packed.cols) as f64,
         mse: metrics::mse(w, &deq),
         sqnr_db: metrics::sqnr_db(w, &deq),
+        hi_sqnr_db: crate::gemm::QuantLinear::new(packed.clone())
+            .hi_dequantize()
+            .map_or(f64::NAN, |hi| metrics::sqnr_db(w, &hi)),
         shared_ones,
         shared_groups,
     }
@@ -642,6 +652,17 @@ mod tests {
             .unwrap();
         assert!(rep6.sqnr_db > rep.sqnr_db);
         assert_eq!(rep6.shared_groups, 0, "fp6 has no sharing groups");
+        // Hi-stream draft quality: segmented layouts report a finite
+        // truncated SQNR strictly below the full reconstruction; layouts
+        // without a hi/lo split report the NaN sentinel.
+        assert!(rep.hi_sqnr_db.is_finite() && rep.hi_sqnr_db > 0.0);
+        assert!(rep.hi_sqnr_db < rep.sqnr_db, "truncation must cost SQNR");
+        assert!(rep6.hi_sqnr_db.is_finite() && rep6.hi_sqnr_db < rep6.sqnr_db);
+        let (_, rep8) = Quantizer::uniform(cfg("fp8"))
+            .unwrap()
+            .quantize_layer("layers.0.wq", LayerRole::Attention, &w)
+            .unwrap();
+        assert!(rep8.hi_sqnr_db.is_nan(), "fp8 has no hi/lo split");
         // Scale-stream accounting: per-channel is 32/cols bits/weight;
         // per-group adds 32/g on top (the tradeoff the report exposes).
         assert!((rep.scale_bits_per_weight - 32.0 / 96.0).abs() < 1e-9);

@@ -1,0 +1,428 @@
+//! Hi-stream self-speculative decoding: draft with the hi mantissa
+//! stream, verify with the full bitstream.
+//!
+//! AMS-style segmented layouts store every weight as a hi word stream
+//! plus a lo word stream (`PackedTensor::row_streams`). The hi stream
+//! alone is a coarser FPx quantization of the *same* tensor — decode it
+//! with the lo bits zero-filled and a least-squares rescale
+//! ([`QuantLinear::hi_rescale`](crate::gemm::QuantLinear::hi_rescale))
+//! and the model doubles as its own draft model: shared weights, shared
+//! KV layout, roughly half the weight-stream traffic per token. One
+//! [`Controller::round`] is:
+//!
+//! ```text
+//! round(next_token = t, k):
+//!   draft   k tokens one at a time at DecodePrecision::HiOnly,
+//!           writing KV rows [L, L+k) — hi words only
+//!   rewind  set_len(L)            (pages stay put)
+//!   verify  forward_verify_with([t, d1..d(k-1)]) — ONE full-precision
+//!           batched pass over the same k positions, overwriting the
+//!           draft KV rows with full-precision rows
+//!   accept  longest prefix with d_i == sample(verify row i); on a
+//!           mismatch emit the verifier's token instead and truncate()
+//!           the dead tail (whole pages actually freed)
+//! ```
+//!
+//! Every emitted token is re-derived by the verify pass from
+//! full-precision logits over full-precision KV, and the GEMM row
+//! kernels accumulate each output lane independently of batch width —
+//! so greedy speculative decoding is **token-identical** to plain
+//! greedy decoding (`rust/tests/spec_decode.rs` pins this per scheme).
+//! The draft stream only decides how often verify accepts; it can never
+//! change what is emitted. Schemes without a hi/lo split draft at full
+//! precision (the kernel gate falls back), making acceptance exact.
+//!
+//! [`SeqSpec`] carries the per-sequence adaptive draft depth: an EWMA
+//! of the acceptance rate grows the depth (up to twice the configured
+//! baseline) while drafts keep landing, and shrinks it toward 1 when
+//! the hi stream disagrees with the full bitstream. The batching
+//! scheduler ([`batcher`](crate::coordinator::batcher)) runs one round
+//! per greedy sequence per decode step, caps `k` by token budget and
+//! KV-page availability, and leaves non-greedy samplers on the plain
+//! batched path — speculation is only lossless under argmax.
+
+use crate::kv::{AsKvStore, KvStore};
+use crate::model::transformer::{ForwardScratch, Transformer};
+
+/// Speculative-decoding knobs, embedded in
+/// [`BatchPolicy`](crate::coordinator::batcher::BatchPolicy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecPolicy {
+    /// Master switch; off = plain batched decode for every sequence.
+    pub enabled: bool,
+    /// Baseline draft depth `k`: tokens drafted per verify pass.
+    pub draft_depth: usize,
+    /// Adapt each sequence's depth from its running acceptance rate.
+    pub adaptive: bool,
+}
+
+impl Default for SpecPolicy {
+    fn default() -> SpecPolicy {
+        SpecPolicy {
+            enabled: false,
+            draft_depth: 4,
+            adaptive: true,
+        }
+    }
+}
+
+impl SpecPolicy {
+    /// Ceiling the adaptive controller may grow a sequence's depth to.
+    pub fn depth_cap(&self) -> usize {
+        (self.draft_depth * 2).max(1)
+    }
+}
+
+/// Per-sequence adaptive draft-depth state. Purely deterministic: the
+/// depth is a function of the observed accept/draft counts alone, so
+/// speculative runs replay exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct SeqSpec {
+    depth: usize,
+    accept_ewma: f64,
+}
+
+impl SeqSpec {
+    const ALPHA: f64 = 0.25;
+    const RAISE: f64 = 0.75;
+    const LOWER: f64 = 0.35;
+
+    pub fn new(policy: &SpecPolicy) -> SeqSpec {
+        SeqSpec {
+            depth: policy.draft_depth.max(1),
+            accept_ewma: 0.5,
+        }
+    }
+
+    /// Draft depth the next round should use (before budget/page caps).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Running acceptance-rate estimate in `[0, 1]`.
+    pub fn accept_ewma(&self) -> f64 {
+        self.accept_ewma
+    }
+
+    /// Fold one round's outcome into the estimate and (when the policy
+    /// allows) step the depth: grow while drafts keep landing, shrink
+    /// toward 1 when the hi stream keeps missing.
+    pub fn observe(&mut self, stats: &RoundStats, policy: &SpecPolicy) {
+        if stats.drafted == 0 {
+            return;
+        }
+        let rate = stats.accepted as f64 / stats.drafted as f64;
+        self.accept_ewma += Self::ALPHA * (rate - self.accept_ewma);
+        if !policy.adaptive {
+            return;
+        }
+        if self.accept_ewma >= Self::RAISE && self.depth < policy.depth_cap() {
+            self.depth += 1;
+        } else if self.accept_ewma <= Self::LOWER && self.depth > 1 {
+            self.depth -= 1;
+        }
+    }
+}
+
+/// Outcome of one [`Controller::round`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundStats {
+    /// Tokens drafted this round (the `k` actually used).
+    pub drafted: usize,
+    /// Draft tokens the verifier agreed with.
+    pub accepted: usize,
+    /// Tokens appended to `out` (accepted drafts, plus the verifier's
+    /// correction on a mismatch, minus anything past an EOS).
+    pub emitted: usize,
+}
+
+/// Drives draft → verify → accept rounds. One controller serves a whole
+/// scheduler: it owns only reusable token buffers and fleet-level
+/// counters, while per-sequence state lives in [`SeqSpec`].
+#[derive(Debug, Default)]
+pub struct Controller {
+    draft_buf: Vec<u32>,
+    verify_buf: Vec<u32>,
+    /// Total tokens drafted across all rounds.
+    pub drafted: u64,
+    /// Total draft tokens accepted by verify across all rounds.
+    pub accepted: u64,
+    /// Rounds driven.
+    pub rounds: u64,
+}
+
+impl Controller {
+    pub fn new() -> Controller {
+        Controller::default()
+    }
+
+    /// Lifetime acceptance rate (accepted drafts / drafted tokens).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted > 0 {
+            self.accepted as f64 / self.drafted as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// One speculative round over `cache`, whose committed length `L`
+    /// must satisfy the standard decode invariant: positions `< L` are
+    /// fed, `next_token` is the last sampled token, not yet fed.
+    ///
+    /// Drafts `k ≥ 1` tokens at hi-only precision, verifies all of them
+    /// in one full-precision batched pass, and appends the emitted
+    /// tokens (accepted prefix, plus the verifier's correction on a
+    /// mismatch, cut at the first `eos`) to `out`. On return the cache
+    /// holds exactly `L + emitted` positions — full-precision KV rows
+    /// only — and `out.last()` is the new `next_token`.
+    ///
+    /// `sample` maps a logits row to a token (the scheduler passes the
+    /// request's sampler; identity with plain decoding requires it to
+    /// be deterministic, i.e. greedy). `before_verify` runs after
+    /// drafting and before the verify forward — the scheduler's
+    /// failpoint hook for the chaos suite.
+    #[allow(clippy::too_many_arguments)]
+    pub fn round<C: AsKvStore>(
+        &mut self,
+        model: &Transformer,
+        cache: &mut C,
+        scratch: &mut ForwardScratch,
+        next_token: u32,
+        k: usize,
+        eos: Option<u32>,
+        sample: &mut dyn FnMut(&[f32]) -> u32,
+        before_verify: &mut dyn FnMut(),
+        out: &mut Vec<u32>,
+    ) -> RoundStats {
+        let l0 = cache.kv().len();
+        assert!(k >= 1, "draft depth must be at least 1");
+        assert!(l0 + k <= model.cfg.max_seq, "draft would run past max_seq");
+
+        // Draft phase: hi-only forwards, one token at a time, KV rows
+        // [l0, l0 + k) written at draft quality.
+        self.draft_buf.clear();
+        let mut t = next_token;
+        for i in 0..k {
+            let logits = model.forward_draft_with(t, l0 + i, cache, scratch);
+            t = sample(logits);
+            self.draft_buf.push(t);
+        }
+
+        // Rewind the frontier without releasing storage — verify
+        // rewrites exactly the rows the draft pass dirtied.
+        cache.kv_mut().set_len(l0);
+        before_verify();
+        self.verify_buf.clear();
+        self.verify_buf.push(next_token);
+        self.verify_buf.extend_from_slice(&self.draft_buf[..k - 1]);
+        let logits = model.forward_verify_with(&self.verify_buf, cache, scratch);
+
+        // Accept the longest draft prefix the verifier agrees with.
+        let mut accepted = 0;
+        let mut correction = None;
+        for i in 0..k {
+            let v = sample(logits.row(i));
+            if v == self.draft_buf[i] {
+                accepted += 1;
+            } else {
+                correction = Some(v);
+                break;
+            }
+        }
+
+        let start = out.len();
+        out.extend_from_slice(&self.draft_buf[..accepted]);
+        if let Some(v) = correction {
+            out.push(v);
+            // Rejection: the tail rows are dead — return whole pages.
+            cache.kv_mut().truncate(l0 + accepted + 1);
+        }
+        // Plain decoding stops at the first EOS, so anything verified
+        // past one inside this round never happened: cut the emission
+        // and roll the cache back to match.
+        if let Some(eos) = eos {
+            if let Some(p) = out[start..].iter().position(|&tok| tok == eos) {
+                out.truncate(start + p + 1);
+                cache.kv_mut().truncate(l0 + p + 1);
+            }
+        }
+        let emitted = out.len() - start;
+        debug_assert_eq!(cache.kv().len(), l0 + emitted);
+
+        self.rounds += 1;
+        self.drafted += k as u64;
+        self.accepted += accepted as u64;
+        RoundStats {
+            drafted: k,
+            accepted,
+            emitted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::registry::Scheme;
+    use crate::model::sampler::argmax;
+    use crate::model::synthetic::synthetic_checkpoint;
+    use crate::model::transformer::Transformer;
+    use crate::model::ModelConfig;
+    use crate::quant::{QuantConfig, Quantizer};
+
+    fn model(scheme: Option<&str>) -> Transformer {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 33);
+        let base = Transformer::from_checkpoint(&ck).unwrap();
+        match scheme {
+            None => base,
+            Some(s) => base
+                .quantized_with(
+                    &Quantizer::uniform(QuantConfig::paper(Scheme::parse(s).unwrap())).unwrap(),
+                )
+                .unwrap(),
+        }
+    }
+
+    /// Plain greedy reference: prefill token-by-token, then decode.
+    fn greedy_tokens(model: &Transformer, prompt: &[u32], n: usize, eos: Option<u32>) -> Vec<u32> {
+        let mut cache = model.new_cache();
+        let mut scratch = model.new_scratch();
+        let mut last = 0u32;
+        for (i, &t) in prompt.iter().enumerate() {
+            let logits = model.forward_with(t, i, &mut cache, &mut scratch);
+            last = argmax(logits) as u32;
+        }
+        let mut toks = vec![last];
+        while toks.len() < n && Some(last) != eos {
+            let pos = cache.len();
+            let logits = model.forward_with(last, pos, &mut cache, &mut scratch);
+            last = argmax(logits) as u32;
+            toks.push(last);
+        }
+        toks
+    }
+
+    /// Speculative generation through Controller rounds.
+    fn spec_tokens(
+        model: &Transformer,
+        prompt: &[u32],
+        n: usize,
+        eos: Option<u32>,
+        policy: &SpecPolicy,
+    ) -> (Vec<u32>, Controller) {
+        let mut cache = model.new_cache();
+        let mut scratch = model.new_scratch();
+        let mut ctl = Controller::new();
+        let mut seq = SeqSpec::new(policy);
+        let mut last = 0u32;
+        for (i, &t) in prompt.iter().enumerate() {
+            let logits = model.forward_with(t, i, &mut cache, &mut scratch);
+            last = argmax(logits) as u32;
+        }
+        let mut out = vec![last];
+        while out.len() < n && Some(last) != eos {
+            let budget = n - out.len();
+            let l0 = cache.len();
+            let k = seq.depth().min(budget).min(model.cfg.max_seq - l0);
+            let stats = ctl.round(
+                model,
+                &mut cache,
+                &mut scratch,
+                last,
+                k,
+                eos,
+                &mut |row| argmax(row) as u32,
+                &mut || {},
+                &mut out,
+            );
+            seq.observe(&stats, policy);
+            last = *out.last().unwrap();
+            assert_eq!(cache.len(), prompt.len() + out.len() - 1);
+        }
+        (out, ctl)
+    }
+
+    #[test]
+    fn greedy_spec_is_token_identical_on_split_scheme() {
+        let m = model(Some("fp6-e2m3"));
+        let plain = greedy_tokens(&m, &[1, 5, 9], 24, None);
+        let (spec, ctl) = spec_tokens(&m, &[1, 5, 9], 24, None, &SpecPolicy::default());
+        assert_eq!(plain, spec);
+        assert!(ctl.drafted > 0 && ctl.rounds > 0);
+    }
+
+    #[test]
+    fn dense_draft_accepts_everything() {
+        // No hi/lo split → the draft pass IS the full forward, so the
+        // verifier must agree with every draft.
+        let m = model(None);
+        let plain = greedy_tokens(&m, &[2, 7], 16, None);
+        let (spec, ctl) = spec_tokens(&m, &[2, 7], 16, None, &SpecPolicy::default());
+        assert_eq!(plain, spec);
+        assert_eq!(ctl.accepted, ctl.drafted);
+        assert!((ctl.acceptance_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eos_inside_a_round_cuts_the_emission() {
+        let m = model(Some("fp4.25"));
+        let plain = greedy_tokens(&m, &[3, 11], 24, None);
+        // Pick a token the plain stream emits mid-run and declare it EOS.
+        let eos = plain[7];
+        let cut = plain.iter().position(|&t| t == eos).unwrap();
+        let (spec, _) = spec_tokens(&m, &[3, 11], 24, Some(eos), &SpecPolicy::default());
+        assert_eq!(&plain[..=cut], &spec[..]);
+        assert_eq!(*spec.last().unwrap(), eos);
+    }
+
+    #[test]
+    fn adaptive_depth_rises_and_falls_with_acceptance() {
+        let policy = SpecPolicy {
+            enabled: true,
+            draft_depth: 4,
+            adaptive: true,
+        };
+        let mut seq = SeqSpec::new(&policy);
+        for _ in 0..32 {
+            let k = seq.depth();
+            seq.observe(
+                &RoundStats {
+                    drafted: k,
+                    accepted: k,
+                    emitted: k,
+                },
+                &policy,
+            );
+        }
+        assert_eq!(seq.depth(), policy.depth_cap());
+        for _ in 0..64 {
+            let k = seq.depth();
+            seq.observe(
+                &RoundStats {
+                    drafted: k,
+                    accepted: 0,
+                    emitted: 1,
+                },
+                &policy,
+            );
+        }
+        assert_eq!(seq.depth(), 1);
+        // Frozen when the policy says so.
+        let frozen = SpecPolicy {
+            adaptive: false,
+            ..policy
+        };
+        let mut seq = SeqSpec::new(&frozen);
+        for _ in 0..16 {
+            seq.observe(
+                &RoundStats {
+                    drafted: 4,
+                    accepted: 4,
+                    emitted: 4,
+                },
+                &frozen,
+            );
+        }
+        assert_eq!(seq.depth(), 4);
+    }
+}

@@ -23,13 +23,15 @@
 //! round. Set `CHAOS_REPORT=/path/file.txt` to append one summary line
 //! per round for artifact archiving.
 
-use ams_quant::coordinator::failpoint::{POOL, PREFILL, QUEUE_PUSH, STEP};
+use ams_quant::coordinator::failpoint::{POOL, PREFILL, QUEUE_PUSH, STEP, VERIFY};
 use ams_quant::coordinator::{
     DispatchPolicy, Engine, EngineError, Event, FailPoints, FailSpec, GenRequest, Priority,
 };
+use ams_quant::formats::registry::Scheme;
 use ams_quant::model::synthetic::synthetic_checkpoint;
 use ams_quant::model::transformer::Transformer;
 use ams_quant::model::ModelConfig;
+use ams_quant::quant::QuantConfig;
 use ams_quant::util::prng::Rng;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -393,6 +395,89 @@ fn pool_exhaustion_preempts_and_leaks_no_pages() {
         t.cancelled,
         gauges.pages_peak.load(Relaxed),
         stats.prefix_hits
+    ));
+}
+
+/// Speculative-decoding failpoint round: a panic injected *between* a
+/// round's draft pass and its verify forward, on a quantized
+/// hi/lo-split engine. This is the worst window for page hygiene — the
+/// draft has already written hi-only KV rows into reserved speculative
+/// tail pages and the frontier has just been rewound for the verify
+/// overwrite — so the supervisor's cleanup must recycle those pages
+/// along with everything else. Invariants: exactly one terminal per
+/// request, the replica restarts and serves again, and the drop-audit
+/// shows zero leaked pages.
+#[test]
+fn spec_verify_panic_leaks_no_pages() {
+    const SEED: u64 = 0x5BEC;
+    let fp = FailPoints::seeded(SEED);
+    // The third speculative round's verify hook panics: rounds one and
+    // two complete normally first, so real draft/accept state exists.
+    fp.arm_tagged(VERIFY, 0, FailSpec::panic_on_hit(3));
+
+    let qcfg = QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap());
+    let eng = Engine::builder()
+        .replicas(1)
+        .max_batch(4)
+        .kv_page_size(4)
+        .queue_capacity(64)
+        .speculative(true)
+        .draft_depth(3)
+        .seed(SEED)
+        .restart_backoff(Duration::from_millis(1), Duration::from_millis(20))
+        .failpoints(std::sync::Arc::clone(&fp))
+        .build(model().quantized(&qcfg).unwrap());
+    let gauges = eng.kv_gauges();
+
+    let handles: Vec<_> = (0..12u64)
+        .map(|id| {
+            let prompt = vec![(id as u32 % 50) + 1, (id as u32 % 7) + 2, 3];
+            eng.submit(GenRequest::greedy(id, prompt, 8))
+                .expect("capacity 64 holds the workload")
+        })
+        .collect();
+
+    let mut t = Terminals::default();
+    t.drain(handles, "spec-verify");
+    assert_eq!(t.total(), 12);
+    assert_eq!(
+        t.done + t.failed,
+        12,
+        "no cancels or deadlines in this workload: {t:?}"
+    );
+    assert_eq!(fp.fired(VERIFY), 1, "the mid-round panic was injected");
+
+    // The panicked replica restarts and keeps speculating.
+    wait_all_healthy(&eng, "spec-verify");
+    let probe = eng.submit(GenRequest::greedy(100, vec![7, 8], 5)).unwrap();
+    assert_eq!(probe.wait().expect("served after restart").tokens.len(), 5);
+
+    eng.drain();
+    assert_eq!(eng.outstanding(), 0, "no leaked outstanding shares");
+    assert_eq!(eng.queue_depths(), vec![0], "no leaked queue slots");
+
+    let stats = eng.shutdown();
+    assert_eq!(stats.panics_recovered, 1);
+    assert!(stats.drafted > 0, "speculative rounds ran: {stats:?}");
+    assert!(stats.accepted <= stats.drafted);
+    assert_eq!(
+        stats.requests + stats.cancelled + stats.timed_out + stats.failed,
+        13,
+        "terminal conservation: 12 workload + 1 probe ({stats:?})"
+    );
+    // Drop-audit: the engine (and every scheduler pool) is gone; the
+    // draft tail pages from the interrupted round must all be recycled.
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(gauges.pages_used.load(Relaxed), 0, "pages still marked used");
+    assert_eq!(gauges.leaked.load(Relaxed), 0, "block-table pages leaked");
+    report(&format!(
+        "spec-verify seed={SEED:#x} done={} failed={} drafted={} accepted={} \
+         acceptance={:.3}",
+        t.done,
+        t.failed,
+        stats.drafted,
+        stats.accepted,
+        stats.acceptance_rate()
     ));
 }
 

@@ -320,6 +320,44 @@ fn golden_vectors_lock_kernel_numerics() {
     }
 }
 
+/// Mixed per-batch activations: with *distinct* activation rows at
+/// b ∈ {3, 9}, every GEMM output row must equal, bit for bit, the gemv
+/// of its own activation row — pinning the tiled GEMM's traversal order
+/// (each output lane accumulates independently, in the single-vector
+/// kernel's block order, however the batch tiles). The golden file is
+/// untouched: identical-row batches are already locked against the
+/// goldens above; this closes the gap where a tile-ladder bug could
+/// cross activation rows yet cancel out on identical rows.
+#[test]
+fn mixed_batch_gemm_rows_match_gemv_bitwise() {
+    let mut scratch = GemmScratch::new();
+    for (name, gran, cols) in all_cases() {
+        let (lin, _) = build_case(name, gran, cols);
+        for batch in [3usize, 9] {
+            // Per-row-distinct activations on the same small-integer
+            // grid as the fixture's x (the exactness bound of the module
+            // docs is unchanged), from a stream decoupled from the
+            // fixture's by a seed rotation.
+            let mut rng = Lcg(case_seed(name, gran, cols).rotate_left(17) | 1);
+            let xs: Vec<f32> = (0..batch * cols)
+                .map(|_| (rng.draw(5) as i64 - 2) as f32)
+                .collect();
+            let xb = Tensor::from_vec(&[batch, cols], xs);
+            let yb = lin.gemm_with(&xb, &mut scratch);
+            for b in 0..batch {
+                let mut yr = vec![0f32; ROWS];
+                lin.gemv_with(xb.row(b), &mut yr, &mut scratch);
+                let gemm_bits: Vec<u32> = yb.row(b).iter().map(|v| v.to_bits()).collect();
+                let gemv_bits: Vec<u32> = yr.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    gemm_bits, gemv_bits,
+                    "{name} {gran} cols={cols}: gemm row {b}/{batch} vs gemv"
+                );
+            }
+        }
+    }
+}
+
 /// The fixture generator itself is pinned: a handful of spot values so
 /// an accidental LCG/seed change fails here with a clear message rather
 /// than as 98 golden mismatches.

@@ -1,0 +1,352 @@
+//! Self-speculative decoding acceptance suite.
+//!
+//! The contract under test: drafting from the hi mantissa stream and
+//! verifying with the full bitstream is **token-identical** to plain
+//! greedy decoding — end to end through the serving engine, for every
+//! segmented scheme at per-channel and grouped granularity, over both
+//! the contiguous and the paged KV cache. Every emitted token is
+//! re-derived by the full-precision verify pass, and the GEMM row
+//! kernels accumulate each output lane independently of batch width,
+//! so the draft stream can only change how often verify accepts, never
+//! what is emitted.
+//!
+//! Also pinned here: rejection rolls the paged KV back and returns the
+//! dead tail pages to the pool; layouts without a hi/lo split fall back
+//! to full-precision drafts (acceptance is then exact); and the draft
+//! forward provably never reads a lo-stream word (flipping every lo
+//! word in every projection leaves draft logits bit-identical while
+//! the full decode visibly changes).
+
+use std::sync::Arc;
+
+use ams_quant::coordinator::{Engine, GenRequest};
+use ams_quant::formats::registry::Scheme;
+use ams_quant::kv::{AsKvStore, KvGauges, KvStore, PageGeometry, PagePool, PagedKvCache};
+use ams_quant::model::sampler::argmax;
+use ams_quant::model::synthetic::synthetic_checkpoint;
+use ams_quant::model::transformer::{Linear, Transformer};
+use ams_quant::model::ModelConfig;
+use ams_quant::pack::hi_stream_words;
+use ams_quant::quant::{Granularity, QuantConfig};
+use ams_quant::spec::{Controller, RoundStats, SeqSpec, SpecPolicy};
+
+fn base_model() -> Transformer {
+    let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 57);
+    Transformer::from_checkpoint(&ck).unwrap()
+}
+
+fn quantized(base: &Transformer, scheme: &str, group: Option<usize>) -> Transformer {
+    let mut cfg = QuantConfig::paper(Scheme::parse(scheme).unwrap());
+    if let Some(g) = group {
+        cfg = cfg.with_granularity(Granularity::PerGroup(g));
+    }
+    base.quantized(&cfg).unwrap()
+}
+
+/// Plain greedy reference: token-by-token full-precision decode on a
+/// contiguous cache — the stream speculative decoding must reproduce.
+fn greedy_tokens(m: &Transformer, prompt: &[u32], n: usize) -> Vec<u32> {
+    let mut cache = m.new_cache();
+    let mut scratch = m.new_scratch();
+    let mut last = 0u32;
+    for (i, &t) in prompt.iter().enumerate() {
+        last = argmax(m.forward_with(t, i, &mut cache, &mut scratch)) as u32;
+    }
+    let mut toks = vec![last];
+    while toks.len() < n {
+        let pos = cache.len();
+        last = argmax(m.forward_with(last, pos, &mut cache, &mut scratch)) as u32;
+        toks.push(last);
+    }
+    toks
+}
+
+/// Speculative generation through raw [`Controller`] rounds, generic
+/// over the KV store so the same driver runs contiguous and paged.
+fn spec_gen<C: AsKvStore>(
+    m: &Transformer,
+    cache: &mut C,
+    prompt: &[u32],
+    n: usize,
+    policy: &SpecPolicy,
+) -> (Vec<u32>, Controller) {
+    let mut scratch = m.new_scratch();
+    let mut ctl = Controller::new();
+    let mut seq = SeqSpec::new(policy);
+    let mut last = 0u32;
+    for (i, &t) in prompt.iter().enumerate() {
+        last = argmax(m.forward_with(t, i, cache, &mut scratch)) as u32;
+    }
+    let mut out = vec![last];
+    while out.len() < n {
+        let budget = n - out.len();
+        let l0 = cache.kv().len();
+        let k = seq.depth().min(budget).min(m.cfg.max_seq - l0);
+        let stats = ctl.round(
+            m,
+            cache,
+            &mut scratch,
+            last,
+            k,
+            None,
+            &mut |row| argmax(row) as u32,
+            &mut || {},
+            &mut out,
+        );
+        seq.observe(&stats, policy);
+        last = *out.last().unwrap();
+    }
+    (out, ctl)
+}
+
+/// The headline identity, end to end: a speculative engine emits the
+/// exact token stream of plain greedy decoding for every hi/lo-split
+/// scheme, per-channel and grouped (the engine serves off the paged
+/// cache, so this covers paged speculative decode too).
+#[test]
+fn engine_spec_greedy_is_token_identical_across_split_schemes() {
+    let base = base_model();
+    for scheme in ["fp6-e2m3", "fp5-e2m2", "fp4.5", "fp4.25"] {
+        for group in [None, Some(32), Some(64)] {
+            let q = quantized(&base, scheme, group);
+            let prompts: [&[u32]; 2] = [&[1, 5, 9], &[2, 7]];
+            let want: Vec<Vec<u32>> =
+                prompts.iter().map(|p| greedy_tokens(&q, p, 20)).collect();
+            let eng = Engine::builder()
+                .max_batch(2)
+                .kv_page_size(4)
+                .speculative(true)
+                .draft_depth(3)
+                .seed(9)
+                .build(q);
+            let handles: Vec<_> = prompts
+                .iter()
+                .enumerate()
+                .map(|(id, p)| {
+                    eng.submit(GenRequest::greedy(id as u64, p.to_vec(), 20)).unwrap()
+                })
+                .collect();
+            for (h, want) in handles.into_iter().zip(&want) {
+                let resp = h.wait().expect("completes");
+                assert_eq!(
+                    &resp.tokens, want,
+                    "{scheme} group={group:?} request {}",
+                    resp.id
+                );
+            }
+            let stats = eng.shutdown();
+            assert!(stats.drafted > 0, "{scheme} group={group:?}: no tokens drafted");
+            assert!(stats.accepted <= stats.drafted, "{scheme} group={group:?}");
+        }
+    }
+}
+
+/// Three-way cross-check on one scheme: direct decode loop, plain
+/// engine and speculative engine all emit the same stream, and only the
+/// speculative engine reports draft activity.
+#[test]
+fn engine_spec_matches_plain_engine_and_direct_decode() {
+    let base = base_model();
+    let q = quantized(&base, "fp6-e2m3", None);
+    let want = greedy_tokens(&q, &[3, 1, 4], 24);
+    let plain = Engine::builder().seed(1).build(q.clone());
+    let spec = Engine::builder().speculative(true).draft_depth(4).seed(1).build(q);
+    let a = plain
+        .submit(GenRequest::greedy(0, vec![3, 1, 4], 24))
+        .unwrap()
+        .wait()
+        .expect("plain completes")
+        .tokens;
+    let b = spec
+        .submit(GenRequest::greedy(0, vec![3, 1, 4], 24))
+        .unwrap()
+        .wait()
+        .expect("spec completes")
+        .tokens;
+    assert_eq!(a, want, "plain engine matches the direct decode loop");
+    assert_eq!(b, want, "speculative engine matches both");
+    let ps = plain.shutdown();
+    let ss = spec.shutdown();
+    assert_eq!(ps.drafted, 0, "speculation off drafts nothing");
+    assert_eq!(ps.accepted, 0);
+    assert!(ss.drafted > 0);
+}
+
+/// No hi/lo split (fp8): the kernel gate falls back to full-precision
+/// drafts, so the verifier must agree with every single draft.
+#[test]
+fn no_split_layout_drafts_at_full_precision_with_total_acceptance() {
+    let base = base_model();
+    let q = quantized(&base, "fp8", None);
+    let want = greedy_tokens(&q, &[2, 9, 4], 18);
+    let eng = Engine::builder().speculative(true).draft_depth(3).seed(5).build(q);
+    let resp = eng
+        .submit(GenRequest::greedy(0, vec![2, 9, 4], 18))
+        .unwrap()
+        .wait()
+        .expect("completes");
+    assert_eq!(resp.tokens, want);
+    let stats = eng.shutdown();
+    assert!(stats.drafted > 0);
+    assert_eq!(
+        stats.accepted, stats.drafted,
+        "no hi/lo split: the draft IS the full forward, acceptance is exact"
+    );
+    assert!((stats.acceptance_rate() - 1.0).abs() < 1e-12);
+}
+
+/// Paged-vs-contiguous parity for the speculative path itself: the same
+/// rounds over a [`PagedKvCache`] emit the same tokens with the same
+/// draft/accept counts, and rejection rollbacks leave no stranded tail
+/// pages behind (page size 5 deliberately straddles positions).
+#[test]
+fn paged_and_contiguous_spec_decode_emit_identical_tokens() {
+    let base = base_model();
+    for (scheme, group) in [("fp6-e2m3", None), ("fp4.25", Some(32))] {
+        let q = quantized(&base, scheme, group);
+        let policy = SpecPolicy { enabled: true, draft_depth: 4, adaptive: true };
+        let mut flat = q.new_cache();
+        let (a, ctl_a) = spec_gen(&q, &mut flat, &[1, 5, 9], 24, &policy);
+        let ps = 5;
+        let pool = PagePool::new(
+            PageGeometry::of(&q.cfg, ps),
+            16,
+            Arc::new(KvGauges::default()),
+        );
+        let mut paged = PagedKvCache::new(&pool);
+        let (b, ctl_b) = spec_gen(&q, &mut paged, &[1, 5, 9], 24, &policy);
+        assert_eq!(a, b, "{scheme} group={group:?}: paged spec diverged");
+        assert_eq!(
+            (ctl_a.drafted, ctl_a.accepted, ctl_a.rounds),
+            (ctl_b.drafted, ctl_b.accepted, ctl_b.rounds),
+            "{scheme} group={group:?}: draft economics must not depend on the cache"
+        );
+        assert_eq!(flat.len, paged.len(), "{scheme} group={group:?}");
+        assert_eq!(
+            paged.pages_held(),
+            paged.len().div_ceil(ps),
+            "{scheme} group={group:?}: rollback left stranded tail pages"
+        );
+        assert_eq!(pool.used(), paged.pages_held());
+        paged.reset();
+        assert_eq!(pool.used(), 0, "{scheme} group={group:?}: pages leaked");
+    }
+}
+
+/// A forced mid-round rejection on a dense model (where drafts are
+/// otherwise always accepted): the round emits the accepted prefix plus
+/// the verifier's correction, rolls the paged frontier back to exactly
+/// the emission, and returns the dead tail page to the pool.
+#[test]
+fn rejection_rolls_back_the_paged_kv_and_frees_tail_pages() {
+    let m = base_model();
+    let pool = PagePool::new(
+        PageGeometry::of(&m.cfg, 4),
+        16,
+        Arc::new(KvGauges::default()),
+    );
+    let mut cache = PagedKvCache::new(&pool);
+    let mut scratch = m.new_scratch();
+    let prompt = [3u32, 1, 4, 1, 5, 9];
+    let mut last = 0u32;
+    for (i, &t) in prompt.iter().enumerate() {
+        last = argmax(m.forward_with(t, i, &mut cache, &mut scratch)) as u32;
+    }
+    assert_eq!(pool.used(), 2, "6 prompt positions on 4-row pages");
+
+    let vocab = m.cfg.vocab_size as u32;
+    let mut ctl = Controller::new();
+    let mut out = Vec::new();
+    let mut calls = 0usize;
+    let stats = ctl.round(
+        &m,
+        &mut cache,
+        &mut scratch,
+        last,
+        4,
+        None,
+        // Calls 1-4 are the draft pass; call 6 is verify row 1, forced
+        // to disagree so the round must reject from there. Everything
+        // else is plain argmax, which on a dense model always agrees.
+        &mut |row| {
+            calls += 1;
+            let t = argmax(row) as u32;
+            if calls == 6 { (t + 1) % vocab } else { t }
+        },
+        &mut || {},
+        &mut out,
+    );
+    assert_eq!(stats, RoundStats { drafted: 4, accepted: 1, emitted: 2 });
+    assert_eq!(out.len(), 2);
+    assert_eq!(
+        cache.len(),
+        prompt.len() + 2,
+        "frontier must roll back to the emission"
+    );
+    // The draft touched positions 6..10 (3 pages held mid-round); the
+    // rollback to 8 positions returns the dead third page.
+    assert_eq!(cache.pages_held(), 2);
+    assert_eq!(pool.used(), 2);
+}
+
+/// Instrumented proof at model level that the draft forward reads no
+/// lo-stream words: flip every lo word of every projection and the
+/// draft logits stay bit-identical over a whole token stream, while the
+/// full-precision forward visibly changes.
+#[test]
+fn model_draft_forward_reads_no_lo_words() {
+    let base = base_model();
+    let clean = quantized(&base, "fp6-e2m3", None);
+    let mut poisoned = clean.clone();
+    let mut projections = 0;
+    for l in &mut poisoned.layers {
+        for lin in [
+            &mut l.wq,
+            &mut l.wk,
+            &mut l.wv,
+            &mut l.wo,
+            &mut l.w_gate,
+            &mut l.w_up,
+            &mut l.w_down,
+        ] {
+            let Linear::Quant(q) = lin else {
+                panic!("projection unexpectedly stayed dense")
+            };
+            let hi = hi_stream_words(q.packed.scheme, q.packed.cols);
+            let stride = q.packed.row_stride;
+            for r in 0..q.packed.rows {
+                for w in &mut q.packed.words[r * stride + hi..(r + 1) * stride] {
+                    *w = !*w;
+                }
+            }
+            projections += 1;
+        }
+    }
+    assert_eq!(projections, 14, "2 layers x 7 projections poisoned");
+
+    // Draft-only forwards over a fixed token stream: the KV rows both
+    // models write come from hi-only projections, so any divergence
+    // means the draft path read a lo word somewhere.
+    let toks = [1u32, 5, 9, 2, 7, 4, 8, 3];
+    let mut c1 = clean.new_cache();
+    let mut c2 = poisoned.new_cache();
+    let mut s1 = clean.new_scratch();
+    let mut s2 = poisoned.new_scratch();
+    for (pos, &t) in toks.iter().enumerate() {
+        let a = clean.forward_draft_with(t, pos, &mut c1, &mut s1).to_vec();
+        let b = poisoned.forward_draft_with(t, pos, &mut c2, &mut s2);
+        assert!(
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "draft logits diverged at pos {pos}: the draft path read a lo word"
+        );
+    }
+    // Sanity: the same corruption is plainly visible to the full path —
+    // otherwise this whole test would be vacuous.
+    let pos = toks.len();
+    let a = clean.forward_with(0, pos, &mut c1, &mut s1).to_vec();
+    let b = poisoned.forward_with(0, pos, &mut c2, &mut s2);
+    assert!(
+        a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits()),
+        "full decode ignored the flipped lo words"
+    );
+}
