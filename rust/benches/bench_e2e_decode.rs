@@ -11,12 +11,16 @@
 //! v3 adds a `spec_decode` probe: a speculative engine (draft depth
 //! ≥ 2) on a hi/lo-split scheme must land at least one draft — the
 //! acceptance rate and draft economics are recorded for diffing.
+//! Schema v4 sources percentiles from the engine's streaming metrics
+//! histograms (`Engine::metrics_snapshot`) and adds `ttft_p90_s` /
+//! `step_time_p99_s` per serve entry — CI asserts both.
 //!
 //! Flags: `--steps N` decode steps per iteration, `--serve-requests N`,
 //! `--serve-max-batch B`, `--serve-max-new-tokens T`, `--json-serve PATH`.
 //! Honors `AMS_BENCH_QUICK` / `AMS_BENCH_MEASURE_SECS`.
 
 use ams_quant::coordinator::{Engine, GenRequest, RequestHandle};
+use ams_quant::obs::names;
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
 use ams_quant::model::transformer::{ForwardScratch, KvCache, Transformer};
@@ -129,8 +133,10 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
         let done = handles.into_iter().filter_map(|h| h.wait()).count();
         let wall_s = wall.elapsed_secs();
         eng.drain();
+        let snap = eng.metrics_snapshot();
         let ttft = eng.ttft();
         let lat = eng.latency();
+        let step_time = snap.hist(names::STEP_TIME);
         let kv_pages_peak = eng.kv_pages_peak();
         let stats = eng.shutdown();
         assert_eq!(done, n_requests, "{name}: all requests must complete");
@@ -140,9 +146,9 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
             scheme.label(),
             f(tps, 1),
             f(stats.mean_batch_occupancy(), 2),
-            f(ttft.percentile(50.0) * 1e3, 3),
-            f(ttft.percentile(99.0) * 1e3, 3),
-            f(lat.percentile(50.0) * 1e3, 3),
+            f(ttft.p50 * 1e3, 3),
+            f(ttft.p99 * 1e3, 3),
+            f(lat.p50 * 1e3, 3),
         ]);
         let mut entry = Json::obj();
         entry
@@ -155,10 +161,15 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
             .set("tokens_per_s", Json::Num(tps))
             .set("mean_occupancy", Json::Num(stats.mean_batch_occupancy()))
             .set("decode_steps", Json::Num(stats.decode_steps as f64))
-            .set("ttft_p50_s", Json::Num(ttft.percentile(50.0)))
-            .set("ttft_p99_s", Json::Num(ttft.percentile(99.0)))
-            .set("latency_p50_s", Json::Num(lat.percentile(50.0)))
-            .set("latency_p99_s", Json::Num(lat.percentile(99.0)))
+            .set("ttft_p50_s", Json::Num(ttft.p50))
+            .set("ttft_p90_s", Json::Num(ttft.p90))
+            .set("ttft_p99_s", Json::Num(ttft.p99))
+            .set("latency_p50_s", Json::Num(lat.p50))
+            .set("latency_p99_s", Json::Num(lat.p99))
+            // Schema v4: streaming-histogram percentiles from the
+            // metrics registry (O(1) memory, bounded relative error).
+            .set("step_time_p50_s", Json::Num(step_time.p50))
+            .set("step_time_p99_s", Json::Num(step_time.p99))
             // Paged-KV columns (schema v2). These runs use the default
             // worst-case pool, so preemptions must stay zero.
             .set("kv_page_size", Json::Num(16.0))
@@ -177,7 +188,7 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
 
     let mut root = Json::obj();
     root.set("bench", Json::Str("serve".into()))
-        .set("schema_version", Json::Num(3.0))
+        .set("schema_version", Json::Num(4.0))
         .set("requests", Json::Num(n_requests as f64))
         .set("max_batch", Json::Num(max_batch as f64))
         .set("max_new_tokens", Json::Num(max_new as f64))

@@ -45,9 +45,12 @@ use super::failpoint::{self, FailPoints};
 use super::{Event, GenRequest, GenResponse, Priority};
 use crate::kv::{AsKvStore, KvGauges, KvStore, PageGeometry, PagePool, PagedKvCache};
 use crate::model::transformer::{ForwardScratch, Transformer};
+use crate::obs::{names, Gauge, Histogram, MetricsRegistry, SpanKind, TraceSink};
 use crate::spec::{Controller, SeqSpec, SpecPolicy};
+use crate::util::metrics::Counter;
 use crate::util::prng::Rng;
 use crate::util::timer::Timer;
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -348,6 +351,54 @@ impl AsKvStore for Active {
     }
 }
 
+/// Observability wiring for one scheduler: registry-resolved metric
+/// handles plus the span-trace sink, tagged with the owning replica's
+/// trace track. The engine attaches one per replica via
+/// [`Scheduler::with_obs`]; bare schedulers (unit tests, direct users)
+/// run without it and pay nothing on the hot path. Handles are `Arc`s
+/// into the shared [`MetricsRegistry`], so recording is lock-free and
+/// the registry snapshot sees every replica's data.
+#[derive(Clone)]
+pub struct SchedObs {
+    trace: Arc<TraceSink>,
+    replica: usize,
+    queue_wait: Arc<Histogram>,
+    step_time: Arc<Histogram>,
+    prefill_chunk: Arc<Histogram>,
+    spec_round: Arc<Histogram>,
+    spec_draft: Arc<Histogram>,
+    spec_verify: Arc<Histogram>,
+    decode_steps: Arc<Counter>,
+    batched_tokens: Arc<Counter>,
+    drafted: Arc<Counter>,
+    accepted: Arc<Counter>,
+    spec_rounds: Arc<Counter>,
+    peak_concurrency: Arc<Gauge>,
+}
+
+impl SchedObs {
+    /// Resolve every handle this scheduler records through; `replica` is
+    /// the trace track (`tid`) its span events render on.
+    pub fn new(registry: &MetricsRegistry, trace: Arc<TraceSink>, replica: usize) -> SchedObs {
+        SchedObs {
+            trace,
+            replica,
+            queue_wait: registry.histogram(names::QUEUE_WAIT),
+            step_time: registry.histogram(names::STEP_TIME),
+            prefill_chunk: registry.histogram(names::PREFILL_CHUNK),
+            spec_round: registry.histogram(names::SPEC_ROUND),
+            spec_draft: registry.histogram(names::SPEC_DRAFT),
+            spec_verify: registry.histogram(names::SPEC_VERIFY),
+            decode_steps: registry.counter(names::DECODE_STEPS),
+            batched_tokens: registry.counter(names::BATCHED_TOKENS),
+            drafted: registry.counter(names::SPEC_DRAFTED),
+            accepted: registry.counter(names::SPEC_ACCEPTED),
+            spec_rounds: registry.counter(names::SPEC_ROUNDS),
+            peak_concurrency: registry.gauge(names::PEAK_CONCURRENCY),
+        }
+    }
+}
+
 /// Continuous-batching scheduler bound to one model replica. Owns one
 /// [`ForwardScratch`], so steady-state decode steps perform no heap
 /// allocation (caches are decoded in place — no per-step cache churn),
@@ -373,6 +424,9 @@ pub struct Scheduler {
     tok_buf: Vec<u32>,
     failpoints: Arc<FailPoints>,
     fp_tag: u64,
+    /// Observability wiring (histograms, live counters, span traces);
+    /// absent for bare schedulers.
+    obs: Option<SchedObs>,
     /// Step counter; gates same-step park/resume cycles.
     tick: u64,
     /// Monotone admission counter backing `Active::seq_no`.
@@ -418,6 +472,7 @@ impl Scheduler {
             tok_buf: Vec::new(),
             failpoints: FailPoints::new(),
             fp_tag: 0,
+            obs: None,
             tick: 0,
             seq_counter: 0,
             steps_executed: 0,
@@ -443,6 +498,14 @@ impl Scheduler {
     pub fn with_kv_gauges(mut self, gauges: Arc<KvGauges>) -> Scheduler {
         assert_eq!(self.pool.used(), 0, "with_kv_gauges after pages were allocated");
         self.pool = PagePool::new(self.pool.geometry(), self.pool.capacity(), gauges);
+        self
+    }
+
+    /// Attach observability wiring: span-trace emission and live metric
+    /// recording for every request this scheduler serves (engine
+    /// wiring; see [`SchedObs`]).
+    pub fn with_obs(mut self, obs: SchedObs) -> Scheduler {
+        self.obs = Some(obs);
         self
     }
 
@@ -532,6 +595,7 @@ impl Scheduler {
     /// the sequence left the prefilling list.
     fn advance_prefill_at(&mut self, idx: usize, out: &mut Vec<Outcome>) -> bool {
         self.failpoints.hit(failpoint::PREFILL, self.fp_tag);
+        let chunk_t0 = self.obs.as_ref().map(|o| o.trace.now_us());
         let chunk = self.policy.prefill_chunk.max(1);
         let (consumed, end, stream_len) = {
             let p = &self.prefilling[idx];
@@ -549,6 +613,11 @@ impl Scheduler {
             self.model
                 .forward_prefill_chunk(&stream[consumed..end], &mut p.cache, &mut self.scratch);
             p.consumed = end;
+            if let (Some(o), Some(t0)) = (&self.obs, chunk_t0) {
+                o.trace.span(o.replica, p.sub.id(), SpanKind::PrefillChunk, t0);
+                o.prefill_chunk
+                    .record(o.trace.now_us().saturating_sub(t0) as f64 / 1e6);
+            }
             return false;
         }
         let Prefilling {
@@ -606,6 +675,11 @@ impl Scheduler {
                 }
             }
         };
+        if let (Some(o), Some(t0)) = (&self.obs, chunk_t0) {
+            o.trace.span(o.replica, active.sub.id(), SpanKind::PrefillChunk, t0);
+            o.prefill_chunk
+                .record(o.trace.now_us().saturating_sub(t0) as f64 / 1e6);
+        }
         // Commit the full prompt pages so identical prompt prefixes can
         // adopt them (insert dedups: already-committed pages win).
         let ps = self.pool.geometry().page_size;
@@ -706,6 +780,9 @@ impl Scheduler {
     /// releases every page it held exclusively.
     fn park(&mut self, idx: usize) {
         let a = self.active.swap_remove(idx);
+        if let Some(o) = &self.obs {
+            o.trace.instant(o.replica, a.sub.id(), SpanKind::Preempted);
+        }
         self.note_preemption();
         self.preempted.push_back(Preempted {
             sub: a.sub,
@@ -730,6 +807,9 @@ impl Scheduler {
             out.push(Self::failed_out(sub, "kv page pool exhausted"));
             return true;
         }
+        if let Some(o) = &self.obs {
+            o.trace.instant(o.replica, sub.id(), SpanKind::Preempted);
+        }
         self.note_preemption();
         self.preempted.push_back(Preempted {
             sub,
@@ -746,6 +826,9 @@ impl Scheduler {
     /// mid-decode re-prefills prompt + generated tokens (minus the last,
     /// which decodes next) and then rejoins the batch where it left off.
     fn resume_preempted(&mut self, p: Preempted, out: &mut Vec<Outcome>) {
+        if let Some(o) = &self.obs {
+            o.trace.instant(o.replica, p.sub.id(), SpanKind::Resumed);
+        }
         let Preempted {
             sub,
             generated,
@@ -924,10 +1007,57 @@ impl Scheduler {
     /// sequences. Long prompts therefore interleave with decodes instead
     /// of stalling them. Returns the terminal outcomes of this step.
     pub fn step(&mut self) -> Vec<Outcome> {
+        let step_t0 = self.obs.as_ref().map(|o| o.trace.now_us());
+        let steps0 = self.steps_executed;
+        let tokens0 = self.batched_tokens;
+        let drafted0 = self.spec.drafted;
+        let accepted0 = self.spec.accepted;
+        let rounds0 = self.spec.rounds;
+        let mut out = Vec::new();
+        self.step_inner(&mut out);
+        if let Some(o) = &self.obs {
+            let now = o.trace.now_us();
+            o.step_time
+                .record(now.saturating_sub(step_t0.unwrap_or(now)) as f64 / 1e6);
+            // Live deltas of the scheduler counters, so a registry
+            // snapshot taken mid-run sees fleet totals without waiting
+            // for the per-worker `ServeStats` merge at shutdown.
+            o.decode_steps.add(self.steps_executed - steps0);
+            o.batched_tokens.add(self.batched_tokens - tokens0);
+            o.drafted.add(self.spec.drafted - drafted0);
+            o.accepted.add(self.spec.accepted - accepted0);
+            o.spec_rounds.add(self.spec.rounds - rounds0);
+            let peak = self.peak_batch as u64;
+            if peak > o.peak_concurrency.get() {
+                o.peak_concurrency.set(peak);
+            }
+            // Every terminal `Outcome` flows through this return value —
+            // the single choke point for the exactly-one-terminal-span
+            // invariant (the engine's panic path emits its own for
+            // submissions reclaimed from an unwound scheduler).
+            for oc in &out {
+                let kind = match oc {
+                    Outcome::Done(_) => SpanKind::Done,
+                    Outcome::Cancelled { .. } => SpanKind::Cancelled,
+                    Outcome::TimedOut { .. } => SpanKind::TimedOut,
+                    Outcome::Failed { .. } => SpanKind::Failed,
+                };
+                o.trace.instant(o.replica, oc.id(), kind);
+            }
+            // Chaos hook: a denied hit forces a span-ring wraparound,
+            // proving export degrades (oldest dropped, counted) instead
+            // of panicking or growing without bound.
+            if self.failpoints.hit(failpoint::TRACE_BUF, self.fp_tag) {
+                o.trace.force_wrap(o.replica);
+            }
+        }
+        out
+    }
+
+    fn step_inner(&mut self, out: &mut Vec<Outcome>) {
         self.failpoints.hit(failpoint::STEP, self.fp_tag);
         self.tick += 1;
-        let mut out = Vec::new();
-        self.sweep_dead(&mut out);
+        self.sweep_dead(out);
         // Synthetic page-pool pressure: each denied POOL hit forces one
         // preemption round, exactly as a real exhausted pool would.
         if self.failpoints.hit(failpoint::POOL, self.fp_tag) {
@@ -938,7 +1068,7 @@ impl Scheduler {
         // swapped into its slot is advanced next — each exactly once).
         let mut i = 0;
         while i < self.prefilling.len() {
-            if !self.advance_prefill_at(i, &mut out) {
+            if !self.advance_prefill_at(i, out) {
                 i += 1;
             }
         }
@@ -951,7 +1081,7 @@ impl Scheduler {
                 .is_some_and(|p| p.parked_tick < self.tick)
         {
             let p = self.preempted.pop_front().expect("front checked");
-            self.resume_preempted(p, &mut out);
+            self.resume_preempted(p, out);
         }
         // Admission: prefilling sequences occupy batch slots too.
         while self.active.len() + self.prefilling.len() < self.policy.max_batch {
@@ -961,32 +1091,42 @@ impl Scheduler {
                     self.timed_out += 1;
                     out.push(Self::timeout_out(sub, Vec::new()));
                 }
-                Some(sub) => self.begin_prefill(sub, None, None, &mut out),
+                Some(sub) => {
+                    // Fresh admission off the queue (resumes re-enter
+                    // through `resume_preempted`, which never re-counts
+                    // queue wait).
+                    if let Some(o) = &self.obs {
+                        o.trace.instant(o.replica, sub.id(), SpanKind::Admitted);
+                        o.queue_wait.record(sub.submitted.elapsed_secs());
+                    }
+                    self.begin_prefill(sub, None, None, out)
+                }
                 None => break,
             }
         }
         self.peak_batch = self.peak_batch.max(self.active.len() + self.prefilling.len());
         if self.active.is_empty() {
-            return out;
+            return;
         }
         // Retire sequences that already satisfied their budget (including
         // single-token generations) before spending a decode step on them.
-        self.retire(&mut out);
+        self.retire(out);
         // Reserve next-position pages for the whole batch up front
         // (shrinking it if the pool cannot cover everyone).
         self.ensure_decode_pages();
         if self.active.is_empty() {
-            return out;
+            return;
         }
 
         if self.policy.spec.enabled {
             self.spec_decode();
-            self.retire(&mut out);
-            return out;
+            self.retire(out);
+            return;
         }
 
         self.tok_buf.clear();
         self.tok_buf.extend(self.active.iter().map(|a| a.next_token));
+        let decode_t0 = self.obs.as_ref().map(|o| o.trace.now_us());
         // Caches are decoded in place through `Active: AsKvStore` — no
         // per-step cache extraction/replacement.
         let logits = self
@@ -1005,8 +1145,14 @@ impl Scheduler {
                 index: a.generated.len() - 1,
             });
         }
-        self.retire(&mut out);
-        out
+        // One DecodeStep span per sequence that decoded (before retire,
+        // so finishing sequences get their last span too).
+        if let (Some(o), Some(t0)) = (&self.obs, decode_t0) {
+            for a in &self.active {
+                o.trace.span(o.replica, a.sub.id(), SpanKind::DecodeStep, t0);
+            }
+        }
+        self.retire(out);
     }
 
     /// Speculative decode step: one draft→verify→accept round per
@@ -1025,6 +1171,9 @@ impl Scheduler {
         let tag = self.fp_tag;
         let eos = self.policy.eos;
         let spec_policy = self.policy.spec;
+        // Cloned out of `self` so the timing hooks can live alongside the
+        // `&mut self.spec` borrow inside `round`.
+        let obs = self.obs.clone();
         let mut emitted_total = 0u64;
         let mut plain_rest = false;
         for idx in 0..self.active.len() {
@@ -1050,6 +1199,10 @@ impl Scheduler {
             let sampler = a.sub.req.sampler;
             let rng = &mut self.rng;
             let start = a.generated.len();
+            let round_t0 = obs.as_ref().map(|o| o.trace.now_us());
+            // Stamped by the before-verify hook; splits the round into
+            // its draft and verify phases.
+            let draft_end = Cell::new(u64::MAX);
             let stats = self.spec.round(
                 &self.model,
                 &mut a.cache,
@@ -1059,10 +1212,23 @@ impl Scheduler {
                 eos,
                 &mut |row| sampler.sample(row, rng),
                 &mut || {
+                    if let Some(o) = &obs {
+                        draft_end.set(o.trace.now_us());
+                    }
                     fp.hit(failpoint::VERIFY, tag);
                 },
                 &mut a.generated,
             );
+            if let (Some(o), Some(t0)) = (&obs, round_t0) {
+                let now = o.trace.now_us();
+                o.trace.span(o.replica, a.sub.id(), SpanKind::SpecRound, t0);
+                o.spec_round.record(now.saturating_sub(t0) as f64 / 1e6);
+                let de = draft_end.get();
+                if de != u64::MAX {
+                    o.spec_draft.record(de.saturating_sub(t0) as f64 / 1e6);
+                    o.spec_verify.record(now.saturating_sub(de) as f64 / 1e6);
+                }
+            }
             a.next_token = *a.generated.last().expect("round emits at least one token");
             a.steps += 1;
             for (j, &t) in a.generated[start..].iter().enumerate() {

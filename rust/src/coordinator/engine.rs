@@ -27,13 +27,18 @@
 //! across the unwind: outcomes emitted before the panic had already left
 //! scheduler state, so they cannot be settled twice.
 
-use super::batcher::{BatchPolicy, Outcome, OutstandingGuard, Scheduler, Submission};
+use super::batcher::{BatchPolicy, Outcome, OutstandingGuard, SchedObs, Scheduler, Submission};
 use super::failpoint::FailPoints;
 use super::queue::{AdmissionQueue, TryPushError};
 use super::{Event, GenRequest, GenResponse, ServeStats};
 use crate::kv::KvGauges;
 use crate::model::transformer::Transformer;
-use crate::util::metrics::{FaultCounters, FaultMeter, LatencyRecorder, Summary};
+use crate::obs::{
+    kernels, names, FaultSection, HistStat, Histogram, KvSection, MetricsRegistry,
+    MetricsSnapshot, ServeSection, SpanKind, SpecSection, TraceSection, TraceSink,
+    DEFAULT_RING_CAP,
+};
+use crate::util::metrics::{FaultCounters, FaultMeter};
 use crate::util::timer::Timer;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -272,6 +277,7 @@ pub struct EngineBuilder {
     backoff_base: Duration,
     backoff_cap: Duration,
     failpoints: Arc<FailPoints>,
+    trace_ring_cap: usize,
 }
 
 impl Default for EngineBuilder {
@@ -287,6 +293,7 @@ impl Default for EngineBuilder {
             backoff_base: Duration::from_millis(20),
             backoff_cap: Duration::from_millis(500),
             failpoints: FailPoints::new(),
+            trace_ring_cap: DEFAULT_RING_CAP,
         }
     }
 }
@@ -428,11 +435,25 @@ impl EngineBuilder {
         self
     }
 
+    /// Span-trace ring capacity per replica, in events (default
+    /// [`DEFAULT_RING_CAP`]). When a ring fills, the oldest events are
+    /// dropped and counted; the export degrades instead of growing
+    /// without bound.
+    pub fn trace_ring_cap(mut self, n: usize) -> Self {
+        self.trace_ring_cap = n.max(1);
+        self
+    }
+
     /// Spawn the replica workers and return the engine. The model moves
     /// behind one `Arc`; every replica scheduler reads the same weights.
     pub fn build(self, model: Transformer) -> Engine {
-        let latency = Arc::new(LatencyRecorder::new());
-        let ttft = Arc::new(LatencyRecorder::new());
+        let registry = MetricsRegistry::new();
+        let trace = TraceSink::new(self.replicas, self.trace_ring_cap);
+        // TTFT/latency record through the registry's streaming
+        // histograms — bounded memory, and one snapshot surface for the
+        // CLI report, METRICS.json and the bench probes.
+        let latency = registry.histogram(names::LATENCY);
+        let ttft = registry.histogram(names::TTFT);
         let meter = Arc::new(FaultMeter::new());
         let kv_gauges = Arc::new(KvGauges::default());
         let max_seq = model.cfg.max_seq;
@@ -468,6 +489,8 @@ impl EngineBuilder {
                 seed: self.seed.wrapping_add(i as u64),
                 latency: Arc::clone(&latency),
                 ttft: Arc::clone(&ttft),
+                registry: Arc::clone(&registry),
+                trace: Arc::clone(&trace),
                 meter: Arc::clone(&meter),
                 kv_gauges: Arc::clone(&kv_gauges),
                 failpoints: Arc::clone(&self.failpoints),
@@ -487,8 +510,12 @@ impl EngineBuilder {
             dispatch: self.dispatch,
             rr: AtomicUsize::new(0),
             max_seq,
+            kv_page_size: self.batch.kv_page_size,
             latency,
             ttft,
+            registry,
+            trace,
+            started: Timer::start(),
             meter,
             kv_gauges,
         }
@@ -502,8 +529,10 @@ struct WorkerCtx {
     model: Arc<Transformer>,
     policy: BatchPolicy,
     seed: u64,
-    latency: Arc<LatencyRecorder>,
-    ttft: Arc<LatencyRecorder>,
+    latency: Arc<Histogram>,
+    ttft: Arc<Histogram>,
+    registry: Arc<MetricsRegistry>,
+    trace: Arc<TraceSink>,
     meter: Arc<FaultMeter>,
     kv_gauges: Arc<KvGauges>,
     failpoints: Arc<FailPoints>,
@@ -559,7 +588,8 @@ fn replica_main(ctx: WorkerCtx) -> ServeStats {
     loop {
         let mut sched = Scheduler::new(Arc::clone(&ctx.model), ctx.policy, ctx.seed)
             .with_failpoints(Arc::clone(&ctx.failpoints), ctx.index as u64)
-            .with_kv_gauges(Arc::clone(&ctx.kv_gauges));
+            .with_kv_gauges(Arc::clone(&ctx.kv_gauges))
+            .with_obs(SchedObs::new(&ctx.registry, Arc::clone(&ctx.trace), ctx.index));
         let run = catch_unwind(AssertUnwindSafe(|| {
             serve_loop(&mut sched, &me, &ctx, &mut stats)
         }));
@@ -587,6 +617,12 @@ fn replica_main(ctx: WorkerCtx) -> ServeStats {
                 for (sub, tokens) in sched.take_inflight() {
                     if sub.cancelled() {
                         stats.cancelled += 1;
+                        ctx.registry.counter(names::CANCELLED).inc();
+                        // The unwound scheduler never returned these
+                        // outcomes through `step`, so the terminal span
+                        // is emitted here — the invariant's only other
+                        // source.
+                        ctx.trace.instant(ctx.index, sub.id(), SpanKind::Cancelled);
                         sub.settle_cancelled(tokens);
                     } else if ctx.retry_idempotent && tokens.is_empty() && sub.retries() == 0 {
                         match redispatch(&ctx, sub) {
@@ -596,11 +632,15 @@ fn replica_main(ctx: WorkerCtx) -> ServeStats {
                             }
                             Err(sub) => {
                                 stats.failed += 1;
+                                ctx.registry.counter(names::FAILED).inc();
+                                ctx.trace.instant(ctx.index, sub.id(), SpanKind::Failed);
                                 sub.settle_failed(&msg);
                             }
                         }
                     } else {
                         stats.failed += 1;
+                        ctx.registry.counter(names::FAILED).inc();
+                        ctx.trace.instant(ctx.index, sub.id(), SpanKind::Failed);
                         sub.settle_failed(&msg);
                     }
                 }
@@ -626,6 +666,16 @@ fn serve_loop(
     ctx: &WorkerCtx,
     stats: &mut ServeStats,
 ) {
+    // Live registry counters, ticked as outcomes settle so a
+    // `metrics_snapshot` taken mid-run is current (the per-worker
+    // `ServeStats` only merges at shutdown).
+    let c_requests = ctx.registry.counter(names::REQUESTS);
+    let c_cancelled = ctx.registry.counter(names::CANCELLED);
+    let c_timed_out = ctx.registry.counter(names::TIMED_OUT);
+    let c_failed = ctx.registry.counter(names::FAILED);
+    let c_tokens = ctx.registry.counter(names::TOKENS_GENERATED);
+    let h_latency = &ctx.latency;
+    let h_ttft = &ctx.ttft;
     loop {
         // Reaped entries (cancelled or expired while queued) need no
         // batch slot, only their terminal settle — drain them even when
@@ -656,16 +706,27 @@ fn serve_loop(
                 Outcome::Done(r) => {
                     stats.requests += 1;
                     stats.tokens_generated += r.tokens.len() as u64;
-                    ctx.latency.record(r.total_s);
-                    ctx.ttft.record(r.ttft_s);
+                    c_requests.inc();
+                    c_tokens.add(r.tokens.len() as u64);
+                    h_latency.record(r.total_s);
+                    h_ttft.record(r.ttft_s);
                 }
-                Outcome::Cancelled { .. } => stats.cancelled += 1,
+                Outcome::Cancelled { .. } => {
+                    stats.cancelled += 1;
+                    c_cancelled.inc();
+                }
                 // `stats.timed_out` is folded from the scheduler counter
-                // by the supervisor; only the live meter ticks here.
-                Outcome::TimedOut { .. } => ctx.meter.timeouts.inc(),
+                // by the supervisor; only the live telemetry ticks here.
+                Outcome::TimedOut { .. } => {
+                    ctx.meter.timeouts.inc();
+                    c_timed_out.inc();
+                }
                 // Scheduler-originated terminal failure (an oversized
                 // request the pool can never hold).
-                Outcome::Failed { .. } => stats.failed += 1,
+                Outcome::Failed { .. } => {
+                    stats.failed += 1;
+                    c_failed.inc();
+                }
             }
         }
     }
@@ -680,8 +741,14 @@ pub struct Engine {
     rr: AtomicUsize,
     /// Model context bound, for request validation at submit.
     max_seq: usize,
-    latency: Arc<LatencyRecorder>,
-    ttft: Arc<LatencyRecorder>,
+    /// KV page size in positions (snapshot reporting).
+    kv_page_size: usize,
+    latency: Arc<Histogram>,
+    ttft: Arc<Histogram>,
+    registry: Arc<MetricsRegistry>,
+    trace: Arc<TraceSink>,
+    /// Engine lifetime stopwatch: `wall_s` for live snapshots.
+    started: Timer,
     meter: Arc<FaultMeter>,
     kv_gauges: Arc<KvGauges>,
 }
@@ -778,14 +845,127 @@ impl Engine {
         }
     }
 
-    /// End-to-end latency samples (completed requests only).
-    pub fn latency(&self) -> Summary {
-        self.latency.snapshot()
+    /// End-to-end latency distribution (completed requests only):
+    /// exact count/sum/mean/min/max, bounded-relative-error p50/p90/p99
+    /// from the streaming histogram.
+    pub fn latency(&self) -> HistStat {
+        self.latency.stat()
     }
 
-    /// Time-to-first-token samples, measured from submission.
-    pub fn ttft(&self) -> Summary {
-        self.ttft.snapshot()
+    /// Time-to-first-token distribution, measured from submission.
+    pub fn ttft(&self) -> HistStat {
+        self.ttft.stat()
+    }
+
+    /// The span-trace sink shared by every replica. Export with
+    /// [`TraceSink::to_chrome_json`] (`serve --trace-out`).
+    pub fn trace(&self) -> Arc<TraceSink> {
+        Arc::clone(&self.trace)
+    }
+
+    /// The metrics registry every replica records through. Exposed so
+    /// harnesses can register their own counters alongside the engine's.
+    pub fn registry(&self) -> Arc<MetricsRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Point-in-time typed snapshot of every serving metric: request
+    /// and throughput scalars, fault counters, KV page-pool gauges,
+    /// span-trace health, and every streaming histogram (TTFT, queue
+    /// wait, step time, prefill chunk, spec rounds, per-path kernel
+    /// timings) as bounded-error [`HistStat`]s. Callable mid-run — the
+    /// workers tick the registry live — and after `close`; see
+    /// [`MetricsSnapshot`] for the JSON/row renders.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        // Refresh facade-owned gauges before copying the registry.
+        self.kv_gauges.export(&self.registry);
+        let depth: usize = self.shared.iter().map(|r| r.queue.depth()).sum();
+        let peak = self
+            .shared
+            .iter()
+            .map(|r| r.queue.peak_depth())
+            .max()
+            .unwrap_or(0);
+        self.registry.set_gauge(names::QUEUE_DEPTH, depth as u64);
+        self.registry.set_gauge(names::QUEUE_DEPTH_PEAK, peak as u64);
+        self.registry.set_gauge(names::TRACE_DROPPED, self.trace.dropped());
+        let reg = self.registry.snapshot();
+        let c = |n: &str| reg.counters.get(n).copied().unwrap_or(0);
+        let g = |n: &str| reg.gauges.get(n).copied().unwrap_or(0);
+        let faults = self.meter.snapshot();
+        let wall_s = self.started.elapsed_secs();
+        let tokens_generated = c(names::TOKENS_GENERATED);
+        let decode_steps = c(names::DECODE_STEPS);
+        let batched_tokens = c(names::BATCHED_TOKENS);
+        let serve = ServeSection {
+            requests: c(names::REQUESTS),
+            cancelled: c(names::CANCELLED),
+            timed_out: c(names::TIMED_OUT),
+            failed: c(names::FAILED),
+            shed: faults.sheds,
+            retries: faults.retries,
+            tokens_generated,
+            decode_steps,
+            batched_tokens,
+            wall_s,
+            throughput_tps: if wall_s > 0.0 {
+                tokens_generated as f64 / wall_s
+            } else {
+                0.0
+            },
+            mean_batch_occupancy: if decode_steps > 0 {
+                batched_tokens as f64 / decode_steps as f64
+            } else {
+                0.0
+            },
+            peak_concurrency: g(names::PEAK_CONCURRENCY) as usize,
+        };
+        let drafted = c(names::SPEC_DRAFTED);
+        let accepted = c(names::SPEC_ACCEPTED);
+        let spec = SpecSection {
+            drafted,
+            accepted,
+            acceptance_rate: if drafted > 0 {
+                accepted as f64 / drafted as f64
+            } else {
+                0.0
+            },
+        };
+        let kv = KvSection {
+            page_size: self.kv_page_size as u64,
+            pages_capacity: g(names::KV_PAGES_CAPACITY),
+            pages_used: g(names::KV_PAGES_USED),
+            pages_peak: g(names::KV_PAGES_PEAK),
+            pages_leaked: g(names::KV_LEAKED),
+            prefix_hits: self.prefix_hits(),
+            preemptions: self.preemptions(),
+        };
+        let trace = TraceSection {
+            events_retained: self.trace.len() as u64,
+            events_dropped: self.trace.dropped(),
+        };
+        let mut hists = reg.hists;
+        // The kernel sink is process-global (see `obs::kernels`); fold
+        // its per-path timings into the same snapshot map.
+        for (name, stat) in kernels::stats() {
+            hists.insert(name.to_string(), stat);
+        }
+        MetricsSnapshot {
+            serve,
+            spec,
+            faults: FaultSection {
+                panics_recovered: faults.panics_recovered,
+                restarts: faults.restarts,
+                timeouts: faults.timeouts,
+                sheds: faults.sheds,
+                retries: faults.retries,
+            },
+            kv,
+            trace,
+            counters: reg.counters,
+            gauges: reg.gauges,
+            hists,
+        }
     }
 
     fn pick_replica(&self) -> usize {
@@ -866,13 +1046,18 @@ impl Engine {
                 TryPushError::Closed(s) => EngineError::Shutdown(s.into_request()),
             })
         };
-        send_result.map(|()| RequestHandle {
-            id,
-            rx: rx_ev,
-            cancel,
-            shared: Arc::clone(replica),
-            finished: false,
-            cancel_on_drop: false,
+        send_result.map(|()| {
+            // Span timeline starts here — only for requests that actually
+            // entered a replica queue (a refused push never ran).
+            self.trace.instant(idx, id, SpanKind::Queued);
+            RequestHandle {
+                id,
+                rx: rx_ev,
+                cancel,
+                shared: Arc::clone(replica),
+                finished: false,
+                cancel_on_drop: false,
+            }
         })
     }
 
@@ -1435,8 +1620,16 @@ mod tests {
         assert!(r.ttft_s > 0.0);
         assert!(r.total_s >= r.ttft_s);
         eng.drain();
-        assert_eq!(eng.latency().count(), 1);
-        assert_eq!(eng.ttft().count(), 1);
+        assert_eq!(eng.latency().count, 1);
+        assert_eq!(eng.ttft().count, 1);
+        // The typed snapshot agrees with the accessor histograms and
+        // carries the request-lifecycle counters live (pre-shutdown).
+        let snap = eng.metrics_snapshot();
+        assert_eq!(snap.serve.requests, 1);
+        assert_eq!(snap.hist(crate::obs::names::TTFT).count, 1);
+        assert_eq!(snap.hist(crate::obs::names::LATENCY).count, 1);
+        assert!(snap.hist(crate::obs::names::STEP_TIME).count > 0);
+        assert!(snap.serve.wall_s > 0.0);
         eng.shutdown();
     }
 

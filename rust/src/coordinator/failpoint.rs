@@ -46,6 +46,14 @@ pub const POOL: &str = "kv-pool";
 /// exactly one terminal event per request through this window.
 pub const VERIFY: &str = "spec-verify";
 
+/// Site name: hit at the end of every [`Scheduler::step`] when an
+/// observability sink is attached (tag = replica index). Arm with a
+/// deny action to force a span-ring wraparound mid-run — the oldest
+/// half of the replica's trace ring is dropped, and the chaos suite
+/// asserts export degrades gracefully (drop counters tick, retained
+/// requests keep exactly one terminal event, no panic).
+pub const TRACE_BUF: &str = "trace-buffer";
+
 #[cfg(any(test, feature = "failpoints"))]
 mod imp {
     use crate::util::prng::Rng;

@@ -25,6 +25,7 @@
 use super::batcher::Submission;
 use super::failpoint::{self, FailPoints};
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Why a non-blocking push was refused; every variant hands the
@@ -92,6 +93,9 @@ pub(crate) struct AdmissionQueue {
     not_empty: Condvar,
     failpoints: Arc<FailPoints>,
     fp_tag: u64,
+    /// Deepest live occupancy ever held — the `queue.depth_peak` gauge
+    /// (backlog high-water mark, never reset).
+    peak: AtomicUsize,
 }
 
 impl AdmissionQueue {
@@ -127,7 +131,14 @@ impl AdmissionQueue {
             not_empty: Condvar::new(),
             failpoints,
             fp_tag: tag,
+            peak: AtomicUsize::new(0),
         }
+    }
+
+    /// Raise the high-water mark to `depth` if it exceeds the current
+    /// peak (called with the state lock held, so plain max is racefree).
+    fn note_depth(&self, depth: usize) {
+        self.peak.fetch_max(depth, Ordering::Relaxed);
     }
 
     fn is_bulk(sub: &Submission) -> bool {
@@ -161,6 +172,7 @@ impl AdmissionQueue {
                     &mut st.interactive
                 };
                 lane.push_back(sub);
+                self.note_depth(st.live_len());
                 self.not_empty.notify_one();
                 return Ok(());
             }
@@ -196,6 +208,7 @@ impl AdmissionQueue {
             &mut st.interactive
         };
         lane.push_back(sub);
+        self.note_depth(st.live_len());
         self.not_empty.notify_one();
         Ok(())
     }
@@ -259,6 +272,12 @@ impl AdmissionQueue {
         let mut st = self.state.lock().expect("queue lock");
         st.purge();
         st.live_len()
+    }
+
+    /// Deepest live occupancy this queue ever held (never reset; purged
+    /// entries counted while they were live).
+    pub fn peak_depth(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
     }
 
     /// Stop accepting work; wakes every blocked producer and consumer.
@@ -411,6 +430,19 @@ mod tests {
         assert_eq!(q.pop_reaped().unwrap().id(), 9);
         assert!(q.pop_reaped().is_none(), "live entries are not reaped");
         assert_eq!(q.try_pop().unwrap().id(), 10);
+    }
+
+    #[test]
+    fn peak_depth_is_a_highwater_mark() {
+        let q = AdmissionQueue::new(4);
+        assert_eq!(q.peak_depth(), 0);
+        assert!(q.try_push(sub(0)).is_ok());
+        assert!(q.try_push(sub(1)).is_ok());
+        assert_eq!(q.peak_depth(), 2);
+        q.try_pop();
+        q.try_pop();
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.peak_depth(), 2, "peak never resets");
     }
 
     #[test]

@@ -755,6 +755,20 @@ impl QuantLinear {
     /// hi/lo split ([`QuantLinear::hi_only_serves`]) and silently falls
     /// back to full decode everywhere else — so a mixed-scheme model can
     /// run a draft forward end to end.
+    /// The observability path label for a call at `prec` — `None` when
+    /// the tensor's layout has no grouped decode path and no hi/lo split
+    /// (per-channel full decode; not a tracked family).
+    fn timing_path(&self, prec: DecodePrecision) -> Option<crate::obs::KernelPath> {
+        if prec == DecodePrecision::HiOnly && self.hi_only_serves() {
+            return Some(crate::obs::KernelPath::HiOnly);
+        }
+        match self.group_path {
+            Some(GroupDecodePath::StreamDirect) => Some(crate::obs::KernelPath::StreamDirect),
+            Some(GroupDecodePath::Buffered) => Some(crate::obs::KernelPath::Buffered),
+            None => None,
+        }
+    }
+
     pub fn gemv_prec(
         &self,
         x: &[f32],
@@ -762,10 +776,18 @@ impl QuantLinear {
         scratch: &mut GemmScratch,
         prec: DecodePrecision,
     ) {
+        // Sampled per-path timing (every Nth call; see `obs::kernels`).
+        // Measurement only — never alters which kernel runs.
+        let path = self.timing_path(prec);
+        let t0 = (path.is_some() && crate::obs::kernels::should_sample())
+            .then(std::time::Instant::now);
         if prec == DecodePrecision::HiOnly && self.hi_only_serves() {
             self.gemv_hi(x, y);
         } else {
             self.gemv_auto(x, y, scratch);
+        }
+        if let (Some(p), Some(t0)) = (path, t0) {
+            crate::obs::kernels::record(p, t0.elapsed().as_secs_f64());
         }
     }
 
@@ -777,10 +799,16 @@ impl QuantLinear {
         scratch: &mut GemmScratch,
         prec: DecodePrecision,
     ) {
+        let path = self.timing_path(prec);
+        let t0 = (path.is_some() && crate::obs::kernels::should_sample())
+            .then(std::time::Instant::now);
         if prec == DecodePrecision::HiOnly && self.hi_only_serves() {
             self.gemm_hi_into(x, y, scratch);
         } else {
             self.gemm_auto_into(x, y, scratch);
+        }
+        if let (Some(p), Some(t0)) = (path, t0) {
+            crate::obs::kernels::record(p, t0.elapsed().as_secs_f64());
         }
     }
 

@@ -36,7 +36,7 @@ pub(crate) mod trie;
 pub use paged::PagedKvCache;
 pub use pool::{PageBuf, PageGeometry, PagePool, PoolExhausted};
 
-use std::sync::atomic::AtomicU64;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Accessor contract between the attention paths and a KV backing
 /// store. Rows are contiguous `[kv_dim]` float slices; `k_row(l, t)`
@@ -111,4 +111,20 @@ pub struct KvGauges {
     /// was destroyed. Non-zero means a block table outlived its
     /// scheduler — a leak.
     pub leaked: AtomicU64,
+}
+
+impl KvGauges {
+    /// Mirror the pool gauges into the metrics registry under the
+    /// `kv.*` names, so `Engine::metrics_snapshot` and METRICS.json see
+    /// pool pressure alongside the latency histograms.
+    pub fn export(&self, registry: &crate::obs::MetricsRegistry) {
+        use crate::obs::names;
+        let used = self.pages_used.load(Ordering::Relaxed);
+        let capacity = self.pages_capacity.load(Ordering::Relaxed);
+        registry.set_gauge(names::KV_PAGES_USED, used);
+        registry.set_gauge(names::KV_PAGES_CAPACITY, capacity);
+        registry.set_gauge(names::KV_PAGES_FREE, capacity.saturating_sub(used));
+        registry.set_gauge(names::KV_PAGES_PEAK, self.pages_peak.load(Ordering::Relaxed));
+        registry.set_gauge(names::KV_LEAKED, self.leaked.load(Ordering::Relaxed));
+    }
 }

@@ -27,6 +27,9 @@
 //! - [`spec`] — hi-stream self-speculative decoding: draft tokens from
 //!   the hi mantissa stream alone, verify them in one full-precision
 //!   batched pass (token-identical under greedy sampling).
+//! - [`obs`] — observability: unified metrics registry, streaming
+//!   log-bucketed histograms, per-request span traces (Chrome
+//!   trace-event export), sampled per-path kernel timings.
 //! - [`runtime`] — PJRT client running AOT-lowered JAX/Pallas artifacts.
 //! - [`sim`] — roofline simulator of the paper's GPU (Table 3).
 //! - [`baselines`] — INT RTN / W8A16 / TC-FPx comparators.
@@ -42,6 +45,7 @@ pub mod formats;
 pub mod gemm;
 pub mod kv;
 pub mod model;
+pub mod obs;
 pub mod pack;
 pub mod quant;
 pub mod report;
@@ -57,3 +61,4 @@ pub use coordinator::{
     DispatchPolicy, Engine, EngineBuilder, EngineError, Event, FailPoints, FailSpec, GenRequest,
     GenResponse, Priority, RequestHandle, ServeStats,
 };
+pub use obs::{HistStat, MetricsSnapshot, SpanKind, TraceSink};

@@ -108,6 +108,8 @@ fn print_help() {
          \x20       [--deadline-ms T --queue-deadline-ms T]\n\
          \x20       [--priority interactive|bulk|mixed]\n\
          \x20       [--speculative [--draft-depth K]   (hi-stream draft/verify)]\n\
+         \x20       [--trace-out TRACE.json   (Chrome trace-event span export)]\n\
+         \x20       [--metrics-out METRICS.json [--metrics-interval-ms T]]\n\
          \x20 pjrt --artifact linear_fp5p33_256x128_b1.hlo.txt\n\
          plan flags: --scheme is the model-wide default; --attn/--mlp/--lm-head\n\
          \x20 override per role (mixed precision); --group-size G uses per-group\n\
@@ -600,6 +602,15 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
          max_batch={max_batch}, replicas={replicas}, queue_capacity={queue_capacity}"
     );
 
+    // Observability exports: Chrome trace-event spans and the typed
+    // metrics snapshot, optionally rewritten on a timer while serving.
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let metrics_interval = args.get_u64("metrics-interval-ms", 0);
+    if metrics_interval > 0 && metrics_out.is_none() {
+        bail!("--metrics-interval-ms needs --metrics-out");
+    }
+
     let mut rng = Rng::new(args.get_u64("seed", 0));
     let eng = Engine::builder()
         .replicas(replicas)
@@ -613,70 +624,72 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         .draft_depth(draft_depth)
         .seed(1)
         .build(model);
-    let wall = ams_quant::util::timer::Timer::start();
-    let handles: Vec<RequestHandle> = (0..n_requests as u64)
-        .map(|id| {
-            let start = rng.range(0, heldout.len().saturating_sub(40).max(1));
-            let prompt: Vec<u32> = heldout[start..(start + 16).min(heldout.len())].to_vec();
-            let mut req = GenRequest::greedy(id, prompt, max_new).with_priority(priority_of(id));
-            if let Some(d) = queue_deadline {
-                req = req.with_queue_deadline(d);
+    let done = std::sync::atomic::AtomicBool::new(false);
+    let responses: Vec<_> = std::thread::scope(|s| -> Result<Vec<_>> {
+        if metrics_interval > 0 {
+            if let Some(path) = metrics_out.clone() {
+                let eng = &eng;
+                let done = &done;
+                s.spawn(move || {
+                    while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                        std::thread::sleep(std::time::Duration::from_millis(metrics_interval));
+                        let snap = eng.metrics_snapshot();
+                        let _ = std::fs::write(&path, snap.to_json().to_string_pretty());
+                    }
+                });
             }
-            if let Some(d) = total_deadline {
-                req = req.with_total_deadline(d);
-            }
-            eng.submit(req).map_err(|e| anyhow::anyhow!("submit failed: {e}"))
-        })
-        .collect::<Result<_>>()?;
-    let responses: Vec<_> = handles.into_iter().filter_map(|h| h.wait()).collect();
-    let wall_s = wall.elapsed_secs();
+        }
+        // The writer thread exits on `done`; set it on *every* path out
+        // of the scope (an early `?` would otherwise leave it spinning
+        // and the scope joining forever).
+        let run = (|| -> Result<Vec<_>> {
+            let handles: Vec<RequestHandle> = (0..n_requests as u64)
+                .map(|id| {
+                    let start = rng.range(0, heldout.len().saturating_sub(40).max(1));
+                    let prompt: Vec<u32> =
+                        heldout[start..(start + 16).min(heldout.len())].to_vec();
+                    let mut req =
+                        GenRequest::greedy(id, prompt, max_new).with_priority(priority_of(id));
+                    if let Some(d) = queue_deadline {
+                        req = req.with_queue_deadline(d);
+                    }
+                    if let Some(d) = total_deadline {
+                        req = req.with_total_deadline(d);
+                    }
+                    eng.submit(req).map_err(|e| anyhow::anyhow!("submit failed: {e}"))
+                })
+                .collect::<Result<_>>()?;
+            Ok(handles.into_iter().filter_map(|h| h.wait()).collect())
+        })();
+        done.store(true, std::sync::atomic::Ordering::Relaxed);
+        run
+    })?;
     eng.drain();
-    let lat = eng.latency();
-    let ttft = eng.ttft();
-    let kv_pages_peak = eng.kv_pages_peak();
-    let gauges = eng.kv_gauges();
-    let stats = eng.shutdown();
-    let kv_pages_leaked = gauges.leaked.load(std::sync::atomic::Ordering::Relaxed);
+    // One snapshot feeds the CLI table, METRICS.json and the sanity
+    // line below — `MetricsSnapshot::rows` is the only formatter.
+    let snap = eng.metrics_snapshot();
+    let trace = eng.trace();
+    eng.shutdown();
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, snap.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!("# wrote metrics snapshot {}", path.display());
+    }
+    if let Some(path) = &trace_out {
+        std::fs::write(path, trace.to_chrome_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        eprintln!(
+            "# wrote Chrome trace ({} events, {} dropped) {} — open in ui.perfetto.dev",
+            trace.len(),
+            trace.dropped(),
+            path.display()
+        );
+    }
 
     let mut t = Table::new("Serving report (E9)", &["metric", "value"]);
-    t.row(vec!["requests".into(), responses.len().to_string()]);
-    t.row(vec!["tokens generated".into(), stats.tokens_generated.to_string()]);
-    t.row(vec!["wall s".into(), f(wall_s, 3)]);
-    t.row(vec![
-        "throughput tok/s".into(),
-        f(stats.tokens_generated as f64 / wall_s, 1),
-    ]);
-    t.row(vec![
-        "mean batch occupancy".into(),
-        f(stats.mean_batch_occupancy(), 2),
-    ]);
-    t.row(vec!["latency p50 s".into(), f(lat.percentile(50.0), 3)]);
-    t.row(vec!["latency p90 s".into(), f(lat.percentile(90.0), 3)]);
-    t.row(vec!["ttft p50 s".into(), f(ttft.percentile(50.0), 4)]);
-    t.row(vec!["ttft p99 s".into(), f(ttft.percentile(99.0), 4)]);
-    // Degradation is part of the report: a run that recovered from
-    // faults or shed load should say so, not hide it in a lower
-    // request count.
-    t.row(vec!["timed out".into(), stats.timed_out.to_string()]);
-    t.row(vec!["failed".into(), stats.failed.to_string()]);
-    t.row(vec!["shed".into(), stats.shed.to_string()]);
-    t.row(vec!["retries".into(), stats.retries.to_string()]);
-    t.row(vec!["panics recovered".into(), stats.panics_recovered.to_string()]);
-    t.row(vec!["replica restarts".into(), stats.restarts.to_string()]);
-    // Paged-KV economics: pool pressure, prefix reuse and the
-    // preemptions paid for over-committing pages.
-    t.row(vec!["kv page size".into(), kv_page_size.to_string()]);
-    t.row(vec!["kv pages peak".into(), kv_pages_peak.to_string()]);
-    t.row(vec!["kv pages leaked".into(), kv_pages_leaked.to_string()]);
-    t.row(vec!["kv prefix hits".into(), stats.prefix_hits.to_string()]);
-    t.row(vec!["kv preemptions".into(), stats.preemptions.to_string()]);
-    t.row(vec!["peak concurrency".into(), stats.peak_concurrency.to_string()]);
-    // Speculative economics: how many hi-stream drafts the verify pass
-    // kept. Rows stay in the report even when speculation is off (all
-    // zero) so downstream parsers see a stable schema.
-    t.row(vec!["tokens drafted".into(), stats.drafted.to_string()]);
-    t.row(vec!["drafts accepted".into(), stats.accepted.to_string()]);
-    t.row(vec!["acceptance rate".into(), f(stats.acceptance_rate(), 3)]);
+    for (k, v) in snap.rows() {
+        t.row(vec![k, v]);
+    }
     emit_table(args, &t)?;
     if let Some(r) = responses.first() {
         eprintln!("# sample continuation: {:?}", tokenizer::decode(&r.tokens));

@@ -1,0 +1,391 @@
+//! Streaming log-bucketed histogram: O(1) memory, exact count/sum,
+//! bounded-relative-error quantiles.
+//!
+//! Values land in power-of-two buckets keyed by their binary exponent
+//! (bucket `i` covers `[2^(MIN_EXP+i), 2^(MIN_EXP+i+1))`), so a
+//! histogram is a fixed array of 64 counters no matter how many samples
+//! it absorbs — unlike [`crate::util::metrics::Summary`], which stores
+//! every sample and grows without bound on a long serve run. Count,
+//! sum, min and max are tracked exactly; quantiles come back as the
+//! arithmetic midpoint (`1.5·2^e`) of the bucket holding the
+//! nearest-rank sample, which pins the *relative* error to one bucket's
+//! width: the true nearest-rank sample `q` and the reported value `r`
+//! share a bucket, so `r/q ∈ [0.75, 1.5)` for positive samples. The
+//! quantile property suite asserts exactly this envelope against exact
+//! sorted-sample quantiles.
+//!
+//! All state is atomic — recording is lock-free, panic-safe (a replica
+//! crash mid-record cannot poison anything), and cheap enough for
+//! sampled kernel-timing hooks on the decode hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets.
+pub const BUCKETS: usize = 64;
+
+/// Binary exponent of the lowest bucket's left edge: `2^-40 ≈ 9.1e-13`.
+/// With 64 buckets the top edge is `2^24 ≈ 1.7e7` — sub-picosecond to
+/// ~194 days when values are seconds. Out-of-range values clamp to the
+/// edge buckets (count/sum stay exact; only the quantile degrades).
+pub const MIN_EXP: i32 = -40;
+
+/// Left edge of bucket `i`.
+#[inline]
+pub fn bucket_lo(i: usize) -> f64 {
+    (2f64).powi(MIN_EXP + i as i32)
+}
+
+/// Reported representative of bucket `i`: its arithmetic midpoint.
+#[inline]
+pub fn bucket_mid(i: usize) -> f64 {
+    1.5 * bucket_lo(i)
+}
+
+/// Bucket index for a value: its IEEE-754 binary exponent shifted by
+/// `MIN_EXP` and clamped. Zero, negatives, NaN and subnormals land in
+/// bucket 0; infinities in the top bucket.
+#[inline]
+pub fn bucket_index(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    let biased = ((v.to_bits() >> 52) & 0x7ff) as i32;
+    let e = if biased == 0 { MIN_EXP } else { biased - 1023 };
+    (e - MIN_EXP).clamp(0, BUCKETS as i32 - 1) as usize
+}
+
+/// Lock-free CAS add on an f64 stored as bits.
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Lock-free CAS min/max on an f64 stored as bits (non-negative values
+/// only — their bit patterns order like the floats themselves).
+fn extreme_f64(cell: &AtomicU64, v: f64, keep_smaller: bool) {
+    let vb = v.to_bits();
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f64::from_bits(cur);
+        let replace = if keep_smaller { v < cur_f } else { v > cur_f };
+        if !replace {
+            return;
+        }
+        match cell.compare_exchange_weak(cur, vb, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// The streaming histogram. See the [module docs](self) for the model.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Record one sample (negative/NaN values clamp to the zero bucket;
+    /// count and sum stay exact).
+    pub fn record(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.sum_bits, v);
+        extreme_f64(&self.min_bits, v, true);
+        extreme_f64(&self.max_bits, v, false);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Quantile from the bucket counts: the midpoint of the bucket
+    /// holding the rank-`round(p·(n−1))+1` sample (0.0 on an empty
+    /// histogram). The rank rule deliberately matches
+    /// [`Summary::percentile`](crate::util::metrics::Summary::percentile)
+    /// so both select the same order statistic and the reported midpoint
+    /// provably shares a bucket with the exact answer — relative error
+    /// is bounded by one bucket's width.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (((p * (n - 1) as f64).round() as u64) + 1).clamp(1, n);
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            if cum >= rank {
+                // The zero bucket also holds literal zeros; report its
+                // left edge rather than a fabricated midpoint.
+                return if i == 0 && self.min() == 0.0 { 0.0 } else { bucket_mid(i) };
+            }
+        }
+        self.max()
+    }
+
+    pub fn min(&self) -> f64 {
+        let m = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Point-in-time summary (count, exact sum/mean/min/max, midpoint
+    /// p50/p90/p99).
+    pub fn stat(&self) -> HistStat {
+        let count = self.count();
+        let sum = self.sum();
+        HistStat {
+            count,
+            sum,
+            mean: if count > 0 { sum / count as f64 } else { 0.0 },
+            min: self.min(),
+            max: self.max(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// Serializable snapshot of one histogram.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistStat {
+    pub count: u64,
+    pub sum: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl HistStat {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("count", Json::Num(self.count as f64))
+            .set("sum", Json::Num(self.sum))
+            .set("mean", Json::Num(self.mean))
+            .set("min", Json::Num(self.min))
+            .set("max", Json::Num(self.max))
+            .set("p50", Json::Num(self.p50))
+            .set("p90", Json::Num(self.p90))
+            .set("p99", Json::Num(self.p99));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::metrics::Summary;
+    use crate::util::proptest::{run_prop, Strategy};
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = Histogram::new();
+        let s = h.stat();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.sum, 0.0);
+        assert_eq!(s.p50, 0.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn count_sum_min_max_are_exact() {
+        let h = Histogram::new();
+        for v in [0.5, 0.25, 4.0, 0.125] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 4.875).abs() < 1e-12);
+        assert_eq!(h.min(), 0.125);
+        assert_eq!(h.max(), 4.0);
+    }
+
+    #[test]
+    fn zero_and_negative_clamp_to_zero_bucket() {
+        let h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0, "all-zero histogram reports 0");
+    }
+
+    #[test]
+    fn quantile_lands_in_the_right_bucket() {
+        let h = Histogram::new();
+        // 90 samples near 1ms, 10 near 1s: p50 must sit in the ms
+        // bucket, p99 in the seconds bucket.
+        for _ in 0..90 {
+            h.record(1.0e-3);
+        }
+        for _ in 0..10 {
+            h.record(1.0);
+        }
+        let p50 = h.quantile(0.50);
+        assert!((0.5e-3..2.0e-3).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((1.0..2.0).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        h.record(1e-3 * (1 + (t * 1000 + i) % 7) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert!(h.sum() > 0.0);
+    }
+
+    /// Positive-sample generator with adversarial shape mixing: uniform
+    /// spans, heavy tails, near-bucket-boundary clusters and ties.
+    struct AdversarialSamples;
+
+    impl Strategy for AdversarialSamples {
+        type Value = Vec<f64>;
+
+        fn generate(&self, rng: &mut crate::util::prng::Rng) -> Vec<f64> {
+            let len = rng.range(1, 400);
+            let mode = rng.below(4);
+            (0..len)
+                .map(|_| match mode {
+                    // Wide log-uniform span (1ns .. 100s).
+                    0 => 1e-9 * 1e11f64.powf(rng.uniform()),
+                    // Heavy tail around 1ms.
+                    1 => 1e-3 * (1.0 + rng.laplace(4.0).abs()),
+                    // Clustered at power-of-two boundaries (worst case
+                    // for bucket assignment).
+                    2 => (2f64).powi(rng.range(0, 20) as i32 - 10),
+                    // Massive ties.
+                    _ => [1e-4, 2.5e-3, 0.7][rng.range(0, 3)],
+                })
+                .collect()
+        }
+
+        fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+            let mut out = Vec::new();
+            if v.len() > 1 {
+                out.push(v[..v.len() / 2].to_vec());
+                out.push(v[v.len() / 2..].to_vec());
+            }
+            out
+        }
+    }
+
+    /// Property (satellite): histogram quantiles stay within one
+    /// bucket's relative error of the exact sorted-sample quantile. The
+    /// histogram reports the midpoint of the bucket holding the same
+    /// order statistic `Summary::percentile` selects, so report and
+    /// exact value share a bucket: ratio ∈ [0.75, 1.5] (the upper bound
+    /// is attained when the sample sits exactly on a bucket edge).
+    #[test]
+    fn quantiles_within_one_bucket_relative_error() {
+        run_prop(
+            "hist-quantile-bounded-error",
+            0x0B5E,
+            120,
+            &AdversarialSamples,
+            |samples| {
+                let h = Histogram::new();
+                let mut exact = Summary::new();
+                for &v in samples {
+                    h.record(v);
+                    exact.record(v);
+                }
+                for p in [50.0, 90.0, 99.0] {
+                    let want = exact.percentile(p);
+                    let got = h.quantile(p / 100.0);
+                    let ratio = got / want;
+                    if !(0.75..=1.5).contains(&ratio) {
+                        return Err(format!(
+                            "p{p}: hist {got} vs exact {want} (ratio {ratio})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Regression (satellite): on a realistic latency distribution the
+    /// histogram percentiles track the old exact sample-vector math
+    /// within the documented error envelope — the serve report may swap
+    /// sources without visibly moving.
+    #[test]
+    fn serve_percentiles_match_exact_summary_within_bounds() {
+        let mut rng = crate::util::prng::Rng::new(0xCAFE);
+        let h = Histogram::new();
+        let mut exact = Summary::new();
+        for _ in 0..5000 {
+            // Log-normal-ish request latencies centered near 80ms.
+            let v = 0.08 * (rng.normal() * 0.6).exp();
+            h.record(v);
+            exact.record(v);
+        }
+        for p in [50.0, 90.0, 99.0] {
+            let want = exact.percentile(p);
+            let got = h.quantile(p / 100.0);
+            let ratio = got / want;
+            assert!(
+                (0.75..=1.5).contains(&ratio),
+                "p{p}: hist {got} vs exact {want} (ratio {ratio})"
+            );
+        }
+        assert_eq!(h.count(), 5000);
+    }
+}

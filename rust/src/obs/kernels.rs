@@ -1,0 +1,113 @@
+//! Sampled per-decode-path kernel timings.
+//!
+//! The GEMM entry points are far below the engine — threading a
+//! registry handle through every model forward would contaminate the
+//! whole call graph — so kernel timing goes through one process-wide
+//! sink. To keep the decode hot path unperturbed, calls are *sampled*:
+//! [`should_sample`] is a single relaxed fetch-add (amortized over the
+//! O(rows·cols) kernel work it guards) and only every
+//! [`SAMPLE_EVERY`]-th call pays for two `Instant` reads and a
+//! lock-free histogram record. Timing is measurement, not behavior —
+//! the sink never influences kernel output, so the process-global here
+//! does not compromise the determinism the failpoint registry's
+//! injected-state rule protects.
+
+use super::hist::{HistStat, Histogram};
+use super::registry::names;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Record one out of this many kernel calls.
+pub const SAMPLE_EVERY: u64 = 16;
+
+/// Which kernel family served the call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Grouped decode straight off the packed stream.
+    StreamDirect,
+    /// Grouped decode through the dequantized group buffer.
+    Buffered,
+    /// Hi-stream-only (draft precision) decode.
+    HiOnly,
+}
+
+impl KernelPath {
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            KernelPath::StreamDirect => names::GEMM_STREAM_DIRECT,
+            KernelPath::Buffered => names::GEMM_BUFFERED,
+            KernelPath::HiOnly => names::GEMM_HI_ONLY,
+        }
+    }
+}
+
+struct Sink {
+    stream_direct: Histogram,
+    buffered: Histogram,
+    hi_only: Histogram,
+    calls: AtomicU64,
+}
+
+static SINK: OnceLock<Sink> = OnceLock::new();
+
+fn sink() -> &'static Sink {
+    SINK.get_or_init(|| Sink {
+        stream_direct: Histogram::new(),
+        buffered: Histogram::new(),
+        hi_only: Histogram::new(),
+        calls: AtomicU64::new(0),
+    })
+}
+
+/// Cheap per-call gate: true on every [`SAMPLE_EVERY`]-th call.
+#[inline]
+pub fn should_sample() -> bool {
+    sink().calls.fetch_add(1, Ordering::Relaxed) % SAMPLE_EVERY == 0
+}
+
+/// Record one sampled kernel call.
+pub fn record(path: KernelPath, secs: f64) {
+    let s = sink();
+    match path {
+        KernelPath::StreamDirect => s.stream_direct.record(secs),
+        KernelPath::Buffered => s.buffered.record(secs),
+        KernelPath::HiOnly => s.hi_only.record(secs),
+    }
+}
+
+/// Snapshot the three per-path histograms as `(metric name, stat)`.
+pub fn stats() -> [(&'static str, HistStat); 3] {
+    let s = sink();
+    [
+        (names::GEMM_STREAM_DIRECT, s.stream_direct.stat()),
+        (names::GEMM_BUFFERED, s.buffered.stat()),
+        (names::GEMM_HI_ONLY, s.hi_only.stat()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is process-global and shared across the whole test
+    // binary, so assertions are monotone (counts only grow), never
+    // exact.
+    #[test]
+    fn record_lands_in_the_right_path() {
+        let before = stats();
+        record(KernelPath::StreamDirect, 1e-5);
+        record(KernelPath::Buffered, 2e-5);
+        record(KernelPath::HiOnly, 3e-5);
+        let after = stats();
+        for i in 0..3 {
+            assert_eq!(after[i].0, before[i].0);
+            assert!(after[i].1.count >= before[i].1.count + 1, "{}", after[i].0);
+        }
+    }
+
+    #[test]
+    fn sampling_gate_fires_at_least_once_per_window() {
+        let fired = (0..SAMPLE_EVERY).filter(|_| should_sample()).count();
+        assert!(fired >= 1, "one call in every window must sample");
+    }
+}

@@ -1,0 +1,40 @@
+//! Engine observability: a unified metrics registry, streaming
+//! log-bucketed latency histograms, per-request span tracing, and
+//! sampled kernel timings.
+//!
+//! This layer is the single telemetry substrate behind the serving
+//! engine (ROADMAP: production-scale serving needs attributable
+//! latency, not one tok/s number):
+//!
+//! - [`registry::MetricsRegistry`] — named counters, gauges and
+//!   [`hist::Histogram`]s (power-of-two buckets, O(1) memory, exact
+//!   count/sum, bounded-relative-error p50/p90/p99). TTFT, queue wait,
+//!   total latency, step time, prefill-chunk time and spec round times
+//!   all record here; the old grow-forever sample vectors are gone.
+//! - [`trace::TraceSink`] — per-request span timelines
+//!   (`Queued→Admitted→PrefillChunk×n→DecodeStep/SpecRound×n→
+//!   Preempted/Resumed→Terminal`) in bounded per-replica rings,
+//!   exported as Chrome trace-event JSON (`serve --trace-out`,
+//!   Perfetto-viewable). Overflow drops the oldest events and counts
+//!   them — never panics, never grows unbounded.
+//! - [`kernels`] — per-decode-path (`StreamDirect`/`Buffered`/`HiOnly`)
+//!   GEMM timings, sampled every Nth call so the hot path stays
+//!   unperturbed.
+//! - [`snapshot::MetricsSnapshot`] — the typed, serializable snapshot
+//!   `Engine::metrics_snapshot()` returns; its `rows()` formatter is
+//!   the only thing the CLI serving report prints, so CLI output, JSON
+//!   export and bench probes cannot drift apart.
+
+pub mod hist;
+pub mod kernels;
+pub mod registry;
+pub mod snapshot;
+pub mod trace;
+
+pub use hist::{HistStat, Histogram};
+pub use kernels::KernelPath;
+pub use registry::{names, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use snapshot::{
+    FaultSection, KvSection, MetricsSnapshot, ServeSection, SpecSection, TraceSection,
+};
+pub use trace::{SpanEvent, SpanKind, TraceSink, DEFAULT_RING_CAP};

@@ -1,0 +1,221 @@
+//! A unified registry of named counters, gauges and streaming
+//! histograms — the single metrics substrate behind the serving engine.
+//!
+//! Registration (`counter`/`gauge`/`histogram`) is get-or-create under a
+//! short-lived lock and returns an `Arc` handle; hot paths hold the
+//! handle and record lock-free through the atomics inside. A
+//! [`MetricsRegistry::snapshot`] walks every registered metric into
+//! plain sorted maps, which the engine folds into its typed
+//! [`MetricsSnapshot`](super::snapshot::MetricsSnapshot).
+//!
+//! Metric names are dotted paths (`serve.ttft_s`, `gemm.buffered_s`);
+//! the well-known ones live in [`names`] so the recorder, the snapshot
+//! formatter and the bench probes can never drift apart on a string.
+
+use super::hist::{HistStat, Histogram};
+use crate::util::metrics::Counter;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Well-known metric names. Histogram values are seconds unless the
+/// suffix says otherwise.
+pub mod names {
+    /// Submission → first generated token (queue wait included).
+    pub const TTFT: &str = "serve.ttft_s";
+    /// Submission → terminal event.
+    pub const LATENCY: &str = "serve.latency_s";
+    /// Submission → admission into the running batch.
+    pub const QUEUE_WAIT: &str = "serve.queue_wait_s";
+    /// One scheduler decode step (plain or speculative).
+    pub const STEP_TIME: &str = "serve.step_time_s";
+    /// One chunked-prefill forward.
+    pub const PREFILL_CHUNK: &str = "serve.prefill_chunk_s";
+    /// One full speculative round (draft + verify + accept).
+    pub const SPEC_ROUND: &str = "spec.round_s";
+    /// Draft phase of a speculative round (hi-stream forwards).
+    pub const SPEC_DRAFT: &str = "spec.draft_s";
+    /// Verify phase of a speculative round (full-precision forward).
+    pub const SPEC_VERIFY: &str = "spec.verify_s";
+    /// Sampled stream-direct grouped-decode kernel calls.
+    pub const GEMM_STREAM_DIRECT: &str = "gemm.stream_direct_s";
+    /// Sampled buffered grouped-decode kernel calls.
+    pub const GEMM_BUFFERED: &str = "gemm.buffered_s";
+    /// Sampled hi-only (draft-precision) kernel calls.
+    pub const GEMM_HI_ONLY: &str = "gemm.hi_only_s";
+    /// KV page-pool gauges (fed from [`crate::kv::KvGauges`]).
+    pub const KV_PAGES_USED: &str = "kv.pages_used";
+    pub const KV_PAGES_FREE: &str = "kv.pages_free";
+    pub const KV_PAGES_CAPACITY: &str = "kv.pages_capacity";
+    pub const KV_PAGES_PEAK: &str = "kv.pages_peak";
+    pub const KV_LEAKED: &str = "kv.pages_leaked";
+    /// Span events dropped to ring-buffer wraparound.
+    pub const TRACE_DROPPED: &str = "trace.events_dropped";
+    /// Request-lifecycle counters, ticked live by the replica workers
+    /// (the merged `ServeStats` is only available after shutdown; these
+    /// back `Engine::metrics_snapshot` while the engine serves).
+    pub const REQUESTS: &str = "serve.requests";
+    pub const CANCELLED: &str = "serve.cancelled";
+    pub const FAILED: &str = "serve.failed";
+    pub const TIMED_OUT: &str = "serve.timed_out";
+    pub const TOKENS_GENERATED: &str = "serve.tokens_generated";
+    pub const DECODE_STEPS: &str = "serve.decode_steps";
+    pub const BATCHED_TOKENS: &str = "serve.batched_tokens";
+    /// Highest batch occupancy any replica observed (gauge).
+    pub const PEAK_CONCURRENCY: &str = "serve.peak_concurrency";
+    /// Speculative-decoding counters (fleet totals across replicas).
+    pub const SPEC_DRAFTED: &str = "spec.drafted";
+    pub const SPEC_ACCEPTED: &str = "spec.accepted";
+    pub const SPEC_ROUNDS: &str = "spec.rounds";
+    /// Admission-queue gauges: live depth summed over replicas, and the
+    /// deepest backlog any replica's queue ever held.
+    pub const QUEUE_DEPTH: &str = "queue.depth";
+    pub const QUEUE_DEPTH_PEAK: &str = "queue.depth_peak";
+}
+
+/// A settable instantaneous value (pool occupancy, queue depth, ...).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// See the [module docs](self) for the model.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry::default())
+    }
+
+    /// Get-or-create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().expect("metrics registry");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().expect("metrics registry");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.hists.lock().expect("metrics registry");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// One-shot conveniences for cold paths.
+    pub fn set_gauge(&self, name: &str, v: u64) {
+        self.gauge(name).set(v);
+    }
+
+    pub fn record(&self, name: &str, v: f64) {
+        self.histogram(name).record(v);
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .expect("metrics registry")
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .expect("metrics registry")
+            .iter()
+            .map(|(k, g)| (k.clone(), g.get()))
+            .collect();
+        let hists = self
+            .hists
+            .lock()
+            .expect("metrics registry")
+            .iter()
+            .map(|(k, h)| (k.clone(), h.stat()))
+            .collect();
+        RegistrySnapshot { counters, gauges, hists }
+    }
+}
+
+/// Point-in-time copy of a [`MetricsRegistry`], sorted by name.
+#[derive(Clone, Debug, Default)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistStat>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_returns_same_metric() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").add(2);
+        reg.counter("a").inc();
+        assert_eq!(reg.counter("a").get(), 3);
+        reg.gauge("g").set(7);
+        assert_eq!(reg.gauge("g").get(), 7);
+        reg.histogram("h").record(1.0);
+        reg.histogram("h").record(2.0);
+        assert_eq!(reg.histogram("h").count(), 2);
+    }
+
+    #[test]
+    fn snapshot_carries_every_registered_metric() {
+        let reg = MetricsRegistry::new();
+        reg.counter("c.one").add(5);
+        reg.set_gauge("g.two", 9);
+        reg.record("h.three", 0.25);
+        let s = reg.snapshot();
+        assert_eq!(s.counters["c.one"], 5);
+        assert_eq!(s.gauges["g.two"], 9);
+        assert_eq!(s.hists["h.three"].count, 1);
+        assert_eq!(s.hists["h.three"].sum, 0.25);
+    }
+
+    #[test]
+    fn handles_record_lock_free_across_threads() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram(names::STEP_TIME);
+        let c = reg.counter("steps");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = Arc::clone(&h);
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        h.record(1e-3);
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 2000);
+        assert_eq!(c.get(), 2000);
+    }
+}

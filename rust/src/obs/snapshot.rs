@@ -1,0 +1,299 @@
+//! The typed, serializable metrics snapshot and its single formatter.
+//!
+//! [`MetricsSnapshot`] is what [`Engine::metrics_snapshot`]
+//! (`crate::coordinator::engine::Engine::metrics_snapshot`) returns: a
+//! point-in-time copy of every serving scalar, the fault and KV-pool
+//! counters, the span-trace health, and every registry histogram as a
+//! bounded-error [`HistStat`]. `to_json()` is the shape `serve
+//! --metrics-out METRICS.json` writes; [`MetricsSnapshot::rows`] is the
+//! one formatter behind the CLI serving report — CLI output, JSON
+//! export and bench probes all read the same struct, so they cannot
+//! disagree on a field.
+
+use super::hist::HistStat;
+use super::registry::names;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Request/throughput scalars (the old `ServeStats` surface).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeSection {
+    pub requests: u64,
+    pub cancelled: u64,
+    pub timed_out: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub retries: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    pub batched_tokens: u64,
+    pub wall_s: f64,
+    pub throughput_tps: f64,
+    pub mean_batch_occupancy: f64,
+    pub peak_concurrency: usize,
+}
+
+/// Speculative-decoding scalars.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecSection {
+    pub drafted: u64,
+    pub accepted: u64,
+    pub acceptance_rate: f64,
+}
+
+/// Fault-path scalars (mirrors `FaultCounters`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSection {
+    pub panics_recovered: u64,
+    pub restarts: u64,
+    pub timeouts: u64,
+    pub sheds: u64,
+    pub retries: u64,
+}
+
+/// KV page-pool scalars (mirrors `KvGauges`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvSection {
+    pub page_size: u64,
+    pub pages_capacity: u64,
+    pub pages_used: u64,
+    pub pages_peak: u64,
+    pub pages_leaked: u64,
+    pub prefix_hits: u64,
+    pub preemptions: u64,
+}
+
+/// Span-trace ring health.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceSection {
+    pub events_retained: u64,
+    pub events_dropped: u64,
+}
+
+/// See the [module docs](self).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub serve: ServeSection,
+    pub spec: SpecSection,
+    pub faults: FaultSection,
+    pub kv: KvSection,
+    pub trace: TraceSection,
+    /// Every registry counter, sorted by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Every registry gauge, sorted by name.
+    pub gauges: BTreeMap<String, u64>,
+    /// Every histogram (TTFT, queue wait, step time, prefill chunk,
+    /// spec rounds, per-path kernel timings), sorted by name.
+    pub hists: BTreeMap<String, HistStat>,
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+impl MetricsSnapshot {
+    /// Histogram stat by name (`obs::names::*`); zeroed when the
+    /// histogram never recorded.
+    pub fn hist(&self, name: &str) -> HistStat {
+        self.hists.get(name).copied().unwrap_or_default()
+    }
+
+    /// The METRICS.json shape.
+    pub fn to_json(&self) -> Json {
+        let mut serve = Json::obj();
+        serve
+            .set("requests", num(self.serve.requests))
+            .set("cancelled", num(self.serve.cancelled))
+            .set("timed_out", num(self.serve.timed_out))
+            .set("failed", num(self.serve.failed))
+            .set("shed", num(self.serve.shed))
+            .set("retries", num(self.serve.retries))
+            .set("tokens_generated", num(self.serve.tokens_generated))
+            .set("decode_steps", num(self.serve.decode_steps))
+            .set("batched_tokens", num(self.serve.batched_tokens))
+            .set("wall_s", Json::Num(self.serve.wall_s))
+            .set("throughput_tps", Json::Num(self.serve.throughput_tps))
+            .set("mean_batch_occupancy", Json::Num(self.serve.mean_batch_occupancy))
+            .set("peak_concurrency", num(self.serve.peak_concurrency as u64));
+        let mut spec = Json::obj();
+        spec.set("drafted", num(self.spec.drafted))
+            .set("accepted", num(self.spec.accepted))
+            .set("acceptance_rate", Json::Num(self.spec.acceptance_rate));
+        let mut faults = Json::obj();
+        faults
+            .set("panics_recovered", num(self.faults.panics_recovered))
+            .set("restarts", num(self.faults.restarts))
+            .set("timeouts", num(self.faults.timeouts))
+            .set("sheds", num(self.faults.sheds))
+            .set("retries", num(self.faults.retries));
+        let mut kv = Json::obj();
+        kv.set("page_size", num(self.kv.page_size))
+            .set("pages_capacity", num(self.kv.pages_capacity))
+            .set("pages_used", num(self.kv.pages_used))
+            .set("pages_peak", num(self.kv.pages_peak))
+            .set("pages_leaked", num(self.kv.pages_leaked))
+            .set("prefix_hits", num(self.kv.prefix_hits))
+            .set("preemptions", num(self.kv.preemptions));
+        let mut trace = Json::obj();
+        trace
+            .set("events_retained", num(self.trace.events_retained))
+            .set("events_dropped", num(self.trace.events_dropped));
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, num(*v));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, num(*v));
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.hists {
+            hists.set(k, h.to_json());
+        }
+        let mut root = Json::obj();
+        root.set("schema", Json::Str("ams-metrics/1".to_string()))
+            .set("serve", serve)
+            .set("spec", spec)
+            .set("faults", faults)
+            .set("kv", kv)
+            .set("trace", trace)
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("hists", hists);
+        root
+    }
+
+    /// The single `(metric, value)` row formatter behind the CLI
+    /// serving report. Every consumer renders these rows; nothing
+    /// formats snapshot fields by hand.
+    pub fn rows(&self) -> Vec<(String, String)> {
+        fn f(v: f64, places: usize) -> String {
+            format!("{v:.places$}")
+        }
+        let s = &self.serve;
+        let lat = self.hist(names::LATENCY);
+        let ttft = self.hist(names::TTFT);
+        let step = self.hist(names::STEP_TIME);
+        let queue = self.hist(names::QUEUE_WAIT);
+        let mut rows: Vec<(String, String)> = vec![
+            ("requests".into(), s.requests.to_string()),
+            ("tokens generated".into(), s.tokens_generated.to_string()),
+            ("wall s".into(), f(s.wall_s, 3)),
+            ("throughput tok/s".into(), f(s.throughput_tps, 1)),
+            ("mean batch occupancy".into(), f(s.mean_batch_occupancy, 2)),
+            ("latency p50 s".into(), f(lat.p50, 3)),
+            ("latency p90 s".into(), f(lat.p90, 3)),
+            ("latency p99 s".into(), f(lat.p99, 3)),
+            ("ttft p50 s".into(), f(ttft.p50, 4)),
+            ("ttft p90 s".into(), f(ttft.p90, 4)),
+            ("ttft p99 s".into(), f(ttft.p99, 4)),
+            ("queue wait p90 s".into(), f(queue.p90, 4)),
+            ("step time p50 s".into(), f(step.p50, 5)),
+            ("step time p99 s".into(), f(step.p99, 5)),
+            // Degradation is part of the report: a run that recovered
+            // from faults or shed load should say so, not hide it in a
+            // lower request count.
+            ("cancelled".into(), s.cancelled.to_string()),
+            ("timed out".into(), s.timed_out.to_string()),
+            ("failed".into(), s.failed.to_string()),
+            ("shed".into(), s.shed.to_string()),
+            ("retries".into(), s.retries.to_string()),
+            ("panics recovered".into(), self.faults.panics_recovered.to_string()),
+            ("replica restarts".into(), self.faults.restarts.to_string()),
+            // Paged-KV economics: pool pressure, prefix reuse and the
+            // preemptions paid for over-committing pages.
+            ("kv page size".into(), self.kv.page_size.to_string()),
+            ("kv pages peak".into(), self.kv.pages_peak.to_string()),
+            ("kv pages leaked".into(), self.kv.pages_leaked.to_string()),
+            ("kv prefix hits".into(), self.kv.prefix_hits.to_string()),
+            ("kv preemptions".into(), self.kv.preemptions.to_string()),
+            ("peak concurrency".into(), s.peak_concurrency.to_string()),
+            // Speculative economics; rows stay in the report even when
+            // speculation is off (all zero) so downstream parsers see a
+            // stable schema.
+            ("tokens drafted".into(), self.spec.drafted.to_string()),
+            ("drafts accepted".into(), self.spec.accepted.to_string()),
+            ("acceptance rate".into(), f(self.spec.acceptance_rate, 3)),
+            ("trace events retained".into(), self.trace.events_retained.to_string()),
+            ("trace events dropped".into(), self.trace.events_dropped.to_string()),
+        ];
+        // Per-path kernel timings, only when something sampled (the
+        // scalar rows above are schema-stable; the kernel rows are
+        // diagnostics).
+        for name in [names::GEMM_STREAM_DIRECT, names::GEMM_BUFFERED, names::GEMM_HI_ONLY] {
+            let h = self.hist(name);
+            if h.count > 0 {
+                rows.push((format!("{name} p50/p99"), format!("{:.2e}/{:.2e}", h.p50, h.p99)));
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        snap.serve.requests = 12;
+        snap.serve.tokens_generated = 384;
+        snap.serve.wall_s = 1.5;
+        snap.serve.throughput_tps = 256.0;
+        snap.kv.pages_peak = 40;
+        snap.trace.events_dropped = 3;
+        snap.hists.insert(
+            names::TTFT.to_string(),
+            HistStat { count: 12, sum: 0.6, mean: 0.05, min: 0.01, max: 0.2, p50: 0.04, p90: 0.1, p99: 0.19 },
+        );
+        snap.counters.insert("serve.requests".into(), 12);
+        snap.gauges.insert(names::KV_PAGES_USED.into(), 7);
+        snap
+    }
+
+    #[test]
+    fn json_round_trips_and_carries_percentiles() {
+        let snap = sample();
+        let text = snap.to_json().to_string_pretty();
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("serve").unwrap().req_usize("requests").unwrap(), 12);
+        let ttft = doc.get("hists").unwrap().get(names::TTFT).unwrap();
+        assert_eq!(ttft.req_f64("p90").unwrap(), 0.1);
+        assert_eq!(ttft.req_f64("p99").unwrap(), 0.19);
+        assert_eq!(doc.get("gauges").unwrap().req_usize(names::KV_PAGES_USED).unwrap(), 7);
+        assert_eq!(
+            doc.get("trace").unwrap().req_usize("events_dropped").unwrap(),
+            3
+        );
+    }
+
+    #[test]
+    fn rows_and_json_agree_on_the_same_fields() {
+        let snap = sample();
+        let rows = snap.rows();
+        let lookup = |k: &str| {
+            rows.iter()
+                .find(|(name, _)| name == k)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_else(|| panic!("missing row {k}"))
+        };
+        assert_eq!(lookup("requests"), "12");
+        assert_eq!(lookup("ttft p90 s"), "0.1000");
+        assert_eq!(lookup("trace events dropped"), "3");
+        // Same values through the JSON path — one source, two renders.
+        let doc = json::parse(&snap.to_json().to_string()).unwrap();
+        assert_eq!(
+            doc.get("hists").unwrap().get(names::TTFT).unwrap().req_f64("p90").unwrap(),
+            0.1
+        );
+    }
+
+    #[test]
+    fn missing_histograms_render_zeroed_not_panic() {
+        let snap = MetricsSnapshot::default();
+        let rows = snap.rows();
+        assert!(rows.iter().any(|(k, v)| k == "latency p50 s" && v == "0.000"));
+        assert!(!rows.iter().any(|(k, _)| k.starts_with("gemm.")));
+    }
+}

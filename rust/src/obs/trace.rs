@@ -1,0 +1,341 @@
+//! Per-request span timelines in bounded per-replica ring buffers,
+//! exportable as Chrome trace-event JSON (open in Perfetto or
+//! `chrome://tracing`).
+//!
+//! The scheduler emits typed [`SpanKind`] events as a request moves
+//! through its lifecycle:
+//!
+//! ```text
+//! Queued → Admitted → PrefillChunk×n → DecodeStep/SpecRound×n
+//!        → (Preempted → Resumed)* → exactly one terminal
+//!          (Done | Cancelled | TimedOut | Failed)
+//! ```
+//!
+//! Timestamps are microseconds on a single monotonic epoch shared by
+//! every replica, so cross-replica interleaving (preemption storms,
+//! chunked-prefill fairness, spec acceptance collapse) lines up on one
+//! Perfetto timeline. Each replica owns a bounded ring: when it fills,
+//! the **oldest** events are dropped and counted — export degrades
+//! gracefully instead of growing without bound or panicking (the
+//! `trace-buffer` failpoint forces this wraparound mid-run in chaos
+//! tests). Duration events (`PrefillChunk`, `DecodeStep`, `SpecRound`)
+//! become Chrome complete events (`ph:"X"`); lifecycle markers become
+//! instants (`ph:"i"`). Replica index maps to `tid`, so each replica's
+//! schedule renders as its own track.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Typed span event kinds — the request lifecycle plus scheduler
+/// interventions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Accepted by the engine and dispatched to a replica queue.
+    Queued,
+    /// Admitted from the queue into the running batch.
+    Admitted,
+    /// One chunked-prefill forward (duration).
+    PrefillChunk,
+    /// One plain batched decode step (duration).
+    DecodeStep,
+    /// One speculative draft+verify round (duration).
+    SpecRound,
+    /// Parked to relieve KV page-pool pressure.
+    Preempted,
+    /// Un-parked back into the running batch.
+    Resumed,
+    /// Terminal: finished normally.
+    Done,
+    /// Terminal: cancelled by the caller.
+    Cancelled,
+    /// Terminal: a queue/total deadline expired.
+    TimedOut,
+    /// Terminal: replica panic or unservable request.
+    Failed,
+}
+
+impl SpanKind {
+    /// Event name in the exported trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Queued => "queued",
+            SpanKind::Admitted => "admitted",
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::SpecRound => "spec_round",
+            SpanKind::Preempted => "preempted",
+            SpanKind::Resumed => "resumed",
+            SpanKind::Done => "done",
+            SpanKind::Cancelled => "cancelled",
+            SpanKind::TimedOut => "timed_out",
+            SpanKind::Failed => "failed",
+        }
+    }
+
+    /// Trace category (`cat`) — the phase the event belongs to. The
+    /// acceptance smoke asserts ≥ 4 distinct categories show up in a
+    /// speculative chaos run.
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::Queued | SpanKind::Admitted => "queue",
+            SpanKind::PrefillChunk => "prefill",
+            SpanKind::DecodeStep => "decode",
+            SpanKind::SpecRound => "spec",
+            SpanKind::Preempted | SpanKind::Resumed => "sched",
+            SpanKind::Done | SpanKind::Cancelled | SpanKind::TimedOut | SpanKind::Failed => {
+                "terminal"
+            }
+        }
+    }
+
+    /// Done, Cancelled, TimedOut or Failed — exactly one per request.
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Done | SpanKind::Cancelled | SpanKind::TimedOut | SpanKind::Failed
+        )
+    }
+
+    /// True for events that carry a duration (Chrome `ph:"X"`).
+    pub fn has_duration(self) -> bool {
+        matches!(
+            self,
+            SpanKind::PrefillChunk | SpanKind::DecodeStep | SpanKind::SpecRound
+        )
+    }
+}
+
+/// One recorded span event.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Request id ([`crate::coordinator::GenRequest::id`]).
+    pub req: u64,
+    pub kind: SpanKind,
+    /// Microseconds since the sink's epoch (start of the span for
+    /// duration events).
+    pub ts_us: u64,
+    /// Span length in microseconds; 0 for instant events.
+    pub dur_us: u64,
+}
+
+struct Ring {
+    events: VecDeque<SpanEvent>,
+}
+
+/// Bounded per-replica span sink. See the [module docs](self).
+pub struct TraceSink {
+    epoch: Instant,
+    rings: Vec<Mutex<Ring>>,
+    cap_per_replica: usize,
+    dropped: AtomicU64,
+}
+
+/// Default ring capacity per replica (events, not requests).
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+impl TraceSink {
+    pub fn new(replicas: usize, cap_per_replica: usize) -> Arc<TraceSink> {
+        let cap = cap_per_replica.max(1);
+        Arc::new(TraceSink {
+            epoch: Instant::now(),
+            rings: (0..replicas.max(1))
+                .map(|_| Mutex::new(Ring { events: VecDeque::new() }))
+                .collect(),
+            cap_per_replica: cap,
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Microseconds since this sink's epoch — the shared monotonic
+    /// timebase for every event.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record an event on a replica's ring, dropping the oldest event
+    /// when the ring is full.
+    pub fn push(&self, replica: usize, ev: SpanEvent) {
+        let ring = &self.rings[replica.min(self.rings.len() - 1)];
+        let mut r = ring.lock().expect("trace ring");
+        if r.events.len() >= self.cap_per_replica {
+            r.events.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        r.events.push_back(ev);
+    }
+
+    /// Record an instant event stamped now.
+    pub fn instant(&self, replica: usize, req: u64, kind: SpanKind) {
+        let ts_us = self.now_us();
+        self.push(replica, SpanEvent { req, kind, ts_us, dur_us: 0 });
+    }
+
+    /// Record a duration event that started at `start_us` (from
+    /// [`TraceSink::now_us`]) and ends now.
+    pub fn span(&self, replica: usize, req: u64, kind: SpanKind, start_us: u64) {
+        let now = self.now_us();
+        self.push(
+            replica,
+            SpanEvent { req, kind, ts_us: start_us, dur_us: now.saturating_sub(start_us) },
+        );
+    }
+
+    /// Forced wraparound: drop the oldest half of a replica's ring (the
+    /// `trace-buffer` failpoint's degradation path). Counters stay
+    /// intact and retained events keep their order.
+    pub fn force_wrap(&self, replica: usize) {
+        let ring = &self.rings[replica.min(self.rings.len() - 1)];
+        let mut r = ring.lock().expect("trace ring");
+        let drop_n = r.events.len() / 2;
+        r.events.drain(..drop_n);
+        self.dropped.fetch_add(drop_n as u64, Ordering::Relaxed);
+    }
+
+    /// Events dropped to wraparound (forced or capacity).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Retained events across every replica as `(replica, event)`,
+    /// sorted by timestamp.
+    pub fn events(&self) -> Vec<(usize, SpanEvent)> {
+        let mut out = Vec::new();
+        for (tid, ring) in self.rings.iter().enumerate() {
+            let r = ring.lock().expect("trace ring");
+            out.extend(r.events.iter().map(|&e| (tid, e)));
+        }
+        out.sort_by_key(|&(_, e)| e.ts_us);
+        out
+    }
+
+    /// Total retained events.
+    pub fn len(&self) -> usize {
+        self.rings
+            .iter()
+            .map(|r| r.lock().expect("trace ring").events.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Export as Chrome trace-event JSON: `{"traceEvents": [...]}` with
+    /// one process, one thread track per replica. Duration events are
+    /// complete events (`ph:"X"` with `ts`+`dur`), lifecycle markers are
+    /// thread-scoped instants (`ph:"i"`, `s:"t"`). Open the file
+    /// directly in <https://ui.perfetto.dev> or `chrome://tracing`.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        for (tid, ev) in self.events() {
+            let mut args = Json::obj();
+            args.set("req", Json::Num(ev.req as f64));
+            let mut o = Json::obj();
+            o.set("name", Json::Str(ev.kind.name().to_string()))
+                .set("cat", Json::Str(ev.kind.category().to_string()))
+                .set("ts", Json::Num(ev.ts_us as f64))
+                .set("pid", Json::Num(0.0))
+                .set("tid", Json::Num(tid as f64))
+                .set("args", args);
+            if ev.kind.has_duration() {
+                o.set("ph", Json::Str("X".to_string()))
+                    .set("dur", Json::Num(ev.dur_us as f64));
+            } else {
+                o.set("ph", Json::Str("i".to_string()))
+                    .set("s", Json::Str("t".to_string()));
+            }
+            events.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("traceEvents", Json::Arr(events))
+            .set("displayTimeUnit", Json::Str("ms".to_string()))
+            .set("dropped_events", Json::Num(self.dropped() as f64));
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timestamps_are_monotone_per_replica() {
+        let sink = TraceSink::new(2, 64);
+        for i in 0..10 {
+            sink.instant(i % 2, i as u64, SpanKind::DecodeStep);
+        }
+        for tid in 0..2 {
+            let ts: Vec<u64> = sink
+                .events()
+                .into_iter()
+                .filter(|&(t, _)| t == tid)
+                .map(|(_, e)| e.ts_us)
+                .collect();
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]), "replica {tid}: {ts:?}");
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_on_overflow() {
+        let sink = TraceSink::new(1, 4);
+        for i in 0..10u64 {
+            sink.push(0, SpanEvent { req: i, kind: SpanKind::DecodeStep, ts_us: i, dur_us: 0 });
+        }
+        assert_eq!(sink.len(), 4);
+        assert_eq!(sink.dropped(), 6);
+        let reqs: Vec<u64> = sink.events().iter().map(|&(_, e)| e.req).collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9], "newest events retained in order");
+    }
+
+    #[test]
+    fn force_wrap_halves_ring_and_counts_drops() {
+        let sink = TraceSink::new(1, 64);
+        for i in 0..10u64 {
+            sink.push(0, SpanEvent { req: i, kind: SpanKind::DecodeStep, ts_us: i, dur_us: 0 });
+        }
+        sink.force_wrap(0);
+        assert_eq!(sink.len(), 5);
+        assert_eq!(sink.dropped(), 5);
+        let reqs: Vec<u64> = sink.events().iter().map(|&(_, e)| e.req).collect();
+        assert_eq!(reqs, vec![5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn chrome_export_is_wellformed() {
+        let sink = TraceSink::new(2, 64);
+        sink.instant(0, 1, SpanKind::Queued);
+        let t0 = sink.now_us();
+        sink.span(0, 1, SpanKind::PrefillChunk, t0);
+        sink.instant(1, 2, SpanKind::Done);
+        let doc = sink.to_chrome_json();
+        let text = doc.to_string();
+        let parsed = crate::util::json::parse(&text).expect("round-trips through the parser");
+        let evs = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(evs.len(), 3);
+        for e in evs {
+            for field in ["name", "cat", "ph", "ts", "pid", "tid"] {
+                assert!(e.get(field).is_some(), "event lacks {field}: {e:?}");
+            }
+        }
+        let durs: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .map(|e| e.get("name").and_then(|n| n.as_str()).unwrap())
+            .collect();
+        assert_eq!(durs, vec!["prefill_chunk"]);
+    }
+
+    #[test]
+    fn terminal_kinds_are_exactly_the_four() {
+        use SpanKind::*;
+        for k in [Queued, Admitted, PrefillChunk, DecodeStep, SpecRound, Preempted, Resumed] {
+            assert!(!k.is_terminal());
+        }
+        for k in [Done, Cancelled, TimedOut, Failed] {
+            assert!(k.is_terminal());
+        }
+    }
+}

@@ -180,7 +180,9 @@ impl Controller {
     /// request's sampler; identity with plain decoding requires it to
     /// be deterministic, i.e. greedy). `before_verify` runs after
     /// drafting and before the verify forward — the scheduler's
-    /// failpoint hook for the chaos suite.
+    /// failpoint hook for the chaos suite, and the timestamp boundary
+    /// that splits the round into its `spec.draft_s` / `spec.verify_s`
+    /// histogram phases (see [`crate::obs`]).
     #[allow(clippy::too_many_arguments)]
     pub fn round<C: AsKvStore>(
         &mut self,

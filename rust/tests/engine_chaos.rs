@@ -23,7 +23,7 @@
 //! round. Set `CHAOS_REPORT=/path/file.txt` to append one summary line
 //! per round for artifact archiving.
 
-use ams_quant::coordinator::failpoint::{POOL, PREFILL, QUEUE_PUSH, STEP, VERIFY};
+use ams_quant::coordinator::failpoint::{POOL, PREFILL, QUEUE_PUSH, STEP, TRACE_BUF, VERIFY};
 use ams_quant::coordinator::{
     DispatchPolicy, Engine, EngineError, Event, FailPoints, FailSpec, GenRequest, Priority,
 };
@@ -478,6 +478,155 @@ fn spec_verify_panic_leaks_no_pages() {
         stats.drafted,
         stats.accepted,
         stats.acceptance_rate()
+    ));
+}
+
+/// Observability under chaos (ISSUE 9): a seeded replica panic plus
+/// random cancels and deadlines must leave a span timeline in which
+/// every accepted request has **exactly one** terminal event and every
+/// replica's timestamps are monotone — the scheduler's step-outcome
+/// instants and the supervisor's panic-path instants never double-fire,
+/// and redispatched requests terminate on their new replica only.
+#[test]
+fn trace_terminal_conservation_under_chaos() {
+    use std::collections::BTreeMap;
+    const SEED: u64 = 0x7ACE;
+    let fp = FailPoints::seeded(SEED);
+    // Replica 0 serves ~12 requests (batch 3, budgets 4..=9), comfortably
+    // more than 12 steps even after random cancels and expiries.
+    let panic_step = fp.arm_random_panic(STEP, 0, 2, 12);
+    println!("trace chaos: seed {SEED:#x} -> panic at replica-0 step {panic_step}");
+
+    let eng = Engine::builder()
+        .replicas(2)
+        .dispatch(DispatchPolicy::RoundRobin)
+        .max_batch(3)
+        .queue_capacity(64)
+        .seed(SEED)
+        .restart_backoff(Duration::from_millis(1), Duration::from_millis(20))
+        .failpoints(std::sync::Arc::clone(&fp))
+        .build(model());
+
+    let mut rng = Rng::new(SEED);
+    let mut live = Vec::new();
+    for id in 0..24u64 {
+        let mut req =
+            GenRequest::greedy(id, vec![(id as u32 % 50) + 1, 2], 4 + (id as usize % 6));
+        if rng.below(6) == 0 {
+            req = req.with_total_deadline(Duration::from_millis(1 + rng.below(20)));
+        }
+        let h = eng.submit(req).expect("capacity 64 holds the workload");
+        if rng.below(5) == 0 {
+            h.cancel();
+        }
+        live.push(h);
+    }
+    let mut t = Terminals::default();
+    t.drain(live, "trace-chaos");
+    assert_eq!(t.total(), 24);
+    eng.drain();
+
+    let trace = eng.trace();
+    assert_eq!(trace.dropped(), 0, "default ring cap retains this workload");
+    let events = trace.events();
+    let mut terminals: BTreeMap<u64, u32> = BTreeMap::new();
+    for &(_, e) in &events {
+        if e.kind.is_terminal() {
+            *terminals.entry(e.req).or_insert(0) += 1;
+        }
+    }
+    for id in 0..24u64 {
+        assert_eq!(
+            terminals.get(&id).copied().unwrap_or(0),
+            1,
+            "request {id}: exactly one terminal span event ({terminals:?})"
+        );
+    }
+    // One shared monotonic epoch: each replica's timeline stays ordered
+    // through the panic, restart and redispatches.
+    let mut last: BTreeMap<usize, u64> = BTreeMap::new();
+    for &(tid, e) in &events {
+        let prev = last.entry(tid).or_insert(0);
+        assert!(e.ts_us >= *prev, "replica {tid}: non-monotone timeline");
+        *prev = e.ts_us;
+    }
+    assert_eq!(fp.fired(STEP), 1, "the seeded panic was injected");
+    eng.shutdown();
+    report(&format!(
+        "trace-chaos seed={SEED:#x} panic_step={panic_step} events={} done={} \
+         cancelled={} timed_out={} failed={}",
+        events.len(),
+        t.done,
+        t.cancelled,
+        t.timed_out,
+        t.failed
+    ));
+}
+
+/// The `trace-buffer` failpoint (ISSUE 9 satellite): forced span-ring
+/// wraparounds mid-run must degrade export gracefully — oldest events
+/// dropped *and counted*, serving outcomes and metrics counters intact,
+/// no panic — while terminal conservation still holds for every request
+/// with retained events (a request's terminal is its newest event, so
+/// an oldest-first drop can never orphan a retained timeline).
+#[test]
+fn trace_buffer_wraparound_degrades_gracefully() {
+    use std::collections::BTreeMap;
+    const SEED: u64 = 0x77AB;
+    let fp = FailPoints::seeded(SEED);
+    // Every step after the third forces a wraparound: the ring keeps
+    // halving while the workload keeps appending.
+    fp.arm_tagged(TRACE_BUF, 0, FailSpec::deny(1000).after(3));
+
+    let eng = Engine::builder()
+        .replicas(1)
+        .max_batch(4)
+        .queue_capacity(64)
+        .seed(SEED)
+        .failpoints(std::sync::Arc::clone(&fp))
+        .build(model());
+
+    let handles: Vec<_> = (0..16u64)
+        .map(|id| {
+            eng.submit(GenRequest::greedy(id, vec![(id as u32 % 50) + 1, 2], 6))
+                .expect("capacity 64 holds the workload")
+        })
+        .collect();
+    let mut t = Terminals::default();
+    t.drain(handles, "trace-wrap");
+    assert_eq!(t.total(), 16);
+    assert_eq!(t.done, 16, "wraparound must never affect request outcomes");
+    eng.drain();
+
+    let trace = eng.trace();
+    assert!(fp.fired(TRACE_BUF) > 0, "the wraparound failpoint fired");
+    assert!(trace.dropped() > 0, "forced wraparound dropped oldest events");
+    let events = trace.events();
+    let mut per_req: BTreeMap<u64, (u32, u32)> = BTreeMap::new();
+    for &(_, e) in &events {
+        let ent = per_req.entry(e.req).or_insert((0, 0));
+        ent.0 += 1;
+        if e.kind.is_terminal() {
+            ent.1 += 1;
+        }
+    }
+    assert!(!per_req.is_empty(), "the newest events survive the wraparound");
+    for (req, (n, term)) in &per_req {
+        assert_eq!(
+            *term, 1,
+            "request {req}: {n} retained events but {term} terminals"
+        );
+    }
+    let snap = eng.metrics_snapshot();
+    assert_eq!(snap.serve.requests, 16, "counters intact through wraparound");
+    assert_eq!(snap.trace.events_dropped, trace.dropped());
+    assert_eq!(snap.trace.events_retained, events.len() as u64);
+    let stats = eng.shutdown();
+    assert_eq!(stats.requests, 16);
+    report(&format!(
+        "trace-wrap seed={SEED:#x} retained={} dropped={}",
+        events.len(),
+        trace.dropped()
     ));
 }
 

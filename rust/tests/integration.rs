@@ -140,8 +140,8 @@ fn serving_stress_mixed_lengths() {
         assert!(r.ttft_s > 0.0 && r.total_s >= r.ttft_s, "req {}", r.id);
     }
     eng.drain();
-    assert_eq!(eng.latency().count(), 50);
-    assert_eq!(eng.ttft().count(), 50);
+    assert_eq!(eng.latency().count, 50);
+    assert_eq!(eng.ttft().count, 50);
     let stats = eng.shutdown();
     assert_eq!(stats.requests, 50);
     assert_eq!(stats.tokens_generated as usize, expected_tokens);
@@ -323,6 +323,76 @@ fn corrupt_amsq_short_group_scales_fails_load() {
     // (b) Truncated payload: the streams physically end early.
     let err = write_and_load("truncated.amsq", &bytes[..bytes.len() - 64]);
     assert!(err.is_err(), "truncated payload must fail the load");
+}
+
+/// Observability end to end: a speculative serve run leaves a span
+/// timeline with ≥ 4 distinct phases, exactly one terminal event per
+/// request, and a metrics snapshot whose streaming histograms carry the
+/// percentile fields METRICS.json / schema-v4 benches depend on.
+#[test]
+fn trace_and_metrics_snapshot_end_to_end() {
+    use ams_quant::obs::names;
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let base = model().quantized(&QuantConfig::paper(Scheme::parse("fp6-e2m3").unwrap())).unwrap();
+    let n_requests = 8u64;
+    let eng = Engine::builder()
+        .max_batch(4)
+        .speculative(true)
+        .draft_depth(2)
+        .seed(3)
+        .build(base);
+    let handles: Vec<RequestHandle> = (0..n_requests)
+        .map(|id| {
+            let prompt: Vec<u32> = (0..4 + id as u32 % 5).map(|j| (j * 7 + id as u32) % 60).collect();
+            eng.submit(GenRequest::greedy(id, prompt, 6)).unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait().expect("completes");
+    }
+    eng.drain();
+
+    let trace = eng.trace();
+    let events = trace.events();
+    let cats: BTreeSet<&str> = events.iter().map(|&(_, e)| e.kind.category()).collect();
+    assert!(
+        cats.len() >= 4,
+        "speculative run must touch >= 4 span phases, got {cats:?}"
+    );
+    assert!(cats.contains("spec"), "speculative rounds must be traced: {cats:?}");
+
+    // Conservation: exactly one terminal event per request, and every
+    // replica's timeline is monotone.
+    let mut terminals: BTreeMap<u64, usize> = BTreeMap::new();
+    for &(_, e) in &events {
+        if e.kind.is_terminal() {
+            *terminals.entry(e.req).or_insert(0) += 1;
+        }
+    }
+    assert_eq!(terminals.len() as u64, n_requests, "every request reaches a terminal");
+    assert!(terminals.values().all(|&n| n == 1), "one terminal each: {terminals:?}");
+    let mut last_ts: BTreeMap<usize, u64> = BTreeMap::new();
+    for &(tid, e) in &events {
+        let prev = last_ts.entry(tid).or_insert(0);
+        assert!(e.ts_us >= *prev, "replica {tid} timestamps must be monotone");
+        *prev = e.ts_us;
+    }
+
+    // The Chrome export round-trips through the repo's own JSON parser.
+    let doc = trace.to_chrome_json().to_string();
+    let parsed = ams_quant::util::json::parse(&doc).expect("valid trace JSON");
+    assert!(parsed.get("traceEvents").is_some());
+
+    // Snapshot: histogram percentiles present and ordered.
+    let snap = eng.metrics_snapshot();
+    let ttft = snap.hist(names::TTFT);
+    assert_eq!(ttft.count, n_requests);
+    assert!(ttft.p50 <= ttft.p90 && ttft.p90 <= ttft.p99, "{ttft:?}");
+    assert!(snap.hist(names::STEP_TIME).count > 0, "step times recorded");
+    assert!(snap.hist(names::SPEC_ROUND).count > 0, "spec rounds timed");
+    assert!(snap.spec.drafted > 0 && snap.serve.requests == n_requests);
+    eng.shutdown();
 }
 
 #[test]

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file exported by `serve --trace-out`.
+
+Checks (stdlib only, exit non-zero on the first violation):
+
+  1. The file parses as JSON and has a `traceEvents` array.
+  2. Every event carries `name`, `cat`, `ph`, `ts`, `pid`, `tid`; duration
+     events (`ph == "X"`) also carry `dur`, and every event's `args.req`
+     names the request it belongs to.
+  3. Exactly one terminal event (`cat == "terminal"`) per request — the
+     engine's conservation invariant, end to end through the exporter.
+  4. Per-`tid` (replica) timestamps are monotonically non-decreasing in
+     file order (the exporter sorts by `ts`).
+  5. Optionally, at least `--min-cats N` distinct categories appear (the
+     speculative serve smoke asserts >= 4: queue/prefill/spec/terminal).
+
+Usage:
+  scripts/check_trace.py TRACE.json [--min-cats 4] [--expect-requests N]
+"""
+
+import argparse
+import json
+import sys
+
+REQUIRED_FIELDS = ("name", "cat", "ph", "ts", "pid", "tid")
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="path to the Chrome trace JSON")
+    ap.add_argument(
+        "--min-cats",
+        type=int,
+        default=0,
+        help="require at least this many distinct event categories",
+    )
+    ap.add_argument(
+        "--expect-requests",
+        type=int,
+        default=None,
+        help="require exactly this many requests with a terminal event",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace, encoding="utf-8") as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.trace}: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("missing or non-array traceEvents")
+    if not events:
+        fail("trace holds no events")
+
+    cats = set()
+    terminals = {}  # req id -> count
+    last_ts = {}  # tid -> last ts seen
+    for i, ev in enumerate(events):
+        for field in REQUIRED_FIELDS:
+            if field not in ev:
+                fail(f"event {i} lacks required field {field!r}: {ev}")
+        if ev["ph"] == "X" and "dur" not in ev:
+            fail(f"event {i} is a duration event without dur: {ev}")
+        req = ev.get("args", {}).get("req")
+        if req is None:
+            fail(f"event {i} lacks args.req: {ev}")
+        cats.add(ev["cat"])
+        tid = ev["tid"]
+        if ev["ts"] < last_ts.get(tid, 0):
+            fail(f"event {i}: tid {tid} timestamps regress ({ev['ts']} < {last_ts[tid]})")
+        last_ts[tid] = ev["ts"]
+        if ev["cat"] == "terminal":
+            terminals[req] = terminals.get(req, 0) + 1
+
+    dupes = {r: n for r, n in terminals.items() if n != 1}
+    if dupes:
+        fail(f"requests with != 1 terminal event: {dupes}")
+    # Only enforce full coverage when the caller knows the request count:
+    # a wrapped ring legitimately drops whole early timelines.
+    if args.expect_requests is not None and len(terminals) != args.expect_requests:
+        fail(
+            f"expected {args.expect_requests} requests with a terminal event, "
+            f"found {len(terminals)}"
+        )
+    if len(cats) < args.min_cats:
+        fail(f"expected >= {args.min_cats} distinct categories, got {sorted(cats)}")
+
+    dropped = doc.get("dropped_events", 0)
+    print(
+        f"check_trace: OK: {len(events)} events, {len(terminals)} requests, "
+        f"{len(cats)} categories {sorted(cats)}, {dropped} dropped"
+    )
+
+
+if __name__ == "__main__":
+    main()
