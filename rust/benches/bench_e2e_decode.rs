@@ -13,14 +13,19 @@
 //! acceptance rate and draft economics are recorded for diffing.
 //! Schema v4 sources percentiles from the engine's streaming metrics
 //! histograms (`Engine::metrics_snapshot`) and adds `ttft_p90_s` /
-//! `step_time_p99_s` per serve entry — CI asserts both.
+//! `step_time_p99_s` per serve entry — CI asserts both. Schema v5 adds
+//! a `tenant_mix` probe: the same heavy/light two-tenant workload runs
+//! untenanted (youngest-first preemption), tenanted (fair-share), and
+//! tenanted with a per-tenant page quota; per-tenant TTFT and latency
+//! percentiles are recorded per policy so CI can assert fair-share
+//! shields the light tenant from the heavy one's pool pressure.
 //!
 //! Flags: `--steps N` decode steps per iteration, `--serve-requests N`,
 //! `--serve-max-batch B`, `--serve-max-new-tokens T`, `--json-serve PATH`.
 //! Honors `AMS_BENCH_QUICK` / `AMS_BENCH_MEASURE_SECS`.
 
-use ams_quant::coordinator::{Engine, GenRequest, RequestHandle};
-use ams_quant::obs::names;
+use ams_quant::coordinator::{Engine, GenRequest, GenResponse, Priority, RequestHandle};
+use ams_quant::obs::{labeled, names};
 use ams_quant::experiments as exp;
 use ams_quant::formats::registry::Scheme;
 use ams_quant::model::transformer::{ForwardScratch, KvCache, Transformer};
@@ -185,10 +190,11 @@ fn serve_trajectory(args: &Args, base: &Transformer, quick: bool) {
 
     results.push(paged_admission(base, quick));
     results.push(spec_decode_probe(base, quick));
+    results.push(tenant_mix_probe(base, quick));
 
     let mut root = Json::obj();
     root.set("bench", Json::Str("serve".into()))
-        .set("schema_version", Json::Num(4.0))
+        .set("schema_version", Json::Num(5.0))
         .set("requests", Json::Num(n_requests as f64))
         .set("max_batch", Json::Num(max_batch as f64))
         .set("max_new_tokens", Json::Num(max_new as f64))
@@ -338,5 +344,151 @@ fn spec_decode_probe(base: &Transformer, quick: bool) -> Json {
         .set("prefix_hits", Json::Num(stats.prefix_hits as f64))
         .set("preemptions", Json::Num(stats.preemptions as f64))
         .set("peak_concurrency", Json::Num(stats.peak_concurrency as f64));
+    entry
+}
+
+/// Nearest-rank percentile over raw per-request samples (the probe has
+/// few requests per tenant, so exact order statistics beat the
+/// streaming histograms here).
+fn pctl(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("latency samples are finite"));
+    v[(q * (v.len() - 1) as f64).round() as usize]
+}
+
+/// Schema v5 probe: multi-tenant scheduling under pool pressure. A
+/// heavy tenant (6 long bulk decodes) and a light tenant (2 short bulk
+/// decodes, submitted last) share a pool deliberately too small for
+/// the workload's full KV growth, so the scheduler must preempt. The
+/// same workload runs under three policies:
+///
+/// - `yf` — untenanted: every request joins the shared default tenant,
+///   which degenerates fair-share to plain youngest-first, so the
+///   light requests (youngest) absorb the preemption storm.
+/// - `fair` — tenanted, no quota: fair-share parks the youngest bulk
+///   of the most-over-share tenant, i.e. the heavy one.
+/// - `fair_quota` — tenanted with a per-tenant page quota below the
+///   heavy tenant's appetite, so quota pressure is also billed to the
+///   offender.
+///
+/// Per-tenant TTFT/latency percentiles are recorded per policy; CI
+/// asserts the light tenant's tail under fair-share does not regress
+/// past youngest-first.
+fn tenant_mix_probe(base: &Transformer, quick: bool) -> Json {
+    let page_size = 16usize;
+    let pool_pages = 18usize;
+    let heavy_n = 6usize;
+    let light_n = 2usize;
+    let heavy_new = if quick { 24 } else { 40 };
+    let light_new = 8usize;
+    let quota_pages = 12usize;
+    let vocab = base.cfg.vocab_size as u32;
+    // Distinct from the first token so tenants' prompts never share a
+    // page-aligned prefix and pool pressure stays policy-independent.
+    let heavy_prompt =
+        |id: u64| (0..30u32).map(|j| (j * 13 + id as u32 * 7 + 1) % vocab).collect::<Vec<u32>>();
+    let light_prompt =
+        |id: u64| (0..8u32).map(|j| (j * 5 + id as u32 * 11 + 2) % vocab).collect::<Vec<u32>>();
+
+    let mut entry = Json::obj();
+    entry
+        .set("name", Json::Str("serve/tenant_mix".into()))
+        .set("scheme", Json::Str("fp5.33".into()))
+        .set("heavy_requests", Json::Num(heavy_n as f64))
+        .set("light_requests", Json::Num(light_n as f64))
+        .set("max_batch", Json::Num(8.0))
+        .set("kv_page_size", Json::Num(page_size as f64))
+        .set("kv_pool_pages", Json::Num(pool_pages as f64))
+        .set("quota_pages", Json::Num(quota_pages as f64));
+
+    for (cfg, tenanted, quota) in
+        [("yf", false, 0usize), ("fair", true, 0), ("fair_quota", true, quota_pages)]
+    {
+        let model =
+            base.quantized(&QuantConfig::paper(Scheme::parse("fp5.33").unwrap())).unwrap();
+        let eng = Engine::builder()
+            .max_batch(8)
+            .kv_page_size(page_size)
+            .kv_pool_pages(pool_pages)
+            .tenant_quota_pages(quota)
+            .seed(1)
+            .build(model);
+        let wall = Timer::start();
+        let heavy_handles: Vec<RequestHandle> = (0..heavy_n as u64)
+            .map(|id| {
+                let mut req = GenRequest::greedy(id, heavy_prompt(id), heavy_new)
+                    .with_priority(Priority::Bulk);
+                if tenanted {
+                    req = req.with_tenant(1);
+                }
+                eng.submit(req).expect("submit heavy")
+            })
+            .collect();
+        let light_handles: Vec<RequestHandle> = (0..light_n as u64)
+            .map(|id| {
+                let mut req =
+                    GenRequest::greedy(heavy_n as u64 + id, light_prompt(id), light_new)
+                        .with_priority(Priority::Bulk);
+                if tenanted {
+                    req = req.with_tenant(2);
+                }
+                eng.submit(req).expect("submit light")
+            })
+            .collect();
+        let heavy: Vec<GenResponse> =
+            heavy_handles.into_iter().filter_map(|h| h.wait()).collect();
+        let light: Vec<GenResponse> =
+            light_handles.into_iter().filter_map(|h| h.wait()).collect();
+        let wall_s = wall.elapsed_secs();
+        eng.drain();
+        let snap = eng.metrics_snapshot();
+        let stats = eng.shutdown();
+        assert_eq!(
+            heavy.len() + light.len(),
+            heavy_n + light_n,
+            "tenant_mix/{cfg}: all requests complete"
+        );
+        if cfg == "yf" {
+            // The comparison is vacuous unless the pool was actually
+            // under enough pressure to preempt someone.
+            assert!(
+                stats.preemptions > 0,
+                "tenant_mix: the pool must be under preemption pressure (got 0)"
+            );
+        }
+        if tenanted {
+            let lt = snap.hist(&labeled(names::TTFT, "tenant", 2));
+            assert_eq!(
+                lt.count, light_n as u64,
+                "tenant_mix/{cfg}: labeled TTFT histogram must see every light request"
+            );
+        }
+        for (t, rs) in [("heavy", &heavy), ("light", &light)] {
+            let ttfts: Vec<f64> = rs.iter().map(|r| r.ttft_s).collect();
+            let lats: Vec<f64> = rs.iter().map(|r| r.total_s).collect();
+            entry
+                .set(&format!("{cfg}_{t}_ttft_p50_s"), Json::Num(pctl(&ttfts, 0.50)))
+                .set(&format!("{cfg}_{t}_ttft_p99_s"), Json::Num(pctl(&ttfts, 0.99)))
+                .set(&format!("{cfg}_{t}_latency_p50_s"), Json::Num(pctl(&lats, 0.50)))
+                .set(&format!("{cfg}_{t}_latency_p99_s"), Json::Num(pctl(&lats, 0.99)));
+        }
+        entry
+            .set(&format!("{cfg}_preemptions"), Json::Num(stats.preemptions as f64))
+            .set(&format!("{cfg}_mean_occupancy"), Json::Num(stats.mean_batch_occupancy()))
+            .set(&format!("{cfg}_wall_s"), Json::Num(wall_s))
+            .set(
+                &format!("{cfg}_tokens_per_s"),
+                Json::Num(stats.tokens_generated as f64 / wall_s),
+            );
+        println!(
+            "# tenant_mix/{cfg}: preemptions={} light lat p99 {:.3}ms ttft p99 {:.3}ms",
+            stats.preemptions,
+            pctl(&light.iter().map(|r| r.total_s).collect::<Vec<_>>(), 0.99) * 1e3,
+            pctl(&light.iter().map(|r| r.ttft_s).collect::<Vec<_>>(), 0.99) * 1e3,
+        );
+    }
     entry
 }

@@ -15,13 +15,19 @@
 //! whenever a batch slot and its next chunk's pages are free. On pool
 //! exhaustion the scheduler frees memory in escalation order — evict
 //! unreferenced prefix-trie pages, then **preempt the youngest bulk**
-//! decode sequence (its pages free immediately; its decode state parks
-//! and later resumes by re-prefilling prompt + generated tokens, with
-//! prefix-shared pages skipping most of that compute) — so interactive
-//! traffic is never stalled behind bulk. A prompt whose page-aligned
-//! prefix was already committed by an earlier sequence adopts those
+//! decode sequence of the most-over-share tenant (fair share; with a
+//! single tenant this is plain youngest-first — its pages free
+//! immediately; its decode state parks and later resumes by
+//! re-prefilling prompt + generated tokens, with prefix-shared pages
+//! skipping most of that compute) — so interactive traffic is never
+//! stalled behind bulk. A prompt whose page-aligned prefix was already
+//! committed by an earlier sequence **of the same tenant** adopts those
 //! pages copy-on-write and skips their prefill entirely
-//! ([`Scheduler::prefix_hits`]).
+//! ([`Scheduler::prefix_hits`]); prefix tries are tenant-scoped, so
+//! identical prompts never share pages (or leak hit timing) across
+//! tenants. An optional [`BatchPolicy::tenant_quota_pages`] caps every
+//! tenant's live pages, and quota-bound pressure only ever parks the
+//! offending tenant's own sequences.
 //!
 //! Admission runs a **chunked prefill**: prompt chunks go through
 //! [`Transformer::forward_prefill_with`], so every projection sees one
@@ -43,7 +49,7 @@
 
 use super::failpoint::{self, FailPoints};
 use super::{Event, GenRequest, GenResponse, Priority};
-use crate::kv::{AsKvStore, KvGauges, KvStore, PageGeometry, PagePool, PagedKvCache};
+use crate::kv::{AsKvStore, KvGauges, KvStore, PageGeometry, PagePool, PagedKvCache, TenantId};
 use crate::model::transformer::{ForwardScratch, Transformer};
 use crate::obs::{names, Gauge, Histogram, MetricsRegistry, SpanKind, TraceSink};
 use crate::spec::{Controller, SeqSpec, SpecPolicy};
@@ -75,6 +81,12 @@ pub struct BatchPolicy {
     /// preemption never triggers; a smaller explicit pool admits on
     /// actual consumption and preempts under pressure.
     pub kv_pool_pages: usize,
+    /// Per-tenant KV page quota (`0`, the default, means unlimited).
+    /// With a quota set, each tenant's live pages — its sequences plus
+    /// its cached prefix pages — are capped, so one tenant cannot starve
+    /// the pool for the rest; admission, parking and preemption all
+    /// account against it.
+    pub tenant_quota_pages: usize,
     /// Self-speculative decoding knobs. When enabled, greedy sequences
     /// decode through draft/verify rounds (token-identical to plain
     /// greedy); non-greedy samplers keep the plain batched path.
@@ -89,6 +101,7 @@ impl Default for BatchPolicy {
             prefill_chunk: 128,
             kv_page_size: 16,
             kv_pool_pages: 0,
+            tenant_quota_pages: 0,
             spec: SpecPolicy::default(),
         }
     }
@@ -459,6 +472,7 @@ impl Scheduler {
             policy.max_batch.max(1) * model.cfg.max_seq.div_ceil(geom.page_size)
         };
         let pool = PagePool::new(geom, capacity, Arc::new(KvGauges::default()));
+        pool.set_tenant_quota(policy.tenant_quota_pages);
         Scheduler {
             model,
             policy,
@@ -498,6 +512,7 @@ impl Scheduler {
     pub fn with_kv_gauges(mut self, gauges: Arc<KvGauges>) -> Scheduler {
         assert_eq!(self.pool.used(), 0, "with_kv_gauges after pages were allocated");
         self.pool = PagePool::new(self.pool.geometry(), self.pool.capacity(), gauges);
+        self.pool.set_tenant_quota(self.policy.tenant_quota_pages);
         self
     }
 
@@ -603,7 +618,8 @@ impl Scheduler {
             (p.consumed, (p.consumed + chunk).min(stream_len), stream_len)
         };
         let need = self.prefilling[idx].cache.pages_needed(end);
-        if need > self.pool.available() && !self.try_free(need) {
+        let tenant = self.prefilling[idx].cache.tenant();
+        if need > self.pool.tenant_available(tenant) && !self.try_free_for(tenant, need) {
             return self.park_or_fail_prefill(idx, out);
         }
         if end < stream_len {
@@ -681,12 +697,17 @@ impl Scheduler {
                 .record(o.trace.now_us().saturating_sub(t0) as f64 / 1e6);
         }
         // Commit the full prompt pages so identical prompt prefixes can
-        // adopt them (insert dedups: already-committed pages win).
+        // adopt them (insert dedups: already-committed pages win). The
+        // trie is tenant-scoped, so only this tenant's later prompts
+        // ever see them.
         let ps = self.pool.geometry().page_size;
         let full = active.sub.req.prompt.len() / ps;
         if full > 0 {
-            self.pool
-                .commit_prefix(&active.sub.req.prompt[..full * ps], &active.cache.table()[..full]);
+            self.pool.commit_prefix_for(
+                active.cache.tenant(),
+                &active.sub.req.prompt[..full * ps],
+                &active.cache.table()[..full],
+            );
         }
         self.active.push(active);
         true
@@ -709,7 +730,8 @@ impl Scheduler {
             !sub.req.prompt.is_empty(),
             "empty prompt: nothing to condition on"
         );
-        let mut cache = PagedKvCache::new(&self.pool);
+        let tenant = sub.req.effective_tenant();
+        let mut cache = PagedKvCache::for_tenant(&self.pool, tenant);
         let ps = self.pool.geometry().page_size;
         let stream_len = tokens.as_deref().unwrap_or(&sub.req.prompt).len();
         // Never adopt the final position: the last chunk must recompute
@@ -717,7 +739,7 @@ impl Scheduler {
         let max_pages = (stream_len - 1) / ps;
         let shared = self
             .pool
-            .shared_prefix(tokens.as_deref().unwrap_or(&sub.req.prompt), max_pages);
+            .shared_prefix_for(tenant, tokens.as_deref().unwrap_or(&sub.req.prompt), max_pages);
         let matched = shared.len();
         if matched > 0 {
             self.prefix_hits += matched as u64;
@@ -740,33 +762,66 @@ impl Scheduler {
         self.advance_prefill_at(self.prefilling.len() - 1, out);
     }
 
-    /// Try to make `need` pages allocatable: evict trie entries no live
-    /// sequence references, then preempt bulk decode sequences youngest
-    /// first (their pages free immediately; they park for resume).
-    /// Interactive sequences are never preempted. Returns false when the
-    /// target is unreachable.
-    fn try_free(&mut self, need: usize) -> bool {
+    /// Try to make `need` pages allocatable *for `tenant`*: evict trie
+    /// entries no live sequence references (any tenant's — freeing a
+    /// page always relieves the pool, and freeing this tenant's own
+    /// cached pages also relieves its quota), then preempt bulk decode
+    /// sequences — the offending tenant's own when the shortfall is
+    /// quota-bound (other tenants' pages cannot relieve a quota), the
+    /// most-over-share tenant's otherwise. Interactive sequences are
+    /// never preempted here. Returns false when the target is
+    /// unreachable.
+    fn try_free_for(&mut self, tenant: TenantId, need: usize) -> bool {
         loop {
-            if self.pool.available() >= need {
+            if self.pool.tenant_available(tenant) >= need {
                 return true;
             }
             if self.pool.evict_unreferenced() > 0 {
                 continue;
             }
-            if !self.preempt_youngest_bulk() {
+            let quota = self.pool.tenant_quota();
+            let quota_bound =
+                quota > 0 && quota.saturating_sub(self.pool.used_by(tenant)) < need;
+            let victim = if quota_bound { Some(tenant) } else { None };
+            if !self.preempt_youngest_bulk_of(victim) {
                 return false;
             }
         }
     }
 
-    /// Park the youngest bulk decode sequence, freeing its pages.
-    /// Returns false when no bulk sequence is active.
-    fn preempt_youngest_bulk(&mut self) -> bool {
+    /// Park the bulk decode sequence chosen by fair share, freeing its
+    /// pages. With `tenant` set, only that tenant's bulk sequences are
+    /// candidates (quota-bound pressure: only the offender's own pages
+    /// relieve it). Otherwise the victim tenant is the one most over its
+    /// share — the share (quota when set, an equal capacity split
+    /// otherwise) is uniform across tenants, so the most-over-share
+    /// tenant is simply the heaviest page user among those owning bulk
+    /// work — and within it the *youngest* bulk sequence parks first. A
+    /// single tenant degenerates exactly to plain youngest-first.
+    /// Returns false when no eligible bulk sequence is active.
+    fn preempt_youngest_bulk_of(&mut self, tenant: Option<TenantId>) -> bool {
+        let victim_tenant = match tenant {
+            Some(t) => t,
+            None => {
+                let Some(t) = self
+                    .active
+                    .iter()
+                    .filter(|a| a.sub.priority() == Priority::Bulk)
+                    .map(|a| a.cache.tenant())
+                    .max_by_key(|&t| (self.pool.used_by(t), std::cmp::Reverse(t)))
+                else {
+                    return false;
+                };
+                t
+            }
+        };
         let Some(idx) = self
             .active
             .iter()
             .enumerate()
-            .filter(|(_, a)| a.sub.priority() == Priority::Bulk)
+            .filter(|(_, a)| {
+                a.sub.priority() == Priority::Bulk && a.cache.tenant() == victim_tenant
+            })
             .max_by_key(|(_, a)| a.seq_no)
             .map(|(i, _)| i)
         else {
@@ -774,6 +829,14 @@ impl Scheduler {
         };
         self.park(idx);
         true
+    }
+
+    /// Fair-share preemption round (also the synthetic-pressure
+    /// failpoint's entry): park the youngest bulk sequence of the
+    /// most-over-share tenant. Returns false when no bulk sequence is
+    /// active.
+    fn preempt_youngest_bulk(&mut self) -> bool {
+        self.preempt_youngest_bulk_of(None)
     }
 
     /// Move `active[idx]` to the preempted queue; dropping its cache
@@ -798,11 +861,26 @@ impl Scheduler {
     /// case not even the whole pool can hold it and it fails instead of
     /// spinning forever. Always removes `prefilling[idx]`.
     fn park_or_fail_prefill(&mut self, idx: usize, out: &mut Vec<Outcome>) -> bool {
+        // A stream whose own footprint exceeds its tenant's quota can
+        // never fit, no matter how much of the fleet drains — all of a
+        // sequence's pages bill its own tenant (cross-tenant sharing is
+        // impossible), so it fails terminally instead of parking forever.
+        let quota = self.pool.tenant_quota();
+        let over_quota = quota > 0 && {
+            let p = &self.prefilling[idx];
+            let ps = self.pool.geometry().page_size;
+            let stream_len = p.tokens.as_deref().unwrap_or(&p.sub.req.prompt).len();
+            stream_len.div_ceil(ps) > quota
+        };
         let Prefilling { sub, resume, .. } = self.prefilling.swap_remove(idx);
         let (generated, ttft_s, steps) = match resume {
             Some(rs) => (rs.generated, rs.ttft_s, rs.steps),
             None => (Vec::new(), 0.0, 0),
         };
+        if over_quota {
+            out.push(Self::failed_out(sub, "kv tenant quota exceeded"));
+            return true;
+        }
         if self.active.is_empty() && self.prefilling.is_empty() {
             out.push(Self::failed_out(sub, "kv page pool exhausted"));
             return true;
@@ -862,28 +940,59 @@ impl Scheduler {
     /// settles `Failed` on its resume prefill.)
     fn ensure_decode_pages(&mut self) {
         loop {
-            let need: usize = self
-                .active
+            // Per-tenant page demand for the next decode position; the
+            // aggregate bounds the pool, each tenant's sum its quota.
+            let mut need_by: Vec<(TenantId, usize)> = Vec::new();
+            for a in &self.active {
+                let t = a.cache.tenant();
+                let n = a.cache.pages_needed(a.cache.len() + 1);
+                match need_by.iter_mut().find(|(id, _)| *id == t) {
+                    Some((_, tot)) => *tot += n,
+                    None => need_by.push((t, n)),
+                }
+            }
+            let total: usize = need_by.iter().map(|&(_, n)| n).sum();
+            let pool_bound = total > self.pool.available();
+            let quota_victim = need_by
                 .iter()
-                .map(|a| a.cache.pages_needed(a.cache.len() + 1))
-                .sum();
-            if need <= self.pool.available() {
+                .find(|&&(t, n)| n > self.pool.tenant_available(t))
+                .map(|&(t, _)| t);
+            if !pool_bound && quota_victim.is_none() {
                 break;
             }
             if self.pool.evict_unreferenced() > 0 {
                 continue;
             }
-            if self.preempt_youngest_bulk() {
-                continue;
+            if pool_bound {
+                if self.preempt_youngest_bulk() {
+                    continue;
+                }
+                let idx = self
+                    .active
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, a)| a.seq_no)
+                    .map(|(i, _)| i)
+                    .expect("need > 0 implies a non-empty batch");
+                self.park(idx);
+            } else {
+                // Quota-bound only: just this tenant must shrink — its
+                // youngest bulk sequence first, then (last resort) its
+                // youngest active outright.
+                let t = quota_victim.expect("not pool-bound, so a quota victim exists");
+                if self.preempt_youngest_bulk_of(Some(t)) {
+                    continue;
+                }
+                let idx = self
+                    .active
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| a.cache.tenant() == t)
+                    .max_by_key(|(_, a)| a.seq_no)
+                    .map(|(i, _)| i)
+                    .expect("the quota victim owns active sequences");
+                self.park(idx);
             }
-            let idx = self
-                .active
-                .iter()
-                .enumerate()
-                .max_by_key(|(_, a)| a.seq_no)
-                .map(|(i, _)| i)
-                .expect("need > 0 implies a non-empty batch");
-            self.park(idx);
         }
         for a in &mut self.active {
             let len = a.cache.len();
@@ -1191,7 +1300,12 @@ impl Scheduler {
             if k == 0 {
                 continue; // retired by the next retire() pass
             }
-            while k > 1 && self.active[idx].cache.pages_needed(len + k) > self.pool.available() {
+            // Depth is capped by what this sequence's tenant may still
+            // allocate (quota and pool), so the reserve cannot fail.
+            while k > 1
+                && self.active[idx].cache.pages_needed(len + k)
+                    > self.pool.tenant_available(self.active[idx].cache.tenant())
+            {
                 k -= 1;
             }
             let a = &mut self.active[idx];
@@ -1302,6 +1416,7 @@ impl Scheduler {
                     ttft_s: a.ttft_s,
                     total_s: a.sub.submitted.elapsed_secs(),
                     steps: a.steps,
+                    tenant: a.sub.req.tenant,
                 };
                 a.sub.emit_with(|| Event::Done(resp.clone()));
                 out.push(Outcome::Done(resp));
@@ -1892,6 +2007,107 @@ mod tests {
         }
         assert_eq!(failed, 1, "oversized request settles Failed exactly once");
         assert_eq!(s.kv_pool().used(), 0, "no pages leak from the failed prefill");
+    }
+
+    /// Tentpole: prefix tries are tenant-scoped — an identical prompt
+    /// from a different tenant adopts nothing (no cross-tenant page
+    /// sharing, no `prefix_hits` timing leak), while a same-tenant
+    /// repeat still hits.
+    #[test]
+    fn cross_tenant_prompts_never_share_prefix_pages() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 32);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy { max_batch: 1, kv_page_size: 4, ..BatchPolicy::default() },
+            1,
+        );
+        let prompt: Vec<u32> = (0..10u32).map(|i| i % 60).collect();
+        s.admit(GenRequest::greedy(0, prompt.clone(), 4).with_tenant(1));
+        let first = s.run_to_completion().pop().unwrap().tokens;
+        s.admit(GenRequest::greedy(1, prompt.clone(), 4).with_tenant(2));
+        let second = s.run_to_completion().pop().unwrap().tokens;
+        assert_eq!(s.prefix_hits, 0, "tenant 2 must not adopt tenant 1's pages");
+        assert_eq!(first, second, "isolation must not change tokens");
+        s.admit(GenRequest::greedy(2, prompt, 4).with_tenant(1));
+        s.run_to_completion();
+        assert_eq!(s.prefix_hits, 2, "a same-tenant repeat still shares two pages");
+    }
+
+    /// Tentpole: a per-tenant quota binds before pool capacity — the
+    /// offending tenant's oversized request fails terminally while
+    /// another tenant's request sails through, and no pages leak.
+    #[test]
+    fn tenant_quota_fails_only_offending_tenant() {
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 33);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy {
+                max_batch: 2,
+                kv_page_size: 4,
+                kv_pool_pages: 8,
+                tenant_quota_pages: 2,
+                ..BatchPolicy::default()
+            },
+            1,
+        );
+        // 12 positions = 3 pages > the 2-page tenant quota (the pool
+        // itself has room for 8).
+        let long: Vec<u32> = (0..12u32).map(|i| i % 60).collect();
+        s.admit(GenRequest::greedy(0, long, 4).with_tenant(1));
+        s.admit(GenRequest::greedy(1, vec![5, 6, 7], 4).with_tenant(2));
+        let mut failed = 0;
+        let mut done = Vec::new();
+        while s.pending() > 0 {
+            for o in s.step() {
+                match o {
+                    Outcome::Failed { id, error } => {
+                        assert_eq!(id, 0);
+                        assert!(error.contains("quota"), "{error}");
+                        failed += 1;
+                    }
+                    Outcome::Done(r) => done.push(r),
+                    other => panic!("unexpected outcome {other:?}"),
+                }
+            }
+        }
+        assert_eq!(failed, 1, "over-quota request settles Failed exactly once");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].tenant, Some(2));
+        assert_eq!(s.kv_pool().used_by(1), 0, "the failed prefill returned its pages");
+        assert_eq!(s.kv_pool().used(), 0, "nothing leaks after the drain");
+    }
+
+    /// Tentpole: forced preemption parks the youngest bulk sequence of
+    /// the *heaviest* tenant (fair share), not the globally youngest —
+    /// the light tenant's newer sequence survives.
+    #[test]
+    fn preemption_is_fair_share_across_tenants() {
+        let fp = FailPoints::new();
+        let ck = synthetic_checkpoint(&ModelConfig::test_tiny(), 34);
+        let model = Transformer::from_checkpoint(&ck).unwrap();
+        let mut s = Scheduler::new(
+            model,
+            BatchPolicy { max_batch: 2, kv_page_size: 4, ..BatchPolicy::default() },
+            1,
+        )
+        .with_failpoints(Arc::clone(&fp), 0);
+        // Tenant 1 holds three pages (9-token prompt), tenant 2 one —
+        // and tenant 2's sequence is the younger of the two.
+        let long: Vec<u32> = (0..9u32).map(|i| i % 60).collect();
+        s.admit(GenRequest::greedy(0, long, 20).with_tenant(1).with_priority(Priority::Bulk));
+        s.admit(GenRequest::greedy(1, vec![1, 2], 20).with_tenant(2).with_priority(Priority::Bulk));
+        s.step(); // both admitted and decoding
+        assert_eq!(s.active_ids().len(), 2);
+        fp.arm_tagged(failpoint::POOL, 0, FailSpec::deny(1));
+        s.step(); // synthetic pressure: one fair-share preemption round
+        assert_eq!(
+            s.preempted_ids(),
+            vec![0],
+            "the heavy tenant's sequence parks, not the globally youngest"
+        );
     }
 
     /// Cancelling a parked sequence settles it with the tokens it had

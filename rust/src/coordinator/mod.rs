@@ -55,6 +55,8 @@ mod queue;
 pub use engine::{DispatchPolicy, Engine, EngineBuilder, EngineError, RequestHandle};
 pub use failpoint::{FailPoints, FailSpec};
 
+pub use crate::kv::{TenantId, DEFAULT_TENANT};
+
 use crate::model::sampler::Sampler;
 use std::time::Duration;
 
@@ -88,6 +90,11 @@ pub struct GenRequest {
     /// the sequence is evicted and settles with [`Event::TimedOut`]
     /// carrying the tokens generated so far.
     pub total_deadline: Option<Duration>,
+    /// Tenant namespace for KV pages, quotas, prefix sharing and
+    /// labeled metrics. `None` (the default) joins the shared
+    /// [`DEFAULT_TENANT`], which preserves single-tenant behavior
+    /// bit for bit.
+    pub tenant: Option<TenantId>,
 }
 
 impl GenRequest {
@@ -100,12 +107,24 @@ impl GenRequest {
             priority: Priority::Interactive,
             queue_deadline: None,
             total_deadline: None,
+            tenant: None,
         }
     }
 
     pub fn with_priority(mut self, priority: Priority) -> GenRequest {
         self.priority = priority;
         self
+    }
+
+    pub fn with_tenant(mut self, tenant: TenantId) -> GenRequest {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    /// The tenant this request bills against ([`DEFAULT_TENANT`] when
+    /// none was set).
+    pub fn effective_tenant(&self) -> TenantId {
+        self.tenant.unwrap_or(DEFAULT_TENANT)
     }
 
     pub fn with_queue_deadline(mut self, d: Duration) -> GenRequest {
@@ -133,6 +152,9 @@ pub struct GenResponse {
     /// Decode steps executed on behalf of this request (prefill counts as
     /// one).
     pub steps: usize,
+    /// Tenant the request billed against (`None` when it never set
+    /// one) — the engine labels per-tenant latency metrics with this.
+    pub tenant: Option<TenantId>,
 }
 
 /// Per-request lifecycle event streamed over a [`RequestHandle`].

@@ -184,16 +184,20 @@ impl AdmissionQueue {
     /// entries) refuses with [`TryPushError::Full`]; a bulk push over
     /// the bulk ceiling (but under total capacity) sheds with
     /// [`TryPushError::Shed`]. A `queue-push` failpoint deny reads as
-    /// `Full` — a synthetic queue-full burst.
+    /// `Full` — a synthetic queue-full burst — but never masks
+    /// `Closed`: a closed queue reports the real shutdown signal.
     pub fn try_push(&self, sub: Submission) -> Result<(), TryPushError> {
         // The failpoint fires before the lock is taken so an injected
-        // panic can never poison the queue mutex.
-        if self.failpoints.hit(failpoint::QUEUE_PUSH, self.fp_tag) {
-            return Err(TryPushError::Full(sub));
-        }
+        // panic can never poison the queue mutex. Its verdict is only
+        // honored *after* the closed check below — a deny on a closed
+        // queue must still read as `Closed`, not `Full`.
+        let denied = self.failpoints.hit(failpoint::QUEUE_PUSH, self.fp_tag);
         let mut st = self.state.lock().expect("queue lock");
         if st.closed {
             return Err(TryPushError::Closed(sub));
+        }
+        if denied {
+            return Err(TryPushError::Full(sub));
         }
         st.purge();
         if st.live_len() >= self.capacity {
@@ -226,7 +230,12 @@ impl AdmissionQueue {
                 .or_else(|| st.interactive.pop_front())
                 .or_else(|| st.bulk.pop_front())
             {
-                self.not_full.notify_one();
+                // Parked producers wait on *heterogeneous* predicates
+                // (bulk ceiling vs full capacity): notify_one could wake
+                // a bulk producer still at its ceiling — which re-parks —
+                // while an admissible interactive producer sleeps
+                // forever. Wake them all and let the predicates decide.
+                self.not_full.notify_all();
                 return Some(s);
             }
             if st.closed {
@@ -246,7 +255,9 @@ impl AdmissionQueue {
             .or_else(|| st.interactive.pop_front())
             .or_else(|| st.bulk.pop_front());
         if s.is_some() {
-            self.not_full.notify_one();
+            // See pop_blocking: heterogeneous wait predicates require
+            // waking every parked producer.
+            self.not_full.notify_all();
         }
         s
     }
@@ -260,7 +271,9 @@ impl AdmissionQueue {
         st.purge();
         let s = st.reaped.pop_front();
         if s.is_some() {
-            self.not_full.notify_one();
+            // See pop_blocking: heterogeneous wait predicates require
+            // waking every parked producer.
+            self.not_full.notify_all();
         }
         s
     }
@@ -443,6 +456,61 @@ mod tests {
         q.try_pop();
         assert_eq!(q.depth(), 0);
         assert_eq!(q.peak_depth(), 2, "peak never resets");
+    }
+
+    /// Regression (lost wakeup): with a bulk producer parked at its
+    /// ceiling and an interactive producer parked at full capacity, a
+    /// freed slot must wake *both* — under notify_one the single wakeup
+    /// could land on the bulk producer (still over its ceiling, so it
+    /// re-parks and swallows the signal) while the admissible
+    /// interactive producer sleeps forever.
+    #[test]
+    fn pop_wakes_all_parked_producer_classes() {
+        use std::sync::Arc;
+        // capacity 2, reserve 1 => bulk ceiling 1.
+        let q = Arc::new(AdmissionQueue::with_policy(2, 1, FailPoints::new(), 0));
+        assert!(q.try_push(bulk(0)).is_ok()); // bulk at its ceiling
+        assert!(q.try_push(sub(1)).is_ok()); // queue at full capacity
+        let qb = Arc::clone(&q);
+        let bulk_prod = std::thread::spawn(move || qb.push(bulk(2)));
+        let qi = Arc::clone(&q);
+        let inter_prod = std::thread::spawn(move || qi.push(sub(3)));
+        // Let both producers park on the full queue.
+        std::thread::sleep(Duration::from_millis(30));
+        // Pop the interactive entry: occupancy drops to 1 == bulk
+        // ceiling, so only the interactive producer is admissible. The
+        // wakeup must reach it even if a bulk producer is woken first
+        // and re-parks.
+        assert_eq!(q.try_pop().unwrap().id(), 1);
+        inter_prod
+            .join()
+            .unwrap()
+            .unwrap_or_else(|_| panic!("interactive producer must be admitted"));
+        // Drain until the queue is empty so the parked bulk producer
+        // finally fits under its ceiling of 1 (interactive lane drains
+        // first, then bulk).
+        assert_eq!(q.try_pop().unwrap().id(), 3);
+        assert_eq!(q.try_pop().unwrap().id(), 0);
+        bulk_prod
+            .join()
+            .unwrap()
+            .unwrap_or_else(|_| panic!("bulk producer must be admitted"));
+        assert_eq!(q.depth(), 1);
+    }
+
+    /// Regression (failpoint ordering): an armed `queue-push` deny on a
+    /// *closed* queue must report `Closed`, not `Full` — chaos schedules
+    /// that close mid-burst must not mask the real shutdown signal.
+    #[test]
+    fn closed_queue_reports_closed_even_under_failpoint_deny() {
+        let fp = FailPoints::new();
+        let q = AdmissionQueue::with_policy(4, 0, std::sync::Arc::clone(&fp), 5);
+        fp.arm_tagged(crate::coordinator::failpoint::QUEUE_PUSH, 5, FailSpec::deny(10));
+        q.close();
+        assert!(
+            matches!(q.try_push(sub(0)), Err(TryPushError::Closed(_))),
+            "closed wins over an injected deny"
+        );
     }
 
     #[test]

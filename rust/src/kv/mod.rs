@@ -38,6 +38,15 @@ pub use pool::{PageBuf, PageGeometry, PagePool, PoolExhausted};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// Tenant namespace key. Every page allocation, quota check and prefix
+/// trie is scoped by tenant: requests that never set one share
+/// [`DEFAULT_TENANT`], which reproduces the single-tenant behavior
+/// bit for bit.
+pub type TenantId = u32;
+
+/// The tenant every unlabeled request belongs to.
+pub const DEFAULT_TENANT: TenantId = 0;
+
 /// Accessor contract between the attention paths and a KV backing
 /// store. Rows are contiguous `[kv_dim]` float slices; `k_row(l, t)`
 /// for `t <= len()` must return exactly the bytes written by the

@@ -4,7 +4,7 @@
 use std::rc::Rc;
 
 use super::pool::{PageBuf, PagePool, PoolExhausted};
-use super::{AsKvStore, KvStore};
+use super::{AsKvStore, KvStore, TenantId, DEFAULT_TENANT};
 
 /// KV storage for one sequence, backed by pool pages instead of a
 /// worst-case contiguous buffer. Implements [`KvStore`], so every
@@ -23,15 +23,28 @@ pub struct PagedKvCache {
     pages: Vec<Rc<PageBuf>>,
     len: usize,
     pool: PagePool,
+    /// Every page this sequence allocates debits this tenant's budget.
+    tenant: TenantId,
 }
 
 impl PagedKvCache {
     pub fn new(pool: &PagePool) -> PagedKvCache {
+        PagedKvCache::for_tenant(pool, DEFAULT_TENANT)
+    }
+
+    /// A cache whose allocations are debited to `tenant` (quota-aware).
+    pub fn for_tenant(pool: &PagePool, tenant: TenantId) -> PagedKvCache {
         PagedKvCache {
             pages: Vec::new(),
             len: 0,
             pool: pool.clone(),
+            tenant,
         }
+    }
+
+    /// Tenant this sequence's allocations are debited to.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
     }
 
     pub fn page_size(&self) -> usize {
@@ -64,6 +77,7 @@ impl PagedKvCache {
             pages: self.pages.clone(),
             len: self.len,
             pool: self.pool.clone(),
+            tenant: self.tenant,
         }
     }
 
@@ -105,14 +119,14 @@ impl PagedKvCache {
             }
         }
         while self.pages.len() < need {
-            self.pages.push(self.pool.alloc()?);
+            self.pages.push(self.pool.alloc_for(self.tenant)?);
         }
         Ok(())
     }
 
     /// Replace a shared page with a private copy of its contents.
     fn cow_page(&mut self, page_idx: usize) -> Result<(), PoolExhausted> {
-        let mut fresh = self.pool.alloc()?;
+        let mut fresh = self.pool.alloc_for(self.tenant)?;
         Rc::get_mut(&mut fresh)
             .expect("freshly allocated page is unshared")
             .floats_mut()

@@ -1,8 +1,10 @@
 //! Fixed-size KV page pool: free-list allocator, drop-recycling pages,
-//! and the prompt-prefix trie that shares committed pages across
-//! sequences.
+//! per-tenant accounting with optional quotas, and tenant-scoped
+//! prompt-prefix tries that share committed pages across sequences —
+//! never across tenants.
 
 use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::fmt;
 use std::mem;
 use std::rc::{Rc, Weak};
@@ -10,7 +12,7 @@ use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
 
 use super::trie::PrefixTrie;
-use super::KvGauges;
+use super::{KvGauges, TenantId, DEFAULT_TENANT};
 use crate::model::ModelConfig;
 
 /// Shape of every page in a pool: one page holds K and V rows for
@@ -66,6 +68,8 @@ impl std::error::Error for PoolExhausted {}
 pub struct PageBuf {
     data: Vec<f32>,
     pool: Weak<PoolInner>,
+    /// Tenant whose budget this page debits; Drop credits it back.
+    tenant: TenantId,
 }
 
 impl PageBuf {
@@ -93,6 +97,9 @@ impl Drop for PageBuf {
         if let Some(pool) = self.pool.upgrade() {
             pool.free.borrow_mut().push(mem::take(&mut self.data));
             pool.used.set(pool.used.get() - 1);
+            if let Some(n) = pool.used_by.borrow_mut().get_mut(&self.tenant) {
+                *n -= 1;
+            }
             pool.gauges.pages_used.fetch_sub(1, Relaxed);
         }
     }
@@ -101,23 +108,38 @@ impl Drop for PageBuf {
 pub(crate) struct PoolInner {
     geom: PageGeometry,
     capacity: usize,
+    /// Per-tenant page ceiling; 0 = unlimited (no quota enforcement).
+    quota: Cell<usize>,
     /// Recycled page buffers, ready for reuse without reallocation.
     free: RefCell<Vec<Vec<f32>>>,
     /// Live pages (everything allocated and not yet recycled).
     used: Cell<usize>,
+    /// Live pages broken down by the tenant that allocated them
+    /// (trie-cached prefix pages keep debiting their owner — a tenant's
+    /// cached prefixes spend that tenant's quota, nobody else's).
+    used_by: RefCell<HashMap<TenantId, usize>>,
     gauges: Arc<KvGauges>,
-    trie: RefCell<PrefixTrie>,
+    /// One prefix trie per tenant: lookups can only ever see pages the
+    /// same tenant committed, so identical prompts from different
+    /// tenants never share pages or leak timing through `prefix_hits`.
+    tries: RefCell<HashMap<TenantId, PrefixTrie>>,
+}
+
+impl PoolInner {
+    fn cached_pages(&self) -> usize {
+        self.tries.borrow().values().map(|t| t.pages()).sum()
+    }
 }
 
 impl Drop for PoolInner {
     fn drop(&mut self) {
-        // Drop-audit: at pool teardown the only legitimate page holder
-        // left is the prefix trie (sequences must be settled first).
+        // Drop-audit: at pool teardown the only legitimate page holders
+        // left are the prefix tries (sequences must be settled first).
         // Anything else still counted in `used` is a leaked block
         // table; the chaos suite asserts this stays zero through
         // panics and preemption storms.
         let held = self.used.get() as u64;
-        let cached = self.trie.borrow().pages() as u64;
+        let cached = self.cached_pages() as u64;
         self.gauges.leaked.fetch_add(held.saturating_sub(cached), Relaxed);
         self.gauges.pages_used.fetch_sub(held, Relaxed);
         self.gauges.pages_capacity.fetch_sub(self.capacity as u64, Relaxed);
@@ -140,12 +162,25 @@ impl PagePool {
             inner: Rc::new(PoolInner {
                 geom,
                 capacity,
+                quota: Cell::new(0),
                 free: RefCell::new(Vec::new()),
                 used: Cell::new(0),
+                used_by: RefCell::new(HashMap::new()),
                 gauges,
-                trie: RefCell::new(PrefixTrie::new(geom.page_size)),
+                tries: RefCell::new(HashMap::new()),
             }),
         }
+    }
+
+    /// Set the per-tenant page ceiling (0 disables quota enforcement).
+    /// A quota larger than the pool is legal — capacity still binds.
+    pub fn set_tenant_quota(&self, pages: usize) {
+        self.inner.quota.set(pages);
+    }
+
+    /// Per-tenant page ceiling; 0 = unlimited.
+    pub fn tenant_quota(&self) -> usize {
+        self.inner.quota.get()
     }
 
     pub fn geometry(&self) -> PageGeometry {
@@ -161,20 +196,64 @@ impl PagePool {
         self.inner.used.get()
     }
 
-    /// Pages that `alloc` can still hand out without freeing anything.
+    /// Pages that `alloc` can still hand out without freeing anything
+    /// (capacity headroom; quota may bind a specific tenant sooner).
     pub fn available(&self) -> usize {
         self.inner.capacity - self.inner.used.get()
+    }
+
+    /// Live pages debited to `tenant` (sequence-held plus that tenant's
+    /// trie-cached prefixes).
+    pub fn used_by(&self, tenant: TenantId) -> usize {
+        self.inner.used_by.borrow().get(&tenant).copied().unwrap_or(0)
+    }
+
+    /// Pages `tenant` can still allocate before hitting its quota *or*
+    /// pool capacity, whichever binds first.
+    pub fn tenant_available(&self, tenant: TenantId) -> usize {
+        let cap = self.available();
+        let quota = self.inner.quota.get();
+        if quota == 0 {
+            cap
+        } else {
+            cap.min(quota.saturating_sub(self.used_by(tenant)))
+        }
+    }
+
+    /// Tenants currently holding at least one live page, with counts
+    /// (fair-share preemption scores tenants by this).
+    pub fn tenant_usage(&self) -> Vec<(TenantId, usize)> {
+        let mut v: Vec<(TenantId, usize)> = self
+            .inner
+            .used_by
+            .borrow()
+            .iter()
+            .filter(|(_, &n)| n > 0)
+            .map(|(&t, &n)| (t, n))
+            .collect();
+        v.sort_unstable();
+        v
     }
 
     pub fn gauges(&self) -> &Arc<KvGauges> {
         &self.inner.gauges
     }
 
-    /// Allocate one zeroed page, recycling a retired buffer when one is
-    /// on the free list.
+    /// Allocate one zeroed page for the default tenant.
     pub fn alloc(&self) -> Result<Rc<PageBuf>, PoolExhausted> {
+        self.alloc_for(DEFAULT_TENANT)
+    }
+
+    /// Allocate one zeroed page debited to `tenant`, recycling a
+    /// retired buffer when one is on the free list. Fails when the pool
+    /// is out of pages *or* the tenant is at its quota.
+    pub fn alloc_for(&self, tenant: TenantId) -> Result<Rc<PageBuf>, PoolExhausted> {
         let inner = &self.inner;
         if inner.used.get() >= inner.capacity {
+            return Err(PoolExhausted);
+        }
+        let quota = inner.quota.get();
+        if quota > 0 && self.used_by(tenant) >= quota {
             return Err(PoolExhausted);
         }
         let data = match inner.free.borrow_mut().pop() {
@@ -187,38 +266,74 @@ impl PagePool {
             None => vec![0.0; inner.geom.floats_per_page()],
         };
         inner.used.set(inner.used.get() + 1);
+        *inner.used_by.borrow_mut().entry(tenant).or_insert(0) += 1;
         let used_now = inner.gauges.pages_used.fetch_add(1, Relaxed) + 1;
         inner.gauges.pages_peak.fetch_max(used_now, Relaxed);
         Ok(Rc::new(PageBuf {
             data,
             pool: Rc::downgrade(inner),
+            tenant,
         }))
     }
 
-    /// Longest page-aligned prefix of `tokens` already committed to the
-    /// trie, capped at `max_pages`. Returned pages are refcount bumps
-    /// of the physical pages — adopting them skips their prefill.
+    /// Longest page-aligned prefix of `tokens` already committed by the
+    /// default tenant (see [`PagePool::shared_prefix_for`]).
     pub fn shared_prefix(&self, tokens: &[u32], max_pages: usize) -> Vec<Rc<PageBuf>> {
-        self.inner.trie.borrow().lookup(tokens, max_pages)
+        self.shared_prefix_for(DEFAULT_TENANT, tokens, max_pages)
     }
 
-    /// Commit the full prompt pages of a finished prefill so later
-    /// prompts with the same page-aligned prefix can adopt them.
-    /// `tokens` must be page-aligned and `pages` must cover it.
+    /// Longest page-aligned prefix of `tokens` already committed to
+    /// `tenant`'s trie, capped at `max_pages`. Returned pages are
+    /// refcount bumps of the physical pages — adopting them skips their
+    /// prefill. Only `tenant`'s own trie is consulted: another tenant's
+    /// identical prompt can never be adopted (or even probed for).
+    pub fn shared_prefix_for(
+        &self,
+        tenant: TenantId,
+        tokens: &[u32],
+        max_pages: usize,
+    ) -> Vec<Rc<PageBuf>> {
+        self.inner
+            .tries
+            .borrow()
+            .get(&tenant)
+            .map(|t| t.lookup(tokens, max_pages))
+            .unwrap_or_default()
+    }
+
+    /// Commit a finished prefill's prompt pages for the default tenant.
     pub fn commit_prefix(&self, tokens: &[u32], pages: &[Rc<PageBuf>]) {
-        self.inner.trie.borrow_mut().insert(tokens, pages);
+        self.commit_prefix_for(DEFAULT_TENANT, tokens, pages);
     }
 
-    /// Evict trie entries no live sequence references, returning the
-    /// number of pages released. The scheduler calls this before
-    /// escalating to preemption.
+    /// Commit the full prompt pages of a finished prefill into
+    /// `tenant`'s trie so that tenant's later prompts with the same
+    /// page-aligned prefix can adopt them. `tokens` must be
+    /// page-aligned and `pages` must cover it.
+    pub fn commit_prefix_for(&self, tenant: TenantId, tokens: &[u32], pages: &[Rc<PageBuf>]) {
+        self.inner
+            .tries
+            .borrow_mut()
+            .entry(tenant)
+            .or_insert_with(|| PrefixTrie::new(self.inner.geom.page_size))
+            .insert(tokens, pages);
+    }
+
+    /// Evict trie entries no live sequence references — across every
+    /// tenant's trie — returning the number of pages released. The
+    /// scheduler calls this before escalating to preemption.
     pub fn evict_unreferenced(&self) -> usize {
-        self.inner.trie.borrow_mut().evict_unreferenced()
+        self.inner
+            .tries
+            .borrow_mut()
+            .values_mut()
+            .map(|t| t.evict_unreferenced())
+            .sum()
     }
 
-    /// Pages currently held only by the prefix trie (diagnostics).
+    /// Pages currently held only by the prefix tries (diagnostics).
     pub fn cached_prefix_pages(&self) -> usize {
-        self.inner.trie.borrow().pages()
+        self.inner.cached_pages()
     }
 }
 
@@ -295,6 +410,55 @@ mod tests {
         // The straggler frees without touching the dead pool.
         drop(page);
         assert_eq!(gauges.pages_used.load(Relaxed), 0);
+    }
+
+    /// Tenant quotas bind per tenant, before pool capacity; freeing a
+    /// tenant's page restores that tenant's (and only that tenant's)
+    /// headroom, and accounting stays exact through recycling.
+    #[test]
+    fn tenant_quota_binds_before_capacity() {
+        let gauges = Arc::new(KvGauges::default());
+        let pool = PagePool::new(geom(), 4, Arc::clone(&gauges));
+        pool.set_tenant_quota(2);
+        let a = pool.alloc_for(1).unwrap();
+        let b = pool.alloc_for(1).unwrap();
+        assert_eq!(pool.used_by(1), 2);
+        assert_eq!(pool.tenant_available(1), 0, "tenant 1 is at quota");
+        assert!(pool.alloc_for(1).is_err(), "quota refuses tenant 1");
+        // Pool capacity still has headroom for other tenants.
+        assert_eq!(pool.available(), 2);
+        assert_eq!(pool.tenant_available(2), 2);
+        let c = pool.alloc_for(2).unwrap();
+        assert_eq!(pool.used_by(2), 1);
+        assert_eq!(pool.tenant_usage(), vec![(1, 2), (2, 1)]);
+        // Dropping a tenant-1 page restores tenant 1's quota headroom.
+        drop(a);
+        assert_eq!(pool.used_by(1), 1);
+        assert_eq!(pool.tenant_available(1), 1);
+        let d = pool.alloc_for(1).unwrap();
+        drop((b, c, d));
+        drop(pool);
+        assert_eq!(gauges.leaked.load(Relaxed), 0);
+        assert_eq!(gauges.pages_used.load(Relaxed), 0);
+    }
+
+    /// Tenant-scoped tries: one tenant's committed prefix is invisible
+    /// to every other tenant — no page sharing, no probe channel.
+    #[test]
+    fn prefix_tries_are_tenant_scoped() {
+        let pool = PagePool::new(geom(), 4, Arc::new(KvGauges::default()));
+        let prompt: Vec<u32> = (0..16).collect();
+        let pages: Vec<_> = (0..2).map(|_| pool.alloc_for(1).unwrap()).collect();
+        pool.commit_prefix_for(1, &prompt, &pages);
+        assert_eq!(pool.shared_prefix_for(1, &prompt, 2).len(), 2);
+        assert!(
+            pool.shared_prefix_for(2, &prompt, 2).is_empty(),
+            "tenant 2 must not see tenant 1's cached prefix"
+        );
+        assert_eq!(pool.cached_prefix_pages(), 2);
+        drop(pages);
+        assert_eq!(pool.evict_unreferenced(), 2);
+        assert_eq!(pool.cached_prefix_pages(), 0);
     }
 
     #[test]

@@ -105,6 +105,7 @@ fn print_help() {
          \x20       [--queue-capacity Q --dispatch least-outstanding|round-robin]\n\
          \x20       [--prefill-chunk P]\n\
          \x20       [--kv-page-size S --kv-pool-pages N  (0 = worst-case reserve)]\n\
+         \x20       [--tenants N --tenant-quota-pages M  (multi-tenant KV isolation)]\n\
          \x20       [--deadline-ms T --queue-deadline-ms T]\n\
          \x20       [--priority interactive|bulk|mixed]\n\
          \x20       [--speculative [--draft-depth K]   (hi-stream draft/verify)]\n\
@@ -519,6 +520,15 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     // preemption.
     let kv_page_size = args.get_usize("kv-page-size", 16);
     let kv_pool_pages = args.get_usize("kv-pool-pages", 0);
+    // Multi-tenant knobs: requests round-robin across N tenant
+    // namespaces (1, the default, keeps everything in the shared
+    // default tenant — bit-identical single-tenant serving),
+    // optionally with a per-tenant KV page quota (0 = unlimited).
+    let tenants = args.get_usize("tenants", 1);
+    if tenants == 0 {
+        bail!("--tenants must be at least 1");
+    }
+    let tenant_quota_pages = args.get_usize("tenant-quota-pages", 0);
     // Fault-tolerance knobs: optional per-request deadlines (0 = none)
     // and the workload's priority mix. "mixed" alternates interactive /
     // bulk so the priority lanes and shed path are exercised.
@@ -620,6 +630,7 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         .prefill_chunk(prefill_chunk)
         .kv_page_size(kv_page_size)
         .kv_pool_pages(kv_pool_pages)
+        .tenant_quota_pages(tenant_quota_pages)
         .speculative(speculative)
         .draft_depth(draft_depth)
         .seed(1)
@@ -650,6 +661,9 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
                         heldout[start..(start + 16).min(heldout.len())].to_vec();
                     let mut req =
                         GenRequest::greedy(id, prompt, max_new).with_priority(priority_of(id));
+                    if tenants > 1 {
+                        req = req.with_tenant((id % tenants as u64) as u32);
+                    }
                     if let Some(d) = queue_deadline {
                         req = req.with_queue_deadline(d);
                     }

@@ -91,6 +91,11 @@ pub struct Histogram {
     sum_bits: AtomicU64,
     min_bits: AtomicU64,
     max_bits: AtomicU64,
+    /// NaN/negative/infinite samples refused by [`Histogram::record`] —
+    /// kept out of every statistic so a few bad samples cannot drive
+    /// `min` to 0 or collapse p50 into the zero bucket, but still
+    /// visible (telemetry producing garbage is itself a signal).
+    rejected: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -107,13 +112,21 @@ impl Histogram {
             sum_bits: AtomicU64::new(0f64.to_bits()),
             min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
             max_bits: AtomicU64::new(0f64.to_bits()),
+            rejected: AtomicU64::new(0),
         }
     }
 
-    /// Record one sample (negative/NaN values clamp to the zero bucket;
-    /// count and sum stay exact).
+    /// Record one sample. Invalid samples (NaN, negative, ±infinity)
+    /// are *rejected* — counted in [`Histogram::rejected`] and excluded
+    /// from count/sum/min/max/buckets — instead of being clamped to
+    /// zero, which silently drove `min` to 0 and inflated the zero
+    /// bucket until p50 collapsed on a few bad samples. A literal `0.0`
+    /// is a valid sample and lands in the zero bucket.
     pub fn record(&self, v: f64) {
-        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        if !v.is_finite() || v < 0.0 {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         add_f64(&self.sum_bits, v);
@@ -127,6 +140,12 @@ impl Histogram {
 
     pub fn sum(&self) -> f64 {
         f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Samples refused by [`Histogram::record`] for being NaN, negative
+    /// or infinite; excluded from every other statistic.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
     }
 
     /// Quantile from the bucket counts: the midpoint of the bucket
@@ -181,6 +200,7 @@ impl Histogram {
             p50: self.quantile(0.50),
             p90: self.quantile(0.90),
             p99: self.quantile(0.99),
+            rejected: self.rejected(),
         }
     }
 }
@@ -196,6 +216,8 @@ pub struct HistStat {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    /// Invalid (NaN/negative/infinite) samples refused at record time.
+    pub rejected: u64,
 }
 
 impl HistStat {
@@ -209,7 +231,8 @@ impl HistStat {
             .set("max", Json::Num(self.max))
             .set("p50", Json::Num(self.p50))
             .set("p90", Json::Num(self.p90))
-            .set("p99", Json::Num(self.p99));
+            .set("p99", Json::Num(self.p99))
+            .set("rejected", Json::Num(self.rejected as f64));
         o
     }
 }
@@ -243,15 +266,34 @@ mod tests {
         assert_eq!(h.max(), 4.0);
     }
 
+    /// Regression (telemetry pollution): invalid samples are rejected —
+    /// counted separately, excluded from count/sum/min/max/quantiles —
+    /// so a few NaN/negative samples can no longer drive `min` to 0 or
+    /// collapse p50 into the zero bucket. Literal zeros stay valid.
     #[test]
-    fn zero_and_negative_clamp_to_zero_bucket() {
+    fn invalid_samples_are_rejected_not_clamped() {
         let h = Histogram::new();
         h.record(0.0);
         h.record(-3.0);
         h.record(f64::NAN);
-        assert_eq!(h.count(), 3);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        assert_eq!(h.count(), 1, "only the literal zero is a sample");
+        assert_eq!(h.rejected(), 4);
         assert_eq!(h.sum(), 0.0);
         assert_eq!(h.quantile(0.5), 0.0, "all-zero histogram reports 0");
+
+        // Bad samples leave real statistics untouched.
+        let h = Histogram::new();
+        h.record(0.5);
+        h.record(f64::NAN);
+        h.record(-1.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.rejected(), 2);
+        assert_eq!(h.min(), 0.5, "rejected samples cannot drag min to 0");
+        assert_eq!(h.max(), 0.5);
+        assert!(h.quantile(0.5) > 0.0, "p50 must not collapse to the zero bucket");
+        assert_eq!(h.stat().rejected, 2, "snapshot carries the rejected count");
     }
 
     #[test]

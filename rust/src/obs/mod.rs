@@ -33,7 +33,7 @@ pub mod trace;
 
 pub use hist::{HistStat, Histogram};
 pub use kernels::KernelPath;
-pub use registry::{names, Gauge, MetricsRegistry, RegistrySnapshot};
+pub use registry::{labeled, names, parse_labeled, Gauge, MetricsRegistry, RegistrySnapshot};
 pub use snapshot::{
     FaultSection, KvSection, MetricsSnapshot, ServeSection, SpecSection, TraceSection,
 };

@@ -73,6 +73,25 @@ pub mod names {
     pub const QUEUE_DEPTH_PEAK: &str = "queue.depth_peak";
 }
 
+/// Compose a labeled metric name: `labeled("serve.ttft_s", "tenant", 3)`
+/// → `serve.ttft_s{tenant=3}`. Labeled metrics are ordinary registry
+/// entries under the composed name, so they flow through
+/// [`MetricsRegistry::snapshot`], `MetricsSnapshot` and METRICS.json
+/// with no extra plumbing; the base (unlabeled) name keeps aggregating
+/// across labels.
+pub fn labeled(name: &str, label: &str, value: impl std::fmt::Display) -> String {
+    format!("{name}{{{label}={value}}}")
+}
+
+/// Split a labeled metric name back into `(base, label, value)`;
+/// `None` for unlabeled names. Inverse of [`labeled`].
+pub fn parse_labeled(name: &str) -> Option<(&str, &str, &str)> {
+    let open = name.find('{')?;
+    let inner = name[open + 1..].strip_suffix('}')?;
+    let (label, value) = inner.split_once('=')?;
+    Some((&name[..open], label, value))
+}
+
 /// A settable instantaneous value (pool occupancy, queue depth, ...).
 #[derive(Debug, Default)]
 pub struct Gauge {
@@ -122,6 +141,36 @@ impl MetricsRegistry {
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         let mut m = self.hists.lock().expect("metrics registry");
         Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create a labeled counter (`name{label=value}`).
+    pub fn counter_labeled(
+        &self,
+        name: &str,
+        label: &str,
+        value: impl std::fmt::Display,
+    ) -> Arc<Counter> {
+        self.counter(&labeled(name, label, value))
+    }
+
+    /// Get-or-create a labeled gauge (`name{label=value}`).
+    pub fn gauge_labeled(
+        &self,
+        name: &str,
+        label: &str,
+        value: impl std::fmt::Display,
+    ) -> Arc<Gauge> {
+        self.gauge(&labeled(name, label, value))
+    }
+
+    /// Get-or-create a labeled histogram (`name{label=value}`).
+    pub fn histogram_labeled(
+        &self,
+        name: &str,
+        label: &str,
+        value: impl std::fmt::Display,
+    ) -> Arc<Histogram> {
+        self.histogram(&labeled(name, label, value))
     }
 
     /// One-shot conveniences for cold paths.
@@ -196,6 +245,31 @@ mod tests {
         assert_eq!(s.gauges["g.two"], 9);
         assert_eq!(s.hists["h.three"].count, 1);
         assert_eq!(s.hists["h.three"].sum, 0.25);
+    }
+
+    #[test]
+    fn labeled_metrics_compose_parse_and_snapshot() {
+        assert_eq!(labeled(names::TTFT, "tenant", 3), "serve.ttft_s{tenant=3}");
+        assert_eq!(
+            parse_labeled("serve.ttft_s{tenant=3}"),
+            Some(("serve.ttft_s", "tenant", "3"))
+        );
+        assert_eq!(parse_labeled(names::TTFT), None);
+
+        let reg = MetricsRegistry::new();
+        reg.histogram_labeled(names::TTFT, "tenant", 0).record(0.1);
+        reg.histogram_labeled(names::TTFT, "tenant", 1).record(0.2);
+        reg.counter_labeled(names::REQUESTS, "tenant", 1).inc();
+        reg.gauge_labeled(names::KV_PAGES_USED, "tenant", 1).set(5);
+        // Labeled handles are distinct metrics under the composed name.
+        let s = reg.snapshot();
+        assert_eq!(s.hists["serve.ttft_s{tenant=0}"].count, 1);
+        assert_eq!(s.hists["serve.ttft_s{tenant=1}"].count, 1);
+        assert_eq!(s.counters["serve.requests{tenant=1}"], 1);
+        assert_eq!(s.gauges["kv.pages_used{tenant=1}"], 5);
+        // Same label → same underlying metric.
+        reg.counter_labeled(names::REQUESTS, "tenant", 1).inc();
+        assert_eq!(reg.counter_labeled(names::REQUESTS, "tenant", 1).get(), 2);
     }
 
     #[test]

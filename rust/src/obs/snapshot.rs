@@ -11,7 +11,7 @@
 //! disagree on a field.
 
 use super::hist::HistStat;
-use super::registry::names;
+use super::registry::{names, parse_labeled};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -226,6 +226,28 @@ impl MetricsSnapshot {
                 rows.push((format!("{name} p50/p99"), format!("{:.2e}/{:.2e}", h.p50, h.p99)));
             }
         }
+        // Per-tenant latency breakdown — present only when requests
+        // carried tenant labels (multi-tenant serving); single-tenant
+        // runs keep the exact legacy row set. BTreeMap order keeps the
+        // tenants sorted.
+        for (name, h) in &self.hists {
+            if h.count == 0 {
+                continue;
+            }
+            if let Some((base, "tenant", t)) = parse_labeled(name) {
+                if base == names::TTFT {
+                    rows.push((
+                        format!("ttft p50/p99 s tenant={t}"),
+                        format!("{:.4}/{:.4}", h.p50, h.p99),
+                    ));
+                } else if base == names::LATENCY {
+                    rows.push((
+                        format!("latency p50/p99 s tenant={t}"),
+                        format!("{:.3}/{:.3}", h.p50, h.p99),
+                    ));
+                }
+            }
+        }
         rows
     }
 }
@@ -245,7 +267,17 @@ mod tests {
         snap.trace.events_dropped = 3;
         snap.hists.insert(
             names::TTFT.to_string(),
-            HistStat { count: 12, sum: 0.6, mean: 0.05, min: 0.01, max: 0.2, p50: 0.04, p90: 0.1, p99: 0.19 },
+            HistStat {
+                count: 12,
+                sum: 0.6,
+                mean: 0.05,
+                min: 0.01,
+                max: 0.2,
+                p50: 0.04,
+                p90: 0.1,
+                p99: 0.19,
+                rejected: 0,
+            },
         );
         snap.counters.insert("serve.requests".into(), 12);
         snap.gauges.insert(names::KV_PAGES_USED.into(), 7);
@@ -287,6 +319,39 @@ mod tests {
             doc.get("hists").unwrap().get(names::TTFT).unwrap().req_f64("p90").unwrap(),
             0.1
         );
+    }
+
+    /// Labeled (per-tenant) histograms surface as extra report rows and
+    /// flow through METRICS.json under their composed names; runs with
+    /// no tenant labels keep the legacy row set untouched.
+    #[test]
+    fn tenant_labeled_hists_add_rows_and_json_entries() {
+        let mut snap = sample();
+        assert!(!snap.rows().iter().any(|(k, _)| k.contains("tenant=")));
+        snap.hists.insert(
+            crate::obs::labeled(names::TTFT, "tenant", 1),
+            HistStat { count: 4, p50: 0.02, p99: 0.09, ..HistStat::default() },
+        );
+        snap.hists.insert(
+            crate::obs::labeled(names::LATENCY, "tenant", 1),
+            HistStat { count: 4, p50: 0.5, p99: 1.25, ..HistStat::default() },
+        );
+        // Zero-count labels stay out of the report.
+        snap.hists
+            .insert(crate::obs::labeled(names::TTFT, "tenant", 2), HistStat::default());
+        let rows = snap.rows();
+        let lookup = |k: &str| {
+            rows.iter()
+                .find(|(name, _)| name == k)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_else(|| panic!("missing row {k}"))
+        };
+        assert_eq!(lookup("ttft p50/p99 s tenant=1"), "0.0200/0.0900");
+        assert_eq!(lookup("latency p50/p99 s tenant=1"), "0.500/1.250");
+        assert!(!rows.iter().any(|(k, _)| k.contains("tenant=2")));
+        let doc = json::parse(&snap.to_json().to_string()).unwrap();
+        let labeled = doc.get("hists").unwrap().get("serve.ttft_s{tenant=1}").unwrap();
+        assert_eq!(labeled.req_f64("p99").unwrap(), 0.09);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use ams_quant::formats::registry::Scheme;
 use ams_quant::model::synthetic::synthetic_checkpoint;
 use ams_quant::model::transformer::Transformer;
 use ams_quant::model::ModelConfig;
+use ams_quant::obs::{labeled, names};
 use ams_quant::quant::QuantConfig;
 use ams_quant::util::prng::Rng;
 use std::sync::Mutex;
@@ -395,6 +396,136 @@ fn pool_exhaustion_preempts_and_leaks_no_pages() {
         t.cancelled,
         gauges.pages_peak.load(Relaxed),
         stats.prefix_hits
+    ));
+}
+
+/// ISSUE 10 chaos round: multi-tenant quotas under a forced `POOL`
+/// deny burst on an over-committed pool. Two tenants share a 12-page
+/// pool with a 6-page quota each; every normal request fits its quota,
+/// so quota pressure must resolve by parking the offending tenant's
+/// own sequences — never another tenant's, never a terminal failure.
+/// One poison request per tenant carries a prompt whose footprint
+/// alone exceeds the quota: those (and only those) must settle
+/// `Failed("kv tenant quota exceeded")`. After shutdown the drop-audit
+/// must show exact page conservation, and the labeled per-tenant
+/// request counters must agree with the per-tenant `Done` tallies.
+#[test]
+fn tenant_quota_chaos_conserves_pages_and_isolates_failures() {
+    const SEED: u64 = 0x7E4A;
+    let fp = FailPoints::seeded(SEED);
+    // Two forced preempt rounds on top of the organic quota pressure.
+    fp.arm_tagged(POOL, 0, FailSpec::deny(2).after(1));
+
+    let eng = Engine::builder()
+        .replicas(1)
+        .max_batch(4)
+        .kv_page_size(4)
+        // 2 tenants * quota 6 = the whole pool; each normal sequence
+        // peaks at 4 pages (5-token prompt + 8 new = 13 positions), so
+        // two co-batched sequences of one tenant already overflow its
+        // quota and force fair-share parking within that tenant.
+        .kv_pool_pages(12)
+        .tenant_quota_pages(6)
+        .queue_capacity(64)
+        .seed(SEED)
+        .restart_backoff(Duration::from_millis(1), Duration::from_millis(20))
+        .failpoints(std::sync::Arc::clone(&fp))
+        .build(model());
+    let gauges = eng.kv_gauges();
+
+    let mut rng = Rng::new(SEED);
+    let mut by_tenant: [Vec<_>; 2] = [Vec::new(), Vec::new()];
+    let mut cancelled_sent = 0u64;
+    for id in 0..20u64 {
+        let tenant = 1 + (id % 2) as u32;
+        // Mostly bulk so both the deny burst and quota pressure always
+        // have preemption prey within the offending tenant.
+        let prio = if id % 5 == 0 { Priority::Interactive } else { Priority::Bulk };
+        let prompt = vec![(id as u32 % 50) + 1, (id as u32 % 7) + 2, 3, 4, 5];
+        let h = eng
+            .submit(
+                GenRequest::greedy(id, prompt, 8).with_priority(prio).with_tenant(tenant),
+            )
+            .expect("capacity 64 holds the workload");
+        if rng.below(6) == 0 {
+            h.cancel();
+            cancelled_sent += 1;
+        }
+        by_tenant[(tenant - 1) as usize].push(h);
+    }
+    // Poison: 26 prompt tokens = 7 pages > the 6-page quota, so the
+    // stream can never fit no matter how much of its tenant drains.
+    let mut poison = Vec::new();
+    for (id, tenant) in [(100u64, 1u32), (101, 2)] {
+        let prompt: Vec<u32> = (0..26).map(|j| (id as u32 + j) % 50 + 1).collect();
+        poison.push(
+            eng.submit(
+                GenRequest::greedy(id, prompt, 4)
+                    .with_priority(Priority::Bulk)
+                    .with_tenant(tenant),
+            )
+            .expect("capacity 64 holds the workload"),
+        );
+    }
+
+    let mut t1 = Terminals::default();
+    let mut t2 = Terminals::default();
+    t1.drain(std::mem::take(&mut by_tenant[0]), "tenant-quota t1");
+    t2.drain(std::mem::take(&mut by_tenant[1]), "tenant-quota t2");
+    let mut tp = Terminals::default();
+    tp.drain(poison, "tenant-quota poison");
+
+    assert_eq!(t1.total() + t2.total(), 20);
+    assert_eq!(
+        t1.failed + t2.failed,
+        0,
+        "every normal request fits its quota, so quota pressure must \
+         park within the offending tenant, never fail: t1={t1:?} t2={t2:?}"
+    );
+    assert!(t1.cancelled + t2.cancelled >= cancelled_sent.min(1));
+    assert_eq!(
+        tp.failed, 2,
+        "both over-quota streams fail terminally instead of parking forever: {tp:?}"
+    );
+    assert_eq!(fp.fired(POOL), 2, "the injected deny burst ran");
+
+    eng.drain();
+    assert_eq!(eng.outstanding(), 0, "no leaked outstanding shares");
+    assert_eq!(eng.queue_depths(), vec![0], "no leaked queue slots");
+    assert!(eng.preemptions() > 0, "quota pressure parked someone");
+
+    // Labeled per-tenant counters agree with the streamed Done tallies
+    // (cancels never reach Done, so they are absent on both sides).
+    let snap = eng.metrics_snapshot();
+    for (tenant, t) in [(1u32, &t1), (2, &t2)] {
+        let key = labeled(names::REQUESTS, "tenant", tenant);
+        assert_eq!(
+            snap.counters.get(&key).copied().unwrap_or(0),
+            t.done,
+            "labeled counter {key} tracks tenant Done count"
+        );
+    }
+
+    let stats = eng.shutdown();
+    assert_eq!(
+        stats.requests + stats.cancelled + stats.timed_out + stats.failed,
+        22,
+        "terminal conservation: 20 workload + 2 poison ({stats:?})"
+    );
+    // Drop-audit: the engine (and its pool, tries included) is gone;
+    // every page of every tenant must be recycled and none orphaned.
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(gauges.pages_used.load(Relaxed), 0, "pages still marked used");
+    assert_eq!(gauges.leaked.load(Relaxed), 0, "block-table pages leaked");
+    report(&format!(
+        "tenant-quota seed={SEED:#x} t1_done={} t2_done={} cancelled={} failed_poison={} \
+         preemptions={} pages_peak={}",
+        t1.done,
+        t2.done,
+        t1.cancelled + t2.cancelled,
+        tp.failed,
+        stats.preemptions,
+        gauges.pages_peak.load(Relaxed)
     ));
 }
 
